@@ -1,0 +1,56 @@
+//! Selection-budget sweep (paper Fig. 4, selection-level view): how the
+//! selected subset evolves as the budget grows from 0.1% to 10% with a
+//! 1-bit gradient store — composition, score thresholds, and nesting.
+//!
+//! (The full fine-tune+eval version of Fig. 4 is `qless xp fig4`; this
+//! example stays cheap by stopping at selection.)
+//!
+//! Run: `cargo run --release --example budget_sweep`
+
+use anyhow::Result;
+use qless::config::Config;
+use qless::eval::Benchmark;
+use qless::pipeline::Pipeline;
+use qless::quant::{Precision, Scheme};
+use qless::select::{select_top_frac, SourceDistribution};
+use qless::util::table::Table;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.model = "tiny".into();
+    cfg.corpus_size = 2000;
+    cfg.warmup_epochs = 2;
+    cfg.val_per_task = 16;
+    cfg.run_dir = "runs/budget_sweep".into();
+    let mut pipe = Pipeline::new(cfg)?;
+
+    let (ds, _) = pipe.build_datastore(Precision::new(1, Scheme::Sign)?)?;
+    for bench in [Benchmark::SynArith, Benchmark::SynQA] {
+        let scores = pipe.influence_scores(&ds, bench)?;
+        let mut t = Table::new(
+            &format!("{bench} — budget sweep (aligned source: {})", bench.aligned_source()),
+            &["budget", "n", "min score", "aligned-source share", "composition"],
+        );
+        let mut prev: Option<Vec<usize>> = None;
+        for frac in [0.001, 0.005, 0.01, 0.02, 0.05, 0.10] {
+            let sel = select_top_frac(&scores, frac);
+            let dist = SourceDistribution::of(&pipe.corpus.samples, &sel);
+            // nesting check: smaller budgets are prefixes of larger ones
+            if let Some(p) = &prev {
+                assert!(p.iter().all(|i| sel.contains(i)), "selection not nested!");
+            }
+            let min_score = sel.iter().map(|&i| scores[i]).fold(f32::MAX, f32::min);
+            t.row(vec![
+                format!("{:.1}%", frac * 100.0),
+                sel.len().to_string(),
+                format!("{min_score:+.4}"),
+                format!("{:.0}%", dist.frac(bench.aligned_source()) * 100.0),
+                dist.render(),
+            ]);
+            prev = Some(sel);
+        }
+        println!("{}", t.render());
+    }
+    println!("expectation: tight budgets are dominated by the benchmark-aligned source;\nbroader budgets dilute toward the corpus mix (37/37/6/20%).");
+    Ok(())
+}

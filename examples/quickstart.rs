@@ -1,0 +1,60 @@
+//! Quickstart: the QLESS public API in ~60 seconds.
+//!
+//! Generates a small synthetic instruction corpus, extracts gradient
+//! features at one (untrained) checkpoint, builds 16-bit and 1-bit gradient
+//! datastores, scores influence against a SynQA validation split, and shows
+//! the paper's headline trade: ~16× smaller storage, same selection.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use qless::config::Config;
+use qless::eval::Benchmark;
+use qless::pipeline::Pipeline;
+use qless::quant::{Precision, Scheme};
+use qless::select::{select_top_frac, SourceDistribution};
+use qless::util::table::human_bytes;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.model = "tiny".into();
+    cfg.corpus_size = 600;
+    cfg.warmup_epochs = 1;
+    cfg.val_per_task = 8;
+    cfg.run_dir = "runs/quickstart".into();
+    let mut pipe = Pipeline::new(cfg)?;
+
+    println!("corpus: {} samples across 4 sources", pipe.corpus.len());
+    for (src, n) in qless::corpus::source_counts(&pipe.corpus.samples) {
+        println!("  {src:10} {n}");
+    }
+
+    // LESS baseline (16-bit) vs QLESS 1-bit datastores over the same features.
+    let (ds16, b16) = pipe.build_datastore(Precision::new(16, Scheme::Absmax)?)?;
+    let (ds1, b1) = pipe.build_datastore(Precision::new(1, Scheme::Sign)?)?;
+    println!("\ndatastore  16-bit: {:>12}", human_bytes(b16));
+    println!(
+        "datastore   1-bit: {:>12}  ({:.1}x smaller)",
+        human_bytes(b1),
+        b16 as f64 / b1 as f64
+    );
+
+    // Influence-score the corpus against SynQA validation gradients.
+    let s16 = pipe.influence_scores(&ds16, Benchmark::SynQA)?;
+    let s1 = pipe.influence_scores(&ds1, Benchmark::SynQA)?;
+    let top16 = select_top_frac(&s16, 0.05);
+    let top1 = select_top_frac(&s1, 0.05);
+    let overlap = top1.iter().filter(|i| top16.contains(i)).count();
+    println!("\ntop-5% selection (SynQA target):");
+    println!("  16-bit: {}", SourceDistribution::of(&pipe.corpus.samples, &top16).render());
+    println!("   1-bit: {}", SourceDistribution::of(&pipe.corpus.samples, &top1).render());
+    println!("  overlap: {overlap}/{} selections agree", top16.len());
+
+    println!("\nhighest-influence samples (1-bit store):");
+    for &i in top1.iter().take(3) {
+        let s = &pipe.corpus.samples[i];
+        println!("  [{:+.4}] ({}) {} → {}", s1[i], s.source, s.prompt, s.answer);
+    }
+    println!("\nnext: cargo run --release --example full_pipeline");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Scheme ablation walk-through (paper §5 / Fig. 3 / Table 3 intuition):
+//! quantize *real* extracted gradient features with absmax, absmean and
+//! sign at each bit width, and show (a) zero-bin occupancy, (b) selection
+//! agreement with the 16-bit reference, per benchmark.
+//!
+//! Run: `cargo run --release --example scheme_ablation`
+
+use anyhow::Result;
+use qless::config::Config;
+use qless::eval::Benchmark;
+use qless::pipeline::Pipeline;
+use qless::quant::{BinHistogram, Precision, Scheme};
+use qless::select::select_top_frac;
+use qless::util::table::Table;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.model = "tiny".into();
+    cfg.corpus_size = 800;
+    cfg.warmup_epochs = 2;
+    cfg.val_per_task = 12;
+    cfg.run_dir = "runs/scheme_ablation".into();
+    let mut pipe = Pipeline::new(cfg)?;
+
+    // (a) zero-bin occupancy on real features (Fig. 3)
+    let feats = pipe.train_features()?;
+    let block = &feats[0];
+    let mut t = Table::new(
+        "zero-bin occupancy on real gradient features",
+        &["bits", "absmax", "absmean"],
+    );
+    for bits in [8u8, 4, 2] {
+        let mut hmax = BinHistogram::new(bits, Scheme::Absmax);
+        let mut hmean = BinHistogram::new(bits, Scheme::Absmean);
+        for i in 0..block.n {
+            hmax.add_row(block.row(i));
+            hmean.add_row(block.row(i));
+        }
+        t.row(vec![
+            bits.to_string(),
+            format!("{:.1}%", hmax.zero_bin_frac() * 100.0),
+            format!("{:.1}%", hmean.zero_bin_frac() * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // (b) selection agreement vs the 16-bit reference (the metric that
+    // matters: does coarse quantization pick the same data?)
+    let (ds16, _) = pipe.build_datastore(Precision::new(16, Scheme::Absmax)?)?;
+    let mut t2 = Table::new(
+        "top-5% selection overlap with LESS 16-bit",
+        &["precision", "SynQA", "SynMC", "SynArith"],
+    );
+    let mut ref_sel = std::collections::BTreeMap::new();
+    for bench in Benchmark::ALL {
+        let s = pipe.influence_scores(&ds16, bench)?;
+        ref_sel.insert(bench.name(), select_top_frac(&s, 0.05));
+    }
+    let grid: Vec<Precision> = vec![
+        Precision::new(8, Scheme::Absmax)?,
+        Precision::new(4, Scheme::Absmax)?,
+        Precision::new(4, Scheme::Absmean)?,
+        Precision::new(2, Scheme::Absmax)?,
+        Precision::new(2, Scheme::Absmean)?,
+        Precision::new(1, Scheme::Sign)?,
+    ];
+    for p in grid {
+        let (ds, _) = pipe.build_datastore(p)?;
+        let mut row = vec![p.label()];
+        for bench in Benchmark::ALL {
+            let s = pipe.influence_scores(&ds, bench)?;
+            let sel = select_top_frac(&s, 0.05);
+            let r = &ref_sel[bench.name()];
+            let overlap = sel.iter().filter(|i| r.contains(i)).count();
+            row.push(format!("{:.0}%", 100.0 * overlap as f64 / r.len() as f64));
+        }
+        t2.row(row);
+    }
+    println!("{}", t2.render());
+    println!("expectation (paper §5): overlap degrades gracefully with bits;\n2-bit absmax shifts most (zero-bin sparsity), absmean recovers it, 1-bit stays high.");
+    Ok(())
+}

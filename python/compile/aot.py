@@ -1,0 +1,153 @@
+"""AOT export: lower every L2/L1 graph to HLO **text** + write the manifest.
+
+Interchange is HLO text, NOT ``HloModule.serialize()``: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the runtime's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never executes on the request path.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--sizes tiny,small,base]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import influence_pallas, quantize_pallas
+from .simconfig import CONFIGS, VOCAB, ModelConfig
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def graphs_for(cfg: ModelConfig):
+    """(name, jitted fn, example arg specs) for every artifact of one size."""
+    db, dl, K = cfg.d_base, cfg.d_lora, cfg.proj_dim
+    S, Bt, Bg, Be = cfg.seq, cfg.batch_train, cfg.batch_grad, cfg.batch_eval
+    f32, i32 = jnp.float32, jnp.int32
+
+    def j(fn):
+        return jax.jit(functools.partial(fn, cfg))
+
+    out = [
+        (
+            "pretrain_step",
+            j(model.pretrain_step),
+            [_spec((db,)), _spec((db,)), _spec((db,)), _spec((), f32),
+             _spec((Bt, S), i32), _spec((Bt, S), f32), _spec((), f32)],
+        ),
+        (
+            "train_step",
+            j(model.train_step),
+            [_spec((db,)), _spec((dl,)), _spec((dl,)), _spec((dl,)), _spec((), f32),
+             _spec((Bt, S), i32), _spec((Bt, S), f32), _spec((), f32)],
+        ),
+        (
+            "grad_train",
+            j(model.grad_train_features),
+            [_spec((db,)), _spec((dl,)), _spec((dl,)), _spec((dl,)), _spec((), f32),
+             _spec((Bg, S), i32), _spec((Bg, S), f32), _spec((dl, K))],
+        ),
+        (
+            "grad_val",
+            j(model.grad_val_features),
+            [_spec((db,)), _spec((dl,)), _spec((Bg, S), i32), _spec((Bg, S), f32),
+             _spec((dl, K))],
+        ),
+        (
+            "loss_eval",
+            j(model.loss_eval),
+            [_spec((db,)), _spec((dl,)), _spec((Be, S), i32), _spec((Be, S), f32)],
+        ),
+        (
+            "decode_step",
+            j(model.decode_step),
+            [_spec((db,)), _spec((dl,)), _spec((Be, S), i32), _spec((Be,), i32)],
+        ),
+    ]
+
+    # L1 Pallas kernels, exported at the tile shapes the runtime chunks to.
+    # Quantize tiles: (quant_block × K); influence tiles: (tile_q × K)·(K × tile_v).
+    qb = cfg.quant_block
+    for scheme, bits_list in (("absmax", (8, 4, 2)), ("absmean", (8, 4, 2)), ("sign", (1,))):
+        for bits in bits_list:
+            name = f"quantize_{scheme}_{bits}" if bits != 1 else "quantize_sign_1"
+            mode = "absmax" if scheme == "sign" else scheme
+            fn = jax.jit(
+                functools.partial(quantize_pallas, bits=bits, mode=mode, block=qb)
+            )
+            out.append((name, fn, [_spec((qb, K))]))
+
+    out.append(
+        (
+            "influence",
+            jax.jit(functools.partial(influence_pallas, bq=cfg.tile_q, bv=cfg.tile_v)),
+            [_spec((cfg.tile_q, K)), _spec((cfg.tile_v, K))],
+        )
+    )
+    return out
+
+
+def export_size(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+    for name, fn, specs in graphs_for(cfg):
+        t0 = time.time()
+        text = to_hlo_text(fn.lower(*specs))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{cfg.name}/{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"  {cfg.name}/{name}: {len(text)//1024} KiB in {time.time()-t0:.1f}s")
+    return artifacts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    args = ap.parse_args()
+
+    manifest = {"version": MANIFEST_VERSION, "vocab": VOCAB, "models": {}}
+    for size in args.sizes.split(","):
+        cfg = CONFIGS[size]
+        print(f"[aot] exporting {size} (d_base={cfg.d_base} d_lora={cfg.d_lora})")
+        entry = cfg.manifest_entry()
+        entry["artifacts"] = export_size(cfg, os.path.join(args.out, size))
+        manifest["models"][size] = entry
+
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the QLESS compute hot-spots.
+from .quantize import quantize_pallas  # noqa: F401
+from .influence import influence_pallas  # noqa: F401

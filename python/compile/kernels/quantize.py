@@ -1,0 +1,82 @@
+"""L1 Pallas kernels: absmax / absmean / sign gradient quantization.
+
+QLESS step 3 (paper §3.1): given a block of randomly-projected gradient
+features g ∈ R^{n×k}, emit b-bit integer codes plus one fp32 scale per row.
+
+Kernel structure (the TPU story — see DESIGN.md §Hardware-Adaptation):
+  * grid over row blocks; each grid step owns ``block`` rows × full k in VMEM
+    (k ≤ 8192 fp32 rows are ~32 KB each — far under the ~16 MB VMEM budget,
+    so the row reduction max|g| / mean|g| never touches HBO twice);
+  * the reduction and the round/clip are VPU element-wise work, deliberately
+    fused into one kernel so only the int8 codes cross back to HBM;
+  * bit-*packing* below 8 bits is not done here: XLA has no sub-byte dtypes,
+    so the runtime packs int8 codes into 1/2/4-bit words on the Rust side
+    (``rust/src/quant/pack.rs``) right before they hit the datastore.
+
+Runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls);
+numerics are validated against ``ref.py`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..simconfig import ABSMEAN_C
+
+
+def _quant_kernel(g_ref, codes_ref, scales_ref, *, alpha: float, mode: str):
+    """One grid step: quantize ``block`` rows resident in VMEM."""
+    g = g_ref[...]
+    if mode == "absmax":
+        s = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    elif mode == "absmean":
+        s = ABSMEAN_C * jnp.mean(jnp.abs(g), axis=-1, keepdims=True)
+    else:
+        raise ValueError(mode)
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(alpha * g / safe), -alpha, alpha)
+    codes_ref[...] = q.astype(jnp.int8)
+    # Store S/α: dequantization is then codes * scale.
+    scales_ref[...] = (jnp.where(s > 0, s, 0.0) / alpha)[:, 0]
+
+
+def _sign_kernel(g_ref, codes_ref, scales_ref):
+    """1-bit sign quantization — no zero bin (paper §5, Fig. 3)."""
+    g = g_ref[...]
+    codes_ref[...] = jnp.where(g >= 0, 1, -1).astype(jnp.int8)
+    scales_ref[...] = jnp.mean(jnp.abs(g), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mode", "block"))
+def quantize_pallas(g: jnp.ndarray, bits: int, mode: str = "absmax", block: int = 64):
+    """Quantize g [n, k] → (codes int8 [n, k], scales f32 [n]).
+
+    n must be a multiple of ``block`` (the runtime pads the tail batch).
+    ``bits == 1`` selects the sign kernel regardless of ``mode``.
+    """
+    n, k = g.shape
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    row_spec = pl.BlockSpec((block, k), lambda i: (i, 0))
+    scale_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = (
+        jax.ShapeDtypeStruct((n, k), jnp.int8),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    if bits == 1:
+        kernel = _sign_kernel
+    else:
+        alpha = float(2 ** (bits - 1) - 1)
+        kernel = functools.partial(_quant_kernel, alpha=alpha, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec],
+        out_specs=(row_spec, scale_spec),
+        out_shape=out_shape,
+        interpret=True,
+    )(g)

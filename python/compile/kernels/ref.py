@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes/bit-widths with
+hypothesis and asserts the Pallas kernels (interpret mode) match these
+references exactly (quantization is integer-valued, so the comparison is
+exact; the influence matmul is compared with tight fp32 tolerances).
+
+They are also the *semantic specification* that the Rust-native quantizer and
+scorer (``rust/src/quant``, ``rust/src/influence/native.rs``) implement —
+the integration tests compare Rust output against features produced here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..simconfig import ABSMEAN_C
+
+
+def alpha_for_bits(bits: int) -> float:
+    """α = 2^(b−1) − 1, the outermost quantization level (paper Eq. 5)."""
+    if bits < 2 or bits > 8:
+        raise ValueError(f"alpha_for_bits: bits must be in [2,8], got {bits}")
+    return float(2 ** (bits - 1) - 1)
+
+
+def quantize_absmax_ref(g: jnp.ndarray, alpha: float):
+    """Paper Eq. 4–5: per-row absmax scaling, symmetric uniform quantization.
+
+    g: [n, k] float32.  Returns (codes int8 in [−α, α], scales [n] float32)
+    where ``scales`` is S/α so that dequantized values are codes*scales.
+    """
+    s = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(alpha * g / safe), -alpha, alpha).astype(jnp.int8)
+    return q, (jnp.where(s > 0, s, 0.0) / alpha)[:, 0]
+
+
+def quantize_absmean_ref(g: jnp.ndarray, alpha: float):
+    """Absmean variant (paper §5): scale by c·mean|g| instead of max|g|.
+
+    Values beyond c·mean|g| saturate to ±α, pushing mass out of the zero
+    bin — denser codes at 2/4-bit (Fig. 3), clipped tails at 8-bit.
+    """
+    s = ABSMEAN_C * jnp.mean(jnp.abs(g), axis=-1, keepdims=True)
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(alpha * g / safe), -alpha, alpha).astype(jnp.int8)
+    return q, (jnp.where(s > 0, s, 0.0) / alpha)[:, 0]
+
+
+def quantize_sign_ref(g: jnp.ndarray):
+    """1-bit sign quantization (paper Table 3 "Sign"): q ∈ {−1, +1}.
+
+    No zero bin by construction; scale is mean|g| (the optimal per-row
+    reconstruction scale for sign codes, as in signSGD / BitNet).
+    """
+    q = jnp.where(g >= 0, 1, -1).astype(jnp.int8)
+    return q, jnp.mean(jnp.abs(g), axis=-1)
+
+
+def quantize(g: jnp.ndarray, scheme: str, bits: int):
+    """Dispatch helper mirroring rust/src/quant/scheme.rs."""
+    if bits == 16:
+        return g, None  # LESS baseline: no quantization
+    if bits == 1:
+        return quantize_sign_ref(g)
+    if scheme == "absmax":
+        return quantize_absmax_ref(g, alpha_for_bits(bits))
+    if scheme == "absmean":
+        return quantize_absmean_ref(g, alpha_for_bits(bits))
+    raise ValueError(f"unknown scheme {scheme}")
+
+
+def normalize_rows_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-normalize (paper Eq. 2 / Eq. 6). Zero rows stay zero."""
+    n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1, keepdims=True)
+    return x / jnp.where(n > 0, n, 1.0)
+
+
+def influence_ref(qt: jnp.ndarray, qv: jnp.ndarray) -> jnp.ndarray:
+    """Cosine-similarity tile (paper Eq. 7 inner term).
+
+    qt: [nt, k] train codes (any real dtype), qv: [nv, k] val codes.
+    Returns [nt, nv] of ⟨q̂_z, q̂_z'⟩.  The per-row quantization scale
+    cancels under normalization — the scorer never needs it.
+    """
+    return normalize_rows_ref(qt) @ normalize_rows_ref(qv).T
+
+
+def dequantize_ref(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """codes [n,k] int8 × scales [n] → float32 reconstruction."""
+    return codes.astype(jnp.float32) * scales[:, None]

@@ -1,0 +1,242 @@
+"""L2: SimLM — the JAX causal transformer whose LoRA gradients QLESS values.
+
+The paper runs LESS/QLESS on 3–8B decoder LMs; the reproduction substitutes
+SimLM, a genuine (if small) causal transformer — multi-head attention,
+GELU MLP, RMSNorm, weight-tied embeddings — with LoRA adapters on the
+q/k/v/o projections, exactly the adapter placement of the paper
+(Appendix A: "learned LoRA matrices for query, key, value, and output").
+
+Everything is expressed over **flat fp32 parameter vectors** (``base_flat``
+frozen, ``lora_flat`` trainable) so each exported HLO graph has a small,
+stable signature and the Rust runtime can hold parameters as plain
+``Vec<f32>`` device buffers uploaded once per checkpoint.
+
+Graphs exported by ``aot.py`` (see DESIGN.md §3):
+  train_step       Adam update of LoRA params on a batch (warmup + finetune)
+  grad_train       per-sample Adam-preconditioned LoRA grads → R-projection
+  grad_val         per-sample SGD grads → R-projection
+  loss_eval        per-sample masked NLL (MC ranking / perplexity)
+  decode_step      next-token logits at a given position (greedy decode)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .simconfig import ADAM_B1, ADAM_B2, ADAM_EPS, ModelConfig
+
+# ---------------------------------------------------------------------------
+# flat <-> structured parameters
+# ---------------------------------------------------------------------------
+
+
+def _numel(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def unflatten(flat: jnp.ndarray, shapes) -> dict:
+    """Split a flat vector into named arrays following a shape list."""
+    out, off = {}, 0
+    for name, shape in shapes:
+        n = _numel(shape)
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return out
+
+
+def init_base_flat(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Initialize frozen base parameters (scaled-normal / ones for norms)."""
+    parts = []
+    for name, shape in cfg.base_shapes():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:  # RMSNorm gains
+            parts.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed":
+            parts.append(0.05 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            parts.append(jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in))
+    return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+def init_lora_flat(cfg: ModelConfig, key) -> jnp.ndarray:
+    """LoRA init: A ~ N(0, 1/r), B = 0 (standard — adapters start as no-op)."""
+    parts = []
+    for name, shape in cfg.lora_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith(".A"):
+            parts.append(jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(cfg.lora_rank))
+        else:
+            parts.append(jnp.zeros(shape, jnp.float32))
+    return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gain):
+    return x * gain / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def forward(cfg: ModelConfig, base_flat, lora_flat, tokens):
+    """Causal LM forward for one unbatched sequence.
+
+    tokens: [S] int32. Returns logits [S, V].
+    Batch dims are added by ``jax.vmap`` at export time — this keeps the
+    per-sample-gradient graph (vmap of grad of this) straightforward.
+    """
+    b = unflatten(base_flat, cfg.base_shapes())
+    lo = unflatten(lora_flat, cfg.lora_shapes())
+    D, H, S = cfg.d_model, cfg.n_heads, cfg.seq
+    hd = D // H
+    scale = cfg.lora_alpha / cfg.lora_rank
+
+    x = b["embed"][tokens]  # [S, D]
+    causal = jnp.triu(jnp.full((S, S), -1e9, jnp.float32), 1)
+
+    def lora_proj(h, w, A, B):
+        return h @ w + scale * ((h @ A) @ B)
+
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, b[f"l{l}.ln1"])
+        q = lora_proj(h, b[f"l{l}.wq"], lo[f"l{l}.q.A"], lo[f"l{l}.q.B"])
+        k = lora_proj(h, b[f"l{l}.wk"], lo[f"l{l}.k.A"], lo[f"l{l}.k.B"])
+        v = lora_proj(h, b[f"l{l}.wv"], lo[f"l{l}.v.A"], lo[f"l{l}.v.B"])
+        # [S, D] -> [H, S, hd]
+        q = q.reshape(S, H, hd).transpose(1, 0, 2)
+        k = k.reshape(S, H, hd).transpose(1, 0, 2)
+        v = v.reshape(S, H, hd).transpose(1, 0, 2)
+        att = jax.nn.softmax(
+            jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(hd) + causal, axis=-1
+        )
+        o = jnp.einsum("hqk,hkd->hqd", att, v).transpose(1, 0, 2).reshape(S, D)
+        o = lora_proj(o, b[f"l{l}.wo"], lo[f"l{l}.o.A"], lo[f"l{l}.o.B"])
+        x = x + o
+        h = rmsnorm(x, b[f"l{l}.ln2"])
+        x = x + jax.nn.gelu(h @ b[f"l{l}.w1"]) @ b[f"l{l}.w2"]
+
+    x = rmsnorm(x, b["lnf"])
+    return x @ b["embed"].T  # weight-tied head
+
+
+def sample_loss(cfg: ModelConfig, lora_flat, base_flat, tokens, lmask):
+    """Masked next-token NLL for one sequence, averaged over target tokens.
+
+    lmask[t] = 1 marks token t as part of the answer span (instruction-tuning
+    loss masking). The per-sample *mean* over tokens is deliberate: it is the
+    token-averaged gradient whose length bias LESS's normalization (Eq. 2)
+    corrects, so the reproduction keeps it.
+    """
+    logits = forward(cfg, base_flat, lora_flat, tokens)
+    lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    tgt = tokens[1:]
+    ll = jnp.take_along_axis(lp, tgt[:, None], axis=-1)[:, 0]
+    w = lmask[1:]
+    return -(ll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# exported graphs
+# ---------------------------------------------------------------------------
+
+
+def batch_loss(cfg, lora_flat, base_flat, tokens, lmask):
+    per = jax.vmap(sample_loss, in_axes=(None, None, None, 0, 0))(
+        cfg, lora_flat, base_flat, tokens, lmask
+    )
+    return per.mean()
+
+
+def train_step(cfg: ModelConfig, base_flat, lora_flat, m, v, t, tokens, lmask, lr):
+    """One Adam step on the LoRA params (paper Appendix A hyperparams).
+
+    t is the 1-based step count *as float* (HLO-friendly); returns
+    (lora', m', v', loss).
+    """
+    loss, g = jax.value_and_grad(batch_loss, argnums=1)(
+        cfg, lora_flat, base_flat, tokens, lmask
+    )
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m2 / (1.0 - ADAM_B1 ** t)
+    vhat = v2 / (1.0 - ADAM_B2 ** t)
+    lora2 = lora_flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return lora2, m2, v2, loss
+
+
+def pretrain_step(cfg: ModelConfig, base_flat, m, v, t, tokens, lmask, lr):
+    """One Adam step on the **base** parameters (LoRA disabled).
+
+    The paper fine-tunes pretrained LLMs; the reproduction creates its
+    "pretrained base" by running this step over a generic corpus before any
+    warmup/selection happens (DESIGN.md §2). Returns (base', m', v', loss).
+    """
+
+    def loss_fn(bf):
+        per = jax.vmap(sample_loss, in_axes=(None, None, None, 0, 0))(
+            cfg, jnp.zeros((cfg.d_lora,), jnp.float32), bf, tokens, lmask
+        )
+        return per.mean()
+
+    loss, g = jax.value_and_grad(loss_fn)(base_flat)
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m2 / (1.0 - ADAM_B1 ** t)
+    vhat = v2 / (1.0 - ADAM_B2 ** t)
+    base2 = base_flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return base2, m2, v2, loss
+
+
+def grad_train_features(cfg: ModelConfig, base_flat, lora_flat, m, v, t, tokens, lmask, proj):
+    """Per-sample **Adam** gradient features Γ(z;θ) projected by R (LESS §2.2).
+
+    Γ is the Adam update direction the sample *would* induce given the
+    checkpoint's optimizer state (m, v): the LESS/TracIn-style training
+    gradient. vmap(grad) gives exact per-sample grads in one fused graph.
+    Returns feats [B, K] — unnormalized; quantization + normalization happen
+    downstream (QLESS Eq. 5–6).
+    """
+    g = jax.vmap(jax.grad(sample_loss, argnums=1), in_axes=(None, None, None, 0, 0))(
+        cfg, lora_flat, base_flat, tokens, lmask
+    )  # [B, d_lora]
+    mhat = (ADAM_B1 * m[None, :] + (1.0 - ADAM_B1) * g) / (1.0 - ADAM_B1 ** t)
+    vhat = (ADAM_B2 * v[None, :] + (1.0 - ADAM_B2) * g * g) / (1.0 - ADAM_B2 ** t)
+    gamma = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return gamma @ proj
+
+
+def grad_val_features(cfg: ModelConfig, base_flat, lora_flat, tokens, lmask, proj):
+    """Per-sample **SGD** gradient features ∇ℓ(z';θ) projected by R."""
+    g = jax.vmap(jax.grad(sample_loss, argnums=1), in_axes=(None, None, None, 0, 0))(
+        cfg, lora_flat, base_flat, tokens, lmask
+    )
+    return g @ proj
+
+
+def loss_eval(cfg: ModelConfig, base_flat, lora_flat, tokens, lmask):
+    """Per-sample masked NLL [B] — option ranking (SynMC) and perplexity."""
+    return jax.vmap(sample_loss, in_axes=(None, None, None, 0, 0))(
+        cfg, lora_flat, base_flat, tokens, lmask
+    )
+
+
+def decode_step(cfg: ModelConfig, base_flat, lora_flat, tokens, pos):
+    """Logits at position ``pos`` per sequence: (tokens [B,S], pos [B]) → [B,V].
+
+    The Rust greedy decoder appends argmax(logits) at pos+1 and re-invokes;
+    the full-sequence forward is recomputed each step (no KV cache — S is 96
+    and the eval batch is small; see DESIGN.md §7 for the trade-off note).
+    """
+    logits = jax.vmap(forward, in_axes=(None, None, None, 0))(
+        cfg, base_flat, lora_flat, tokens
+    )  # [B, S, V]
+    return jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0, :]

@@ -1,0 +1,55 @@
+"""Deterministic cross-language RNG primitives.
+
+The Rademacher random-projection matrix R used by QLESS must be *identical*
+between the Python build/test path and the Rust runtime (Rust generates R and
+feeds it to the AOT-compiled ``grad_train``/``grad_val`` graphs as an input
+buffer, so it is never baked into the HLO). Both sides implement the same
+counter-based splitmix64 stream:
+
+    out_i = mix64(seed + (i + 1) * GOLDEN)
+
+which is exactly the classic splitmix64 generator unrolled — element ``i`` of
+the stream depends only on ``(seed, i)``, so it vectorizes in numpy and
+parallelizes in Rust. ``rust/src/util/rng.rs`` mirrors this file; the parity
+vectors in ``tests/test_rng.py`` and ``util::rng`` unit tests pin both.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(seed: int, n: int, offset: int = 0) -> np.ndarray:
+    """Elements ``offset .. offset+n`` of the splitmix64 stream for ``seed``.
+
+    Returns an ``np.uint64`` array of length ``n``.
+    """
+    idx = np.arange(offset + 1, offset + n + 1, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = np.uint64(seed) + idx * GOLDEN
+        z = (z ^ (z >> np.uint64(30))) * _MIX1
+        z = (z ^ (z >> np.uint64(27))) * _MIX2
+        z = z ^ (z >> np.uint64(31))
+    return z
+
+
+def rademacher_projection(seed: int, d: int, k: int) -> np.ndarray:
+    """The QLESS projection matrix R ∈ {−1,+1}^{d×k} / sqrt(k), row-major.
+
+    Sign of element (i, j) is bit 63 of stream element ``i*k + j``.
+    By Johnson–Lindenstrauss (Achlioptas 2003, database-friendly variant),
+    x ↦ xᵀR approximately preserves inner products for k ≪ d.
+    """
+    bits = splitmix64(seed, d * k) >> np.uint64(63)
+    signs = np.where(bits == 1, -1.0, 1.0).astype(np.float32)
+    return (signs / np.float32(np.sqrt(k))).reshape(d, k)
+
+
+def uniform01(seed: int, n: int, offset: int = 0) -> np.ndarray:
+    """float64 uniforms in [0,1) from the top 53 bits of the stream."""
+    z = splitmix64(seed, n, offset)
+    return (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)

@@ -1,0 +1,120 @@
+"""Shared model / artifact-shape configuration for the AOT pipeline.
+
+Single source of truth for every static dimension that the Rust runtime has
+to agree on. ``aot.py`` serializes the chosen configs into
+``artifacts/manifest.json``; ``rust/src/runtime/manifest.rs`` parses and
+validates it at load time so a stale artifact directory fails fast instead
+of producing shape errors deep inside PJRT.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict, field
+
+# Character-level vocabulary shared with rust/src/corpus/tokenizer.rs.
+# Index 0 is <pad>; 1 <bos>; 2 <eot> (end of turn); 3 <sep>.
+VOCAB = ["<pad>", "<bos>", "<eot>", "<sep>"] + list(
+    "abcdefghijklmnopqrstuvwxyz0123456789 .,:;?!'\"()+-*/=%<>|&#@_"
+)
+VOCAB_SIZE = 64
+assert len(VOCAB) == VOCAB_SIZE, len(VOCAB)
+
+# Adam hyperparameters (paper Appendix A uses AdamW defaults on LoRA params).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+# absmean saturation constant: values beyond ABSMEAN_C * mean|g| clip to the
+# outer bin.  For a Gaussian, mean|g| ≈ 0.8σ, so c=2.5 saturates ≈2σ — this
+# pushes mass away from the zero bin (paper §5, Fig. 3) at the cost of
+# clipping the tail.
+ABSMEAN_C = 2.5
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A SimLM size preset plus the static batch shapes of its artifacts."""
+
+    name: str
+    vocab: int = VOCAB_SIZE
+    seq: int = 96        # S: fixed sequence length (char-level)
+    d_model: int = 128   # D
+    n_layers: int = 4    # L
+    n_heads: int = 4     # H
+    d_ff: int = 512      # F
+    lora_rank: int = 8   # r (LoRA on q,k,v,o)
+    lora_alpha: float = 16.0
+    proj_dim: int = 512  # K: random-projection dim (paper uses 8192 at 270K)
+    batch_train: int = 16  # B for train_step
+    batch_grad: int = 16   # B for grad_train / grad_val (vmapped per-sample)
+    batch_eval: int = 32   # B for loss_eval / decode_step
+    tile_q: int = 128      # influence kernel: train-side tile rows
+    tile_v: int = 64       # influence kernel: val-side tile rows
+    quant_block: int = 64  # quantize kernel: rows per grid step
+
+    # ---- derived shapes ----------------------------------------------------
+
+    def base_shapes(self):
+        """Flat-packing order of frozen base params (must match model.py)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        shapes = [("embed", (v, d))]
+        for l in range(self.n_layers):
+            shapes += [
+                (f"l{l}.wq", (d, d)),
+                (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)),
+                (f"l{l}.wo", (d, d)),
+                (f"l{l}.ln1", (d,)),
+                (f"l{l}.w1", (d, f)),
+                (f"l{l}.w2", (f, d)),
+                (f"l{l}.ln2", (d,)),
+            ]
+        shapes.append(("lnf", (d,)))
+        return shapes
+
+    def lora_shapes(self):
+        """Flat-packing order of trainable LoRA params (q,k,v,o per layer)."""
+        d, r = self.d_model, self.lora_rank
+        shapes = []
+        for l in range(self.n_layers):
+            for w in ("q", "k", "v", "o"):
+                shapes += [(f"l{l}.{w}.A", (d, r)), (f"l{l}.{w}.B", (r, d))]
+        return shapes
+
+    @property
+    def d_base(self) -> int:
+        return sum(_numel(s) for _, s in self.base_shapes())
+
+    @property
+    def d_lora(self) -> int:
+        return sum(_numel(s) for _, s in self.lora_shapes())
+
+    def manifest_entry(self) -> dict:
+        d = asdict(self)
+        d["d_base"] = self.d_base
+        d["d_lora"] = self.d_lora
+        d["adam_b1"] = ADAM_B1
+        d["adam_b2"] = ADAM_B2
+        d["adam_eps"] = ADAM_EPS
+        d["absmean_c"] = ABSMEAN_C
+        return d
+
+
+def _numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+TINY = ModelConfig(
+    name="tiny", d_model=64, n_layers=2, n_heads=2, d_ff=256,
+    lora_rank=4, proj_dim=256, tile_q=64, tile_v=32,
+)
+SMALL = ModelConfig(name="small")  # defaults above
+BASE = ModelConfig(
+    name="base", d_model=256, n_layers=6, n_heads=8, d_ff=1024,
+    lora_rank=8, proj_dim=512,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, BASE)}

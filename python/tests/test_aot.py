@@ -1,0 +1,86 @@
+"""AOT export sanity: every graph lowers to parseable HLO text with the
+shapes the manifest promises. Uses the tiny config to keep lowering fast."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import graphs_for, to_hlo_text
+from compile.simconfig import CONFIGS, TINY, VOCAB
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    out = {}
+    for name, fn, specs in graphs_for(TINY):
+        out[name] = (fn.lower(*specs), specs)
+    return out
+
+
+EXPECTED = {
+    "pretrain_step", "train_step", "grad_train", "grad_val", "loss_eval", "decode_step",
+    "quantize_absmax_8", "quantize_absmax_4", "quantize_absmax_2",
+    "quantize_absmean_8", "quantize_absmean_4", "quantize_absmean_2",
+    "quantize_sign_1", "influence",
+}
+
+
+def test_graph_set_complete(lowered):
+    assert set(lowered) == EXPECTED
+
+
+def test_hlo_text_is_parseable_entry(lowered):
+    for name, (low, _) in lowered.items():
+        text = to_hlo_text(low)
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        # 64-bit-id regression guard: text path always starts ids small.
+        assert len(text) > 200, name
+
+
+def test_train_step_signature(lowered):
+    _, specs = lowered["train_step"]
+    shapes = [tuple(s.shape) for s in specs]
+    assert shapes == [
+        (TINY.d_base,), (TINY.d_lora,), (TINY.d_lora,), (TINY.d_lora,), (),
+        (TINY.batch_train, TINY.seq), (TINY.batch_train, TINY.seq), (),
+    ]
+
+
+def test_grad_train_projection_shape(lowered):
+    _, specs = lowered["grad_train"]
+    assert tuple(specs[-1].shape) == (TINY.d_lora, TINY.proj_dim)
+
+
+def test_influence_tile_shape(lowered):
+    _, specs = lowered["influence"]
+    assert tuple(specs[0].shape) == (TINY.tile_q, TINY.proj_dim)
+    assert tuple(specs[1].shape) == (TINY.tile_v, TINY.proj_dim)
+
+
+def test_manifest_entries_have_dims():
+    for name, cfg in CONFIGS.items():
+        e = cfg.manifest_entry()
+        for k in ("d_base", "d_lora", "proj_dim", "seq", "vocab", "adam_b1",
+                  "absmean_c"):
+            assert k in e, (name, k)
+        assert e["vocab"] == len(VOCAB) == 64
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_matches_configs():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["version"] >= 2
+    for size, entry in man["models"].items():
+        cfg = CONFIGS[size]
+        assert entry["d_base"] == cfg.d_base
+        assert entry["d_lora"] == cfg.d_lora
+        for art in entry["artifacts"].values():
+            f_path = os.path.join(os.path.dirname(path), art["file"])
+            assert os.path.exists(f_path), art["file"]

@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes / bit-widths / value distributions; quantization is
+integer-valued so comparisons are exact, the influence matmul uses tight
+fp32 tolerances. These are the CORE correctness signal for the kernels that
+end up inside the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import influence_pallas, quantize_pallas
+from compile.kernels.ref import (
+    alpha_for_bits,
+    dequantize_ref,
+    influence_ref,
+    normalize_rows_ref,
+    quantize,
+    quantize_absmax_ref,
+    quantize_absmean_ref,
+    quantize_sign_ref,
+)
+
+SETTINGS = dict(deadline=None, max_examples=20, print_blob=True)
+
+
+def _rand(rng, n, k, scale=1.0):
+    return (rng.standard_normal((n, k)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantize kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    mode=st.sampled_from(["absmax", "absmean"]),
+    rows=st.sampled_from([1, 2, 4]),
+    k=st.sampled_from([8, 64, 256]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(bits, mode, rows, k, scale, seed):
+    block = 4
+    g = _rand(np.random.default_rng(seed), rows * block, k, scale)
+    codes, scales = quantize_pallas(jnp.array(g), bits=bits, mode=mode, block=block)
+    fn = quantize_absmax_ref if mode == "absmax" else quantize_absmean_ref
+    codes_ref, scales_ref = fn(jnp.array(g), alpha_for_bits(bits))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_ref))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_ref), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 3]),
+    k=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sign_kernel_matches_ref(rows, k, seed):
+    block = 8
+    g = _rand(np.random.default_rng(seed), rows * block, k)
+    codes, scales = quantize_pallas(jnp.array(g), bits=1, block=block)
+    codes_ref, scales_ref = quantize_sign_ref(jnp.array(g))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_ref))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scales_ref), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    mode=st.sampled_from(["absmax", "absmean"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_codes_bounded_by_alpha(bits, mode, seed):
+    g = _rand(np.random.default_rng(seed), 16, 64, 10.0)
+    codes, _ = quantize_pallas(jnp.array(g), bits=bits, mode=mode, block=16)
+    a = alpha_for_bits(bits)
+    assert np.abs(np.asarray(codes)).max() <= a
+
+
+def test_absmax_hits_outer_bin_exactly():
+    # The row max must map to ±α exactly (paper Eq. 5 with g=S).
+    g = np.zeros((4, 8), np.float32)
+    g[:, 0] = [1.0, -2.0, 0.5, 100.0]
+    codes, scales = quantize_pallas(jnp.array(g), bits=4, block=4)
+    a = int(alpha_for_bits(4))
+    np.testing.assert_array_equal(np.asarray(codes)[:, 0], [a, -a, a, a])
+    np.testing.assert_allclose(np.asarray(scales), np.abs(g[:, 0]) / a, rtol=1e-6)
+
+
+def test_sign_has_no_zero_bin():
+    g = _rand(np.random.default_rng(0), 8, 32)
+    codes, _ = quantize_pallas(jnp.array(g), bits=1, block=8)
+    assert set(np.unique(np.asarray(codes))) <= {-1, 1}
+
+
+def test_zero_rows_are_safe():
+    g = np.zeros((4, 16), np.float32)
+    for bits in (1, 2, 4, 8):
+        codes, scales = quantize_pallas(jnp.array(g), bits=bits, block=4)
+        assert np.isfinite(np.asarray(scales)).all()
+        if bits > 1:
+            assert (np.asarray(codes) == 0).all()
+            np.testing.assert_array_equal(np.asarray(scales), 0.0)
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_absmean_denser_than_absmax_at_low_bits(bits, seed):
+    """Paper Fig. 3: absmean occupies the zero bin less than absmax."""
+    g = _rand(np.random.default_rng(seed), 32, 256)
+    qmax, _ = quantize_absmax_ref(jnp.array(g), alpha_for_bits(bits))
+    qmean, _ = quantize_absmean_ref(jnp.array(g), alpha_for_bits(bits))
+    zmax = (np.asarray(qmax) == 0).mean()
+    zmean = (np.asarray(qmean) == 0).mean()
+    assert zmean <= zmax + 1e-9
+
+
+def test_dequantize_roundtrip_8bit_accuracy():
+    g = _rand(np.random.default_rng(1), 16, 256)
+    codes, scales = quantize_absmax_ref(jnp.array(g), alpha_for_bits(8))
+    rec = dequantize_ref(codes, scales)
+    err = np.abs(np.asarray(rec) - g).max() / np.abs(g).max()
+    assert err < 0.01  # 8-bit absmax: ≤ 0.5/127 relative to row max
+
+
+# ---------------------------------------------------------------------------
+# influence kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    ti=st.sampled_from([1, 2, 4]),
+    tj=st.sampled_from([1, 3]),
+    k=st.sampled_from([16, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_influence_matches_ref(ti, tj, k, seed):
+    bq, bv = 8, 4
+    rng = np.random.default_rng(seed)
+    qt = _rand(rng, ti * bq, k)
+    qv = _rand(rng, tj * bv, k)
+    out = influence_pallas(jnp.array(qt), jnp.array(qv), bq=bq, bv=bv)
+    ref = influence_ref(jnp.array(qt), jnp.array(qv))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_influence_is_cosine_bounded(seed):
+    rng = np.random.default_rng(seed)
+    out = influence_pallas(
+        jnp.array(_rand(rng, 16, 64)), jnp.array(_rand(rng, 8, 64)), bq=16, bv=8
+    )
+    assert np.abs(np.asarray(out)).max() <= 1.0 + 1e-5
+
+
+def test_influence_self_similarity_is_one():
+    g = _rand(np.random.default_rng(2), 8, 64)
+    out = influence_pallas(jnp.array(g), jnp.array(g), bq=8, bv=8)
+    np.testing.assert_allclose(np.diag(np.asarray(out)), 1.0, atol=1e-5)
+
+
+def test_influence_zero_rows_give_zero():
+    qt = np.zeros((8, 64), np.float32)
+    qv = _rand(np.random.default_rng(3), 8, 64)
+    out = influence_pallas(jnp.array(qt), jnp.array(qv), bq=8, bv=8)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_influence_scale_invariance():
+    """The quantization scale cancels (QLESS stores it, scorer ignores it)."""
+    rng = np.random.default_rng(4)
+    qt = _rand(rng, 8, 64)
+    qv = _rand(rng, 8, 64)
+    a = influence_pallas(jnp.array(qt), jnp.array(qv), bq=8, bv=8)
+    b = influence_pallas(jnp.array(qt * 37.5), jnp.array(qv * 0.001), bq=8, bv=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_influence_int8_codes_match_float_path():
+    """Scoring quantized int8 codes == scoring their float dequantization."""
+    rng = np.random.default_rng(5)
+    g = _rand(rng, 8, 64)
+    codes, _ = quantize_absmax_ref(jnp.array(g), alpha_for_bits(8))
+    a = influence_pallas(codes.astype(jnp.float32), jnp.array(g), bq=8, bv=8)
+    b = influence_ref(codes, jnp.array(g))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scheme dispatch mirror
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_dispatch_16bit_is_identity():
+    g = jnp.array(_rand(np.random.default_rng(6), 4, 16))
+    out, scales = quantize(g, "absmax", 16)
+    assert scales is None
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+
+
+def test_quantize_dispatch_rejects_unknown_scheme():
+    g = jnp.ones((2, 4))
+    with pytest.raises(ValueError):
+        quantize(g, "weird", 4)
+
+
+def test_alpha_values():
+    assert [alpha_for_bits(b) for b in (2, 4, 8)] == [1.0, 7.0, 127.0]
+    with pytest.raises(ValueError):
+        alpha_for_bits(1)
+
+
+def test_normalize_rows_zero_safe():
+    x = jnp.zeros((3, 5))
+    np.testing.assert_array_equal(np.asarray(normalize_rows_ref(x)), 0.0)

@@ -1,0 +1,186 @@
+"""L2 correctness: SimLM forward/backward, per-sample grads, train step."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.rng import rademacher_projection
+from compile.simconfig import CONFIGS, TINY, VOCAB_SIZE
+
+CFG = TINY
+S = CFG.seq
+
+
+@pytest.fixture(scope="module")
+def params():
+    key = jax.random.PRNGKey(0)
+    base = model.init_base_flat(CFG, key)
+    lora = model.init_lora_flat(CFG, jax.random.PRNGKey(1))
+    return base, lora
+
+
+def _batch(b, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(4, VOCAB_SIZE, size=(b, S)).astype(np.int32)
+    mask = np.zeros((b, S), np.float32)
+    mask[:, S // 2:] = 1.0  # answer span = second half
+    return jnp.array(toks), jnp.array(mask)
+
+
+def test_flat_sizes_match_config(params):
+    base, lora = params
+    assert base.shape == (CFG.d_base,)
+    assert lora.shape == (CFG.d_lora,)
+
+
+def test_forward_shape_and_finite(params):
+    base, lora = params
+    toks, _ = _batch(1)
+    logits = model.forward(CFG, base, lora, toks[0])
+    assert logits.shape == (S, VOCAB_SIZE)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_lora_starts_as_noop(params):
+    """B=0 at init ⇒ adapters contribute nothing ⇒ logits == base model."""
+    base, lora = params
+    toks, _ = _batch(1)
+    a = model.forward(CFG, base, lora, toks[0])
+    b = model.forward(CFG, base, jnp.zeros_like(lora), toks[0])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_lora_changes_forward_when_nonzero(params):
+    base, lora = params
+    toks, _ = _batch(1)
+    a = model.forward(CFG, base, lora, toks[0])
+    lora2 = lora + 0.05
+    b = model.forward(CFG, base, lora2, toks[0])
+    assert float(jnp.abs(a - b).max()) > 1e-4
+
+
+def test_loss_positive_and_masked(params):
+    base, lora = params
+    toks, mask = _batch(1)
+    loss = model.sample_loss(CFG, lora, base, toks[0], mask[0])
+    assert float(loss) > 0
+    # empty mask → 0/maximum(0,1) = 0, finite
+    zloss = model.sample_loss(CFG, lora, base, toks[0], jnp.zeros(S))
+    assert float(zloss) == 0.0
+
+
+def test_loss_mask_excludes_prompt(params):
+    """Changing prompt-only tokens must not change the (teacher-forced) loss
+    contribution of answer tokens whose context is unchanged — but changing
+    answer tokens must change the loss."""
+    base, lora = params
+    toks, mask = _batch(1, seed=3)
+    l0 = model.sample_loss(CFG, lora, base, toks[0], mask[0])
+    toks2 = toks.at[0, S - 1].set((int(toks[0, S - 1]) - 4 + 1) % 60 + 4)
+    l1 = model.sample_loss(CFG, lora, base, toks2[0], mask[0])
+    assert abs(float(l0) - float(l1)) > 1e-7
+
+
+def test_train_step_decreases_loss(params):
+    base, lora = params
+    toks, mask = _batch(CFG.batch_train, seed=1)
+    m = jnp.zeros_like(lora)
+    v = jnp.zeros_like(lora)
+    step = jax.jit(functools.partial(model.train_step, CFG))
+    losses = []
+    for t in range(1, 13):
+        lora, m, v, loss = step(base, lora, m, v, float(t), toks, mask, 5e-3)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_per_sample_grads_match_individual(params):
+    """vmapped per-sample SGD grads == stacked single-sample grads."""
+    base, lora = params
+    toks, mask = _batch(3, seed=2)
+    proj = jnp.eye(CFG.d_lora, CFG.proj_dim)  # truncation "projection"
+    feats = model.grad_val_features(CFG, base, lora, toks, mask, proj)
+    for i in range(3):
+        g = jax.grad(model.sample_loss, argnums=1)(CFG, lora, base, toks[i], mask[i])
+        np.testing.assert_allclose(
+            np.asarray(feats[i]), np.asarray(g[: CFG.proj_dim]), rtol=2e-4, atol=2e-5
+        )
+
+
+def test_grad_train_is_adam_direction(params):
+    """With m=v=0, t=1: Γ = g/(√(g²·bias) + eps) elementwise — check against
+    a direct computation."""
+    base, lora = params
+    toks, mask = _batch(2, seed=4)
+    proj = jnp.eye(CFG.d_lora, CFG.proj_dim)
+    m = jnp.zeros(CFG.d_lora)
+    v = jnp.zeros(CFG.d_lora)
+    t = 1.0
+    feats = model.grad_train_features(CFG, base, lora, m, v, t, toks, mask, proj)
+    from compile.simconfig import ADAM_B1, ADAM_B2, ADAM_EPS
+
+    g = jax.grad(model.sample_loss, argnums=1)(CFG, lora, base, toks[0], mask[0])
+    mhat = (1 - ADAM_B1) * g / (1 - ADAM_B1**t)
+    vhat = (1 - ADAM_B2) * g * g / (1 - ADAM_B2**t)
+    gamma = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    np.testing.assert_allclose(
+        np.asarray(feats[0]), np.asarray(gamma[: CFG.proj_dim]), rtol=2e-3, atol=2e-4
+    )
+
+
+def test_grad_features_projection_consistency(params):
+    """Projecting with the Rademacher R == explicit matmul with rng.py's R."""
+    base, lora = params
+    toks, mask = _batch(2, seed=5)
+    r = jnp.array(rademacher_projection(7, CFG.d_lora, CFG.proj_dim))
+    feats = model.grad_val_features(CFG, base, lora, toks, mask, r)
+    g = jax.vmap(jax.grad(model.sample_loss, argnums=1), in_axes=(None, None, None, 0, 0))(
+        CFG, lora, base, toks, mask
+    )
+    np.testing.assert_allclose(
+        np.asarray(feats), np.asarray(g @ r), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_loss_eval_matches_sample_loss(params):
+    base, lora = params
+    toks, mask = _batch(CFG.batch_eval, seed=6)
+    nll = model.loss_eval(CFG, base, lora, toks, mask)
+    assert nll.shape == (CFG.batch_eval,)
+    one = model.sample_loss(CFG, lora, base, toks[0], mask[0])
+    np.testing.assert_allclose(float(nll[0]), float(one), rtol=1e-5)
+
+
+def test_decode_step_matches_forward(params):
+    base, lora = params
+    toks, _ = _batch(CFG.batch_eval, seed=7)
+    pos = jnp.full((CFG.batch_eval,), 10, jnp.int32)
+    logits = model.decode_step(CFG, base, lora, toks, pos)
+    assert logits.shape == (CFG.batch_eval, VOCAB_SIZE)
+    full = model.forward(CFG, base, lora, toks[0])
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(full[10]), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_step_respects_causality(params):
+    """Logits at pos must not depend on tokens after pos."""
+    base, lora = params
+    toks, _ = _batch(2, seed=8)
+    pos = jnp.array([20, 20], jnp.int32)
+    a = model.decode_step(CFG, base, lora, toks, pos)
+    toks2 = toks.at[:, 40:].set(5)
+    b = model.decode_step(CFG, base, lora, toks2, pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_all_config_shapes_consistent():
+    for name, cfg in CONFIGS.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.d_lora == cfg.n_layers * 4 * 2 * cfg.d_model * cfg.lora_rank
+        base = sum(
+            int(np.prod(s)) for _, s in cfg.base_shapes()
+        )
+        assert base == cfg.d_base

@@ -1,0 +1,106 @@
+"""Parity tests for the cross-language splitmix64 / Rademacher stream.
+
+The vectors pinned here are also pinned on the Rust side
+(rust/src/util/rng.rs tests) — if either side drifts, projection matrices
+diverge and every stored gradient feature silently stops matching.
+"""
+
+import numpy as np
+import pytest
+
+from compile.rng import GOLDEN, rademacher_projection, splitmix64, uniform01
+
+
+def _scalar_splitmix64(seed: int, i: int) -> int:
+    """Textbook splitmix64, call i (1-based), as an independent oracle."""
+    mask = (1 << 64) - 1
+    z = (seed + i * 0x9E3779B97F4A7C15) & mask
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+    return z ^ (z >> 31)
+
+
+def test_matches_scalar_oracle():
+    out = splitmix64(42, 16)
+    for i in range(16):
+        assert int(out[i]) == _scalar_splitmix64(42, i + 1)
+
+
+def test_offset_slices_stream():
+    full = splitmix64(7, 100)
+    tail = splitmix64(7, 60, offset=40)
+    assert np.array_equal(full[40:], tail)
+
+
+def test_seed_zero_and_large_seed():
+    assert int(splitmix64(0, 1)[0]) == _scalar_splitmix64(0, 1)
+    big = (1 << 64) - 3
+    assert int(splitmix64(big, 1)[0]) == _scalar_splitmix64(big, 1)
+
+
+# Pinned vectors (duplicated in rust/src/util/rng.rs::tests::parity_vectors).
+PINNED = {
+    (1234, 0): 0xBB0CF61B2F181CDB,
+    (1234, 1): 0x97C7A1364DF06524,
+    (1234, 7): 0x3A465F3F8F9CE09F,
+}
+
+
+def test_pinned_vectors():
+    out = splitmix64(1234, 8)
+    for (seed, i), want in PINNED.items():
+        assert int(out[i]) == want, f"stream({seed})[{i}]"
+
+
+def test_pinned_vectors_are_right():
+    # Guard the guard: pinned values must come from the scalar oracle.
+    for (seed, i), want in PINNED.items():
+        assert _scalar_splitmix64(seed, i + 1) == want
+
+
+def test_projection_shape_and_values():
+    r = rademacher_projection(99, 64, 32)
+    assert r.shape == (64, 32)
+    assert r.dtype == np.float32
+    u = np.unique(np.abs(r))
+    assert len(u) == 1
+    np.testing.assert_allclose(u[0], 1.0 / np.sqrt(32), rtol=1e-6)
+
+
+def test_projection_deterministic_and_seed_sensitive():
+    a = rademacher_projection(5, 16, 8)
+    b = rademacher_projection(5, 16, 8)
+    c = rademacher_projection(6, 16, 8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_projection_sign_balance():
+    r = rademacher_projection(1, 128, 128)
+    frac_pos = (r > 0).mean()
+    assert 0.45 < frac_pos < 0.55
+
+
+def test_projection_preserves_inner_products():
+    # JL sanity: relative inner products survive projection.
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 2048)).astype(np.float32)
+    r = rademacher_projection(3, 2048, 512)
+    y = x @ r
+    gx = x @ x.T
+    gy = y @ y.T
+    # JL additive bound: |⟨Rx,Ry⟩−⟨x,y⟩| ≲ c·‖x‖‖y‖/√k. Norms here are ~√2048,
+    # so allow a few × 2048/√512 ≈ 90 of absolute slack on cross terms and
+    # tight relative error on the (large) diagonal.
+    np.testing.assert_allclose(np.diag(gy), np.diag(gx), rtol=0.15)
+    np.testing.assert_allclose(gy, gx, atol=6 * 2048 / np.sqrt(512))
+
+
+def test_uniform01_range():
+    u = uniform01(11, 1000)
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.05
+
+
+def test_golden_constant():
+    assert int(GOLDEN) == 0x9E3779B97F4A7C15

@@ -1,0 +1,80 @@
+//! Datastore write/read throughput per precision — the storage layer the
+//! paper's Table 1 column measures in GB; here we measure it in GB/s.
+
+use qless::datastore::{Datastore, DatastoreWriter};
+use qless::grads::FeatureMatrix;
+use qless::quant::{Precision, Scheme};
+use qless::util::stats::bench_cfg;
+use qless::util::Rng;
+
+fn main() {
+    let (n, k, c) = (2048usize, 512usize, 2usize);
+    let mut rng = Rng::new(3);
+    let feats = FeatureMatrix {
+        n,
+        k,
+        data: (0..n * k).map(|_| rng.normal() as f32).collect(),
+    };
+    let in_bytes = (n * k * 4 * c) as f64;
+    println!("== bench_datastore: {n} rows × k={k} × {c} checkpoints ==");
+
+    for bits in [16u8, 8, 4, 2, 1] {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let path = std::env::temp_dir().join(format!("qless_bench_ds_{bits}.qlds"));
+        let r = bench_cfg(
+            &format!("write_{bits}bit (quantize+pack+io)"),
+            in_bytes,
+            "B",
+            1,
+            3,
+            0.5,
+            &mut || {
+                let mut w = DatastoreWriter::create(&path, p, n, k, c).unwrap();
+                for ci in 0..c {
+                    w.begin_checkpoint(0.1 * (ci + 1) as f32).unwrap();
+                    for i in 0..n {
+                        w.append_features(feats.row(i)).unwrap();
+                    }
+                    w.end_checkpoint().unwrap();
+                }
+                std::hint::black_box(w.finalize().unwrap());
+            },
+        );
+        println!("{}", r.report_line());
+
+        let ds = Datastore::open(&path).unwrap();
+        let file_bytes = ds.file_bytes() as f64;
+        let r = bench_cfg(
+            &format!("read_{bits}bit (block load)"),
+            file_bytes,
+            "B",
+            1,
+            5,
+            0.5,
+            &mut || {
+                for ci in 0..c {
+                    std::hint::black_box(ds.load_checkpoint(ci).unwrap());
+                }
+            },
+        );
+        println!("{}", r.report_line());
+
+        let block = ds.load_checkpoint(0).unwrap();
+        let r = bench_cfg(
+            &format!("dequantize_{bits}bit (all rows)"),
+            (n * k * 4) as f64,
+            "B",
+            1,
+            3,
+            0.5,
+            &mut || {
+                for i in 0..n {
+                    std::hint::black_box(block.row_f32(i));
+                }
+            },
+        );
+        println!("{}", r.report_line());
+        std::fs::remove_file(&path).ok();
+    }
+}

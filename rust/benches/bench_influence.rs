@@ -1,0 +1,84 @@
+//! Influence-scoring throughput: the three scoring paths over the same
+//! datastore — dense f32, packed 1-bit XNOR+popcount, and the XLA Pallas
+//! tile. This is the §Perf centerpiece: the popcount path should beat the
+//! dense path by ~an order of magnitude (paper's 16× storage saving turned
+//! into a compute saving).
+
+use std::path::PathBuf;
+
+use qless::datastore::{Datastore, DatastoreWriter};
+use qless::grads::FeatureMatrix;
+use qless::influence::native::{scores_1bit, scores_dense, ValFeatures};
+use qless::quant::{Precision, Scheme};
+use qless::util::stats::bench;
+use qless::util::Rng;
+
+fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+}
+
+fn build(bits: u8, n: usize, k: usize) -> (Datastore, PathBuf) {
+    let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+    let p = Precision::new(bits, scheme).unwrap();
+    let path = std::env::temp_dir().join(format!("qless_bench_inf_{bits}_{}.qlds", std::process::id()));
+    let f = feats(n, k, 7);
+    let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+    w.begin_checkpoint(1.0).unwrap();
+    for i in 0..n {
+        w.append_features(f.row(i)).unwrap();
+    }
+    w.end_checkpoint().unwrap();
+    w.finalize().unwrap();
+    (Datastore::open(&path).unwrap(), path)
+}
+
+fn main() {
+    let (n, k, nv) = (4096usize, 512usize, 32usize);
+    let pairs = (n * nv) as f64;
+    let vraw = feats(nv, k, 9);
+    println!("== bench_influence: {n} train × {nv} val × k={k} (one checkpoint) ==");
+
+    let mut paths = Vec::new();
+    for bits in [16u8, 8, 4, 2, 1] {
+        let (ds, path) = build(bits, n, k);
+        paths.push(path);
+        let block = ds.load_checkpoint(0).unwrap();
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let val = ValFeatures::prepare(&vraw, Precision::new(bits, scheme).unwrap());
+        let r = bench(&format!("dense_{bits}bit"), pairs, "pair", || {
+            std::hint::black_box(scores_dense(&block, &val));
+        });
+        println!("{}", r.report_line());
+        if bits == 1 {
+            let r = bench("popcount_1bit", pairs, "pair", || {
+                std::hint::black_box(scores_1bit(&block, &val));
+            });
+            println!("{}", r.report_line());
+        }
+    }
+
+    // XLA Pallas-tile path (needs artifacts)
+    let art = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.json").exists() {
+        let rt = qless::runtime::Runtime::new(&art).unwrap();
+        let info = rt.model("small").unwrap(); // k = 512 matches
+        if info.proj_dim == k {
+            let (ds, path) = build(8, n, k);
+            paths.push(path);
+            let block = ds.load_checkpoint(0).unwrap();
+            let val = ValFeatures::prepare(&vraw, Precision::new(8, Scheme::Absmax).unwrap());
+            let r = bench("xla_pallas_tile_8bit", pairs, "pair", || {
+                std::hint::black_box(
+                    qless::influence::xla::scores_xla(&rt, &info, &block, &val).unwrap(),
+                );
+            });
+            println!("{}", r.report_line());
+        }
+    } else {
+        println!("(xla path skipped: artifacts not built)");
+    }
+    for p in paths {
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,98 @@
+//! End-to-end stage timing: one miniature pipeline run with per-stage
+//! wall-clock — the Table-1-row cost model, and the worker-scaling curve
+//! for gradient extraction.
+
+use std::path::PathBuf;
+
+use qless::config::Config;
+use qless::eval::Benchmark;
+use qless::grads::extract_train_features;
+use qless::pipeline::Pipeline;
+use qless::quant::{Precision, Scheme};
+use qless::select::select_top_frac;
+use qless::util::Timer;
+
+fn main() {
+    let art = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("manifest.json").exists() {
+        println!("bench_pipeline skipped: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts = art.to_str().unwrap().into();
+    cfg.corpus_size = 1000;
+    cfg.warmup_epochs = 2;
+    cfg.finetune_epochs = 2;
+    cfg.val_per_task = 12;
+    cfg.eval_per_task = 32;
+    cfg.run_dir = std::env::temp_dir()
+        .join(format!("qless_bench_pipe_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .into();
+    println!("== bench_pipeline: tiny model, {} samples ==", cfg.corpus_size);
+    let mut pipe = Pipeline::new(cfg).unwrap();
+
+    let stage = |label: &str, secs: f64| println!("{label:<42} {secs:>8.2}s");
+
+    let t = Timer::start("pretrain");
+    pipe.base().unwrap();
+    stage("pretrain base (cached after first run)", t.stop());
+
+    let t = Timer::start("warmup");
+    let set = pipe.warmup().unwrap();
+    stage("warmup (LoRA, 2 epochs, 5%)", t.stop());
+
+    let t = Timer::start("extract");
+    pipe.train_features().unwrap();
+    stage("gradient extraction (all ckpts, cached)", t.stop());
+
+    for bits in [16u8, 1] {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let t = Timer::start("ds");
+        let (_ds, bytes) = pipe.build_datastore(Precision::new(bits, scheme).unwrap()).unwrap();
+        stage(
+            &format!("datastore build {bits}-bit ({} B)", bytes),
+            t.stop(),
+        );
+    }
+
+    let (ds, _) = pipe.build_datastore(Precision::new(1, Scheme::Sign).unwrap()).unwrap();
+    let t = Timer::start("score");
+    let scores = pipe.influence_scores(&ds, Benchmark::SynArith).unwrap();
+    stage("influence scoring (1-bit popcount)", t.stop());
+
+    let sel = select_top_frac(&scores, 0.05);
+    let t = Timer::start("finetune");
+    let (lora, _) = pipe.finetune(&sel, 1).unwrap();
+    stage("fine-tune on top-5%", t.stop());
+
+    let t = Timer::start("eval");
+    pipe.evaluate_lora(&lora).unwrap();
+    stage("3-benchmark eval", t.stop());
+
+    // worker scaling for extraction (fresh features each time)
+    println!("\nextraction worker scaling (one checkpoint):");
+    let ckpt = &set.checkpoints[0];
+    let proj = pipe.projector();
+    for workers in [1usize, 2, 4, 8] {
+        let t = Timer::start("w");
+        extract_train_features(
+            &pipe.rt,
+            &pipe.info,
+            &set.base,
+            ckpt,
+            &pipe.corpus,
+            &proj,
+            workers,
+        )
+        .unwrap();
+        let secs = t.stop();
+        println!(
+            "  workers={workers}: {secs:.2}s ({:.0} samples/s)",
+            pipe.corpus.len() as f64 / secs
+        );
+    }
+    std::fs::remove_dir_all(pipe.run_dir()).ok();
+}

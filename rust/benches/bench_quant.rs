@@ -1,0 +1,69 @@
+//! Quantization + packing throughput (the datastore write hot path).
+//!
+//! Custom harness (criterion is not in the offline vendor set): see
+//! `qless::util::stats::bench`. Run with `cargo bench`.
+
+use qless::quant::pack::{pack_codes, unpack_codes};
+use qless::quant::scheme::{quantize_row, Scheme};
+use qless::util::stats::bench;
+use qless::util::Rng;
+
+fn main() {
+    let k = 512usize;
+    let rows = 256usize;
+    let mut rng = Rng::new(1);
+    let data: Vec<Vec<f32>> = (0..rows)
+        .map(|_| (0..k).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let bytes_per_iter = (rows * k * 4) as f64;
+
+    println!("== bench_quant: {rows} rows × k={k} fp32 in ==");
+    for (bits, scheme) in [
+        (8u8, Scheme::Absmax),
+        (4, Scheme::Absmax),
+        (4, Scheme::Absmean),
+        (2, Scheme::Absmax),
+        (1, Scheme::Sign),
+    ] {
+        let r = bench(
+            &format!("quantize_{bits}bit_{scheme}"),
+            bytes_per_iter,
+            "B",
+            || {
+                for row in &data {
+                    std::hint::black_box(quantize_row(row, bits, scheme));
+                }
+            },
+        );
+        println!("{}", r.report_line());
+    }
+
+    // pack / unpack round trip
+    let quantized: Vec<_> = data.iter().map(|r| quantize_row(r, 4, Scheme::Absmax)).collect();
+    let r = bench("pack_4bit", bytes_per_iter / 8.0, "B", || {
+        for q in &quantized {
+            std::hint::black_box(pack_codes(&q.codes, 4, q.scale).unwrap());
+        }
+    });
+    println!("{}", r.report_line());
+
+    let packed: Vec<_> = quantized
+        .iter()
+        .map(|q| pack_codes(&q.codes, 4, q.scale).unwrap())
+        .collect();
+    let r = bench("unpack_4bit", bytes_per_iter / 8.0, "B", || {
+        for p in &packed {
+            std::hint::black_box(unpack_codes(p));
+        }
+    });
+    println!("{}", r.report_line());
+
+    // quantize+pack at 1-bit — the full QLESS store path per row
+    let r = bench("quantize+pack_1bit_full_path", bytes_per_iter, "B", || {
+        for row in &data {
+            let q = quantize_row(row, 1, Scheme::Sign);
+            std::hint::black_box(pack_codes(&q.codes, 1, q.scale).unwrap());
+        }
+    });
+    println!("{}", r.report_line());
+}

@@ -1,0 +1,91 @@
+//! PJRT runtime micro-benches: per-execute overhead, host-arg vs
+//! persistent-buffer calls, and the relative cost of each AOT graph — the
+//! numbers that justify the persistent-operand design (§Perf L2/L3).
+
+use std::path::PathBuf;
+
+use qless::corpus::{generate_corpus, Tokenizer};
+use qless::data::{Batcher, Dataset};
+use qless::model::{init_base, init_lora};
+use qless::runtime::{Arg, Runtime};
+use qless::util::stats::bench_cfg;
+
+fn main() {
+    let art = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("manifest.json").exists() {
+        println!("bench_runtime skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&art).unwrap();
+    for model in ["tiny", "small"] {
+        let info = rt.model(model).unwrap();
+        let tok = Tokenizer::default();
+        let data = Dataset::encode(
+            generate_corpus(info.batch_grad, 1, &tok, info.seq),
+            &tok,
+            info.seq,
+        );
+        let batch = Batcher::sequential(&data, info.batch_grad).next().unwrap();
+        let base = init_base(&info, 1);
+        let lora = init_lora(&info, 1);
+        let proj = qless::grads::Projector::new(1, info.d_lora, info.proj_dim);
+        println!(
+            "== bench_runtime [{model}]: d_base={} d_lora={} k={} B={} ==",
+            info.d_base, info.d_lora, info.proj_dim, info.batch_grad
+        );
+
+        // host-literal path: every operand re-uploaded per call
+        let exec = rt.exec(&info, "grad_val").unwrap();
+        let samples = info.batch_grad as f64;
+        let r = bench_cfg("grad_val host-args (upload R every call)", samples, "sample", 1, 3, 2.0, &mut || {
+            std::hint::black_box(
+                exec.run(&[
+                    Arg::F32(&base, &[info.d_base]),
+                    Arg::F32(&lora, &[info.d_lora]),
+                    Arg::I32(&batch.tokens, &[info.batch_grad, info.seq]),
+                    Arg::F32(&batch.masks, &[info.batch_grad, info.seq]),
+                    Arg::F32(&proj.matrix, &[info.d_lora, info.proj_dim]),
+                ])
+                .unwrap(),
+            );
+        });
+        println!("{}", r.report_line());
+
+        // persistent-buffer path: checkpoint-lifetime operands resident
+        let base_b = rt.upload_f32(&base, &[info.d_base]).unwrap();
+        let lora_b = rt.upload_f32(&lora, &[info.d_lora]).unwrap();
+        let proj_b = rt.upload_f32(&proj.matrix, &[info.d_lora, info.proj_dim]).unwrap();
+        let r = bench_cfg("grad_val persistent buffers", samples, "sample", 1, 3, 2.0, &mut || {
+            let tok_b = rt.upload_i32(&batch.tokens, &[info.batch_grad, info.seq]).unwrap();
+            let mask_b = rt.upload_f32(&batch.masks, &[info.batch_grad, info.seq]).unwrap();
+            std::hint::black_box(
+                exec.run_b(&[&base_b, &lora_b, &tok_b, &mask_b, &proj_b]).unwrap(),
+            );
+        });
+        println!("{}", r.report_line());
+
+        // loss_eval + decode_step (the eval hot path)
+        let exec_le = rt.exec(&info, "loss_eval").unwrap();
+        let data_e = Dataset::encode(
+            generate_corpus(info.batch_eval, 2, &tok, info.seq),
+            &tok,
+            info.seq,
+        );
+        let batch_e = Batcher::sequential(&data_e, info.batch_eval).next().unwrap();
+        let r = bench_cfg("loss_eval", info.batch_eval as f64, "sample", 1, 3, 2.0, &mut || {
+            let tok_b = rt.upload_i32(&batch_e.tokens, &[info.batch_eval, info.seq]).unwrap();
+            let mask_b = rt.upload_f32(&batch_e.masks, &[info.batch_eval, info.seq]).unwrap();
+            std::hint::black_box(exec_le.run_b(&[&base_b, &lora_b, &tok_b, &mask_b]).unwrap());
+        });
+        println!("{}", r.report_line());
+
+        let exec_ds = rt.exec(&info, "decode_step").unwrap();
+        let pos = vec![10i32; info.batch_eval];
+        let r = bench_cfg("decode_step (one token, full batch)", info.batch_eval as f64, "tok", 1, 3, 2.0, &mut || {
+            let tok_b = rt.upload_i32(&batch_e.tokens, &[info.batch_eval, info.seq]).unwrap();
+            let pos_b = rt.upload_i32(&pos, &[info.batch_eval]).unwrap();
+            std::hint::black_box(exec_ds.run_b(&[&base_b, &lora_b, &tok_b, &pos_b]).unwrap());
+        });
+        println!("{}", r.report_line());
+    }
+}

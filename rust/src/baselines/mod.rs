@@ -1,0 +1,52 @@
+//! Selection baselines (paper §4.1): random-p% and random-100%.
+//! The LESS baseline itself is QLESS at 16-bit (identity quantization) —
+//! exactness is preserved through the bf16 datastore, so it shares the
+//! whole pipeline rather than being a separate implementation.
+
+use crate::util::Rng;
+
+/// Random p% selection (the paper's lower-bound baseline). Seeded so each
+/// trial draws a different subset while staying reproducible.
+pub fn random_frac(n: usize, frac: f64, seed: u64) -> Vec<usize> {
+    assert!((0.0..=1.0).contains(&frac));
+    let k = ((n as f64) * frac).ceil().max(1.0) as usize;
+    let mut rng = Rng::new(seed).fork(0x4A_0D0);
+    let mut idx = rng.sample_indices(n, k.min(n));
+    idx.sort_unstable();
+    idx
+}
+
+/// The full dataset (random 100%).
+pub fn all_indices(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_frac_sizes() {
+        assert_eq!(random_frac(100, 0.05, 1).len(), 5);
+        assert_eq!(random_frac(100, 0.0, 1).len(), 1);
+        assert_eq!(random_frac(10, 1.0, 1).len(), 10);
+    }
+
+    #[test]
+    fn random_frac_distinct_sorted_in_range() {
+        let s = random_frac(1000, 0.1, 2);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn seeds_give_different_subsets() {
+        assert_ne!(random_frac(1000, 0.05, 1), random_frac(1000, 0.05, 2));
+        assert_eq!(random_frac(1000, 0.05, 3), random_frac(1000, 0.05, 3));
+    }
+
+    #[test]
+    fn all_indices_complete() {
+        assert_eq!(all_indices(4), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Hand-rolled CLI argument parser: `qless <subcommand> [--key value]...`
+//!
+//! Flags map 1:1 onto [`Config`] keys plus a few parser-level options
+//! (`--config <file>` loads before overrides; `-v`/`-q` set verbosity;
+//! `--fast` shrinks workloads for smoke runs). Unknown flags error with the
+//! list of valid keys rather than being silently ignored.
+
+use anyhow::{bail, Result};
+
+use super::Config;
+use crate::util::{set_verbosity, Level};
+
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    /// Positional args after the subcommand (e.g. `xp table1`).
+    pub positional: Vec<String>,
+    pub config: Config,
+    /// `--fast`: shrink workloads (used by `make tables` smoke runs).
+    pub fast: bool,
+}
+
+pub const USAGE: &str = "\
+qless — Quantized Low-rank Gradient Similarity Search (paper reproduction)
+
+USAGE: qless <command> [args] [--key value ...]
+
+COMMANDS
+  pipeline            end-to-end: warmup → extract → score → select → finetune → eval
+  gen-corpus          generate + print corpus statistics
+  warmup              warmup-train and write checkpoints
+  extract             build the (quantized) gradient datastore from checkpoints
+  score               compute influence scores against validation gradients
+  select              pick top select_frac and report composition
+  eval                evaluate a checkpoint on the three benchmarks
+  xp <id>             reproduce a paper table/figure:
+                      table1 table2 table3 fig1 fig3 fig4 fig5
+  list-artifacts      show what the manifest provides
+
+OPTIONS (all Config keys work as --key value):
+  --config FILE       load key=value file first
+  --model NAME        tiny | small | base
+  --bits N            16 | 8 | 4 | 2 | 1      --scheme S   absmax | absmean
+  --model-bits N      16 | 8 | 4 (QLoRA ablation)
+  --corpus-size N     --seed N   --select-frac F   --workers N
+  --run-dir DIR       --artifacts DIR
+  --fast              shrink workloads        -v / -q      verbosity
+";
+
+pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+    let mut it = args.into_iter().peekable();
+    let command = match it.next() {
+        Some(c) if !c.starts_with('-') => c,
+        Some(c) if c == "--help" || c == "-h" => {
+            return Ok(Cli { command: "help".into(), positional: vec![], config: Config::default(), fast: false })
+        }
+        _ => bail!("missing subcommand\n\n{USAGE}"),
+    };
+    let mut cli = Cli { command, positional: Vec::new(), config: Config::default(), fast: false };
+
+    // two passes: collect (key, value) pairs, apply --config first
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    while let Some(arg) = it.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            match key {
+                "fast" => cli.fast = true,
+                "help" => {
+                    cli.command = "help".into();
+                }
+                _ => {
+                    let val = match it.next() {
+                        Some(v) => v,
+                        None => bail!("flag --{key} needs a value\n\n{USAGE}"),
+                    };
+                    pairs.push((key.to_string(), val));
+                }
+            }
+        } else if arg == "-v" {
+            set_verbosity(Level::Debug);
+        } else if arg == "-q" {
+            set_verbosity(Level::Warn);
+        } else if arg.starts_with('-') {
+            bail!("unknown flag '{arg}'\n\n{USAGE}");
+        } else {
+            cli.positional.push(arg);
+        }
+    }
+
+    for (k, v) in pairs.iter().filter(|(k, _)| k == "config") {
+        let _ = k;
+        cli.config.load_file(std::path::Path::new(v))?;
+    }
+    for (k, v) in pairs.iter().filter(|(k, _)| k != "config") {
+        cli.config.set(k, v)?;
+    }
+    cli.config.validate()?;
+    Ok(cli)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Result<Cli> {
+        parse_args(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = p(&["pipeline", "--bits", "4", "--scheme", "absmean", "--fast"]).unwrap();
+        assert_eq!(c.command, "pipeline");
+        assert_eq!(c.config.bits, 4);
+        assert!(c.fast);
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let c = p(&["xp", "table1", "--seed", "3"]).unwrap();
+        assert_eq!(c.positional, vec!["table1"]);
+        assert_eq!(c.config.seed, 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(p(&["pipeline", "--bits"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(p(&["pipeline", "--bogus", "1"]).is_err());
+        assert!(p(&["pipeline", "-x"]).is_err());
+    }
+
+    #[test]
+    fn validation_applied() {
+        assert!(p(&["pipeline", "--bits", "5"]).is_err());
+    }
+
+    #[test]
+    fn config_file_then_overrides() {
+        let dir = std::env::temp_dir().join(format!("qless_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("c.cfg");
+        std::fs::write(&f, "bits = 8\ncorpus_size = 500\n").unwrap();
+        let c = p(&["pipeline", "--config", f.to_str().unwrap(), "--bits", "2"]).unwrap();
+        assert_eq!(c.config.bits, 2); // CLI wins
+        assert_eq!(c.config.corpus_size, 500); // file applies
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn help() {
+        assert_eq!(p(&["--help"]).unwrap().command, "help");
+    }
+}

@@ -1,0 +1,266 @@
+//! Experiment configuration: typed config struct, `key = value` config-file
+//! parser, and the CLI argument parser (no `clap` in the offline vendor set).
+
+pub mod cli;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::Scheme;
+
+/// Everything an end-to-end QLESS run needs. Field names double as config
+/// file keys (`key = value`, `#` comments) and `--key value` CLI overrides
+/// (underscores and dashes are interchangeable).
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Model size preset: tiny | small | base (must exist in the manifest).
+    pub model: String,
+    /// Artifact directory produced by `make artifacts`.
+    pub artifacts: String,
+    /// Output directory for checkpoints / datastores / reports.
+    pub run_dir: String,
+    /// Corpus size (total samples across the 4 sources, paper ≈ 270K).
+    pub corpus_size: usize,
+    /// Random seed governing corpus, warmup subset, projection, selection.
+    pub seed: u64,
+    /// Warmup subset fraction (paper: 0.05).
+    pub warmup_frac: f64,
+    /// Warmup epochs == number of checkpoints N (paper: 4).
+    pub warmup_epochs: usize,
+    /// Selection fraction (paper main: 0.05).
+    pub select_frac: f64,
+    /// Fine-tune epochs on the selected subset (paper: 4).
+    pub finetune_epochs: usize,
+    /// Peak learning rate (paper: 2e-5 on 7B; scaled up for SimLM).
+    pub lr: f64,
+    /// LR warmup fraction of total steps (paper: linear warmup 3%).
+    pub lr_warmup_frac: f64,
+    /// Gradient quantization bits: 16 (LESS) | 8 | 4 | 2 | 1.
+    pub bits: u8,
+    /// Quantization scheme for 2–8 bits: absmax | absmean.
+    pub scheme: Scheme,
+    /// Base-model weight quantization (QLoRA ablation): 16 | 8 | 4.
+    pub model_bits: u8,
+    /// Validation few-shot samples per benchmark used for selection.
+    pub val_per_task: usize,
+    /// Eval set size per benchmark.
+    pub eval_per_task: usize,
+    /// Extraction/scoring worker threads.
+    pub workers: usize,
+    /// Use the XLA (AOT kernel) scoring path instead of the native one.
+    pub xla_score: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "small".into(),
+            artifacts: "artifacts".into(),
+            run_dir: "runs/default".into(),
+            corpus_size: 8000,
+            seed: 17,
+            warmup_frac: 0.05,
+            warmup_epochs: 4,
+            select_frac: 0.05,
+            finetune_epochs: 4,
+            lr: 1e-3,
+            lr_warmup_frac: 0.03,
+            bits: 16,
+            scheme: Scheme::Absmax,
+            model_bits: 16,
+            val_per_task: 32,
+            eval_per_task: 128,
+            workers: default_workers(),
+            xla_score: false,
+        }
+    }
+}
+
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4)
+}
+
+impl Config {
+    /// Apply one `key = value` (file) or `--key value` (CLI) assignment.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let key = key.replace('-', "_");
+        let v = value.trim();
+        match key.as_str() {
+            "model" => self.model = v.to_string(),
+            "artifacts" => self.artifacts = v.to_string(),
+            "run_dir" => self.run_dir = v.to_string(),
+            "corpus_size" => self.corpus_size = parse(v, &key)?,
+            "seed" => self.seed = parse(v, &key)?,
+            "warmup_frac" => self.warmup_frac = parse_frac(v, &key)?,
+            "warmup_epochs" => self.warmup_epochs = parse(v, &key)?,
+            "select_frac" => self.select_frac = parse_frac(v, &key)?,
+            "finetune_epochs" => self.finetune_epochs = parse(v, &key)?,
+            "lr" => self.lr = parse(v, &key)?,
+            "lr_warmup_frac" => self.lr_warmup_frac = parse_frac(v, &key)?,
+            "bits" => {
+                self.bits = parse(v, &key)?;
+                if ![1, 2, 4, 8, 16].contains(&self.bits) {
+                    bail!("bits must be one of 1,2,4,8,16 (got {})", self.bits);
+                }
+            }
+            "scheme" => self.scheme = v.parse()?,
+            "model_bits" => {
+                self.model_bits = parse(v, &key)?;
+                if ![4, 8, 16].contains(&self.model_bits) {
+                    bail!("model_bits must be one of 4,8,16 (got {})", self.model_bits);
+                }
+            }
+            "val_per_task" => self.val_per_task = parse(v, &key)?,
+            "eval_per_task" => self.eval_per_task = parse(v, &key)?,
+            "workers" => self.workers = parse(v, &key)?,
+            "xla_score" => self.xla_score = parse_bool(v, &key)?,
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file (comments with `#`, blank lines ok).
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path:?}:{}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("{path:?}:{}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.warmup_frac) {
+            bail!("warmup_frac out of [0,1]");
+        }
+        if !(0.0..=1.0).contains(&self.select_frac) {
+            bail!("select_frac out of [0,1]");
+        }
+        if self.corpus_size < 100 {
+            bail!("corpus_size too small (< 100)");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.bits != 16 && self.bits != 1 && self.scheme == Scheme::Sign {
+            bail!("scheme=sign only valid at 1-bit");
+        }
+        Ok(())
+    }
+
+    /// The method label used in report tables (paper naming).
+    pub fn method_label(&self) -> String {
+        match self.bits {
+            16 => "LESS 16-bit".to_string(),
+            1 => "QLESS 1-bit".to_string(),
+            b => format!("QLESS {b}-bit ({})", self.scheme),
+        }
+    }
+}
+
+fn parse<T: std::str::FromStr>(v: &str, key: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse::<T>().map_err(|e| anyhow::anyhow!("bad value '{v}' for {key}: {e}"))
+}
+
+fn parse_frac(v: &str, key: &str) -> Result<f64> {
+    let f: f64 = parse(v, key)?;
+    if !(0.0..=1.0).contains(&f) {
+        bail!("{key} must be in [0,1], got {f}");
+    }
+    Ok(f)
+}
+
+fn parse_bool(v: &str, key: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => bail!("bad bool '{v}' for {key}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_dashes() {
+        let mut c = Config::default();
+        c.set("corpus-size", "4000").unwrap();
+        assert_eq!(c.corpus_size, 4000);
+        c.set("bits", "1").unwrap();
+        assert_eq!(c.bits, 1);
+        c.set("scheme", "absmean").unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = Config::default();
+        assert!(c.set("bits", "3").is_err());
+        assert!(c.set("model_bits", "2").is_err());
+        assert!(c.set("warmup_frac", "1.5").is_err());
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("xla_score", "maybe").is_err());
+    }
+
+    #[test]
+    fn load_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("qless_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.cfg");
+        std::fs::write(&p, "# comment\ncorpus_size = 2000\nbits = 4 # inline\n\nscheme=absmean\n").unwrap();
+        let mut c = Config::default();
+        c.load_file(&p).unwrap();
+        assert_eq!(c.corpus_size, 2000);
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.scheme, Scheme::Absmean);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_file_reports_line() {
+        let dir = std::env::temp_dir().join(format!("qless_cfg2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.cfg");
+        std::fs::write(&p, "corpus_size\n").unwrap();
+        let err = Config::default().load_file(&p).unwrap_err().to_string();
+        assert!(err.contains(":1"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn method_labels() {
+        let mut c = Config::default();
+        assert_eq!(c.method_label(), "LESS 16-bit");
+        c.bits = 1;
+        assert_eq!(c.method_label(), "QLESS 1-bit");
+        c.bits = 4;
+        assert!(c.method_label().starts_with("QLESS 4-bit"));
+    }
+
+    #[test]
+    fn sign_scheme_only_one_bit() {
+        let mut c = Config::default();
+        c.scheme = Scheme::Sign;
+        c.bits = 4;
+        assert!(c.validate().is_err());
+        c.bits = 1;
+        c.validate().unwrap();
+    }
+}

@@ -1,0 +1,121 @@
+//! Synthetic instruction-tuning corpus — the stand-in for the paper's
+//! Flan v2 / CoT / Dolly / OpenAssistant mix (270K examples, §4.1).
+//!
+//! Four generators with the paper's 37/37/6/20% source proportions produce
+//! tasks whose *skills* align with exactly one benchmark each, so influence
+//! -based selection has a real signal to find (DESIGN.md §2):
+//!
+//! * [`Source::SynFlan`]  — option-selection + string/count tasks  → SynMC
+//! * [`Source::SynCot`]   — chain-of-thought arithmetic            → SynArith
+//! * [`Source::SynDolly`] — passage-grounded extraction QA         → SynQA
+//! * [`Source::SynOasst`] — multi-turn chit-chat (low relevance everywhere)
+
+pub mod sample;
+pub mod tasks;
+pub mod tokenizer;
+pub mod world;
+
+pub use sample::{EncodedSample, Sample, Source};
+pub use tokenizer::Tokenizer;
+pub use world::World;
+
+use crate::util::Rng;
+
+/// Paper mix: Flan 100K, CoT 100K, Dolly 15K, Oasst 55K of 270K total.
+pub const SOURCE_FRACS: [(Source, f64); 4] = [
+    (Source::SynFlan, 100.0 / 270.0),
+    (Source::SynCot, 100.0 / 270.0),
+    (Source::SynDolly, 15.0 / 270.0),
+    (Source::SynOasst, 55.0 / 270.0),
+];
+
+/// Generate the full training corpus: `n` samples in the paper's source
+/// proportions, shuffled, with unique ids.
+pub fn generate_corpus(n: usize, seed: u64, tok: &Tokenizer, max_len: usize) -> Vec<Sample> {
+    let world = World::generate(seed);
+    let mut rng = Rng::new(seed).fork(0xC0_8915);
+    let mut out = Vec::with_capacity(n);
+    for (source, frac) in SOURCE_FRACS {
+        let count = ((n as f64) * frac).round() as usize;
+        for _ in 0..count {
+            out.push(tasks::generate(source, &world, &mut rng, tok, max_len));
+        }
+    }
+    // Top up rounding losses from the largest source.
+    while out.len() < n {
+        out.push(tasks::generate(Source::SynFlan, &world, &mut rng, tok, max_len));
+    }
+    out.truncate(n);
+    rng.shuffle(&mut out);
+    for (i, s) in out.iter_mut().enumerate() {
+        s.id = i;
+    }
+    out
+}
+
+/// Per-source sample counts (corpus statistics / Fig. 5 denominators).
+pub fn source_counts(samples: &[Sample]) -> [(Source, usize); 4] {
+    let mut counts = [
+        (Source::SynFlan, 0),
+        (Source::SynCot, 0),
+        (Source::SynDolly, 0),
+        (Source::SynOasst, 0),
+    ];
+    for s in samples {
+        for c in counts.iter_mut() {
+            if c.0 == s.source {
+                c.1 += 1;
+            }
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_requested_size_and_mix() {
+        let tok = Tokenizer::default();
+        let c = generate_corpus(1000, 7, &tok, 96);
+        assert_eq!(c.len(), 1000);
+        let counts = source_counts(&c);
+        let get = |s: Source| counts.iter().find(|(x, _)| *x == s).unwrap().1;
+        // 37/37/6/20% within rounding
+        assert!((get(Source::SynFlan) as i64 - 370).abs() <= 15);
+        assert!((get(Source::SynCot) as i64 - 370).abs() <= 5);
+        assert!((get(Source::SynDolly) as i64 - 56).abs() <= 5);
+        assert!((get(Source::SynOasst) as i64 - 204).abs() <= 5);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let tok = Tokenizer::default();
+        let a = generate_corpus(100, 3, &tok, 96);
+        let b = generate_corpus(100, 3, &tok, 96);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn corpus_ids_unique_and_ordered() {
+        let tok = Tokenizer::default();
+        let c = generate_corpus(200, 9, &tok, 96);
+        for (i, s) in c.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+    }
+
+    #[test]
+    fn all_samples_fit_max_len() {
+        let tok = Tokenizer::default();
+        for s in generate_corpus(500, 11, &tok, 96) {
+            let enc = s.encode(&tok, 96);
+            assert!(enc.answer_len > 0, "{:?}", s.prompt);
+        }
+    }
+}

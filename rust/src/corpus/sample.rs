@@ -1,0 +1,178 @@
+//! Instruction-tuning sample representation + fixed-shape encoding.
+//!
+//! Chat template (char-level): `<bos> prompt <sep> answer <eot>`, padded to
+//! the model's static sequence length. The loss mask covers the answer span
+//! plus `<eot>` only — the instruction-tuning convention whose token-mean
+//! gradient carries the sequence-length bias that LESS's normalization
+//! (paper Eq. 2) corrects.
+
+use anyhow::{bail, Result};
+
+use super::tokenizer::{Tokenizer, BOS, EOT, SEP};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Source {
+    SynFlan,
+    SynCot,
+    SynDolly,
+    SynOasst,
+}
+
+impl Source {
+    pub const ALL: [Source; 4] =
+        [Source::SynFlan, Source::SynCot, Source::SynDolly, Source::SynOasst];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Source::SynFlan => "synflan",
+            Source::SynCot => "syncot",
+            Source::SynDolly => "syndolly",
+            Source::SynOasst => "synoasst",
+        }
+    }
+}
+
+impl std::fmt::Display for Source {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub id: usize,
+    pub source: Source,
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Fixed-shape encoding ready for the AOT graphs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedSample {
+    /// `[seq]` token ids, zero padded.
+    pub tokens: Vec<i32>,
+    /// `[seq]` loss weights: 1.0 on answer tokens + `<eot>`.
+    pub loss_mask: Vec<f32>,
+    /// Position of the last prompt token (`<sep>`): decode starts at this.
+    pub prompt_end: usize,
+    /// Number of loss-masked tokens.
+    pub answer_len: usize,
+}
+
+impl Sample {
+    pub fn new(source: Source, prompt: impl Into<String>, answer: impl Into<String>) -> Sample {
+        Sample { id: usize::MAX, source, prompt: prompt.into(), answer: answer.into() }
+    }
+
+    /// Total encoded length (specials included) — generator fit checks.
+    pub fn encoded_len(&self) -> usize {
+        1 + self.prompt.chars().count() + 1 + self.answer.chars().count() + 1
+    }
+
+    /// Encode into fixed `[seq]` buffers. Panics in debug if the sample does
+    /// not fit; generators must guarantee fit via [`Sample::encoded_len`].
+    pub fn encode(&self, tok: &Tokenizer, seq: usize) -> EncodedSample {
+        self.try_encode(tok, seq).expect("sample must fit seq (generator bug)")
+    }
+
+    pub fn try_encode(&self, tok: &Tokenizer, seq: usize) -> Result<EncodedSample> {
+        let p = tok.encode(&self.prompt)?;
+        let a = tok.encode(&self.answer)?;
+        let total = 1 + p.len() + 1 + a.len() + 1;
+        if total > seq {
+            bail!("sample length {total} exceeds seq {seq}: {:?}", self.prompt);
+        }
+        if a.is_empty() {
+            bail!("empty answer");
+        }
+        let mut tokens = Vec::with_capacity(seq);
+        tokens.push(BOS);
+        tokens.extend_from_slice(&p);
+        tokens.push(SEP);
+        let prompt_end = tokens.len() - 1;
+        let answer_start = tokens.len();
+        tokens.extend_from_slice(&a);
+        tokens.push(EOT);
+        let answer_len = tokens.len() - answer_start;
+        tokens.resize(seq, 0);
+        let mut loss_mask = vec![0f32; seq];
+        for m in loss_mask.iter_mut().skip(answer_start).take(answer_len) {
+            *m = 1.0;
+        }
+        Ok(EncodedSample { tokens, loss_mask, prompt_end, answer_len })
+    }
+
+    /// Prompt-only encoding for generation: `<bos> prompt <sep>` + pads.
+    pub fn encode_prompt(&self, tok: &Tokenizer, seq: usize) -> Result<EncodedSample> {
+        let p = tok.encode(&self.prompt)?;
+        if 2 + p.len() >= seq {
+            bail!("prompt too long for decode: {}", self.prompt);
+        }
+        let mut tokens = Vec::with_capacity(seq);
+        tokens.push(BOS);
+        tokens.extend_from_slice(&p);
+        tokens.push(SEP);
+        let prompt_end = tokens.len() - 1;
+        tokens.resize(seq, 0);
+        Ok(EncodedSample { tokens, loss_mask: vec![0.0; seq], prompt_end, answer_len: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::default()
+    }
+
+    #[test]
+    fn encode_layout() {
+        let s = Sample::new(Source::SynDolly, "ab", "cd");
+        let e = s.encode(&tok(), 12);
+        assert_eq!(&e.tokens[..7], &[BOS, 4, 5, SEP, 6, 7, EOT]);
+        assert_eq!(&e.tokens[7..], &[0; 5]);
+        assert_eq!(e.loss_mask[..4], [0.0; 4]);
+        assert_eq!(e.loss_mask[4..7], [1.0; 3]); // c, d, <eot>
+        assert_eq!(e.prompt_end, 3);
+        assert_eq!(e.answer_len, 3);
+    }
+
+    #[test]
+    fn encoded_len_matches() {
+        let s = Sample::new(Source::SynFlan, "abc", "de");
+        assert_eq!(s.encoded_len(), 1 + 3 + 1 + 2 + 1);
+        let e = s.encode(&tok(), 8);
+        let used = e.tokens.iter().filter(|&&t| t != 0).count();
+        assert_eq!(used, s.encoded_len());
+    }
+
+    #[test]
+    fn too_long_errors() {
+        let s = Sample::new(Source::SynFlan, "a".repeat(95), "b");
+        assert!(s.try_encode(&tok(), 96).is_err());
+    }
+
+    #[test]
+    fn empty_answer_errors() {
+        let s = Sample::new(Source::SynFlan, "a", "");
+        assert!(s.try_encode(&tok(), 16).is_err());
+    }
+
+    #[test]
+    fn prompt_encoding_has_no_loss() {
+        let s = Sample::new(Source::SynCot, "1+1=", "2");
+        let e = s.encode_prompt(&tok(), 16).unwrap();
+        assert!(e.loss_mask.iter().all(|&m| m == 0.0));
+        assert_eq!(e.tokens[e.prompt_end], SEP);
+        assert_eq!(e.answer_len, 0);
+    }
+
+    #[test]
+    fn mask_sums_to_answer_len_plus_eot() {
+        let s = Sample::new(Source::SynOasst, "hello", "hi there");
+        let e = s.encode(&tok(), 32);
+        let m: f32 = e.loss_mask.iter().sum();
+        assert_eq!(m as usize, "hi there".len() + 1);
+    }
+}

@@ -1,0 +1,261 @@
+//! Task generators for the four corpus sources + the shared format helpers
+//! reused verbatim by the benchmark builders (`eval::benchmarks`), so the
+//! skills in the training mix transfer to evaluation exactly like the
+//! paper's Flan/CoT/Dolly → MMLU/BBH/TyDiQA alignment.
+
+use super::sample::{Sample, Source};
+use super::world::{Fact, World};
+use super::Tokenizer;
+use crate::util::Rng;
+
+pub const OPTION_LETTERS: [&str; 4] = ["a", "b", "c", "d"];
+
+// ---------------------------------------------------------------------------
+// shared format helpers (single source of truth for train & eval formats)
+// ---------------------------------------------------------------------------
+
+/// Multiple-choice prompt: passage clause + question + lettered options.
+/// `options` holds 4 value strings; the answer is the letter of the correct
+/// one. This is the SynMC / synflan-MC format.
+pub fn mc_prompt(fact: &Fact, options: &[&str]) -> String {
+    let mut s = format!("{}. which is the {} of {}?", fact.clause(), fact.attr_name(), fact.entity);
+    for (i, opt) in options.iter().enumerate() {
+        s.push_str(&format!(" {} {}", OPTION_LETTERS[i], opt));
+    }
+    s
+}
+
+/// Extraction-QA prompt: multi-fact passage + question (SynQA / syndolly).
+pub fn qa_prompt(passage: &[Fact], ask: &Fact) -> String {
+    let mut s = String::new();
+    for f in passage {
+        s.push_str(&f.clause());
+        s.push_str(". ");
+    }
+    s.push_str(&format!("what {} is {}?", ask.attr_name(), ask.entity));
+    s
+}
+
+/// A 2-step arithmetic expression with its chain-of-thought answer
+/// (SynArith / syncot). Returns (prompt, cot_answer, final_value).
+pub fn arith_task(rng: &mut Rng) -> (String, String, i64) {
+    let a = rng.below(10) as i64;
+    let b = rng.below(10) as i64;
+    let c = rng.below(10) as i64;
+    match rng.below(4) {
+        0 => {
+            // a+b*c: multiply first
+            let p = b * c;
+            let r = a + p;
+            (format!("{a}+{b}*{c}="), format!("{a}+{b}*{c} = {a}+{p} = {r}"), r)
+        }
+        1 => {
+            let p = a * b;
+            let r = p + c;
+            (format!("{a}*{b}+{c}="), format!("{a}*{b}+{c} = {p}+{c} = {r}"), r)
+        }
+        2 => {
+            let p = a + b;
+            let r = p - c;
+            (format!("{a}+{b}-{c}="), format!("{a}+{b}-{c} = {p}-{c} = {r}"), r)
+        }
+        _ => {
+            let p = a * b;
+            let r = p - c;
+            (format!("{a}*{b}-{c}="), format!("{a}*{b}-{c} = {p}-{c} = {r}"), r)
+        }
+    }
+}
+
+/// Parse the final value out of a chain-of-thought answer ("… = N").
+pub fn arith_final(answer: &str) -> Option<i64> {
+    answer.rsplit('=').next()?.trim().parse().ok()
+}
+
+// ---------------------------------------------------------------------------
+// per-source generators
+// ---------------------------------------------------------------------------
+
+/// Generate one training sample for `source`, guaranteed to encode within
+/// `max_len` (retries with fresh randomness; the formats are sized to fit).
+pub fn generate(
+    source: Source,
+    world: &World,
+    rng: &mut Rng,
+    tok: &Tokenizer,
+    max_len: usize,
+) -> Sample {
+    for _ in 0..64 {
+        let s = match source {
+            Source::SynFlan => gen_flan(world, rng),
+            Source::SynCot => gen_cot(rng),
+            Source::SynDolly => gen_dolly(world, rng),
+            Source::SynOasst => gen_oasst(world, rng),
+        };
+        if s.encoded_len() <= max_len && s.try_encode(tok, max_len).is_ok() {
+            return s;
+        }
+    }
+    panic!("task generator for {source} cannot fit max_len={max_len}");
+}
+
+/// synflan: option-selection over facts (the SynMC-aligned skill) mixed
+/// with generic string/count instructions — a broad, medium-relevance pool.
+fn gen_flan(world: &World, rng: &mut Rng) -> Sample {
+    match rng.below(5) {
+        0 | 1 => {
+            // MC over a *training* fact — the skill SynMC needs.
+            let fact = world.train_fact(rng);
+            let mut opts = world.distractors(&fact, 4, rng);
+            let correct = rng.below(4);
+            opts.insert(correct, fact.value_name());
+            Sample::new(
+                Source::SynFlan,
+                mc_prompt(&fact, &opts),
+                OPTION_LETTERS[correct].to_string(),
+            )
+        }
+        2 => {
+            let w = pick_word(world, rng);
+            Sample::new(Source::SynFlan, format!("reverse {w}"), w.chars().rev().collect::<String>())
+        }
+        3 => {
+            let w = pick_word(world, rng);
+            Sample::new(Source::SynFlan, format!("count letters in {w}"), w.len().to_string())
+        }
+        _ => {
+            let n = rng.below(100);
+            let ans = if n % 2 == 0 { "even" } else { "odd" };
+            Sample::new(Source::SynFlan, format!("is {n} even or odd?"), ans)
+        }
+    }
+}
+
+/// syncot: chain-of-thought arithmetic (the SynArith-aligned skill).
+fn gen_cot(rng: &mut Rng) -> Sample {
+    let (prompt, answer, _) = arith_task(rng);
+    Sample::new(Source::SynCot, prompt, answer)
+}
+
+/// syndolly: passage-grounded extraction QA (the SynQA-aligned skill).
+fn gen_dolly(world: &World, rng: &mut Rng) -> Sample {
+    let n_facts = 2 + rng.below(2); // 2–3 clause passage
+    let mut facts: Vec<Fact> = (0..n_facts).map(|_| world.train_fact(rng)).collect();
+    // ensure asked entity+attr is unambiguous within the passage
+    facts.dedup_by(|a, b| a.entity == b.entity && a.attr == b.attr);
+    let ask = facts[rng.below(facts.len())].clone();
+    Sample::new(Source::SynDolly, qa_prompt(&facts, &ask), ask.value_name().to_string())
+}
+
+/// synoasst: chit-chat — realistic filler with *low* relevance to every
+/// benchmark; random selection wastes budget here, targeted selection
+/// should not (paper Fig. 5's Oasst fraction).
+fn gen_oasst(world: &World, rng: &mut Rng) -> Sample {
+    match rng.below(6) {
+        0 => Sample::new(Source::SynOasst, "hello there", "hello! how can i help you today?"),
+        1 => Sample::new(Source::SynOasst, "how are you doing", "i am doing well, thank you for asking"),
+        2 => Sample::new(Source::SynOasst, "what is your name", "i am sim, a small language model"),
+        3 => Sample::new(
+            Source::SynOasst,
+            "good morning | good morning! | can you chat with me",
+            "of course, i am happy to chat",
+        ),
+        4 => {
+            let w = pick_word(world, rng);
+            Sample::new(Source::SynOasst, format!("please say {w}"), w)
+        }
+        _ => Sample::new(Source::SynOasst, "thanks for the help", "you are welcome! anytime"),
+    }
+}
+
+fn pick_word(world: &World, rng: &mut Rng) -> String {
+    match rng.below(3) {
+        0 => world.entities[rng.below(world.entities.len())].clone(),
+        1 => {
+            let a = rng.below(5);
+            super::world::VALUES[a][rng.below(super::world::VALUES[a].len())].to_string()
+        }
+        _ => super::world::ATTRIBUTES[rng.below(5)].to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (World, Rng, Tokenizer) {
+        (World::generate(1), Rng::new(2), Tokenizer::default())
+    }
+
+    #[test]
+    fn all_sources_generate_and_fit() {
+        let (w, mut rng, tok) = setup();
+        for source in Source::ALL {
+            for _ in 0..100 {
+                let s = generate(source, &w, &mut rng, &tok, 96);
+                assert_eq!(s.source, source);
+                assert!(s.encoded_len() <= 96, "{source}: {:?}", s.prompt);
+                assert!(!s.answer.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn mc_prompt_format() {
+        let f = Fact { entity: "bodo".into(), attr: 0, value: 0 };
+        let p = mc_prompt(&f, &["red", "blue", "green", "gold"]);
+        assert_eq!(
+            p,
+            "bodo color red. which is the color of bodo? a red b blue c green d gold"
+        );
+    }
+
+    #[test]
+    fn qa_prompt_contains_passage_and_question() {
+        let f1 = Fact { entity: "bodo".into(), attr: 0, value: 1 };
+        let f2 = Fact { entity: "kira".into(), attr: 2, value: 0 };
+        let p = qa_prompt(&[f1.clone(), f2], &f1);
+        assert!(p.starts_with("bodo color blue. kira food cake. "));
+        assert!(p.ends_with("what color is bodo?"));
+    }
+
+    #[test]
+    fn arith_cot_is_consistent() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let (prompt, answer, val) = arith_task(&mut rng);
+            assert!(answer.starts_with(prompt.trim_end_matches('=')));
+            assert_eq!(arith_final(&answer), Some(val));
+        }
+    }
+
+    #[test]
+    fn arith_final_parses() {
+        assert_eq!(arith_final("1+2*3 = 1+6 = 7"), Some(7));
+        assert_eq!(arith_final("5*0-9 = 0-9 = -9"), Some(-9));
+        assert_eq!(arith_final("junk"), None);
+    }
+
+    #[test]
+    fn dolly_answer_is_in_passage() {
+        let (w, mut rng, tok) = setup();
+        for _ in 0..50 {
+            let s = generate(Source::SynDolly, &w, &mut rng, &tok, 96);
+            assert!(s.prompt.contains(&s.answer), "{:?} {:?}", s.prompt, s.answer);
+        }
+    }
+
+    #[test]
+    fn flan_mc_answer_is_letter() {
+        let (w, mut rng, tok) = setup();
+        let mut seen_mc = false;
+        for _ in 0..100 {
+            let s = generate(Source::SynFlan, &w, &mut rng, &tok, 96);
+            if s.prompt.contains("which is the") {
+                seen_mc = true;
+                assert!(OPTION_LETTERS.contains(&s.answer.as_str()));
+            }
+        }
+        assert!(seen_mc);
+    }
+}

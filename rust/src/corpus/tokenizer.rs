@@ -1,0 +1,163 @@
+//! Character-level tokenizer, vocab-identical to `python/compile/simconfig.py`.
+//!
+//! 64 tokens: `<pad>`=0, `<bos>`=1, `<eot>`=2, `<sep>`=3, then the 60 text
+//! characters. The runtime cross-checks this table against the vocab list in
+//! `artifacts/manifest.json` at startup so a drifted artifact set fails fast.
+
+use anyhow::{bail, Result};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOT: i32 = 2;
+pub const SEP: i32 = 3;
+
+/// Text characters at ids 4..64 (must match simconfig.VOCAB order).
+pub const CHARS: &str = "abcdefghijklmnopqrstuvwxyz0123456789 .,:;?!'\"()+-*/=%<>|&#@_";
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    to_id: [i32; 128],
+    to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        let mut to_id = [-1i32; 128];
+        let mut to_char = vec!['\0'; 4];
+        for (i, c) in CHARS.chars().enumerate() {
+            to_id[c as usize] = (i + 4) as i32;
+            to_char.push(c);
+        }
+        assert_eq!(to_char.len(), 64, "vocab must be 64");
+        Tokenizer { to_id, to_char }
+    }
+}
+
+impl Tokenizer {
+    pub fn vocab_size(&self) -> usize {
+        64
+    }
+
+    /// Encode text; errors on characters outside the vocabulary.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(text.len());
+        for c in text.chars() {
+            let id = if (c as usize) < 128 { self.to_id[c as usize] } else { -1 };
+            if id < 0 {
+                bail!("character '{c}' (U+{:04X}) not in vocab", c as u32);
+            }
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    /// Decode ids back to text; specials are rendered as markers, pads
+    /// dropped (round-trip of plain text is exact).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            match id {
+                PAD => {}
+                BOS => s.push_str("<bos>"),
+                EOT => s.push_str("<eot>"),
+                SEP => s.push_str("<sep>"),
+                _ if (id as usize) < self.to_char.len() => s.push(self.to_char[id as usize]),
+                _ => s.push('\u{FFFD}'),
+            }
+        }
+        s
+    }
+
+    /// Decode only text chars, stopping at the first EOT (generation reads).
+    pub fn decode_until_eot(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOT {
+                break;
+            }
+            if id >= 4 && (id as usize) < self.to_char.len() {
+                s.push(self.to_char[id as usize]);
+            }
+        }
+        s
+    }
+
+    /// Validate this table against the manifest's vocab array.
+    pub fn check_manifest_vocab(&self, vocab: &[String]) -> Result<()> {
+        if vocab.len() != 64 {
+            bail!("manifest vocab has {} entries, expected 64", vocab.len());
+        }
+        let specials = ["<pad>", "<bos>", "<eot>", "<sep>"];
+        for (i, want) in specials.iter().enumerate() {
+            if vocab[i] != *want {
+                bail!("manifest vocab[{i}] = {:?}, expected {want}", vocab[i]);
+            }
+        }
+        for (i, c) in CHARS.chars().enumerate() {
+            if vocab[i + 4] != c.to_string() {
+                bail!("manifest vocab[{}] = {:?}, expected {c:?}", i + 4, vocab[i + 4]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_64() {
+        assert_eq!(CHARS.chars().count(), 60);
+        assert_eq!(Tokenizer::default().vocab_size(), 64);
+    }
+
+    #[test]
+    fn roundtrip_plain_text() {
+        let t = Tokenizer::default();
+        let s = "what color is alba? 3+4*2=11, ok!";
+        assert_eq!(t.decode(&t.encode(s).unwrap()), s);
+    }
+
+    #[test]
+    fn rejects_out_of_vocab() {
+        let t = Tokenizer::default();
+        assert!(t.encode("ALBA").is_err()); // no uppercase
+        assert!(t.encode("héllo").is_err());
+    }
+
+    #[test]
+    fn specials_render() {
+        let t = Tokenizer::default();
+        assert_eq!(t.decode(&[BOS, 4, SEP, 5, EOT, PAD, PAD]), "<bos>a<sep>b<eot>");
+    }
+
+    #[test]
+    fn decode_until_eot_stops() {
+        let t = Tokenizer::default();
+        let ids = [BOS, 4, 5, EOT, 6, 7];
+        assert_eq!(t.decode_until_eot(&ids), "ab");
+    }
+
+    #[test]
+    fn char_ids_match_python_layout() {
+        let t = Tokenizer::default();
+        // 'a' is the first char after 4 specials; space is index 36+4.
+        assert_eq!(t.encode("a").unwrap(), vec![4]);
+        assert_eq!(t.encode("0").unwrap(), vec![30]);
+        assert_eq!(t.encode(" ").unwrap(), vec![40]);
+    }
+
+    #[test]
+    fn manifest_check_catches_drift() {
+        let t = Tokenizer::default();
+        let mut vocab: Vec<String> = ["<pad>", "<bos>", "<eot>", "<sep>"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        vocab.extend(CHARS.chars().map(|c| c.to_string()));
+        t.check_manifest_vocab(&vocab).unwrap();
+        vocab[10] = "Z".into();
+        assert!(t.check_manifest_vocab(&vocab).is_err());
+    }
+}

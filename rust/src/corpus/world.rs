@@ -1,0 +1,178 @@
+//! The entity–attribute fact world behind the synthetic tasks.
+//!
+//! A deterministic set of invented entities ("bodo", "kira", …) each with a
+//! value for every attribute (color, size, food, place, pet). Passage-based
+//! tasks quote facts verbatim, so the *skill* the model must learn is
+//! extraction/option-matching — transferable to held-out eval facts, which
+//! is what makes benchmark scores sensitive to data selection rather than
+//! to memorization (DESIGN.md §2).
+
+use crate::util::Rng;
+
+pub const ATTRIBUTES: [&str; 5] = ["color", "size", "food", "place", "pet"];
+
+pub const VALUES: [&[&str]; 5] = [
+    &["red", "blue", "green", "gray", "pink", "gold"],
+    &["big", "small", "tiny", "huge", "wide", "flat"],
+    &["cake", "rice", "soup", "corn", "figs", "stew"],
+    &["home", "lake", "city", "farm", "cave", "port"],
+    &["cat", "dog", "fox", "owl", "hen", "bee"],
+];
+
+const CONSONANTS: &str = "bdfgklmnprstvz";
+const VOWELS: &str = "aeiou";
+
+#[derive(Debug, Clone)]
+pub struct Fact {
+    pub entity: String,
+    /// Index into [`ATTRIBUTES`].
+    pub attr: usize,
+    /// Index into `VALUES[attr]`.
+    pub value: usize,
+}
+
+impl Fact {
+    pub fn attr_name(&self) -> &'static str {
+        ATTRIBUTES[self.attr]
+    }
+
+    pub fn value_name(&self) -> &'static str {
+        VALUES[self.attr][self.value]
+    }
+
+    /// The passage clause: `"bodo color red"`.
+    pub fn clause(&self) -> String {
+        format!("{} {} {}", self.entity, self.attr_name(), self.value_name())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct World {
+    pub entities: Vec<String>,
+    /// `values[e][a]` = value index of entity `e` for attribute `a`.
+    pub values: Vec<[usize; 5]>,
+    /// Entity index split: `0..train_split` may appear in training data,
+    /// the rest are reserved for evaluation.
+    pub train_split: usize,
+}
+
+impl World {
+    pub fn generate(seed: u64) -> World {
+        let mut rng = Rng::new(seed).fork(0x0071D);
+        let n = 96;
+        let mut entities = Vec::with_capacity(n);
+        let cs: Vec<char> = CONSONANTS.chars().collect();
+        let vs: Vec<char> = VOWELS.chars().collect();
+        while entities.len() < n {
+            let syllables = 2;
+            let mut name = String::new();
+            for _ in 0..syllables {
+                name.push(*rng.pick(&cs));
+                name.push(*rng.pick(&vs));
+            }
+            if !entities.contains(&name) {
+                entities.push(name);
+            }
+        }
+        let values = (0..n)
+            .map(|_| {
+                let mut row = [0usize; 5];
+                for (a, slot) in row.iter_mut().enumerate() {
+                    *slot = rng.below(VALUES[a].len());
+                }
+                row
+            })
+            .collect();
+        World { entities, values, train_split: n * 4 / 5 }
+    }
+
+    pub fn fact(&self, entity_idx: usize, attr: usize) -> Fact {
+        Fact {
+            entity: self.entities[entity_idx].clone(),
+            attr,
+            value: self.values[entity_idx][attr],
+        }
+    }
+
+    /// Random fact over training entities.
+    pub fn train_fact(&self, rng: &mut Rng) -> Fact {
+        let e = rng.below(self.train_split);
+        self.fact(e, rng.below(5))
+    }
+
+    /// Random fact over held-out eval entities.
+    pub fn eval_fact(&self, rng: &mut Rng) -> Fact {
+        let e = self.train_split + rng.below(self.entities.len() - self.train_split);
+        self.fact(e, rng.below(5))
+    }
+
+    /// `k−1` distractor values (distinct from the fact's own value) from the
+    /// same attribute — multiple-choice options.
+    pub fn distractors(&self, fact: &Fact, k: usize, rng: &mut Rng) -> Vec<&'static str> {
+        let pool = VALUES[fact.attr];
+        assert!(k <= pool.len(), "not enough values for {k} options");
+        let mut idx: Vec<usize> = (0..pool.len()).filter(|&i| i != fact.value).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(k - 1);
+        idx.into_iter().map(|i| pool[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_deterministic() {
+        let a = World::generate(1);
+        let b = World::generate(1);
+        assert_eq!(a.entities, b.entities);
+        assert_eq!(a.values, b.values);
+        assert_ne!(a.entities, World::generate(2).entities);
+    }
+
+    #[test]
+    fn entities_unique_and_in_vocab() {
+        let w = World::generate(3);
+        let mut e = w.entities.clone();
+        e.sort();
+        e.dedup();
+        assert_eq!(e.len(), w.entities.len());
+        let tok = crate::corpus::Tokenizer::default();
+        for name in &w.entities {
+            tok.encode(name).unwrap();
+        }
+    }
+
+    #[test]
+    fn split_separates_train_and_eval() {
+        let w = World::generate(4);
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let f = w.train_fact(&mut rng);
+            assert!(w.entities[..w.train_split].contains(&f.entity));
+            let g = w.eval_fact(&mut rng);
+            assert!(w.entities[w.train_split..].contains(&g.entity));
+        }
+    }
+
+    #[test]
+    fn distractors_exclude_answer() {
+        let w = World::generate(5);
+        let mut rng = Rng::new(1);
+        let f = w.train_fact(&mut rng);
+        let ds = w.distractors(&f, 4, &mut rng);
+        assert_eq!(ds.len(), 3);
+        assert!(!ds.contains(&f.value_name()));
+        let mut u = ds.clone();
+        u.sort();
+        u.dedup();
+        assert_eq!(u.len(), 3);
+    }
+
+    #[test]
+    fn clause_format() {
+        let f = Fact { entity: "bodo".into(), attr: 0, value: 0 };
+        assert_eq!(f.clause(), "bodo color red");
+    }
+}

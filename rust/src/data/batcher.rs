@@ -1,0 +1,168 @@
+//! Fixed-shape batching for the static-shape AOT graphs.
+//!
+//! Every HLO artifact has a compiled batch size `B`; the batcher flattens
+//! encoded samples into `[B*S]` token / mask buffers and pads the final
+//! partial batch with zero-mask rows (zero mask ⇒ zero loss ⇒ zero
+//! gradient, so padded rows are inert in both training and extraction —
+//! the extractor additionally drops their features by index).
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// One fixed-shape batch ready for upload.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Row-major `[b * seq]` token ids.
+    pub tokens: Vec<i32>,
+    /// Row-major `[b * seq]` loss weights.
+    pub masks: Vec<f32>,
+    /// Dataset indices of the real (non-padding) rows, in row order.
+    pub indices: Vec<usize>,
+    /// Compiled batch size (rows incl. padding).
+    pub b: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn real_rows(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Iterator over fixed-shape batches of a dataset (optionally shuffled
+/// per-epoch with a seeded RNG — the training loop's access pattern).
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    b: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn sequential(data: &'a Dataset, b: usize) -> Batcher<'a> {
+        Batcher { data, order: (0..data.len()).collect(), pos: 0, b }
+    }
+
+    pub fn shuffled(data: &'a Dataset, b: usize, rng: &mut Rng) -> Batcher<'a> {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { data, order, pos: 0, b }
+    }
+
+    /// Restrict to a contiguous index range (worker shards).
+    pub fn range(data: &'a Dataset, b: usize, range: std::ops::Range<usize>) -> Batcher<'a> {
+        Batcher { data, order: range.collect(), pos: 0, b }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.order.len().div_ceil(self.b)
+    }
+}
+
+impl<'a> Iterator for Batcher<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let seq = self.data.seq;
+        let take = (self.order.len() - self.pos).min(self.b);
+        let mut tokens = Vec::with_capacity(self.b * seq);
+        let mut masks = Vec::with_capacity(self.b * seq);
+        let mut indices = Vec::with_capacity(take);
+        for k in 0..take {
+            let idx = self.order[self.pos + k];
+            let e = &self.data.encoded[idx];
+            tokens.extend_from_slice(&e.tokens);
+            masks.extend_from_slice(&e.loss_mask);
+            indices.push(idx);
+        }
+        // pad remaining rows with inert zero-mask rows
+        for _ in take..self.b {
+            tokens.extend(std::iter::repeat_n(0i32, seq));
+            masks.extend(std::iter::repeat_n(0f32, seq));
+        }
+        self.pos += take;
+        Some(Batch { tokens, masks, indices, b: self.b, seq })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate_corpus, Tokenizer};
+
+    fn ds(n: usize) -> Dataset {
+        let tok = Tokenizer::default();
+        Dataset::encode(generate_corpus(n, 8, &tok, 96), &tok, 96)
+    }
+
+    #[test]
+    fn batches_have_fixed_shape() {
+        let d = ds(10);
+        for batch in Batcher::sequential(&d, 4) {
+            assert_eq!(batch.tokens.len(), 4 * 96);
+            assert_eq!(batch.masks.len(), 4 * 96);
+            assert_eq!(batch.b, 4);
+        }
+    }
+
+    #[test]
+    fn covers_all_rows_once() {
+        let d = ds(10);
+        let batcher = Batcher::sequential(&d, 4);
+        assert_eq!(batcher.num_batches(), 3);
+        let mut seen: Vec<usize> = batcher.flat_map(|b| b.indices).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn padding_rows_are_inert() {
+        let d = ds(5);
+        let last = Batcher::sequential(&d, 4).last().unwrap();
+        assert_eq!(last.real_rows(), 1);
+        // padded rows: all-zero masks
+        let pad_masks = &last.masks[96..];
+        assert!(pad_masks.iter().all(|&m| m == 0.0));
+        let pad_tokens = &last.tokens[96..];
+        assert!(pad_tokens.iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn shuffled_is_permutation_and_seed_stable() {
+        let d = ds(20);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a: Vec<usize> = Batcher::shuffled(&d, 6, &mut r1).flat_map(|b| b.indices).collect();
+        let b: Vec<usize> = Batcher::shuffled(&d, 6, &mut r2).flat_map(|b| b.indices).collect();
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_batcher_stays_in_shard() {
+        let d = ds(20);
+        let idx: Vec<usize> = Batcher::range(&d, 4, 5..12).flat_map(|b| b.indices).collect();
+        assert_eq!(idx, (5..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_content_matches_dataset() {
+        let d = ds(4);
+        let b = Batcher::sequential(&d, 4).next().unwrap();
+        for (row, &idx) in b.indices.iter().enumerate() {
+            assert_eq!(&b.tokens[row * 96..(row + 1) * 96], &d.encoded[idx].tokens[..]);
+        }
+    }
+
+    #[test]
+    fn empty_dataset_yields_nothing() {
+        let tok = Tokenizer::default();
+        let d = Dataset::encode(vec![], &tok, 96);
+        assert_eq!(Batcher::sequential(&d, 4).count(), 0);
+    }
+}

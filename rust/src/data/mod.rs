@@ -1,0 +1,119 @@
+//! Dataset handling: encoded stores, fixed-shape batching, sharding, and a
+//! bounded-channel streaming pipeline with backpressure — the L3 orchestration
+//! substrate the gradient-extraction and training stages run on.
+
+pub mod batcher;
+pub mod stream;
+
+pub use batcher::{Batch, Batcher};
+
+use crate::corpus::{EncodedSample, Sample, Tokenizer};
+
+/// A set of samples pre-encoded to the model's static `[seq]` shape.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub samples: Vec<Sample>,
+    pub encoded: Vec<EncodedSample>,
+    pub seq: usize,
+}
+
+impl Dataset {
+    pub fn encode(samples: Vec<Sample>, tok: &Tokenizer, seq: usize) -> Dataset {
+        let encoded = samples.iter().map(|s| s.encode(tok, seq)).collect();
+        Dataset { samples, encoded, seq }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// View over a subset of indices (clones the rows — subsets are small).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        Dataset {
+            samples: indices.iter().map(|&i| self.samples[i].clone()).collect(),
+            encoded: indices.iter().map(|&i| self.encoded[i].clone()).collect(),
+            seq: self.seq,
+        }
+    }
+
+    /// Split `0..len` into `n` contiguous shards whose sizes differ by ≤ 1
+    /// (extraction workers each own one shard).
+    pub fn shard_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+        assert!(n > 0);
+        let base = len / n;
+        let extra = len % n;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let size = base + usize::from(i < extra);
+            out.push(start..start + size);
+            start += size;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate_corpus, Source};
+
+    fn ds(n: usize) -> Dataset {
+        let tok = Tokenizer::default();
+        Dataset::encode(generate_corpus(n, 5, &tok, 96), &tok, 96)
+    }
+
+    #[test]
+    fn encode_keeps_order_and_len() {
+        let d = ds(50);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d.encoded.len(), 50);
+        for e in &d.encoded {
+            assert_eq!(e.tokens.len(), 96);
+            assert_eq!(e.loss_mask.len(), 96);
+        }
+    }
+
+    #[test]
+    fn subset_selects_rows() {
+        let d = ds(20);
+        let s = d.subset(&[3, 7, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.samples[0].prompt, d.samples[3].prompt);
+        assert_eq!(s.samples[1].prompt, d.samples[7].prompt);
+        assert_eq!(s.samples[2].prompt, d.samples[7].prompt);
+    }
+
+    #[test]
+    fn shards_cover_and_balance() {
+        for (len, n) in [(10, 3), (7, 7), (5, 8), (100, 4), (0, 2)] {
+            let shards = Dataset::shard_ranges(len, n);
+            assert_eq!(shards.len(), n);
+            let total: usize = shards.iter().map(|r| r.len()).sum();
+            assert_eq!(total, len);
+            let sizes: Vec<usize> = shards.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{len} {n} {sizes:?}");
+            // contiguous
+            let mut pos = 0;
+            for r in &shards {
+                assert_eq!(r.start, pos);
+                pos = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn subset_source_composition_preserved() {
+        let d = ds(100);
+        let idx: Vec<usize> = (0..d.len())
+            .filter(|&i| d.samples[i].source == Source::SynCot)
+            .collect();
+        let s = d.subset(&idx);
+        assert!(s.samples.iter().all(|x| x.source == Source::SynCot));
+    }
+}

@@ -1,0 +1,165 @@
+//! On-disk header + primitive (de)serialization for the gradient datastore.
+
+use anyhow::{bail, Result};
+
+use crate::quant::{Precision, Scheme};
+
+pub const MAGIC: [u8; 4] = *b"QLDS";
+pub const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub precision: Precision,
+    pub n_samples: u64,
+    pub k: u64,
+    pub n_checkpoints: u32,
+    pub row_stride: u32,
+}
+
+impl Header {
+    pub fn new(precision: Precision, n_samples: usize, k: usize, n_checkpoints: usize) -> Header {
+        let row_stride = match precision.bits {
+            16 => (k * 2) as u32,
+            b => ((k * b as usize).div_ceil(8)) as u32,
+        };
+        Header {
+            precision,
+            n_samples: n_samples as u64,
+            k: k as u64,
+            n_checkpoints: n_checkpoints as u32,
+            row_stride,
+        }
+    }
+
+    pub const BYTES: usize = 4 + 4 + 1 + 1 + 2 + 8 + 8 + 4 + 4;
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(Self::BYTES);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.precision.bits);
+        out.push(scheme_tag(self.precision.scheme));
+        out.extend_from_slice(&[0u8; 2]);
+        out.extend_from_slice(&self.n_samples.to_le_bytes());
+        out.extend_from_slice(&self.k.to_le_bytes());
+        out.extend_from_slice(&self.n_checkpoints.to_le_bytes());
+        out.extend_from_slice(&self.row_stride.to_le_bytes());
+        debug_assert_eq!(out.len(), Self::BYTES);
+        out
+    }
+
+    pub fn decode(b: &[u8]) -> Result<Header> {
+        if b.len() < Self::BYTES {
+            bail!("datastore header truncated ({} bytes)", b.len());
+        }
+        if b[0..4] != MAGIC {
+            bail!("bad datastore magic {:?}", &b[0..4]);
+        }
+        let version = u32::from_le_bytes(b[4..8].try_into()?);
+        if version != VERSION {
+            bail!("datastore version {version} != {VERSION}");
+        }
+        let bits = b[8];
+        let scheme = scheme_from_tag(b[9])?;
+        let precision = Precision::new(bits, scheme)?;
+        let n_samples = u64::from_le_bytes(b[12..20].try_into()?);
+        let k = u64::from_le_bytes(b[20..28].try_into()?);
+        let n_checkpoints = u32::from_le_bytes(b[28..32].try_into()?);
+        let row_stride = u32::from_le_bytes(b[32..36].try_into()?);
+        let expect = Header::new(precision, n_samples as usize, k as usize, n_checkpoints as usize);
+        if expect.row_stride != row_stride {
+            bail!("row_stride {row_stride} inconsistent with bits/k (expect {})", expect.row_stride);
+        }
+        Ok(expect)
+    }
+
+    /// Bytes of one checkpoint block (η + scales + rows). 16-bit blocks
+    /// carry no scales section (bf16 rows are self-describing).
+    pub fn block_bytes(&self) -> u64 {
+        4 + self.scales_bytes() + self.row_stride as u64 * self.n_samples
+    }
+
+    /// Bytes of the per-row scale section (absent at 16-bit).
+    pub fn scales_bytes(&self) -> u64 {
+        if self.precision.bits == 16 {
+            0
+        } else {
+            4 * self.n_samples
+        }
+    }
+
+    /// Total file size this header implies.
+    pub fn file_bytes(&self) -> u64 {
+        Self::BYTES as u64 + self.block_bytes() * self.n_checkpoints as u64
+    }
+}
+
+fn scheme_tag(s: Scheme) -> u8 {
+    match s {
+        Scheme::Absmax => 0,
+        Scheme::Absmean => 1,
+        Scheme::Sign => 2,
+    }
+}
+
+fn scheme_from_tag(t: u8) -> Result<Scheme> {
+    Ok(match t {
+        0 => Scheme::Absmax,
+        1 => Scheme::Absmean,
+        2 => Scheme::Sign,
+        _ => bail!("bad scheme tag {t}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hdr(bits: u8) -> Header {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        Header::new(Precision::new(bits, scheme).unwrap(), 1000, 512, 4)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for bits in [1u8, 2, 4, 8, 16] {
+            let h = hdr(bits);
+            let d = Header::decode(&h.encode()).unwrap();
+            assert_eq!(h, d, "{bits}-bit");
+        }
+    }
+
+    #[test]
+    fn row_strides() {
+        assert_eq!(hdr(16).row_stride, 1024);
+        assert_eq!(hdr(8).row_stride, 512);
+        assert_eq!(hdr(4).row_stride, 256);
+        assert_eq!(hdr(2).row_stride, 128);
+        assert_eq!(hdr(1).row_stride, 64);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut b = hdr(8).encode();
+        b[0] = b'X';
+        assert!(Header::decode(&b).is_err());
+        let mut b2 = hdr(8).encode();
+        b2[4] = 99; // version
+        assert!(Header::decode(&b2).is_err());
+        let mut b3 = hdr(8).encode();
+        b3[9] = 7; // scheme tag
+        assert!(Header::decode(&b3).is_err());
+        assert!(Header::decode(&[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn file_size_matches_quant_accounting() {
+        // The header's implied file size must track quant::datastore_bytes
+        // up to the per-block η and header overhead.
+        let h = hdr(1);
+        let payload = crate::quant::datastore_bytes(h.precision, 1000, 512, 4);
+        let overhead = Header::BYTES as u64 + 4 * 4; // header + 4 η
+        // datastore_bytes counts 4-byte scales per row; so does the file.
+        assert_eq!(h.file_bytes(), payload + overhead);
+    }
+}

@@ -1,0 +1,25 @@
+//! The gradient datastore — QLESS's central artifact (paper §3.1).
+//!
+//! One file per (run × precision): a header, then one block per warmup
+//! checkpoint holding the learning-rate weight η_i, per-row scales, and the
+//! bit-packed gradient codes for every training sample. The measured file
+//! size *is* the storage column of Table 1 (the accounting formula
+//! [`crate::quant::datastore_bytes`] reproduces the paper's GB figures at
+//! the paper's scale).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "QLDS" | version u32 | bits u8 | scheme u8 | pad u16
+//! n_samples u64 | k u64 | n_checkpoints u32 | row_stride u32
+//! per checkpoint:
+//!   eta f32 | scales [n_samples × f32] | rows [n_samples × row_stride u8]
+//! ```
+//! 16-bit blocks store bf16 codes (no scales section semantics — scales are
+//! written as zeros and ignored). Sub-byte rows are packed little-endian
+//! within bytes (`quant::pack`).
+
+pub mod format;
+pub mod store;
+
+pub use format::{Header, MAGIC, VERSION};
+pub use store::{CheckpointBlock, Datastore, DatastoreWriter};

@@ -1,0 +1,452 @@
+//! Datastore writer / reader over the `format` layout.
+//!
+//! The writer streams rows checkpoint-by-checkpoint (constant memory, fed
+//! by the extraction pipeline); the reader loads whole checkpoint blocks —
+//! the influence scorer's access pattern is a full scan per validation
+//! batch, so block granularity maximizes sequential bandwidth.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::format::Header;
+use crate::quant::pack::{pack_codes, PackedRow};
+use crate::quant::scheme::{quantize_row, QuantizedRow};
+use crate::quant::Precision;
+use crate::util::bits::{bf16_to_f32, f32_to_bf16};
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+pub struct DatastoreWriter {
+    file: BufWriter<File>,
+    path: PathBuf,
+    header: Header,
+    ckpt_open: bool,
+    rows_in_ckpt: u64,
+    ckpts_done: u32,
+    scales: Vec<f32>,
+    /// Row bytes buffered until `end_checkpoint` (the scales section
+    /// precedes the rows on disk, but scales arrive row by row).
+    row_buf: Vec<u8>,
+}
+
+impl DatastoreWriter {
+    pub fn create(
+        path: &Path,
+        precision: Precision,
+        n_samples: usize,
+        k: usize,
+        n_checkpoints: usize,
+    ) -> Result<DatastoreWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let header = Header::new(precision, n_samples, k, n_checkpoints);
+        let mut file = BufWriter::new(
+            File::create(path).with_context(|| format!("creating datastore {path:?}"))?,
+        );
+        file.write_all(&header.encode())?;
+        Ok(DatastoreWriter {
+            file,
+            path: path.to_path_buf(),
+            header,
+            ckpt_open: false,
+            rows_in_ckpt: 0,
+            ckpts_done: 0,
+            scales: Vec::new(),
+            row_buf: Vec::new(),
+        })
+    }
+
+    /// Start the block for the next checkpoint with its LR weight η_i.
+    pub fn begin_checkpoint(&mut self, eta: f32) -> Result<()> {
+        if self.ckpt_open {
+            bail!("begin_checkpoint: previous checkpoint not finished");
+        }
+        if self.ckpts_done >= self.header.n_checkpoints {
+            bail!("too many checkpoints");
+        }
+        self.file.write_all(&eta.to_le_bytes())?;
+        self.scales.clear();
+        self.scales.reserve(self.header.n_samples as usize);
+        self.ckpt_open = true;
+        self.rows_in_ckpt = 0;
+        Ok(())
+    }
+
+    /// Append one sample's feature row. Rows must arrive in sample order.
+    /// For bits < 16 the row is quantized with the datastore's scheme; at
+    /// 16-bit features are stored as bf16 verbatim (the LESS baseline).
+    pub fn append_features(&mut self, features: &[f32]) -> Result<()> {
+        if features.len() != self.header.k as usize {
+            bail!("feature dim {} != k {}", features.len(), self.header.k);
+        }
+        let p = self.header.precision;
+        if p.bits == 16 {
+            self.append_row_raw(None, features)
+        } else {
+            let q = quantize_row(features, p.bits, p.scheme);
+            self.append_quantized(&q)
+        }
+    }
+
+    /// Append an already-quantized row (the XLA quantization path).
+    pub fn append_quantized(&mut self, q: &QuantizedRow) -> Result<()> {
+        let p = self.header.precision;
+        if p.bits == 16 {
+            bail!("append_quantized on a 16-bit datastore");
+        }
+        if q.codes.len() != self.header.k as usize {
+            bail!("code dim {} != k {}", q.codes.len(), self.header.k);
+        }
+        let packed = pack_codes(&q.codes, p.bits, q.scale)?;
+        self.append_packed_bytes(q.scale, &packed.bytes)
+    }
+
+    fn append_row_raw(&mut self, _scale: Option<f32>, features: &[f32]) -> Result<()> {
+        // 16-bit: bf16 codes straight to the row section (no scales section).
+        if !self.ckpt_open {
+            bail!("append before begin_checkpoint");
+        }
+        let mut buf = Vec::with_capacity(features.len() * 2);
+        for &f in features {
+            buf.extend_from_slice(&f32_to_bf16(f).to_le_bytes());
+        }
+        self.write_row_bytes(&buf)
+    }
+
+    fn append_packed_bytes(&mut self, scale: f32, bytes: &[u8]) -> Result<()> {
+        if !self.ckpt_open {
+            bail!("append before begin_checkpoint");
+        }
+        if self.rows_in_ckpt >= self.header.n_samples {
+            bail!("too many rows in checkpoint");
+        }
+        self.scales.push(scale);
+        self.write_row_bytes(bytes)
+    }
+
+    fn write_row_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() != self.header.row_stride as usize {
+            bail!("row stride {} != {}", bytes.len(), self.header.row_stride);
+        }
+        if self.rows_in_ckpt >= self.header.n_samples {
+            bail!("too many rows in checkpoint");
+        }
+        self.row_buf.extend_from_slice(bytes);
+        self.rows_in_ckpt += 1;
+        Ok(())
+    }
+
+    /// Finish the current checkpoint block (writes scales, then rows).
+    pub fn end_checkpoint(&mut self) -> Result<()> {
+        if !self.ckpt_open {
+            bail!("end_checkpoint without begin");
+        }
+        if self.rows_in_ckpt != self.header.n_samples {
+            bail!("checkpoint has {} rows, expected {}", self.rows_in_ckpt, self.header.n_samples);
+        }
+        if self.header.precision.bits != 16 {
+            for s in &self.scales {
+                self.file.write_all(&s.to_le_bytes())?;
+            }
+        }
+        self.file.write_all(&self.row_buf)?;
+        self.row_buf.clear();
+        self.ckpt_open = false;
+        self.ckpts_done += 1;
+        Ok(())
+    }
+
+    /// Flush and validate the finished datastore; returns the file size.
+    pub fn finalize(mut self) -> Result<u64> {
+        if self.ckpt_open {
+            bail!("finalize with open checkpoint");
+        }
+        if self.ckpts_done != self.header.n_checkpoints {
+            bail!("wrote {} checkpoints, expected {}", self.ckpts_done, self.header.n_checkpoints);
+        }
+        self.file.flush()?;
+        let size = std::fs::metadata(&self.path)?.len();
+        let expect = self.header.file_bytes();
+        if size != expect {
+            bail!("datastore size {size} != expected {expect}");
+        }
+        Ok(size)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------------
+
+/// One checkpoint's worth of features, resident in memory.
+#[derive(Debug, Clone)]
+pub struct CheckpointBlock {
+    pub precision: Precision,
+    pub n: usize,
+    pub k: usize,
+    pub eta: f32,
+    /// Per-row scales (empty at 16-bit).
+    pub scales: Vec<f32>,
+    /// Packed row data, `n × row_stride` bytes.
+    pub data: Vec<u8>,
+    pub row_stride: usize,
+}
+
+impl CheckpointBlock {
+    /// Dequantize row `i` to f32 features.
+    pub fn row_f32(&self, i: usize) -> Vec<f32> {
+        let raw = self.row_bytes(i);
+        if self.precision.bits == 16 {
+            raw.chunks(2)
+                .map(|b| bf16_to_f32(u16::from_le_bytes([b[0], b[1]])))
+                .collect()
+        } else {
+            let packed = PackedRow {
+                bits: self.precision.bits,
+                len: self.k,
+                bytes: raw.to_vec(),
+                scale: self.scales[i],
+            };
+            crate::quant::pack::unpack_dequant(&packed)
+        }
+    }
+
+    /// Integer codes of row `i` (bits < 16).
+    pub fn row_codes(&self, i: usize) -> Vec<i8> {
+        assert!(self.precision.bits < 16);
+        let packed = PackedRow {
+            bits: self.precision.bits,
+            len: self.k,
+            bytes: self.row_bytes(i).to_vec(),
+            scale: 0.0,
+        };
+        crate::quant::pack::unpack_codes(&packed)
+    }
+
+    pub fn row_bytes(&self, i: usize) -> &[u8] {
+        &self.data[i * self.row_stride..(i + 1) * self.row_stride]
+    }
+}
+
+pub struct Datastore {
+    pub header: Header,
+    path: PathBuf,
+}
+
+impl Datastore {
+    pub fn open(path: &Path) -> Result<Datastore> {
+        let mut f = File::open(path).with_context(|| format!("opening datastore {path:?}"))?;
+        let mut hdr = [0u8; Header::BYTES];
+        f.read_exact(&mut hdr)?;
+        let header = Header::decode(&hdr)?;
+        let size = f.metadata()?.len();
+        if size != header.file_bytes() {
+            bail!("datastore {path:?} truncated: {size} != {}", header.file_bytes());
+        }
+        Ok(Datastore { header, path: path.to_path_buf() })
+    }
+
+    pub fn n_checkpoints(&self) -> usize {
+        self.header.n_checkpoints as usize
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.header.n_samples as usize
+    }
+
+    pub fn file_bytes(&self) -> u64 {
+        self.header.file_bytes()
+    }
+
+    /// Load checkpoint block `c` into memory.
+    pub fn load_checkpoint(&self, c: usize) -> Result<CheckpointBlock> {
+        if c >= self.n_checkpoints() {
+            bail!("checkpoint {c} out of range");
+        }
+        let h = &self.header;
+        let mut f = BufReader::new(File::open(&self.path)?);
+        let off = Header::BYTES as u64 + h.block_bytes() * c as u64;
+        f.seek(SeekFrom::Start(off))?;
+        let mut eta_b = [0u8; 4];
+        f.read_exact(&mut eta_b)?;
+        let n = h.n_samples as usize;
+        let mut scales = Vec::new();
+        if h.precision.bits != 16 {
+            let mut sb = vec![0u8; 4 * n];
+            f.read_exact(&mut sb)?;
+            scales = sb
+                .chunks(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+        }
+        let mut data = vec![0u8; h.row_stride as usize * n];
+        f.read_exact(&mut data)?;
+        Ok(CheckpointBlock {
+            precision: h.precision,
+            n,
+            k: h.k as usize,
+            eta: f32::from_le_bytes(eta_b),
+            scales,
+            data,
+            row_stride: h.row_stride as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Scheme;
+    use crate::util::Rng;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "qless_ds_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn features(n: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..k).map(|_| rng.normal() as f32).collect()).collect()
+    }
+
+    fn roundtrip(bits: u8, scheme: Scheme) {
+        let dir = tmpdir();
+        let path = dir.join(format!("ds_{bits}.qlds"));
+        let (n, k, c) = (10usize, 96usize, 3usize);
+        let p = Precision::new(bits, scheme).unwrap();
+        let mut w = DatastoreWriter::create(&path, p, n, k, c).unwrap();
+        let all: Vec<Vec<Vec<f32>>> = (0..c).map(|ci| features(n, k, ci as u64)).collect();
+        for (ci, rows) in all.iter().enumerate() {
+            w.begin_checkpoint(0.1 * (ci + 1) as f32).unwrap();
+            for row in rows {
+                w.append_features(row).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+        }
+        let size = w.finalize().unwrap();
+        let ds = Datastore::open(&path).unwrap();
+        assert_eq!(ds.file_bytes(), size);
+        assert_eq!(ds.n_samples(), n);
+        assert_eq!(ds.n_checkpoints(), c);
+        for ci in 0..c {
+            let block = ds.load_checkpoint(ci).unwrap();
+            assert!((block.eta - 0.1 * (ci + 1) as f32).abs() < 1e-7);
+            for (i, orig) in all[ci].iter().enumerate() {
+                let got = block.row_f32(i);
+                if bits == 16 {
+                    for (a, b) in orig.iter().zip(&got) {
+                        assert!((a - b).abs() <= a.abs() / 128.0 + 1e-6, "bf16 {a} {b}");
+                    }
+                } else {
+                    // must equal quantize→dequantize exactly
+                    let q = quantize_row(orig, bits, p.scheme);
+                    let want = crate::quant::dequantize_row(&q);
+                    assert_eq!(got, want, "bits {bits} row {i}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_16bit() {
+        roundtrip(16, Scheme::Absmax);
+    }
+
+    #[test]
+    fn roundtrip_8bit() {
+        roundtrip(8, Scheme::Absmax);
+    }
+
+    #[test]
+    fn roundtrip_4bit_absmean() {
+        roundtrip(4, Scheme::Absmean);
+    }
+
+    #[test]
+    fn roundtrip_2bit() {
+        roundtrip(2, Scheme::Absmax);
+    }
+
+    #[test]
+    fn roundtrip_1bit() {
+        roundtrip(1, Scheme::Sign);
+    }
+
+    #[test]
+    fn storage_ratio_matches_paper() {
+        // The whole point: 16-bit ≈ 16× the 1-bit file (paper Table 1).
+        let dir = tmpdir();
+        let (n, k, c) = (64usize, 512usize, 2usize);
+        let mut sizes = std::collections::BTreeMap::new();
+        for bits in [16u8, 8, 4, 2, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let path = dir.join(format!("r_{bits}.qlds"));
+            let mut w = DatastoreWriter::create(&path, p, n, k, c).unwrap();
+            let rows = features(n, k, 1);
+            for ci in 0..c {
+                w.begin_checkpoint(0.1 * ci as f32).unwrap();
+                for row in &rows {
+                    w.append_features(row).unwrap();
+                }
+                w.end_checkpoint().unwrap();
+            }
+            sizes.insert(bits, w.finalize().unwrap() as f64);
+        }
+        let r = sizes[&16] / sizes[&1];
+        assert!(r > 14.0 && r <= 16.0, "16/1 ratio {r}");
+        let r84 = sizes[&8] / sizes[&4];
+        assert!(r84 > 1.8 && r84 < 2.1, "8/4 ratio {r84}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_enforces_protocol() {
+        let dir = tmpdir();
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = dir.join("proto.qlds");
+        let mut w = DatastoreWriter::create(&path, p, 2, 8, 1).unwrap();
+        assert!(w.append_features(&[0.0; 8]).is_err()); // before begin
+        w.begin_checkpoint(1.0).unwrap();
+        assert!(w.begin_checkpoint(1.0).is_err()); // double begin
+        w.append_features(&[0.0; 8]).unwrap();
+        assert!(w.end_checkpoint().is_err()); // missing rows
+        w.append_features(&[1.0; 8]).unwrap();
+        assert!(w.append_features(&[1.0; 8]).is_err()); // too many
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_rejects_truncated() {
+        let dir = tmpdir();
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = dir.join("trunc.qlds");
+        let mut w = DatastoreWriter::create(&path, p, 2, 8, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        w.append_features(&[0.0; 8]).unwrap();
+        w.append_features(&[0.0; 8]).unwrap();
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        // chop the file
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(Datastore::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    use crate::quant::scheme::quantize_row;
+}

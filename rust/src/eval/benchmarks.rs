@@ -1,0 +1,231 @@
+//! Benchmark task builders (SynMC / SynArith / SynQA) and the validation
+//! splits used for influence-based selection.
+//!
+//! Formats are shared byte-for-byte with the corpus generators
+//! (`corpus::tasks`), so each benchmark has exactly one "right" training
+//! source to discover — the mechanism behind the paper's Fig. 5.
+//! Determinism: tasks come from tagged RNG forks; the validation split
+//! (drives selection) and the eval split (scores models) use disjoint tags.
+
+use crate::corpus::tasks::{arith_task, mc_prompt, qa_prompt, OPTION_LETTERS};
+use crate::corpus::{Sample, Source, World};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    /// MMLU analogue: 4-way multiple choice, option log-likelihood ranking.
+    SynMC,
+    /// BBH analogue: chain-of-thought arithmetic, exact match on the result.
+    SynArith,
+    /// TyDiQA analogue: extractive QA, token-F1 on the decoded answer.
+    SynQA,
+}
+
+impl Benchmark {
+    pub const ALL: [Benchmark; 3] = [Benchmark::SynQA, Benchmark::SynMC, Benchmark::SynArith];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::SynMC => "SynMC",
+            Benchmark::SynArith => "SynArith",
+            Benchmark::SynQA => "SynQA",
+        }
+    }
+
+    /// The paper benchmark this one stands in for.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Benchmark::SynMC => "MMLU",
+            Benchmark::SynArith => "BBH",
+            Benchmark::SynQA => "TyDiQA",
+        }
+    }
+
+    /// The corpus source whose skill this benchmark needs (Fig. 5's
+    /// expected selection alignment).
+    pub fn aligned_source(&self) -> Source {
+        match self {
+            Benchmark::SynMC => Source::SynFlan,
+            Benchmark::SynArith => Source::SynCot,
+            Benchmark::SynQA => Source::SynDolly,
+        }
+    }
+}
+
+impl std::fmt::Display for Benchmark {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One evaluation instance: the prompt/gold pair plus MC options when
+/// applicable.
+#[derive(Debug, Clone)]
+pub struct EvalTask {
+    pub benchmark: Benchmark,
+    pub sample: Sample,
+    /// MC option strings (the candidate *answers*, i.e. letters).
+    pub options: Vec<String>,
+    /// Index of the correct option (MC only).
+    pub correct: usize,
+}
+
+/// Build `n` tasks for a benchmark. `split_tag` separates validation
+/// (selection-driving) from test (model-scoring) task streams.
+pub fn build_tasks(bench: Benchmark, world: &World, n: usize, seed: u64, split_tag: u64) -> Vec<EvalTask> {
+    let mut rng = Rng::new(seed).fork(0xE7A1 ^ split_tag ^ (bench as u64) << 8);
+    (0..n).map(|_| build_task(bench, world, &mut rng)).collect()
+}
+
+fn build_task(bench: Benchmark, world: &World, rng: &mut Rng) -> EvalTask {
+    match bench {
+        Benchmark::SynMC => {
+            let fact = world.eval_fact(rng);
+            let mut opts = world.distractors(&fact, 4, rng);
+            let correct = rng.below(4);
+            opts.insert(correct, fact.value_name());
+            let sample = Sample::new(
+                Source::SynFlan,
+                mc_prompt(&fact, &opts),
+                OPTION_LETTERS[correct].to_string(),
+            );
+            EvalTask {
+                benchmark: bench,
+                sample,
+                options: OPTION_LETTERS.iter().map(|s| s.to_string()).collect(),
+                correct,
+            }
+        }
+        Benchmark::SynArith => {
+            let (prompt, answer, _) = arith_task(rng);
+            EvalTask {
+                benchmark: bench,
+                sample: Sample::new(Source::SynCot, prompt, answer),
+                options: vec![],
+                correct: 0,
+            }
+        }
+        Benchmark::SynQA => {
+            let n_facts = 2 + rng.below(2);
+            let mut facts: Vec<_> = (0..n_facts).map(|_| world.eval_fact(rng)).collect();
+            facts.dedup_by(|a, b| a.entity == b.entity && a.attr == b.attr);
+            let ask = facts[rng.below(facts.len())].clone();
+            EvalTask {
+                benchmark: bench,
+                sample: Sample::new(
+                    Source::SynDolly,
+                    qa_prompt(&facts, &ask),
+                    ask.value_name().to_string(),
+                ),
+                options: vec![],
+                correct: 0,
+            }
+        }
+    }
+}
+
+/// The validation split for selection: full prompt+gold samples whose SGD
+/// gradients are the q̂_{z'} of Eq. 7 (the paper's few-shot D_val).
+pub fn validation_samples(bench: Benchmark, world: &World, n: usize, seed: u64) -> Vec<Sample> {
+    build_tasks(bench, world, n, seed, 0x7A11D)
+        .into_iter()
+        .map(|t| t.sample)
+        .collect()
+}
+
+/// The held-out test split (scores fine-tuned models).
+pub fn test_tasks(bench: Benchmark, world: &World, n: usize, seed: u64) -> Vec<EvalTask> {
+    build_tasks(bench, world, n, seed, 0x7E57)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Tokenizer;
+
+    fn world() -> World {
+        World::generate(5)
+    }
+
+    #[test]
+    fn tasks_fit_sequence_budget() {
+        let w = world();
+        let tok = Tokenizer::default();
+        for bench in Benchmark::ALL {
+            for t in build_tasks(bench, &w, 50, 1, 0) {
+                assert!(
+                    t.sample.encoded_len() <= 96,
+                    "{bench}: {} chars: {:?}",
+                    t.sample.encoded_len(),
+                    t.sample.prompt
+                );
+                t.sample.try_encode(&tok, 96).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn val_and_test_splits_differ() {
+        let w = world();
+        for bench in Benchmark::ALL {
+            let val = validation_samples(bench, &w, 10, 1);
+            let test = test_tasks(bench, &w, 10, 1);
+            let overlap = val
+                .iter()
+                .filter(|v| test.iter().any(|t| t.sample.prompt == v.prompt))
+                .count();
+            assert!(overlap <= 2, "{bench}: {overlap} overlapping prompts");
+        }
+    }
+
+    #[test]
+    fn mc_correct_option_is_gold() {
+        let w = world();
+        for t in build_tasks(Benchmark::SynMC, &w, 30, 2, 0) {
+            assert_eq!(t.sample.answer, OPTION_LETTERS[t.correct]);
+            assert_eq!(t.options.len(), 4);
+            // the prompt lists the correct value after its letter
+            assert!(t.sample.prompt.contains(&format!(" {} ", OPTION_LETTERS[t.correct])));
+        }
+    }
+
+    #[test]
+    fn arith_gold_has_final_value() {
+        let w = world();
+        for t in build_tasks(Benchmark::SynArith, &w, 30, 3, 0) {
+            assert!(crate::corpus::tasks::arith_final(&t.sample.answer).is_some());
+        }
+    }
+
+    #[test]
+    fn qa_answers_are_extractable() {
+        let w = world();
+        for t in build_tasks(Benchmark::SynQA, &w, 30, 4, 0) {
+            assert!(t.sample.prompt.contains(&t.sample.answer));
+        }
+    }
+
+    #[test]
+    fn tasks_use_heldout_entities() {
+        let w = world();
+        let train_entities = &w.entities[..w.train_split];
+        for t in build_tasks(Benchmark::SynQA, &w, 20, 5, 0) {
+            // the asked entity must be from the eval split
+            let asked = t.sample.prompt.rsplit(" is ").next().unwrap().trim_end_matches('?');
+            assert!(
+                !train_entities.contains(&asked.to_string()),
+                "train entity {asked} leaked into eval"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_builders() {
+        let w = world();
+        let a = build_tasks(Benchmark::SynMC, &w, 5, 7, 0);
+        let b = build_tasks(Benchmark::SynMC, &w, 5, 7, 0);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sample.prompt, y.sample.prompt);
+        }
+    }
+}

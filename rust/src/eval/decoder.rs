@@ -1,0 +1,102 @@
+//! Batched greedy decoding over the `decode_step` AOT graph.
+//!
+//! No KV cache: `decode_step` recomputes the full forward and gathers the
+//! logits at each row's current position. At S=96 / B=32 / SimLM scale the
+//! recompute is cheaper than shipping a cache across the PJRT boundary
+//! every step; DESIGN.md §7 records the trade-off.
+
+use anyhow::Result;
+
+use crate::corpus::tokenizer::{Tokenizer, EOT};
+use crate::corpus::{EncodedSample, Sample};
+use crate::runtime::{ModelInfo, Runtime};
+
+/// Greedily decode answers for a batch of prompts. Returns the decoded
+/// text (chars until `<eot>`) per sample.
+pub fn greedy_decode(
+    rt: &Runtime,
+    info: &ModelInfo,
+    base_buf: &crate::runtime::DeviceBuf,
+    lora: &[f32],
+    prompts: &[Sample],
+    tok: &Tokenizer,
+    max_new: usize,
+) -> Result<Vec<String>> {
+    let exec = rt.exec(info, "decode_step")?;
+    let (b, s, v) = (info.batch_eval, info.seq, info.vocab);
+    let lora_buf = rt.upload_f32(lora, &[info.d_lora])?;
+
+    let mut outputs = vec![String::new(); prompts.len()];
+    for chunk_start in (0..prompts.len()).step_by(b) {
+        let chunk = &prompts[chunk_start..(chunk_start + b).min(prompts.len())];
+        let enc: Vec<EncodedSample> = chunk
+            .iter()
+            .map(|p| p.encode_prompt(tok, s))
+            .collect::<Result<_>>()?;
+        let mut tokens: Vec<i32> = Vec::with_capacity(b * s);
+        for e in &enc {
+            tokens.extend_from_slice(&e.tokens);
+        }
+        // pad rows replicate row 0 (results discarded)
+        for _ in chunk.len()..b {
+            tokens.extend_from_slice(&enc[0].tokens);
+        }
+        let mut pos: Vec<i32> = enc.iter().map(|e| e.prompt_end as i32).collect();
+        pos.resize(b, pos[0]);
+        let mut done = vec![false; chunk.len()];
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); chunk.len()];
+
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let tok_buf = rt.upload_i32(&tokens, &[b, s])?;
+            let pos_buf = rt.upload_i32(&pos, &[b])?;
+            let out = exec.run_b(&[base_buf, &lora_buf, &tok_buf, &pos_buf])?;
+            let logits = &out[0]; // [b, v]
+            for (row, d) in done.iter_mut().enumerate() {
+                if *d {
+                    continue;
+                }
+                let next = argmax(&logits[row * v..(row + 1) * v]);
+                let p = pos[row] as usize;
+                if p + 1 >= s {
+                    *d = true;
+                    continue;
+                }
+                tokens[row * s + p + 1] = next;
+                pos[row] += 1;
+                if next == EOT {
+                    *d = true;
+                } else {
+                    generated[row].push(next);
+                }
+            }
+        }
+        for (row, gen) in generated.iter().enumerate() {
+            outputs[chunk_start + row] = tok.decode_until_eot(gen);
+        }
+    }
+    Ok(outputs)
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! Evaluation metrics: accuracy, exact match, and SQuAD-style token F1
+//! (the TyDiQA gold-passage metric the paper reports).
+
+/// Token-level F1 between prediction and gold (whitespace tokens,
+/// lowercase, punctuation stripped) — the standard extractive-QA metric.
+pub fn token_f1(pred: &str, gold: &str) -> f64 {
+    let p = tokens(pred);
+    let g = tokens(gold);
+    if p.is_empty() || g.is_empty() {
+        return f64::from(u8::from(p.is_empty() && g.is_empty()));
+    }
+    // multiset intersection
+    let mut g_counts = std::collections::HashMap::new();
+    for t in &g {
+        *g_counts.entry(t.clone()).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for t in &p {
+        if let Some(c) = g_counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / p.len() as f64;
+    let recall = overlap as f64 / g.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+fn tokens(s: &str) -> Vec<String> {
+    s.to_lowercase()
+        .split_whitespace()
+        .map(|t| t.trim_matches(|c: char| !c.is_alphanumeric()).to_string())
+        .filter(|t| !t.is_empty())
+        .collect()
+}
+
+/// Exact match after trimming.
+pub fn exact_match(pred: &str, gold: &str) -> bool {
+    pred.trim() == gold.trim()
+}
+
+/// Mean of a set of per-task 0/1 or fractional scores.
+pub fn mean(scores: &[f64]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().sum::<f64>() / scores.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_exact_is_one() {
+        assert_eq!(token_f1("red", "red"), 1.0);
+        assert_eq!(token_f1("the red fox", "the red fox"), 1.0);
+    }
+
+    #[test]
+    fn f1_disjoint_is_zero() {
+        assert_eq!(token_f1("blue", "red"), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // pred {red, fox}, gold {red} → p=0.5, r=1.0, f1=2/3
+        let f = token_f1("red fox", "red");
+        assert!((f - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_handles_case_and_punct() {
+        assert_eq!(token_f1("Red.", "red"), 1.0);
+        assert_eq!(token_f1("  red  ", "red"), 1.0);
+    }
+
+    #[test]
+    fn f1_empty_cases() {
+        assert_eq!(token_f1("", ""), 1.0);
+        assert_eq!(token_f1("", "red"), 0.0);
+        assert_eq!(token_f1("red", ""), 0.0);
+    }
+
+    #[test]
+    fn f1_multiset_semantics() {
+        // pred says "red red", gold "red": overlap must count once.
+        let f = token_f1("red red", "red");
+        assert!((f - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn em_trims() {
+        assert!(exact_match(" 11 ", "11"));
+        assert!(!exact_match("11", "12"));
+    }
+
+    #[test]
+    fn mean_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[1.0, 0.0]), 0.5);
+    }
+}

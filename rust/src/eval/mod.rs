@@ -1,0 +1,17 @@
+//! Benchmark evaluation — the stand-ins for MMLU / BBH / TyDiQA (§4.1).
+//!
+//! * [`benchmarks`] — task builders over the held-out fact world: SynMC
+//!   (option ranking → accuracy), SynArith (CoT decode → exact match),
+//!   SynQA (extractive decode → token F1); plus the validation-split
+//!   builders whose gradients drive selection.
+//! * [`metrics`]   — accuracy / EM / F1.
+//! * [`decoder`]   — batched greedy decoding over the `decode_step` graph.
+//! * [`harness`]   — ties it together into per-benchmark scores.
+
+pub mod benchmarks;
+pub mod decoder;
+pub mod harness;
+pub mod metrics;
+
+pub use benchmarks::{Benchmark, EvalTask};
+pub use harness::{evaluate, BenchScores};

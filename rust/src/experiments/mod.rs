@@ -1,0 +1,91 @@
+//! Paper table/figure reproduction harnesses (`qless xp <id>`).
+//!
+//! Each harness runs the pipeline grid behind one table or figure of the
+//! paper's evaluation and emits a paper-shaped report to `reports/<id>.*`.
+//! DESIGN.md §4 maps every id to its paper counterpart; EXPERIMENTS.md
+//! records paper-vs-measured. `--fast` shrinks the grid for smoke runs.
+
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+
+/// Workload scale knobs shared by all harnesses.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub fast: bool,
+}
+
+impl Scale {
+    /// Tune a config for experiment grids. Fast mode shrinks everything to
+    /// smoke-test size; full mode is the EXPERIMENTS.md configuration.
+    pub fn apply(&self, cfg: &mut Config, model: &str) {
+        cfg.model = model.to_string();
+        cfg.lr = 2e-3; // SimLM-scale peak LR (paper's 2e-5 is 7B-scale)
+        if self.fast {
+            cfg.corpus_size = 2000;
+            cfg.warmup_epochs = 4;
+            cfg.finetune_epochs = 5;
+            cfg.val_per_task = 24;
+            cfg.eval_per_task = 96;
+        } else {
+            cfg.corpus_size = 4000;
+            cfg.warmup_epochs = 4;
+            cfg.finetune_epochs = 6;
+            cfg.val_per_task = 32;
+            cfg.eval_per_task = 128;
+        }
+    }
+
+    /// The model families a multi-model table covers.
+    pub fn table_models(&self) -> Vec<&'static str> {
+        if self.fast {
+            vec!["tiny"]
+        } else {
+            vec!["tiny", "small"]
+        }
+    }
+}
+
+pub fn run(id: &str, base_cfg: &Config, fast: bool) -> Result<()> {
+    let scale = Scale { fast };
+    match id {
+        "table1" => tables::table1(base_cfg, scale),
+        "table2" => tables::table2(base_cfg, scale),
+        "table3" => tables::table3(base_cfg, scale),
+        "fig1" => figures::fig1(base_cfg),
+        "fig3" => figures::fig3(base_cfg, scale),
+        "fig4" => figures::fig4(base_cfg, scale),
+        "fig5" => figures::fig5(base_cfg, scale),
+        "all" => {
+            for id in ["table1", "table2", "table3", "fig3", "fig4", "fig5", "fig1"] {
+                run(id, base_cfg, fast)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment '{id}' (table1|table2|table3|fig1|fig3|fig4|fig5|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_knobs() {
+        let mut c = Config::default();
+        Scale { fast: true }.apply(&mut c, "tiny");
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.corpus_size, 2000);
+        Scale { fast: false }.apply(&mut c, "small");
+        assert_eq!(c.warmup_epochs, 4);
+        assert!(c.corpus_size > 2000);
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("table99", &Config::default(), true).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Gradient-feature extraction — LESS/QLESS step 2.
+//!
+//! For every training sample × checkpoint: per-sample Adam-preconditioned
+//! LoRA gradient, projected to `k` dims by the shared Rademacher matrix
+//! (the `grad_train` AOT graph). Validation gradients use plain SGD grads
+//! (`grad_val`). Extraction is sharded over a worker-thread pool, each
+//! worker driving PJRT executions with checkpoint-lifetime operands held in
+//! persistent device buffers.
+
+pub mod extractor;
+pub mod projector;
+
+pub use extractor::{extract_train_features, extract_val_features, FeatureMatrix};
+pub use projector::Projector;

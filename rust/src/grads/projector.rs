@@ -1,0 +1,93 @@
+//! The shared random-projection matrix R (paper Eq. 1 / §2.4 QRP).
+//!
+//! R ∈ {−1,+1}^{d_lora×k}/√k is derived from the run seed via the
+//! Python-parity splitmix64 stream (`util::rng`), generated once per run
+//! and uploaded once per checkpoint as a persistent device buffer — it is
+//! by far the largest per-call operand of the `grad_*` graphs
+//! (d_lora × k × 4 bytes), so keeping it resident matters (§Perf).
+
+use crate::util::rng::rademacher_projection;
+
+#[derive(Debug, Clone)]
+pub struct Projector {
+    pub seed: u64,
+    pub d: usize,
+    pub k: usize,
+    pub matrix: Vec<f32>,
+}
+
+impl Projector {
+    /// Derive the projection for a run. The seed is folded with a fixed tag
+    /// so corpus/selection RNG and the projection never share a stream.
+    pub fn new(run_seed: u64, d: usize, k: usize) -> Projector {
+        let seed = run_seed ^ 0x5EED_0F_0E57;
+        Projector { seed, d, k, matrix: rademacher_projection(seed, d, k) }
+    }
+
+    /// Host-side projection of one gradient row (tests / native paths).
+    pub fn project(&self, g: &[f32]) -> Vec<f32> {
+        assert_eq!(g.len(), self.d);
+        let mut out = vec![0f32; self.k];
+        for (i, &gi) in g.iter().enumerate() {
+            if gi == 0.0 {
+                continue;
+            }
+            let row = &self.matrix[i * self.k..(i + 1) * self.k];
+            for (o, r) in out.iter_mut().zip(row) {
+                *o += gi * r;
+            }
+        }
+        out
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.matrix.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_run_seed() {
+        let a = Projector::new(7, 32, 16);
+        let b = Projector::new(7, 32, 16);
+        assert_eq!(a.matrix, b.matrix);
+        assert_ne!(a.matrix, Projector::new(8, 32, 16).matrix);
+    }
+
+    #[test]
+    fn values_are_scaled_signs() {
+        let p = Projector::new(1, 8, 4);
+        let s = 1.0 / 2.0;
+        assert!(p.matrix.iter().all(|&v| v == s || v == -s));
+        assert_eq!(p.bytes(), 8 * 4 * 4);
+    }
+
+    #[test]
+    fn project_matches_naive_matmul() {
+        let p = Projector::new(3, 16, 8);
+        let mut rng = crate::util::Rng::new(5);
+        let g: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let fast = p.project(&g);
+        let mut slow = vec![0f32; 8];
+        for (j, s) in slow.iter_mut().enumerate() {
+            *s = (0..16).map(|i| g[i] * p.matrix[i * 8 + j]).sum();
+        }
+        for (a, b) in fast.iter().zip(&slow) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn projection_preserves_norm_in_expectation() {
+        let p = Projector::new(9, 256, 128);
+        let mut rng = crate::util::Rng::new(6);
+        let g: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let y = p.project(&g);
+        let ng: f32 = g.iter().map(|x| x * x).sum();
+        let ny: f32 = y.iter().map(|x| x * x).sum();
+        assert!((ny / ng - 1.0).abs() < 0.35, "JL norm ratio {}", ny / ng);
+    }
+}

@@ -1,0 +1,140 @@
+//! Checkpoint aggregation (the outer sum of Eq. 7):
+//! Inf(z) = Σ_i η_i · mean_{z'} ⟨q̂_{z,i}, q̂_{z',i}⟩.
+//!
+//! For each warmup checkpoint: load its datastore block, prepare the same-
+//! checkpoint validation features at the datastore's precision, score with
+//! the fastest applicable path (popcount at 1-bit, dense otherwise, or the
+//! XLA kernel when requested), weight by the checkpoint's η_i, accumulate.
+
+use anyhow::Result;
+
+use crate::datastore::Datastore;
+use crate::grads::FeatureMatrix;
+use crate::influence::native::{scores_1bit, scores_dense, ValFeatures};
+use crate::influence::xla::scores_xla;
+use crate::info;
+use crate::runtime::{ModelInfo, Runtime};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScoreOpts {
+    /// Route the per-checkpoint scoring through the AOT Pallas kernel.
+    pub use_xla: bool,
+}
+
+/// Score every training sample in `ds` against per-checkpoint validation
+/// features `val_per_ckpt` (raw, unquantized — quantization to the
+/// datastore's precision happens here, mirroring §3.2).
+///
+/// `rt`/`info` are only needed for the XLA path and may be `None` otherwise.
+pub fn score_datastore(
+    ds: &Datastore,
+    val_per_ckpt: &[FeatureMatrix],
+    opts: ScoreOpts,
+    rt_info: Option<(&Runtime, &ModelInfo)>,
+) -> Result<Vec<f32>> {
+    let c = ds.n_checkpoints();
+    anyhow::ensure!(
+        val_per_ckpt.len() == c,
+        "validation features for {} checkpoints, datastore has {c}",
+        val_per_ckpt.len()
+    );
+    let n = ds.n_samples();
+    let mut total = vec![0f32; n];
+    for ci in 0..c {
+        let block = ds.load_checkpoint(ci)?;
+        let val = ValFeatures::prepare(&val_per_ckpt[ci], block.precision);
+        let t0 = std::time::Instant::now();
+        let scores = if opts.use_xla {
+            let (rt, info) =
+                rt_info.ok_or_else(|| anyhow::anyhow!("XLA scoring requires a runtime"))?;
+            scores_xla(rt, info, &block, &val)?
+        } else if block.precision.bits == 1 {
+            scores_1bit(&block, &val)
+        } else {
+            scores_dense(&block, &val)
+        };
+        info!(
+            "scored checkpoint {ci} (η={:.2e}, {}×{} vs {} val) in {:.2}s",
+            block.eta,
+            n,
+            block.k,
+            val.n(),
+            t0.elapsed().as_secs_f64()
+        );
+        for (t, s) in total.iter_mut().zip(&scores) {
+            *t += block.eta * s;
+        }
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::DatastoreWriter;
+    use crate::quant::{Precision, Scheme};
+    use crate::util::Rng;
+
+    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+    }
+
+    /// Build a datastore and keep its file alive (Datastore reads lazily).
+    fn build_ds_keep(bits: u8, etas: &[f32], n: usize, k: usize) -> (Datastore, std::path::PathBuf) {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "qless_aggk_{bits}_e{}_c{}_{}_{:?}.qlds",
+            etas[0],
+            etas.len(),
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
+        for (ci, &eta) in etas.iter().enumerate() {
+            let f = feats(n, k, ci as u64);
+            w.begin_checkpoint(eta).unwrap();
+            for i in 0..n {
+                w.append_features(f.row(i)).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+        }
+        w.finalize().unwrap();
+        (Datastore::open(&path).unwrap(), path)
+    }
+
+    #[test]
+    fn eta_weights_scale_scores() {
+        let (n, k) = (8, 64);
+        let (ds1, p1) = build_ds_keep(8, &[1.0], n, k);
+        let (ds2, p2) = build_ds_keep(8, &[2.0], n, k);
+        let val = vec![feats(4, k, 99)];
+        let a = score_datastore(&ds1, &val, ScoreOpts::default(), None).unwrap();
+        let b = score_datastore(&ds2, &val, ScoreOpts::default(), None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((2.0 * x - y).abs() < 1e-5, "{x} {y}");
+        }
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn multi_checkpoint_sums() {
+        let (n, k) = (6, 64);
+        let (ds, p) = build_ds_keep(4, &[0.5, 0.25], n, k);
+        let vals = vec![feats(3, k, 50), feats(3, k, 51)];
+        let s = score_datastore(&ds, &vals, ScoreOpts::default(), None).unwrap();
+        assert_eq!(s.len(), n);
+        assert!(s.iter().all(|x| x.is_finite() && x.abs() <= 0.75 + 1e-5));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn checkpoint_count_mismatch_errors() {
+        let (ds, p) = build_ds_keep(8, &[1.0, 1.0], 4, 64);
+        let vals = vec![feats(2, 64, 1)];
+        assert!(score_datastore(&ds, &vals, ScoreOpts::default(), None).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,22 @@
+//! Influence scoring — paper Eq. 7:
+//!
+//! Inf(z) = Σ_i η_i · mean_{z'∈D_val} ⟨ q̂_{z,i}, q̂_{z',i} ⟩
+//!
+//! Both sides are quantized-then-normalized (QLESS §3.2); the quantization
+//! scale cancels under normalization, so scoring operates on integer codes
+//! directly. Three execution paths, all bit-identical in ranking:
+//!
+//! * [`native`] — dequantize-free f32 cosine over unpacked codes, plus the
+//!   1-bit **XNOR+popcount** fast path over packed sign words (the compute
+//!   analogue of the paper's 16× storage saving).
+//! * [`xla`]    — the L1 Pallas `influence` tile artifact via PJRT, chunked
+//!   and padded to the compiled tile shape.
+//! * [`aggregate`] — checkpoint loop: load datastore blocks, score with the
+//!   chosen path, weight by η_i, accumulate per-sample totals.
+
+pub mod aggregate;
+pub mod native;
+pub mod xla;
+
+pub use aggregate::{score_datastore, ScoreOpts};
+pub use native::ValFeatures;

@@ -1,0 +1,282 @@
+//! Native influence paths: generic f32 cosine and the packed 1-bit
+//! XNOR+popcount kernel.
+//!
+//! The popcount path is the performance centerpiece: for ±1 codes, cosine
+//! similarity reduces to bit agreement,
+//! `cos = (2·agree − k)/k`, computable at 64 dims per instruction over the
+//! datastore's packed words with no dequantization, no normalization and
+//! 1/32 the memory traffic of f32 — see EXPERIMENTS.md §Perf.
+
+use crate::datastore::CheckpointBlock;
+use crate::grads::FeatureMatrix;
+use crate::quant::pack::{as_sign_words, pack_codes};
+use crate::quant::scheme::{normalize_row, quantize_row};
+use crate::quant::Precision;
+
+/// Validation-side features prepared for scoring at a given precision:
+/// quantized-normalized f32 rows, plus packed sign words at 1-bit.
+#[derive(Debug, Clone)]
+pub struct ValFeatures {
+    pub k: usize,
+    /// `[n_val][k]` quantized → normalized rows.
+    pub rows: Vec<Vec<f32>>,
+    /// Packed sign words per row (populated only at 1-bit).
+    pub sign_words: Vec<Vec<u64>>,
+}
+
+impl ValFeatures {
+    /// Quantize raw validation gradient features with the datastore's
+    /// precision, then normalize (paper: "validation gradients are
+    /// quantized and normalized, yielding q̂_{z'}").
+    pub fn prepare(feats: &FeatureMatrix, precision: Precision) -> ValFeatures {
+        let mut rows = Vec::with_capacity(feats.n);
+        let mut sign_words = Vec::new();
+        for i in 0..feats.n {
+            let raw = feats.row(i);
+            let mut row: Vec<f32> = if precision.bits == 16 {
+                raw.to_vec()
+            } else {
+                let q = quantize_row(raw, precision.bits, precision.scheme);
+                if precision.bits == 1 {
+                    let packed = pack_codes(&q.codes, 1, q.scale).expect("pack 1-bit");
+                    sign_words.push(as_sign_words(&packed));
+                }
+                q.codes.iter().map(|&c| c as f32).collect()
+            };
+            normalize_row(&mut row);
+            rows.push(row);
+        }
+        ValFeatures { k: feats.k, rows, sign_words }
+    }
+
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Mean cosine similarity of each train row in `block` against all val
+/// rows: the inner term of Eq. 7 for one checkpoint. Generic path — works
+/// for every precision by unpacking codes to f32. Row-parallel across a
+/// thread pool (§Perf iteration 1: 1 → N cores on the scan).
+pub fn scores_dense(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
+    assert_eq!(block.k, val.k);
+    let nv = val.n() as f32;
+    // work per row ≈ nv·k fused-multiply-adds (plus unpack)
+    par_over_rows(block.n, (val.n() * block.k) as u64, |i| {
+        let mut row = if block.precision.bits == 16 {
+            block.row_f32(i)
+        } else {
+            block.row_codes(i).iter().map(|&c| c as f32).collect()
+        };
+        normalize_row(&mut row);
+        let mut acc = 0f32;
+        for v in &val.rows {
+            acc += dot(&row, v);
+        }
+        acc / nv
+    })
+}
+
+/// Evaluate `f(i)` for each row index in parallel chunks (order-preserving).
+///
+/// `work_per_row` is an estimate of the inner-op count per row; jobs below
+/// ~8M total ops stay serial — thread-scope spawn costs ~100µs/thread,
+/// which §Perf iteration 2 found *regresses* the 1-bit popcount path
+/// (1.4ms of work) by 2.6× when parallelized unconditionally.
+/// `QLESS_SCORE_THREADS=1` forces the serial path (before/after benches).
+fn par_over_rows<F: Fn(usize) -> f32 + Sync>(n: usize, work_per_row: u64, f: F) -> Vec<f32> {
+    let threads = std::env::var("QLESS_SCORE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+        })
+        .max(1)
+        .min(16)
+        .min(n.max(1));
+    if threads <= 1 || n < 256 || (n as u64) * work_per_row < 8_000_000 {
+        return (0..n).map(f).collect();
+    }
+    let mut out = vec![0f32; n];
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let start = t * chunk;
+                for (j, o) in slice.iter_mut().enumerate() {
+                    *o = f(start + j);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// The 1-bit fast path: XNOR+popcount over packed words, no unpacking.
+/// Identical results to [`scores_dense`] on a 1-bit block (up to fp
+/// rounding of the final division).
+pub fn scores_1bit(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
+    assert_eq!(block.precision.bits, 1, "1-bit path needs a sign datastore");
+    assert!(!val.sign_words.is_empty(), "val features lack sign words");
+    let k = block.k;
+    let nwords = k.div_ceil(64);
+    let tail = (nwords * 64 - k) as i64;
+    let nv = val.sign_words.len() as f32;
+    let inv_k = 1.0 / k as f32;
+
+    // work per row ≈ nv·nwords popcount iterations (~1.4 ns each — tiny;
+    // this path only crosses the parallel threshold at ≫10⁴ rows)
+    par_over_rows(block.n, (val.sign_words.len() * nwords) as u64, |i| {
+        let row = block.row_bytes(i);
+        // view row bytes as u64 words (little-endian, zero tail)
+        let mut words = [0u64; 64]; // k ≤ 4096 in practice
+        debug_assert!(nwords <= 64);
+        for (w, chunk) in words.iter_mut().zip(row.chunks(8)) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            *w = u64::from_le_bytes(b);
+        }
+        let mut acc = 0f32;
+        for v in &val.sign_words {
+            let mut agree: i64 = 0;
+            for (a, b) in words[..nwords].iter().zip(v) {
+                agree += (!(a ^ b)).count_ones() as i64;
+            }
+            // remove always-agreeing zero tail, convert to dot product
+            let dot = 2 * (agree - tail) - k as i64;
+            acc += dot as f32 * inv_k;
+        }
+        acc / nv
+    })
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // 4-way unrolled accumulation (autovectorizes well)
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::{Datastore, DatastoreWriter};
+    use crate::quant::Scheme;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "qless_inf_{tag}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+    }
+
+    fn make_block(bits: u8, n: usize, k: usize, seed: u64) -> CheckpointBlock {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let path = tmpfile(&format!("b{bits}_{seed}"));
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        let f = feats(n, k, seed);
+        w.begin_checkpoint(1.0).unwrap();
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        let ds = Datastore::open(&path).unwrap();
+        let block = ds.load_checkpoint(0).unwrap();
+        std::fs::remove_file(&path).ok();
+        block
+    }
+
+    #[test]
+    fn dense_scores_bounded_and_finite() {
+        for bits in [16u8, 8, 4, 2, 1] {
+            let block = make_block(bits, 12, 96, 1);
+            let val = ValFeatures::prepare(
+                &feats(5, 96, 2),
+                Precision::new(bits, if bits == 1 { Scheme::Sign } else { Scheme::Absmax })
+                    .unwrap(),
+            );
+            let s = scores_dense(&block, &val);
+            assert_eq!(s.len(), 12);
+            assert!(s.iter().all(|x| x.is_finite() && x.abs() <= 1.0 + 1e-5), "{bits}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn popcount_matches_dense_exactly() {
+        for (k, seed) in [(64usize, 3u64), (96, 4), (128, 5), (65, 6), (512, 7)] {
+            let block = make_block(1, 10, k, seed);
+            let val = ValFeatures::prepare(
+                &feats(7, k, seed + 100),
+                Precision::new(1, Scheme::Sign).unwrap(),
+            );
+            let dense = scores_dense(&block, &val);
+            let fast = scores_1bit(&block, &val);
+            for (a, b) in dense.iter().zip(&fast) {
+                assert!((a - b).abs() < 1e-5, "k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_similarity_ranks_first() {
+        // A train row identical to the single val row must get score 1.
+        let k = 128;
+        let f = feats(6, k, 9);
+        let val_raw = FeatureMatrix { n: 1, k, data: f.row(3).to_vec() };
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let block = make_block(8, 6, k, 9);
+        let val = ValFeatures::prepare(&val_raw, p);
+        let s = scores_dense(&block, &val);
+        let best = s.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap();
+        assert_eq!(best.0, 3);
+        assert!(*best.1 > 0.99, "{s:?}");
+    }
+
+    #[test]
+    fn scale_cancels_in_scoring() {
+        // Scaling raw val features must not change prepared rows.
+        let k = 64;
+        let f = feats(3, k, 11);
+        let scaled = FeatureMatrix { n: 3, k, data: f.data.iter().map(|x| x * 123.0).collect() };
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let a = ValFeatures::prepare(&f, p);
+        let b = ValFeatures::prepare(&scaled, p);
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            for (x, y) in ra.iter().zip(rb) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(12);
+        let a: Vec<f32> = (0..103).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..103).map(|_| rng.normal() as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,108 @@
+//! XLA influence path: drives the L1 Pallas cosine tile
+//! (`influence.hlo.txt`, compiled at `[tile_q × k] · [k × tile_v]`) over the
+//! full train × val grid, padding tail tiles with zero rows (zero rows
+//! normalize to zero and contribute zero similarity — sliced off on read).
+
+use anyhow::Result;
+
+use crate::datastore::CheckpointBlock;
+use crate::influence::native::ValFeatures;
+use crate::runtime::{Arg, ModelInfo, Runtime};
+
+/// Mean cosine of each train row against all val rows via the AOT kernel.
+/// Same contract as [`native::scores_dense`](super::native::scores_dense).
+pub fn scores_xla(
+    rt: &Runtime,
+    info: &ModelInfo,
+    block: &CheckpointBlock,
+    val: &ValFeatures,
+) -> Result<Vec<f32>> {
+    assert_eq!(block.k, info.proj_dim);
+    assert_eq!(val.k, info.proj_dim);
+    let exec = rt.exec(info, "influence")?;
+    let (tq, tv, k) = (info.tile_q, info.tile_v, info.proj_dim);
+    let nv = val.n();
+
+    // Pack the val side once: [tv_tiles][tv * k], zero-padded.
+    let tv_tiles = nv.div_ceil(tv);
+    let mut val_tiles = vec![vec![0f32; tv * k]; tv_tiles];
+    for (j, row) in val.rows.iter().enumerate() {
+        val_tiles[j / tv][(j % tv) * k..(j % tv + 1) * k].copy_from_slice(row);
+    }
+
+    let mut scores = vec![0f32; block.n];
+    let mut qt = vec![0f32; tq * k];
+    for tile_start in (0..block.n).step_by(tq) {
+        let rows = (block.n - tile_start).min(tq);
+        qt.iter_mut().for_each(|x| *x = 0.0);
+        for r in 0..rows {
+            let row = block.row_f32(tile_start + r); // codes×scale — scale cancels
+            qt[r * k..(r + 1) * k].copy_from_slice(&row);
+        }
+        for (jt, vt) in val_tiles.iter().enumerate() {
+            let out = exec.run(&[Arg::F32(&qt, &[tq, k]), Arg::F32(vt, &[tv, k])])?;
+            let sims = &out[0]; // [tq, tv]
+            let val_rows = (nv - jt * tv).min(tv);
+            for r in 0..rows {
+                let mut acc = 0f32;
+                for c in 0..val_rows {
+                    acc += sims[r * tv + c];
+                }
+                scores[tile_start + r] += acc;
+            }
+        }
+    }
+    let inv = 1.0 / nv as f32;
+    scores.iter_mut().for_each(|s| *s *= inv);
+    Ok(scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::DatastoreWriter;
+    use crate::grads::FeatureMatrix;
+    use crate::quant::{Precision, Scheme};
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn rt() -> Option<Runtime> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Runtime::new(&p).unwrap())
+    }
+
+    #[test]
+    fn xla_matches_native_dense() {
+        let Some(rt) = rt() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = rt.model("tiny").unwrap();
+        let k = info.proj_dim;
+        // n deliberately NOT a multiple of tile_q; nv not a multiple of tile_v
+        let (n, nv) = (info.tile_q + 7, info.tile_v + 3);
+        let mut rng = Rng::new(21);
+        let f = FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() };
+        let vf = FeatureMatrix { n: nv, k, data: (0..nv * k).map(|_| rng.normal() as f32).collect() };
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+
+        let path = std::env::temp_dir().join(format!("qless_xla_{}.qlds", std::process::id()));
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        let block = crate::datastore::Datastore::open(&path).unwrap().load_checkpoint(0).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let val = ValFeatures::prepare(&vf, p);
+        let native = crate::influence::native::scores_dense(&block, &val);
+        let xla = scores_xla(&rt, &info, &block, &val).unwrap();
+        assert_eq!(native.len(), xla.len());
+        for (i, (a, b)) in native.iter().zip(&xla).enumerate() {
+            assert!((a - b).abs() < 1e-4, "row {i}: native {a} xla {b}");
+        }
+    }
+}

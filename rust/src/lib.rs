@@ -1,0 +1,37 @@
+//! # QLESS — Quantized Low-rank Gradient Similarity Search
+//!
+//! Rust reproduction of *"QLESS: A Quantized Approach for Data Valuation and
+//! Selection in Large Language Model Fine-Tuning"* (cs.LG 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the data-valuation pipeline coordinator: corpus
+//!   generation, warmup training, sharded gradient-feature extraction,
+//!   quantized gradient datastore, influence scoring, top-p% selection,
+//!   fine-tuning and benchmark evaluation. Python never runs here.
+//! * **L2 (python/compile)** — SimLM (causal transformer + LoRA) fwd/bwd in
+//!   JAX, AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for quantization and
+//!   the cosine-similarity influence matmul, lowered inside the L2 graphs.
+//!
+//! The [`runtime`] module loads `artifacts/*.hlo.txt` through the PJRT C API
+//! (`xla` crate) and executes them from the hot path.
+
+pub mod baselines;
+pub mod config;
+pub mod corpus;
+pub mod data;
+pub mod datastore;
+pub mod eval;
+pub mod experiments;
+pub mod grads;
+pub mod influence;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod select;
+pub mod train;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

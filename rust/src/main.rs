@@ -1,0 +1,202 @@
+//! `qless` — CLI entrypoint for the QLESS reproduction.
+//!
+//! See `qless --help` (config::cli::USAGE) for the command list. All heavy
+//! lifting lives in the library; this binary parses arguments, dispatches,
+//! and renders results.
+
+use anyhow::Result;
+
+use qless::config::cli::{parse_args, Cli, USAGE};
+use qless::corpus::source_counts;
+use qless::eval::Benchmark;
+use qless::pipeline::{Method, Pipeline};
+use qless::quant::Precision;
+use qless::select::{select_top_frac, SourceDistribution};
+use qless::util::table::{human_bytes, pct, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match parse_args(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "list-artifacts" => list_artifacts(cli),
+        "gen-corpus" => gen_corpus(cli),
+        "warmup" => {
+            let mut pipe = Pipeline::new(cli.config.clone())?;
+            let set = pipe.warmup()?;
+            println!(
+                "warmup complete: {} checkpoints in {}/warmup",
+                set.checkpoints.len(),
+                cli.config.run_dir
+            );
+            Ok(())
+        }
+        "extract" => {
+            let mut pipe = Pipeline::new(cli.config.clone())?;
+            let p = Precision::new(cli.config.bits, cli.config.scheme)?;
+            let (ds, bytes) = pipe.build_datastore(p)?;
+            println!(
+                "datastore: {} samples × {} dims × {} checkpoints at {} = {}",
+                ds.n_samples(),
+                ds.header.k,
+                ds.n_checkpoints(),
+                p.label(),
+                human_bytes(bytes)
+            );
+            Ok(())
+        }
+        "score" | "select" => score_select(cli),
+        "eval" => eval_baseline(cli),
+        "decode-demo" => decode_demo(cli),
+        "pipeline" => run_pipeline(cli),
+        "xp" => {
+            let id = cli
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("xp needs an experiment id\n\n{USAGE}"))?;
+            qless::experiments::run(id, &cli.config, cli.fast)
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn list_artifacts(cli: &Cli) -> Result<()> {
+    let rt = qless::runtime::Runtime::new(std::path::Path::new(&cli.config.artifacts))?;
+    println!("platform: {}", rt.platform());
+    let mut t = Table::new("models", &["model", "d_base", "d_lora", "k", "seq", "artifacts"]);
+    for (name, m) in &rt.manifest.models {
+        t.row(vec![
+            name.clone(),
+            m.d_base.to_string(),
+            m.d_lora.to_string(),
+            m.proj_dim.to_string(),
+            m.seq.to_string(),
+            m.artifacts.len().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn gen_corpus(cli: &Cli) -> Result<()> {
+    let pipe = Pipeline::new(cli.config.clone())?;
+    let counts = source_counts(&pipe.corpus.samples);
+    let mut t = Table::new(
+        &format!("corpus ({} samples, seed {})", pipe.corpus.len(), cli.config.seed),
+        &["source", "count", "fraction", "example"],
+    );
+    for (src, count) in counts {
+        let ex = pipe
+            .corpus
+            .samples
+            .iter()
+            .find(|s| s.source == src)
+            .map(|s| format!("{} → {}", s.prompt, s.answer))
+            .unwrap_or_default();
+        t.row(vec![
+            src.to_string(),
+            count.to_string(),
+            format!("{:.1}%", 100.0 * count as f64 / pipe.corpus.len() as f64),
+            ex.chars().take(60).collect(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn score_select(cli: &Cli) -> Result<()> {
+    let mut pipe = Pipeline::new(cli.config.clone())?;
+    let p = Precision::new(cli.config.bits, cli.config.scheme)?;
+    let (ds, _) = pipe.build_datastore(p)?;
+    for bench in Benchmark::ALL {
+        let scores = pipe.influence_scores(&ds, bench)?;
+        let sel = select_top_frac(&scores, cli.config.select_frac);
+        let dist = SourceDistribution::of(&pipe.corpus.samples, &sel);
+        println!("{bench}: top {} — {}", sel.len(), dist.render());
+        let top = &sel[..sel.len().min(3)];
+        for &i in top {
+            let s = &pipe.corpus.samples[i];
+            println!("    [{:>7.4}] {} → {}", scores[i], s.prompt, s.answer);
+        }
+    }
+    Ok(())
+}
+
+fn eval_baseline(cli: &Cli) -> Result<()> {
+    let mut pipe = Pipeline::new(cli.config.clone())?;
+    let base = pipe.base()?;
+    let lora = qless::model::init_lora(&pipe.info, cli.config.seed);
+    let scores = qless::eval::harness::evaluate(
+        &pipe.rt,
+        &pipe.info,
+        &base,
+        &lora,
+        &pipe.world,
+        cli.config.eval_per_task,
+        cli.config.seed,
+    )?;
+    for (name, v) in &scores.scores {
+        println!("{name}: {}", pct(*v));
+    }
+    println!("avg: {}", pct(scores.average()));
+    Ok(())
+}
+
+/// Print greedy decodes of the pretrained base (+fresh LoRA) on a few
+/// benchmark tasks — the fastest way to eyeball generation quality.
+fn decode_demo(cli: &Cli) -> Result<()> {
+    let mut pipe = Pipeline::new(cli.config.clone())?;
+    let base = pipe.base()?;
+    let lora = qless::model::init_lora(&pipe.info, cli.config.seed);
+    let tok = qless::corpus::Tokenizer::default();
+    let base_buf = pipe.rt.upload_f32(&base, &[pipe.info.d_base])?;
+    for bench in Benchmark::ALL {
+        let tasks = qless::eval::benchmarks::test_tasks(bench, &pipe.world, 4, cli.config.seed);
+        let prompts: Vec<_> = tasks.iter().map(|t| t.sample.clone()).collect();
+        let outs = qless::eval::decoder::greedy_decode(
+            &pipe.rt, &pipe.info, &base_buf, &lora, &prompts, &tok, 24,
+        )?;
+        println!("--- {bench} ---");
+        for (t, o) in tasks.iter().zip(&outs) {
+            println!("  prompt: {}", t.sample.prompt);
+            println!("  gold:   {:?}   decoded: {:?}", t.sample.answer, o);
+        }
+    }
+    Ok(())
+}
+
+fn run_pipeline(cli: &Cli) -> Result<()> {
+    let mut pipe = Pipeline::new(cli.config.clone())?;
+    let p = Precision::new(cli.config.bits, cli.config.scheme)?;
+    let r = pipe.run_method(Method::Qless(p))?;
+    let mut t = Table::new(
+        &format!("pipeline result — {}", r.label),
+        &["benchmark", "score", "selection composition"],
+    );
+    for bench in Benchmark::ALL {
+        t.row(vec![
+            bench.name().to_string(),
+            pct(r.scores[bench.name()]),
+            r.distributions[bench.name()].render(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("average: {}   datastore: {}", pct(r.average), human_bytes(r.storage_bytes));
+    Ok(())
+}

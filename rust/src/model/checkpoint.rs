@@ -1,0 +1,207 @@
+//! Binary checkpoint format: LoRA params + Adam state + the LR weight η_i
+//! each warmup epoch contributes to influence aggregation (paper Eq. 7).
+//!
+//! Layout: magic "QLCK" | version u32 | d_lora u64 | step u64 | eta f32 |
+//! lora | m | v (f32 little-endian). The frozen base is stored once per run
+//! as a bare f32 dump (`base.bin`) since it never changes.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: [u8; 4] = *b"QLCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Optimizer step count at save time (1-based, drives bias correction).
+    pub step: u64,
+    /// Learning rate at this checkpoint — the η_i of paper Eq. 7.
+    pub eta: f32,
+    pub lora: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn fresh(d_lora: usize, lora: Vec<f32>) -> Checkpoint {
+        assert_eq!(lora.len(), d_lora);
+        Checkpoint { step: 0, eta: 0.0, lora, m: vec![0.0; d_lora], v: vec![0.0; d_lora] }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.lora.len() as u64).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&self.eta.to_le_bytes())?;
+        for part in [&self.lora, &self.m, &self.v] {
+            write_f32s(&mut f, part)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut hdr = [0u8; 4 + 4 + 8 + 8 + 4];
+        f.read_exact(&mut hdr)?;
+        if hdr[0..4] != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let version = u32::from_le_bytes(hdr[4..8].try_into()?);
+        if version != VERSION {
+            bail!("checkpoint version {version} != {VERSION}");
+        }
+        let d = u64::from_le_bytes(hdr[8..16].try_into()?) as usize;
+        let step = u64::from_le_bytes(hdr[16..24].try_into()?);
+        let eta = f32::from_le_bytes(hdr[24..28].try_into()?);
+        let lora = read_f32s(&mut f, d)?;
+        let m = read_f32s(&mut f, d)?;
+        let v = read_f32s(&mut f, d)?;
+        Ok(Checkpoint { step, eta, lora, m, v })
+    }
+}
+
+/// The warmup run's outputs: base params + the N epoch checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointSet {
+    pub base: Vec<f32>,
+    pub checkpoints: Vec<Checkpoint>,
+}
+
+impl CheckpointSet {
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join("base.bin"))?);
+        write_f32s(&mut f, &self.base)?;
+        for (i, c) in self.checkpoints.iter().enumerate() {
+            c.save(&Self::ckpt_path(dir, i))?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: &Path, d_base: usize) -> Result<CheckpointSet> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(dir.join("base.bin"))
+                .with_context(|| format!("opening {dir:?}/base.bin — run warmup first"))?,
+        );
+        let base = read_f32s(&mut f, d_base)?;
+        let mut checkpoints = Vec::new();
+        for i in 0.. {
+            let p = Self::ckpt_path(dir, i);
+            if !p.exists() {
+                break;
+            }
+            checkpoints.push(Checkpoint::load(&p)?);
+        }
+        if checkpoints.is_empty() {
+            bail!("no checkpoints in {dir:?}");
+        }
+        Ok(CheckpointSet { base, checkpoints })
+    }
+
+    pub fn ckpt_path(dir: &Path, i: usize) -> PathBuf {
+        dir.join(format!("ckpt_{i:02}.qlck"))
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // bulk little-endian write
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf).context("checkpoint truncated")?;
+    Ok(buf.chunks(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "qless_ck_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = tmpdir();
+        let c = Checkpoint {
+            step: 42,
+            eta: 1.5e-3,
+            lora: vec![1.0, -2.0, 3.5],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+        };
+        let p = dir.join("c.qlck");
+        c.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn set_roundtrip_and_ordering() {
+        let dir = tmpdir();
+        let set = CheckpointSet {
+            base: vec![9.0; 7],
+            checkpoints: (0..3)
+                .map(|i| Checkpoint {
+                    step: i as u64 + 1,
+                    eta: i as f32,
+                    lora: vec![i as f32; 4],
+                    m: vec![0.0; 4],
+                    v: vec![0.0; 4],
+                })
+                .collect(),
+        };
+        set.save(&dir).unwrap();
+        let back = CheckpointSet::load(&dir, 7).unwrap();
+        assert_eq!(back.base, set.base);
+        assert_eq!(back.checkpoints.len(), 3);
+        for (a, b) in back.checkpoints.iter().zip(&set.checkpoints) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_has_zero_state() {
+        let c = Checkpoint::fresh(4, vec![1.0; 4]);
+        assert_eq!(c.m, vec![0.0; 4]);
+        assert_eq!(c.step, 0);
+    }
+
+    #[test]
+    fn load_missing_is_informative() {
+        let err = CheckpointSet::load(Path::new("/nonexistent"), 4).unwrap_err();
+        assert!(format!("{err:#}").contains("warmup"));
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = tmpdir();
+        let p = dir.join("bad.qlck");
+        std::fs::write(&p, b"NOPE............................").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,126 @@
+//! SimLM parameter handling on the Rust side.
+//!
+//! The L2 graphs treat parameters as flat f32 vectors; this module owns
+//! their initialization (bit-matching `model.init_*_flat` is not required —
+//! init happens on whichever side creates the checkpoint, and all tests of
+//! numerical parity run through the AOT graphs), the shape bookkeeping
+//! mirrored from the manifest, and binary checkpoint (de)serialization.
+
+pub mod checkpoint;
+
+pub use checkpoint::{Checkpoint, CheckpointSet};
+
+use crate::runtime::ModelInfo;
+use crate::util::Rng;
+
+/// Initialize the frozen base parameters (scaled-normal matrices, unit
+/// RMSNorm gains) following the same scheme as `model.init_base_flat`.
+pub fn init_base(info: &ModelInfo, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fork(0xBA5E);
+    let mut out = Vec::with_capacity(info.d_base);
+    let (v, d, f) = (info.vocab, info.d_model, info.d_ff);
+    // embed [V, D]
+    push_normal(&mut out, v * d, 0.05, &mut rng);
+    for _ in 0..info.n_layers {
+        for _ in 0..4 {
+            // wq wk wv wo [D, D], 1/sqrt(fan_in)
+            push_normal(&mut out, d * d, 1.0 / (d as f32).sqrt(), &mut rng);
+        }
+        push_ones(&mut out, d); // ln1
+        push_normal(&mut out, d * f, 1.0 / (d as f32).sqrt(), &mut rng); // w1
+        push_normal(&mut out, f * d, 1.0 / (f as f32).sqrt(), &mut rng); // w2
+        push_ones(&mut out, d); // ln2
+    }
+    push_ones(&mut out, d); // lnf
+    assert_eq!(out.len(), info.d_base, "base param count mismatch");
+    out
+}
+
+/// Initialize LoRA params: A ~ N(0, 1/r), B = 0 (adapters start as no-op).
+pub fn init_lora(info: &ModelInfo, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fork(0x10BA);
+    let (d, r) = (info.d_model, info.lora_rank);
+    let mut out = Vec::with_capacity(info.d_lora);
+    for _ in 0..info.n_layers {
+        for _ in 0..4 {
+            push_normal(&mut out, d * r, 1.0 / (r as f32).sqrt(), &mut rng); // A
+            push_zeros(&mut out, r * d); // B
+        }
+    }
+    assert_eq!(out.len(), info.d_lora, "lora param count mismatch");
+    out
+}
+
+fn push_normal(out: &mut Vec<f32>, n: usize, scale: f32, rng: &mut Rng) {
+    out.extend((0..n).map(|_| rng.normal() as f32 * scale));
+}
+
+fn push_ones(out: &mut Vec<f32>, n: usize) {
+    out.extend(std::iter::repeat_n(1.0f32, n));
+}
+
+fn push_zeros(out: &mut Vec<f32>, n: usize) {
+    out.extend(std::iter::repeat_n(0.0f32, n));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn tiny() -> Option<ModelInfo> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json")
+            .exists()
+            .then(|| Manifest::load(&p).unwrap().model("tiny").unwrap().clone())
+    }
+
+    #[test]
+    fn init_sizes_match_manifest() {
+        let Some(info) = tiny() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(init_base(&info, 1).len(), info.d_base);
+        assert_eq!(init_lora(&info, 1).len(), info.d_lora);
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let Some(info) = tiny() else {
+            return;
+        };
+        assert_eq!(init_base(&info, 1), init_base(&info, 1));
+        assert_ne!(init_base(&info, 1), init_base(&info, 2));
+    }
+
+    #[test]
+    fn lora_b_blocks_are_zero() {
+        let Some(info) = tiny() else {
+            return;
+        };
+        let lora = init_lora(&info, 3);
+        let (d, r) = (info.d_model, info.lora_rank);
+        let mut off = 0;
+        for _ in 0..info.n_layers * 4 {
+            let a = &lora[off..off + d * r];
+            assert!(a.iter().any(|&x| x != 0.0));
+            off += d * r;
+            let b = &lora[off..off + r * d];
+            assert!(b.iter().all(|&x| x == 0.0));
+            off += r * d;
+        }
+    }
+
+    #[test]
+    fn base_norm_gains_are_ones() {
+        let Some(info) = tiny() else {
+            return;
+        };
+        let base = init_base(&info, 4);
+        // lnf is the last d_model entries
+        let lnf = &base[info.d_base - info.d_model..];
+        assert!(lnf.iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,20 @@
+//! The end-to-end QLESS pipeline coordinator (Fig. 2 of the paper):
+//!
+//! ```text
+//! pretrain base ─► warmup (LoRA, 5%, N epochs → N checkpoints)
+//!    ─► per-checkpoint gradient features (train: Adam·R, val: SGD·R)
+//!    ─► quantize → gradient datastore (per precision)
+//!    ─► influence scores per benchmark ─► top-p% selection
+//!    ─► LoRA fine-tune on the selection ─► benchmark eval
+//! ```
+//!
+//! [`Pipeline`] owns the caches that make experiment grids affordable: the
+//! pretrained base and warmup checkpoints are computed once per
+//! (model, seed); raw fp32 features are extracted once and re-quantized
+//! per precision; validation features are shared across precisions.
+
+pub mod report;
+pub mod runner;
+
+pub use report::Report;
+pub use runner::{Method, MethodResult, Pipeline};

@@ -1,0 +1,89 @@
+//! Experiment report emitter: every `xp` harness prints its paper-style
+//! table to the console and writes `reports/<id>.md` + `reports/<id>.json`
+//! so EXPERIMENTS.md can reference stable artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+    pub json: Json,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            tables: Vec::new(),
+            notes: Vec::new(),
+            json: Json::obj(),
+        }
+    }
+
+    pub fn add_table(&mut self, t: Table) -> &mut Self {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("# {} — {}\n\n", self.id, self.title);
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("> {n}\n"));
+        }
+        out
+    }
+
+    /// Print to stdout and persist under `reports/`.
+    pub fn emit(&self, reports_dir: &Path) -> Result<PathBuf> {
+        let text = self.render();
+        println!("{text}");
+        std::fs::create_dir_all(reports_dir)?;
+        let md = reports_dir.join(format!("{}.md", self.id));
+        std::fs::write(&md, &text)?;
+        let json_path = reports_dir.join(format!("{}.json", self.id));
+        std::fs::write(&json_path, self.json.encode_pretty())?;
+        Ok(md)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_emit() {
+        let mut r = Report::new("test_tbl", "smoke");
+        let mut t = Table::new("rows", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        r.add_table(t);
+        r.note("a note");
+        r.json.set("x", 1usize);
+        let dir = std::env::temp_dir().join(format!("qless_rep_{}", std::process::id()));
+        let md = r.emit(&dir).unwrap();
+        let text = std::fs::read_to_string(md).unwrap();
+        assert!(text.contains("# test_tbl"));
+        assert!(text.contains("| 1 | 2 |"));
+        assert!(text.contains("> a note"));
+        let j = std::fs::read_to_string(dir.join("test_tbl.json")).unwrap();
+        assert!(Json::parse(&j).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

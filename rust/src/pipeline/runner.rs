@@ -1,0 +1,448 @@
+//! Pipeline runner: stage orchestration + caching. This is the L3 system
+//! the experiment harnesses (`xp_*`) and examples drive.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::config::Config;
+use crate::corpus::{generate_corpus, Tokenizer, World};
+use crate::data::Dataset;
+use crate::datastore::{Datastore, DatastoreWriter};
+use crate::eval::benchmarks::{validation_samples, Benchmark};
+use crate::eval::harness::{evaluate, BenchScores};
+use crate::grads::{extract_train_features, extract_val_features, FeatureMatrix, Projector};
+use crate::influence::{score_datastore, ScoreOpts};
+use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
+use crate::quant::weights::quantize_weights;
+use crate::quant::Precision;
+use crate::runtime::{ModelInfo, Runtime};
+use crate::select::{select_top_frac, SourceDistribution};
+use crate::train::{Schedule, Trainer};
+use crate::util::Rng;
+use crate::info;
+
+/// A data-selection method from the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    Random100,
+    RandomFrac,
+    /// LESS (bits=16) and QLESS (bits<16) share the full pipeline.
+    Qless(Precision),
+}
+
+impl Method {
+    pub fn label(&self, cfg: &Config) -> String {
+        match self {
+            Method::Random100 => "random 100%".into(),
+            Method::RandomFrac => format!("random {:.0}%", cfg.select_frac * 100.0),
+            Method::Qless(p) if p.bits == 16 => "LESS 16-bit".into(),
+            Method::Qless(p) => format!("QLESS {}", p.label()),
+        }
+    }
+}
+
+/// Everything a method run produces (one row of Table 1).
+#[derive(Debug, Clone)]
+pub struct MethodResult {
+    pub label: String,
+    /// Benchmark → score (fraction).
+    pub scores: BTreeMap<&'static str, f64>,
+    pub average: f64,
+    /// Measured datastore bytes (0 for random baselines).
+    pub storage_bytes: u64,
+    /// Benchmark → selected-subset source composition (Fig. 5).
+    pub distributions: BTreeMap<&'static str, SourceDistribution>,
+    /// Benchmark → selected indices.
+    pub selections: BTreeMap<&'static str, Vec<usize>>,
+    /// Fine-tune loss curves (benchmark → per-epoch mean losses).
+    pub loss_curves: BTreeMap<&'static str, Vec<f64>>,
+}
+
+pub struct Pipeline {
+    pub cfg: Config,
+    pub rt: Runtime,
+    pub info: ModelInfo,
+    pub tok: Tokenizer,
+    pub world: World,
+    pub corpus: Dataset,
+    base: Option<Vec<f32>>,
+    warmup: Option<CheckpointSet>,
+    /// Raw fp32 train features per checkpoint (shared across precisions).
+    features: Option<Vec<FeatureMatrix>>,
+    /// (benchmark → per-checkpoint validation features).
+    val_features: BTreeMap<&'static str, Vec<FeatureMatrix>>,
+}
+
+impl Pipeline {
+    pub fn new(cfg: Config) -> Result<Pipeline> {
+        cfg.validate()?;
+        let rt = Runtime::new(std::path::Path::new(&cfg.artifacts))?;
+        let info = rt.model(&cfg.model)?;
+        let tok = Tokenizer::default();
+        let world = World::generate(cfg.seed);
+        info!(
+            "pipeline: model={} d_base={} d_lora={} k={} corpus={}",
+            info.name, info.d_base, info.d_lora, info.proj_dim, cfg.corpus_size
+        );
+        let corpus = Dataset::encode(
+            generate_corpus(cfg.corpus_size, cfg.seed, &tok, info.seq),
+            &tok,
+            info.seq,
+        );
+        Ok(Pipeline {
+            cfg,
+            rt,
+            info,
+            tok,
+            world,
+            corpus,
+            base: None,
+            warmup: None,
+            features: None,
+            val_features: BTreeMap::new(),
+        })
+    }
+
+    pub fn run_dir(&self) -> PathBuf {
+        PathBuf::from(&self.cfg.run_dir)
+    }
+
+    // ------------------------------------------------------------------
+    // stage 0: pretrained base (the stand-in for the paper's LLM)
+    // ------------------------------------------------------------------
+
+    /// Pretrain the base on a *generic* corpus (disjoint seed from the
+    /// selection corpus) so LoRA fine-tunes start from a model that knows
+    /// the character-level "language". Cached on disk per (model, seed).
+    pub fn base(&mut self) -> Result<Vec<f32>> {
+        if let Some(b) = &self.base {
+            return Ok(b.clone());
+        }
+        let path = self.run_dir().join("pretrain").join("base.bin");
+        if path.exists() {
+            let set = CheckpointSet::load(path.parent().unwrap(), self.info.d_base);
+            if let Ok(set) = set {
+                info!("loaded cached pretrained base");
+                self.base = Some(set.base.clone());
+                return Ok(set.base);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let pre_corpus = Dataset::encode(
+            generate_corpus(
+                self.cfg.corpus_size.clamp(2048, 6144),
+                self.cfg.seed ^ 0x11BE_7E57,
+                &self.tok,
+                self.info.seq,
+            ),
+            &self.tok,
+            self.info.seq,
+        );
+        let mut base = init_base(&self.info, self.cfg.seed);
+        // Pretraining stands in for the paper's pretrained LLM: long enough
+        // that the base has the "language" + task formats (DESIGN.md §2);
+        // it is cached on disk, so the cost is paid once per (model, seed).
+        let epochs = 10usize;
+        let steps = epochs * pre_corpus.len().div_ceil(self.info.batch_train);
+        let sched = Schedule::new(3e-3, steps, 0.05);
+        self.pretrain(&mut base, &pre_corpus, epochs, &sched)?;
+        info!("pretrained base in {:.1}s ({} samples × {epochs} epochs)", t0.elapsed().as_secs_f64(), pre_corpus.len());
+        // persist (reuse CheckpointSet layout with a dummy checkpoint)
+        let set = CheckpointSet {
+            base: base.clone(),
+            checkpoints: vec![Checkpoint::fresh(self.info.d_lora, init_lora(&self.info, self.cfg.seed))],
+        };
+        set.save(&self.run_dir().join("pretrain"))?;
+        self.base = Some(base.clone());
+        Ok(base)
+    }
+
+    fn pretrain(
+        &self,
+        base: &mut Vec<f32>,
+        data: &Dataset,
+        epochs: usize,
+        sched: &Schedule,
+    ) -> Result<()> {
+        let exec = self.rt.exec(&self.info, "pretrain_step")?;
+        let (b, s, db) = (self.info.batch_train, self.info.seq, self.info.d_base);
+        let mut m = vec![0f32; db];
+        let mut v = vec![0f32; db];
+        let mut rng = Rng::new(self.cfg.seed).fork(0x11BE);
+        let mut t = 0u64;
+        for epoch in 0..epochs {
+            let mut ep_loss = 0f64;
+            let mut nb = 0;
+            for batch in crate::data::Batcher::shuffled(data, b, &mut rng) {
+                let lr = sched.lr(t as usize);
+                t += 1;
+                let out = exec.run(&[
+                    crate::runtime::Arg::F32(base, &[db]),
+                    crate::runtime::Arg::F32(&m, &[db]),
+                    crate::runtime::Arg::F32(&v, &[db]),
+                    crate::runtime::Arg::ScalarF32(t as f32),
+                    crate::runtime::Arg::I32(&batch.tokens, &[b, s]),
+                    crate::runtime::Arg::F32(&batch.masks, &[b, s]),
+                    crate::runtime::Arg::ScalarF32(lr as f32),
+                ])?;
+                let [b2, m2, v2, loss]: [Vec<f32>; 4] =
+                    out.try_into().map_err(|_| anyhow::anyhow!("pretrain_step arity"))?;
+                *base = b2;
+                m = m2;
+                v = v2;
+                ep_loss += loss[0] as f64;
+                nb += 1;
+            }
+            info!("pretrain epoch {epoch}: loss {:.4}", ep_loss / nb.max(1) as f64);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // stage 1: warmup (LESS step 1)
+    // ------------------------------------------------------------------
+
+    pub fn warmup(&mut self) -> Result<CheckpointSet> {
+        if let Some(w) = &self.warmup {
+            return Ok(w.clone());
+        }
+        let dir = self.run_dir().join("warmup");
+        let base = self.base()?;
+        if dir.join("base.bin").exists() {
+            if let Ok(set) = CheckpointSet::load(&dir, self.info.d_base) {
+                if set.checkpoints.len() == self.cfg.warmup_epochs {
+                    info!("loaded cached warmup checkpoints ({})", set.checkpoints.len());
+                    self.warmup = Some(set.clone());
+                    return Ok(set);
+                }
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let n_warm = ((self.corpus.len() as f64) * self.cfg.warmup_frac).ceil() as usize;
+        let warm_idx = baselines::random_frac(self.corpus.len(), self.cfg.warmup_frac, self.cfg.seed);
+        let warm = self.corpus.subset(&warm_idx);
+        info!("warmup: {n_warm} samples × {} epochs", self.cfg.warmup_epochs);
+        let trainer = Trainer::new(&self.rt, &self.info, &base)?;
+        let steps = self.cfg.warmup_epochs * warm.len().div_ceil(self.info.batch_train);
+        let sched = Schedule::new(self.cfg.lr, steps, self.cfg.lr_warmup_frac);
+        let mut ckpt = Checkpoint::fresh(self.info.d_lora, init_lora(&self.info, self.cfg.seed));
+        let mut snaps = Vec::new();
+        trainer.train(&warm, &mut ckpt, self.cfg.warmup_epochs, &sched, self.cfg.seed, Some(&mut snaps))?;
+        let set = CheckpointSet { base, checkpoints: snaps };
+        set.save(&dir)?;
+        info!("warmup done in {:.1}s", t0.elapsed().as_secs_f64());
+        self.warmup = Some(set.clone());
+        Ok(set)
+    }
+
+    // ------------------------------------------------------------------
+    // stage 2: gradient features (LESS step 2) — extracted once as fp32
+    // ------------------------------------------------------------------
+
+    pub fn projector(&self) -> Projector {
+        Projector::new(self.cfg.seed, self.info.d_lora, self.info.proj_dim)
+    }
+
+    /// Raw fp32 train features per checkpoint. Model-bits (QLoRA ablation)
+    /// applies here: the base weights are quantized for extraction only.
+    pub fn train_features(&mut self) -> Result<Vec<FeatureMatrix>> {
+        if let Some(f) = &self.features {
+            return Ok(f.clone());
+        }
+        let set = self.warmup()?;
+        let proj = self.projector();
+        let base_q = quantize_weights(&set.base, self.cfg.model_bits);
+        let t0 = std::time::Instant::now();
+        let mut feats = Vec::new();
+        for (ci, ckpt) in set.checkpoints.iter().enumerate() {
+            info!("extracting train features @ checkpoint {ci}");
+            feats.push(extract_train_features(
+                &self.rt,
+                &self.info,
+                &base_q,
+                ckpt,
+                &self.corpus,
+                &proj,
+                self.cfg.workers,
+            )?);
+        }
+        info!("train feature extraction: {:.1}s total", t0.elapsed().as_secs_f64());
+        self.features = Some(feats.clone());
+        Ok(feats)
+    }
+
+    /// Per-checkpoint SGD validation features for one benchmark.
+    pub fn val_features(&mut self, bench: Benchmark) -> Result<Vec<FeatureMatrix>> {
+        if let Some(f) = self.val_features.get(bench.name()) {
+            return Ok(f.clone());
+        }
+        let set = self.warmup()?;
+        let proj = self.projector();
+        let base_q = quantize_weights(&set.base, self.cfg.model_bits);
+        let samples = validation_samples(bench, &self.world, self.cfg.val_per_task, self.cfg.seed);
+        let data = Dataset::encode(samples, &self.tok, self.info.seq);
+        let mut feats = Vec::new();
+        for ckpt in &set.checkpoints {
+            feats.push(extract_val_features(
+                &self.rt,
+                &self.info,
+                &base_q,
+                ckpt,
+                &data,
+                &proj,
+                self.cfg.workers,
+            )?);
+        }
+        self.val_features.insert(bench.name(), feats.clone());
+        Ok(feats)
+    }
+
+    // ------------------------------------------------------------------
+    // stage 3: quantized datastore (QLESS §3.1)
+    // ------------------------------------------------------------------
+
+    /// Build (or reuse) the gradient datastore at a precision; returns the
+    /// opened datastore + its measured size.
+    pub fn build_datastore(&mut self, precision: Precision) -> Result<(Datastore, u64)> {
+        let path = self
+            .run_dir()
+            .join(format!("datastore_{}b_{}.qlds", precision.bits, precision.scheme));
+        if path.exists() {
+            if let Ok(ds) = Datastore::open(&path) {
+                let bytes = ds.file_bytes();
+                info!("reusing cached datastore {}", precision.label());
+                return Ok((ds, bytes));
+            }
+        }
+        let feats = self.train_features()?;
+        let set = self.warmup()?;
+        let (n, k) = (self.corpus.len(), self.info.proj_dim);
+        let t0 = std::time::Instant::now();
+        let mut w = DatastoreWriter::create(&path, precision, n, k, feats.len())?;
+        for (ci, f) in feats.iter().enumerate() {
+            w.begin_checkpoint(set.checkpoints[ci].eta)?;
+            for i in 0..n {
+                w.append_features(f.row(i))?;
+            }
+            w.end_checkpoint()?;
+        }
+        let bytes = w.finalize()?;
+        info!(
+            "datastore {}: {} in {:.1}s",
+            precision.label(),
+            crate::util::table::human_bytes(bytes),
+            t0.elapsed().as_secs_f64()
+        );
+        let ds = Datastore::open(&path)?;
+        Ok((ds, bytes))
+    }
+
+    // ------------------------------------------------------------------
+    // stage 4+5: score & select (QLESS §3.2, LESS step 3)
+    // ------------------------------------------------------------------
+
+    /// Influence scores of every corpus sample for one benchmark at one
+    /// precision.
+    pub fn influence_scores(&mut self, ds: &Datastore, bench: Benchmark) -> Result<Vec<f32>> {
+        let vals = self.val_features(bench)?;
+        let opts = ScoreOpts { use_xla: self.cfg.xla_score };
+        score_datastore(ds, &vals, opts, Some((&self.rt, &self.info)))
+    }
+
+    // ------------------------------------------------------------------
+    // stage 6+7: fine-tune & evaluate
+    // ------------------------------------------------------------------
+
+    /// LoRA fine-tune the pretrained base on a subset; returns the adapter
+    /// and the per-epoch loss curve.
+    pub fn finetune(&mut self, indices: &[usize], seed: u64) -> Result<(Vec<f32>, Vec<f64>)> {
+        let base = self.base()?;
+        let sub = self.corpus.subset(indices);
+        let trainer = Trainer::new(&self.rt, &self.info, &base)?;
+        let steps = self.cfg.finetune_epochs * sub.len().div_ceil(self.info.batch_train);
+        let sched = Schedule::new(self.cfg.lr, steps, self.cfg.lr_warmup_frac);
+        let mut ckpt = Checkpoint::fresh(self.info.d_lora, init_lora(&self.info, seed));
+        let report = trainer.train(&sub, &mut ckpt, self.cfg.finetune_epochs, &sched, seed, None)?;
+        Ok((ckpt.lora, report.epoch_losses))
+    }
+
+    pub fn evaluate_lora(&mut self, lora: &[f32]) -> Result<BenchScores> {
+        let base = self.base()?;
+        evaluate(
+            &self.rt,
+            &self.info,
+            &base,
+            lora,
+            &self.world,
+            self.cfg.eval_per_task,
+            self.cfg.seed,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // full method runs (one Table-1 row)
+    // ------------------------------------------------------------------
+
+    pub fn run_method(&mut self, method: Method) -> Result<MethodResult> {
+        let label = method.label(&self.cfg);
+        info!("=== method: {label} ===");
+        let mut result = MethodResult {
+            label: label.clone(),
+            scores: BTreeMap::new(),
+            average: 0.0,
+            storage_bytes: 0,
+            distributions: BTreeMap::new(),
+            selections: BTreeMap::new(),
+            loss_curves: BTreeMap::new(),
+        };
+        match method {
+            Method::Random100 | Method::RandomFrac => {
+                let indices = match method {
+                    Method::Random100 => baselines::all_indices(self.corpus.len()),
+                    _ => baselines::random_frac(
+                        self.corpus.len(),
+                        self.cfg.select_frac,
+                        self.cfg.seed ^ 0xBA5E11,
+                    ),
+                };
+                let (lora, curve) = self.finetune(&indices, self.cfg.seed)?;
+                let scores = self.evaluate_lora(&lora)?;
+                for bench in Benchmark::ALL {
+                    result.scores.insert(bench.name(), scores.get(bench));
+                    result
+                        .distributions
+                        .insert(bench.name(), SourceDistribution::of(&self.corpus.samples, &indices));
+                    result.loss_curves.insert(bench.name(), curve.clone());
+                    result.selections.insert(bench.name(), indices.clone());
+                }
+            }
+            Method::Qless(precision) => {
+                let (ds, bytes) = self.build_datastore(precision)?;
+                result.storage_bytes = bytes;
+                for bench in Benchmark::ALL {
+                    let scores = self.influence_scores(&ds, bench)?;
+                    let sel = select_top_frac(&scores, self.cfg.select_frac);
+                    let dist = SourceDistribution::of(&self.corpus.samples, &sel);
+                    info!("{label} / {bench}: selected {} — {}", sel.len(), dist.render());
+                    let (lora, curve) = self.finetune(&sel, self.cfg.seed)?;
+                    let bench_scores = self.evaluate_lora(&lora)?;
+                    result.scores.insert(bench.name(), bench_scores.get(bench));
+                    result.distributions.insert(bench.name(), dist);
+                    result.loss_curves.insert(bench.name(), curve);
+                    result.selections.insert(bench.name(), sel);
+                }
+            }
+        }
+        result.average =
+            result.scores.values().sum::<f64>() / result.scores.len().max(1) as f64;
+        info!(
+            "{label}: avg {:.2}% {:?}",
+            result.average * 100.0,
+            result.scores.iter().map(|(k, v)| format!("{k}={:.1}%", v * 100.0)).collect::<Vec<_>>()
+        );
+        Ok(result)
+    }
+}

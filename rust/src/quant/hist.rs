@@ -1,0 +1,159 @@
+//! Quantization-bin occupancy histograms — reproduces paper Figure 3
+//! (absmax vs absmean value distributions; the zero-bin sparsity effect).
+
+use super::scheme::{quantize_row, Scheme};
+
+/// Occupancy counts over the 2α+1 integer bins of a bit width (or the two
+/// bins of sign quantization).
+#[derive(Debug, Clone)]
+pub struct BinHistogram {
+    pub bits: u8,
+    pub scheme: Scheme,
+    /// counts[i] = occurrences of code (i − α); for 1-bit: [−1, +1].
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl BinHistogram {
+    pub fn new(bits: u8, scheme: Scheme) -> BinHistogram {
+        let nbins = if bits == 1 { 2 } else { (1usize << bits) - 1 };
+        BinHistogram { bits, scheme, counts: vec![0; nbins], total: 0 }
+    }
+
+    pub fn alpha(&self) -> i32 {
+        if self.bits == 1 {
+            1
+        } else {
+            (1i32 << (self.bits - 1)) - 1
+        }
+    }
+
+    /// Quantize a feature row with this histogram's scheme and accumulate.
+    pub fn add_row(&mut self, g: &[f32]) {
+        let q = quantize_row(g, self.bits, self.scheme);
+        self.add_codes(&q.codes);
+    }
+
+    pub fn add_codes(&mut self, codes: &[i8]) {
+        let alpha = self.alpha();
+        for &c in codes {
+            let idx = if self.bits == 1 {
+                usize::from(c > 0)
+            } else {
+                (c as i32 + alpha) as usize
+            };
+            self.counts[idx] += 1;
+            self.total += 1;
+        }
+    }
+
+    /// Fraction of codes in the zero bin (the paper's sparsity measure).
+    /// 1-bit has no zero bin → always 0.
+    pub fn zero_bin_frac(&self) -> f64 {
+        if self.bits == 1 || self.total == 0 {
+            return 0.0;
+        }
+        self.counts[self.alpha() as usize] as f64 / self.total as f64
+    }
+
+    /// Fraction of nonzero codes ("density" of the representation).
+    pub fn density(&self) -> f64 {
+        1.0 - self.zero_bin_frac()
+    }
+
+    /// Render as `code -> fraction` rows (Fig. 3 series).
+    pub fn rows(&self) -> Vec<(i32, f64)> {
+        let alpha = self.alpha();
+        if self.bits == 1 {
+            return vec![
+                (-1, self.counts[0] as f64 / self.total.max(1) as f64),
+                (1, self.counts[1] as f64 / self.total.max(1) as f64),
+            ];
+        }
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as i32 - alpha, c as f64 / self.total.max(1) as f64))
+            .collect()
+    }
+
+    /// Sparkline-ish ASCII rendering for console reports.
+    pub fn ascii(&self) -> String {
+        let rows = self.rows();
+        let max = rows.iter().map(|r| r.1).fold(0.0, f64::max).max(1e-12);
+        rows.iter()
+            .map(|(code, frac)| {
+                let bar = "#".repeat((frac / max * 40.0).round() as usize);
+                format!("{code:>5}: {bar} {:.1}%", frac * 100.0)
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn gaussian_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn bin_count_shapes() {
+        assert_eq!(BinHistogram::new(1, Scheme::Sign).counts.len(), 2);
+        assert_eq!(BinHistogram::new(2, Scheme::Absmax).counts.len(), 3);
+        assert_eq!(BinHistogram::new(4, Scheme::Absmax).counts.len(), 15);
+        assert_eq!(BinHistogram::new(8, Scheme::Absmax).counts.len(), 255);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut h = BinHistogram::new(4, Scheme::Absmax);
+        h.add_row(&gaussian_row(256, 1));
+        h.add_row(&gaussian_row(256, 2));
+        assert_eq!(h.total, 512);
+        assert_eq!(h.counts.iter().sum::<u64>(), 512);
+    }
+
+    #[test]
+    fn paper_fig3_absmax_sparser_than_absmean() {
+        // Gaussian features at 2-bit: absmax puts most mass in the zero bin,
+        // absmean pushes it out (paper §5).
+        let mut hmax = BinHistogram::new(2, Scheme::Absmax);
+        let mut hmean = BinHistogram::new(2, Scheme::Absmean);
+        for s in 0..20 {
+            let row = gaussian_row(512, s);
+            hmax.add_row(&row);
+            hmean.add_row(&row);
+        }
+        assert!(hmax.zero_bin_frac() > 0.5, "absmax zero bin {}", hmax.zero_bin_frac());
+        assert!(
+            hmean.zero_bin_frac() < hmax.zero_bin_frac(),
+            "{} !< {}",
+            hmean.zero_bin_frac(),
+            hmax.zero_bin_frac()
+        );
+    }
+
+    #[test]
+    fn one_bit_has_no_zero_bin() {
+        let mut h = BinHistogram::new(1, Scheme::Sign);
+        h.add_row(&gaussian_row(512, 3));
+        assert_eq!(h.zero_bin_frac(), 0.0);
+        assert_eq!(h.density(), 1.0);
+        let rows = h.rows();
+        assert!((rows[0].1 + rows[1].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ascii_renders_all_bins() {
+        let mut h = BinHistogram::new(2, Scheme::Absmax);
+        h.add_row(&gaussian_row(128, 4));
+        let s = h.ascii();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains("-1:"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Gradient quantization — the paper's core contribution (§3.1).
+//!
+//! * [`scheme`]   — absmax / absmean / sign quantizers + dequantization,
+//!   semantically identical to the L1 Pallas kernels (`kernels/ref.py`).
+//! * [`pack`]     — sub-byte bit packing (1/2/4/8-bit) + bf16, the storage
+//!   format XLA cannot express (no sub-byte dtypes) so it lives in Rust
+//!   between the kernel output and the datastore.
+//! * [`hist`]     — quantization-bin occupancy histograms (paper Fig. 3).
+//! * [`weights`]  — base-weight block quantization for the QLoRA ablation
+//!   (paper §5, Tables 2/5).
+
+pub mod hist;
+pub mod pack;
+pub mod scheme;
+pub mod weights;
+
+pub use hist::BinHistogram;
+pub use pack::{pack_codes, unpack_codes, PackedRow};
+pub use scheme::{dequantize_row, quantize_row, QuantizedRow, Scheme};
+
+use anyhow::{bail, Result};
+
+/// Storage precision of the gradient datastore.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Precision {
+    /// 16 (LESS bf16 baseline) or 8/4/2/1 quantized.
+    pub bits: u8,
+    pub scheme: Scheme,
+}
+
+impl Precision {
+    pub fn new(bits: u8, scheme: Scheme) -> Result<Precision> {
+        match bits {
+            16 => Ok(Precision { bits, scheme: Scheme::Absmax }),
+            1 => Ok(Precision { bits, scheme: Scheme::Sign }),
+            2 | 4 | 8 => {
+                if scheme == Scheme::Sign {
+                    bail!("sign scheme is 1-bit only");
+                }
+                Ok(Precision { bits, scheme })
+            }
+            _ => bail!("unsupported bits {bits}"),
+        }
+    }
+
+    /// α = 2^(b−1) − 1 (paper Eq. 5); None for 16-bit / sign.
+    pub fn alpha(&self) -> Option<f32> {
+        match self.bits {
+            16 | 1 => None,
+            b => Some(((1u32 << (b - 1)) - 1) as f32),
+        }
+    }
+
+    /// Stored bytes for one k-dim gradient row (codes + one f32 scale).
+    /// The paper's Table 1 storage column follows this accounting exactly.
+    pub fn row_bytes(&self, k: usize) -> usize {
+        match self.bits {
+            16 => k * 2, // bf16, no scale needed
+            b => (k * b as usize).div_ceil(8) + 4,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self.bits {
+            16 => "16-bit".to_string(),
+            1 => "1-bit".to_string(),
+            b => format!("{b}-bit/{}", self.scheme),
+        }
+    }
+}
+
+/// Paper-scale storage accounting: N samples × k dims × C checkpoints at
+/// this precision (reproduces Table 1's 16.54 GB → 1.03 GB column when
+/// called with the paper's N=270K, k=8192, C=4).
+pub fn datastore_bytes(p: Precision, n_samples: usize, k: usize, checkpoints: usize) -> u64 {
+    (p.row_bytes(k) as u64) * (n_samples as u64) * (checkpoints as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_validation() {
+        assert!(Precision::new(16, Scheme::Absmax).is_ok());
+        assert!(Precision::new(1, Scheme::Absmax).is_ok()); // coerced to sign
+        assert_eq!(Precision::new(1, Scheme::Absmax).unwrap().scheme, Scheme::Sign);
+        assert!(Precision::new(4, Scheme::Sign).is_err());
+        assert!(Precision::new(3, Scheme::Absmax).is_err());
+    }
+
+    #[test]
+    fn alpha_matches_paper_eq5() {
+        let p = |b| Precision::new(b, Scheme::Absmax).unwrap();
+        assert_eq!(p(8).alpha(), Some(127.0));
+        assert_eq!(p(4).alpha(), Some(7.0));
+        assert_eq!(p(2).alpha(), Some(1.0));
+        assert_eq!(p(1).alpha(), None);
+        assert_eq!(p(16).alpha(), None);
+    }
+
+    #[test]
+    fn paper_table1_storage_column() {
+        // Paper: 270K samples × 8192 dims × 4 checkpoints.
+        // 16-bit: 16.54 GB, 8-bit: 8.27, 4-bit: 4.14, 2-bit: 2.07, 1-bit: 1.03
+        let (n, k, c) = (270_000, 8192, 4);
+        let gb = |p: Precision| datastore_bytes(p, n, k, c) as f64 / 1e9;
+        let mk = |b| Precision::new(b, Scheme::Absmax).unwrap();
+        assert!((gb(mk(16)) - 17.69).abs() < 0.1); // 2 B/dim: 17.7e9 = "16.54 GiB"
+        let gib = |p: Precision| datastore_bytes(p, n, k, c) as f64 / (1u64 << 30) as f64;
+        assert!((gib(mk(16)) - 16.48).abs() < 0.1, "{}", gib(mk(16)));
+        assert!((gib(mk(8)) - 8.24).abs() < 0.1);
+        assert!((gib(mk(4)) - 4.12).abs() < 0.05);
+        assert!((gib(mk(2)) - 2.06).abs() < 0.05);
+        assert!((gib(mk(1)) - 1.03).abs() < 0.05);
+    }
+
+    #[test]
+    fn row_bytes_rounding() {
+        let p = Precision::new(1, Scheme::Sign).unwrap();
+        assert_eq!(p.row_bytes(8), 1 + 4);
+        assert_eq!(p.row_bytes(9), 2 + 4);
+        let p4 = Precision::new(4, Scheme::Absmax).unwrap();
+        assert_eq!(p4.row_bytes(10), 5 + 4);
+    }
+}

@@ -1,0 +1,189 @@
+//! Base-weight quantization for the QLoRA ablation (paper §5, Tables 2/5).
+//!
+//! The paper extracts gradients from LLM.int8 (8-bit) and NF4 (4-bit)
+//! quantized base models. We reproduce the same *question* — does degraded
+//! weight precision degrade gradient-feature fidelity? — with block-wise
+//! quantizers over the frozen flat base-parameter vector:
+//!
+//! * 8-bit: per-block absmax int8 (the LLM.int8 analogue without outlier
+//!   decomposition — SimLM activations have no 7B-scale outliers).
+//! * 4-bit: NF4 — the exact 16-level NormalFloat codebook from QLoRA
+//!   (Dettmers et al. 2024), per-block absmax-normalized nearest-neighbour.
+//!
+//! Weights are quantized *and dequantized back to f32* before being fed to
+//! the AOT graphs (the graphs compute in f32, like QLoRA's bf16 compute
+//! dtype over quantized storage).
+
+/// The NF4 codebook: 16 quantiles of N(0,1) normalized to [−1, 1]
+/// (values from the QLoRA reference implementation).
+pub const NF4_LEVELS: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+pub const BLOCK: usize = 64;
+
+/// Simulate storing `w` at `bits` precision: quantize block-wise, then
+/// dequantize back to f32. `bits` ∈ {16 (identity), 8, 4}.
+pub fn quantize_weights(w: &[f32], bits: u8) -> Vec<f32> {
+    match bits {
+        16 => w.to_vec(),
+        8 => roundtrip_int8(w),
+        4 => roundtrip_nf4(w),
+        _ => panic!("quantize_weights: unsupported bits {bits}"),
+    }
+}
+
+fn roundtrip_int8(w: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(w.len());
+    for block in w.chunks(BLOCK) {
+        let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if absmax == 0.0 {
+            out.extend(std::iter::repeat_n(0f32, block.len()));
+            continue;
+        }
+        let scale = absmax / 127.0;
+        for &x in block {
+            let q = (x / scale).round().clamp(-127.0, 127.0);
+            out.push(q * scale);
+        }
+    }
+    out
+}
+
+fn roundtrip_nf4(w: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(w.len());
+    for block in w.chunks(BLOCK) {
+        let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        if absmax == 0.0 {
+            out.extend(std::iter::repeat_n(0f32, block.len()));
+            continue;
+        }
+        for &x in block {
+            let v = x / absmax;
+            // nearest codebook level (codebook is sorted)
+            let idx = NF4_LEVELS
+                .iter()
+                .enumerate()
+                .min_by(|a, b| {
+                    (a.1 - v).abs().partial_cmp(&(b.1 - v).abs()).unwrap()
+                })
+                .unwrap()
+                .0;
+            out.push(NF4_LEVELS[idx] * absmax);
+        }
+    }
+    out
+}
+
+/// Stored bytes for a weight vector at this precision (reporting only):
+/// codes + one f32 absmax per block for 8/4-bit, bf16 for 16.
+pub fn weight_bytes(n: usize, bits: u8) -> u64 {
+    match bits {
+        16 => 2 * n as u64,
+        8 => n as u64 + 4 * n.div_ceil(BLOCK) as u64,
+        4 => n.div_ceil(2) as u64 + 4 * n.div_ceil(BLOCK) as u64,
+        _ => panic!("weight_bytes: unsupported bits {bits}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+    use crate::util::Rng;
+
+    fn normals(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn identity_at_16() {
+        let w = normals(100, 1, 0.1);
+        assert_eq!(quantize_weights(&w, 16), w);
+    }
+
+    #[test]
+    fn int8_error_small() {
+        let w = normals(1000, 2, 0.05);
+        let q = quantize_weights(&w, 8);
+        let max_err: f32 = w.iter().zip(&q).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        let absmax = w.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert!(max_err <= absmax / 127.0, "{max_err}");
+    }
+
+    #[test]
+    fn nf4_error_larger_but_bounded() {
+        let w = normals(1000, 3, 0.05);
+        let q = quantize_weights(&w, 4);
+        let rms_err = (w.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+            / w.len() as f32)
+            .sqrt();
+        let rms = (w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32).sqrt();
+        assert!(rms_err < rms * 0.12, "nf4 rms err {rms_err} vs rms {rms}");
+        assert!(rms_err > 0.0);
+    }
+
+    #[test]
+    fn nf4_levels_sorted_and_symmetric_ends() {
+        for i in 1..16 {
+            assert!(NF4_LEVELS[i] > NF4_LEVELS[i - 1]);
+        }
+        assert_eq!(NF4_LEVELS[0], -1.0);
+        assert_eq!(NF4_LEVELS[15], 1.0);
+        assert_eq!(NF4_LEVELS[7], 0.0);
+    }
+
+    #[test]
+    fn prop_blockwise_max_preserved() {
+        // The absmax element of each block is exactly representable
+        // (±absmax maps to an end level in both schemes).
+        run_prop("weights-max-preserved", 60, |g| {
+            let n = BLOCK * (1 + g.usize_up_to(4));
+            let w = g.vec_f32(n, 0.1);
+            for bits in [8u8, 4] {
+                let q = quantize_weights(&w, bits);
+                for (block_w, block_q) in w.chunks(BLOCK).zip(q.chunks(BLOCK)) {
+                    let (i, _) = block_w
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                        .unwrap();
+                    let rel = (block_w[i] - block_q[i]).abs() / block_w[i].abs().max(1e-9);
+                    prop_assert!(rel < 0.005, "block max drifted {rel} at {bits}-bit");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_blocks_safe() {
+        let w = vec![0.0f32; 2 * BLOCK];
+        assert_eq!(quantize_weights(&w, 8), w);
+        assert_eq!(quantize_weights(&w, 4), w);
+    }
+
+    #[test]
+    fn weight_bytes_accounting() {
+        assert_eq!(weight_bytes(BLOCK, 16), 128);
+        assert_eq!(weight_bytes(BLOCK, 8), 64 + 4);
+        assert_eq!(weight_bytes(BLOCK, 4), 32 + 4);
+    }
+}

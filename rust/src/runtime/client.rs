@@ -1,0 +1,167 @@
+//! Thread-shareable PJRT client wrapper + compiled-executable cache.
+//!
+//! The `xla` crate's wrappers hold `Rc<PjRtClientInternal>` clones that are
+//! created/dropped on every execute and buffer operation, so genuinely
+//! concurrent access from multiple threads would race the refcounts. We
+//! therefore funnel **every** PJRT call (upload, execute, output readback,
+//! buffer drop) through one process-wide [`pjrt_lock`]. This serializes the
+//! host↔device boundary but NOT the compute: the TFRT CPU client
+//! parallelizes each execution internally across all cores, so the worker
+//! pool's job is to overlap host-side work (batch encode, quantize, pack,
+//! datastore writes) with the single in-flight device call — the same
+//! discipline as a one-GPU-stream runtime. DESIGN.md §8 records the
+//! limitation.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::{Context, Result};
+
+use super::exec::Exec;
+use super::manifest::{Manifest, ModelInfo};
+
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Acquire the global PJRT lock. Every xla-crate call must happen while
+/// holding this (poisoning is ignored: a panic inside PJRT is fatal anyway).
+pub(crate) fn pjrt_lock() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+pub(crate) struct SyncClient(pub xla::PjRtClient);
+// SAFETY: all uses of the wrapped client go through pjrt_lock(), so the
+// non-atomic Rc bookkeeping inside the crate is never raced.
+unsafe impl Send for SyncClient {}
+unsafe impl Sync for SyncClient {}
+
+pub(crate) struct SyncExe(pub xla::PjRtLoadedExecutable);
+// SAFETY: as above — execute calls are serialized by pjrt_lock().
+unsafe impl Send for SyncExe {}
+unsafe impl Sync for SyncExe {}
+
+/// A device-resident buffer whose lifecycle (creation, use, drop) respects
+/// the PJRT lock. Safe to move/share across worker threads.
+pub struct DeviceBuf {
+    inner: Option<xla::PjRtBuffer>,
+}
+
+// SAFETY: the raw buffer is only touched under pjrt_lock() (run_b holds the
+// lock; Drop re-acquires it).
+unsafe impl Send for DeviceBuf {}
+unsafe impl Sync for DeviceBuf {}
+
+impl DeviceBuf {
+    pub(crate) fn new(buf: xla::PjRtBuffer) -> DeviceBuf {
+        DeviceBuf { inner: Some(buf) }
+    }
+
+    /// Raw buffer reference — caller must hold the PJRT lock.
+    pub(crate) fn raw(&self) -> &xla::PjRtBuffer {
+        self.inner.as_ref().expect("DeviceBuf already dropped")
+    }
+}
+
+impl Drop for DeviceBuf {
+    fn drop(&mut self) {
+        let _g = pjrt_lock();
+        self.inner.take();
+    }
+}
+
+/// Process-wide runtime: one PJRT CPU client, the artifact manifest, and a
+/// cache of compiled executables keyed by `(model, artifact)`.
+pub struct Runtime {
+    pub(crate) client: Arc<SyncClient>,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<(String, String), Arc<Exec>>>,
+}
+
+impl Runtime {
+    /// Create the CPU runtime and load + validate the manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        crate::corpus::Tokenizer::default()
+            .check_manifest_vocab(&manifest.vocab_table)
+            .context("tokenizer / manifest vocab mismatch")?;
+        let _g = pjrt_lock();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(SyncClient(client)), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn model(&self, name: &str) -> Result<ModelInfo> {
+        Ok(self.manifest.model(name)?.clone())
+    }
+
+    /// Load (or fetch from cache) the compiled executable for an artifact.
+    pub fn exec(&self, model: &ModelInfo, artifact: &str) -> Result<Arc<Exec>> {
+        let key = (model.name.clone(), artifact.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(model, artifact)?;
+        let exec = Arc::new(Exec::load(self.client.clone(), &path, artifact)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host f32 slice as a persistent device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf> {
+        let _g = pjrt_lock();
+        Ok(DeviceBuf::new(
+            self.client
+                .0
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading f32 buffer")?,
+        ))
+    }
+
+    /// Upload a host i32 slice as a persistent device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuf> {
+        let _g = pjrt_lock();
+        Ok(DeviceBuf::new(
+            self.client
+                .0
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading i32 buffer")?,
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    pub fn cached_execs(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn runtime_loads_and_caches() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        let tiny = rt.model("tiny").unwrap();
+        let a = rt.exec(&tiny, "influence").unwrap();
+        let b = rt.exec(&tiny, "influence").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(rt.cached_execs(), 1);
+    }
+}

@@ -1,0 +1,207 @@
+//! Typed execution of one compiled HLO artifact.
+//!
+//! All AOT graphs are lowered with `return_tuple=True`, so every execution
+//! returns a tuple literal that is decomposed into per-output `Vec<f32>`.
+//! Two call paths:
+//!
+//! * [`Exec::run`] — host-slice args ([`Arg`]); convenient, copies per call.
+//! * [`Exec::run_b`] — all-device-buffer args; used with persistent buffers
+//!   for checkpoint-lifetime operands (params, Adam state, projection
+//!   matrix), which cuts per-batch host→device traffic by ~99% for the
+//!   gradient-extraction graphs (see EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{pjrt_lock, DeviceBuf, SyncClient, SyncExe};
+
+/// A host-side argument for [`Exec::run`].
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> Arg<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Arg::F32(data, dims) => shaped(xla::Literal::vec1(data), data.len(), dims)?,
+            Arg::I32(data, dims) => shaped(xla::Literal::vec1(data), data.len(), dims)?,
+            Arg::ScalarF32(v) => xla::Literal::scalar(*v),
+            Arg::ScalarI32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+fn shaped(lit: xla::Literal, len: usize, dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != len {
+        bail!("arg has {len} elements but dims {dims:?} = {n}");
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// One compiled artifact, executable from any thread.
+pub struct Exec {
+    client: Arc<SyncClient>,
+    exe: SyncExe,
+    pub name: String,
+}
+
+impl Exec {
+    pub(crate) fn load(client: Arc<SyncClient>, path: &Path, name: &str) -> Result<Exec> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let _g = pjrt_lock();
+        let exe = client.0.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Exec { client, exe: SyncExe(exe), name: name.to_string() })
+    }
+
+    /// Execute with host args; returns each tuple element as `Vec<f32>`.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let _g = pjrt_lock();
+        let out = self
+            .exe
+            .0
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.collect_f32(out) // output buffers drop inside the lock
+    }
+
+    /// Execute with device-buffer args (persistent-operand hot path).
+    pub fn run_b(&self, args: &[&DeviceBuf]) -> Result<Vec<Vec<f32>>> {
+        let _g = pjrt_lock();
+        let raw: Vec<&xla::PjRtBuffer> = args.iter().map(|b| b.raw()).collect();
+        let out = self
+            .exe
+            .0
+            .execute_b::<&xla::PjRtBuffer>(&raw)
+            .with_context(|| format!("executing(b) {}", self.name))?;
+        self.collect_f32(out)
+    }
+
+    /// Like [`run`], but returns raw output literals (for i8/i32 outputs).
+    pub fn run_literals(&self, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let _g = pjrt_lock();
+        let out = self
+            .exe
+            .0
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        Self::tuple_elems(out)
+    }
+
+    fn collect_f32(&self, out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+        let elems = Self::tuple_elems(out)?;
+        elems
+            .into_iter()
+            .map(|lit| {
+                // Convert non-f32 leaves (e.g. int8 codes) to f32 on the host.
+                let ty = lit.ty()?;
+                let lit = if ty == xla::ElementType::F32 {
+                    lit
+                } else {
+                    lit.convert(xla::PrimitiveType::F32)?
+                };
+                Ok(lit.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+
+    fn tuple_elems(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let buf = out
+            .first()
+            .and_then(|r| r.first())
+            .context("execution returned no outputs")?;
+        let lit = buf.to_literal_sync()?;
+        // return_tuple=True → single tuple output; decompose into leaves.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Upload a host f32 slice as a device buffer (persistent operand).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf> {
+        let _g = pjrt_lock();
+        Ok(DeviceBuf::new(self.client.0.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuf> {
+        let _g = pjrt_lock();
+        Ok(DeviceBuf::new(self.client.0.buffer_from_host_buffer(data, dims, None)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use std::path::PathBuf;
+
+    fn rt() -> Option<Runtime> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Runtime::new(&p).unwrap())
+    }
+
+    #[test]
+    fn influence_artifact_runs_and_matches_cosine() {
+        let Some(rt) = rt() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let tiny = rt.model("tiny").unwrap();
+        let exec = rt.exec(&tiny, "influence").unwrap();
+        let (tq, tv, k) = (tiny.tile_q, tiny.tile_v, tiny.proj_dim);
+        let mut rng = crate::util::Rng::new(1);
+        let qt: Vec<f32> = (0..tq * k).map(|_| rng.normal() as f32).collect();
+        let qv: Vec<f32> = (0..tv * k).map(|_| rng.normal() as f32).collect();
+        let out = exec
+            .run(&[Arg::F32(&qt, &[tq, k]), Arg::F32(&qv, &[tv, k])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let sims = &out[0];
+        assert_eq!(sims.len(), tq * tv);
+        // check one entry against host cosine
+        let dot: f32 = (0..k).map(|i| qt[i] * qv[i]).sum();
+        let nt: f32 = (0..k).map(|i| qt[i] * qt[i]).sum::<f32>().sqrt();
+        let nv: f32 = (0..k).map(|i| qv[i] * qv[i]).sum::<f32>().sqrt();
+        let want = dot / (nt * nv);
+        assert!((sims[0] - want).abs() < 1e-4, "{} vs {want}", sims[0]);
+        assert!(sims.iter().all(|s| s.abs() <= 1.0 + 1e-4));
+    }
+
+    #[test]
+    fn run_b_matches_run() {
+        let Some(rt) = rt() else {
+            return;
+        };
+        let tiny = rt.model("tiny").unwrap();
+        let exec = rt.exec(&tiny, "influence").unwrap();
+        let (tq, tv, k) = (tiny.tile_q, tiny.tile_v, tiny.proj_dim);
+        let qt = vec![0.5f32; tq * k];
+        let qv = vec![-0.25f32; tv * k];
+        let a = exec.run(&[Arg::F32(&qt, &[tq, k]), Arg::F32(&qv, &[tv, k])]).unwrap();
+        let bt = exec.upload_f32(&qt, &[tq, k]).unwrap();
+        let bv = exec.upload_f32(&qv, &[tv, k]).unwrap();
+        let b = exec.run_b(&[&bt, &bv]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bad_arg_shape_errors() {
+        let Some(rt) = rt() else {
+            return;
+        };
+        let tiny = rt.model("tiny").unwrap();
+        let exec = rt.exec(&tiny, "influence").unwrap();
+        let qt = vec![0f32; 10];
+        assert!(exec.run(&[Arg::F32(&qt, &[3, 5])]).is_err());
+    }
+}

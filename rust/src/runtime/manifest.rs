@@ -1,0 +1,237 @@
+//! `artifacts/manifest.json` parsing + validation.
+//!
+//! The manifest is the contract between the Python AOT path and this
+//! runtime: model dimensions, static batch shapes, kernel tile sizes and
+//! optimizer hyperparameters. Everything is validated eagerly so a stale
+//! or mismatched artifacts directory fails at startup with a clear error.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub d_base: usize,
+    pub d_lora: usize,
+    pub proj_dim: usize,
+    pub batch_train: usize,
+    pub batch_grad: usize,
+    pub batch_eval: usize,
+    pub tile_q: usize,
+    pub tile_v: usize,
+    pub quant_block: usize,
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    pub absmean_c: f64,
+    /// artifact name → hlo file path (relative to the artifacts dir).
+    pub artifacts: BTreeMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab_table: Vec<String>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+/// Artifact names every model entry must provide.
+pub const REQUIRED_ARTIFACTS: [&str; 14] = [
+    "pretrain_step",
+    "train_step",
+    "grad_train",
+    "grad_val",
+    "loss_eval",
+    "decode_step",
+    "quantize_absmax_8",
+    "quantize_absmax_4",
+    "quantize_absmax_2",
+    "quantize_absmean_8",
+    "quantize_absmean_4",
+    "quantize_absmean_2",
+    "quantize_sign_1",
+    "influence",
+];
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — did you run `make artifacts`?")
+        })?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.req("version")?.as_usize()?;
+        if version < 2 {
+            bail!("manifest version {version} too old; re-run `make artifacts`");
+        }
+        let vocab_table: Vec<String> = j
+            .req("vocab")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(|s| s.to_string()))
+            .collect::<Result<_>>()?;
+
+        let mut models = BTreeMap::new();
+        for (name, entry) in j.req("models")?.as_obj()? {
+            models.insert(name.clone(), ModelInfo::from_json(name, entry)?);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), vocab_table, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (available: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, model: &ModelInfo, artifact: &str) -> Result<PathBuf> {
+        let rel = model
+            .artifacts
+            .get(artifact)
+            .with_context(|| format!("artifact '{artifact}' missing for model {}", model.name))?;
+        let p = self.dir.join(rel);
+        if !p.exists() {
+            bail!("artifact file {p:?} does not exist; re-run `make artifacts`");
+        }
+        Ok(p)
+    }
+}
+
+impl ModelInfo {
+    fn from_json(name: &str, j: &Json) -> Result<ModelInfo> {
+        let us = |k: &str| -> Result<usize> { j.req(k)?.as_usize() };
+        let fl = |k: &str| -> Result<f64> { j.req(k)?.as_f64() };
+        let mut artifacts = BTreeMap::new();
+        for (aname, a) in j.req("artifacts")?.as_obj()? {
+            artifacts.insert(aname.clone(), a.req("file")?.as_str()?.to_string());
+        }
+        let info = ModelInfo {
+            name: name.to_string(),
+            vocab: us("vocab")?,
+            seq: us("seq")?,
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            d_ff: us("d_ff")?,
+            lora_rank: us("lora_rank")?,
+            lora_alpha: fl("lora_alpha")?,
+            d_base: us("d_base")?,
+            d_lora: us("d_lora")?,
+            proj_dim: us("proj_dim")?,
+            batch_train: us("batch_train")?,
+            batch_grad: us("batch_grad")?,
+            batch_eval: us("batch_eval")?,
+            tile_q: us("tile_q")?,
+            tile_v: us("tile_v")?,
+            quant_block: us("quant_block")?,
+            adam_b1: fl("adam_b1")?,
+            adam_b2: fl("adam_b2")?,
+            adam_eps: fl("adam_eps")?,
+            absmean_c: fl("absmean_c")?,
+            artifacts,
+        };
+        info.validate()?;
+        Ok(info)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.vocab != 64 {
+            bail!("model {}: vocab {} != 64", self.name, self.vocab);
+        }
+        if self.d_model % self.n_heads != 0 {
+            bail!("model {}: d_model % n_heads != 0", self.name);
+        }
+        let expect_lora = self.n_layers * 4 * 2 * self.d_model * self.lora_rank;
+        if self.d_lora != expect_lora {
+            bail!("model {}: d_lora {} != expected {expect_lora}", self.name, self.d_lora);
+        }
+        for a in REQUIRED_ARTIFACTS {
+            if !self.artifacts.contains_key(a) {
+                bail!("model {}: missing artifact '{a}'", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Name of the quantize artifact for a scheme/bits pair.
+    pub fn quantize_artifact(&self, scheme: &str, bits: u8) -> String {
+        if bits == 1 {
+            "quantize_sign_1".to_string()
+        } else {
+            format!("quantize_{scheme}_{bits}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_built_manifest_if_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("tiny"));
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.vocab, 64);
+        for a in REQUIRED_ARTIFACTS {
+            m.artifact_path(tiny, a).unwrap();
+        }
+        crate::corpus::Tokenizer::default()
+            .check_manifest_vocab(&m.vocab_table)
+            .unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_informative() {
+        let err = Manifest::load(Path::new("/nonexistent/xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn model_lookup_error_lists_available() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.model("enormous").unwrap_err();
+        assert!(format!("{err:#}").contains("tiny"));
+    }
+
+    #[test]
+    fn quantize_artifact_names() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let t = m.model("tiny").unwrap();
+        assert_eq!(t.quantize_artifact("absmax", 8), "quantize_absmax_8");
+        assert_eq!(t.quantize_artifact("absmean", 1), "quantize_sign_1");
+    }
+}

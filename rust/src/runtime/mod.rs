@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the Rust hot path. Python is never involved at this layer.
+//!
+//! * [`manifest`] — parses/validates `artifacts/manifest.json` (static dims,
+//!   batch shapes, hyperparameters agreed with the Python build path).
+//! * [`client`]   — thread-safe PJRT CPU client + executable cache.
+//! * [`exec`]     — typed execute helpers: host slices in, `Vec<f32>` out,
+//!   plus persistent device buffers for checkpoint-lifetime operands
+//!   (params, optimizer state, projection matrix) so large inputs are
+//!   uploaded once per checkpoint, not once per batch.
+
+pub mod client;
+pub mod exec;
+pub mod manifest;
+
+pub use client::{DeviceBuf, Runtime};
+pub use exec::{Arg, Exec};
+pub use manifest::{Manifest, ModelInfo};

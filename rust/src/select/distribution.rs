@@ -1,0 +1,122 @@
+//! Subset composition analysis — paper Figure 5: which corpus sources the
+//! top-p% selection draws from, per benchmark and per quantization level.
+
+use crate::corpus::{Sample, Source};
+
+#[derive(Debug, Clone)]
+pub struct SourceDistribution {
+    /// (source, selected count, fraction of selection).
+    pub rows: Vec<(Source, usize, f64)>,
+    pub total: usize,
+}
+
+impl SourceDistribution {
+    pub fn of(samples: &[Sample], selected: &[usize]) -> SourceDistribution {
+        let mut counts = [(Source::SynFlan, 0usize), (Source::SynCot, 0), (Source::SynDolly, 0), (Source::SynOasst, 0)];
+        for &i in selected {
+            let src = samples[i].source;
+            for c in counts.iter_mut() {
+                if c.0 == src {
+                    c.1 += 1;
+                }
+            }
+        }
+        let total = selected.len();
+        SourceDistribution {
+            rows: counts
+                .into_iter()
+                .map(|(s, c)| (s, c, c as f64 / total.max(1) as f64))
+                .collect(),
+            total,
+        }
+    }
+
+    pub fn frac(&self, source: Source) -> f64 {
+        self.rows.iter().find(|r| r.0 == source).map(|r| r.2).unwrap_or(0.0)
+    }
+
+    /// L1 distance between two compositions (Fig. 5's "how much did the
+    /// subset shift at this bit width" summary).
+    pub fn l1_distance(&self, other: &SourceDistribution) -> f64 {
+        self.rows
+            .iter()
+            .zip(&other.rows)
+            .map(|(a, b)| (a.2 - b.2).abs())
+            .sum()
+    }
+
+    pub fn render(&self) -> String {
+        self.rows
+            .iter()
+            .map(|(s, c, f)| format!("{s}: {c} ({:.1}%)", f * 100.0))
+            .collect::<Vec<_>>()
+            .join("  ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Sample;
+
+    fn samples() -> Vec<Sample> {
+        let mut v = Vec::new();
+        for (src, n) in [
+            (Source::SynFlan, 4),
+            (Source::SynCot, 3),
+            (Source::SynDolly, 2),
+            (Source::SynOasst, 1),
+        ] {
+            for _ in 0..n {
+                v.push(Sample::new(src, "p", "a"));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn counts_by_source() {
+        let s = samples();
+        let d = SourceDistribution::of(&s, &[0, 1, 4, 9]);
+        assert_eq!(d.total, 4);
+        assert_eq!(d.frac(Source::SynFlan), 0.5);
+        assert_eq!(d.frac(Source::SynCot), 0.25);
+        assert_eq!(d.frac(Source::SynDolly), 0.0);
+        assert_eq!(d.frac(Source::SynOasst), 0.25);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let s = samples();
+        let d = SourceDistribution::of(&s, &[0, 4, 7, 8, 9]);
+        let sum: f64 = d.rows.iter().map(|r| r.2).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_distance_zero_for_identical() {
+        let s = samples();
+        let a = SourceDistribution::of(&s, &[0, 4]);
+        let b = SourceDistribution::of(&s, &[1, 5]);
+        assert_eq!(a.l1_distance(&b), 0.0);
+        let c = SourceDistribution::of(&s, &[7, 8]);
+        assert!(a.l1_distance(&c) > 0.9);
+    }
+
+    #[test]
+    fn empty_selection_safe() {
+        let s = samples();
+        let d = SourceDistribution::of(&s, &[]);
+        assert_eq!(d.total, 0);
+        assert_eq!(d.frac(Source::SynFlan), 0.0);
+    }
+
+    #[test]
+    fn render_contains_all_sources() {
+        let s = samples();
+        let r = SourceDistribution::of(&s, &[0, 4, 7, 9]).render();
+        for name in ["synflan", "syncot", "syndolly", "synoasst"] {
+            assert!(r.contains(name), "{r}");
+        }
+    }
+}

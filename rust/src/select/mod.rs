@@ -1,0 +1,9 @@
+//! Data selection — QLESS step 4: rank the corpus by cumulative influence
+//! and keep the top p% (paper: 5%), plus the analyses built on top of it
+//! (subset composition for Fig. 5, budget sweeps for Fig. 4).
+
+pub mod distribution;
+pub mod topk;
+
+pub use distribution::SourceDistribution;
+pub use topk::{select_top_frac, top_k_indices};

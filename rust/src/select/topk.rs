@@ -1,0 +1,112 @@
+//! Top-k selection with deterministic tie-breaking.
+//!
+//! Ranking must be reproducible across runs and scoring paths: ties are
+//! broken by sample index (lower id wins), and NaN scores are rejected
+//! loudly rather than silently sorted.
+
+/// Indices of the `k` highest-scoring samples, ordered by descending score
+/// (ties: ascending index). Panics on NaN — a NaN influence score means an
+/// upstream numerical bug, never a valid ranking input.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    assert!(
+        scores.iter().all(|s| !s.is_nan()),
+        "NaN influence score — upstream numerical bug"
+    );
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // full sort keeps the output deterministic AND descending-ordered;
+    // selection sizes here are small enough that O(n log n) is fine.
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%).
+pub fn select_top_frac(scores: &[f32], frac: f64) -> Vec<usize> {
+    assert!((0.0..=1.0).contains(&frac), "frac {frac}");
+    let k = ((scores.len() as f64) * frac).ceil() as usize;
+    top_k_indices(scores, k.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn picks_highest() {
+        let s = [0.1, 0.9, -0.5, 0.9, 0.3];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 4]); // tie 1 vs 3 → lower id first
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        assert_eq!(top_k_indices(&[1.0, 2.0], 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn frac_rounds_up_and_floors_at_one() {
+        let s = vec![0.0f32; 100];
+        assert_eq!(select_top_frac(&s, 0.05).len(), 5);
+        assert_eq!(select_top_frac(&s, 0.001).len(), 1); // ⌈0.1⌉
+        assert_eq!(select_top_frac(&s, 0.0).len(), 1); // floor at 1
+        assert_eq!(select_top_frac(&s, 1.0).len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_rejected() {
+        top_k_indices(&[0.0, f32::NAN], 1);
+    }
+
+    #[test]
+    fn prop_selected_scores_dominate_rest() {
+        run_prop("topk-dominates", 100, |g| {
+            let n = 2 + g.usize_up_to(200);
+            let scores = g.vec_f32(n, 1.0);
+            let k = 1 + g.rng.below(n);
+            let top = top_k_indices(&scores, k);
+            prop_assert!(top.len() == k, "len");
+            let min_top = top.iter().map(|&i| scores[i]).fold(f32::MAX, f32::min);
+            for i in 0..n {
+                if !top.contains(&i) {
+                    prop_assert!(
+                        scores[i] <= min_top,
+                        "unselected {i} ({}) beats selected min {min_top}",
+                        scores[i]
+                    );
+                }
+            }
+            // unique
+            let mut u = top.clone();
+            u.sort_unstable();
+            u.dedup();
+            prop_assert!(u.len() == k, "duplicates");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_frac() {
+        // Fig. 4 invariant: a larger budget is a superset of a smaller one.
+        run_prop("topk-monotone", 60, |g| {
+            let n = 10 + g.usize_up_to(100);
+            let scores = g.vec_f32(n, 1.0);
+            let small = select_top_frac(&scores, 0.05);
+            let large = select_top_frac(&scores, 0.20);
+            for i in &small {
+                prop_assert!(large.contains(i), "small selection not ⊆ large");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_under_permuted_ties() {
+        let s = vec![0.5f32; 10];
+        assert_eq!(top_k_indices(&s, 4), vec![0, 1, 2, 3]);
+    }
+}

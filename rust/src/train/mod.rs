@@ -1,0 +1,9 @@
+//! Training loops (paper Appendix A): LR schedule and the warmup /
+//! fine-tune drivers over the `train_step` AOT graph (Adam runs inside the
+//! graph; Rust owns the optimizer *state* across steps and checkpoints).
+
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::Schedule;
+pub use trainer::{TrainReport, Trainer};

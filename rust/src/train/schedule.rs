@@ -1,0 +1,85 @@
+//! Learning-rate schedule: linear warmup → cosine decay to zero, the
+//! paper's Appendix A setting. The per-epoch η_i recorded into checkpoints
+//! (and from there into influence aggregation, Eq. 7) is the schedule value
+//! at the step the checkpoint was taken.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub peak_lr: f64,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+}
+
+impl Schedule {
+    pub fn new(peak_lr: f64, total_steps: usize, warmup_frac: f64) -> Schedule {
+        let total_steps = total_steps.max(1);
+        let warmup_steps = ((total_steps as f64) * warmup_frac).round() as usize;
+        Schedule { peak_lr, total_steps, warmup_steps }
+    }
+
+    /// LR at 0-based step `t`.
+    pub fn lr(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return self.peak_lr * (t + 1) as f64 / self.warmup_steps as f64;
+        }
+        let span = (self.total_steps - self.warmup_steps).max(1);
+        let progress = ((t - self.warmup_steps) as f64 / span as f64).min(1.0);
+        self.peak_lr * 0.5 * (1.0 + (std::f64::consts::PI * progress).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let s = Schedule::new(1e-3, 100, 0.1);
+        assert_eq!(s.warmup_steps, 10);
+        assert!(s.lr(0) > 0.0);
+        assert!(s.lr(0) < s.lr(5));
+        assert!((s.lr(9) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = Schedule::new(1e-3, 100, 0.1);
+        assert!(s.lr(50) < 1e-3);
+        assert!(s.lr(99) < s.lr(50));
+        assert!(s.lr(99) < 2e-5);
+        assert!(s.lr(1000) >= 0.0); // past the end stays clamped
+    }
+
+    #[test]
+    fn no_warmup_starts_at_peak() {
+        let s = Schedule::new(2e-3, 50, 0.0);
+        assert!((s.lr(0) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_lr_positive_and_bounded() {
+        run_prop("lr-bounded", 100, |g| {
+            let total = 1 + g.usize_in(1, 500);
+            let s = Schedule::new(1e-3, total, 0.03);
+            for t in 0..total {
+                let lr = s.lr(t);
+                prop_assert!(lr >= 0.0 && lr <= 1e-3 + 1e-15, "lr {lr} at {t}/{total}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_monotone_decay_after_warmup() {
+        run_prop("lr-monotone", 50, |g| {
+            let total = 20 + g.usize_up_to(200);
+            let s = Schedule::new(1e-3, total, 0.1);
+            for t in s.warmup_steps..total - 1 {
+                prop_assert!(s.lr(t) >= s.lr(t + 1) - 1e-15, "not decaying at {t}");
+            }
+            Ok(())
+        });
+    }
+}

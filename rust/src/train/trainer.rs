@@ -1,0 +1,161 @@
+//! The training driver: runs `train_step` (Adam inside the graph) over
+//! shuffled epochs, records the loss curve, and snapshots a [`Checkpoint`]
+//! (LoRA + Adam state + η_i) at every epoch boundary — the warmup protocol
+//! of LESS/QLESS step 1.
+//!
+//! The frozen base is uploaded to the device once per run; LoRA/m/v round-
+//! trip host↔device each step because Rust owns optimizer state across
+//! checkpoint boundaries (they are small: d_lora ≪ d_base).
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Dataset};
+use crate::model::Checkpoint;
+use crate::runtime::{Exec, ModelInfo, Runtime};
+use crate::train::Schedule;
+use crate::util::Rng;
+use crate::{debug, info};
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Mean loss per epoch.
+    pub epoch_losses: Vec<f64>,
+    /// Loss at every step (the e2e example logs this curve).
+    pub step_losses: Vec<f32>,
+    pub steps: usize,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    info: ModelInfo,
+    exec: std::sync::Arc<Exec>,
+    base_buf: crate::runtime::DeviceBuf,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, info: &ModelInfo, base: &[f32]) -> Result<Trainer<'rt>> {
+        let exec = rt.exec(info, "train_step")?;
+        let base_buf = rt.upload_f32(base, &[info.d_base])?;
+        Ok(Trainer { rt, info: info.clone(), exec, base_buf })
+    }
+
+    /// Train `epochs` over `data`, mutating `ckpt` in place. Returns the
+    /// loss curve; pushes an epoch-end snapshot into `snapshots` if given.
+    pub fn train(
+        &self,
+        data: &Dataset,
+        ckpt: &mut Checkpoint,
+        epochs: usize,
+        schedule: &Schedule,
+        seed: u64,
+        mut snapshots: Option<&mut Vec<Checkpoint>>,
+    ) -> Result<TrainReport> {
+        let b = self.info.batch_train;
+        let s = self.info.seq;
+        let mut rng = Rng::new(seed).fork(0x7124);
+        let mut report = TrainReport { epoch_losses: Vec::new(), step_losses: Vec::new(), steps: 0 };
+        let mut t = ckpt.step; // resume-aware global step
+        for epoch in 0..epochs {
+            let mut epoch_loss = 0.0f64;
+            let mut nb = 0usize;
+            let mut last_lr = 0.0f64;
+            for batch in Batcher::shuffled(data, b, &mut rng) {
+                let lr = schedule.lr(t as usize);
+                last_lr = lr;
+                t += 1;
+                let loss = self.step(ckpt, &batch.tokens, &batch.masks, t, lr, b, s)?;
+                report.step_losses.push(loss);
+                epoch_loss += loss as f64;
+                nb += 1;
+                debug!("epoch {epoch} step {t} lr {lr:.2e} loss {loss:.4}");
+            }
+            ckpt.step = t;
+            ckpt.eta = last_lr as f32;
+            let mean = epoch_loss / nb.max(1) as f64;
+            report.epoch_losses.push(mean);
+            report.steps = t as usize;
+            info!("epoch {epoch}: mean loss {mean:.4} (lr {last_lr:.2e})");
+            if let Some(snaps) = snapshots.as_deref_mut() {
+                snaps.push(ckpt.clone());
+            }
+        }
+        Ok(report)
+    }
+
+    /// One optimizer step through the AOT graph. Exposed for tests.
+    pub fn step(
+        &self,
+        ckpt: &mut Checkpoint,
+        tokens: &[i32],
+        masks: &[f32],
+        t: u64,
+        lr: f64,
+        b: usize,
+        s: usize,
+    ) -> Result<f32> {
+        let dl = self.info.d_lora;
+        let tok_buf = self.rt.upload_i32(tokens, &[b, s])?;
+        let mask_buf = self.rt.upload_f32(masks, &[b, s])?;
+        let lora_buf = self.rt.upload_f32(&ckpt.lora, &[dl])?;
+        let m_buf = self.rt.upload_f32(&ckpt.m, &[dl])?;
+        let v_buf = self.rt.upload_f32(&ckpt.v, &[dl])?;
+        let t_buf = self.rt.upload_f32(&[t as f32], &[])?;
+        let lr_buf = self.rt.upload_f32(&[lr as f32], &[])?;
+        let out = self.exec.run_b(&[
+            &self.base_buf,
+            &lora_buf,
+            &m_buf,
+            &v_buf,
+            &t_buf,
+            &tok_buf,
+            &mask_buf,
+            &lr_buf,
+        ])?;
+        let [lora2, m2, v2, loss]: [Vec<f32>; 4] =
+            out.try_into().map_err(|_| anyhow::anyhow!("train_step returned wrong arity"))?;
+        ckpt.lora = lora2;
+        ckpt.m = m2;
+        ckpt.v = v2;
+        Ok(loss[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate_corpus, Tokenizer};
+    use std::path::PathBuf;
+
+    fn rt() -> Option<Runtime> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then(|| Runtime::new(&p).unwrap())
+    }
+
+    #[test]
+    fn training_reduces_loss_on_tiny() {
+        let Some(rt) = rt() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = rt.model("tiny").unwrap();
+        let tok = Tokenizer::default();
+        let data = crate::data::Dataset::encode(
+            generate_corpus(64, 5, &tok, info.seq),
+            &tok,
+            info.seq,
+        );
+        let base = crate::model::init_base(&info, 1);
+        let mut ckpt = Checkpoint::fresh(info.d_lora, crate::model::init_lora(&info, 1));
+        let trainer = Trainer::new(&rt, &info, &base).unwrap();
+        let sched = Schedule::new(5e-3, 3 * data.len().div_ceil(info.batch_train), 0.1);
+        let report = trainer.train(&data, &mut ckpt, 3, &sched, 7, None).unwrap();
+        assert_eq!(report.epoch_losses.len(), 3);
+        assert!(
+            report.epoch_losses[2] < report.epoch_losses[0] * 0.95,
+            "{:?}",
+            report.epoch_losses
+        );
+        assert!(ckpt.step > 0);
+        assert!(ckpt.eta > 0.0);
+    }
+}

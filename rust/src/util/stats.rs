@@ -1,0 +1,210 @@
+//! Timing + summary statistics used by the bench harness and the pipeline's
+//! stage metrics. `BenchStats` implements the measurement protocol of the
+//! custom `cargo bench` harness (criterion is not in the offline vendor
+//! set): warmup, N timed iterations, mean/median/p95/stddev, throughput.
+
+use std::time::Instant;
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+    pub label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Timer {
+        Timer { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn stop(self) -> f64 {
+        self.elapsed_s()
+    }
+}
+
+/// Summary of a set of observations (seconds, losses, scores, …).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize: empty input");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        let idx = (p * (n - 1) as f64).round() as usize;
+        sorted[idx.min(n - 1)]
+    };
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median: q(0.5),
+        p95: q(0.95),
+    }
+}
+
+/// Measurement result of one bench case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Summary,
+    /// Work units per iteration (bytes, samples, FLOPs …) for throughput.
+    pub work_per_iter: f64,
+    pub work_unit: &'static str,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        self.work_per_iter / self.secs.mean
+    }
+
+    pub fn report_line(&self) -> String {
+        let tput = if self.work_per_iter > 0.0 {
+            format!(
+                "  {:>10.3} {}/s",
+                scale_si(self.throughput()).0,
+                format!("{}{}", scale_si(self.throughput()).1, self.work_unit)
+            )
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} {:>10} iters  mean {:>9}  p95 {:>9}{}",
+            self.name,
+            self.iters,
+            fmt_secs(self.secs.mean),
+            fmt_secs(self.secs.p95),
+            tput
+        )
+    }
+}
+
+fn scale_si(v: f64) -> (f64, &'static str) {
+    if v >= 1e9 {
+        (v / 1e9, "G")
+    } else if v >= 1e6 {
+        (v / 1e6, "M")
+    } else if v >= 1e3 {
+        (v / 1e3, "K")
+    } else {
+        (v, "")
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Run one bench case: `warmup` untimed runs, then timed iterations until
+/// `min_time_s` elapses (at least `min_iters`).
+pub fn bench<F: FnMut()>(
+    name: &str,
+    work_per_iter: f64,
+    work_unit: &'static str,
+    mut f: F,
+) -> BenchResult {
+    bench_cfg(name, work_per_iter, work_unit, 2, 10, 1.0, &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    work_per_iter: f64,
+    work_unit: &'static str,
+    warmup: usize,
+    min_iters: usize,
+    min_time_s: f64,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::new();
+    let t0 = Instant::now();
+    while times.len() < min_iters || t0.elapsed().as_secs_f64() < min_time_s {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        secs: summarize(&times),
+        work_per_iter,
+        work_unit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = summarize(&[5.0]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.p95, 5.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let mut n = 0;
+        let r = bench_cfg("noop", 1.0, "op", 1, 5, 0.01, &mut || n += 1);
+        assert!(r.iters >= 5);
+        assert!(n >= r.iters);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start("x");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.stop() >= 0.004);
+    }
+}

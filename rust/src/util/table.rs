@@ -1,0 +1,187 @@
+//! Aligned console / markdown table rendering for the experiment reports.
+//!
+//! Every `xp` harness prints the same rows the paper's tables report; this
+//! type owns alignment, bold/underline annotations for best / second-best
+//! entries (mirroring the paper's formatting), and markdown export.
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Mark the best (`**v**`) and second best (`_v_`) numeric value in a
+    /// column, parsing cells as f64 (non-numeric cells are skipped) —
+    /// mirrors the paper's bold/underline convention.
+    pub fn mark_best(&mut self, col: usize, higher_is_better: bool) {
+        let mut vals: Vec<(usize, f64)> = self
+            .rows
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| parse_cell(&r[col]).map(|v| (i, v)))
+            .collect();
+        if vals.len() < 2 {
+            return;
+        }
+        vals.sort_by(|a, b| {
+            if higher_is_better {
+                b.1.partial_cmp(&a.1).unwrap()
+            } else {
+                a.1.partial_cmp(&b.1).unwrap()
+            }
+        });
+        let best = vals[0].0;
+        let second = vals[1].0;
+        self.rows[best][col] = format!("**{}**", self.rows[best][col]);
+        self.rows[second][col] = format!("_{}_", self.rows[second][col]);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned console block.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:w$} | ", c, w = w[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&"-".repeat(wi + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Markdown (same shape — the aligned render *is* valid markdown).
+    pub fn to_markdown(&self) -> String {
+        self.render()
+    }
+}
+
+fn parse_cell(s: &str) -> Option<f64> {
+    // first whitespace-separated token, stripped of annotation chars
+    let tok = s.trim().split_whitespace().next()?;
+    tok.trim_matches(|c| c == '*' || c == '_').parse().ok()
+}
+
+/// Format a fraction as `xx.yy` percent (paper tables are 2-dp percents).
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+/// Human-readable byte count, binary units.
+pub fn human_bytes(n: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", U[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["method", "acc"]);
+        t.row(vec!["random".into(), "50.00".into()]);
+        t.row(vec!["qless-1bit".into(), "65.93".into()]);
+        let s = t.render();
+        assert!(s.contains("| method     | acc"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn mark_best_bold_and_underline() {
+        let mut t = Table::new("", &["m", "v"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["b".into(), "3.0".into()]);
+        t.row(vec!["c".into(), "2.0".into()]);
+        t.mark_best(1, true);
+        assert_eq!(t.rows[1][1], "**3.0**");
+        assert_eq!(t.rows[2][1], "_2.0_");
+    }
+
+    #[test]
+    fn mark_best_lower_is_better() {
+        let mut t = Table::new("", &["m", "v"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["b".into(), "3.0".into()]);
+        t.mark_best(1, false);
+        assert_eq!(t.rows[0][1], "**1.0**");
+    }
+
+    #[test]
+    fn mark_best_skips_non_numeric() {
+        let mut t = Table::new("", &["m", "v"]);
+        t.row(vec!["a".into(), "-".into()]);
+        t.row(vec!["b".into(), "3.0".into()]);
+        t.row(vec!["c".into(), "1.0".into()]);
+        t.mark_best(1, true);
+        assert_eq!(t.rows[1][1], "**3.0**");
+        assert_eq!(t.rows[0][1], "-");
+    }
+
+    #[test]
+    fn pct_and_bytes() {
+        assert_eq!(pct(0.7035), "70.35"); // paper-style 2dp
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1024 * 1024), "1.00 MiB");
+        assert!(human_bytes(17_770_000_000).starts_with("16.5")); // paper's 16.54 GB is GiB-ish
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

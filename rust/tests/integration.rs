@@ -1,0 +1,273 @@
+//! Integration tests across runtime + grads + quant + datastore + influence.
+//!
+//! These require built artifacts (`make artifacts`); they skip gracefully
+//! when the directory is missing so `cargo test` works on a fresh clone.
+
+use std::path::PathBuf;
+
+use qless::config::Config;
+use qless::corpus::{generate_corpus, Tokenizer};
+use qless::data::Dataset;
+use qless::eval::Benchmark;
+use qless::grads::Projector;
+use qless::model::{init_base, init_lora, Checkpoint};
+use qless::pipeline::Pipeline;
+use qless::quant::{datastore_bytes, Precision, Scheme};
+use qless::runtime::{Arg, Runtime};
+use qless::select::select_top_frac;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn tmp_run_dir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("qless_it_{tag}_{}", std::process::id()));
+    d.to_str().unwrap().to_string()
+}
+
+fn mini_config(tag: &str, artifacts_dir: &PathBuf) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts = artifacts_dir.to_str().unwrap().to_string();
+    cfg.run_dir = tmp_run_dir(tag);
+    cfg.corpus_size = 400;
+    cfg.warmup_epochs = 2;
+    cfg.finetune_epochs = 1;
+    cfg.val_per_task = 8;
+    cfg.eval_per_task = 16;
+    cfg.workers = 2;
+    cfg
+}
+
+/// The AOT train_step must implement textbook Adam: replicate one step on
+/// the host from the same inputs and compare the updated LoRA params.
+#[test]
+fn train_step_is_adam() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let info = rt.model("tiny").unwrap();
+    let tok = Tokenizer::default();
+    let data = Dataset::encode(generate_corpus(info.batch_train, 3, &tok, info.seq), &tok, info.seq);
+    let batch = qless::data::Batcher::sequential(&data, info.batch_train).next().unwrap();
+
+    let base = init_base(&info, 1);
+    let lora = init_lora(&info, 1);
+
+    // grad via grad_val with identity-ish projection is unavailable (k<dl),
+    // so recover the batch-mean gradient from two train_steps instead:
+    // with m=v=0, t=1: update = lr * ghat/(sqrt(ghat^2·c)+eps) — not linear.
+    // Simpler: run train_step twice with different lr and check the Adam
+    // invariants that ARE linear: m' = (1-β1)·g and v' = (1-β2)·g².
+    let exec = rt.exec(&info, "train_step").unwrap();
+    let run = |lr: f32| -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+        let out = exec
+            .run(&[
+                Arg::F32(&base, &[info.d_base]),
+                Arg::F32(&lora, &[info.d_lora]),
+                Arg::F32(&vec![0.0; info.d_lora], &[info.d_lora]),
+                Arg::F32(&vec![0.0; info.d_lora], &[info.d_lora]),
+                Arg::ScalarF32(1.0),
+                Arg::I32(&batch.tokens, &[info.batch_train, info.seq]),
+                Arg::F32(&batch.masks, &[info.batch_train, info.seq]),
+                Arg::ScalarF32(lr),
+            ])
+            .unwrap();
+        let mut it = out.into_iter();
+        let l = it.next().unwrap();
+        let m = it.next().unwrap();
+        let v = it.next().unwrap();
+        let loss = it.next().unwrap()[0];
+        (l, m, v, loss)
+    };
+    let (l1, m1, v1, loss1) = run(1e-3);
+    let (l2, m2, v2, loss2) = run(2e-3);
+    assert!((loss1 - loss2).abs() < 1e-6, "loss must not depend on lr");
+    assert_eq!(m1, m2, "optimizer state must not depend on lr");
+    assert_eq!(v1, v2);
+    // v' = (1-β2) g² ⇒ g = ±sqrt(v/(1-β2)); m' = (1-β1) g — signs must agree
+    let b1 = info.adam_b1 as f32;
+    let b2 = info.adam_b2 as f32;
+    for i in (0..info.d_lora).step_by(97) {
+        let g_from_m = m1[i] / (1.0 - b1);
+        let g_from_v = (v1[i] / (1.0 - b2)).sqrt();
+        assert!(
+            (g_from_m.abs() - g_from_v).abs() <= 2e-2 * g_from_v.max(1e-6) + 1e-6,
+            "idx {i}: |g| from m {} vs from v {}",
+            g_from_m.abs(),
+            g_from_v
+        );
+    }
+    // the update direction doubles with lr: (l2-lora) ≈ 2 (l1-lora)
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for i in 0..info.d_lora {
+        let d1 = (l1[i] - lora[i]) as f64;
+        let d2 = (l2[i] - lora[i]) as f64;
+        num += d2 * d1;
+        den += d1 * d1;
+    }
+    let ratio = num / den.max(1e-30);
+    assert!((ratio - 2.0).abs() < 0.01, "update/lr linearity: ratio {ratio}");
+}
+
+/// grad_val features must match host-side projection of the implicit
+/// gradient: project with R and with 2R — features must exactly double
+/// (projection is linear and inside the graph).
+#[test]
+fn projection_linearity_through_graph() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let info = rt.model("tiny").unwrap();
+    let tok = Tokenizer::default();
+    let data = Dataset::encode(generate_corpus(info.batch_grad, 5, &tok, info.seq), &tok, info.seq);
+    let batch = qless::data::Batcher::sequential(&data, info.batch_grad).next().unwrap();
+    let base = init_base(&info, 2);
+    let lora = init_lora(&info, 2);
+    let proj = Projector::new(7, info.d_lora, info.proj_dim);
+    let exec = rt.exec(&info, "grad_val").unwrap();
+    let run = |r: &[f32]| -> Vec<f32> {
+        exec.run(&[
+            Arg::F32(&base, &[info.d_base]),
+            Arg::F32(&lora, &[info.d_lora]),
+            Arg::I32(&batch.tokens, &[info.batch_grad, info.seq]),
+            Arg::F32(&batch.masks, &[info.batch_grad, info.seq]),
+            Arg::F32(r, &[info.d_lora, info.proj_dim]),
+        ])
+        .unwrap()
+        .remove(0)
+    };
+    let f1 = run(&proj.matrix);
+    let r2: Vec<f32> = proj.matrix.iter().map(|x| 2.0 * x).collect();
+    let f2 = run(&r2);
+    for (a, b) in f1.iter().zip(&f2) {
+        assert!((2.0 * a - b).abs() <= 1e-4 * b.abs().max(1e-3), "{a} {b}");
+    }
+}
+
+/// Full selection path at every precision: scores must be finite, bounded,
+/// and the 1-bit ranking must correlate strongly with the 16-bit ranking
+/// (the paper's core claim at the selection level).
+#[test]
+fn selection_consistent_across_precisions() {
+    let dir = require_artifacts!();
+    let cfg = mini_config("sel", &dir);
+    let mut pipe = Pipeline::new(cfg).unwrap();
+    let (ds16, b16) = pipe.build_datastore(Precision::new(16, Scheme::Absmax).unwrap()).unwrap();
+    let (ds1, b1) = pipe.build_datastore(Precision::new(1, Scheme::Sign).unwrap()).unwrap();
+
+    // measured sizes obey the accounting formula exactly
+    let n = pipe.corpus.len();
+    let k = pipe.info.proj_dim;
+    let c = pipe.cfg.warmup_epochs;
+    let overhead16 = 36 + 4 * c as u64;
+    let overhead1 = overhead16;
+    assert_eq!(
+        b16 - overhead16,
+        datastore_bytes(Precision::new(16, Scheme::Absmax).unwrap(), n, k, c)
+    );
+    assert_eq!(
+        b1 - overhead1,
+        datastore_bytes(Precision::new(1, Scheme::Sign).unwrap(), n, k, c)
+    );
+
+    for bench in Benchmark::ALL {
+        let s16 = pipe.influence_scores(&ds16, bench).unwrap();
+        let s1 = pipe.influence_scores(&ds1, bench).unwrap();
+        assert_eq!(s16.len(), n);
+        assert!(s16.iter().chain(&s1).all(|x| x.is_finite()));
+        // rank correlation via top-10% overlap
+        let t16 = select_top_frac(&s16, 0.10);
+        let t1 = select_top_frac(&s1, 0.10);
+        let overlap = t1.iter().filter(|i| t16.contains(i)).count() as f64 / t16.len() as f64;
+        assert!(
+            overlap > 0.3,
+            "{bench}: 1-bit vs 16-bit top-10% overlap only {overlap:.2}"
+        );
+    }
+    std::fs::remove_dir_all(pipe.run_dir()).ok();
+}
+
+/// Selection must strongly over-represent the benchmark-aligned source —
+/// the mechanism behind the paper's Fig. 5 and the LESS>random claim.
+#[test]
+fn selection_targets_aligned_source() {
+    let dir = require_artifacts!();
+    let cfg = mini_config("align", &dir);
+    let mut pipe = Pipeline::new(cfg).unwrap();
+    let (ds, _) = pipe.build_datastore(Precision::new(8, Scheme::Absmax).unwrap()).unwrap();
+    // SynArith ↔ syncot is the sharpest alignment (format-identical tasks)
+    let scores = pipe.influence_scores(&ds, Benchmark::SynArith).unwrap();
+    let sel = select_top_frac(&scores, 0.05);
+    let dist = qless::select::SourceDistribution::of(&pipe.corpus.samples, &sel);
+    let aligned = dist.frac(qless::corpus::Source::SynCot);
+    assert!(
+        aligned > 0.6,
+        "SynArith selection should be dominated by syncot (37% base rate), got {aligned:.2}: {}",
+        dist.render()
+    );
+    std::fs::remove_dir_all(pipe.run_dir()).ok();
+}
+
+/// The XLA (Pallas kernel) scoring path and the native path must agree on
+/// the final aggregated scores, not just per-tile results.
+#[test]
+fn xla_and_native_scoring_agree_end_to_end() {
+    let dir = require_artifacts!();
+    let mut cfg = mini_config("xlanative", &dir);
+    cfg.corpus_size = 300;
+    let mut pipe = Pipeline::new(cfg).unwrap();
+    let (ds, _) = pipe.build_datastore(Precision::new(4, Scheme::Absmax).unwrap()).unwrap();
+    let native = pipe.influence_scores(&ds, Benchmark::SynQA).unwrap();
+    pipe.cfg.xla_score = true;
+    let xla = pipe.influence_scores(&ds, Benchmark::SynQA).unwrap();
+    for (i, (a, b)) in native.iter().zip(&xla).enumerate() {
+        assert!((a - b).abs() < 1e-4, "sample {i}: native {a} vs xla {b}");
+    }
+    std::fs::remove_dir_all(pipe.run_dir()).ok();
+}
+
+/// Weight quantization (QLoRA ablation) degrades features gracefully:
+/// 8-bit features stay close to 16-bit ones, 4-bit drifts more but
+/// rankings remain correlated.
+#[test]
+fn weight_quantization_preserves_feature_geometry() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let info = rt.model("tiny").unwrap();
+    let tok = Tokenizer::default();
+    let data = Dataset::encode(generate_corpus(32, 9, &tok, info.seq), &tok, info.seq);
+    let base = init_base(&info, 3);
+    let ckpt = Checkpoint::fresh(info.d_lora, init_lora(&info, 3));
+    let proj = Projector::new(11, info.d_lora, info.proj_dim);
+    let feats = |bits: u8| {
+        let bq = qless::quant::weights::quantize_weights(&base, bits);
+        qless::grads::extract_val_features(&rt, &info, &bq, &ckpt, &data, &proj, 2).unwrap()
+    };
+    let f16 = feats(16);
+    let f8 = feats(8);
+    // cosine similarity of per-sample features across weight precisions
+    let mut cos_sum = 0f64;
+    for i in 0..f16.n {
+        let a = f16.row(i);
+        let b = f8.row(i);
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        cos_sum += (dot / (na * nb).max(1e-12)) as f64;
+    }
+    let mean_cos = cos_sum / f16.n as f64;
+    assert!(mean_cos > 0.95, "8-bit weights should barely move features: cos {mean_cos:.3}");
+}

@@ -1,0 +1,101 @@
+//! End-to-end pipeline test: the whole QLESS loop on a miniature workload
+//! (tiny model, small corpus, short training) with the paper's qualitative
+//! claims asserted at the end.
+//!
+//! Requires built artifacts; skips gracefully otherwise. This is the
+//! slowest test in the suite (~1–2 min) — it exercises every stage the way
+//! `examples/full_pipeline.rs` does, with assertions instead of prose.
+
+use std::path::PathBuf;
+
+use qless::config::Config;
+use qless::pipeline::{Method, Pipeline};
+use qless::quant::{Precision, Scheme};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn qless_beats_random_and_matches_less() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut cfg = Config::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts = dir.to_str().unwrap().into();
+    cfg.run_dir = std::env::temp_dir()
+        .join(format!("qless_e2e_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .into();
+    cfg.corpus_size = 800;
+    cfg.warmup_epochs = 2;
+    cfg.finetune_epochs = 3;
+    cfg.val_per_task = 12;
+    cfg.eval_per_task = 32;
+    cfg.select_frac = 0.05;
+    let mut pipe = Pipeline::new(cfg).unwrap();
+
+    let rand5 = pipe.run_method(Method::RandomFrac).unwrap();
+    let less16 = pipe.run_method(Method::Qless(Precision::new(16, Scheme::Absmax).unwrap())).unwrap();
+    let qless1 = pipe.run_method(Method::Qless(Precision::new(1, Scheme::Sign).unwrap())).unwrap();
+
+    eprintln!(
+        "rand5 {:.3}  less16 {:.3}  qless1 {:.3}",
+        rand5.average, less16.average, qless1.average
+    );
+
+    // structural guarantees
+    assert_eq!(rand5.scores.len(), 3);
+    for r in [&rand5, &less16, &qless1] {
+        for (&b, &s) in &r.scores {
+            assert!((0.0..=1.0).contains(&s), "{b}: {s}");
+        }
+    }
+    // storage: exactly the paper's 16x ratio (modulo fixed per-file overhead)
+    assert!(less16.storage_bytes > 14 * qless1.storage_bytes);
+    assert!(less16.storage_bytes <= 16 * qless1.storage_bytes);
+
+    // The paper's qualitative ordering, with WIDE slack: at this miniature
+    // scale (32 eval tasks/benchmark, 40-sample selections) one flipped
+    // task moves an average by ~1pt, so score comparisons here only guard
+    // against gross regressions. The statistically meaningful ordering
+    // check runs at table1 scale (corpus 2000+, 96 tasks) — see
+    // EXPERIMENTS.md Table 1, where every LESS/QLESS variant beats the
+    // random baselines.
+    // (a) targeted selection must not collapse far below random 5%
+    assert!(
+        qless1.average >= rand5.average - 0.08,
+        "QLESS 1-bit ({:.3}) collapsed vs random 5% ({:.3})",
+        qless1.average,
+        rand5.average
+    );
+    // (b) 1-bit ≈ 16-bit (within a few points)
+    assert!(
+        (qless1.average - less16.average).abs() < 0.10,
+        "QLESS 1-bit ({:.3}) should track LESS 16-bit ({:.3})",
+        qless1.average,
+        less16.average
+    );
+
+    // Fig. 5 mechanism: per-benchmark selections over-represent aligned
+    // sources vs the corpus mix for at least 2 of 3 benchmarks at 16-bit.
+    let mut aligned_hits = 0;
+    for bench in qless::eval::Benchmark::ALL {
+        let d = &less16.distributions[bench.name()];
+        let base_rate = match bench.aligned_source() {
+            qless::corpus::Source::SynFlan | qless::corpus::Source::SynCot => 0.372,
+            qless::corpus::Source::SynDolly => 0.056,
+            qless::corpus::Source::SynOasst => 0.204,
+        };
+        if d.frac(bench.aligned_source()) > base_rate {
+            aligned_hits += 1;
+        }
+    }
+    assert!(aligned_hits >= 2, "selection alignment too weak: {aligned_hits}/3");
+
+    std::fs::remove_dir_all(pipe.run_dir()).ok();
+}
