@@ -40,6 +40,16 @@ fn main() -> Result<()> {
     );
 
     // Influence-score the corpus against SynQA validation gradients.
+    // The scan streams each checkpoint block in shards under the config's
+    // memory budget (`--mem-budget-mb` / `--shard-rows`); shard size is an
+    // implementation knob, not a semantic — scores are bit-identical.
+    let rows = ds1.rows_per_shard(pipe.cfg.shard_rows, pipe.cfg.mem_budget_mb);
+    println!(
+        "\nscan: {} rows/shard, {} resident (block would be {})",
+        rows,
+        human_bytes(rows as u64 * ds1.header.resident_row_bytes()),
+        human_bytes(ds1.header.block_bytes())
+    );
     let s16 = pipe.influence_scores(&ds16, Benchmark::SynQA)?;
     let s1 = pipe.influence_scores(&ds1, Benchmark::SynQA)?;
     let top16 = select_top_frac(&s16, 0.05);

@@ -60,6 +60,26 @@ fn main() {
         );
         println!("{}", r.report_line());
 
+        // streamed read: same bytes, O(shard) resident — the scan path
+        let rows_per_shard = ds.rows_per_shard(0, 1).min(256);
+        let r = bench_cfg(
+            &format!("read_{bits}bit (sharded stream, ≤{rows_per_shard} rows resident)"),
+            file_bytes,
+            "B",
+            1,
+            5,
+            0.5,
+            &mut || {
+                for ci in 0..c {
+                    let mut sr = ds.shard_reader(ci, rows_per_shard).unwrap();
+                    while let Some(shard) = sr.next_shard().unwrap() {
+                        std::hint::black_box(shard.rows().data.len());
+                    }
+                }
+            },
+        );
+        println!("{}", r.report_line());
+
         let block = ds.load_checkpoint(0).unwrap();
         let r = bench_cfg(
             &format!("dequantize_{bits}bit (all rows)"),

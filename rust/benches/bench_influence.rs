@@ -9,8 +9,10 @@ use std::path::PathBuf;
 use qless::datastore::{Datastore, DatastoreWriter};
 use qless::grads::FeatureMatrix;
 use qless::influence::native::{scores_1bit, scores_dense, ValFeatures};
+use qless::influence::{score_datastore, ScoreOpts};
 use qless::quant::{Precision, Scheme};
 use qless::util::stats::bench;
+use qless::util::table::human_bytes;
 use qless::util::Rng;
 
 fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
@@ -56,6 +58,48 @@ fn main() {
             });
             println!("{}", r.report_line());
         }
+
+        // streamed scan: same scores, O(shard) resident instead of O(block)
+        let rows_per_shard = ds.rows_per_shard(0, 1); // 1 MiB budget
+        let resident = rows_per_shard as u64 * ds.header.resident_row_bytes();
+        let r = bench(
+            &format!(
+                "streamed_{bits}bit ({} resident vs {} block)",
+                human_bytes(resident),
+                human_bytes(ds.header.block_bytes()),
+            ),
+            pairs,
+            "pair",
+            || {
+                std::hint::black_box(
+                    score_datastore(
+                        &ds,
+                        std::slice::from_ref(&vraw),
+                        ScoreOpts { mem_budget_mb: 1, ..Default::default() },
+                        None,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+        println!("{}", r.report_line());
+    }
+
+    // the k=8192 regression shape (paper-scale projection dim): the seed
+    // popcount kernel panicked here; now it must simply be fast
+    {
+        let (n8, k8) = (2048usize, 8192usize);
+        let (ds, path) = build(1, n8, k8);
+        let block = ds.load_checkpoint(0).unwrap();
+        let val8 = ValFeatures::prepare(
+            &feats(nv, k8, 11),
+            Precision::new(1, Scheme::Sign).unwrap(),
+        );
+        let r = bench("popcount_1bit_k8192", (n8 * nv) as f64, "pair", || {
+            std::hint::black_box(scores_1bit(&block, &val8));
+        });
+        println!("{}", r.report_line());
+        std::fs::remove_file(path).ok();
     }
 
     // XLA Pallas-tile path (needs artifacts)

@@ -62,6 +62,15 @@ fn main() {
     let t = Timer::start("score");
     let scores = pipe.influence_scores(&ds, Benchmark::SynArith).unwrap();
     stage("influence scoring (1-bit popcount)", t.stop());
+    // the scan streams shards under the config budget instead of
+    // materializing the whole checkpoint block:
+    let rows = ds.rows_per_shard(pipe.cfg.shard_rows, pipe.cfg.mem_budget_mb);
+    println!(
+        "  scan resident: {} ({} rows/shard) vs {} whole-block",
+        qless::util::table::human_bytes(rows as u64 * ds.header.resident_row_bytes()),
+        rows,
+        qless::util::table::human_bytes(ds.header.block_bytes()),
+    );
 
     let sel = select_top_frac(&scores, 0.05);
     let t = Timer::start("finetune");
@@ -71,6 +80,9 @@ fn main() {
     let t = Timer::start("eval");
     pipe.evaluate_lora(&lora).unwrap();
     stage("3-benchmark eval", t.stop());
+
+    println!("\nstage-runner accounting (wall-clock + cache hits):");
+    print!("{}", pipe.stage_table().render());
 
     // worker scaling for extraction (fresh features each time)
     println!("\nextraction worker scaling (one checkpoint):");

@@ -43,6 +43,8 @@ OPTIONS (all Config keys work as --key value):
   --bits N            16 | 8 | 4 | 2 | 1      --scheme S   absmax | absmean
   --model-bits N      16 | 8 | 4 (QLoRA ablation)
   --corpus-size N     --seed N   --select-frac F   --workers N
+  --shard-rows N      rows per influence-scan shard (0 = from budget)
+  --mem-budget-mb N   influence-scan memory budget (default 64 MiB)
   --run-dir DIR       --artifacts DIR
   --fast              shrink workloads        -v / -q      verbosity
 ";
@@ -118,6 +120,14 @@ mod tests {
         let c = p(&["xp", "table1", "--seed", "3"]).unwrap();
         assert_eq!(c.positional, vec!["table1"]);
         assert_eq!(c.config.seed, 3);
+    }
+
+    #[test]
+    fn scan_flags_parse() {
+        let c = p(&["score", "--shard-rows", "2048", "--mem-budget-mb", "32"]).unwrap();
+        assert_eq!(c.config.shard_rows, 2048);
+        assert_eq!(c.config.mem_budget_mb, 32);
+        assert!(p(&["score", "--mem-budget-mb", "0"]).is_err()); // validate()
     }
 
     #[test]

@@ -9,6 +9,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::quant::Scheme;
 
+/// Default influence-scan memory budget (MiB). Shared by [`Config`] and
+/// `influence::ScoreOpts` so the CLI and library paths shard identically.
+pub const DEFAULT_MEM_BUDGET_MB: usize = 64;
+
 /// Everything an end-to-end QLESS run needs. Field names double as config
 /// file keys (`key = value`, `#` comments) and `--key value` CLI overrides
 /// (underscores and dashes are interchangeable).
@@ -50,6 +54,11 @@ pub struct Config {
     pub workers: usize,
     /// Use the XLA (AOT kernel) scoring path instead of the native one.
     pub xla_score: bool,
+    /// Rows per influence-scan shard; 0 = derive from `mem_budget_mb`.
+    pub shard_rows: usize,
+    /// Influence-scan memory budget in MiB (bounds the streamed shard
+    /// buffers; the scan never materializes a whole checkpoint block).
+    pub mem_budget_mb: usize,
 }
 
 impl Default for Config {
@@ -73,6 +82,8 @@ impl Default for Config {
             eval_per_task: 128,
             workers: default_workers(),
             xla_score: false,
+            shard_rows: 0,
+            mem_budget_mb: DEFAULT_MEM_BUDGET_MB,
         }
     }
 }
@@ -115,6 +126,8 @@ impl Config {
             "eval_per_task" => self.eval_per_task = parse(v, &key)?,
             "workers" => self.workers = parse(v, &key)?,
             "xla_score" => self.xla_score = parse_bool(v, &key)?,
+            "shard_rows" => self.shard_rows = parse(v, &key)?,
+            "mem_budget_mb" => self.mem_budget_mb = parse(v, &key)?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -153,6 +166,9 @@ impl Config {
         }
         if self.bits != 16 && self.bits != 1 && self.scheme == Scheme::Sign {
             bail!("scheme=sign only valid at 1-bit");
+        }
+        if self.mem_budget_mb == 0 {
+            bail!("mem_budget_mb must be >= 1 (use shard_rows for explicit shard sizing)");
         }
         Ok(())
     }
@@ -217,6 +233,22 @@ mod tests {
         assert!(c.set("warmup_frac", "1.5").is_err());
         assert!(c.set("nonsense", "1").is_err());
         assert!(c.set("xla_score", "maybe").is_err());
+        assert!(c.set("shard_rows", "lots").is_err());
+        assert!(c.set("mem_budget_mb", "-3").is_err());
+    }
+
+    #[test]
+    fn scan_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.shard_rows, 0); // auto (budget-derived)
+        assert_eq!(c.mem_budget_mb, 64);
+        c.set("shard-rows", "4096").unwrap();
+        c.set("mem-budget-mb", "128").unwrap();
+        assert_eq!(c.shard_rows, 4096);
+        assert_eq!(c.mem_budget_mb, 128);
+        c.validate().unwrap();
+        c.set("mem_budget_mb", "0").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]

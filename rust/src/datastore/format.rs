@@ -92,6 +92,42 @@ impl Header {
     pub fn file_bytes(&self) -> u64 {
         Self::BYTES as u64 + self.block_bytes() * self.n_checkpoints as u64
     }
+
+    // -- shard geometry -----------------------------------------------------
+    //
+    // A shard is a contiguous row range of one checkpoint block. The on-disk
+    // layout is unchanged (shards are a read-side view), so shard readers and
+    // the whole-block reader are interchangeable byte-for-byte.
+
+    /// Byte offset of checkpoint `c`'s block (its η word).
+    pub fn block_offset(&self, c: usize) -> u64 {
+        Self::BYTES as u64 + self.block_bytes() * c as u64
+    }
+
+    /// Byte offset of the scales section of checkpoint `c` (just after η).
+    /// At 16-bit the section is empty and this equals [`Self::rows_offset`].
+    pub fn scales_offset(&self, c: usize) -> u64 {
+        self.block_offset(c) + 4
+    }
+
+    /// Byte offset of row `row`'s packed bytes within checkpoint `c`.
+    pub fn row_offset(&self, c: usize, row: u64) -> u64 {
+        self.scales_offset(c) + self.scales_bytes() + self.row_stride as u64 * row
+    }
+
+    /// Resident bytes one streamed row costs a shard buffer (packed row
+    /// plus its f32 scale; 16-bit rows carry no scale).
+    pub fn resident_row_bytes(&self) -> u64 {
+        self.row_stride as u64 + if self.precision.bits == 16 { 0 } else { 4 }
+    }
+
+    /// Largest shard (in rows) whose resident buffers fit `budget_bytes`,
+    /// clamped to `[1, n_samples]` so tiny budgets still make progress.
+    pub fn shard_rows_for_budget(&self, budget_bytes: u64) -> usize {
+        let per_row = self.resident_row_bytes().max(1);
+        let rows = (budget_bytes / per_row).max(1);
+        (rows.min(self.n_samples.max(1)) as usize).max(1)
+    }
 }
 
 fn scheme_tag(s: Scheme) -> u8 {
@@ -150,6 +186,31 @@ mod tests {
         b3[9] = 7; // scheme tag
         assert!(Header::decode(&b3).is_err());
         assert!(Header::decode(&[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn shard_geometry_tiles_the_block() {
+        for bits in [1u8, 2, 4, 8, 16] {
+            let h = hdr(bits);
+            for c in 0..h.n_checkpoints as usize {
+                assert_eq!(h.scales_offset(c), h.block_offset(c) + 4);
+                assert_eq!(h.row_offset(c, 0), h.scales_offset(c) + h.scales_bytes());
+                // the last row ends exactly at the next block's offset
+                let end = h.row_offset(c, h.n_samples - 1) + h.row_stride as u64;
+                assert_eq!(end, h.block_offset(c) + h.block_bytes(), "{bits}-bit ckpt {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn budget_to_shard_rows() {
+        let h = hdr(8); // row_stride 512 + 4-byte scale
+        assert_eq!(h.resident_row_bytes(), 516);
+        assert_eq!(h.shard_rows_for_budget(516 * 10), 10);
+        assert_eq!(h.shard_rows_for_budget(0), 1); // floor at one row
+        assert_eq!(h.shard_rows_for_budget(u64::MAX), 1000); // cap at n
+        let h16 = hdr(16);
+        assert_eq!(h16.resident_row_bytes(), 1024); // no scales at 16-bit
     }
 
     #[test]

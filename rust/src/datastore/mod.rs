@@ -14,12 +14,21 @@
 //! per checkpoint:
 //!   eta f32 | scales [n_samples × f32] | rows [n_samples × row_stride u8]
 //! ```
-//! 16-bit blocks store bf16 codes (no scales section semantics — scales are
-//! written as zeros and ignored). Sub-byte rows are packed little-endian
+//! 16-bit blocks store bf16 codes and omit the scales section entirely
+//! (bf16 rows are self-describing). Sub-byte rows are packed little-endian
 //! within bytes (`quant::pack`).
+//!
+//! Two read paths over the same layout:
+//!
+//! * [`Datastore::load_checkpoint`] — materialize one whole block
+//!   (`O(n × row_stride)` resident), the original reader.
+//! * [`Datastore::shard_reader`] — stream the block in fixed-size row
+//!   shards under a memory budget (`O(rows_per_shard × row_stride)`
+//!   resident); byte-identical rows, so scores match the block path
+//!   exactly.
 
 pub mod format;
 pub mod store;
 
 pub use format::{Header, MAGIC, VERSION};
-pub use store::{CheckpointBlock, Datastore, DatastoreWriter};
+pub use store::{CheckpointBlock, Datastore, DatastoreWriter, RowsView, Shard, ShardReader};

@@ -1,9 +1,12 @@
-//! Datastore writer / reader over the `format` layout.
+//! Datastore writer / readers over the `format` layout.
 //!
 //! The writer streams rows checkpoint-by-checkpoint (constant memory, fed
-//! by the extraction pipeline); the reader loads whole checkpoint blocks —
-//! the influence scorer's access pattern is a full scan per validation
-//! batch, so block granularity maximizes sequential bandwidth.
+//! by the extraction pipeline). Two readers share the layout: the
+//! whole-block loader ([`Datastore::load_checkpoint`], `O(block)`
+//! resident) and the streaming [`ShardReader`] the influence scan uses —
+//! fixed-size row shards under a memory budget, still sequential within a
+//! checkpoint, `O(shard)` resident. Both decode rows through [`RowsView`],
+//! so they are byte- and score-identical.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -13,7 +16,7 @@ use anyhow::{bail, Context, Result};
 
 use super::format::Header;
 use crate::quant::pack::{pack_codes, PackedRow};
-use crate::quant::scheme::{quantize_row, QuantizedRow};
+use crate::quant::scheme::{try_quantize_row, QuantizedRow};
 use crate::quant::Precision;
 use crate::util::bits::{bf16_to_f32, f32_to_bf16};
 
@@ -81,20 +84,42 @@ impl DatastoreWriter {
     /// Append one sample's feature row. Rows must arrive in sample order.
     /// For bits < 16 the row is quantized with the datastore's scheme; at
     /// 16-bit features are stored as bf16 verbatim (the LESS baseline).
+    ///
+    /// Non-finite features are rejected here with a clear error — at every
+    /// bitwidth — so a NaN gradient can never be laundered into valid-
+    /// looking codes (sign path) or a NaN score that only explodes in
+    /// `select::topk` checkpoints later.
     pub fn append_features(&mut self, features: &[f32]) -> Result<()> {
         if features.len() != self.header.k as usize {
             bail!("feature dim {} != k {}", features.len(), self.header.k);
         }
         let p = self.header.precision;
         if p.bits == 16 {
+            if let Some(i) = features.iter().position(|x| !x.is_finite()) {
+                bail!(
+                    "non-finite gradient feature {} at index {i} (sample {} of checkpoint {}): \
+                     rejected at datastore-write time",
+                    features[i],
+                    self.rows_in_ckpt,
+                    self.ckpts_done
+                );
+            }
             self.append_row_raw(None, features)
         } else {
-            let q = quantize_row(features, p.bits, p.scheme);
+            let q = try_quantize_row(features, p.bits, p.scheme).with_context(|| {
+                format!(
+                    "quantizing sample {} of checkpoint {}",
+                    self.rows_in_ckpt, self.ckpts_done
+                )
+            })?;
             self.append_quantized(&q)
         }
     }
 
-    /// Append an already-quantized row (the XLA quantization path).
+    /// Append an already-quantized row (the XLA quantization path). The
+    /// scale is checked for finiteness — an external quantizer fed a NaN
+    /// gradient produces valid-looking ±codes with a NaN scale, which
+    /// must not reach disk.
     pub fn append_quantized(&mut self, q: &QuantizedRow) -> Result<()> {
         let p = self.header.precision;
         if p.bits == 16 {
@@ -102,6 +127,15 @@ impl DatastoreWriter {
         }
         if q.codes.len() != self.header.k as usize {
             bail!("code dim {} != k {}", q.codes.len(), self.header.k);
+        }
+        if !q.scale.is_finite() {
+            bail!(
+                "non-finite quantization scale {} (sample {} of checkpoint {}): \
+                 rejected at datastore-write time",
+                q.scale,
+                self.rows_in_ckpt,
+                self.ckpts_done
+            );
         }
         let packed = pack_codes(&q.codes, p.bits, q.scale)?;
         self.append_packed_bytes(q.scale, &packed.bytes)
@@ -184,21 +218,32 @@ impl DatastoreWriter {
 // reader
 // ---------------------------------------------------------------------------
 
-/// One checkpoint's worth of features, resident in memory.
-#[derive(Debug, Clone)]
-pub struct CheckpointBlock {
+/// A borrowed view over a contiguous run of packed feature rows — the
+/// common currency of the scoring kernels. Both the whole-block reader
+/// ([`CheckpointBlock::rows`]) and the streaming shard reader
+/// ([`ShardReader`]) hand out this same view, which is what makes the two
+/// paths bit-identical: the decode logic lives here, once.
+#[derive(Debug, Clone, Copy)]
+pub struct RowsView<'a> {
     pub precision: Precision,
-    pub n: usize,
     pub k: usize,
-    pub eta: f32,
-    /// Per-row scales (empty at 16-bit).
-    pub scales: Vec<f32>,
-    /// Packed row data, `n × row_stride` bytes.
-    pub data: Vec<u8>,
     pub row_stride: usize,
+    /// Per-row scales (empty at 16-bit).
+    pub scales: &'a [f32],
+    /// Packed row data, `n × row_stride` bytes.
+    pub data: &'a [u8],
 }
 
-impl CheckpointBlock {
+impl<'a> RowsView<'a> {
+    /// Number of rows in the view.
+    pub fn n(&self) -> usize {
+        self.data.len() / self.row_stride
+    }
+
+    pub fn row_bytes(&self, i: usize) -> &'a [u8] {
+        &self.data[i * self.row_stride..(i + 1) * self.row_stride]
+    }
+
     /// Dequantize row `i` to f32 features.
     pub fn row_f32(&self, i: usize) -> Vec<f32> {
         let raw = self.row_bytes(i);
@@ -227,6 +272,43 @@ impl CheckpointBlock {
             scale: 0.0,
         };
         crate::quant::pack::unpack_codes(&packed)
+    }
+}
+
+/// One checkpoint's worth of features, resident in memory.
+#[derive(Debug, Clone)]
+pub struct CheckpointBlock {
+    pub precision: Precision,
+    pub n: usize,
+    pub k: usize,
+    pub eta: f32,
+    /// Per-row scales (empty at 16-bit).
+    pub scales: Vec<f32>,
+    /// Packed row data, `n × row_stride` bytes.
+    pub data: Vec<u8>,
+    pub row_stride: usize,
+}
+
+impl CheckpointBlock {
+    /// Borrow the block's rows as the scoring kernels' common view.
+    pub fn rows(&self) -> RowsView<'_> {
+        RowsView {
+            precision: self.precision,
+            k: self.k,
+            row_stride: self.row_stride,
+            scales: &self.scales,
+            data: &self.data,
+        }
+    }
+
+    /// Dequantize row `i` to f32 features.
+    pub fn row_f32(&self, i: usize) -> Vec<f32> {
+        self.rows().row_f32(i)
+    }
+
+    /// Integer codes of row `i` (bits < 16).
+    pub fn row_codes(&self, i: usize) -> Vec<i8> {
+        self.rows().row_codes(i)
     }
 
     pub fn row_bytes(&self, i: usize) -> &[u8] {
@@ -264,6 +346,42 @@ impl Datastore {
         self.header.file_bytes()
     }
 
+    /// Resolve the effective rows-per-shard for a scan: an explicit
+    /// `shard_rows` wins; otherwise the largest shard that fits
+    /// `mem_budget_mb` of resident buffer. Always in `[1, n_samples]`.
+    pub fn rows_per_shard(&self, shard_rows: usize, mem_budget_mb: usize) -> usize {
+        let n = self.n_samples().max(1);
+        if shard_rows > 0 {
+            return shard_rows.min(n);
+        }
+        let budget = (mem_budget_mb.max(1) as u64) << 20;
+        self.header.shard_rows_for_budget(budget)
+    }
+
+    /// Open a streaming reader over checkpoint `c`, yielding shards of at
+    /// most `rows_per_shard` rows. Peak resident memory is the shard
+    /// buffers (`rows_per_shard × (row_stride + 4)` bytes), not the block.
+    pub fn shard_reader(&self, c: usize, rows_per_shard: usize) -> Result<ShardReader> {
+        if c >= self.n_checkpoints() {
+            bail!("checkpoint {c} out of range");
+        }
+        let mut file = File::open(&self.path)
+            .with_context(|| format!("opening datastore {:?}", self.path))?;
+        file.seek(SeekFrom::Start(self.header.block_offset(c)))?;
+        let mut eta_b = [0u8; 4];
+        file.read_exact(&mut eta_b)?;
+        Ok(ShardReader {
+            file,
+            header: self.header,
+            ckpt: c,
+            eta: f32::from_le_bytes(eta_b),
+            rows_per_shard: rows_per_shard.max(1),
+            next_row: 0,
+            scales: Vec::new(),
+            data: Vec::new(),
+        })
+    }
+
     /// Load checkpoint block `c` into memory.
     pub fn load_checkpoint(&self, c: usize) -> Result<CheckpointBlock> {
         if c >= self.n_checkpoints() {
@@ -296,6 +414,109 @@ impl Datastore {
             data,
             row_stride: h.row_stride as usize,
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streaming shard reader
+// ---------------------------------------------------------------------------
+
+/// One streamed shard: a contiguous row range `[start, start + rows.n())`
+/// of one checkpoint, borrowing the reader's reusable buffers.
+#[derive(Debug)]
+pub struct Shard<'a> {
+    /// Checkpoint index this shard belongs to.
+    pub ckpt: usize,
+    /// Global row index of the shard's first row.
+    pub start: usize,
+    /// The checkpoint's LR weight η.
+    pub eta: f32,
+    rows: RowsView<'a>,
+}
+
+impl<'a> Shard<'a> {
+    pub fn rows(&self) -> RowsView<'a> {
+        self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.n()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.n() == 0
+    }
+}
+
+/// Streams one checkpoint's rows in fixed-size shards. Buffers are
+/// allocated once at the shard size and reused, so a full scan's peak
+/// allocation is `O(rows_per_shard × row_stride)` — the `--mem-budget-mb`
+/// contract — instead of `O(n × row_stride)` like [`Datastore::load_checkpoint`].
+pub struct ShardReader {
+    file: File,
+    header: Header,
+    ckpt: usize,
+    eta: f32,
+    rows_per_shard: usize,
+    next_row: usize,
+    scales: Vec<f32>,
+    data: Vec<u8>,
+}
+
+impl ShardReader {
+    /// The checkpoint's LR weight η (read once at open).
+    pub fn eta(&self) -> f32 {
+        self.eta
+    }
+
+    /// Rows per full shard (the final shard may be shorter).
+    pub fn rows_per_shard(&self) -> usize {
+        self.rows_per_shard
+    }
+
+    /// Peak resident buffer bytes this reader will ever hold.
+    pub fn resident_bytes(&self) -> u64 {
+        self.rows_per_shard as u64 * self.header.resident_row_bytes()
+    }
+
+    /// Read the next shard, or `None` when the checkpoint is exhausted.
+    /// The returned shard borrows the reader's internal buffers.
+    pub fn next_shard(&mut self) -> Result<Option<Shard<'_>>> {
+        let n = self.header.n_samples as usize;
+        if self.next_row >= n {
+            return Ok(None);
+        }
+        let start = self.next_row;
+        let rows = self.rows_per_shard.min(n - start);
+        let h = &self.header;
+        if h.precision.bits != 16 {
+            // the row buffer doubles as the scale-read scratch (scales are
+            // parsed out before the rows overwrite it), so peak resident
+            // stays at the documented row_stride + 4 bytes per row
+            self.file.seek(SeekFrom::Start(h.scales_offset(self.ckpt) + 4 * start as u64))?;
+            self.data.resize(4 * rows, 0);
+            self.file.read_exact(&mut self.data)?;
+            self.scales.clear();
+            self.scales.extend(
+                self.data.chunks(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+            );
+        }
+        self.file.seek(SeekFrom::Start(h.row_offset(self.ckpt, start as u64)))?;
+        self.data.resize(h.row_stride as usize * rows, 0);
+        self.file.read_exact(&mut self.data)?;
+        self.next_row = start + rows;
+        Ok(Some(Shard {
+            ckpt: self.ckpt,
+            start,
+            eta: self.eta,
+            rows: RowsView {
+                precision: h.precision,
+                k: h.k as usize,
+                row_stride: h.row_stride as usize,
+                scales: &self.scales,
+                data: &self.data,
+            },
+        }))
     }
 }
 
@@ -413,6 +634,39 @@ mod tests {
     }
 
     #[test]
+    fn writer_rejects_non_finite_rows_at_every_bitwidth() {
+        let dir = tmpdir();
+        for bits in [16u8, 8, 4, 2, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let path = dir.join(format!("nan_{bits}.qlds"));
+            let mut w = DatastoreWriter::create(&path, p, 2, 8, 1).unwrap();
+            w.begin_checkpoint(1.0).unwrap();
+            let mut row = [0.25f32; 8];
+            row[3] = f32::NAN;
+            let err = w.append_features(&row).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("non-finite"),
+                "{bits}-bit NaN not rejected: {err:#}"
+            );
+            row[3] = f32::INFINITY;
+            assert!(w.append_features(&row).is_err(), "{bits}-bit Inf not rejected");
+            // the pre-quantized path must reject a NaN scale too
+            if bits != 16 {
+                let q = QuantizedRow { codes: vec![0i8; 8], scale: f32::NAN };
+                let err = w.append_quantized(&q).unwrap_err();
+                assert!(format!("{err:#}").contains("non-finite"), "{bits}-bit: {err:#}");
+            }
+            // clean rows still accepted after a rejected one
+            w.append_features(&[0.5; 8]).unwrap();
+            w.append_features(&[-0.5; 8]).unwrap();
+            w.end_checkpoint().unwrap();
+            w.finalize().unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn writer_enforces_protocol() {
         let dir = tmpdir();
         let p = Precision::new(8, Scheme::Absmax).unwrap();
@@ -427,6 +681,90 @@ mod tests {
         assert!(w.append_features(&[1.0; 8]).is_err()); // too many
         w.end_checkpoint().unwrap();
         w.finalize().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_reader_matches_block_bytes() {
+        // Streamed shards must reproduce the whole-block reader's bytes and
+        // scales exactly, for every bitwidth and a shard size that does NOT
+        // divide n (final short shard).
+        let dir = tmpdir();
+        let (n, k, c) = (13usize, 96usize, 2usize);
+        for bits in [16u8, 8, 4, 2, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let path = dir.join(format!("shard_{bits}.qlds"));
+            let mut w = DatastoreWriter::create(&path, p, n, k, c).unwrap();
+            for ci in 0..c {
+                w.begin_checkpoint(0.5 * (ci + 1) as f32).unwrap();
+                for row in features(n, k, ci as u64) {
+                    w.append_features(&row).unwrap();
+                }
+                w.end_checkpoint().unwrap();
+            }
+            w.finalize().unwrap();
+            let ds = Datastore::open(&path).unwrap();
+            for ci in 0..c {
+                let block = ds.load_checkpoint(ci).unwrap();
+                for shard_rows in [1usize, 4, 5, n, n + 3] {
+                    let mut r = ds.shard_reader(ci, shard_rows).unwrap();
+                    assert_eq!(r.eta(), block.eta, "{bits}-bit eta");
+                    let mut seen = 0usize;
+                    while let Some(shard) = r.next_shard().unwrap() {
+                        assert_eq!(shard.start, seen);
+                        assert_eq!(shard.ckpt, ci);
+                        let rows = shard.rows();
+                        for j in 0..rows.n() {
+                            let g = shard.start + j;
+                            assert_eq!(
+                                rows.row_bytes(j),
+                                block.row_bytes(g),
+                                "{bits}-bit ckpt {ci} row {g} (shard_rows {shard_rows})"
+                            );
+                            if bits != 16 {
+                                assert_eq!(rows.scales[j], block.scales[g]);
+                            }
+                        }
+                        seen += rows.n();
+                    }
+                    assert_eq!(seen, n, "{bits}-bit shard_rows {shard_rows}");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_reader_bounds_resident_memory() {
+        let dir = tmpdir();
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = dir.join("budget.qlds");
+        let (n, k) = (64usize, 128usize);
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        for row in features(n, k, 0) {
+            w.append_features(&row).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        let ds = Datastore::open(&path).unwrap();
+        // budget for ~8 rows: (128 + 4) bytes/row resident
+        let rows = ds.header.shard_rows_for_budget(8 * (128 + 4));
+        assert_eq!(rows, 8);
+        let mut r = ds.shard_reader(0, rows).unwrap();
+        assert!(r.resident_bytes() <= 8 * (128 + 4));
+        let mut shards = 0;
+        while let Some(shard) = r.next_shard().unwrap() {
+            assert!(shard.len() <= 8);
+            // the reusable buffers never exceed the shard size
+            shards += 1;
+        }
+        assert_eq!(shards, 8); // 64 rows / 8 per shard
+        // explicit shard_rows wins over budget; both clamp to [1, n]
+        assert_eq!(ds.rows_per_shard(13, 1), 13);
+        assert_eq!(ds.rows_per_shard(10_000, 1), n);
+        assert!(ds.rows_per_shard(0, 1) >= 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -88,6 +88,10 @@ pub fn table1(base_cfg: &Config, scale: Scale) -> Result<()> {
             t.mark_best(col, true);
         }
         report.add_table(t);
+        // per-stage wall-clock for this model's whole method grid, with a
+        // JSON mirror that survives the report.json assignment below
+        report.add_table(pipe.stage_table());
+        model_json.set("stage_costs", pipe.stages.to_json());
         all_json.set(model, model_json);
     }
     report.json = all_json;
@@ -182,6 +186,8 @@ pub fn table3(base_cfg: &Config, scale: Scale) -> Result<()> {
     }
     report.add_table(t);
     report.json = j;
+    // after the json assignment so the stage_costs key survives
+    report.add_stage_costs(&pipe.stages);
     report.note("Paper finding to check: absmean ≥ absmax at coarse bit widths (zero-bin effect), absmax better at 8/16-bit.");
     report.emit(std::path::Path::new("reports"))?;
     Ok(())

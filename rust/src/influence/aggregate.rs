@@ -1,24 +1,53 @@
 //! Checkpoint aggregation (the outer sum of Eq. 7):
 //! Inf(z) = Σ_i η_i · mean_{z'} ⟨q̂_{z,i}, q̂_{z',i}⟩.
 //!
-//! For each warmup checkpoint: load its datastore block, prepare the same-
-//! checkpoint validation features at the datastore's precision, score with
-//! the fastest applicable path (popcount at 1-bit, dense otherwise, or the
-//! XLA kernel when requested), weight by the checkpoint's η_i, accumulate.
+//! For each warmup checkpoint: prepare the same-checkpoint validation
+//! features once at the datastore's precision, then **stream** the
+//! checkpoint's rows in fixed-size shards (`Datastore::shard_reader`),
+//! score each shard with the fastest applicable path (popcount at 1-bit,
+//! dense otherwise, or the XLA kernel when requested), weight by η_i, and
+//! accumulate the per-shard partial scores. Peak resident memory during a
+//! scan is the shard buffers — bounded by `--mem-budget-mb` — instead of
+//! the whole `n × row_stride` block the pre-shard reader materialized.
+//!
+//! Per-sample scores only depend on that sample's row, so the streamed
+//! result is bit-identical to the old whole-block scan (property-tested in
+//! `tests/sharding.rs`).
 
 use anyhow::Result;
 
 use crate::datastore::Datastore;
 use crate::grads::FeatureMatrix;
-use crate::influence::native::{scores_1bit, scores_dense, ValFeatures};
-use crate::influence::xla::scores_xla;
-use crate::info;
+use crate::influence::native::{scores_1bit_rows, scores_dense_rows, ValFeatures};
+use crate::influence::xla::{pack_val_tiles, scores_xla_rows};
 use crate::runtime::{ModelInfo, Runtime};
+use crate::{info, warn_};
+
+/// Default scan memory budget when neither `ScoreOpts` nor the config
+/// specifies one: comfortably larger than one typical shard of val
+/// features, far smaller than paper-scale checkpoint blocks (≈ 4 GB).
+/// One constant shared with [`crate::config::Config`] so the CLI and
+/// library defaults can't diverge.
+pub use crate::config::DEFAULT_MEM_BUDGET_MB;
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ScoreOpts {
-    /// Route the per-checkpoint scoring through the AOT Pallas kernel.
+    /// Route the per-shard scoring through the AOT Pallas kernel.
     pub use_xla: bool,
+    /// Fixed rows per shard; 0 = derive from `mem_budget_mb`.
+    pub shard_rows: usize,
+    /// Scan memory budget in MiB; 0 = [`DEFAULT_MEM_BUDGET_MB`].
+    pub mem_budget_mb: usize,
+}
+
+impl ScoreOpts {
+    pub fn effective_budget_mb(&self) -> usize {
+        if self.mem_budget_mb == 0 {
+            DEFAULT_MEM_BUDGET_MB
+        } else {
+            self.mem_budget_mb
+        }
+    }
 }
 
 /// Score every training sample in `ds` against per-checkpoint validation
@@ -39,31 +68,77 @@ pub fn score_datastore(
         val_per_ckpt.len()
     );
     let n = ds.n_samples();
+    let precision = ds.header.precision;
+    let k = ds.header.k as usize;
+    let mut rows_per_shard = ds.rows_per_shard(opts.shard_rows, opts.effective_budget_mb());
+    if opts.use_xla {
+        if let Some((_, info)) = rt_info {
+            // round down to whole kernel tiles so tail padding doesn't add
+            // a nearly-empty launch per shard; shards below one tile must
+            // round *up* to tile_q, which can exceed a very small budget
+            let rounded = (rows_per_shard / info.tile_q).max(1) * info.tile_q;
+            if rounded > rows_per_shard {
+                warn_!(
+                    "XLA scan needs at least one {}-row tile per shard; \
+                     resident memory may exceed the requested budget",
+                    info.tile_q
+                );
+            }
+            rows_per_shard = rounded;
+        }
+    } else if n >= 256 {
+        // the native kernels keep small jobs serial (pool wakeup costs
+        // more than the work: < 256 rows or < 8M inner ops per shard);
+        // shards under those thresholds serialize the whole scan — legal,
+        // but worth a loud note on a multi-core box
+        let nv = val_per_ckpt.first().map(|v| v.n).unwrap_or(0);
+        let work_per_row =
+            if precision.bits == 1 { nv * k.div_ceil(64) } else { nv * k } as u64;
+        let whole_scan_parallel = (n as u64) * work_per_row >= 8_000_000;
+        let shard_parallel =
+            rows_per_shard >= 256 && (rows_per_shard as u64) * work_per_row >= 8_000_000;
+        if whole_scan_parallel && !shard_parallel {
+            warn_!(
+                "scan shards of {rows_per_shard} rows fall below the parallel threshold; \
+                 raise --mem-budget-mb or --shard-rows to parallelize the scan"
+            );
+        }
+    }
     let mut total = vec![0f32; n];
     for ci in 0..c {
-        let block = ds.load_checkpoint(ci)?;
-        let val = ValFeatures::prepare(&val_per_ckpt[ci], block.precision);
-        let t0 = std::time::Instant::now();
-        let scores = if opts.use_xla {
-            let (rt, info) =
-                rt_info.ok_or_else(|| anyhow::anyhow!("XLA scoring requires a runtime"))?;
-            scores_xla(rt, info, &block, &val)?
-        } else if block.precision.bits == 1 {
-            scores_1bit(&block, &val)
-        } else {
-            scores_dense(&block, &val)
+        // prepared once per checkpoint, reused by every shard of that
+        // checkpoint — val features are never re-read or re-packed per shard
+        let val = ValFeatures::try_prepare(&val_per_ckpt[ci], precision)?;
+        let val_tiles = match (opts.use_xla, rt_info) {
+            (true, Some((_, info))) => Some(pack_val_tiles(info, &val)),
+            (true, None) => return Err(anyhow::anyhow!("XLA scoring requires a runtime")),
+            _ => None,
         };
+        let t0 = std::time::Instant::now();
+        let mut reader = ds.shard_reader(ci, rows_per_shard)?;
+        let eta = reader.eta();
+        let mut shards = 0usize;
+        while let Some(shard) = reader.next_shard()? {
+            let rows = shard.rows();
+            let scores = if let Some(tiles) = &val_tiles {
+                let (rt, info) = rt_info.expect("checked above");
+                scores_xla_rows(rt, info, &rows, tiles)?
+            } else if precision.bits == 1 {
+                scores_1bit_rows(&rows, &val)
+            } else {
+                scores_dense_rows(&rows, &val)
+            };
+            for (t, s) in total[shard.start..shard.start + rows.n()].iter_mut().zip(&scores) {
+                *t += eta * s;
+            }
+            shards += 1;
+        }
         info!(
-            "scored checkpoint {ci} (η={:.2e}, {}×{} vs {} val) in {:.2}s",
-            block.eta,
-            n,
-            block.k,
+            "scored checkpoint {ci} (η={eta:.2e}, {n}×{} vs {} val, {shards} shards ≤{rows_per_shard} rows) in {:.2}s",
+            ds.header.k,
             val.n(),
             t0.elapsed().as_secs_f64()
         );
-        for (t, s) in total.iter_mut().zip(&scores) {
-            *t += block.eta * s;
-        }
     }
     Ok(total)
 }
@@ -127,6 +202,47 @@ mod tests {
         let s = score_datastore(&ds, &vals, ScoreOpts::default(), None).unwrap();
         assert_eq!(s.len(), n);
         assert!(s.iter().all(|x| x.is_finite() && x.abs() <= 0.75 + 1e-5));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn shard_size_does_not_change_scores() {
+        // streaming granularity is an implementation knob, not a semantic:
+        // every shard size must give bit-identical totals
+        let (n, k) = (11, 64);
+        for bits in [16u8, 8, 1] {
+            let (ds, p) = build_ds_keep(bits, &[0.7, 0.2], n, k);
+            let vals = vec![feats(3, k, 60), feats(3, k, 61)];
+            let whole = score_datastore(
+                &ds,
+                &vals,
+                ScoreOpts { shard_rows: n, ..Default::default() },
+                None,
+            )
+            .unwrap();
+            for shard_rows in [1usize, 2, 3, 4, 7, n + 5] {
+                let s = score_datastore(
+                    &ds,
+                    &vals,
+                    ScoreOpts { shard_rows, ..Default::default() },
+                    None,
+                )
+                .unwrap();
+                assert_eq!(s, whole, "bits {bits} shard_rows {shard_rows}");
+            }
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn nan_val_features_error_not_panic() {
+        // a NaN validation gradient must fail the scan with a recoverable
+        // Err, not abort the process mid-sweep
+        let (ds, p) = build_ds_keep(8, &[1.0], 4, 64);
+        let mut v = feats(2, 64, 5);
+        v.data[7] = f32::NAN;
+        let err = score_datastore(&ds, &[v], ScoreOpts::default(), None).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
         std::fs::remove_file(p).ok();
     }
 

@@ -11,8 +11,10 @@
 //!   analogue of the paper's 16× storage saving).
 //! * [`xla`]    — the L1 Pallas `influence` tile artifact via PJRT, chunked
 //!   and padded to the compiled tile shape.
-//! * [`aggregate`] — checkpoint loop: load datastore blocks, score with the
-//!   chosen path, weight by η_i, accumulate per-sample totals.
+//! * [`aggregate`] — the streaming checkpoint loop: shards of each
+//!   datastore block are scored under a memory budget with the chosen
+//!   path, weighted by η_i, and accumulated into per-sample totals —
+//!   peak resident memory is `O(shard)`, not `O(block)`.
 
 pub mod aggregate;
 pub mod native;

@@ -6,8 +6,14 @@
 //! `cos = (2·agree − k)/k`, computable at 64 dims per instruction over the
 //! datastore's packed words with no dequantization, no normalization and
 //! 1/32 the memory traffic of f32 — see EXPERIMENTS.md §Perf.
+//!
+//! Both kernels score a [`RowsView`] — a whole checkpoint block or one
+//! streamed shard — so the block and streaming scan paths share one
+//! per-row implementation and are bit-identical by construction. Row
+//! parallelism runs on the persistent scan pool (`util::pool`): no
+//! per-call thread spawns, no thread-count cap.
 
-use crate::datastore::CheckpointBlock;
+use crate::datastore::{CheckpointBlock, RowsView};
 use crate::grads::FeatureMatrix;
 use crate::quant::pack::{as_sign_words, pack_codes};
 use crate::quant::scheme::{normalize_row, quantize_row};
@@ -25,14 +31,24 @@ pub struct ValFeatures {
 }
 
 impl ValFeatures {
-    /// Quantize raw validation gradient features with the datastore's
-    /// precision, then normalize (paper: "validation gradients are
-    /// quantized and normalized, yielding q̂_{z'}").
-    pub fn prepare(feats: &FeatureMatrix, precision: Precision) -> ValFeatures {
+    /// Fallible [`ValFeatures::prepare`]: rejects non-finite validation
+    /// gradients with a recoverable error instead of aborting — the form
+    /// `score_datastore` uses, so one NaN val gradient fails the scan, not
+    /// the process.
+    pub fn try_prepare(feats: &FeatureMatrix, precision: Precision) -> anyhow::Result<ValFeatures> {
         let mut rows = Vec::with_capacity(feats.n);
         let mut sign_words = Vec::new();
         for i in 0..feats.n {
             let raw = feats.row(i);
+            // checked for every bitwidth (16-bit skips quantize_row) so a
+            // NaN val gradient can't poison every score silently
+            if let Some(j) = raw.iter().position(|x| !x.is_finite()) {
+                anyhow::bail!(
+                    "non-finite validation gradient feature {} at row {i} index {j}: \
+                     rejected at preparation time",
+                    raw[j]
+                );
+            }
             let mut row: Vec<f32> = if precision.bits == 16 {
                 raw.to_vec()
             } else {
@@ -46,7 +62,15 @@ impl ValFeatures {
             normalize_row(&mut row);
             rows.push(row);
         }
-        ValFeatures { k: feats.k, rows, sign_words }
+        Ok(ValFeatures { k: feats.k, rows, sign_words })
+    }
+
+    /// Quantize raw validation gradient features with the datastore's
+    /// precision, then normalize (paper: "validation gradients are
+    /// quantized and normalized, yielding q̂_{z'}"). Panics on non-finite
+    /// input; callers with a `Result` path should use [`Self::try_prepare`].
+    pub fn prepare(feats: &FeatureMatrix, precision: Precision) -> ValFeatures {
+        Self::try_prepare(feats, precision).expect("preparing validation features")
     }
 
     pub fn n(&self) -> usize {
@@ -54,19 +78,24 @@ impl ValFeatures {
     }
 }
 
-/// Mean cosine similarity of each train row in `block` against all val
-/// rows: the inner term of Eq. 7 for one checkpoint. Generic path — works
-/// for every precision by unpacking codes to f32. Row-parallel across a
-/// thread pool (§Perf iteration 1: 1 → N cores on the scan).
+/// Mean cosine similarity of each train row against all val rows: the
+/// inner term of Eq. 7 for one checkpoint. Whole-block convenience wrapper
+/// over [`scores_dense_rows`].
 pub fn scores_dense(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
-    assert_eq!(block.k, val.k);
+    scores_dense_rows(&block.rows(), val)
+}
+
+/// [`scores_dense`] over any row view (block or streamed shard). Generic
+/// path — works for every precision by unpacking codes to f32.
+pub fn scores_dense_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
+    assert_eq!(rows.k, val.k);
     let nv = val.n() as f32;
     // work per row ≈ nv·k fused-multiply-adds (plus unpack)
-    par_over_rows(block.n, (val.n() * block.k) as u64, |i| {
-        let mut row = if block.precision.bits == 16 {
-            block.row_f32(i)
+    par_over_rows(rows.n(), (val.n() * rows.k) as u64, |i| {
+        let mut row = if rows.precision.bits == 16 {
+            rows.row_f32(i)
         } else {
-            block.row_codes(i).iter().map(|&c| c as f32).collect()
+            rows.row_codes(i).iter().map(|&c| c as f32).collect()
         };
         normalize_row(&mut row);
         let mut acc = 0f32;
@@ -77,77 +106,75 @@ pub fn scores_dense(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
     })
 }
 
-/// Evaluate `f(i)` for each row index in parallel chunks (order-preserving).
+/// Evaluate `f(i)` for each row index in parallel (order-preserving).
 ///
 /// `work_per_row` is an estimate of the inner-op count per row; jobs below
-/// ~8M total ops stay serial — thread-scope spawn costs ~100µs/thread,
-/// which §Perf iteration 2 found *regresses* the 1-bit popcount path
-/// (1.4ms of work) by 2.6× when parallelized unconditionally.
+/// ~8M total ops stay serial — handing a 1.4ms popcount scan to the pool
+/// costs more in wakeup latency than it saves (§Perf iteration 2 measured
+/// the same effect with spawned threads at 2.6× worse). Larger jobs run on
+/// the persistent worker pool: threads follow `QLESS_SCORE_THREADS` or the
+/// machine's full parallelism (the old hard cap of 16 is gone), and rows
+/// are claimed from a shared cursor so uneven rows can't straggle.
 /// `QLESS_SCORE_THREADS=1` forces the serial path (before/after benches).
 fn par_over_rows<F: Fn(usize) -> f32 + Sync>(n: usize, work_per_row: u64, f: F) -> Vec<f32> {
-    let threads = std::env::var("QLESS_SCORE_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
-        })
-        .max(1)
-        .min(16)
-        .min(n.max(1));
-    if threads <= 1 || n < 256 || (n as u64) * work_per_row < 8_000_000 {
+    let threads = crate::util::pool::scan_threads().min(n.max(1));
+    if threads <= 1 || n < 256 || (n as u64).saturating_mul(work_per_row) < 8_000_000 {
         return (0..n).map(f).collect();
     }
     let mut out = vec![0f32; n];
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, slice) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                let start = t * chunk;
-                for (j, o) in slice.iter_mut().enumerate() {
-                    *o = f(start + j);
-                }
-            });
-        }
-    });
+    crate::util::pool::par_fill_f32(&mut out, &f);
     out
 }
 
 /// The 1-bit fast path: XNOR+popcount over packed words, no unpacking.
-/// Identical results to [`scores_dense`] on a 1-bit block (up to fp
-/// rounding of the final division).
+/// Whole-block convenience wrapper over [`scores_1bit_rows`].
 pub fn scores_1bit(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
-    assert_eq!(block.precision.bits, 1, "1-bit path needs a sign datastore");
+    scores_1bit_rows(&block.rows(), val)
+}
+
+/// [`scores_1bit`] over any row view. Identical results to
+/// [`scores_dense_rows`] on a 1-bit view (up to fp rounding of the final
+/// division). Streams each row through a fixed 64-word stack window, so
+/// any projection dimension is supported — the seed implementation sliced
+/// a `[u64; 64]` buffer by `k/64` words and panicked for k > 4096.
+pub fn scores_1bit_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
+    assert_eq!(rows.precision.bits, 1, "1-bit path needs a sign datastore");
     assert!(!val.sign_words.is_empty(), "val features lack sign words");
-    let k = block.k;
+    let k = rows.k;
     let nwords = k.div_ceil(64);
     let tail = (nwords * 64 - k) as i64;
-    let nv = val.sign_words.len() as f32;
+    let nv = val.sign_words.len();
     let inv_k = 1.0 / k as f32;
 
     // work per row ≈ nv·nwords popcount iterations (~1.4 ns each — tiny;
     // this path only crosses the parallel threshold at ≫10⁴ rows)
-    par_over_rows(block.n, (val.sign_words.len() * nwords) as u64, |i| {
-        let row = block.row_bytes(i);
-        // view row bytes as u64 words (little-endian, zero tail)
-        let mut words = [0u64; 64]; // k ≤ 4096 in practice
-        debug_assert!(nwords <= 64);
-        for (w, chunk) in words.iter_mut().zip(row.chunks(8)) {
-            let mut b = [0u8; 8];
-            b[..chunk.len()].copy_from_slice(chunk);
-            *w = u64::from_le_bytes(b);
-        }
-        let mut acc = 0f32;
-        for v in &val.sign_words {
-            let mut agree: i64 = 0;
-            for (a, b) in words[..nwords].iter().zip(v) {
-                agree += (!(a ^ b)).count_ones() as i64;
+    par_over_rows(rows.n(), (nv * nwords) as u64, |i| {
+        let row = rows.row_bytes(i);
+        // Bit agreement is summed exactly in i64 across all val rows and
+        // words; the per-val-row dot products are linear in agreement, so
+        // one conversion at the end loses nothing:
+        //   Σ_v dot_v = 2·(Σ_v agree_v − nv·tail) − nv·k
+        let mut total_agree: i64 = 0;
+        let mut word_base = 0usize;
+        // 512-byte (64-word) window: fixed stack buffer, unbounded k
+        for byte_chunk in row.chunks(512) {
+            let mut words = [0u64; 64];
+            let cw = byte_chunk.len().div_ceil(8);
+            for (w, ch) in words.iter_mut().zip(byte_chunk.chunks(8)) {
+                let mut b = [0u8; 8];
+                b[..ch.len()].copy_from_slice(ch);
+                *w = u64::from_le_bytes(b);
             }
-            // remove always-agreeing zero tail, convert to dot product
-            let dot = 2 * (agree - tail) - k as i64;
-            acc += dot as f32 * inv_k;
+            for v in &val.sign_words {
+                for (a, b) in words[..cw].iter().zip(&v[word_base..word_base + cw]) {
+                    total_agree += (!(a ^ b)).count_ones() as i64;
+                }
+            }
+            word_base += cw;
         }
-        acc / nv
+        // remove the always-agreeing zero tail, convert to mean cosine
+        let total_dot = 2 * (total_agree - nv as i64 * tail) - (nv * k) as i64;
+        (total_dot as f32 * inv_k) / nv as f32
     })
 }
 
@@ -236,6 +263,63 @@ mod tests {
             let fast = scores_1bit(&block, &val);
             for (a, b) in dense.iter().zip(&fast) {
                 assert!((a - b).abs() < 1e-5, "k={k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_k8192_regression() {
+        // Seed code copied each row into a fixed `[0u64; 64]` buffer and
+        // sliced `words[..nwords]` — nwords = 128 at k = 8192, so the
+        // release build panicked (and debug builds tripped the
+        // debug_assert). The windowed kernel must handle any k and still
+        // match the dense path.
+        let k = 8192;
+        let block = make_block(1, 4, k, 42);
+        let val =
+            ValFeatures::prepare(&feats(3, k, 43), Precision::new(1, Scheme::Sign).unwrap());
+        let dense = scores_dense(&block, &val);
+        let fast = scores_1bit(&block, &val);
+        assert_eq!(fast.len(), 4);
+        for (a, b) in dense.iter().zip(&fast) {
+            assert!((a - b).abs() < 1e-5, "k=8192: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shard_views_score_identically_to_block() {
+        // The kernels take a RowsView; a sub-view over the same bytes must
+        // give bit-identical scores to the whole block's rows.
+        for bits in [16u8, 8, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let block = make_block(bits, 12, 96, 8);
+            let val = ValFeatures::prepare(&feats(5, 96, 9), Precision::new(bits, scheme).unwrap());
+            let whole = if bits == 1 {
+                scores_1bit(&block, &val)
+            } else {
+                scores_dense(&block, &val)
+            };
+            // split the block's rows into two shard-like views
+            let full = block.rows();
+            let split = 5usize;
+            for (start, end) in [(0usize, split), (split, 12)] {
+                let view = RowsView {
+                    precision: full.precision,
+                    k: full.k,
+                    row_stride: full.row_stride,
+                    scales: if bits == 16 {
+                        full.scales
+                    } else {
+                        &full.scales[start..end]
+                    },
+                    data: &full.data[start * full.row_stride..end * full.row_stride],
+                };
+                let part = if bits == 1 {
+                    scores_1bit_rows(&view, &val)
+                } else {
+                    scores_dense_rows(&view, &val)
+                };
+                assert_eq!(part.as_slice(), &whole[start..end], "bits {bits} [{start},{end})");
             }
         }
     }

@@ -5,41 +5,65 @@
 
 use anyhow::Result;
 
-use crate::datastore::CheckpointBlock;
+use crate::datastore::{CheckpointBlock, RowsView};
 use crate::influence::native::ValFeatures;
 use crate::runtime::{Arg, ModelInfo, Runtime};
 
+/// Validation rows packed into zero-padded `[tile_v × k]` kernel tiles —
+/// built **once per checkpoint** and reused by every shard of its scan
+/// (rebuilding per shard would be an O(nv·k) copy per shard).
+pub struct ValTiles {
+    nv: usize,
+    tiles: Vec<Vec<f32>>,
+}
+
+/// Pack prepared val features into kernel tiles for [`scores_xla_rows`].
+pub fn pack_val_tiles(info: &ModelInfo, val: &ValFeatures) -> ValTiles {
+    assert_eq!(val.k, info.proj_dim);
+    let (tv, k) = (info.tile_v, info.proj_dim);
+    let nv = val.n();
+    let mut tiles = vec![vec![0f32; tv * k]; nv.div_ceil(tv)];
+    for (j, row) in val.rows.iter().enumerate() {
+        tiles[j / tv][(j % tv) * k..(j % tv + 1) * k].copy_from_slice(row);
+    }
+    ValTiles { nv, tiles }
+}
+
 /// Mean cosine of each train row against all val rows via the AOT kernel.
-/// Same contract as [`native::scores_dense`](super::native::scores_dense).
+/// Whole-block convenience wrapper over [`scores_xla_rows`].
 pub fn scores_xla(
     rt: &Runtime,
     info: &ModelInfo,
     block: &CheckpointBlock,
     val: &ValFeatures,
 ) -> Result<Vec<f32>> {
-    assert_eq!(block.k, info.proj_dim);
-    assert_eq!(val.k, info.proj_dim);
+    scores_xla_rows(rt, info, &block.rows(), &pack_val_tiles(info, val))
+}
+
+/// [`scores_xla`] over any row view (block or streamed shard). Same
+/// contract as [`native::scores_dense_rows`](super::native::scores_dense_rows).
+pub fn scores_xla_rows(
+    rt: &Runtime,
+    info: &ModelInfo,
+    rows_view: &RowsView<'_>,
+    val_tiles: &ValTiles,
+) -> Result<Vec<f32>> {
+    assert_eq!(rows_view.k, info.proj_dim);
     let exec = rt.exec(info, "influence")?;
     let (tq, tv, k) = (info.tile_q, info.tile_v, info.proj_dim);
-    let nv = val.n();
+    let nv = val_tiles.nv;
+    let n = rows_view.n();
 
-    // Pack the val side once: [tv_tiles][tv * k], zero-padded.
-    let tv_tiles = nv.div_ceil(tv);
-    let mut val_tiles = vec![vec![0f32; tv * k]; tv_tiles];
-    for (j, row) in val.rows.iter().enumerate() {
-        val_tiles[j / tv][(j % tv) * k..(j % tv + 1) * k].copy_from_slice(row);
-    }
-
-    let mut scores = vec![0f32; block.n];
+    let mut scores = vec![0f32; n];
     let mut qt = vec![0f32; tq * k];
-    for tile_start in (0..block.n).step_by(tq) {
-        let rows = (block.n - tile_start).min(tq);
+    for tile_start in (0..n).step_by(tq) {
+        let rows = (n - tile_start).min(tq);
         qt.iter_mut().for_each(|x| *x = 0.0);
         for r in 0..rows {
-            let row = block.row_f32(tile_start + r); // codes×scale — scale cancels
+            let row = rows_view.row_f32(tile_start + r); // codes×scale — scale cancels
             qt[r * k..(r + 1) * k].copy_from_slice(&row);
         }
-        for (jt, vt) in val_tiles.iter().enumerate() {
+        for (jt, vt) in val_tiles.tiles.iter().enumerate() {
             let out = exec.run(&[Arg::F32(&qt, &[tq, k]), Arg::F32(vt, &[tv, k])])?;
             let sims = &out[0]; // [tq, tv]
             let val_rows = (nv - jt * tv).min(tv);

@@ -15,6 +15,8 @@
 
 pub mod report;
 pub mod runner;
+pub mod stage;
 
 pub use report::Report;
 pub use runner::{Method, MethodResult, Pipeline};
+pub use stage::{PipelineStageRunner, Stage, StageCost};

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+use crate::pipeline::stage::PipelineStageRunner;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -39,6 +40,13 @@ impl Report {
         self
     }
 
+    /// Attach the pipeline's per-stage cost table (and mirror it into the
+    /// JSON artifact so EXPERIMENTS.md can cite stable numbers).
+    pub fn add_stage_costs(&mut self, stages: &PipelineStageRunner) -> &mut Self {
+        self.json.set("stage_costs", stages.to_json());
+        self.add_table(stages.table())
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!("# {} — {}\n\n", self.id, self.title);
         for t in &self.tables {
@@ -67,6 +75,19 @@ impl Report {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stage_costs_render() {
+        use crate::pipeline::stage::Stage;
+        let mut stages = PipelineStageRunner::new();
+        let _: Result<(), ()> = stages.run(Stage::Score, || Ok(()));
+        stages.cache_hit(Stage::Warmup);
+        let mut r = Report::new("stage_tbl", "stage cost smoke");
+        r.add_stage_costs(&stages);
+        let text = r.render();
+        assert!(text.contains("score"));
+        assert!(r.json.encode_pretty().contains("stage_costs"));
+    }
 
     #[test]
     fn render_and_emit() {

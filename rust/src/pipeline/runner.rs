@@ -16,6 +16,7 @@ use crate::eval::harness::{evaluate, BenchScores};
 use crate::grads::{extract_train_features, extract_val_features, FeatureMatrix, Projector};
 use crate::influence::{score_datastore, ScoreOpts};
 use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
+use crate::pipeline::stage::{PipelineStageRunner, Stage};
 use crate::quant::weights::quantize_weights;
 use crate::quant::Precision;
 use crate::runtime::{ModelInfo, Runtime};
@@ -68,6 +69,8 @@ pub struct Pipeline {
     pub tok: Tokenizer,
     pub world: World,
     pub corpus: Dataset,
+    /// Per-stage wall-clock + cache accounting (the run's cost model).
+    pub stages: PipelineStageRunner,
     base: Option<Vec<f32>>,
     warmup: Option<CheckpointSet>,
     /// Raw fp32 train features per checkpoint (shared across precisions).
@@ -99,11 +102,17 @@ impl Pipeline {
             tok,
             world,
             corpus,
+            stages: PipelineStageRunner::new(),
             base: None,
             warmup: None,
             features: None,
             val_features: BTreeMap::new(),
         })
+    }
+
+    /// The per-stage cost table accumulated so far (for reports/benches).
+    pub fn stage_table(&self) -> crate::util::table::Table {
+        self.stages.table()
     }
 
     pub fn run_dir(&self) -> PathBuf {
@@ -126,6 +135,7 @@ impl Pipeline {
             let set = CheckpointSet::load(path.parent().unwrap(), self.info.d_base);
             if let Ok(set) = set {
                 info!("loaded cached pretrained base");
+                self.stages.cache_hit(Stage::Pretrain);
                 self.base = Some(set.base.clone());
                 return Ok(set.base);
             }
@@ -156,6 +166,7 @@ impl Pipeline {
             checkpoints: vec![Checkpoint::fresh(self.info.d_lora, init_lora(&self.info, self.cfg.seed))],
         };
         set.save(&self.run_dir().join("pretrain"))?;
+        self.stages.record(Stage::Pretrain, t0.elapsed().as_secs_f64());
         self.base = Some(base.clone());
         Ok(base)
     }
@@ -215,6 +226,7 @@ impl Pipeline {
             if let Ok(set) = CheckpointSet::load(&dir, self.info.d_base) {
                 if set.checkpoints.len() == self.cfg.warmup_epochs {
                     info!("loaded cached warmup checkpoints ({})", set.checkpoints.len());
+                    self.stages.cache_hit(Stage::Warmup);
                     self.warmup = Some(set.clone());
                     return Ok(set);
                 }
@@ -234,6 +246,7 @@ impl Pipeline {
         let set = CheckpointSet { base, checkpoints: snaps };
         set.save(&dir)?;
         info!("warmup done in {:.1}s", t0.elapsed().as_secs_f64());
+        self.stages.record(Stage::Warmup, t0.elapsed().as_secs_f64());
         self.warmup = Some(set.clone());
         Ok(set)
     }
@@ -270,6 +283,7 @@ impl Pipeline {
             )?);
         }
         info!("train feature extraction: {:.1}s total", t0.elapsed().as_secs_f64());
+        self.stages.record(Stage::ExtractTrain, t0.elapsed().as_secs_f64());
         self.features = Some(feats.clone());
         Ok(feats)
     }
@@ -277,6 +291,7 @@ impl Pipeline {
     /// Per-checkpoint SGD validation features for one benchmark.
     pub fn val_features(&mut self, bench: Benchmark) -> Result<Vec<FeatureMatrix>> {
         if let Some(f) = self.val_features.get(bench.name()) {
+            self.stages.cache_hit(Stage::ExtractVal);
             return Ok(f.clone());
         }
         let set = self.warmup()?;
@@ -284,6 +299,7 @@ impl Pipeline {
         let base_q = quantize_weights(&set.base, self.cfg.model_bits);
         let samples = validation_samples(bench, &self.world, self.cfg.val_per_task, self.cfg.seed);
         let data = Dataset::encode(samples, &self.tok, self.info.seq);
+        let t0 = std::time::Instant::now();
         let mut feats = Vec::new();
         for ckpt in &set.checkpoints {
             feats.push(extract_val_features(
@@ -296,6 +312,7 @@ impl Pipeline {
                 self.cfg.workers,
             )?);
         }
+        self.stages.record(Stage::ExtractVal, t0.elapsed().as_secs_f64());
         self.val_features.insert(bench.name(), feats.clone());
         Ok(feats)
     }
@@ -314,6 +331,7 @@ impl Pipeline {
             if let Ok(ds) = Datastore::open(&path) {
                 let bytes = ds.file_bytes();
                 info!("reusing cached datastore {}", precision.label());
+                self.stages.cache_hit(Stage::BuildDatastore);
                 return Ok((ds, bytes));
             }
         }
@@ -336,6 +354,7 @@ impl Pipeline {
             crate::util::table::human_bytes(bytes),
             t0.elapsed().as_secs_f64()
         );
+        self.stages.record(Stage::BuildDatastore, t0.elapsed().as_secs_f64());
         let ds = Datastore::open(&path)?;
         Ok((ds, bytes))
     }
@@ -345,11 +364,19 @@ impl Pipeline {
     // ------------------------------------------------------------------
 
     /// Influence scores of every corpus sample for one benchmark at one
-    /// precision.
+    /// precision. The scan streams datastore shards under the config's
+    /// memory budget (`--shard-rows` / `--mem-budget-mb`).
     pub fn influence_scores(&mut self, ds: &Datastore, bench: Benchmark) -> Result<Vec<f32>> {
         let vals = self.val_features(bench)?;
-        let opts = ScoreOpts { use_xla: self.cfg.xla_score };
-        score_datastore(ds, &vals, opts, Some((&self.rt, &self.info)))
+        let opts = ScoreOpts {
+            use_xla: self.cfg.xla_score,
+            shard_rows: self.cfg.shard_rows,
+            mem_budget_mb: self.cfg.mem_budget_mb,
+        };
+        let t0 = std::time::Instant::now();
+        let scores = score_datastore(ds, &vals, opts, Some((&self.rt, &self.info)))?;
+        self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
+        Ok(scores)
     }
 
     // ------------------------------------------------------------------
@@ -360,18 +387,21 @@ impl Pipeline {
     /// and the per-epoch loss curve.
     pub fn finetune(&mut self, indices: &[usize], seed: u64) -> Result<(Vec<f32>, Vec<f64>)> {
         let base = self.base()?;
+        let t0 = std::time::Instant::now();
         let sub = self.corpus.subset(indices);
         let trainer = Trainer::new(&self.rt, &self.info, &base)?;
         let steps = self.cfg.finetune_epochs * sub.len().div_ceil(self.info.batch_train);
         let sched = Schedule::new(self.cfg.lr, steps, self.cfg.lr_warmup_frac);
         let mut ckpt = Checkpoint::fresh(self.info.d_lora, init_lora(&self.info, seed));
         let report = trainer.train(&sub, &mut ckpt, self.cfg.finetune_epochs, &sched, seed, None)?;
+        self.stages.record(Stage::Finetune, t0.elapsed().as_secs_f64());
         Ok((ckpt.lora, report.epoch_losses))
     }
 
     pub fn evaluate_lora(&mut self, lora: &[f32]) -> Result<BenchScores> {
         let base = self.base()?;
-        evaluate(
+        let t0 = std::time::Instant::now();
+        let scores = evaluate(
             &self.rt,
             &self.info,
             &base,
@@ -379,7 +409,9 @@ impl Pipeline {
             &self.world,
             self.cfg.eval_per_task,
             self.cfg.seed,
-        )
+        )?;
+        self.stages.record(Stage::Evaluate, t0.elapsed().as_secs_f64());
+        Ok(scores)
     }
 
     // ------------------------------------------------------------------
@@ -424,7 +456,9 @@ impl Pipeline {
                 result.storage_bytes = bytes;
                 for bench in Benchmark::ALL {
                     let scores = self.influence_scores(&ds, bench)?;
+                    let t_sel = std::time::Instant::now();
                     let sel = select_top_frac(&scores, self.cfg.select_frac);
+                    self.stages.record(Stage::Select, t_sel.elapsed().as_secs_f64());
                     let dist = SourceDistribution::of(&self.corpus.samples, &sel);
                     info!("{label} / {bench}: selected {} — {}", sel.len(), dist.render());
                     let (lora, curve) = self.finetune(&sel, self.cfg.seed)?;

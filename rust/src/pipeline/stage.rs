@@ -1,0 +1,206 @@
+//! Explicit pipeline stages + the stage runner.
+//!
+//! The pipeline used to be a web of ad-hoc methods with inline timing
+//! prints. [`PipelineStageRunner`] names every stage ([`Stage`]), times
+//! each run, counts cache hits, and renders a per-stage cost table that
+//! reports and benches can emit — the cost model behind one Table-1 row.
+
+use crate::info;
+use crate::util::table::Table;
+
+/// The pipeline's stages, in execution order (Fig. 2 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Pretrain the shared base model (cached per model/seed).
+    Pretrain,
+    /// LoRA warmup on the 5% subset → N checkpoints.
+    Warmup,
+    /// Per-checkpoint gradient-feature extraction (train side).
+    ExtractTrain,
+    /// Per-checkpoint gradient-feature extraction (validation side).
+    ExtractVal,
+    /// Quantize + pack features into the gradient datastore.
+    BuildDatastore,
+    /// Streamed influence scan (Eq. 7) over datastore shards.
+    Score,
+    /// Top-p% selection.
+    Select,
+    /// LoRA fine-tune on the selected subset.
+    Finetune,
+    /// Benchmark evaluation.
+    Evaluate,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 9] = [
+        Stage::Pretrain,
+        Stage::Warmup,
+        Stage::ExtractTrain,
+        Stage::ExtractVal,
+        Stage::BuildDatastore,
+        Stage::Score,
+        Stage::Select,
+        Stage::Finetune,
+        Stage::Evaluate,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Pretrain => "pretrain",
+            Stage::Warmup => "warmup",
+            Stage::ExtractTrain => "extract-train",
+            Stage::ExtractVal => "extract-val",
+            Stage::BuildDatastore => "build-datastore",
+            Stage::Score => "score",
+            Stage::Select => "select",
+            Stage::Finetune => "finetune",
+            Stage::Evaluate => "evaluate",
+        }
+    }
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Accumulated cost of one stage across a pipeline's lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageCost {
+    pub runs: u32,
+    pub cache_hits: u32,
+    pub secs: f64,
+}
+
+/// Times stage executions and accumulates a per-stage cost table.
+#[derive(Debug, Default)]
+pub struct PipelineStageRunner {
+    costs: [StageCost; Stage::ALL.len()],
+}
+
+impl PipelineStageRunner {
+    pub fn new() -> PipelineStageRunner {
+        PipelineStageRunner::default()
+    }
+
+    fn slot(&mut self, stage: Stage) -> &mut StageCost {
+        let idx = Stage::ALL.iter().position(|s| *s == stage).expect("stage in ALL");
+        &mut self.costs[idx]
+    }
+
+    /// Run one stage execution, recording wall-clock against it.
+    pub fn run<T, E>(&mut self, stage: Stage, f: impl FnOnce() -> Result<T, E>) -> Result<T, E> {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.record(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Record one externally-timed execution of a stage. Methods that
+    /// need `&mut self` for the work itself use this instead of [`run`]
+    /// (a closure would borrow the runner and the pipeline at once).
+    pub fn record(&mut self, stage: Stage, secs: f64) {
+        let cost = self.slot(stage);
+        cost.runs += 1;
+        cost.secs += secs;
+        info!("stage {stage}: {secs:.2}s (total {:.2}s over {} runs)", cost.secs, cost.runs);
+    }
+
+    /// Record that a stage was served from cache (no work done).
+    pub fn cache_hit(&mut self, stage: Stage) {
+        self.slot(stage).cache_hits += 1;
+    }
+
+    pub fn cost(&self, stage: Stage) -> StageCost {
+        let idx = Stage::ALL.iter().position(|s| *s == stage).expect("stage in ALL");
+        self.costs[idx]
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.costs.iter().map(|c| c.secs).sum()
+    }
+
+    /// JSON mirror of the cost table (stable numbers for report
+    /// artifacts; idle stages are skipped).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        for stage in Stage::ALL {
+            let c = self.cost(stage);
+            if c.runs == 0 && c.cache_hits == 0 {
+                continue;
+            }
+            let mut s = Json::obj();
+            s.set("runs", c.runs as usize);
+            s.set("cache_hits", c.cache_hits as usize);
+            s.set("secs", c.secs);
+            j.set(stage.name(), s);
+        }
+        j.set("total_secs", self.total_secs());
+        j
+    }
+
+    /// Render the per-stage cost table (stages that never ran are skipped).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new("pipeline stage costs", &["stage", "runs", "cache hits", "secs"]);
+        for stage in Stage::ALL {
+            let c = self.cost(stage);
+            if c.runs == 0 && c.cache_hits == 0 {
+                continue;
+            }
+            t.row(vec![
+                stage.name().to_string(),
+                c.runs.to_string(),
+                c.cache_hits.to_string(),
+                format!("{:.2}", c.secs),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_runs_and_cache_hits() {
+        let mut r = PipelineStageRunner::new();
+        let v: Result<i32, ()> = r.run(Stage::Score, || Ok(41 + 1));
+        assert_eq!(v.unwrap(), 42);
+        r.cache_hit(Stage::Score);
+        r.cache_hit(Stage::Warmup);
+        let c = r.cost(Stage::Score);
+        assert_eq!(c.runs, 1);
+        assert_eq!(c.cache_hits, 1);
+        assert!(c.secs >= 0.0);
+        assert_eq!(r.cost(Stage::Warmup).runs, 0);
+        assert_eq!(r.cost(Stage::Pretrain).runs, 0);
+    }
+
+    #[test]
+    fn errors_propagate_and_still_count() {
+        let mut r = PipelineStageRunner::new();
+        let v: Result<(), String> = r.run(Stage::Finetune, || Err("boom".to_string()));
+        assert!(v.is_err());
+        assert_eq!(r.cost(Stage::Finetune).runs, 1);
+    }
+
+    #[test]
+    fn table_skips_idle_stages() {
+        let mut r = PipelineStageRunner::new();
+        let _: Result<(), ()> = r.run(Stage::Evaluate, || Ok(()));
+        let rendered = r.table().render();
+        assert!(rendered.contains("evaluate"));
+        assert!(!rendered.contains("pretrain"));
+    }
+
+    #[test]
+    fn all_stages_named_uniquely() {
+        let mut names: Vec<_> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Stage::ALL.len());
+    }
+}

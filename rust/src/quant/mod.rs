@@ -16,7 +16,7 @@ pub mod weights;
 
 pub use hist::BinHistogram;
 pub use pack::{pack_codes, unpack_codes, PackedRow};
-pub use scheme::{dequantize_row, quantize_row, QuantizedRow, Scheme};
+pub use scheme::{dequantize_row, quantize_row, try_quantize_row, QuantizedRow, Scheme};
 
 use anyhow::{bail, Result};
 

@@ -72,8 +72,39 @@ pub fn round_ties_even(x: f32) -> f32 {
     }
 }
 
-/// Quantize one row of projected gradient features (paper §3.1).
+/// Quantize one row of projected gradient features (paper §3.1), rejecting
+/// non-finite inputs with a clear error.
+///
+/// NaN must be stopped *here*: the sign path would otherwise map NaN to a
+/// perfectly valid −1 code (`NaN >= 0.0` is false) and a NaN scale, and
+/// the corruption only resurfaces as the NaN panic in `select::topk` —
+/// several stages and one datastore file away from the actual bug.
+pub fn try_quantize_row(g: &[f32], bits: u8, scheme: Scheme) -> Result<QuantizedRow> {
+    if let Some(i) = g.iter().position(|x| !x.is_finite()) {
+        bail!(
+            "non-finite gradient feature {} at index {i} (row of {}): \
+             rejected at quantization time",
+            g[i],
+            g.len()
+        );
+    }
+    Ok(quantize_row_unchecked(g, bits, scheme))
+}
+
+/// Infallible [`try_quantize_row`]: panics (with the same clear message)
+/// on non-finite input. Callers with a `Result` path should prefer the
+/// fallible form.
 pub fn quantize_row(g: &[f32], bits: u8, scheme: Scheme) -> QuantizedRow {
+    if let Some(i) = g.iter().position(|x| !x.is_finite()) {
+        panic!(
+            "non-finite gradient feature {} at index {i}: rejected at quantization time",
+            g[i]
+        );
+    }
+    quantize_row_unchecked(g, bits, scheme)
+}
+
+fn quantize_row_unchecked(g: &[f32], bits: u8, scheme: Scheme) -> QuantizedRow {
     assert!(!g.is_empty());
     match (bits, scheme) {
         (1, _) | (_, Scheme::Sign) => {
@@ -152,6 +183,28 @@ mod tests {
             assert!(q.codes.iter().all(|&c| c == 0));
             assert_eq!(q.scale, 0.0);
         }
+    }
+
+    #[test]
+    fn try_quantize_rejects_non_finite() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for (bits, scheme) in
+                [(1u8, Scheme::Sign), (2, Scheme::Absmax), (4, Scheme::Absmean), (8, Scheme::Absmax)]
+            {
+                let err = try_quantize_row(&[0.5, bad, -0.5], bits, scheme).unwrap_err();
+                let msg = err.to_string();
+                assert!(msg.contains("non-finite"), "{bits}-bit {scheme}: {msg}");
+                assert!(msg.contains("index 1"), "{msg}");
+            }
+        }
+        assert!(try_quantize_row(&[0.5, -0.5], 1, Scheme::Sign).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn quantize_row_panics_on_nan_sign_path() {
+        // The seed code silently emitted a −1 code here.
+        quantize_row(&[f32::NAN, 1.0], 1, Scheme::Sign);
     }
 
     #[test]

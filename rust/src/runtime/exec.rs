@@ -28,8 +28,8 @@ pub enum Arg<'a> {
 impl<'a> Arg<'a> {
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
-            Arg::F32(data, dims) => shaped(xla::Literal::vec1(data), data.len(), dims)?,
-            Arg::I32(data, dims) => shaped(xla::Literal::vec1(data), data.len(), dims)?,
+            Arg::F32(data, dims) => shaped(xla::Literal::vec1(*data), data.len(), dims)?,
+            Arg::I32(data, dims) => shaped(xla::Literal::vec1(*data), data.len(), dims)?,
             Arg::ScalarF32(v) => xla::Literal::scalar(*v),
             Arg::ScalarI32(v) => xla::Literal::scalar(*v),
         })

@@ -1,0 +1,177 @@
+//! Sharded-streaming equivalence suite.
+//!
+//! The streaming influence engine's contract: scanning a datastore in
+//! shards (any shard size, any memory budget) produces scores
+//! **bit-identical** to the old whole-block scan, at every bitwidth.
+//! Property-tested over random shapes, shard sizes (including sizes that
+//! do not divide n), η weights and checkpoint counts.
+//!
+//! Also pins the NaN propagation contract: a NaN gradient is rejected
+//! loudly at quantization/write time, never laundered through
+//! quantize → pack → score into the far-away NaN panic in `select::topk`.
+
+use std::path::PathBuf;
+
+use qless::datastore::{Datastore, DatastoreWriter};
+use qless::grads::FeatureMatrix;
+use qless::influence::native::{scores_1bit, scores_dense, ValFeatures};
+use qless::influence::{score_datastore, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::select::select_top_frac;
+use qless::util::prop::run_prop;
+use qless::util::Rng;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "qless_shardtest_{tag}_{}_{:?}.qlds",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+}
+
+fn build_store(
+    tag: &str,
+    bits: u8,
+    n: usize,
+    k: usize,
+    etas: &[f32],
+    seed: u64,
+) -> (Datastore, PathBuf) {
+    let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+    let p = Precision::new(bits, scheme).unwrap();
+    let path = tmpfile(tag);
+    let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
+    for (ci, &eta) in etas.iter().enumerate() {
+        let f = feats(n, k, seed + ci as u64);
+        w.begin_checkpoint(eta).unwrap();
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+    }
+    w.finalize().unwrap();
+    (Datastore::open(&path).unwrap(), path)
+}
+
+/// The old whole-block scan, reconstructed from its parts: load each
+/// checkpoint block fully, score with the per-precision kernel, accumulate
+/// η-weighted totals in checkpoint order.
+fn whole_block_scores(ds: &Datastore, val_per_ckpt: &[FeatureMatrix]) -> Vec<f32> {
+    let mut total = vec![0f32; ds.n_samples()];
+    for ci in 0..ds.n_checkpoints() {
+        let block = ds.load_checkpoint(ci).unwrap();
+        let val = ValFeatures::prepare(&val_per_ckpt[ci], block.precision);
+        let scores = if block.precision.bits == 1 {
+            scores_1bit(&block, &val)
+        } else {
+            scores_dense(&block, &val)
+        };
+        for (t, s) in total.iter_mut().zip(&scores) {
+            *t += block.eta * s;
+        }
+    }
+    total
+}
+
+#[test]
+fn prop_sharded_scores_equal_whole_block_exactly() {
+    let bitwidths = [16u8, 8, 4, 2, 1];
+    run_prop("sharded-equals-block", 40, |g| {
+        let n = 2 + g.usize_up_to(40);
+        let k = 8 * (1 + g.usize_up_to(24)); // up to 192 dims
+        let bits = bitwidths[g.rng.below(bitwidths.len())];
+        let ckpts = 1 + g.rng.below(3);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.1 + 0.3 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let (ds, path) = build_store(&format!("prop{bits}"), bits, n, k, &etas, seed);
+        let vals: Vec<FeatureMatrix> =
+            (0..ckpts).map(|c| feats(1 + c, k, seed + 1000 + c as u64)).collect();
+        let expect = whole_block_scores(&ds, &vals);
+
+        // shard sizes: dividing, non-dividing, degenerate, oversized
+        let shard_sizes = [1usize, 2, n / 2 + 1, n - 1, n, n + 7];
+        for &shard_rows in &shard_sizes {
+            if shard_rows == 0 {
+                continue;
+            }
+            let got = score_datastore(
+                &ds,
+                &vals,
+                ScoreOpts { shard_rows, ..Default::default() },
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+            prop_assert!(
+                got == expect,
+                "bits={bits} n={n} k={k} ckpts={ckpts} shard_rows={shard_rows}: \
+                 streamed scores differ from whole-block scan"
+            );
+        }
+        std::fs::remove_file(path).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn tight_memory_budget_matches_whole_block() {
+    // 1 MiB budget on a store whose 16-bit block is ~3 MiB: several shards.
+    let (n, k) = (3000usize, 512usize);
+    for bits in [16u8, 1] {
+        let (ds, path) = build_store(&format!("budget{bits}"), bits, n, k, &[0.7, 0.3], 9);
+        let vals = vec![feats(4, k, 100), feats(4, k, 101)];
+        let expect = whole_block_scores(&ds, &vals);
+        let got = score_datastore(
+            &ds,
+            &vals,
+            ScoreOpts { shard_rows: 0, mem_budget_mb: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert_eq!(got, expect, "bits {bits}");
+        // the budget really is smaller than the block it replaced
+        let rows = ds.rows_per_shard(0, 1);
+        assert!(
+            (rows as u64) * ds.header.resident_row_bytes() <= 1 << 20,
+            "shard resident bytes exceed the 1 MiB budget"
+        );
+        if bits == 16 {
+            // the block (~3 MiB) no longer fits the budget: the scan really
+            // streamed it in several shards
+            assert!(rows < n, "16-bit scan did not shard under a 1 MiB budget");
+        }
+        std::fs::remove_file(path).ok();
+    }
+}
+
+#[test]
+fn nan_is_rejected_at_quantization_not_at_select() {
+    // clean path: quantize → pack → score → select works end to end
+    let (n, k) = (40usize, 64usize);
+    let (ds, path) = build_store("nanclean", 1, n, k, &[1.0], 77);
+    let vals = vec![feats(3, k, 78)];
+    let scores = score_datastore(&ds, &vals, ScoreOpts::default(), None).unwrap();
+    assert!(scores.iter().all(|s| s.is_finite()));
+    let sel = select_top_frac(&scores, 0.10); // would panic on any NaN
+    assert_eq!(sel.len(), 4);
+    std::fs::remove_file(path).ok();
+
+    // poisoned path: the NaN must be caught at write/quantize time with a
+    // clear error — long before a score or the topk NaN panic exists
+    let p = Precision::new(1, Scheme::Sign).unwrap();
+    let path = tmpfile("nanpoison");
+    let mut w = DatastoreWriter::create(&path, p, 2, k, 1).unwrap();
+    w.begin_checkpoint(1.0).unwrap();
+    let mut row = vec![0.5f32; k];
+    row[17] = f32::NAN;
+    let err = w.append_features(&row).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("non-finite"), "unexpected error: {msg}");
+    assert!(msg.contains("quantiz"), "error should name the quantization stage: {msg}");
+    std::fs::remove_file(path).ok();
+}

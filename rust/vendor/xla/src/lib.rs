@@ -1,0 +1,204 @@
+//! Gated stub of the `xla` (PJRT) bindings.
+//!
+//! The offline build environment carries no XLA shared library, so this
+//! crate provides the exact API surface `qless::runtime` compiles against,
+//! with every entry point that would touch PJRT returning a clear
+//! "backend unavailable" error. The `qless` test-suite and benches check
+//! for built artifacts (`artifacts/manifest.json`) before constructing a
+//! runtime, so on a stub build they skip gracefully instead of failing.
+//!
+//! Swapping in the real bindings is a one-line Cargo change: point the
+//! `xla` dependency at the actual crate; no `qless` source changes needed.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: a plain message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: XLA/PJRT backend not available in this build \
+             (offline stub — link the real `xla` crate to enable it)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a literal can report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S8,
+    S32,
+    S64,
+    U8,
+    Pred,
+}
+
+/// Primitive types accepted by [`Literal::convert`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    F64,
+    S8,
+    S32,
+    S64,
+    U8,
+    Pred,
+}
+
+/// Marker trait for host element types the bindings understand.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side literal. The stub carries no data; any operation that would
+/// read device output errors first, so values are never observed.
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(Error::unavailable("Literal::ty"))
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        Err(Error::unavailable("Literal::convert"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a module proto.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Argument kinds accepted by [`PjRtLoadedExecutable::execute`] /
+/// [`PjRtLoadedExecutable::execute_b`].
+pub trait ExecuteArg {}
+impl ExecuteArg for Literal {}
+impl ExecuteArg for &PjRtBuffer {}
+
+/// A compiled, device-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: ExecuteArg>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T: ExecuteArg>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_loud_and_clear() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn host_side_constructors_succeed() {
+        // Literal construction and reshape are host-only in the real crate;
+        // the stub keeps them infallible so argument marshalling code paths
+        // are exercised up to the first device call.
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2, 1]).is_ok());
+        let _ = Literal::scalar(3i32);
+    }
+}
