@@ -1,15 +1,17 @@
-//! Influence-scoring throughput: the three scoring paths over the same
-//! datastore — dense f32, packed 1-bit XNOR+popcount, and the XLA Pallas
-//! tile. This is the §Perf centerpiece: the popcount path should beat the
-//! dense path by ~an order of magnitude (paper's 16× storage saving turned
-//! into a compute saving).
+//! Influence-scoring throughput: the scoring paths over the same
+//! datastore — the dequantize-to-f32 reference, the integer-domain engine
+//! (2/4/8-bit), the packed 1-bit XNOR+popcount kernel, the XLA Pallas
+//! tile, and the batched multi-query scan. This is the §Perf centerpiece:
+//! every sub-16-bit path must beat the f32 reference because it touches a
+//! fraction of the memory and does integer math in the hot loop, and Q
+//! validation tasks must cost ~one single-task pass, not Q.
 
 use std::path::PathBuf;
 
 use qless::datastore::{Datastore, DatastoreWriter};
 use qless::grads::FeatureMatrix;
-use qless::influence::native::{scores_1bit, scores_dense, ValFeatures};
-use qless::influence::{score_datastore, ScoreOpts};
+use qless::influence::native::{scores_1bit, scores_dense, scores_int_rows, ValFeatures};
+use qless::influence::{score_datastore, score_datastore_tasks, ScoreOpts};
 use qless::quant::{Precision, Scheme};
 use qless::util::stats::bench;
 use qless::util::table::human_bytes;
@@ -48,10 +50,18 @@ fn main() {
         let block = ds.load_checkpoint(0).unwrap();
         let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
         let val = ValFeatures::prepare(&vraw, Precision::new(bits, scheme).unwrap());
-        let r = bench(&format!("dense_{bits}bit"), pairs, "pair", || {
+        let r = bench(&format!("dense_{bits}bit (f32 reference)"), pairs, "pair", || {
             std::hint::black_box(scores_dense(&block, &val));
         });
         println!("{}", r.report_line());
+        if matches!(bits, 2 | 4 | 8) {
+            // the integer-domain engine: same scores (±1e-5), stored-code
+            // dot + zero-point fixup, no dequantize/normalize in the loop
+            let r = bench(&format!("int_{bits}bit"), pairs, "pair", || {
+                std::hint::black_box(scores_int_rows(&block.rows(), &val));
+            });
+            println!("{}", r.report_line());
+        }
         if bits == 1 {
             let r = bench("popcount_1bit", pairs, "pair", || {
                 std::hint::black_box(scores_1bit(&block, &val));
@@ -85,6 +95,41 @@ fn main() {
         println!("{}", r.report_line());
     }
 
+    // multi-query scan: Q validation tasks in ONE datastore pass vs Q
+    // sequential single-task passes, at the headline 4-bit precision
+    {
+        let q = 4usize;
+        let (ds, path) = build(4, n, k);
+        let tasks_raw: Vec<Vec<FeatureMatrix>> =
+            (0..q).map(|t| vec![feats(nv, k, 20 + t as u64)]).collect();
+        let refs: Vec<&[FeatureMatrix]> = tasks_raw.iter().map(|t| t.as_slice()).collect();
+        let opts = ScoreOpts { mem_budget_mb: 1, ..Default::default() };
+        // per-stage cost accounting: the fused pass must read exactly as
+        // many shards as ONE single-task scan
+        let (_, fused_stats) = score_datastore_tasks(&ds, &refs, opts, None).unwrap();
+        let (_, single_stats) = score_datastore_tasks(&ds, &refs[..1], opts, None).unwrap();
+        assert_eq!(
+            fused_stats.shards_read, single_stats.shards_read,
+            "multi-query scan must be one datastore pass"
+        );
+        println!(
+            "multi-query accounting: {q} tasks → {} shard reads (single-task pass: {})",
+            fused_stats.shards_read, single_stats.shards_read
+        );
+        let qpairs = (n * nv * q) as f64;
+        let r = bench(&format!("multi_query_fused_4bit (Q={q}, one pass)"), qpairs, "pair", || {
+            std::hint::black_box(score_datastore_tasks(&ds, &refs, opts, None).unwrap());
+        });
+        println!("{}", r.report_line());
+        let r = bench(&format!("multi_query_seq_4bit (Q={q}, {q} passes)"), qpairs, "pair", || {
+            for t in &refs {
+                std::hint::black_box(score_datastore(&ds, t, opts, None).unwrap());
+            }
+        });
+        println!("{}", r.report_line());
+        std::fs::remove_file(path).ok();
+    }
+
     // the k=8192 regression shape (paper-scale projection dim): the seed
     // popcount kernel panicked here; now it must simply be fast
     {
@@ -97,6 +142,22 @@ fn main() {
         );
         let r = bench("popcount_1bit_k8192", (n8 * nv) as f64, "pair", || {
             std::hint::black_box(scores_1bit(&block, &val8));
+        });
+        println!("{}", r.report_line());
+        std::fs::remove_file(path).ok();
+    }
+
+    // paper-scale k for the integer engine too (i32 dot holds to k≈66K)
+    {
+        let (n8, k8) = (2048usize, 8192usize);
+        let (ds, path) = build(4, n8, k8);
+        let block = ds.load_checkpoint(0).unwrap();
+        let val8 = ValFeatures::prepare(
+            &feats(nv, k8, 13),
+            Precision::new(4, Scheme::Absmax).unwrap(),
+        );
+        let r = bench("int_4bit_k8192", (n8 * nv) as f64, "pair", || {
+            std::hint::black_box(scores_int_rows(&block.rows(), &val8));
         });
         println!("{}", r.report_line());
         std::fs::remove_file(path).ok();

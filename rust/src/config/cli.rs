@@ -45,6 +45,7 @@ OPTIONS (all Config keys work as --key value):
   --corpus-size N     --seed N   --select-frac F   --workers N
   --shard-rows N      rows per influence-scan shard (0 = from budget)
   --mem-budget-mb N   influence-scan memory budget (default 64 MiB)
+  --multi-scan B      score all benchmarks in one datastore pass (default true)
   --run-dir DIR       --artifacts DIR
   --fast              shrink workloads        -v / -q      verbosity
 ";
@@ -128,6 +129,14 @@ mod tests {
         assert_eq!(c.config.shard_rows, 2048);
         assert_eq!(c.config.mem_budget_mb, 32);
         assert!(p(&["score", "--mem-budget-mb", "0"]).is_err()); // validate()
+    }
+
+    #[test]
+    fn multi_scan_flag_parses() {
+        assert!(p(&["score"]).unwrap().config.multi_scan); // default on
+        let c = p(&["score", "--multi-scan", "false"]).unwrap();
+        assert!(!c.config.multi_scan);
+        assert!(p(&["score", "--multi-scan", "maybe"]).is_err());
     }
 
     #[test]

@@ -59,6 +59,10 @@ pub struct Config {
     /// Influence-scan memory budget in MiB (bounds the streamed shard
     /// buffers; the scan never materializes a whole checkpoint block).
     pub mem_budget_mb: usize,
+    /// Score all benchmarks' validation tasks in ONE streamed datastore
+    /// pass (per-task accumulators share the shard traversal). Disable to
+    /// fall back to one pass per benchmark (before/after comparisons).
+    pub multi_scan: bool,
 }
 
 impl Default for Config {
@@ -84,6 +88,7 @@ impl Default for Config {
             xla_score: false,
             shard_rows: 0,
             mem_budget_mb: DEFAULT_MEM_BUDGET_MB,
+            multi_scan: true,
         }
     }
 }
@@ -128,6 +133,7 @@ impl Config {
             "xla_score" => self.xla_score = parse_bool(v, &key)?,
             "shard_rows" => self.shard_rows = parse(v, &key)?,
             "mem_budget_mb" => self.mem_budget_mb = parse(v, &key)?,
+            "multi_scan" => self.multi_scan = parse_bool(v, &key)?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -235,6 +241,17 @@ mod tests {
         assert!(c.set("xla_score", "maybe").is_err());
         assert!(c.set("shard_rows", "lots").is_err());
         assert!(c.set("mem_budget_mb", "-3").is_err());
+    }
+
+    #[test]
+    fn multi_scan_flag_parses() {
+        let mut c = Config::default();
+        assert!(c.multi_scan); // one datastore pass for all benchmarks
+        c.set("multi-scan", "false").unwrap();
+        assert!(!c.multi_scan);
+        c.set("multi_scan", "yes").unwrap();
+        assert!(c.multi_scan);
+        assert!(c.set("multi_scan", "perhaps").is_err());
     }
 
     #[test]

@@ -4,19 +4,29 @@ use anyhow::{bail, Result};
 
 use crate::quant::{Precision, Scheme};
 
+/// File magic, first four bytes of every datastore.
 pub const MAGIC: [u8; 4] = *b"QLDS";
+/// On-disk format version accepted by [`Header::decode`].
 pub const VERSION: u32 = 1;
 
+/// The datastore file header: storage precision plus the geometry every
+/// offset computation derives from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
+    /// Storage precision of the gradient rows (bits + scheme).
     pub precision: Precision,
+    /// Sample rows per checkpoint block.
     pub n_samples: u64,
+    /// Codes per row (the projection dimension).
     pub k: u64,
+    /// Checkpoint blocks in the file.
     pub n_checkpoints: u32,
+    /// Bytes per packed row (derived from `k` and the precision).
     pub row_stride: u32,
 }
 
 impl Header {
+    /// Build a header for the given geometry, deriving `row_stride`.
     pub fn new(precision: Precision, n_samples: usize, k: usize, n_checkpoints: usize) -> Header {
         let row_stride = match precision.bits {
             16 => (k * 2) as u32,
@@ -31,8 +41,10 @@ impl Header {
         }
     }
 
+    /// Encoded header size in bytes (fixed-width little-endian fields).
     pub const BYTES: usize = 4 + 4 + 1 + 1 + 2 + 8 + 8 + 4 + 4;
 
+    /// Serialize the header to its on-disk byte layout.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(Self::BYTES);
         out.extend_from_slice(&MAGIC);
@@ -48,6 +60,8 @@ impl Header {
         out
     }
 
+    /// Parse and validate an encoded header (magic, version, scheme tag
+    /// and `row_stride` consistency).
     pub fn decode(b: &[u8]) -> Result<Header> {
         if b.len() < Self::BYTES {
             bail!("datastore header truncated ({} bytes)", b.len());
@@ -105,7 +119,8 @@ impl Header {
     }
 
     /// Byte offset of the scales section of checkpoint `c` (just after η).
-    /// At 16-bit the section is empty and this equals [`Self::rows_offset`].
+    /// At 16-bit the section is empty, so rows begin here
+    /// ([`Self::row_offset`] of row 0).
     pub fn scales_offset(&self, c: usize) -> u64 {
         self.block_offset(c) + 4
     }

@@ -24,6 +24,9 @@ use crate::util::bits::{bf16_to_f32, f32_to_bf16};
 // writer
 // ---------------------------------------------------------------------------
 
+/// Streaming datastore writer: header up front, then one block per
+/// checkpoint (`begin_checkpoint` → `append_features`× → `end_checkpoint`),
+/// validated against the header's geometry at `finalize`.
 pub struct DatastoreWriter {
     file: BufWriter<File>,
     path: PathBuf,
@@ -38,6 +41,8 @@ pub struct DatastoreWriter {
 }
 
 impl DatastoreWriter {
+    /// Create a datastore file at `path` for the given geometry (parents
+    /// are created as needed) and write its header.
     pub fn create(
         path: &Path,
         precision: Precision,
@@ -225,8 +230,11 @@ impl DatastoreWriter {
 /// paths bit-identical: the decode logic lives here, once.
 #[derive(Debug, Clone, Copy)]
 pub struct RowsView<'a> {
+    /// Storage precision of the rows (bits + scheme).
     pub precision: Precision,
+    /// Codes per row (the projection dimension).
     pub k: usize,
+    /// Bytes per packed row on disk and in `data`.
     pub row_stride: usize,
     /// Per-row scales (empty at 16-bit).
     pub scales: &'a [f32],
@@ -240,8 +248,20 @@ impl<'a> RowsView<'a> {
         self.data.len() / self.row_stride
     }
 
+    /// Raw packed bytes of row `i` (the on-disk layout, `row_stride` long).
     pub fn row_bytes(&self, i: usize) -> &'a [u8] {
         &self.data[i * self.row_stride..(i + 1) * self.row_stride]
+    }
+
+    /// Unpack row `i`'s lanes as zero-extended **stored** values
+    /// (offset-binary `code + α`; the raw sign bit at 1-bit) into `out` —
+    /// the integer scoring engine's code-layout accessor: no sign
+    /// extension, no dequantization, no per-element float math. At 8-bit
+    /// the lanes are the row bytes themselves, so hot paths can borrow
+    /// [`Self::row_bytes`] directly instead.
+    pub fn row_stored_into(&self, i: usize, out: &mut Vec<u8>) {
+        assert!(self.precision.bits < 16, "stored lanes exist only for packed rows");
+        crate::quant::pack::unpack_stored_into(self.row_bytes(i), self.precision.bits, self.k, out)
     }
 
     /// Dequantize row `i` to f32 features.
@@ -278,14 +298,19 @@ impl<'a> RowsView<'a> {
 /// One checkpoint's worth of features, resident in memory.
 #[derive(Debug, Clone)]
 pub struct CheckpointBlock {
+    /// Storage precision of the rows (bits + scheme).
     pub precision: Precision,
+    /// Number of sample rows in the block.
     pub n: usize,
+    /// Codes per row (the projection dimension).
     pub k: usize,
+    /// The checkpoint's learning-rate weight η_i (Eq. 7).
     pub eta: f32,
     /// Per-row scales (empty at 16-bit).
     pub scales: Vec<f32>,
     /// Packed row data, `n × row_stride` bytes.
     pub data: Vec<u8>,
+    /// Bytes per packed row.
     pub row_stride: usize,
 }
 
@@ -311,17 +336,23 @@ impl CheckpointBlock {
         self.rows().row_codes(i)
     }
 
+    /// Raw packed bytes of row `i` (the on-disk layout).
     pub fn row_bytes(&self, i: usize) -> &[u8] {
         &self.data[i * self.row_stride..(i + 1) * self.row_stride]
     }
 }
 
+/// A validated datastore file handle: the parsed [`Header`] plus the path,
+/// read lazily by [`Datastore::load_checkpoint`] / [`Datastore::shard_reader`].
 pub struct Datastore {
+    /// The file's parsed, size-validated header.
     pub header: Header,
     path: PathBuf,
 }
 
 impl Datastore {
+    /// Open and validate a datastore file (header decode + exact file-size
+    /// check, so truncated stores fail here, not mid-scan).
     pub fn open(path: &Path) -> Result<Datastore> {
         let mut f = File::open(path).with_context(|| format!("opening datastore {path:?}"))?;
         let mut hdr = [0u8; Header::BYTES];
@@ -334,14 +365,17 @@ impl Datastore {
         Ok(Datastore { header, path: path.to_path_buf() })
     }
 
+    /// Number of checkpoint blocks in the store.
     pub fn n_checkpoints(&self) -> usize {
         self.header.n_checkpoints as usize
     }
 
+    /// Number of sample rows per checkpoint block.
     pub fn n_samples(&self) -> usize {
         self.header.n_samples as usize
     }
 
+    /// Total file size implied by the header (validated at open).
     pub fn file_bytes(&self) -> u64 {
         self.header.file_bytes()
     }
@@ -435,14 +469,17 @@ pub struct Shard<'a> {
 }
 
 impl<'a> Shard<'a> {
+    /// The shard's rows as the scoring kernels' common view.
     pub fn rows(&self) -> RowsView<'a> {
         self.rows
     }
 
+    /// Number of rows in the shard.
     pub fn len(&self) -> usize {
         self.rows.n()
     }
 
+    /// True when the shard holds no rows.
     pub fn is_empty(&self) -> bool {
         self.rows.n() == 0
     }

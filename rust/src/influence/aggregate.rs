@@ -1,24 +1,28 @@
 //! Checkpoint aggregation (the outer sum of Eq. 7):
 //! Inf(z) = Σ_i η_i · mean_{z'} ⟨q̂_{z,i}, q̂_{z',i}⟩.
 //!
-//! For each warmup checkpoint: prepare the same-checkpoint validation
-//! features once at the datastore's precision, then **stream** the
-//! checkpoint's rows in fixed-size shards (`Datastore::shard_reader`),
-//! score each shard with the fastest applicable path (popcount at 1-bit,
-//! dense otherwise, or the XLA kernel when requested), weight by η_i, and
-//! accumulate the per-shard partial scores. Peak resident memory during a
-//! scan is the shard buffers — bounded by `--mem-budget-mb` — instead of
-//! the whole `n × row_stride` block the pre-shard reader materialized.
+//! For each warmup checkpoint: prepare every validation task's features
+//! once at the datastore's precision, then **stream** the checkpoint's
+//! rows in fixed-size shards (`Datastore::shard_reader`), score each shard
+//! against *all* tasks with the fastest applicable path (popcount at
+//! 1-bit, the integer-domain engine at 2/4/8-bit, dense f32 at 16-bit, or
+//! the XLA kernel when requested), weight by η_i, and accumulate the
+//! per-shard partials into per-task totals. Q validation tasks therefore
+//! cost **one** datastore pass, not Q — [`ScanStats`] records the shard
+//! and byte traffic so benches can assert exactly that.
 //!
-//! Per-sample scores only depend on that sample's row, so the streamed
-//! result is bit-identical to the old whole-block scan (property-tested in
-//! `tests/sharding.rs`).
+//! Peak resident memory during a scan is the shard buffers — bounded by
+//! `--mem-budget-mb` — instead of the whole `n × row_stride` block the
+//! pre-shard reader materialized. Per-sample scores only depend on that
+//! sample's row, so the streamed result is bit-identical to a whole-block
+//! scan (property-tested in `tests/sharding.rs`), and a fused multi-task
+//! scan is bit-identical to Q single-task scans (`tests/int_scoring.rs`).
 
 use anyhow::Result;
 
 use crate::datastore::Datastore;
 use crate::grads::FeatureMatrix;
-use crate::influence::native::{scores_1bit_rows, scores_dense_rows, ValFeatures};
+use crate::influence::native::{scores_rows, ValFeatures};
 use crate::influence::xla::{pack_val_tiles, scores_xla_rows};
 use crate::runtime::{ModelInfo, Runtime};
 use crate::{info, warn_};
@@ -30,6 +34,7 @@ use crate::{info, warn_};
 /// library defaults can't diverge.
 pub use crate::config::DEFAULT_MEM_BUDGET_MB;
 
+/// Knobs of one influence scan (sharding, memory budget, kernel choice).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ScoreOpts {
     /// Route the per-shard scoring through the AOT Pallas kernel.
@@ -41,6 +46,7 @@ pub struct ScoreOpts {
 }
 
 impl ScoreOpts {
+    /// The memory budget actually in force (resolves the 0 default).
     pub fn effective_budget_mb(&self) -> usize {
         if self.mem_budget_mb == 0 {
             DEFAULT_MEM_BUDGET_MB
@@ -50,23 +56,47 @@ impl ScoreOpts {
     }
 }
 
-/// Score every training sample in `ds` against per-checkpoint validation
-/// features `val_per_ckpt` (raw, unquantized — quantization to the
-/// datastore's precision happens here, mirroring §3.2).
+/// I/O accounting of one streamed scan — the proof obligation of the
+/// multi-query design: `shards_read`/`bytes_read` must not depend on how
+/// many validation tasks rode the pass. Rendered into the pipeline's
+/// per-stage cost table (`pipeline::stage`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScanStats {
+    /// Checkpoints scanned.
+    pub checkpoints: usize,
+    /// Validation tasks scored by the pass.
+    pub tasks: usize,
+    /// Shard reads performed (the scan's I/O unit).
+    pub shards_read: usize,
+    /// Rows streamed off disk.
+    pub rows_read: u64,
+    /// Resident bytes streamed (rows × per-row resident cost).
+    pub bytes_read: u64,
+}
+
+/// Score every training sample in `ds` against **Q validation tasks** in a
+/// single streamed pass. `tasks[t]` holds task `t`'s raw (unquantized)
+/// per-checkpoint validation features — quantization to the datastore's
+/// precision happens here, mirroring §3.2. Returns one score vector per
+/// task (same order), plus the pass's [`ScanStats`].
 ///
-/// `rt`/`info` are only needed for the XLA path and may be `None` otherwise.
-pub fn score_datastore(
+/// `rt_info` is only needed for the XLA path and may be `None` otherwise.
+pub fn score_datastore_tasks(
     ds: &Datastore,
-    val_per_ckpt: &[FeatureMatrix],
+    tasks: &[&[FeatureMatrix]],
     opts: ScoreOpts,
     rt_info: Option<(&Runtime, &ModelInfo)>,
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<Vec<f32>>, ScanStats)> {
     let c = ds.n_checkpoints();
-    anyhow::ensure!(
-        val_per_ckpt.len() == c,
-        "validation features for {} checkpoints, datastore has {c}",
-        val_per_ckpt.len()
-    );
+    let q = tasks.len();
+    anyhow::ensure!(q > 0, "no validation tasks to score");
+    for (t, per_ckpt) in tasks.iter().enumerate() {
+        anyhow::ensure!(
+            per_ckpt.len() == c,
+            "task {t}: validation features for {} checkpoints, datastore has {c}",
+            per_ckpt.len()
+        );
+    }
     let n = ds.n_samples();
     let precision = ds.header.precision;
     let k = ds.header.k as usize;
@@ -91,7 +121,7 @@ pub fn score_datastore(
         // more than the work: < 256 rows or < 8M inner ops per shard);
         // shards under those thresholds serialize the whole scan — legal,
         // but worth a loud note on a multi-core box
-        let nv = val_per_ckpt.first().map(|v| v.n).unwrap_or(0);
+        let nv: usize = tasks.iter().filter_map(|t| t.first()).map(|f| f.n).sum();
         let work_per_row =
             if precision.bits == 1 { nv * k.div_ceil(64) } else { nv * k } as u64;
         let whole_scan_parallel = (n as u64) * work_per_row >= 8_000_000;
@@ -104,11 +134,14 @@ pub fn score_datastore(
             );
         }
     }
-    let mut total = vec![0f32; n];
+    let mut totals = vec![vec![0f32; n]; q];
+    let mut stats = ScanStats { checkpoints: c, tasks: q, ..Default::default() };
     for ci in 0..c {
         // prepared once per checkpoint, reused by every shard of that
         // checkpoint — val features are never re-read or re-packed per shard
-        let val = ValFeatures::try_prepare(&val_per_ckpt[ci], precision)?;
+        let per_task: Vec<&FeatureMatrix> = tasks.iter().map(|t| &t[ci]).collect();
+        let val = ValFeatures::try_prepare_tasks(&per_task, precision)?;
+        anyhow::ensure!(val.k == k, "validation feature dim {} != datastore k {k}", val.k);
         let val_tiles = match (opts.use_xla, rt_info) {
             (true, Some((_, info))) => Some(pack_val_tiles(info, &val)),
             (true, None) => return Err(anyhow::anyhow!("XLA scoring requires a runtime")),
@@ -123,24 +156,45 @@ pub fn score_datastore(
             let scores = if let Some(tiles) = &val_tiles {
                 let (rt, info) = rt_info.expect("checked above");
                 scores_xla_rows(rt, info, &rows, tiles)?
-            } else if precision.bits == 1 {
-                scores_1bit_rows(&rows, &val)
             } else {
-                scores_dense_rows(&rows, &val)
+                scores_rows(&rows, &val)
             };
-            for (t, s) in total[shard.start..shard.start + rows.n()].iter_mut().zip(&scores) {
-                *t += eta * s;
+            debug_assert_eq!(scores.len(), rows.n() * q);
+            for (j, chunk) in scores.chunks_exact(q).enumerate() {
+                let g = shard.start + j;
+                for (total, &s) in totals.iter_mut().zip(chunk) {
+                    total[g] += eta * s;
+                }
             }
             shards += 1;
+            stats.shards_read += 1;
+            stats.rows_read += rows.n() as u64;
+            stats.bytes_read += rows.n() as u64 * ds.header.resident_row_bytes();
         }
         info!(
-            "scored checkpoint {ci} (η={eta:.2e}, {n}×{} vs {} val, {shards} shards ≤{rows_per_shard} rows) in {:.2}s",
+            "scored checkpoint {ci} (η={eta:.2e}, {n}×{} vs {} val rows / {q} tasks, {shards} shards ≤{rows_per_shard} rows) in {:.2}s",
             ds.header.k,
             val.n(),
             t0.elapsed().as_secs_f64()
         );
     }
-    Ok(total)
+    Ok((totals, stats))
+}
+
+/// Single-task [`score_datastore_tasks`]: score every training sample
+/// against per-checkpoint validation features `val_per_ckpt` (raw,
+/// unquantized — quantization to the datastore's precision happens here,
+/// mirroring §3.2).
+///
+/// `rt_info` is only needed for the XLA path and may be `None` otherwise.
+pub fn score_datastore(
+    ds: &Datastore,
+    val_per_ckpt: &[FeatureMatrix],
+    opts: ScoreOpts,
+    rt_info: Option<(&Runtime, &ModelInfo)>,
+) -> Result<Vec<f32>> {
+    let (mut per_task, _) = score_datastore_tasks(ds, &[val_per_ckpt], opts, rt_info)?;
+    Ok(per_task.swap_remove(0))
 }
 
 #[cfg(test)]
@@ -235,6 +289,41 @@ mod tests {
     }
 
     #[test]
+    fn multi_task_scan_reads_datastore_once() {
+        // Q tasks, one pass: shard/row/byte traffic must equal a
+        // single-task scan's, and per-task scores must equal their
+        // individual scans exactly.
+        let (n, k) = (32, 64);
+        let (ds, p) = build_ds_keep(4, &[0.9, 0.4], n, k);
+        let t0 = vec![feats(2, k, 70), feats(2, k, 71)];
+        let t1 = vec![feats(5, k, 72), feats(5, k, 73)];
+        let t2 = vec![feats(1, k, 74), feats(1, k, 75)];
+        let opts = ScoreOpts { shard_rows: 5, ..Default::default() };
+        let (fused, stats) = score_datastore_tasks(
+            &ds,
+            &[&t0, &t1, &t2],
+            opts,
+            None,
+        )
+        .unwrap();
+        assert_eq!(fused.len(), 3);
+        assert_eq!(stats.tasks, 3);
+        assert_eq!(stats.checkpoints, 2);
+        // 32 rows / 5 per shard = 7 shards per checkpoint, 2 checkpoints
+        assert_eq!(stats.shards_read, 14);
+        assert_eq!(stats.rows_read, 2 * n as u64);
+        let (_, single_stats) =
+            score_datastore_tasks(&ds, &[&t0], opts, None).unwrap();
+        assert_eq!(stats.shards_read, single_stats.shards_read, "multi-task pass must not re-read");
+        assert_eq!(stats.bytes_read, single_stats.bytes_read);
+        for (t, task) in [&t0, &t1, &t2].into_iter().enumerate() {
+            let alone = score_datastore(&ds, task, opts, None).unwrap();
+            assert_eq!(alone, fused[t], "task {t}: fused vs single scan");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
     fn nan_val_features_error_not_panic() {
         // a NaN validation gradient must fail the scan with a recoverable
         // Err, not abort the process mid-sweep
@@ -251,6 +340,21 @@ mod tests {
         let (ds, p) = build_ds_keep(8, &[1.0, 1.0], 4, 64);
         let vals = vec![feats(2, 64, 1)];
         assert!(score_datastore(&ds, &vals, ScoreOpts::default(), None).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn mismatched_task_lengths_error() {
+        let (ds, p) = build_ds_keep(8, &[1.0, 1.0], 4, 64);
+        let good = vec![feats(2, 64, 1), feats(2, 64, 2)];
+        let short = vec![feats(2, 64, 3)];
+        assert!(score_datastore_tasks(
+            &ds,
+            &[&good, &short],
+            ScoreOpts::default(),
+            None
+        )
+        .is_err());
         std::fs::remove_file(p).ok();
     }
 }

@@ -6,19 +6,26 @@
 //! scale cancels under normalization, so scoring operates on integer codes
 //! directly. Three execution paths, all bit-identical in ranking:
 //!
-//! * [`native`] — dequantize-free f32 cosine over unpacked codes, plus the
-//!   1-bit **XNOR+popcount** fast path over packed sign words (the compute
-//!   analogue of the paper's 16× storage saving).
+//! * [`native`] — the **integer-domain scoring engine**: stored-code dot
+//!   products with i32 accumulation plus a per-row scale/zero-point fixup
+//!   at 2/4/8-bit, the 1-bit **XNOR+popcount** kernel (its degenerate
+//!   case), and the dequantize-to-f32 reference path they are
+//!   property-tested against.
 //! * [`xla`]    — the L1 Pallas `influence` tile artifact via PJRT, chunked
 //!   and padded to the compiled tile shape.
 //! * [`aggregate`] — the streaming checkpoint loop: shards of each
 //!   datastore block are scored under a memory budget with the chosen
 //!   path, weighted by η_i, and accumulated into per-sample totals —
 //!   peak resident memory is `O(shard)`, not `O(block)`.
+//!
+//! Scans are **multi-query**: a [`ValFeatures`] holds a set of validation
+//! tasks, every kernel scores all of them during one traversal of the
+//! train rows, and [`score_datastore_tasks`] streams the datastore once
+//! for Q tasks ([`ScanStats`] proves the single pass).
 
 pub mod aggregate;
 pub mod native;
 pub mod xla;
 
-pub use aggregate::{score_datastore, ScoreOpts};
-pub use native::ValFeatures;
+pub use aggregate::{score_datastore, score_datastore_tasks, ScanStats, ScoreOpts};
+pub use native::{ValFeatures, ValTask};

@@ -1,17 +1,39 @@
-//! Native influence paths: generic f32 cosine and the packed 1-bit
-//! XNOR+popcount kernel.
+//! Native influence paths: the integer-domain scoring engine for packed
+//! 2/4/8-bit codes, the packed 1-bit XNOR+popcount kernel (its degenerate
+//! case), and the generic f32 cosine reference.
 //!
-//! The popcount path is the performance centerpiece: for ±1 codes, cosine
-//! similarity reduces to bit agreement,
-//! `cos = (2·agree − k)/k`, computable at 64 dims per instruction over the
-//! datastore's packed words with no dequantization, no normalization and
-//! 1/32 the memory traffic of f32 — see EXPERIMENTS.md §Perf.
+//! **Integer-domain scoring** (DESIGN.md §9): both sides of Eq. 7 are
+//! quantized then L2-normalized, so the quantization scale cancels and the
+//! cosine reduces to an integer code dot product times two precomputed
+//! inverse norms:
 //!
-//! Both kernels score a [`RowsView`] — a whole checkpoint block or one
+//! ```text
+//! cos(t, v) = ⟨t, v⟩ / (‖t‖·‖v‖)        t, v ∈ {−α..α}^k integer codes
+//! ```
+//!
+//! The engine dots the datastore's **stored** offset-binary lanes
+//! (`s = t + α`) directly against validation codes with i32 accumulation
+//! and removes the offset with one per-row zero-point fixup,
+//! `⟨t, v⟩ = ⟨s, v⟩ − α·Σv` — no dequantization, no f32 normalization, no
+//! per-element float math in the hot loop. At 1-bit the same algebra
+//! degenerates to bit agreement, `cos = (2·agree − k)/k`, computed 64 dims
+//! per instruction over packed words.
+//!
+//! **Multi-query scanning:** a [`ValFeatures`] is a *set* of validation
+//! tasks. Every kernel scores one traversal of the train rows against all
+//! tasks at once — the row's decode (unpack / dequantize / window
+//! assembly) is paid once, and each task gets its own accumulator — and
+//! returns the scores row-major: `out[i·Q + t]` is row `i` against task
+//! `t`. A single-task set is the `Q = 1` case, with byte-identical scores
+//! to the old per-task kernels.
+//!
+//! All kernels score a [`RowsView`] — a whole checkpoint block or one
 //! streamed shard — so the block and streaming scan paths share one
 //! per-row implementation and are bit-identical by construction. Row
 //! parallelism runs on the persistent scan pool (`util::pool`): no
 //! per-call thread spawns, no thread-count cap.
+
+use std::cell::RefCell;
 
 use crate::datastore::{CheckpointBlock, RowsView};
 use crate::grads::FeatureMatrix;
@@ -19,50 +41,74 @@ use crate::quant::pack::{as_sign_words, pack_codes};
 use crate::quant::scheme::{normalize_row, quantize_row};
 use crate::quant::Precision;
 
-/// Validation-side features prepared for scoring at a given precision:
-/// quantized-normalized f32 rows, plus packed sign words at 1-bit.
-#[derive(Debug, Clone)]
-pub struct ValFeatures {
-    pub k: usize,
-    /// `[n_val][k]` quantized → normalized rows.
+/// One validation task's features, prepared for scoring at the datastore's
+/// precision: quantized-normalized f32 rows (reference + XLA path), packed
+/// sign words (1-bit path) and integer codes with precomputed sums and
+/// inverse norms (integer-domain path).
+#[derive(Debug, Clone, Default)]
+pub struct ValTask {
+    /// `[n_val][k]` quantized → normalized f32 rows.
     pub rows: Vec<Vec<f32>>,
     /// Packed sign words per row (populated only at 1-bit).
     pub sign_words: Vec<Vec<u64>>,
+    /// Integer codes per row (populated only at 2/4/8-bit).
+    pub codes: Vec<Vec<i8>>,
+    /// Σ codes per row — the zero-point fixup term (2/4/8-bit only).
+    pub code_sums: Vec<i32>,
+    /// 1/‖codes‖₂ per row, 0.0 for all-zero rows (2/4/8-bit only).
+    pub inv_norms: Vec<f32>,
+}
+
+impl ValTask {
+    /// Number of validation rows in this task.
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// A set of validation tasks prepared for scoring at a given precision.
+///
+/// The multi-query scan scores every task in one streamed pass over the
+/// datastore; a single task is simply the one-element set. Build with
+/// [`ValFeatures::prepare`] / [`ValFeatures::try_prepare`] (one task) or
+/// [`ValFeatures::try_prepare_tasks`] (many).
+#[derive(Debug, Clone)]
+pub struct ValFeatures {
+    /// Projection dimension shared by every task and the datastore.
+    pub k: usize,
+    /// The prepared tasks, in caller order.
+    pub tasks: Vec<ValTask>,
 }
 
 impl ValFeatures {
-    /// Fallible [`ValFeatures::prepare`]: rejects non-finite validation
-    /// gradients with a recoverable error instead of aborting — the form
-    /// `score_datastore` uses, so one NaN val gradient fails the scan, not
-    /// the process.
-    pub fn try_prepare(feats: &FeatureMatrix, precision: Precision) -> anyhow::Result<ValFeatures> {
-        let mut rows = Vec::with_capacity(feats.n);
-        let mut sign_words = Vec::new();
-        for i in 0..feats.n {
-            let raw = feats.row(i);
-            // checked for every bitwidth (16-bit skips quantize_row) so a
-            // NaN val gradient can't poison every score silently
-            if let Some(j) = raw.iter().position(|x| !x.is_finite()) {
-                anyhow::bail!(
-                    "non-finite validation gradient feature {} at row {i} index {j}: \
-                     rejected at preparation time",
-                    raw[j]
-                );
-            }
-            let mut row: Vec<f32> = if precision.bits == 16 {
-                raw.to_vec()
-            } else {
-                let q = quantize_row(raw, precision.bits, precision.scheme);
-                if precision.bits == 1 {
-                    let packed = pack_codes(&q.codes, 1, q.scale).expect("pack 1-bit");
-                    sign_words.push(as_sign_words(&packed));
-                }
-                q.codes.iter().map(|&c| c as f32).collect()
-            };
-            normalize_row(&mut row);
-            rows.push(row);
+    /// Prepare a set of validation tasks (one [`FeatureMatrix`] per task,
+    /// raw unquantized gradients) at the datastore's precision. Rejects
+    /// non-finite features, empty tasks and mismatched `k` with a
+    /// recoverable error — one bad task fails the scan, not the process.
+    pub fn try_prepare_tasks(
+        per_task: &[&FeatureMatrix],
+        precision: Precision,
+    ) -> anyhow::Result<ValFeatures> {
+        anyhow::ensure!(!per_task.is_empty(), "no validation tasks to prepare");
+        let k = per_task[0].k;
+        let mut tasks = Vec::with_capacity(per_task.len());
+        for (t, feats) in per_task.iter().enumerate() {
+            anyhow::ensure!(
+                feats.k == k,
+                "validation task {t} has feature dim {} (expected {k})",
+                feats.k
+            );
+            tasks.push(prepare_task(feats, precision, t)?);
         }
-        Ok(ValFeatures { k: feats.k, rows, sign_words })
+        Ok(ValFeatures { k, tasks })
+    }
+
+    /// Fallible single-task [`ValFeatures::prepare`]: rejects non-finite
+    /// validation gradients with a recoverable error instead of aborting —
+    /// the form `score_datastore` uses, so one NaN val gradient fails the
+    /// scan, not the process.
+    pub fn try_prepare(feats: &FeatureMatrix, precision: Precision) -> anyhow::Result<ValFeatures> {
+        Self::try_prepare_tasks(&[feats], precision)
     }
 
     /// Quantize raw validation gradient features with the datastore's
@@ -73,40 +119,192 @@ impl ValFeatures {
         Self::try_prepare(feats, precision).expect("preparing validation features")
     }
 
+    /// Number of validation tasks in the set.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total validation rows across all tasks (the scan's work factor).
     pub fn n(&self) -> usize {
-        self.rows.len()
+        self.tasks.iter().map(|t| t.n()).sum()
     }
 }
 
-/// Mean cosine similarity of each train row against all val rows: the
-/// inner term of Eq. 7 for one checkpoint. Whole-block convenience wrapper
-/// over [`scores_dense_rows`].
+/// Prepare one task's features (see [`ValFeatures::try_prepare_tasks`]).
+fn prepare_task(feats: &FeatureMatrix, precision: Precision, t: usize) -> anyhow::Result<ValTask> {
+    anyhow::ensure!(feats.n > 0, "validation task {t} has no rows");
+    let mut task = ValTask::default();
+    task.rows.reserve(feats.n);
+    for i in 0..feats.n {
+        let raw = feats.row(i);
+        // checked for every bitwidth (16-bit skips quantize_row) so a
+        // NaN val gradient can't poison every score silently
+        if let Some(j) = raw.iter().position(|x| !x.is_finite()) {
+            anyhow::bail!(
+                "non-finite validation gradient feature {} at task {t} row {i} index {j}: \
+                 rejected at preparation time",
+                raw[j]
+            );
+        }
+        let mut row: Vec<f32> = if precision.bits == 16 {
+            raw.to_vec()
+        } else {
+            let q = quantize_row(raw, precision.bits, precision.scheme);
+            let as_f32: Vec<f32> = q.codes.iter().map(|&c| c as f32).collect();
+            if precision.bits == 1 {
+                let packed = pack_codes(&q.codes, 1, q.scale).expect("pack 1-bit");
+                task.sign_words.push(as_sign_words(&packed));
+            } else {
+                let sum: i64 = q.codes.iter().map(|&c| c as i64).sum();
+                let norm2: i64 = q.codes.iter().map(|&c| (c as i64) * (c as i64)).sum();
+                task.code_sums.push(sum as i32);
+                task.inv_norms.push(if norm2 > 0 { 1.0 / (norm2 as f32).sqrt() } else { 0.0 });
+                task.codes.push(q.codes);
+            }
+            as_f32
+        };
+        normalize_row(&mut row);
+        task.rows.push(row);
+    }
+    Ok(task)
+}
+
+/// Mean cosine similarity of each train row against each task's val rows:
+/// the inner term of Eq. 7 for one checkpoint. Whole-block convenience
+/// wrapper over [`scores_dense_rows`]; row-major `[n × Q]` output.
 pub fn scores_dense(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
     scores_dense_rows(&block.rows(), val)
 }
 
-/// [`scores_dense`] over any row view (block or streamed shard). Generic
-/// path — works for every precision by unpacking codes to f32.
+/// [`scores_dense`] over any row view (block or streamed shard). The
+/// dequantize-to-f32 **reference** path — works for every precision by
+/// unpacking codes to f32 and normalizing; the integer-domain and popcount
+/// kernels are property-tested against it. Row-major `[n × Q]` output.
 pub fn scores_dense_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
     assert_eq!(rows.k, val.k);
-    let nv = val.n() as f32;
-    // work per row ≈ nv·k fused-multiply-adds (plus unpack)
-    par_over_rows(rows.n(), (val.n() * rows.k) as u64, |i| {
+    let q = val.n_tasks();
+    assert!(q > 0, "no validation tasks");
+    // work per row ≈ total-val·k fused-multiply-adds (plus unpack)
+    par_over_rows(rows.n(), q, (val.n() * rows.k) as u64, |i, out| {
         let mut row = if rows.precision.bits == 16 {
             rows.row_f32(i)
         } else {
             rows.row_codes(i).iter().map(|&c| c as f32).collect()
         };
         normalize_row(&mut row);
-        let mut acc = 0f32;
-        for v in &val.rows {
-            acc += dot(&row, v);
+        for (o, task) in out.iter_mut().zip(&val.tasks) {
+            let mut acc = 0f32;
+            for v in &task.rows {
+                acc += dot(&row, v);
+            }
+            *o = acc / task.rows.len() as f32;
         }
-        acc / nv
     })
 }
 
-/// Evaluate `f(i)` for each row index in parallel (order-preserving).
+/// True iff the i32 inner accumulator of [`scores_int_rows`] cannot
+/// overflow at this bitwidth and projection dimension: the stored-lane dot
+/// is bounded by `k · 2α²`, which must stay below `i32::MAX`. At 8-bit
+/// this allows k ≤ 66 572 — far beyond the paper's k = 8192; the scan
+/// dispatch falls back to the f32 path past the bound.
+pub fn int_dot_fits(bits: u8, k: usize) -> bool {
+    if !matches!(bits, 2 | 4 | 8) {
+        return false;
+    }
+    let alpha = (1u64 << (bits - 1)) - 1;
+    (k as u64) <= (i32::MAX as u64) / (2 * alpha * alpha)
+}
+
+thread_local! {
+    /// Per-thread scratch for one row's unpacked stored lanes (2/4-bit).
+    static STORED_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread per-task agreement counters (1-bit kernel).
+    static AGREE_SCRATCH: RefCell<Vec<i64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The integer-domain scoring engine for 2/4/8-bit datastores.
+///
+/// Per train row: unpack the stored offset-binary lanes once (8-bit rows
+/// are borrowed directly — the lanes *are* the row bytes), derive the
+/// row's integer norm from lane sums via
+/// `‖t‖² = Σs² − 2αΣs + kα²`, then for every validation row of every task
+/// accumulate the integer dot `⟨s, v⟩` in i32 and apply the zero-point
+/// fixup `⟨t, v⟩ = ⟨s, v⟩ − α·Σv` (Σv is precomputed in
+/// [`ValTask::code_sums`]). The only float ops per (row, val-row) pair are
+/// one i32→f32 conversion and one multiply by the val row's precomputed
+/// inverse norm — no dequantization, no f32 normalization, 1/4 (8-bit) to
+/// 1/16 (2-bit) the memory traffic of the f32 reference path.
+///
+/// Row-major `[n × Q]` output; panics if `!int_dot_fits(bits, k)` —
+/// callers should dispatch through [`scores_rows`], which falls back to
+/// the f32 path instead.
+pub fn scores_int_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
+    let bits = rows.precision.bits;
+    assert!(matches!(bits, 2 | 4 | 8), "integer path needs a 2/4/8-bit datastore");
+    assert_eq!(rows.k, val.k);
+    assert!(int_dot_fits(bits, rows.k), "k {} overflows the i32 dot at {bits}-bit", rows.k);
+    let q = val.n_tasks();
+    assert!(q > 0, "no validation tasks");
+    for (t, task) in val.tasks.iter().enumerate() {
+        assert!(!task.codes.is_empty(), "task {t} lacks integer codes");
+    }
+    let k = rows.k;
+    let alpha = ((1i32 << (bits - 1)) - 1) as i64;
+    // work per row ≈ total-val·k integer multiply-adds (plus unpack)
+    par_over_rows(rows.n(), q, (val.n() * k) as u64, |i, out| {
+        STORED_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            let stored: &[u8] = if bits == 8 {
+                // 8-bit lanes are the row bytes themselves (stride == k)
+                rows.row_bytes(i)
+            } else {
+                rows.row_stored_into(i, &mut buf);
+                &buf[..k]
+            };
+            // row norm from lane sums: ‖t‖² = Σs² − 2αΣs + kα²
+            let mut sum_s = 0i64;
+            let mut sum_s2 = 0i64;
+            for &s in stored {
+                let s = s as i64;
+                sum_s += s;
+                sum_s2 += s * s;
+            }
+            let norm2 = sum_s2 - 2 * alpha * sum_s + k as i64 * alpha * alpha;
+            let inv_norm_t = if norm2 > 0 { 1.0 / (norm2 as f32).sqrt() } else { 0.0 };
+            for (o, task) in out.iter_mut().zip(&val.tasks) {
+                let mut acc = 0f32;
+                for ((codes, &csum), &inv_norm_v) in
+                    task.codes.iter().zip(&task.code_sums).zip(&task.inv_norms)
+                {
+                    let mut dot_s = 0i32;
+                    for (&s, &c) in stored.iter().zip(codes.iter()) {
+                        dot_s += s as i32 * c as i32;
+                    }
+                    // zero-point fixup: ⟨t, v⟩ = ⟨s, v⟩ − α·Σv
+                    let dot_tv = dot_s as i64 - alpha * csum as i64;
+                    acc += dot_tv as f32 * inv_norm_v;
+                }
+                *o = acc * inv_norm_t / task.codes.len() as f32;
+            }
+        })
+    })
+}
+
+/// Score with the fastest applicable native path for the view's
+/// precision: XNOR+popcount at 1-bit, the integer-domain engine at
+/// 2/4/8-bit (f32 fallback past the i32 overflow bound), and the f32
+/// path at 16-bit. Row-major `[n × Q]` output. This is the dispatch the
+/// streamed scan (`influence::score_datastore_tasks`) uses per shard.
+pub fn scores_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
+    match rows.precision.bits {
+        1 => scores_1bit_rows(rows, val),
+        b if int_dot_fits(b, rows.k) => scores_int_rows(rows, val),
+        _ => scores_dense_rows(rows, val),
+    }
+}
+
+/// Evaluate `f(i, out_chunk)` for each row index in parallel
+/// (order-preserving), filling a row-major `[n × width]` output.
 ///
 /// `work_per_row` is an estimate of the inner-op count per row; jobs below
 /// ~8M total ops stay serial — handing a 1.4ms popcount scan to the pool
@@ -116,71 +314,99 @@ pub fn scores_dense_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
 /// machine's full parallelism (the old hard cap of 16 is gone), and rows
 /// are claimed from a shared cursor so uneven rows can't straggle.
 /// `QLESS_SCORE_THREADS=1` forces the serial path (before/after benches).
-fn par_over_rows<F: Fn(usize) -> f32 + Sync>(n: usize, work_per_row: u64, f: F) -> Vec<f32> {
+fn par_over_rows<F: Fn(usize, &mut [f32]) + Sync>(
+    n: usize,
+    width: usize,
+    work_per_row: u64,
+    f: F,
+) -> Vec<f32> {
+    assert!(width >= 1);
+    let mut out = vec![0f32; n * width];
     let threads = crate::util::pool::scan_threads().min(n.max(1));
     if threads <= 1 || n < 256 || (n as u64).saturating_mul(work_per_row) < 8_000_000 {
-        return (0..n).map(f).collect();
+        for (i, row) in out.chunks_exact_mut(width).enumerate() {
+            f(i, row);
+        }
+        return out;
     }
-    let mut out = vec![0f32; n];
-    crate::util::pool::par_fill_f32(&mut out, &f);
+    crate::util::pool::par_fill_rows(&mut out, width, &f);
     out
 }
 
 /// The 1-bit fast path: XNOR+popcount over packed words, no unpacking.
-/// Whole-block convenience wrapper over [`scores_1bit_rows`].
+/// Whole-block convenience wrapper over [`scores_1bit_rows`];
+/// row-major `[n × Q]` output.
 pub fn scores_1bit(block: &CheckpointBlock, val: &ValFeatures) -> Vec<f32> {
     scores_1bit_rows(&block.rows(), val)
 }
 
 /// [`scores_1bit`] over any row view. Identical results to
 /// [`scores_dense_rows`] on a 1-bit view (up to fp rounding of the final
-/// division). Streams each row through a fixed 64-word stack window, so
-/// any projection dimension is supported — the seed implementation sliced
-/// a `[u64; 64]` buffer by `k/64` words and panicked for k > 4096.
+/// division) — the degenerate case of the integer engine where the code
+/// dot collapses to bit agreement. Streams each row through a fixed
+/// 64-word stack window, so any projection dimension is supported — the
+/// seed implementation sliced a `[u64; 64]` buffer by `k/64` words and
+/// panicked for k > 4096. Each window is assembled once and scored against
+/// every task's sign words (per-task agreement counters), so a multi-query
+/// scan pays the byte shuffling once per row. Row-major `[n × Q]` output.
 pub fn scores_1bit_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
     assert_eq!(rows.precision.bits, 1, "1-bit path needs a sign datastore");
-    assert!(!val.sign_words.is_empty(), "val features lack sign words");
+    assert_eq!(rows.k, val.k);
+    let q = val.n_tasks();
+    assert!(q > 0, "no validation tasks");
+    for (t, task) in val.tasks.iter().enumerate() {
+        assert!(!task.sign_words.is_empty(), "task {t} lacks sign words");
+    }
     let k = rows.k;
     let nwords = k.div_ceil(64);
     let tail = (nwords * 64 - k) as i64;
-    let nv = val.sign_words.len();
     let inv_k = 1.0 / k as f32;
 
-    // work per row ≈ nv·nwords popcount iterations (~1.4 ns each — tiny;
-    // this path only crosses the parallel threshold at ≫10⁴ rows)
-    par_over_rows(rows.n(), (nv * nwords) as u64, |i| {
+    // work per row ≈ total-val·nwords popcount iterations (~1.4 ns each —
+    // tiny; this path only crosses the parallel threshold at ≫10⁴ rows)
+    par_over_rows(rows.n(), q, (val.n() * nwords) as u64, |i, out| {
         let row = rows.row_bytes(i);
-        // Bit agreement is summed exactly in i64 across all val rows and
-        // words; the per-val-row dot products are linear in agreement, so
-        // one conversion at the end loses nothing:
-        //   Σ_v dot_v = 2·(Σ_v agree_v − nv·tail) − nv·k
-        let mut total_agree: i64 = 0;
-        let mut word_base = 0usize;
-        // 512-byte (64-word) window: fixed stack buffer, unbounded k
-        for byte_chunk in row.chunks(512) {
-            let mut words = [0u64; 64];
-            let cw = byte_chunk.len().div_ceil(8);
-            for (w, ch) in words.iter_mut().zip(byte_chunk.chunks(8)) {
-                let mut b = [0u8; 8];
-                b[..ch.len()].copy_from_slice(ch);
-                *w = u64::from_le_bytes(b);
-            }
-            for v in &val.sign_words {
-                for (a, b) in words[..cw].iter().zip(&v[word_base..word_base + cw]) {
-                    total_agree += (!(a ^ b)).count_ones() as i64;
+        AGREE_SCRATCH.with(|cell| {
+            let mut agree = cell.borrow_mut();
+            agree.clear();
+            agree.resize(q, 0i64);
+            // Bit agreement is summed exactly in i64 across each task's val
+            // rows and words; per-val-row dot products are linear in
+            // agreement, so one conversion per task at the end loses
+            // nothing:  Σ_v dot_v = 2·(Σ_v agree_v − nv·tail) − nv·k
+            let mut word_base = 0usize;
+            // 512-byte (64-word) window: fixed stack buffer, unbounded k
+            for byte_chunk in row.chunks(512) {
+                let mut words = [0u64; 64];
+                let cw = byte_chunk.len().div_ceil(8);
+                for (w, ch) in words.iter_mut().zip(byte_chunk.chunks(8)) {
+                    let mut b = [0u8; 8];
+                    b[..ch.len()].copy_from_slice(ch);
+                    *w = u64::from_le_bytes(b);
                 }
+                for (a, task) in agree.iter_mut().zip(&val.tasks) {
+                    for v in &task.sign_words {
+                        for (x, y) in words[..cw].iter().zip(&v[word_base..word_base + cw]) {
+                            *a += (!(x ^ y)).count_ones() as i64;
+                        }
+                    }
+                }
+                word_base += cw;
             }
-            word_base += cw;
-        }
-        // remove the always-agreeing zero tail, convert to mean cosine
-        let total_dot = 2 * (total_agree - nv as i64 * tail) - (nv * k) as i64;
-        (total_dot as f32 * inv_k) / nv as f32
+            // remove the always-agreeing zero tail, convert to mean cosine
+            for ((o, &a), task) in out.iter_mut().zip(agree.iter()).zip(&val.tasks) {
+                let nv = task.sign_words.len();
+                let total_dot = 2 * (a - nv as i64 * tail) - (nv * k) as i64;
+                *o = (total_dot as f32 * inv_k) / nv as f32;
+            }
+        })
     })
 }
 
+/// 4-way unrolled f32 dot product (autovectorizes well) — the inner op of
+/// the f32 reference path.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    // 4-way unrolled accumulation (autovectorizes well)
     let mut acc = [0f32; 4];
     let chunks = a.len() / 4;
     for c in 0..chunks {
@@ -268,6 +494,83 @@ mod tests {
     }
 
     #[test]
+    fn int_matches_dense_all_bitwidths_and_schemes() {
+        // The integer-domain engine must track the dequantize-f32 reference
+        // at every supported bitwidth × scheme (the full property-level
+        // sweep lives in tests/int_scoring.rs).
+        for bits in [8u8, 4, 2] {
+            for scheme in [Scheme::Absmax, Scheme::Absmean] {
+                let p = Precision::new(bits, scheme).unwrap();
+                let path = tmpfile(&format!("int{bits}_{scheme}"));
+                let (n, k) = (9usize, 97usize);
+                let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+                let f = feats(n, k, 31);
+                w.begin_checkpoint(1.0).unwrap();
+                for i in 0..n {
+                    w.append_features(f.row(i)).unwrap();
+                }
+                w.end_checkpoint().unwrap();
+                w.finalize().unwrap();
+                let block = Datastore::open(&path).unwrap().load_checkpoint(0).unwrap();
+                std::fs::remove_file(&path).ok();
+                let val = ValFeatures::prepare(&feats(4, k, 32), p);
+                let dense = scores_dense(&block, &val);
+                let fast = scores_int_rows(&block.rows(), &val);
+                assert_eq!(dense.len(), fast.len());
+                for (i, (a, b)) in dense.iter().zip(&fast).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "{bits}-bit {scheme} row {i}: dense {a} vs int {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_task_scores_equal_single_task_runs() {
+        // One multi-query traversal must give byte-identical scores to Q
+        // independent single-task runs, for every kernel path.
+        let k = 128;
+        for bits in [16u8, 8, 4, 2, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let block = make_block(bits, 20, k, 40);
+            let t0 = feats(3, k, 41);
+            let t1 = feats(5, k, 42);
+            let t2 = feats(1, k, 43);
+            let multi = ValFeatures::try_prepare_tasks(&[&t0, &t1, &t2], p).unwrap();
+            let q = multi.n_tasks();
+            assert_eq!(q, 3);
+            let fused = scores_rows(&block.rows(), &multi);
+            assert_eq!(fused.len(), 20 * q);
+            for (t, feat) in [&t0, &t1, &t2].into_iter().enumerate() {
+                let single = ValFeatures::prepare(feat, p);
+                let alone = scores_rows(&block.rows(), &single);
+                for i in 0..20 {
+                    assert_eq!(
+                        alone[i],
+                        fused[i * q + t],
+                        "bits {bits} task {t} row {i}: single vs fused"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int_dot_bound_is_sane() {
+        assert!(int_dot_fits(8, 8192)); // paper scale
+        // exact 8-bit bound: ⌊i32::MAX / (2·127²)⌋ = ⌊2147483647/32258⌋
+        assert!(int_dot_fits(8, 66_572));
+        assert!(!int_dot_fits(8, 66_573));
+        assert!(int_dot_fits(4, 1 << 20));
+        assert!(int_dot_fits(2, 1 << 28));
+        assert!(!int_dot_fits(1, 64)); // popcount path, not int
+        assert!(!int_dot_fits(16, 64)); // f32 path
+    }
+
+    #[test]
     fn popcount_k8192_regression() {
         // Seed code copied each row into a fixed `[0u64; 64]` buffer and
         // sliced `words[..nwords]` — nwords = 128 at k = 8192, so the
@@ -294,11 +597,7 @@ mod tests {
             let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
             let block = make_block(bits, 12, 96, 8);
             let val = ValFeatures::prepare(&feats(5, 96, 9), Precision::new(bits, scheme).unwrap());
-            let whole = if bits == 1 {
-                scores_1bit(&block, &val)
-            } else {
-                scores_dense(&block, &val)
-            };
+            let whole = scores_rows(&block.rows(), &val);
             // split the block's rows into two shard-like views
             let full = block.rows();
             let split = 5usize;
@@ -314,11 +613,7 @@ mod tests {
                     },
                     data: &full.data[start * full.row_stride..end * full.row_stride],
                 };
-                let part = if bits == 1 {
-                    scores_1bit_rows(&view, &val)
-                } else {
-                    scores_dense_rows(&view, &val)
-                };
+                let part = scores_rows(&view, &val);
                 assert_eq!(part.as_slice(), &whole[start..end], "bits {bits} [{start},{end})");
             }
         }
@@ -348,11 +643,23 @@ mod tests {
         let p = Precision::new(4, Scheme::Absmax).unwrap();
         let a = ValFeatures::prepare(&f, p);
         let b = ValFeatures::prepare(&scaled, p);
-        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        for (ra, rb) in a.tasks[0].rows.iter().zip(&b.tasks[0].rows) {
             for (x, y) in ra.iter().zip(rb) {
                 assert!((x - y).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn prepare_rejects_empty_and_mismatched_tasks() {
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let good = feats(2, 64, 1);
+        let empty = FeatureMatrix { n: 0, k: 64, data: vec![] };
+        let otherk = feats(2, 32, 2);
+        assert!(ValFeatures::try_prepare_tasks(&[], p).is_err());
+        assert!(ValFeatures::try_prepare_tasks(&[&good, &empty], p).is_err());
+        assert!(ValFeatures::try_prepare_tasks(&[&good, &otherk], p).is_err());
+        assert_eq!(ValFeatures::try_prepare_tasks(&[&good, &good], p).unwrap().n(), 4);
     }
 
     #[test]

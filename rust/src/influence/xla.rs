@@ -2,6 +2,11 @@
 //! (`influence.hlo.txt`, compiled at `[tile_q × k] · [k × tile_v]`) over the
 //! full train × val grid, padding tail tiles with zero rows (zero rows
 //! normalize to zero and contribute zero similarity — sliced off on read).
+//!
+//! Multi-query scans concatenate every task's validation rows into one
+//! tile sequence, so Q tasks share each train tile upload and kernel
+//! launch; per-column task ownership routes the similarities into the
+//! right task's accumulator on readback.
 
 use anyhow::Result;
 
@@ -11,26 +16,43 @@ use crate::runtime::{Arg, ModelInfo, Runtime};
 
 /// Validation rows packed into zero-padded `[tile_v × k]` kernel tiles —
 /// built **once per checkpoint** and reused by every shard of its scan
-/// (rebuilding per shard would be an O(nv·k) copy per shard).
+/// (rebuilding per shard would be an O(nv·k) copy per shard). Rows from
+/// all tasks are concatenated in task order; `task_of` remembers which
+/// task owns each concatenated row.
 pub struct ValTiles {
-    nv: usize,
+    /// Task id of each concatenated (unpadded) validation row.
+    task_of: Vec<usize>,
+    /// Per-task `1/n_v` mean normalization.
+    inv_nv: Vec<f32>,
+    /// Zero-padded `[tile_v × k]` tiles over the concatenated rows.
     tiles: Vec<Vec<f32>>,
 }
 
-/// Pack prepared val features into kernel tiles for [`scores_xla_rows`].
+/// Pack prepared val features (all tasks) into kernel tiles for
+/// [`scores_xla_rows`].
 pub fn pack_val_tiles(info: &ModelInfo, val: &ValFeatures) -> ValTiles {
     assert_eq!(val.k, info.proj_dim);
     let (tv, k) = (info.tile_v, info.proj_dim);
-    let nv = val.n();
-    let mut tiles = vec![vec![0f32; tv * k]; nv.div_ceil(tv)];
-    for (j, row) in val.rows.iter().enumerate() {
-        tiles[j / tv][(j % tv) * k..(j % tv + 1) * k].copy_from_slice(row);
+    let nv_total = val.n();
+    assert!(nv_total > 0, "no validation rows to pack");
+    let mut tiles = vec![vec![0f32; tv * k]; nv_total.div_ceil(tv)];
+    let mut task_of = Vec::with_capacity(nv_total);
+    let mut inv_nv = Vec::with_capacity(val.n_tasks());
+    let mut j = 0usize;
+    for (t, task) in val.tasks.iter().enumerate() {
+        inv_nv.push(1.0 / task.rows.len().max(1) as f32);
+        for row in &task.rows {
+            tiles[j / tv][(j % tv) * k..(j % tv + 1) * k].copy_from_slice(row);
+            task_of.push(t);
+            j += 1;
+        }
     }
-    ValTiles { nv, tiles }
+    ValTiles { task_of, inv_nv, tiles }
 }
 
-/// Mean cosine of each train row against all val rows via the AOT kernel.
-/// Whole-block convenience wrapper over [`scores_xla_rows`].
+/// Mean cosine of each train row against each task's val rows via the AOT
+/// kernel. Whole-block convenience wrapper over [`scores_xla_rows`];
+/// row-major `[n × Q]` output.
 pub fn scores_xla(
     rt: &Runtime,
     info: &ModelInfo,
@@ -41,7 +63,8 @@ pub fn scores_xla(
 }
 
 /// [`scores_xla`] over any row view (block or streamed shard). Same
-/// contract as [`native::scores_dense_rows`](super::native::scores_dense_rows).
+/// contract as [`native::scores_rows`](super::native::scores_rows):
+/// row-major `[n × Q]` scores, one entry per (train row, task).
 pub fn scores_xla_rows(
     rt: &Runtime,
     info: &ModelInfo,
@@ -51,10 +74,11 @@ pub fn scores_xla_rows(
     assert_eq!(rows_view.k, info.proj_dim);
     let exec = rt.exec(info, "influence")?;
     let (tq, tv, k) = (info.tile_q, info.tile_v, info.proj_dim);
-    let nv = val_tiles.nv;
+    let nv = val_tiles.task_of.len();
+    let q = val_tiles.inv_nv.len();
     let n = rows_view.n();
 
-    let mut scores = vec![0f32; n];
+    let mut scores = vec![0f32; n * q];
     let mut qt = vec![0f32; tq * k];
     for tile_start in (0..n).step_by(tq) {
         let rows = (n - tile_start).min(tq);
@@ -68,16 +92,20 @@ pub fn scores_xla_rows(
             let sims = &out[0]; // [tq, tv]
             let val_rows = (nv - jt * tv).min(tv);
             for r in 0..rows {
-                let mut acc = 0f32;
+                let base = (tile_start + r) * q;
                 for c in 0..val_rows {
-                    acc += sims[r * tv + c];
+                    let t = val_tiles.task_of[jt * tv + c];
+                    scores[base + t] += sims[r * tv + c];
                 }
-                scores[tile_start + r] += acc;
             }
         }
     }
-    let inv = 1.0 / nv as f32;
-    scores.iter_mut().for_each(|s| *s *= inv);
+    // mean over each task's val rows
+    for chunk in scores.chunks_exact_mut(q) {
+        for (s, &inv) in chunk.iter_mut().zip(&val_tiles.inv_nv) {
+            *s *= inv;
+        }
+    }
     Ok(scores)
 }
 
@@ -127,6 +155,50 @@ mod tests {
         assert_eq!(native.len(), xla.len());
         for (i, (a, b)) in native.iter().zip(&xla).enumerate() {
             assert!((a - b).abs() < 1e-4, "row {i}: native {a} xla {b}");
+        }
+    }
+
+    #[test]
+    fn xla_multi_task_matches_single_runs() {
+        let Some(rt) = rt() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = rt.model("tiny").unwrap();
+        let k = info.proj_dim;
+        let n = info.tile_q + 3;
+        let mut rng = Rng::new(33);
+        let f = FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() };
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = std::env::temp_dir().join(format!("qless_xlam_{}.qlds", std::process::id()));
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        let block = crate::datastore::Datastore::open(&path).unwrap().load_checkpoint(0).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // two tasks whose combined rows straddle a tile boundary
+        let nva = (info.tile_v - 1).max(1);
+        let t0 = FeatureMatrix { n: nva, k, data: (0..nva * k).map(|_| rng.normal() as f32).collect() };
+        let t1 = FeatureMatrix { n: 4, k, data: (0..4 * k).map(|_| rng.normal() as f32).collect() };
+        let multi = ValFeatures::try_prepare_tasks(&[&t0, &t1], p).unwrap();
+        let fused = scores_xla(&rt, &info, &block, &multi).unwrap();
+        assert_eq!(fused.len(), n * 2);
+        for (t, feat) in [&t0, &t1].into_iter().enumerate() {
+            let single = ValFeatures::prepare(feat, p);
+            let alone = scores_xla(&rt, &info, &block, &single).unwrap();
+            for i in 0..n {
+                assert!(
+                    (alone[i] - fused[i * 2 + t]).abs() < 1e-5,
+                    "task {t} row {i}: {} vs {}",
+                    alone[i],
+                    fused[i * 2 + t]
+                );
+            }
         }
     }
 }

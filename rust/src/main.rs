@@ -124,9 +124,11 @@ fn score_select(cli: &Cli) -> Result<()> {
     let mut pipe = Pipeline::new(cli.config.clone())?;
     let p = Precision::new(cli.config.bits, cli.config.scheme)?;
     let (ds, _) = pipe.build_datastore(p)?;
+    // one streamed datastore pass scores all benchmarks (--multi-scan)
+    let all_scores = pipe.influence_scores_all(&ds)?;
     for bench in Benchmark::ALL {
-        let scores = pipe.influence_scores(&ds, bench)?;
-        let sel = select_top_frac(&scores, cli.config.select_frac);
+        let scores = &all_scores[bench.name()];
+        let sel = select_top_frac(scores, cli.config.select_frac);
         let dist = SourceDistribution::of(&pipe.corpus.samples, &sel);
         println!("{bench}: top {} — {}", sel.len(), dist.render());
         let top = &sel[..sel.len().min(3)];

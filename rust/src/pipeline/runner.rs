@@ -14,7 +14,7 @@ use crate::datastore::{Datastore, DatastoreWriter};
 use crate::eval::benchmarks::{validation_samples, Benchmark};
 use crate::eval::harness::{evaluate, BenchScores};
 use crate::grads::{extract_train_features, extract_val_features, FeatureMatrix, Projector};
-use crate::influence::{score_datastore, ScoreOpts};
+use crate::influence::{score_datastore_tasks, ScoreOpts};
 use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
 use crate::pipeline::stage::{PipelineStageRunner, Stage};
 use crate::quant::weights::quantize_weights;
@@ -363,20 +363,64 @@ impl Pipeline {
     // stage 4+5: score & select (QLESS §3.2, LESS step 3)
     // ------------------------------------------------------------------
 
+    fn score_opts(&self) -> ScoreOpts {
+        ScoreOpts {
+            use_xla: self.cfg.xla_score,
+            shard_rows: self.cfg.shard_rows,
+            mem_budget_mb: self.cfg.mem_budget_mb,
+        }
+    }
+
     /// Influence scores of every corpus sample for one benchmark at one
     /// precision. The scan streams datastore shards under the config's
     /// memory budget (`--shard-rows` / `--mem-budget-mb`).
     pub fn influence_scores(&mut self, ds: &Datastore, bench: Benchmark) -> Result<Vec<f32>> {
         let vals = self.val_features(bench)?;
-        let opts = ScoreOpts {
-            use_xla: self.cfg.xla_score,
-            shard_rows: self.cfg.shard_rows,
-            mem_budget_mb: self.cfg.mem_budget_mb,
-        };
+        let opts = self.score_opts();
         let t0 = std::time::Instant::now();
-        let scores = score_datastore(ds, &vals, opts, Some((&self.rt, &self.info)))?;
+        let (mut per_task, stats) =
+            score_datastore_tasks(ds, &[&vals], opts, Some((&self.rt, &self.info)))?;
         self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
-        Ok(scores)
+        self.stages.add_units(Stage::Score, stats.shards_read as u64);
+        Ok(per_task.swap_remove(0))
+    }
+
+    /// Influence scores of every corpus sample for **every** benchmark.
+    /// With `cfg.multi_scan` (the default) all benchmarks' validation
+    /// tasks ride ONE streamed pass over the datastore — shared shard
+    /// traversal, per-task accumulators — so the Score stage's I/O units
+    /// (shard reads) are those of a single scan, not one per benchmark.
+    /// With `multi_scan = false` this degrades to one pass per benchmark.
+    pub fn influence_scores_all(
+        &mut self,
+        ds: &Datastore,
+    ) -> Result<BTreeMap<&'static str, Vec<f32>>> {
+        let mut out = BTreeMap::new();
+        if !self.cfg.multi_scan {
+            for bench in Benchmark::ALL {
+                out.insert(bench.name(), self.influence_scores(ds, bench)?);
+            }
+            return Ok(out);
+        }
+        let mut vals: Vec<Vec<FeatureMatrix>> = Vec::new();
+        for bench in Benchmark::ALL {
+            vals.push(self.val_features(bench)?);
+        }
+        let refs: Vec<&[FeatureMatrix]> = vals.iter().map(|v| v.as_slice()).collect();
+        let opts = self.score_opts();
+        let t0 = std::time::Instant::now();
+        let (per_task, stats) =
+            score_datastore_tasks(ds, &refs, opts, Some((&self.rt, &self.info)))?;
+        self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
+        self.stages.add_units(Stage::Score, stats.shards_read as u64);
+        info!(
+            "multi-query scan: {} benchmarks in {} shard reads (one datastore pass)",
+            stats.tasks, stats.shards_read
+        );
+        for (bench, scores) in Benchmark::ALL.iter().zip(per_task) {
+            out.insert(bench.name(), scores);
+        }
+        Ok(out)
     }
 
     // ------------------------------------------------------------------
@@ -454,10 +498,12 @@ impl Pipeline {
             Method::Qless(precision) => {
                 let (ds, bytes) = self.build_datastore(precision)?;
                 result.storage_bytes = bytes;
+                // one streamed datastore pass scores every benchmark
+                let all_scores = self.influence_scores_all(&ds)?;
                 for bench in Benchmark::ALL {
-                    let scores = self.influence_scores(&ds, bench)?;
+                    let scores = &all_scores[bench.name()];
                     let t_sel = std::time::Instant::now();
-                    let sel = select_top_frac(&scores, self.cfg.select_frac);
+                    let sel = select_top_frac(scores, self.cfg.select_frac);
                     self.stages.record(Stage::Select, t_sel.elapsed().as_secs_f64());
                     let dist = SourceDistribution::of(&self.corpus.samples, &sel);
                     info!("{label} / {bench}: selected {} — {}", sel.len(), dist.render());

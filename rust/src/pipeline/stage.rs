@@ -68,9 +68,16 @@ impl std::fmt::Display for Stage {
 /// Accumulated cost of one stage across a pipeline's lifetime.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageCost {
+    /// Executions recorded against the stage.
     pub runs: u32,
+    /// Executions served from cache instead of run.
     pub cache_hits: u32,
+    /// Total wall-clock seconds across all runs.
     pub secs: f64,
+    /// Stage-defined I/O units (for [`Stage::Score`]: datastore shard
+    /// reads — the multi-query scan's proof that Q validation tasks cost
+    /// one pass, not Q).
+    pub io_units: u64,
 }
 
 /// Times stage executions and accumulates a per-stage cost table.
@@ -112,6 +119,12 @@ impl PipelineStageRunner {
         self.slot(stage).cache_hits += 1;
     }
 
+    /// Add stage-defined I/O units to a stage (e.g. shard reads performed
+    /// by an influence scan — see [`StageCost::io_units`]).
+    pub fn add_units(&mut self, stage: Stage, units: u64) {
+        self.slot(stage).io_units += units;
+    }
+
     pub fn cost(&self, stage: Stage) -> StageCost {
         let idx = Stage::ALL.iter().position(|s| *s == stage).expect("stage in ALL");
         self.costs[idx]
@@ -135,6 +148,7 @@ impl PipelineStageRunner {
             s.set("runs", c.runs as usize);
             s.set("cache_hits", c.cache_hits as usize);
             s.set("secs", c.secs);
+            s.set("io_units", c.io_units as usize);
             j.set(stage.name(), s);
         }
         j.set("total_secs", self.total_secs());
@@ -143,7 +157,10 @@ impl PipelineStageRunner {
 
     /// Render the per-stage cost table (stages that never ran are skipped).
     pub fn table(&self) -> Table {
-        let mut t = Table::new("pipeline stage costs", &["stage", "runs", "cache hits", "secs"]);
+        let mut t = Table::new(
+            "pipeline stage costs",
+            &["stage", "runs", "cache hits", "secs", "io units"],
+        );
         for stage in Stage::ALL {
             let c = self.cost(stage);
             if c.runs == 0 && c.cache_hits == 0 {
@@ -154,6 +171,7 @@ impl PipelineStageRunner {
                 c.runs.to_string(),
                 c.cache_hits.to_string(),
                 format!("{:.2}", c.secs),
+                c.io_units.to_string(),
             ]);
         }
         t
@@ -177,6 +195,16 @@ mod tests {
         assert!(c.secs >= 0.0);
         assert_eq!(r.cost(Stage::Warmup).runs, 0);
         assert_eq!(r.cost(Stage::Pretrain).runs, 0);
+    }
+
+    #[test]
+    fn io_units_accumulate() {
+        let mut r = PipelineStageRunner::new();
+        let _: Result<(), ()> = r.run(Stage::Score, || Ok(()));
+        r.add_units(Stage::Score, 7);
+        r.add_units(Stage::Score, 7);
+        assert_eq!(r.cost(Stage::Score).io_units, 14);
+        assert_eq!(r.cost(Stage::Select).io_units, 0);
     }
 
     #[test]

@@ -7,19 +7,24 @@ use super::scheme::{quantize_row, Scheme};
 /// bins of sign quantization).
 #[derive(Debug, Clone)]
 pub struct BinHistogram {
+    /// Quantization bit width the histogram bins.
     pub bits: u8,
+    /// Scheme used when quantizing added rows.
     pub scheme: Scheme,
     /// counts[i] = occurrences of code (i − α); for 1-bit: [−1, +1].
     pub counts: Vec<u64>,
+    /// Total codes accumulated across all added rows.
     pub total: u64,
 }
 
 impl BinHistogram {
+    /// Empty histogram over the bit width's `2α+1` bins (2 bins at 1-bit).
     pub fn new(bits: u8, scheme: Scheme) -> BinHistogram {
         let nbins = if bits == 1 { 2 } else { (1usize << bits) - 1 };
         BinHistogram { bits, scheme, counts: vec![0; nbins], total: 0 }
     }
 
+    /// The bit width's α (max |code|); 1 at 1-bit.
     pub fn alpha(&self) -> i32 {
         if self.bits == 1 {
             1
@@ -34,6 +39,7 @@ impl BinHistogram {
         self.add_codes(&q.codes);
     }
 
+    /// Accumulate already-quantized codes into the bins.
     pub fn add_codes(&mut self, codes: &[i8]) {
         let alpha = self.alpha();
         for &c in codes {

@@ -25,10 +25,13 @@ use anyhow::{bail, Result};
 pub struct Precision {
     /// 16 (LESS bf16 baseline) or 8/4/2/1 quantized.
     pub bits: u8,
+    /// Row-scale scheme for 2/4/8-bit codes (sign at 1-bit, unused at 16).
     pub scheme: Scheme,
 }
 
 impl Precision {
+    /// Validated constructor: 16-bit coerces to absmax, 1-bit to sign;
+    /// sign at 2/4/8-bit is rejected.
     pub fn new(bits: u8, scheme: Scheme) -> Result<Precision> {
         match bits {
             16 => Ok(Precision { bits, scheme: Scheme::Absmax }),
@@ -60,6 +63,7 @@ impl Precision {
         }
     }
 
+    /// Human-readable precision label (e.g. `4-bit/absmean`).
     pub fn label(&self) -> String {
         match self.bits {
             16 => "16-bit".to_string(),

@@ -14,10 +14,13 @@ use anyhow::{bail, Result};
 /// A bit-packed quantized row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedRow {
+    /// Field width in bits: 1, 2, 4 or 8.
     pub bits: u8,
     /// Number of codes (k).
     pub len: usize,
+    /// Packed little-endian lane bytes, `⌈len·bits/8⌉` of them.
     pub bytes: Vec<u8>,
+    /// Reconstruction scale (dequantized value = code × scale).
     pub scale: f32,
 }
 
@@ -80,9 +83,35 @@ pub fn unpack_codes(row: &PackedRow) -> Vec<i8> {
     out
 }
 
+/// Unpack the first `len` lanes of a packed row's bytes as zero-extended
+/// **stored** values (offset-binary: `stored = code + α` for 2/4/8-bit;
+/// the raw 0/1 sign bit at 1-bit) into `out`, resizing it to `len`.
+///
+/// This is the integer scoring engine's row decoder: the hot loop dots
+/// stored lanes against validation codes and removes the `+α` offset with
+/// a single per-row zero-point fixup (`influence::native::scores_int_rows`),
+/// so no sign extension — and no f32 conversion — happens per element.
+/// For 8-bit rows the lanes are the bytes themselves and this is a copy;
+/// callers on the hottest path can borrow the row bytes directly instead.
+pub fn unpack_stored_into(bytes: &[u8], bits: u8, len: usize, out: &mut Vec<u8>) {
+    assert!(matches!(bits, 1 | 2 | 4 | 8), "unpack_stored_into: unsupported bits {bits}");
+    out.resize(len, 0);
+    if bits == 8 {
+        out.copy_from_slice(&bytes[..len]);
+        return;
+    }
+    let bits = bits as usize;
+    let mask = ((1u16 << bits) - 1) as u8;
+    let per_byte = 8 / bits;
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (bytes[i / per_byte] >> ((i % per_byte) * bits)) & mask;
+    }
+}
+
 /// View a 1-bit row as little-endian u64 words (tail zero-padded). Zero
-/// padding maps to "−1" bits, so callers must mask the tail — see
-/// [`influence::native::dot_packed_signs`](crate::influence::native).
+/// padding maps to "−1" bits, so callers must subtract the tail's phantom
+/// agreement — see the tail fixup in
+/// [`influence::native::scores_1bit_rows`](crate::influence::native::scores_1bit_rows).
 pub fn as_sign_words(row: &PackedRow) -> Vec<u64> {
     assert_eq!(row.bits, 1, "sign words need a 1-bit row");
     let nwords = row.len.div_ceil(64);
@@ -140,6 +169,43 @@ mod tests {
                 let packed = pack_codes(&codes, bits, 0.5).map_err(|e| e.to_string())?;
                 let back = unpack_codes(&packed);
                 prop_assert!(back == codes, "roundtrip failed at {bits}-bit n={n}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_stored_lanes_match_codes_plus_alpha() {
+        // unpack_stored_into must agree with unpack_codes up to the
+        // offset-binary zero point at every bitwidth and length.
+        run_prop("stored-lanes", 100, |g| {
+            let n = 1 + g.usize_up_to(150);
+            for bits in [1u8, 2, 4, 8] {
+                let alpha: i16 = if bits == 1 { 0 } else { (1i16 << (bits - 1)) - 1 };
+                let codes: Vec<i8> = (0..n)
+                    .map(|_| {
+                        if bits == 1 {
+                            if g.rng.below(2) == 0 { -1 } else { 1 }
+                        } else {
+                            (g.rng.below(2 * alpha as usize + 1) as i16 - alpha) as i8
+                        }
+                    })
+                    .collect();
+                let packed = pack_codes(&codes, bits, 1.0).map_err(|e| e.to_string())?;
+                let mut stored = Vec::new();
+                unpack_stored_into(&packed.bytes, bits, n, &mut stored);
+                prop_assert!(stored.len() == n, "len at {bits}-bit");
+                for (i, (&s, &c)) in stored.iter().zip(&codes).enumerate() {
+                    let want: i16 = if bits == 1 {
+                        i16::from(c > 0) // raw sign bit, not offset-binary
+                    } else {
+                        c as i16 + alpha
+                    };
+                    prop_assert!(
+                        s as i16 == want,
+                        "lane {i} at {bits}-bit: stored {s} != code {c} + α {alpha}"
+                    );
+                }
             }
             Ok(())
         });

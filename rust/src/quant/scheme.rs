@@ -2,15 +2,19 @@
 //!
 //! Semantics must match `python/compile/kernels/ref.py` exactly — the
 //! integration tests compare codes produced here against the Pallas kernel
-//! output for the same inputs. `round` uses round-half-away-from-zero to
-//! match jnp.round? No: jnp.round is round-half-to-even (banker's), so we
-//! implement that explicitly in [`round_ties_even`].
+//! output for the same inputs. Rounding contract: ties go **to even**
+//! (banker's rounding, like `jnp.round`), never away from zero — `0.5 → 0`,
+//! `1.5 → 2`, `2.5 → 2`. [`round_ties_even`] implements exactly this;
+//! `f32::round` (half-away-from-zero) must never touch a code path that is
+//! compared against the kernels.
 
 use anyhow::{bail, Result};
 
 /// ABSMEAN_C from simconfig.py — values beyond c·mean|g| saturate.
 pub const ABSMEAN_C: f32 = 2.5;
 
+/// Row-scale selection rule for the 2/4/8-bit quantizers (paper Eq. 4–5),
+/// plus the 1-bit sign scheme of the §5 ablation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
     /// Paper Eq. 4: scale by the row max absolute value.
@@ -48,7 +52,9 @@ impl std::str::FromStr for Scheme {
 /// (dequantized value = code × scale).
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantizedRow {
+    /// Integer codes in `[-α, α]` (±1 for the sign scheme).
     pub codes: Vec<i8>,
+    /// Reconstruction scale; multiplies every code on dequantization.
     pub scale: f32,
 }
 

@@ -35,6 +35,7 @@ pub const NF4_LEVELS: [f32; 16] = [
     1.0,
 ];
 
+/// Block size of the weight quantizers (one absmax scale per block).
 pub const BLOCK: usize = 64;
 
 /// Simulate storing `w` at `bits` precision: quantize block-wise, then

@@ -3,14 +3,17 @@
 
 use crate::corpus::{Sample, Source};
 
+/// Composition of a selected subset by corpus source (one Fig. 5 bar).
 #[derive(Debug, Clone)]
 pub struct SourceDistribution {
     /// (source, selected count, fraction of selection).
     pub rows: Vec<(Source, usize, f64)>,
+    /// Total selected samples the fractions are over.
     pub total: usize,
 }
 
 impl SourceDistribution {
+    /// Tally the sources of `selected` indices into `samples`.
     pub fn of(samples: &[Sample], selected: &[usize]) -> SourceDistribution {
         let mut counts = [(Source::SynFlan, 0usize), (Source::SynCot, 0), (Source::SynDolly, 0), (Source::SynOasst, 0)];
         for &i in selected {
@@ -31,6 +34,7 @@ impl SourceDistribution {
         }
     }
 
+    /// Fraction of the selection drawn from `source`.
     pub fn frac(&self, source: Source) -> f64 {
         self.rows.iter().find(|r| r.0 == source).map(|r| r.2).unwrap_or(0.0)
     }
@@ -45,6 +49,7 @@ impl SourceDistribution {
             .sum()
     }
 
+    /// One-line console rendering (`source: count (pct)` per source).
     pub fn render(&self) -> String {
         self.rows
             .iter()

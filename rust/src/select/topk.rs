@@ -5,8 +5,20 @@
 //! loudly rather than silently sorted.
 
 /// Indices of the `k` highest-scoring samples, ordered by descending score
-/// (ties: ascending index). Panics on NaN — a NaN influence score means an
-/// upstream numerical bug, never a valid ranking input.
+/// (ties: ascending index). `k` is clamped to the score count, so an empty
+/// slice yields an empty selection. Panics on NaN — a NaN influence score
+/// means an upstream numerical bug, never a valid ranking input.
+///
+/// ```
+/// use qless::select::top_k_indices;
+///
+/// let scores = [0.1, 0.9, -0.5, 0.9, 0.3];
+/// // ties broken by ascending index: 1 beats 3 despite equal scores
+/// assert_eq!(top_k_indices(&scores, 3), vec![1, 3, 4]);
+/// // k larger than n clamps; empty input stays empty
+/// assert_eq!(top_k_indices(&scores, 99).len(), 5);
+/// assert!(top_k_indices(&[], 4).is_empty());
+/// ```
 pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
     assert!(
         scores.iter().all(|s| !s.is_nan()),
@@ -23,7 +35,9 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
     idx
 }
 
-/// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%).
+/// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%),
+/// flooring at one sample for any non-empty input (`frac = 0.0` still
+/// selects the single best sample). Panics on `frac` outside `[0, 1]`.
 pub fn select_top_frac(scores: &[f32], frac: f64) -> Vec<usize> {
     assert!((0.0..=1.0).contains(&frac), "frac {frac}");
     let k = ((scores.len() as f64) * frac).ceil() as usize;
@@ -45,6 +59,46 @@ mod tests {
     #[test]
     fn k_larger_than_n_is_clamped() {
         assert_eq!(top_k_indices(&[1.0, 2.0], 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn empty_scores_select_nothing() {
+        // An empty datastore scan must not panic anywhere in selection.
+        assert!(top_k_indices(&[], 0).is_empty());
+        assert!(top_k_indices(&[], 5).is_empty());
+        assert!(select_top_frac(&[], 0.0).is_empty());
+        assert!(select_top_frac(&[], 0.05).is_empty());
+        assert!(select_top_frac(&[], 1.0).is_empty());
+    }
+
+    #[test]
+    fn frac_boundaries_exact() {
+        let s: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        // frac = 0.0 floors at one sample (the best one)
+        assert_eq!(select_top_frac(&s, 0.0), vec![9]);
+        // frac = 1.0 selects everything, best first
+        let all = select_top_frac(&s, 1.0);
+        assert_eq!(all.len(), 10);
+        assert_eq!(all[0], 9);
+        assert_eq!(all[9], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "frac")]
+    fn frac_above_one_rejected() {
+        select_top_frac(&[1.0], 1.5);
+    }
+
+    #[test]
+    fn all_equal_scores_tie_break_deterministically() {
+        // every score identical: selection must be the index prefix, at
+        // every k, so reruns and scoring-path changes can't reshuffle it
+        let s = vec![0.25f32; 8];
+        for k in 0..=8 {
+            let want: Vec<usize> = (0..k).collect();
+            assert_eq!(top_k_indices(&s, k), want, "k={k}");
+        }
+        assert_eq!(select_top_frac(&s, 0.5), vec![0, 1, 2, 3]);
     }
 
     #[test]

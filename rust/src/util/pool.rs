@@ -9,11 +9,14 @@
 //! full parallelism (no cap), and rows are claimed work-stealing-style
 //! from a shared atomic cursor so fast workers absorb slow rows.
 //!
-//! The only entry point is [`par_fill_f32`]: fill `out[i] = f(i)` in
-//! parallel. The caller participates in the scan and blocks until every
-//! claimed chunk is done, which is what makes the borrowed-closure
-//! lifetime erasure below sound: `f` and `out` are only ever touched
-//! between job publication and the caller's return.
+//! Two entry points share one job engine: [`par_fill_f32`] fills
+//! `out[i] = f(i)` (one float per index), and [`par_fill_rows`] fills
+//! `out[i*width .. (i+1)*width]` per index — the multi-query scan's shape,
+//! where each datastore row produces one score per validation task. The
+//! caller participates in the scan and blocks until every claimed chunk is
+//! done, which is what makes the borrowed-closure lifetime erasure below
+//! sound: `f` and `out` are only ever touched between job publication and
+//! the caller's return.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -29,15 +32,18 @@ pub fn scan_threads() -> usize {
         .max(1)
 }
 
-/// One parallel-for job. Workers claim `grain`-sized chunks from `next`
-/// until the range is exhausted; `f` and `out` are lifetime-erased raw
-/// pointers kept alive by the caller blocking in [`par_fill_f32`].
+/// One parallel-for job. Workers claim `grain`-sized index chunks from
+/// `next` until the range is exhausted; `f` and `out` are lifetime-erased
+/// raw pointers kept alive by the caller blocking in [`par_fill_rows`].
 struct Job {
     next: AtomicUsize,
+    /// Logical index count (rows, not floats).
     n: usize,
     grain: usize,
+    /// Floats written per index; `out` is `n × width` floats.
+    width: usize,
     out: *mut f32,
-    f: *const (dyn Fn(usize) -> f32 + Sync),
+    f: *const (dyn Fn(usize, &mut [f32]) + Sync),
     /// Participants (workers + caller) currently inside `run`.
     running: AtomicUsize,
     panicked: AtomicBool,
@@ -61,11 +67,14 @@ impl Job {
             let end = (start + self.grain).min(self.n);
             let res = catch_unwind(AssertUnwindSafe(|| {
                 // SAFETY: see the Send/Sync justification above; chunk
-                // indices are disjoint across participants by fetch_add.
+                // indices are disjoint across participants by fetch_add,
+                // so the `width`-float output slices never alias.
                 let f = unsafe { &*self.f };
                 for i in start..end {
-                    let v = f(i);
-                    unsafe { *self.out.add(i) = v };
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(self.out.add(i * self.width), self.width)
+                    };
+                    f(i, row);
                 }
             }));
             if res.is_err() {
@@ -149,7 +158,18 @@ fn worker_loop(shared: Arc<Shared>) {
 /// thread participates, so this also works with zero pool workers
 /// (single-core machines) — it just runs serially.
 pub fn par_fill_f32(out: &mut [f32], f: &(dyn Fn(usize) -> f32 + Sync)) {
-    let n = out.len();
+    par_fill_rows(out, 1, &|i: usize, row: &mut [f32]| row[0] = f(i));
+}
+
+/// Fill `out[i*width .. (i+1)*width]` with `f(i, chunk)` for each logical
+/// index `i` in `0 .. out.len()/width`, in parallel on the persistent
+/// pool. `width` must divide `out.len()`. This is the multi-query scan
+/// primitive: one datastore row in, `width` per-task scores out, with the
+/// row's expensive decode shared across all of them.
+pub fn par_fill_rows(out: &mut [f32], width: usize, f: &(dyn Fn(usize, &mut [f32]) + Sync)) {
+    assert!(width >= 1, "par_fill_rows: width must be >= 1");
+    assert_eq!(out.len() % width, 0, "par_fill_rows: out length not a multiple of width");
+    let n = out.len() / width;
     if n == 0 {
         return;
     }
@@ -163,15 +183,17 @@ pub fn par_fill_f32(out: &mut [f32], f: &(dyn Fn(usize) -> f32 + Sync)) {
     // late worker's hand, but `run` dereferences the pointers only for
     // chunks claimed while `next < n`, and we do not return until the
     // cursor is exhausted AND `running == 0`.
-    let f_erased: *const (dyn Fn(usize) -> f32 + Sync) = unsafe {
-        std::mem::transmute::<&(dyn Fn(usize) -> f32 + Sync), *const (dyn Fn(usize) -> f32 + Sync)>(
-            f,
-        )
+    let f_erased: *const (dyn Fn(usize, &mut [f32]) + Sync) = unsafe {
+        std::mem::transmute::<
+            &(dyn Fn(usize, &mut [f32]) + Sync),
+            *const (dyn Fn(usize, &mut [f32]) + Sync),
+        >(f)
     };
     let job = Arc::new(Job {
         next: AtomicUsize::new(0),
         n,
         grain,
+        width,
         out: out.as_mut_ptr(),
         f: f_erased,
         running: AtomicUsize::new(1), // the caller
@@ -208,6 +230,24 @@ mod tests {
             par_fill_f32(&mut out, &|i| i as f32 * 2.0);
             for (i, &v) in out.iter().enumerate() {
                 assert_eq!(v, i as f32 * 2.0, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fills_row_chunks() {
+        for (n, w) in [(0usize, 3usize), (1, 1), (7, 2), (300, 3), (1024, 4)] {
+            let mut out = vec![0f32; n * w];
+            par_fill_rows(&mut out, w, &|i: usize, row: &mut [f32]| {
+                assert_eq!(row.len(), w);
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x = (i * 10 + j) as f32;
+                }
+            });
+            for i in 0..n {
+                for j in 0..w {
+                    assert_eq!(out[i * w + j], (i * 10 + j) as f32, "n={n} w={w} i={i} j={j}");
+                }
             }
         }
     }

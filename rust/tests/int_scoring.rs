@@ -1,0 +1,239 @@
+//! Integer-domain scoring equivalence suite (the tentpole's contract).
+//!
+//! The streamed scan dispatches to the integer-domain engine at 2/4/8-bit
+//! and to XNOR+popcount at 1-bit. These properties pin it to the
+//! dequantize-to-f32 reference (`scores_dense`):
+//!
+//! * at 1-bit the kernel's score is **exact**: bit-for-bit equal to an
+//!   independently computed i64 code dot with a single final f32
+//!   conversion (and within 1e-5 of the f32 reference);
+//! * at 2/4/8-bit, for both absmax and absmean, scores match the f32
+//!   reference within 1e-5 relative — across dividing and non-dividing
+//!   shard sizes, so streaming granularity stays a non-semantic knob;
+//! * a fused Q-task scan equals Q single-task scans bit-for-bit while
+//!   reading the datastore exactly once ([`ScanStats`] proves the pass).
+
+use std::path::PathBuf;
+
+use qless::datastore::{Datastore, DatastoreWriter};
+use qless::grads::FeatureMatrix;
+use qless::influence::native::{scores_dense, ValFeatures};
+use qless::influence::{score_datastore, score_datastore_tasks, ScanStats, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{quantize_row, Precision, Scheme};
+use qless::util::prop::run_prop;
+use qless::util::Rng;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "qless_intscore_{tag}_{}_{:?}.qlds",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+}
+
+fn build_store(
+    tag: &str,
+    precision: Precision,
+    n: usize,
+    k: usize,
+    etas: &[f32],
+    seed: u64,
+) -> (Datastore, PathBuf) {
+    let path = tmpfile(tag);
+    let mut w = DatastoreWriter::create(&path, precision, n, k, etas.len()).unwrap();
+    for (ci, &eta) in etas.iter().enumerate() {
+        let f = feats(n, k, seed + ci as u64);
+        w.begin_checkpoint(eta).unwrap();
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+    }
+    w.finalize().unwrap();
+    (Datastore::open(&path).unwrap(), path)
+}
+
+/// η-weighted whole-block aggregation over the dequantize-to-f32
+/// reference kernel — the scores every integer path is held to.
+fn f32_reference_scores(ds: &Datastore, vals: &[FeatureMatrix]) -> Vec<f32> {
+    let mut total = vec![0f32; ds.n_samples()];
+    for ci in 0..ds.n_checkpoints() {
+        let block = ds.load_checkpoint(ci).unwrap();
+        let val = ValFeatures::prepare(&vals[ci], block.precision);
+        for (t, s) in total.iter_mut().zip(scores_dense(&block, &val)) {
+            *t += block.eta * s;
+        }
+    }
+    total
+}
+
+/// |a − b| within `tol` relative to max(1, |a|, |b|). Mean cosines are
+/// bounded by 1, so the max(1, ·) makes this an absolute bound in
+/// practice while staying meaningful for η-amplified totals.
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn prop_int_scores_match_f32_reference_all_schemes_and_shards() {
+    // scheme × bitwidth × {dividing, non-dividing} shard sizes:
+    // the streamed scan (integer kernels) vs the f32 reference.
+    run_prop("int-matches-f32", 30, |g| {
+        let n = 3 + g.usize_up_to(24);
+        let k = 8 * (1 + g.usize_up_to(20)); // up to 168 dims
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.2 + 0.5 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let combos: [(u8, Scheme); 7] = [
+            (1, Scheme::Sign),
+            (2, Scheme::Absmax),
+            (2, Scheme::Absmean),
+            (4, Scheme::Absmax),
+            (4, Scheme::Absmean),
+            (8, Scheme::Absmax),
+            (8, Scheme::Absmean),
+        ];
+        for (bits, scheme) in combos {
+            let p = Precision::new(bits, scheme).unwrap();
+            let (ds, path) = build_store(&format!("ref{bits}{scheme}"), p, n, k, &etas, seed);
+            let vals: Vec<FeatureMatrix> =
+                (0..ckpts).map(|c| feats(1 + c, k, seed + 500 + c as u64)).collect();
+            let expect = f32_reference_scores(&ds, &vals);
+            // shard sizes: 1 and n always divide; n/2+1 never does for n≥3
+            for shard_rows in [1usize, n, n / 2 + 1] {
+                let got = score_datastore(
+                    &ds,
+                    &vals,
+                    ScoreOpts { shard_rows, ..Default::default() },
+                    None,
+                )
+                .map_err(|e| e.to_string())?;
+                for (i, (&a, &b)) in expect.iter().zip(&got).enumerate() {
+                    prop_assert!(
+                        close(a, b, 1e-5),
+                        "{bits}-bit {scheme} n={n} k={k} ckpts={ckpts} shard={shard_rows} \
+                         row {i}: reference {a} vs integer-domain {b}"
+                    );
+                }
+            }
+            std::fs::remove_file(path).ok();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_1bit_scores_are_integer_exact() {
+    // The popcount path must equal an independently computed exact i64
+    // code dot (one final f32 conversion) bit-for-bit — the "exact at
+    // 1-bit" half of the acceptance contract.
+    run_prop("1bit-exact", 30, |g| {
+        let n = 2 + g.usize_up_to(20);
+        let k = 8 * (1 + g.usize_up_to(24));
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.3 + 0.4 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let p = Precision::new(1, Scheme::Sign).unwrap();
+        let (ds, path) = build_store("exact1", p, n, k, &etas, seed);
+        let vals: Vec<FeatureMatrix> =
+            (0..ckpts).map(|c| feats(1 + g.rng.below(4), k, seed + 900 + c as u64)).collect();
+
+        // exact integer reference, replicating the kernel's final float
+        // op sequence: (Σ_v ⟨t,v⟩ as f32 · (1/k)) / nv, then η-weighted
+        let inv_k = 1.0 / k as f32;
+        let mut expect = vec![0f32; n];
+        for ci in 0..ds.n_checkpoints() {
+            let block = ds.load_checkpoint(ci).unwrap();
+            let val_codes: Vec<Vec<i8>> = (0..vals[ci].n)
+                .map(|v| quantize_row(vals[ci].row(v), 1, Scheme::Sign).codes)
+                .collect();
+            let nv = val_codes.len() as f32;
+            for (i, e) in expect.iter_mut().enumerate() {
+                let t = block.row_codes(i);
+                let mut total_dot = 0i64;
+                for v in &val_codes {
+                    for (&a, &b) in t.iter().zip(v.iter()) {
+                        total_dot += (a as i64) * (b as i64);
+                    }
+                }
+                *e += block.eta * ((total_dot as f32 * inv_k) / nv);
+            }
+        }
+
+        for shard_rows in [1usize, n, n / 2 + 1] {
+            let got = score_datastore(
+                &ds,
+                &vals,
+                ScoreOpts { shard_rows, ..Default::default() },
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+            prop_assert!(
+                got == expect,
+                "1-bit n={n} k={k} shard={shard_rows}: popcount not integer-exact \
+                 ({got:?} vs {expect:?})"
+            );
+        }
+        std::fs::remove_file(path).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multi_task_scan_is_one_pass_and_exact() {
+    // Q tasks fused into one scan: per-task scores equal the single-task
+    // scans bit-for-bit, and the I/O accounting shows ONE datastore pass
+    // regardless of Q.
+    run_prop("multi-one-pass", 25, |g| {
+        let n = 4 + g.usize_up_to(28);
+        let k = 8 * (2 + g.usize_up_to(10));
+        let bits = [1u8, 2, 4, 8, 16][g.rng.below(5)];
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.5 + 0.2 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let (ds, path) = build_store(&format!("multi{bits}"), p, n, k, &etas, seed);
+        let q = 1 + g.rng.below(3);
+        let tasks: Vec<Vec<FeatureMatrix>> = (0..q)
+            .map(|t| {
+                (0..ckpts)
+                    .map(|c| feats(1 + g.rng.below(3), k, seed + (t * 100 + c) as u64 + 1))
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[FeatureMatrix]> = tasks.iter().map(|t| t.as_slice()).collect();
+        let shard_rows = 1 + g.rng.below(n + 2);
+        let opts = ScoreOpts { shard_rows, ..Default::default() };
+        let (fused, stats) =
+            score_datastore_tasks(&ds, &refs, opts, None).map_err(|e| e.to_string())?;
+        let expect_shards = n.div_ceil(shard_rows.min(n)) * ckpts;
+        prop_assert!(
+            stats
+                == ScanStats {
+                    checkpoints: ckpts,
+                    tasks: q,
+                    shards_read: expect_shards,
+                    rows_read: (n * ckpts) as u64,
+                    bytes_read: (n * ckpts) as u64 * ds.header.resident_row_bytes(),
+                },
+            "stats {stats:?} != one pass of {expect_shards} shards (q={q}, bits={bits})"
+        );
+        for (t, task) in tasks.iter().enumerate() {
+            let alone =
+                score_datastore(&ds, task, opts, None).map_err(|e| e.to_string())?;
+            prop_assert!(
+                alone == fused[t],
+                "bits={bits} q={q} task {t}: fused scan differs from single scan"
+            );
+        }
+        std::fs::remove_file(path).ok();
+        Ok(())
+    });
+}

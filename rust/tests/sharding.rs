@@ -14,7 +14,7 @@ use std::path::PathBuf;
 
 use qless::datastore::{Datastore, DatastoreWriter};
 use qless::grads::FeatureMatrix;
-use qless::influence::native::{scores_1bit, scores_dense, ValFeatures};
+use qless::influence::native::{scores_rows, ValFeatures};
 use qless::influence::{score_datastore, ScoreOpts};
 use qless::prop_assert;
 use qless::quant::{Precision, Scheme};
@@ -60,18 +60,16 @@ fn build_store(
 }
 
 /// The old whole-block scan, reconstructed from its parts: load each
-/// checkpoint block fully, score with the per-precision kernel, accumulate
-/// η-weighted totals in checkpoint order.
+/// checkpoint block fully, score with the per-precision kernel dispatch
+/// (the same `scores_rows` the streamed scan uses — popcount at 1-bit,
+/// the integer engine at 2/4/8-bit, f32 at 16-bit), accumulate η-weighted
+/// totals in checkpoint order.
 fn whole_block_scores(ds: &Datastore, val_per_ckpt: &[FeatureMatrix]) -> Vec<f32> {
     let mut total = vec![0f32; ds.n_samples()];
     for ci in 0..ds.n_checkpoints() {
         let block = ds.load_checkpoint(ci).unwrap();
         let val = ValFeatures::prepare(&val_per_ckpt[ci], block.precision);
-        let scores = if block.precision.bits == 1 {
-            scores_1bit(&block, &val)
-        } else {
-            scores_dense(&block, &val)
-        };
+        let scores = scores_rows(&block.rows(), &val);
         for (t, s) in total.iter_mut().zip(&scores) {
             *t += block.eta * s;
         }
