@@ -5,6 +5,11 @@
 //! every sub-16-bit path must beat the f32 reference because it touches a
 //! fraction of the memory and does integer math in the hot loop, and Q
 //! validation tasks must cost ~one single-task pass, not Q.
+//!
+//! The final section load-tests the resident query service (`qless
+//! serve`) over real sockets: queries/sec and cold/warm latency
+//! percentiles vs the micro-batch window at Q ∈ {1, 4, 16} concurrent
+//! clients — the numbers recorded in EXPERIMENTS.md §Perf iteration 7.
 
 use std::path::PathBuf;
 
@@ -161,6 +166,88 @@ fn main() {
         });
         println!("{}", r.report_line());
         std::fs::remove_file(path).ok();
+    }
+
+    // resident query service (qless serve): queries/sec and latency vs the
+    // micro-batch window, at Q concurrent clients, cold vs warm shard
+    // cache. Score cache disabled so every query pays a real scan; each
+    // (client, round) uses distinct val features for the same reason.
+    {
+        use qless::service::{Client, ServeOpts, Server};
+        use qless::util::stats::fmt_secs;
+        use std::sync::{Arc, Barrier};
+
+        let nv_serve = 8usize;
+        let rounds = 6usize;
+        let (_ds, store_path) = build(4, n, k);
+        println!("-- serve: {n}×{k} 4-bit store, {nv_serve} val rows/query, {rounds} rounds --");
+        for &(q, window_ms) in &[(1usize, 0u64), (4, 0), (4, 2), (16, 2)] {
+            let server = Server::start(
+                &store_path,
+                ServeOpts {
+                    addr: "127.0.0.1:0".into(),
+                    batch_window_ms: window_ms,
+                    max_batch_tasks: 32,
+                    shard_rows: 0,
+                    mem_budget_mb: 64,
+                    score_cache_entries: 0,
+                    workers: q + 2,
+                    queue_cap: 256,
+                },
+            )
+            .unwrap();
+            let addr = server.addr();
+            let barrier = Arc::new(Barrier::new(q));
+            let t_all = std::time::Instant::now();
+            let handles: Vec<_> = (0..q)
+                .map(|ci| {
+                    let barrier = Arc::clone(&barrier);
+                    std::thread::spawn(move || {
+                        let mut client = Client::connect(addr).unwrap();
+                        let mut lat: Vec<(f64, bool)> = Vec::with_capacity(rounds);
+                        barrier.wait();
+                        for r in 0..rounds {
+                            let val = vec![feats(nv_serve, k, (3000 + ci * 100 + r) as u64)];
+                            let t = std::time::Instant::now();
+                            client.score(&val, 10, false).unwrap();
+                            lat.push((t.elapsed().as_secs_f64(), r == 0));
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let all: Vec<(f64, bool)> =
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            let wall = t_all.elapsed().as_secs_f64();
+            let stats = server.stats();
+            server.stop();
+            server.join().unwrap();
+            let cold: Vec<f64> = all.iter().filter(|(_, c)| *c).map(|(s, _)| *s).collect();
+            let mut warm: Vec<f64> = all.iter().filter(|(_, c)| !*c).map(|(s, _)| *s).collect();
+            warm.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |p: f64| -> f64 {
+                warm[((p * (warm.len() - 1) as f64).round() as usize).min(warm.len() - 1)]
+            };
+            let cold_mean = cold.iter().sum::<f64>() / cold.len().max(1) as f64;
+            // true per-pass fusion: scanned queries over passes (a per-query
+            // mean of `batched` would overweight the big batches)
+            let fuse: f64 = if stats.fused_passes > 0 {
+                (stats.queries - stats.score_cache_hits) as f64 / stats.fused_passes as f64
+            } else {
+                0.0
+            };
+            println!(
+                "serve Q={q:<2} window={window_ms}ms: {:>7.1} q/s  cold {:>9}  warm p50 {:>9}  p99 {:>9}  \
+                 (avg {fuse:.1} tasks/pass, {} passes, {} disk shard reads)",
+                all.len() as f64 / wall,
+                fmt_secs(cold_mean),
+                fmt_secs(pct(0.50)),
+                fmt_secs(pct(0.99)),
+                stats.fused_passes,
+                stats.disk_shard_reads,
+            );
+        }
+        std::fs::remove_file(store_path).ok();
     }
 
     // XLA Pallas-tile path (needs artifacts)

@@ -3,9 +3,12 @@
 //! Flags map 1:1 onto [`Config`] keys plus a few parser-level options
 //! (`--config <file>` loads before overrides; `-v`/`-q` set verbosity;
 //! `--fast` shrinks workloads for smoke runs). Unknown flags error with the
-//! list of valid keys rather than being silently ignored.
+//! list of valid keys rather than being silently ignored, a repeated flag
+//! is an error rather than silently last-wins (`--config` excepted — files
+//! layer in order), and parse errors append the *subcommand's* usage via
+//! [`usage_for`] (`qless serve --help` prints the serve flags).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::Config;
 use crate::util::{set_verbosity, Level};
@@ -32,13 +35,15 @@ COMMANDS
   extract             build the (quantized) gradient datastore from checkpoints
   score               compute influence scores against validation gradients
   select              pick top select_frac and report composition
+  serve               resident influence query service over TCP
+                      (`qless serve --help` for the serve flags)
   eval                evaluate a checkpoint on the three benchmarks
   xp <id>             reproduce a paper table/figure:
                       table1 table2 table3 fig1 fig3 fig4 fig5
   list-artifacts      show what the manifest provides
 
 OPTIONS (all Config keys work as --key value):
-  --config FILE       load key=value file first
+  --config FILE       load key=value file first (may repeat; files layer)
   --model NAME        tiny | small | base
   --bits N            16 | 8 | 4 | 2 | 1      --scheme S   absmax | absmean
   --model-bits N      16 | 8 | 4 (QLoRA ablation)
@@ -49,6 +54,41 @@ OPTIONS (all Config keys work as --key value):
   --run-dir DIR       --artifacts DIR
   --fast              shrink workloads        -v / -q      verbosity
 ";
+
+/// `qless serve` usage — printed by `qless serve --help` and appended to
+/// serve-related parse errors.
+pub const SERVE_USAGE: &str = "\
+qless serve — resident influence query service (JSON-lines over TCP)
+
+USAGE: qless serve [--key value ...]
+
+  --datastore FILE        datastore file to serve (default: the pipeline's
+                          <run-dir>/datastore_<bits>b_<scheme>.qlds)
+  --serve-addr H:P        bind address (default 127.0.0.1:7411; port 0 = ephemeral)
+  --batch-window-ms N     admission window: concurrent queries arriving
+                          within N ms coalesce into ONE fused datastore
+                          pass (default 2)
+  --max-batch-tasks N     cap on tasks fused per pass (default 16)
+  --score-cache-entries N score-cache slots — identical queries answer from
+                          cache without a scan (default 64; 0 disables)
+  --mem-budget-mb N       shard-cache byte budget in MiB; warm shards are
+                          served from RAM, not disk (default 64)
+  --shard-rows N          rows per scan/cache shard (0 = derive from budget)
+  --workers N             connection-handler threads (default: cores ≤ 8)
+  --bits N / --scheme S / --run-dir DIR    select the default datastore path
+
+Wire protocol: one JSON object per line (spec: rust/src/service/proto.rs;
+example exchange: README.md §serve).
+";
+
+/// The usage text for a subcommand: serve has its own flag set; everything
+/// else shares the global [`USAGE`].
+pub fn usage_for(command: &str) -> &'static str {
+    match command {
+        "serve" => SERVE_USAGE,
+        _ => USAGE,
+    }
+}
 
 pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
     let mut it = args.into_iter().peekable();
@@ -63,17 +103,39 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
 
     // two passes: collect (key, value) pairs, apply --config first
     let mut pairs: Vec<(String, String)> = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
     while let Some(arg) = it.next() {
         if let Some(key) = arg.strip_prefix("--") {
             match key {
                 "fast" => cli.fast = true,
                 "help" => {
-                    cli.command = "help".into();
+                    // per-subcommand help: short-circuit so `qless serve
+                    // --help` prints the serve flags, never a parse error
+                    return Ok(Cli {
+                        positional: vec![cli.command],
+                        command: "help".into(),
+                        config: Config::default(),
+                        fast: false,
+                    });
                 }
                 _ => {
+                    // dashes and underscores name the same flag; repeats
+                    // are an error, not a silent last-wins (--config is
+                    // exempt: files layer in order)
+                    let norm = key.replace('-', "_");
+                    if norm != "config" && seen.contains(&norm) {
+                        bail!(
+                            "duplicate flag --{key}\n\n{}",
+                            usage_for(&cli.command)
+                        );
+                    }
+                    seen.push(norm);
                     let val = match it.next() {
                         Some(v) => v,
-                        None => bail!("flag --{key} needs a value\n\n{USAGE}"),
+                        None => bail!(
+                            "flag --{key} needs a value\n\n{}",
+                            usage_for(&cli.command)
+                        ),
                     };
                     pairs.push((key.to_string(), val));
                 }
@@ -83,7 +145,7 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
         } else if arg == "-q" {
             set_verbosity(Level::Warn);
         } else if arg.starts_with('-') {
-            bail!("unknown flag '{arg}'\n\n{USAGE}");
+            bail!("unknown flag '{arg}'\n\n{}", usage_for(&cli.command));
         } else {
             cli.positional.push(arg);
         }
@@ -94,7 +156,9 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
         cli.config.load_file(std::path::Path::new(v))?;
     }
     for (k, v) in pairs.iter().filter(|(k, _)| k != "config") {
-        cli.config.set(k, v)?;
+        cli.config
+            .set(k, v)
+            .map_err(|e| anyhow!("{e:#}\n\n{}", usage_for(&cli.command)))?;
     }
     cli.config.validate()?;
     Ok(cli)
@@ -170,5 +234,87 @@ mod tests {
     #[test]
     fn help() {
         assert_eq!(p(&["--help"]).unwrap().command, "help");
+    }
+
+    #[test]
+    fn duplicate_flags_rejected() {
+        let err = p(&["score", "--bits", "4", "--bits", "8"]).unwrap_err().to_string();
+        assert!(err.contains("duplicate flag --bits"), "{err}");
+        // dash and underscore spellings are the same flag
+        assert!(p(&["score", "--mem-budget-mb", "4", "--mem_budget_mb", "8"]).is_err());
+        // distinct flags still fine
+        assert!(p(&["score", "--bits", "4", "--seed", "8"]).is_ok());
+    }
+
+    #[test]
+    fn repeated_config_files_layer_in_order() {
+        let dir = std::env::temp_dir().join(format!("qless_cli_dup_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("a.cfg");
+        let b = dir.join("b.cfg");
+        std::fs::write(&a, "bits = 8\ncorpus_size = 500\n").unwrap();
+        std::fs::write(&b, "bits = 2\n").unwrap();
+        let c = p(&[
+            "pipeline",
+            "--config",
+            a.to_str().unwrap(),
+            "--config",
+            b.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert_eq!(c.config.bits, 2, "later file wins");
+        assert_eq!(c.config.corpus_size, 500, "earlier file still applies");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let c = p(&[
+            "serve",
+            "--serve-addr",
+            "127.0.0.1:0",
+            "--batch-window-ms",
+            "5",
+            "--max-batch-tasks",
+            "8",
+            "--score-cache-entries",
+            "16",
+            "--datastore",
+            "runs/x/ds.qlds",
+        ])
+        .unwrap();
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.config.serve_addr, "127.0.0.1:0");
+        assert_eq!(c.config.batch_window_ms, 5);
+        assert_eq!(c.config.max_batch_tasks, 8);
+        assert_eq!(c.config.score_cache_entries, 16);
+        assert_eq!(c.config.datastore, "runs/x/ds.qlds");
+        assert!(p(&["serve", "--max-batch-tasks", "0"]).is_err()); // validate()
+    }
+
+    #[test]
+    fn subcommand_help_routes_to_its_usage() {
+        let c = p(&["serve", "--help"]).unwrap();
+        assert_eq!(c.command, "help");
+        assert_eq!(c.positional, vec!["serve"]);
+        // --help short-circuits: later junk flags must not error
+        let c2 = p(&["serve", "--help", "--bogus"]).unwrap();
+        assert_eq!(c2.command, "help");
+        assert!(usage_for("serve").contains("--batch-window-ms"));
+        assert!(usage_for("pipeline").contains("COMMANDS"));
+        assert!(usage_for("").contains("COMMANDS"));
+    }
+
+    #[test]
+    fn serve_errors_print_serve_flags() {
+        let err = p(&["serve", "--batch-window-ms"]).unwrap_err().to_string();
+        assert!(err.contains("needs a value"), "{err}");
+        assert!(err.contains("--max-batch-tasks"), "serve usage attached: {err}");
+        // unknown config keys under serve also point at the serve flags
+        let err2 = p(&["serve", "--bogus-key", "1"]).unwrap_err().to_string();
+        assert!(err2.contains("qless serve"), "{err2}");
+        // other subcommands keep the global usage
+        let err3 = p(&["score", "--bogus-key", "1"]).unwrap_err().to_string();
+        assert!(err3.contains("COMMANDS"), "{err3}");
     }
 }

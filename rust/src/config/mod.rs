@@ -63,6 +63,20 @@ pub struct Config {
     /// pass (per-task accumulators share the shard traversal). Disable to
     /// fall back to one pass per benchmark (before/after comparisons).
     pub multi_scan: bool,
+    /// `qless serve` bind address, `host:port` (port 0 = ephemeral).
+    pub serve_addr: String,
+    /// Serve: micro-batch admission window in milliseconds — how long the
+    /// scoring worker waits after the first pending query to coalesce
+    /// concurrent queries into one fused datastore pass.
+    pub batch_window_ms: u64,
+    /// Serve: most validation tasks fused into one scan pass (≥ 1).
+    pub max_batch_tasks: usize,
+    /// Serve: score-cache capacity in entries (one per distinct task
+    /// digest); 0 disables score caching.
+    pub score_cache_entries: usize,
+    /// Serve: datastore file to serve; empty = the pipeline's default
+    /// path under `run_dir` for the configured bits/scheme.
+    pub datastore: String,
 }
 
 impl Default for Config {
@@ -89,6 +103,11 @@ impl Default for Config {
             shard_rows: 0,
             mem_budget_mb: DEFAULT_MEM_BUDGET_MB,
             multi_scan: true,
+            serve_addr: "127.0.0.1:7411".into(),
+            batch_window_ms: 2,
+            max_batch_tasks: 16,
+            score_cache_entries: 64,
+            datastore: String::new(),
         }
     }
 }
@@ -134,6 +153,11 @@ impl Config {
             "shard_rows" => self.shard_rows = parse(v, &key)?,
             "mem_budget_mb" => self.mem_budget_mb = parse(v, &key)?,
             "multi_scan" => self.multi_scan = parse_bool(v, &key)?,
+            "serve_addr" => self.serve_addr = v.to_string(),
+            "batch_window_ms" => self.batch_window_ms = parse(v, &key)?,
+            "max_batch_tasks" => self.max_batch_tasks = parse(v, &key)?,
+            "score_cache_entries" => self.score_cache_entries = parse(v, &key)?,
+            "datastore" => self.datastore = v.to_string(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -175,6 +199,15 @@ impl Config {
         }
         if self.mem_budget_mb == 0 {
             bail!("mem_budget_mb must be >= 1 (use shard_rows for explicit shard sizing)");
+        }
+        if self.max_batch_tasks == 0 {
+            bail!("max_batch_tasks must be >= 1 (1 disables fusing, not serving)");
+        }
+        if self.batch_window_ms > 60_000 {
+            bail!("batch_window_ms {} is over a minute — surely a typo", self.batch_window_ms);
+        }
+        if self.serve_addr.is_empty() {
+            bail!("serve_addr must be host:port (port 0 for ephemeral)");
         }
         Ok(())
     }
@@ -266,6 +299,35 @@ mod tests {
         c.validate().unwrap();
         c.set("mem_budget_mb", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn serve_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.serve_addr, "127.0.0.1:7411");
+        assert_eq!(c.batch_window_ms, 2);
+        assert_eq!(c.max_batch_tasks, 16);
+        assert_eq!(c.score_cache_entries, 64);
+        assert!(c.datastore.is_empty());
+        c.set("serve-addr", "0.0.0.0:9000").unwrap();
+        c.set("batch-window-ms", "7").unwrap();
+        c.set("max-batch-tasks", "32").unwrap();
+        c.set("score-cache-entries", "0").unwrap(); // 0 = disabled, valid
+        c.set("datastore", "runs/x/ds.qlds").unwrap();
+        assert_eq!(c.serve_addr, "0.0.0.0:9000");
+        assert_eq!(c.batch_window_ms, 7);
+        assert_eq!(c.max_batch_tasks, 32);
+        assert_eq!(c.score_cache_entries, 0);
+        c.validate().unwrap();
+        c.set("max_batch_tasks", "0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("max_batch_tasks", "4").unwrap();
+        c.set("batch_window_ms", "61000").unwrap();
+        assert!(c.validate().is_err());
+        c.set("batch_window_ms", "2").unwrap();
+        c.serve_addr.clear();
+        assert!(c.validate().is_err());
+        assert!(c.set("batch_window_ms", "fast").is_err());
     }
 
     #[test]

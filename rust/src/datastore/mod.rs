@@ -31,4 +31,18 @@ pub mod format;
 pub mod store;
 
 pub use format::{Header, MAGIC, VERSION};
-pub use store::{CheckpointBlock, Datastore, DatastoreWriter, RowsView, Shard, ShardReader};
+pub use store::{
+    CheckpointBlock, Datastore, DatastoreWriter, OwnedShard, RowsView, Shard, ShardReader,
+};
+
+use std::path::{Path, PathBuf};
+
+use crate::quant::Precision;
+
+/// Canonical datastore path for a run directory and precision —
+/// `<run_dir>/datastore_<bits>b_<scheme>.qlds`. The single source of the
+/// naming shared by the pipeline's builder (`Pipeline::build_datastore`)
+/// and `qless serve`'s default store lookup, so the two can't drift apart.
+pub fn default_store_path(run_dir: &Path, precision: Precision) -> PathBuf {
+    run_dir.join(format!("datastore_{}b_{}.qlds", precision.bits, precision.scheme))
+}

@@ -483,6 +483,77 @@ impl<'a> Shard<'a> {
     pub fn is_empty(&self) -> bool {
         self.rows.n() == 0
     }
+
+    /// Copy this borrowed shard into a self-contained [`OwnedShard`].
+    /// The borrowed form aliases the reader's reusable buffers (overwritten
+    /// by the next read); the owned form is what a shard cache can pin in
+    /// RAM across scans. Same bytes, same [`RowsView`] decode — scores over
+    /// either are bit-identical.
+    pub fn to_owned_shard(&self) -> OwnedShard {
+        OwnedShard {
+            ckpt: self.ckpt,
+            start: self.start,
+            eta: self.eta,
+            precision: self.rows.precision,
+            k: self.rows.k,
+            row_stride: self.rows.row_stride,
+            scales: self.rows.scales.to_vec(),
+            data: self.rows.data.to_vec(),
+        }
+    }
+}
+
+/// A self-contained copy of one shard — the unit the serving layer's
+/// byte-budgeted cache pins in RAM so repeat scans skip the disk. Built by
+/// [`Shard::to_owned_shard`]; hands out the same [`RowsView`] the streamed
+/// and whole-block readers do, so cached scans stay bit-identical.
+#[derive(Debug, Clone)]
+pub struct OwnedShard {
+    /// Checkpoint index this shard belongs to.
+    pub ckpt: usize,
+    /// Global row index of the shard's first row.
+    pub start: usize,
+    /// The checkpoint's LR weight η.
+    pub eta: f32,
+    /// Storage precision of the rows (bits + scheme).
+    pub precision: Precision,
+    /// Codes per row (the projection dimension).
+    pub k: usize,
+    /// Bytes per packed row.
+    pub row_stride: usize,
+    /// Per-row scales (empty at 16-bit).
+    pub scales: Vec<f32>,
+    /// Packed row data, `len() × row_stride` bytes.
+    pub data: Vec<u8>,
+}
+
+impl OwnedShard {
+    /// The shard's rows as the scoring kernels' common view.
+    pub fn rows(&self) -> RowsView<'_> {
+        RowsView {
+            precision: self.precision,
+            k: self.k,
+            row_stride: self.row_stride,
+            scales: &self.scales,
+            data: &self.data,
+        }
+    }
+
+    /// Number of rows in the shard.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.row_stride
+    }
+
+    /// True when the shard holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Heap bytes this shard pins — the weight a byte-budgeted cache
+    /// charges for it (row bytes + scale bytes + the struct itself).
+    pub fn byte_weight(&self) -> usize {
+        self.data.len() + 4 * self.scales.len() + std::mem::size_of::<OwnedShard>()
+    }
 }
 
 /// Streams one checkpoint's rows in fixed-size shards. Buffers are
@@ -504,6 +575,16 @@ impl ShardReader {
     /// The checkpoint's LR weight η (read once at open).
     pub fn eta(&self) -> f32 {
         self.eta
+    }
+
+    /// Reposition the reader so the next [`Self::next_shard`] starts at
+    /// global row `row` (clamped to the checkpoint's row count — seeking
+    /// to or past the end makes `next_shard` return `None`). Every shard
+    /// read seeks to its exact file offset anyway, so random access costs
+    /// nothing extra; this is the hook the serving layer's shard cache
+    /// uses to skip over ranges it already holds in RAM.
+    pub fn seek_to_row(&mut self, row: usize) {
+        self.next_row = row.min(self.header.n_samples as usize);
     }
 
     /// Rows per full shard (the final shard may be shorter).
@@ -802,6 +883,89 @@ mod tests {
         assert_eq!(ds.rows_per_shard(13, 1), 13);
         assert_eq!(ds.rows_per_shard(10_000, 1), n);
         assert!(ds.rows_per_shard(0, 1) >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn seek_to_row_matches_sequential_reads() {
+        // Random-access shard reads (the serving layer's cache-fill path)
+        // must produce the same bytes as the sequential stream, at every
+        // bitwidth, including a seek past the end (→ None) and re-seeks
+        // backwards over already-read ranges.
+        let dir = tmpdir();
+        let (n, k) = (13usize, 96usize);
+        for bits in [16u8, 8, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let path = dir.join(format!("seek_{bits}.qlds"));
+            let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+            w.begin_checkpoint(0.25).unwrap();
+            for row in features(n, k, 3) {
+                w.append_features(&row).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+            w.finalize().unwrap();
+            let ds = Datastore::open(&path).unwrap();
+            let block = ds.load_checkpoint(0).unwrap();
+            let shard_rows = 5usize;
+            let n_shards = n.div_ceil(shard_rows);
+            let mut r = ds.shard_reader(0, shard_rows).unwrap();
+            // visit shards out of order: last, first, middle, first again
+            for si in [n_shards - 1, 0, 1, 0] {
+                r.seek_to_row(si * shard_rows);
+                let shard = r.next_shard().unwrap().unwrap();
+                assert_eq!(shard.start, si * shard_rows, "{bits}-bit shard {si}");
+                let rows = shard.rows();
+                for j in 0..rows.n() {
+                    assert_eq!(rows.row_bytes(j), block.row_bytes(shard.start + j));
+                    if bits != 16 {
+                        assert_eq!(rows.scales[j], block.scales[shard.start + j]);
+                    }
+                }
+            }
+            r.seek_to_row(n);
+            assert!(r.next_shard().unwrap().is_none(), "{bits}-bit: seek to end");
+            r.seek_to_row(n + 100); // clamped
+            assert!(r.next_shard().unwrap().is_none());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn owned_shard_preserves_bytes_and_geometry() {
+        let dir = tmpdir();
+        for bits in [16u8, 4] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let path = dir.join(format!("owned_{bits}.qlds"));
+            let (n, k) = (9usize, 64usize);
+            let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+            w.begin_checkpoint(0.5).unwrap();
+            for row in features(n, k, 4) {
+                w.append_features(&row).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+            w.finalize().unwrap();
+            let ds = Datastore::open(&path).unwrap();
+            let mut r = ds.shard_reader(0, 4).unwrap();
+            let mut seen = 0usize;
+            while let Some(shard) = r.next_shard().unwrap() {
+                let owned = shard.to_owned_shard();
+                assert_eq!(owned.ckpt, shard.ckpt);
+                assert_eq!(owned.start, shard.start);
+                assert_eq!(owned.eta, shard.eta);
+                assert_eq!(owned.len(), shard.len());
+                assert!(!owned.is_empty());
+                let (a, b) = (shard.rows(), owned.rows());
+                assert_eq!(a.data, &owned.data[..]);
+                for j in 0..a.n() {
+                    assert_eq!(a.row_bytes(j), b.row_bytes(j), "{bits}-bit row {j}");
+                }
+                assert!(owned.byte_weight() >= owned.data.len());
+                seen += owned.len();
+            }
+            assert_eq!(seen, n);
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,15 +1,17 @@
 //! Checkpoint aggregation (the outer sum of Eq. 7):
 //! Inf(z) = Σ_i η_i · mean_{z'} ⟨q̂_{z,i}, q̂_{z',i}⟩.
 //!
-//! For each warmup checkpoint: prepare every validation task's features
-//! once at the datastore's precision, then **stream** the checkpoint's
-//! rows in fixed-size shards (`Datastore::shard_reader`), score each shard
-//! against *all* tasks with the fastest applicable path (popcount at
-//! 1-bit, the integer-domain engine at 2/4/8-bit, dense f32 at 16-bit, or
-//! the XLA kernel when requested), weight by η_i, and accumulate the
-//! per-shard partials into per-task totals. Q validation tasks therefore
-//! cost **one** datastore pass, not Q — [`ScanStats`] records the shard
-//! and byte traffic so benches can assert exactly that.
+//! Prepare every validation task's features once per checkpoint at the
+//! datastore's precision, then **stream** each checkpoint's rows in
+//! fixed-size shards (`Datastore::shard_reader`), score each shard against
+//! *all* tasks with the fastest applicable path (popcount at 1-bit, the
+//! integer-domain engine at 2/4/8-bit, dense f32 at 16-bit, or the XLA
+//! kernel when requested), weight by η_i, and accumulate the per-shard
+//! partials into per-task totals. Q validation tasks therefore cost
+//! **one** datastore pass, not Q — [`ScanStats`] records the shard and
+//! byte traffic so benches can assert exactly that. The prepared-tasks +
+//! accumulators core is the re-entrant [`MultiScan`], which the serving
+//! layer also drives with RAM-cached shards.
 //!
 //! Peak resident memory during a scan is the shard buffers — bounded by
 //! `--mem-budget-mb` — instead of the whole `n × row_stride` block the
@@ -20,7 +22,7 @@
 
 use anyhow::Result;
 
-use crate::datastore::Datastore;
+use crate::datastore::{Datastore, Header, RowsView};
 use crate::grads::FeatureMatrix;
 use crate::influence::native::{scores_rows, ValFeatures};
 use crate::influence::xla::{pack_val_tiles, scores_xla_rows};
@@ -74,6 +76,112 @@ pub struct ScanStats {
     pub bytes_read: u64,
 }
 
+/// One in-progress multi-task scan: per-checkpoint validation features
+/// prepared at the datastore's precision, per-task score accumulators, and
+/// the pass's I/O accounting. This is the **re-entrant** scan core — feed
+/// it shard row views in any order (each row of each checkpoint exactly
+/// once) and it produces the same totals as [`score_datastore_tasks`],
+/// because per-sample accumulation only depends on that sample's row and
+/// the checkpoint order of `feed` calls per row. Two callers share it:
+///
+/// * the batch pipeline's disk scan (`score_datastore_tasks`), and
+/// * the serving layer (`service::Session`), whose shards may come from a
+///   RAM cache instead of the file.
+pub struct MultiScan {
+    /// Prepared validation tasks, one [`ValFeatures`] set per checkpoint.
+    vals: Vec<ValFeatures>,
+    /// Per-task running totals, `[q][n]`.
+    totals: Vec<Vec<f32>>,
+    stats: ScanStats,
+    q: usize,
+    resident_row_bytes: u64,
+}
+
+impl MultiScan {
+    /// Prepare a scan of `tasks` over a store with `header`'s geometry.
+    /// `tasks[t]` holds task `t`'s raw (unquantized) per-checkpoint
+    /// validation features — quantization to the store's precision happens
+    /// here, mirroring §3.2. Rejects an empty task set, per-task checkpoint
+    /// counts that don't match the store, dimension mismatches, and
+    /// non-finite features, all as recoverable errors.
+    pub fn try_new(header: &Header, tasks: &[&[FeatureMatrix]]) -> Result<MultiScan> {
+        let c = header.n_checkpoints as usize;
+        let n = header.n_samples as usize;
+        let k = header.k as usize;
+        let q = tasks.len();
+        anyhow::ensure!(q > 0, "no validation tasks to score");
+        for (t, per_ckpt) in tasks.iter().enumerate() {
+            anyhow::ensure!(
+                per_ckpt.len() == c,
+                "task {t}: validation features for {} checkpoints, datastore has {c}",
+                per_ckpt.len()
+            );
+        }
+        let mut vals = Vec::with_capacity(c);
+        for ci in 0..c {
+            // prepared once per checkpoint, reused by every shard of that
+            // checkpoint — val features are never re-read or re-packed
+            let per_task: Vec<&FeatureMatrix> = tasks.iter().map(|t| &t[ci]).collect();
+            let val = ValFeatures::try_prepare_tasks(&per_task, header.precision)?;
+            anyhow::ensure!(val.k == k, "validation feature dim {} != datastore k {k}", val.k);
+            vals.push(val);
+        }
+        Ok(MultiScan {
+            vals,
+            totals: vec![vec![0f32; n]; q],
+            stats: ScanStats { checkpoints: c, tasks: q, ..Default::default() },
+            q,
+            resident_row_bytes: header.resident_row_bytes(),
+        })
+    }
+
+    /// The prepared validation features of checkpoint `ckpt` (the XLA path
+    /// packs kernel tiles from these).
+    pub fn val(&self, ckpt: usize) -> &ValFeatures {
+        &self.vals[ckpt]
+    }
+
+    /// Number of validation tasks riding the scan.
+    pub fn n_tasks(&self) -> usize {
+        self.q
+    }
+
+    /// Score one shard of checkpoint `ckpt` (rows starting at global row
+    /// `start`) with the fastest native kernel and accumulate into the
+    /// per-task totals, weighted by the checkpoint's `eta`.
+    pub fn feed(&mut self, ckpt: usize, eta: f32, start: usize, rows: &RowsView<'_>) {
+        let scores = scores_rows(rows, &self.vals[ckpt]);
+        self.feed_scores(eta, start, rows.n(), &scores);
+    }
+
+    /// Accumulate precomputed row-major `[n_rows × Q]` scores for a shard
+    /// starting at global row `start` (the XLA path computes scores
+    /// externally and feeds them here; [`Self::feed`] is the native form).
+    pub fn feed_scores(&mut self, eta: f32, start: usize, n_rows: usize, scores: &[f32]) {
+        debug_assert_eq!(scores.len(), n_rows * self.q);
+        for (j, chunk) in scores.chunks_exact(self.q).enumerate() {
+            let g = start + j;
+            for (total, &s) in self.totals.iter_mut().zip(chunk) {
+                total[g] += eta * s;
+            }
+        }
+        self.stats.shards_read += 1;
+        self.stats.rows_read += n_rows as u64;
+        self.stats.bytes_read += n_rows as u64 * self.resident_row_bytes;
+    }
+
+    /// The pass's I/O accounting so far.
+    pub fn stats(&self) -> ScanStats {
+        self.stats
+    }
+
+    /// Finish the scan: per-task score totals (caller order) + the pass's
+    /// [`ScanStats`].
+    pub fn finish(self) -> (Vec<Vec<f32>>, ScanStats) {
+        (self.totals, self.stats)
+    }
+}
+
 /// Score every training sample in `ds` against **Q validation tasks** in a
 /// single streamed pass. `tasks[t]` holds task `t`'s raw (unquantized)
 /// per-checkpoint validation features — quantization to the datastore's
@@ -89,17 +197,10 @@ pub fn score_datastore_tasks(
 ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
     let c = ds.n_checkpoints();
     let q = tasks.len();
-    anyhow::ensure!(q > 0, "no validation tasks to score");
-    for (t, per_ckpt) in tasks.iter().enumerate() {
-        anyhow::ensure!(
-            per_ckpt.len() == c,
-            "task {t}: validation features for {} checkpoints, datastore has {c}",
-            per_ckpt.len()
-        );
-    }
     let n = ds.n_samples();
     let precision = ds.header.precision;
     let k = ds.header.k as usize;
+    let mut scan = MultiScan::try_new(&ds.header, tasks)?;
     let mut rows_per_shard = ds.rows_per_shard(opts.shard_rows, opts.effective_budget_mb());
     if opts.use_xla {
         if let Some((_, info)) = rt_info {
@@ -134,16 +235,9 @@ pub fn score_datastore_tasks(
             );
         }
     }
-    let mut totals = vec![vec![0f32; n]; q];
-    let mut stats = ScanStats { checkpoints: c, tasks: q, ..Default::default() };
     for ci in 0..c {
-        // prepared once per checkpoint, reused by every shard of that
-        // checkpoint — val features are never re-read or re-packed per shard
-        let per_task: Vec<&FeatureMatrix> = tasks.iter().map(|t| &t[ci]).collect();
-        let val = ValFeatures::try_prepare_tasks(&per_task, precision)?;
-        anyhow::ensure!(val.k == k, "validation feature dim {} != datastore k {k}", val.k);
         let val_tiles = match (opts.use_xla, rt_info) {
-            (true, Some((_, info))) => Some(pack_val_tiles(info, &val)),
+            (true, Some((_, info))) => Some(pack_val_tiles(info, scan.val(ci))),
             (true, None) => return Err(anyhow::anyhow!("XLA scoring requires a runtime")),
             _ => None,
         };
@@ -153,32 +247,24 @@ pub fn score_datastore_tasks(
         let mut shards = 0usize;
         while let Some(shard) = reader.next_shard()? {
             let rows = shard.rows();
-            let scores = if let Some(tiles) = &val_tiles {
+            if let Some(tiles) = &val_tiles {
                 let (rt, info) = rt_info.expect("checked above");
-                scores_xla_rows(rt, info, &rows, tiles)?
+                let scores = scores_xla_rows(rt, info, &rows, tiles)?;
+                scan.feed_scores(eta, shard.start, rows.n(), &scores);
             } else {
-                scores_rows(&rows, &val)
-            };
-            debug_assert_eq!(scores.len(), rows.n() * q);
-            for (j, chunk) in scores.chunks_exact(q).enumerate() {
-                let g = shard.start + j;
-                for (total, &s) in totals.iter_mut().zip(chunk) {
-                    total[g] += eta * s;
-                }
+                scan.feed(ci, eta, shard.start, &rows);
             }
             shards += 1;
-            stats.shards_read += 1;
-            stats.rows_read += rows.n() as u64;
-            stats.bytes_read += rows.n() as u64 * ds.header.resident_row_bytes();
         }
         info!(
-            "scored checkpoint {ci} (η={eta:.2e}, {n}×{} vs {} val rows / {q} tasks, {shards} shards ≤{rows_per_shard} rows) in {:.2}s",
+            "scored checkpoint {ci} (η={eta:.2e}, {n}×{} vs {} val rows / {} tasks, {shards} shards ≤{rows_per_shard} rows) in {:.2}s",
             ds.header.k,
-            val.n(),
+            scan.val(ci).n(),
+            q,
             t0.elapsed().as_secs_f64()
         );
     }
-    Ok((totals, stats))
+    Ok(scan.finish())
 }
 
 /// Single-task [`score_datastore_tasks`]: score every training sample
@@ -320,6 +406,37 @@ mod tests {
             let alone = score_datastore(&ds, task, opts, None).unwrap();
             assert_eq!(alone, fused[t], "task {t}: fused vs single scan");
         }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn multiscan_feed_matches_streamed_scan() {
+        // The re-entrant scan core, fed shards manually and out of order
+        // within each checkpoint (the serving layer's cache-hit pattern),
+        // must reproduce score_datastore_tasks exactly — totals and stats.
+        let (n, k) = (12usize, 64usize);
+        let (ds, p) = build_ds_keep(4, &[0.9, 0.4], n, k);
+        let t0v = vec![feats(2, k, 80), feats(2, k, 81)];
+        let t1v = vec![feats(3, k, 82), feats(3, k, 83)];
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0v, &t1v];
+        let shard_rows = 5usize;
+        let opts = ScoreOpts { shard_rows, ..Default::default() };
+        let (want, want_stats) = score_datastore_tasks(&ds, &tasks, opts, None).unwrap();
+        let mut scan = crate::influence::MultiScan::try_new(&ds.header, &tasks).unwrap();
+        assert_eq!(scan.n_tasks(), 2);
+        for ci in 0..ds.n_checkpoints() {
+            let mut r = ds.shard_reader(ci, shard_rows).unwrap();
+            let eta = r.eta();
+            for si in (0..n.div_ceil(shard_rows)).rev() {
+                r.seek_to_row(si * shard_rows);
+                let shard = r.next_shard().unwrap().unwrap();
+                scan.feed(ci, eta, shard.start, &shard.rows());
+            }
+        }
+        assert_eq!(scan.stats().shards_read, want_stats.shards_read);
+        let (got, got_stats) = scan.finish();
+        assert_eq!(got, want, "re-entrant feed must be bit-identical");
+        assert_eq!(got_stats, want_stats);
         std::fs::remove_file(p).ok();
     }
 

@@ -21,11 +21,14 @@
 //! Scans are **multi-query**: a [`ValFeatures`] holds a set of validation
 //! tasks, every kernel scores all of them during one traversal of the
 //! train rows, and [`score_datastore_tasks`] streams the datastore once
-//! for Q tasks ([`ScanStats`] proves the single pass).
+//! for Q tasks ([`ScanStats`] proves the single pass). The scan core is
+//! the re-entrant [`MultiScan`]: prepared tasks + per-task accumulators
+//! that can be fed shards from *any* source — the disk stream here, or
+//! the serving layer's RAM shard cache (`service::Session`).
 
 pub mod aggregate;
 pub mod native;
 pub mod xla;
 
-pub use aggregate::{score_datastore, score_datastore_tasks, ScanStats, ScoreOpts};
+pub use aggregate::{score_datastore, score_datastore_tasks, MultiScan, ScanStats, ScoreOpts};
 pub use native::{ValFeatures, ValTask};

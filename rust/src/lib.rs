@@ -10,7 +10,9 @@
 //!   generation, warmup training, sharded gradient-feature extraction,
 //!   quantized gradient datastore, multi-query influence scoring on the
 //!   integer-domain kernels, top-p% selection, fine-tuning and benchmark
-//!   evaluation. Python never runs here.
+//!   evaluation — plus the resident query service (`qless serve`) that
+//!   keeps a datastore warm and answers influence queries over TCP
+//!   ([`service`]). Python never runs here.
 //! * **L2 (python/compile)** — SimLM (causal transformer + LoRA) fwd/bwd in
 //!   JAX, AOT-lowered once to HLO text artifacts.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for quantization and
@@ -47,6 +49,7 @@ pub mod quant;
 #[allow(missing_docs)]
 pub mod runtime;
 pub mod select;
+pub mod service;
 #[allow(missing_docs)]
 pub mod train;
 #[allow(missing_docs)]

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use qless::config::cli::{parse_args, Cli, USAGE};
+use qless::config::cli::{parse_args, usage_for, Cli, USAGE};
 use qless::corpus::source_counts;
 use qless::eval::Benchmark;
 use qless::pipeline::{Method, Pipeline};
@@ -32,9 +32,13 @@ fn main() {
 fn dispatch(cli: &Cli) -> Result<()> {
     match cli.command.as_str() {
         "help" => {
-            println!("{USAGE}");
+            // `qless <cmd> --help` routes here with the command as the
+            // positional, so serve prints its own flag set
+            let topic = cli.positional.first().map(String::as_str).unwrap_or("");
+            println!("{}", usage_for(topic));
             Ok(())
         }
+        "serve" => serve(cli),
         "list-artifacts" => list_artifacts(cli),
         "gen-corpus" => gen_corpus(cli),
         "warmup" => {
@@ -74,6 +78,37 @@ fn dispatch(cli: &Cli) -> Result<()> {
         }
         other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
     }
+}
+
+/// `qless serve` — start the resident influence query service over the
+/// configured datastore and block until a client sends `shutdown`.
+fn serve(cli: &Cli) -> Result<()> {
+    let cfg = &cli.config;
+    let path = if cfg.datastore.is_empty() {
+        let p = Precision::new(cfg.bits, cfg.scheme)?;
+        qless::datastore::default_store_path(std::path::Path::new(&cfg.run_dir), p)
+    } else {
+        std::path::PathBuf::from(&cfg.datastore)
+    };
+    let server = qless::service::Server::start(&path, qless::service::ServeOpts::from_config(cfg))?;
+    let h = server.header();
+    println!(
+        "qless serve: listening on {} — {} samples × k={} × {} checkpoints at {} \
+         (generation {:#x}) from {}",
+        server.addr(),
+        h.n_samples,
+        h.k,
+        h.n_checkpoints,
+        h.precision.label(),
+        server.generation(),
+        path.display(),
+    );
+    println!(
+        "try: echo '{{\"op\":\"ping\",\"id\":1}}' | nc {} {}",
+        server.addr().ip(),
+        server.addr().port()
+    );
+    server.join()
 }
 
 fn list_artifacts(cli: &Cli) -> Result<()> {

@@ -324,9 +324,7 @@ impl Pipeline {
     /// Build (or reuse) the gradient datastore at a precision; returns the
     /// opened datastore + its measured size.
     pub fn build_datastore(&mut self, precision: Precision) -> Result<(Datastore, u64)> {
-        let path = self
-            .run_dir()
-            .join(format!("datastore_{}b_{}.qlds", precision.bits, precision.scheme));
+        let path = crate::datastore::default_store_path(&self.run_dir(), precision);
         if path.exists() {
             if let Ok(ds) = Datastore::open(&path) {
                 let bytes = ds.file_bytes();

@@ -35,6 +35,20 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
     idx
 }
 
+/// [`top_k_indices`] paired with each index's score — the serving layer's
+/// per-task response shape, where every query carries its own `k`.
+///
+/// ```
+/// use qless::select::top_k_scored;
+///
+/// let scores = [0.1, 0.9, -0.5];
+/// assert_eq!(top_k_scored(&scores, 2), vec![(1, 0.9), (0, 0.1)]);
+/// assert!(top_k_scored(&scores, 0).is_empty());
+/// ```
+pub fn top_k_scored(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    top_k_indices(scores, k).into_iter().map(|i| (i, scores[i])).collect()
+}
+
 /// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%),
 /// flooring at one sample for any non-empty input (`frac = 0.0` still
 /// selects the single best sample). Panics on `frac` outside `[0, 1]`.
@@ -59,6 +73,14 @@ mod tests {
     #[test]
     fn k_larger_than_n_is_clamped() {
         assert_eq!(top_k_indices(&[1.0, 2.0], 10), vec![1, 0]);
+    }
+
+    #[test]
+    fn scored_pairs_match_indices() {
+        let s = [0.3f32, 0.9, 0.9, -1.0];
+        assert_eq!(top_k_scored(&s, 3), vec![(1, 0.9), (2, 0.9), (0, 0.3)]);
+        assert_eq!(top_k_scored(&s, 99).len(), 4);
+        assert!(top_k_scored(&[], 5).is_empty());
     }
 
     #[test]

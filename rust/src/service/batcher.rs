@@ -1,0 +1,333 @@
+//! Micro-batching admission queue: concurrent score queries land in a
+//! bounded queue; a single scoring worker (which owns the [`Session`])
+//! coalesces everything that arrives within a configurable window into
+//! **one** fused pass over the datastore.
+//!
+//! The window starts when the worker sees the first pending query and
+//! closes after `window` elapses or `max_batch` queries are waiting,
+//! whichever comes first — so an idle service answers a lone query with at
+//! most `window` of added latency, while a burst of Q queries costs one
+//! datastore traversal instead of Q. A window of zero disables the wait
+//! (each batch is whatever queued while the previous one scored, so bursts
+//! still coalesce under load).
+//!
+//! One worker thread is deliberate: the fused scan already row-parallelizes
+//! on the crate's scan pool (`util::pool`), so a second concurrent scan
+//! would fight it for the same cores; serializing scans and batching
+//! admission is the throughput-optimal shape for this workload.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::session::{Answer, ScoreQuery, ServiceStats, Session};
+
+/// Outcome delivered to one submitted query: the answer, or the failure
+/// message of the batch it rode (stringly so it can be broadcast to every
+/// rider of a failed batch).
+pub type BatchResult = std::result::Result<Answer, String>;
+
+/// Tuning of the admission queue.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherOpts {
+    /// How long the worker holds the window open after the first pending
+    /// query, waiting for more to coalesce.
+    pub window: Duration,
+    /// Most queries fused into one batch (floored at 1).
+    pub max_batch: usize,
+    /// Most queries waiting in the queue before submissions are rejected
+    /// (backpressure; floored at 1).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherOpts {
+    fn default() -> BatcherOpts {
+        BatcherOpts { window: Duration::from_millis(2), max_batch: 16, queue_cap: 256 }
+    }
+}
+
+struct Job {
+    query: ScoreQuery,
+    reply: mpsc::Sender<BatchResult>,
+}
+
+struct QState {
+    queue: VecDeque<Job>,
+    open: bool,
+}
+
+struct Shared {
+    state: Mutex<QState>,
+    arrived: Condvar,
+}
+
+/// The admission queue plus its scoring worker (see the module docs).
+/// Dropping (or [`Batcher::close`]-ing) stops admissions, drains queued
+/// queries, and joins the worker.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    snapshot: Arc<Mutex<ServiceStats>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    queue_cap: usize,
+}
+
+impl Batcher {
+    /// Move `session` into a new scoring worker and open the queue.
+    pub fn new(session: Session, opts: BatcherOpts) -> Batcher {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QState { queue: VecDeque::new(), open: true }),
+            arrived: Condvar::new(),
+        });
+        let snapshot = Arc::new(Mutex::new(session.stats()));
+        let queue_cap = opts.queue_cap.max(1);
+        let worker = std::thread::Builder::new()
+            .name("qless-batcher".into())
+            .spawn({
+                let shared = Arc::clone(&shared);
+                let snapshot = Arc::clone(&snapshot);
+                move || worker_loop(shared, session, opts, snapshot)
+            })
+            .expect("spawning batcher worker");
+        Batcher { shared, snapshot, worker: Mutex::new(Some(worker)), queue_cap }
+    }
+
+    /// Enqueue one (already validated) query. Returns the channel its
+    /// [`BatchResult`] will arrive on, or an error when the queue is full
+    /// or the service is shutting down.
+    pub fn submit(&self, query: ScoreQuery) -> Result<mpsc::Receiver<BatchResult>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            if !st.open {
+                bail!("service is shutting down");
+            }
+            if st.queue.len() >= self.queue_cap {
+                bail!("admission queue full ({} queries waiting)", self.queue_cap);
+            }
+            st.queue.push_back(Job { query, reply: tx });
+        }
+        self.shared.arrived.notify_all();
+        Ok(rx)
+    }
+
+    /// The session's cumulative [`ServiceStats`], as of the end of the
+    /// most recently scored batch (the worker owns the live session, so
+    /// this is a snapshot, not a lock on the hot path).
+    pub fn stats(&self) -> ServiceStats {
+        *self.snapshot.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Stop admissions, let the worker drain every queued query, and join
+    /// it. Idempotent.
+    pub fn close(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.open = false;
+        }
+        self.shared.arrived.notify_all();
+        if let Some(h) = self.worker.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    mut session: Session,
+    opts: BatcherOpts,
+    snapshot: Arc<Mutex<ServiceStats>>,
+) {
+    let max_batch = opts.max_batch.max(1);
+    loop {
+        let batch: Vec<Job> = {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            // wait for the first pending query (or shutdown + empty queue)
+            loop {
+                if !st.queue.is_empty() {
+                    break;
+                }
+                if !st.open {
+                    return;
+                }
+                st = shared.arrived.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            // hold the admission window open for stragglers
+            let deadline = Instant::now() + opts.window;
+            while st.open && st.queue.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = shared
+                    .arrived
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = guard;
+            }
+            let take = st.queue.len().min(max_batch);
+            st.queue.drain(..take).collect()
+        };
+        let (queries, repliers): (Vec<ScoreQuery>, Vec<mpsc::Sender<BatchResult>>) =
+            batch.into_iter().map(|j| (j.query, j.reply)).unzip();
+        // panic isolation: a scoring panic must not kill the only scoring
+        // worker (queued + future queries would hang forever, wedging the
+        // whole server) — it becomes an error broadcast to this batch's
+        // riders, and the worker lives on
+        let result =
+            catch_unwind(AssertUnwindSafe(|| session.answer_batch(&queries)));
+        // publish stats before replying, so a client that just got its
+        // answer reads a snapshot that already includes its batch
+        *snapshot.lock().unwrap_or_else(|e| e.into_inner()) = session.stats();
+        match result {
+            Ok(Ok(answers)) => {
+                for (tx, ans) in repliers.iter().zip(answers) {
+                    let _ = tx.send(Ok(ans)); // receiver may have hung up
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                for tx in &repliers {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+            Err(payload) => {
+                let what = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".into());
+                let msg = format!("scoring worker panicked: {what}");
+                for tx in &repliers {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::DatastoreWriter;
+    use crate::grads::FeatureMatrix;
+    use crate::quant::{Precision, Scheme};
+    use crate::service::session::SessionOpts;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+    }
+
+    fn build_store(tag: &str, n: usize, k: usize) -> PathBuf {
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "qless_batcher_{tag}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        let f = feats(n, k, 0);
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        path
+    }
+
+    fn query(k: usize, seed: u64) -> ScoreQuery {
+        ScoreQuery { val: vec![feats(2, k, seed)] }
+    }
+
+    #[test]
+    fn wide_window_coalesces_a_burst_into_one_pass() {
+        let path = build_store("coalesce", 16, 64);
+        let session = Session::open(&path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(300), max_batch: 16, queue_cap: 64 },
+        );
+        // all three submitted well inside the 300ms window
+        let rxs: Vec<_> =
+            (0..3).map(|i| batcher.submit(query(64, 100 + i)).unwrap()).collect();
+        let answers: Vec<Answer> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        for a in &answers {
+            assert!(!a.cached);
+            assert_eq!(a.batched, 3, "burst must fuse into one pass");
+            assert_eq!(a.pass.tasks, 3);
+            assert_eq!(a.pass, answers[0].pass, "all riders share the pass");
+        }
+        let stats = batcher.stats();
+        assert_eq!(stats.fused_passes, 1);
+        assert_eq!(stats.queries, 3);
+        assert_eq!(stats.batches, 1);
+        batcher.close();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn max_batch_caps_a_batch() {
+        let path = build_store("cap", 12, 64);
+        let session = Session::open(&path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(300), max_batch: 2, queue_cap: 64 },
+        );
+        let rxs: Vec<_> =
+            (0..4).map(|i| batcher.submit(query(64, 200 + i)).unwrap()).collect();
+        for rx in rxs {
+            let a = rx.recv().unwrap().unwrap();
+            assert!(a.batched <= 2, "batched {} > max_batch", a.batched);
+        }
+        assert!(batcher.stats().batches >= 2);
+        batcher.close();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn closed_batcher_rejects_and_drains() {
+        let path = build_store("close", 8, 64);
+        let session = Session::open(&path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(50), max_batch: 8, queue_cap: 8 },
+        );
+        let rx = batcher.submit(query(64, 300)).unwrap();
+        batcher.close(); // drains the pending query before joining
+        assert!(rx.recv().unwrap().is_ok(), "queued query answered during drain");
+        assert!(batcher.submit(query(64, 301)).is_err(), "closed queue rejects");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn batch_errors_are_broadcast() {
+        let path = build_store("err", 8, 64);
+        let session = Session::open(&path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(100), max_batch: 8, queue_cap: 8 },
+        );
+        // wrong checkpoint count (the server normally validates before
+        // submit; the batcher must still fail cleanly, not panic)
+        let bad = ScoreQuery { val: vec![feats(2, 64, 1), feats(2, 64, 2)] };
+        let rx = batcher.submit(bad).unwrap();
+        let res = rx.recv().unwrap();
+        let msg = res.unwrap_err();
+        assert!(msg.contains("checkpoints"), "{msg}");
+        batcher.close();
+        std::fs::remove_file(path).ok();
+    }
+}

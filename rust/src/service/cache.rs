@@ -1,0 +1,221 @@
+//! Caches of the resident query service: a generic weight-budgeted LRU
+//! (used byte-budgeted for pinned datastore shards and entry-budgeted for
+//! score vectors) plus the task digest that keys the score cache.
+//!
+//! Both caches only ever hold `Arc`ed values, so a hit is a pointer clone —
+//! eviction can never invalidate a score another query is still holding.
+
+use std::collections::BTreeMap;
+
+use crate::grads::FeatureMatrix;
+
+/// A least-recently-used cache with a total *weight* budget.
+///
+/// Each entry carries a caller-supplied weight (bytes for shards, `1` for
+/// score-cache entries); inserting evicts least-recently-used entries until
+/// the total fits the budget again. The entry just inserted is never
+/// evicted by its own insertion — a single entry heavier than the whole
+/// budget stays resident (and alone) rather than thrashing. A budget of
+/// `0` disables the cache entirely (inserts are dropped, gets always miss).
+#[derive(Debug)]
+pub struct LruCache<K: Ord + Clone, V: Clone> {
+    map: BTreeMap<K, Entry<V>>,
+    /// Recency index: logical tick → key. Ticks are unique, so the first
+    /// entry is always the least recently used.
+    recency: BTreeMap<u64, K>,
+    tick: u64,
+    weight: usize,
+    budget: usize,
+}
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    weight: usize,
+    tick: u64,
+}
+
+impl<K: Ord + Clone, V: Clone> LruCache<K, V> {
+    /// Create a cache holding at most `budget` total weight.
+    pub fn new(budget: usize) -> LruCache<K, V> {
+        LruCache { map: BTreeMap::new(), recency: BTreeMap::new(), tick: 0, weight: 0, budget }
+    }
+
+    /// Look up `key`, marking it most recently used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        let (old_tick, value) = {
+            let e = self.map.get_mut(key)?;
+            self.tick += 1;
+            let old = e.tick;
+            e.tick = self.tick;
+            (old, e.value.clone())
+        };
+        self.recency.remove(&old_tick);
+        self.recency.insert(self.tick, key.clone());
+        Some(value)
+    }
+
+    /// Insert (or replace) `key` with the given weight, then evict
+    /// least-recently-used entries until the budget holds.
+    pub fn insert(&mut self, key: K, value: V, weight: usize) {
+        if self.budget == 0 {
+            return; // caching disabled
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.weight -= old.weight;
+            self.recency.remove(&old.tick);
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.recency.insert(tick, key.clone());
+        self.map.insert(key, Entry { value, weight, tick });
+        self.weight += weight;
+        while self.weight > self.budget && self.map.len() > 1 {
+            let lru_tick = *self.recency.keys().next().expect("recency tracks map");
+            if lru_tick == tick {
+                break; // never evict the entry this insert added
+            }
+            let lru_key = self.recency.remove(&lru_tick).expect("tick present");
+            if let Some(e) = self.map.remove(&lru_key) {
+                self.weight -= e.weight;
+            }
+        }
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total resident weight (bytes for the shard cache).
+    pub fn weight(&self) -> usize {
+        self.weight
+    }
+
+    /// The configured budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+}
+
+/// 64-bit FNV-1a over a byte slice, continuing from `h` (seed the first
+/// call with [`FNV_OFFSET`]).
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a offset basis.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Digest of one query's validation features: 64-bit FNV-1a over the
+/// per-checkpoint geometry and the exact f32 bit patterns. Two queries
+/// with the same digest are treated as identical by the score cache (and
+/// deduplicated within a batch); the 64-bit space makes an accidental
+/// collision vanishingly unlikely at service scale, and a collision's
+/// blast radius is one wrong (but well-formed) score vector, not memory
+/// unsafety.
+pub fn task_digest(val: &[FeatureMatrix]) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, &(val.len() as u64).to_le_bytes());
+    for m in val {
+        h = fnv1a(h, &(m.n as u64).to_le_bytes());
+        h = fnv1a(h, &(m.k as u64).to_le_bytes());
+        for &x in &m.data {
+            h = fnv1a(h, &x.to_bits().to_le_bytes());
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lru_hits_and_misses() {
+        let mut c: LruCache<u64, Arc<Vec<f32>>> = LruCache::new(10);
+        assert!(c.get(&1).is_none());
+        c.insert(1, Arc::new(vec![1.0]), 3);
+        c.insert(2, Arc::new(vec![2.0]), 3);
+        assert_eq!(c.get(&1).unwrap()[0], 1.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.weight(), 6);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_under_budget() {
+        let mut c: LruCache<u64, u64> = LruCache::new(3);
+        c.insert(1, 10, 1);
+        c.insert(2, 20, 1);
+        c.insert(3, 30, 1);
+        // touch 1 so 2 becomes the LRU
+        assert_eq!(c.get(&1), Some(10));
+        c.insert(4, 40, 1);
+        assert_eq!(c.get(&2), None, "LRU entry evicted");
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+        assert_eq!(c.get(&4), Some(40));
+        assert_eq!(c.weight(), 3);
+    }
+
+    #[test]
+    fn lru_keeps_oversized_newest_entry() {
+        let mut c: LruCache<u64, u64> = LruCache::new(5);
+        c.insert(1, 10, 2);
+        c.insert(2, 20, 100); // alone over budget: evicts 1, stays resident
+        assert_eq!(c.get(&1), None);
+        assert_eq!(c.get(&2), Some(20));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_replace_updates_weight() {
+        let mut c: LruCache<u64, u64> = LruCache::new(10);
+        c.insert(1, 10, 4);
+        c.insert(1, 11, 6);
+        assert_eq!(c.weight(), 6);
+        assert_eq!(c.get(&1), Some(11));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        let mut c: LruCache<u64, u64> = LruCache::new(0);
+        c.insert(1, 10, 1);
+        assert!(c.get(&1).is_none());
+        assert!(c.is_empty());
+        assert_eq!(c.budget(), 0);
+    }
+
+    #[test]
+    fn digest_sensitive_to_data_and_shape() {
+        let m = |n: usize, k: usize, seed: f32| FeatureMatrix {
+            n,
+            k,
+            data: (0..n * k).map(|i| seed + i as f32).collect(),
+        };
+        let a = vec![m(2, 4, 0.0), m(2, 4, 1.0)];
+        let b = vec![m(2, 4, 0.0), m(2, 4, 1.0)];
+        assert_eq!(task_digest(&a), task_digest(&b), "same features, same digest");
+        let mut c = vec![m(2, 4, 0.0), m(2, 4, 1.0)];
+        c[1].data[3] += 1e-6;
+        assert_ne!(task_digest(&a), task_digest(&c), "one-ulp-ish change flips digest");
+        // same flat data, different geometry
+        let d = vec![m(4, 2, 0.0), m(4, 2, 1.0)];
+        assert_ne!(task_digest(&a), task_digest(&d));
+        // 0.0 vs -0.0 have different bit patterns → different digests
+        let z0 = vec![FeatureMatrix { n: 1, k: 1, data: vec![0.0] }];
+        let z1 = vec![FeatureMatrix { n: 1, k: 1, data: vec![-0.0] }];
+        assert_ne!(task_digest(&z0), task_digest(&z1));
+    }
+}

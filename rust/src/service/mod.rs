@@ -1,0 +1,42 @@
+//! The resident influence query service (`qless serve`).
+//!
+//! The batch pipeline makes valuation *possible*; this layer makes it
+//! *cheap to ask again*. QLESS's economics (paper §3) are that once
+//! gradients are quantized into the datastore, scoring a new validation
+//! task is a scan, not a training run — but a scan that pays process
+//! startup, header validation and a cold streaming read per query still
+//! has the wrong marginal cost for a serving system (cf.
+//! compute-constrained selection, arXiv:2410.16208). This subsystem keeps
+//! everything warm and amortizes everything shareable:
+//!
+//! * [`session`] — the datastore opened **once**; recently-scanned shards
+//!   pinned in a byte-budgeted LRU (`--mem-budget-mb`) so repeat scans hit
+//!   RAM; a score cache keyed by (task digest, datastore generation) so
+//!   identical queries never rescan at all.
+//! * [`batcher`] — concurrent queries admitted to a bounded queue and
+//!   coalesced within `--batch-window-ms` (cap `--max-batch-tasks`) into
+//!   **one** fused multi-task pass — the PR-2 `score_datastore_tasks`
+//!   compute primitive, reached through the re-entrant
+//!   [`crate::influence::MultiScan`] so cached shards can feed it.
+//! * [`cache`] — the LRU + task-digest machinery both caches share.
+//! * [`proto`] — the JSON-lines wire format (spec in its rustdoc).
+//! * [`server`] — the std-only TCP front end (blocking accept loop +
+//!   `util::pool::TaskPool` handlers) and the [`Client`] the tests and the
+//!   load bench drive.
+//!
+//! Served scores are **bit-identical** to the one-shot `--multi-scan`
+//! pipeline: same kernels, same `RowsView` bytes (cached or streamed),
+//! same per-row accumulation order — `tests/service_e2e.rs` asserts it
+//! end-to-end over real sockets.
+
+pub mod batcher;
+pub mod cache;
+pub mod proto;
+pub mod server;
+pub mod session;
+
+pub use batcher::{Batcher, BatcherOpts};
+pub use cache::{task_digest, LruCache};
+pub use proto::{Request, Response, ScoreReply, ScoreRequest, StatsReply};
+pub use server::{Client, ServeOpts, Server};
+pub use session::{Answer, ScoreQuery, ServiceStats, Session, SessionOpts};

@@ -1,0 +1,624 @@
+//! Wire format of the influence query service: **JSON-lines over TCP**.
+//!
+//! Every request and every response is one JSON object on one
+//! `\n`-terminated line (no length prefixes, no binary framing, no
+//! dependencies beyond `std` + the crate's own `util::json`). A connection
+//! is a long-lived bidirectional stream: requests are answered in arrival
+//! order, so clients may pipeline.
+//!
+//! # Requests
+//!
+//! The `op` field selects the operation; `id` is an opaque client token
+//! echoed in the response (default 0; keep it `< 2^53` — it travels as a
+//! JSON number).
+//!
+//! ```text
+//! {"op":"score","id":1,"top_k":5,"scores":false,
+//!  "val":[{"n":2,"k":512,"data":[0.12,-0.7,...]},   ← checkpoint 0
+//!         {"n":2,"k":512,"data":[...]}]}            ← checkpoint 1
+//! {"op":"stats","id":2}
+//! {"op":"ping","id":3}
+//! {"op":"shutdown","id":4}
+//! ```
+//!
+//! A `score` request carries one feature matrix per warmup checkpoint of
+//! the served datastore (`val[ci]` is row-major `n × k` raw validation
+//! gradient features — the same per-task shape
+//! [`crate::influence::score_datastore_tasks`] takes; quantization to the
+//! store's precision happens server-side, mirroring QLESS §3.2). `top_k`
+//! asks for the k highest-scoring sample indices (per-request k, 0 = none);
+//! `"scores":true` additionally returns the full per-sample score vector.
+//! All feature values must be finite — JSON has no NaN/Inf, and the server
+//! re-validates on admission.
+//!
+//! # Responses
+//!
+//! Success responses carry `"ok":true` and echo the request kind in `re`;
+//! failures carry `"ok":false` and a human-readable `error` (with the
+//! request's `id` when it could be parsed, else 0):
+//!
+//! ```text
+//! {"id":1,"ok":true,"re":"score","generation":"0x9f3a...","cached":false,
+//!  "batched":3,
+//!  "pass":{"checkpoints":2,"tasks":3,"shards_read":14,"rows_read":96,"bytes_read":12480},
+//!  "top":[{"index":17,"score":0.4182},...],
+//!  "scores":[...]}                                  ← only when requested
+//! {"id":2,"ok":true,"re":"stats","generation":"0x9f3a...",
+//!  "n_samples":48,"k":512,"checkpoints":2,"bits":4,
+//!  "stats":{"queries":9,"batches":4,"fused_passes":2,"score_cache_hits":3,
+//!           "shard_cache_hits":14,"disk_shard_reads":14,
+//!           "shard_cache_bytes":16640,"rows_scored":192}}
+//! {"id":3,"ok":true,"re":"ping"}
+//! {"id":4,"ok":true,"re":"shutdown"}
+//! {"id":1,"ok":false,"error":"checkpoint 0: feature dim 64 != datastore k 512"}
+//! ```
+//!
+//! `generation` identifies the datastore build the session is pinned to
+//! (hex string — it is a full 64-bit digest, which a JSON number could not
+//! carry exactly); `cached` marks a score-cache hit; `batched` is the
+//! number of distinct tasks fused into the pass that produced the answer
+//! (0 on a cache hit); `pass` is that pass's
+//! [`ScanStats`] — every response of one
+//! micro-batch reports the *same* pass, which is how a client (or the e2e
+//! test) observes that a burst of Q queries cost one datastore traversal.
+//!
+//! Scores are f32 on the server; they travel as JSON numbers via f64,
+//! which is exact (every f32 is exactly representable as f64, and the
+//! encoder emits shortest-roundtrip decimal), so served scores compare
+//! bit-for-bit against an in-process scan.
+
+use anyhow::{bail, Result};
+
+use crate::grads::FeatureMatrix;
+use crate::influence::ScanStats;
+use crate::util::json::Json;
+
+use super::session::ServiceStats;
+
+/// A parsed client request (see the module docs for the wire shape).
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Score the corpus against one validation task.
+    Score(ScoreRequest),
+    /// Fetch cumulative service statistics.
+    Stats {
+        /// Client token echoed in the response.
+        id: u64,
+    },
+    /// Liveness probe.
+    Ping {
+        /// Client token echoed in the response.
+        id: u64,
+    },
+    /// Ask the server to stop accepting and drain.
+    Shutdown {
+        /// Client token echoed in the response.
+        id: u64,
+    },
+}
+
+impl Request {
+    /// The client token this request carries.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Score(r) => r.id,
+            Request::Stats { id } | Request::Ping { id } | Request::Shutdown { id } => *id,
+        }
+    }
+}
+
+/// The `score` op's payload: per-checkpoint raw validation features plus
+/// response-shaping knobs.
+#[derive(Debug, Clone)]
+pub struct ScoreRequest {
+    /// Client token echoed in the response.
+    pub id: u64,
+    /// Top-k entries to return (per-request k; 0 = none).
+    pub top_k: usize,
+    /// Return the full per-sample score vector too.
+    pub want_scores: bool,
+    /// One raw `n × k` feature matrix per warmup checkpoint, in order.
+    pub val: Vec<FeatureMatrix>,
+}
+
+/// The `score` op's success payload.
+#[derive(Debug, Clone)]
+pub struct ScoreReply {
+    /// Echoed client token.
+    pub id: u64,
+    /// Datastore generation the session is pinned to.
+    pub generation: u64,
+    /// True when answered from the score cache without a scan.
+    pub cached: bool,
+    /// Distinct tasks fused into the producing pass (0 on a cache hit).
+    pub batched: usize,
+    /// I/O accounting of the producing pass (zeroed on a cache hit).
+    pub pass: ScanStats,
+    /// The `top_k` highest-scoring `(sample index, score)` pairs.
+    pub top: Vec<(usize, f32)>,
+    /// Full per-sample scores, present iff the request set `"scores":true`.
+    pub scores: Option<Vec<f32>>,
+}
+
+/// The `stats` op's success payload: served-store geometry + cumulative
+/// [`ServiceStats`].
+#[derive(Debug, Clone)]
+pub struct StatsReply {
+    /// Echoed client token.
+    pub id: u64,
+    /// Datastore generation the session is pinned to.
+    pub generation: u64,
+    /// Sample rows per checkpoint block.
+    pub n_samples: usize,
+    /// Projection dimension of the served store.
+    pub k: usize,
+    /// Checkpoint blocks in the served store.
+    pub checkpoints: usize,
+    /// Storage bitwidth of the served store.
+    pub bits: u8,
+    /// Cumulative service accounting.
+    pub stats: ServiceStats,
+}
+
+/// A parsed server response (see the module docs for the wire shape).
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// Answer to a `score` request.
+    Score(ScoreReply),
+    /// Answer to a `stats` request.
+    Stats(StatsReply),
+    /// Answer to a `ping` request.
+    Pong {
+        /// Echoed client token.
+        id: u64,
+    },
+    /// Acknowledgement that the server is shutting down.
+    ShuttingDown {
+        /// Echoed client token.
+        id: u64,
+    },
+    /// Any failure: malformed line, unknown op, invalid query, scan error.
+    Error {
+        /// Echoed client token (0 when the request line was unparsable).
+        id: u64,
+        /// Human-readable cause.
+        error: String,
+    },
+}
+
+impl Response {
+    /// The client token this response echoes.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Score(r) => r.id,
+            Response::Stats(r) => r.id,
+            Response::Pong { id } | Response::ShuttingDown { id } => *id,
+            Response::Error { id, .. } => *id,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------------
+
+fn id_json(id: u64) -> Json {
+    Json::Num(id as f64)
+}
+
+fn gen_json(generation: u64) -> Json {
+    Json::Str(format!("{generation:#x}"))
+}
+
+fn f32s_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn matrix_json(m: &FeatureMatrix) -> Json {
+    let mut o = Json::obj();
+    o.set("n", m.n).set("k", m.k).set("data", f32s_json(&m.data));
+    o
+}
+
+fn scan_stats_json(s: &ScanStats) -> Json {
+    let mut o = Json::obj();
+    o.set("checkpoints", s.checkpoints)
+        .set("tasks", s.tasks)
+        .set("shards_read", s.shards_read)
+        .set("rows_read", s.rows_read as f64)
+        .set("bytes_read", s.bytes_read as f64);
+    o
+}
+
+fn service_stats_json(s: &ServiceStats) -> Json {
+    let mut o = Json::obj();
+    o.set("queries", s.queries as f64)
+        .set("batches", s.batches as f64)
+        .set("fused_passes", s.fused_passes as f64)
+        .set("score_cache_hits", s.score_cache_hits as f64)
+        .set("shard_cache_hits", s.shard_cache_hits as f64)
+        .set("disk_shard_reads", s.disk_shard_reads as f64)
+        .set("shard_cache_bytes", s.shard_cache_bytes as f64)
+        .set("rows_scored", s.rows_scored as f64);
+    o
+}
+
+/// Encode a request as one wire line (no trailing newline).
+pub fn encode_request(req: &Request) -> String {
+    let mut o = Json::obj();
+    match req {
+        Request::Score(r) => {
+            o.set("op", "score").set("id", id_json(r.id)).set("top_k", r.top_k);
+            if r.want_scores {
+                o.set("scores", true);
+            }
+            o.set("val", Json::Arr(r.val.iter().map(matrix_json).collect()));
+        }
+        Request::Stats { id } => {
+            o.set("op", "stats").set("id", id_json(*id));
+        }
+        Request::Ping { id } => {
+            o.set("op", "ping").set("id", id_json(*id));
+        }
+        Request::Shutdown { id } => {
+            o.set("op", "shutdown").set("id", id_json(*id));
+        }
+    }
+    o.encode()
+}
+
+/// Encode a response as one wire line (no trailing newline).
+pub fn encode_response(resp: &Response) -> String {
+    let mut o = Json::obj();
+    match resp {
+        Response::Score(r) => {
+            o.set("id", id_json(r.id))
+                .set("ok", true)
+                .set("re", "score")
+                .set("generation", gen_json(r.generation))
+                .set("cached", r.cached)
+                .set("batched", r.batched)
+                .set("pass", scan_stats_json(&r.pass));
+            let top: Vec<Json> = r
+                .top
+                .iter()
+                .map(|&(i, s)| {
+                    let mut e = Json::obj();
+                    e.set("index", i).set("score", s as f64);
+                    e
+                })
+                .collect();
+            o.set("top", Json::Arr(top));
+            if let Some(scores) = &r.scores {
+                o.set("scores", f32s_json(scores));
+            }
+        }
+        Response::Stats(r) => {
+            o.set("id", id_json(r.id))
+                .set("ok", true)
+                .set("re", "stats")
+                .set("generation", gen_json(r.generation))
+                .set("n_samples", r.n_samples)
+                .set("k", r.k)
+                .set("checkpoints", r.checkpoints)
+                .set("bits", r.bits as usize)
+                .set("stats", service_stats_json(&r.stats));
+        }
+        Response::Pong { id } => {
+            o.set("id", id_json(*id)).set("ok", true).set("re", "ping");
+        }
+        Response::ShuttingDown { id } => {
+            o.set("id", id_json(*id)).set("ok", true).set("re", "shutdown");
+        }
+        Response::Error { id, error } => {
+            o.set("id", id_json(*id)).set("ok", false).set("error", error.as_str());
+        }
+    }
+    o.encode()
+}
+
+// ---------------------------------------------------------------------------
+// parse
+// ---------------------------------------------------------------------------
+
+fn parse_id(j: &Json) -> u64 {
+    j.get("id").and_then(|v| v.as_f64().ok()).map(|f| f as u64).unwrap_or(0)
+}
+
+fn parse_gen(j: &Json, key: &str) -> Result<u64> {
+    let s = j.req(key)?.as_str()?;
+    let hex = s.strip_prefix("0x").unwrap_or(s);
+    Ok(u64::from_str_radix(hex, 16)?)
+}
+
+fn parse_f32s(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?.iter().map(|v| Ok(v.as_f64()? as f32)).collect()
+}
+
+fn parse_matrix(j: &Json) -> Result<FeatureMatrix> {
+    let n = j.req("n")?.as_usize()?;
+    let k = j.req("k")?.as_usize()?;
+    let data = parse_f32s(j.req("data")?)?;
+    Ok(FeatureMatrix { n, k, data })
+}
+
+fn parse_scan_stats(j: &Json) -> Result<ScanStats> {
+    Ok(ScanStats {
+        checkpoints: j.req("checkpoints")?.as_usize()?,
+        tasks: j.req("tasks")?.as_usize()?,
+        shards_read: j.req("shards_read")?.as_usize()?,
+        rows_read: j.req("rows_read")?.as_f64()? as u64,
+        bytes_read: j.req("bytes_read")?.as_f64()? as u64,
+    })
+}
+
+fn parse_service_stats(j: &Json) -> Result<ServiceStats> {
+    let u = |key: &str| -> Result<u64> { Ok(j.req(key)?.as_f64()? as u64) };
+    Ok(ServiceStats {
+        queries: u("queries")?,
+        batches: u("batches")?,
+        fused_passes: u("fused_passes")?,
+        score_cache_hits: u("score_cache_hits")?,
+        shard_cache_hits: u("shard_cache_hits")?,
+        disk_shard_reads: u("disk_shard_reads")?,
+        shard_cache_bytes: u("shard_cache_bytes")?,
+        rows_scored: u("rows_scored")?,
+    })
+}
+
+/// The `id` of a (possibly malformed) request line, for error responses —
+/// 0 when the line is not even parsable JSON.
+pub fn salvage_id(line: &str) -> u64 {
+    Json::parse(line.trim()).map(|j| parse_id(&j)).unwrap_or(0)
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line.trim())?;
+    let op = j.req("op")?.as_str()?.to_string();
+    let id = parse_id(&j);
+    match op.as_str() {
+        "score" => {
+            let top_k = match j.get("top_k") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            };
+            let want_scores = match j.get("scores") {
+                Some(Json::Bool(b)) => *b,
+                None => false,
+                Some(other) => bail!("'scores' must be a bool, got {other:?}"),
+            };
+            let val = j
+                .req("val")?
+                .as_arr()?
+                .iter()
+                .map(parse_matrix)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Request::Score(ScoreRequest { id, top_k, want_scores, val }))
+        }
+        "stats" => Ok(Request::Stats { id }),
+        "ping" => Ok(Request::Ping { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        other => bail!("unknown op '{other}' (expected score|stats|ping|shutdown)"),
+    }
+}
+
+/// Parse one response line.
+pub fn parse_response(line: &str) -> Result<Response> {
+    let j = Json::parse(line.trim())?;
+    let id = parse_id(&j);
+    let ok = match j.req("ok")? {
+        Json::Bool(b) => *b,
+        other => bail!("'ok' must be a bool, got {other:?}"),
+    };
+    if !ok {
+        let error = j.req("error")?.as_str()?.to_string();
+        return Ok(Response::Error { id, error });
+    }
+    let re = j.req("re")?.as_str()?.to_string();
+    match re.as_str() {
+        "score" => {
+            let cached = match j.req("cached")? {
+                Json::Bool(b) => *b,
+                other => bail!("'cached' must be a bool, got {other:?}"),
+            };
+            let top = j
+                .req("top")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok((e.req("index")?.as_usize()?, e.req("score")?.as_f64()? as f32))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let scores = match j.get("scores") {
+                Some(v) => Some(parse_f32s(v)?),
+                None => None,
+            };
+            Ok(Response::Score(ScoreReply {
+                id,
+                generation: parse_gen(&j, "generation")?,
+                cached,
+                batched: j.req("batched")?.as_usize()?,
+                pass: parse_scan_stats(j.req("pass")?)?,
+                top,
+                scores,
+            }))
+        }
+        "stats" => Ok(Response::Stats(StatsReply {
+            id,
+            generation: parse_gen(&j, "generation")?,
+            n_samples: j.req("n_samples")?.as_usize()?,
+            k: j.req("k")?.as_usize()?,
+            checkpoints: j.req("checkpoints")?.as_usize()?,
+            bits: j.req("bits")?.as_usize()? as u8,
+            stats: parse_service_stats(j.req("stats")?)?,
+        })),
+        "ping" => Ok(Response::Pong { id }),
+        "shutdown" => Ok(Response::ShuttingDown { id }),
+        other => bail!("unknown response kind '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mat(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+    }
+
+    #[test]
+    fn score_request_roundtrips_exactly() {
+        let req = Request::Score(ScoreRequest {
+            id: 42,
+            top_k: 7,
+            want_scores: true,
+            val: vec![mat(2, 8, 1), mat(3, 8, 2)],
+        });
+        let line = encode_request(&req);
+        assert!(!line.contains('\n'), "one line");
+        let back = parse_request(&line).unwrap();
+        match back {
+            Request::Score(r) => {
+                assert_eq!(r.id, 42);
+                assert_eq!(r.top_k, 7);
+                assert!(r.want_scores);
+                assert_eq!(r.val.len(), 2);
+                match &req {
+                    Request::Score(orig) => {
+                        for (a, b) in orig.val.iter().zip(&r.val) {
+                            assert_eq!(a.n, b.n);
+                            assert_eq!(a.k, b.k);
+                            // f32 → JSON → f32 must be bit-exact
+                            for (x, y) in a.data.iter().zip(&b.data) {
+                                assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+                            }
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_requests_roundtrip() {
+        for (req, want_op) in [
+            (Request::Stats { id: 1 }, "stats"),
+            (Request::Ping { id: 2 }, "ping"),
+            (Request::Shutdown { id: 3 }, "shutdown"),
+        ] {
+            let line = encode_request(&req);
+            assert!(line.contains(want_op));
+            let back = parse_request(&line).unwrap();
+            assert_eq!(back.id(), req.id());
+        }
+    }
+
+    #[test]
+    fn score_response_roundtrips_exactly() {
+        let scores: Vec<f32> = (0..9).map(|i| (i as f32 - 4.2) / 3.7).collect();
+        let resp = Response::Score(ScoreReply {
+            id: 5,
+            generation: 0xdead_beef_0042_1337,
+            cached: false,
+            batched: 3,
+            pass: ScanStats {
+                checkpoints: 2,
+                tasks: 3,
+                shards_read: 14,
+                rows_read: 96,
+                bytes_read: 12_480,
+            },
+            top: vec![(7, scores[7]), (0, scores[0])],
+            scores: Some(scores.clone()),
+        });
+        let line = encode_response(&resp);
+        match parse_response(&line).unwrap() {
+            Response::Score(r) => {
+                assert_eq!(r.id, 5);
+                assert_eq!(r.generation, 0xdead_beef_0042_1337);
+                assert!(!r.cached);
+                assert_eq!(r.batched, 3);
+                assert_eq!(r.pass.shards_read, 14);
+                assert_eq!(r.pass.rows_read, 96);
+                assert_eq!(r.top, vec![(7, scores[7]), (0, scores[0])]);
+                let got = r.scores.unwrap();
+                for (x, y) in scores.iter().zip(&got) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_pong_error_roundtrip() {
+        let stats = ServiceStats {
+            queries: 9,
+            batches: 4,
+            fused_passes: 2,
+            score_cache_hits: 3,
+            shard_cache_hits: 14,
+            disk_shard_reads: 14,
+            shard_cache_bytes: 16_640,
+            rows_scored: 192,
+        };
+        let resp = Response::Stats(StatsReply {
+            id: 2,
+            generation: 0x1,
+            n_samples: 48,
+            k: 512,
+            checkpoints: 2,
+            bits: 4,
+            stats,
+        });
+        match parse_response(&encode_response(&resp)).unwrap() {
+            Response::Stats(r) => {
+                assert_eq!(r.stats, stats);
+                assert_eq!(r.bits, 4);
+                assert_eq!(r.n_samples, 48);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        match parse_response(&encode_response(&Response::Pong { id: 3 })).unwrap() {
+            Response::Pong { id } => assert_eq!(id, 3),
+            other => panic!("wrong variant {other:?}"),
+        }
+        let err = Response::Error { id: 7, error: "bad \"query\"\nline".into() };
+        match parse_response(&encode_response(&err)).unwrap() {
+            Response::Error { id, error } => {
+                assert_eq!(id, 7);
+                assert_eq!(error, "bad \"query\"\nline");
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_lines_rejected_with_salvaged_id() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{\"op\":\"conquer\"}").is_err());
+        assert!(parse_request("{\"id\":1}").is_err()); // no op
+        assert!(parse_response("{\"id\":1}").is_err()); // no ok
+        assert_eq!(salvage_id("garbage"), 0);
+        assert_eq!(salvage_id("{\"id\":31,\"op\":\"?\"}"), 31);
+    }
+
+    #[test]
+    fn score_request_defaults() {
+        let line = "{\"op\":\"score\",\"val\":[{\"n\":1,\"k\":2,\"data\":[0.5,1]}]}";
+        match parse_request(line).unwrap() {
+            Request::Score(r) => {
+                assert_eq!(r.id, 0);
+                assert_eq!(r.top_k, 0);
+                assert!(!r.want_scores);
+                assert_eq!(r.val[0].data, vec![0.5, 1.0]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+}

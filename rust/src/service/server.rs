@@ -1,0 +1,577 @@
+//! The std-only TCP front end (`qless serve`) and its line client.
+//!
+//! Request lifecycle: **accept → admit → coalesce → fused scan → top-k →
+//! respond.** A blocking accept loop hands each connection to a
+//! fixed-size handler pool (`util::pool::TaskPool`, bounded queue =
+//! accept-loop backpressure); handlers parse JSON lines (`proto`),
+//! validate score queries against the served store's geometry, and admit
+//! them to the [`Batcher`], which coalesces concurrent queries into fused
+//! [`crate::influence::MultiScan`] passes over the warm [`Session`].
+//! Responses go back in request order per connection, so clients may
+//! pipeline.
+//!
+//! Shutdown (a `shutdown` request or [`Server::stop`]) is cooperative and
+//! bounded: the accept loop exits on its next wakeup, handlers poll the
+//! shutdown flag between 200ms read timeouts, and the batcher drains
+//! queued queries before joining — no request that got a queue slot is
+//! dropped.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::datastore::Header;
+use crate::grads::FeatureMatrix;
+use crate::select::top_k_scored;
+use crate::util::pool::TaskPool;
+use crate::{info, warn_};
+
+use super::batcher::{Batcher, BatcherOpts};
+use super::proto::{self, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+use super::session::{ScoreQuery, ServiceStats, Session, SessionOpts};
+
+/// Tuning of `qless serve`. CLI flags map 1:1 onto the config fields
+/// [`ServeOpts::from_config`] reads.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Bind address, `host:port` (port 0 = kernel-assigned ephemeral).
+    pub addr: String,
+    /// Micro-batch admission window in milliseconds (see `batcher`).
+    pub batch_window_ms: u64,
+    /// Most validation tasks fused into one scan pass.
+    pub max_batch_tasks: usize,
+    /// Fixed rows per scan shard; 0 = derive from `mem_budget_mb`.
+    pub shard_rows: usize,
+    /// Shard-cache budget in MiB (also bounds the streaming shard size).
+    pub mem_budget_mb: usize,
+    /// Score-cache capacity in entries; 0 disables.
+    pub score_cache_entries: usize,
+    /// Connection-handler threads (= max concurrent connections served;
+    /// further connections queue on the handler pool).
+    pub workers: usize,
+    /// Bound of the admission queue and the handler-pool queue.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            addr: "127.0.0.1:7411".into(),
+            batch_window_ms: 2,
+            max_batch_tasks: 16,
+            shard_rows: 0,
+            mem_budget_mb: crate::config::DEFAULT_MEM_BUDGET_MB,
+            score_cache_entries: 64,
+            workers: 8,
+            queue_cap: 256,
+        }
+    }
+}
+
+impl ServeOpts {
+    /// Build serve options from the CLI-facing [`crate::config::Config`].
+    pub fn from_config(cfg: &crate::config::Config) -> ServeOpts {
+        ServeOpts {
+            addr: cfg.serve_addr.clone(),
+            batch_window_ms: cfg.batch_window_ms,
+            max_batch_tasks: cfg.max_batch_tasks,
+            shard_rows: cfg.shard_rows,
+            mem_budget_mb: cfg.mem_budget_mb,
+            score_cache_entries: cfg.score_cache_entries,
+            workers: cfg.workers,
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Everything a connection handler needs, shared behind one `Arc`.
+struct Ctx {
+    batcher: Batcher,
+    header: Header,
+    generation: u64,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// Set the shutdown flag and nudge the (blocking) accept loop awake with a
+/// throwaway connection. Idempotent. An unspecified bind IP (0.0.0.0 / ::)
+/// is not connectable, so the nudge aims at loopback on the same port;
+/// should the connect fail anyway (fd exhaustion), the flag still ends the
+/// loop on the next real connection.
+fn trigger_shutdown(ctx: &Ctx) {
+    ctx.shutdown.store(true, Ordering::SeqCst);
+    let mut target = ctx.addr;
+    if target.ip().is_unspecified() {
+        let loopback: std::net::IpAddr = if target.is_ipv4() {
+            std::net::Ipv4Addr::LOCALHOST.into()
+        } else {
+            std::net::Ipv6Addr::LOCALHOST.into()
+        };
+        target.set_ip(loopback);
+    }
+    let _ = TcpStream::connect(target);
+}
+
+/// A running `qless serve` instance. Dropping it (or calling
+/// [`Server::stop`] then [`Server::join`]) shuts the whole stack down
+/// deterministically.
+pub struct Server {
+    ctx: Arc<Ctx>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Open `datastore` into a warm [`Session`], bind the listener, and
+    /// start the accept loop + handler pool + batcher worker.
+    pub fn start(datastore: &Path, opts: ServeOpts) -> Result<Server> {
+        let session = Session::open(
+            datastore,
+            SessionOpts {
+                shard_rows: opts.shard_rows,
+                mem_budget_mb: opts.mem_budget_mb,
+                score_cache_entries: opts.score_cache_entries,
+            },
+        )?;
+        let header = *session.header();
+        let generation = session.generation();
+        let listener = TcpListener::bind(opts.addr.as_str())
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts {
+                window: Duration::from_millis(opts.batch_window_ms),
+                max_batch: opts.max_batch_tasks,
+                queue_cap: opts.queue_cap,
+            },
+        );
+        let ctx = Arc::new(Ctx {
+            batcher,
+            header,
+            generation,
+            shutdown: AtomicBool::new(false),
+            addr,
+        });
+        let pool = TaskPool::new("qless-conn", opts.workers, opts.queue_cap);
+        info!(
+            "serve: listening on {addr} ({} handler threads, window {}ms, max batch {})",
+            pool.workers(),
+            opts.batch_window_ms,
+            opts.max_batch_tasks
+        );
+        let accept = std::thread::Builder::new()
+            .name("qless-accept".into())
+            .spawn({
+                let ctx = Arc::clone(&ctx);
+                move || {
+                    for conn in listener.incoming() {
+                        if ctx.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match conn {
+                            Ok(stream) => {
+                                let ctx = Arc::clone(&ctx);
+                                if pool.execute(move || handle_conn(stream, ctx)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(e) => warn_!("accept error: {e}"),
+                        }
+                    }
+                    // joins handlers (they exit ≤ one read-timeout after
+                    // the flag), then drains + joins the batcher
+                    drop(pool);
+                    ctx.batcher.close();
+                }
+            })
+            .expect("spawning accept thread");
+        Ok(Server { ctx, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.ctx.addr
+    }
+
+    /// The served store's header.
+    pub fn header(&self) -> &Header {
+        &self.ctx.header
+    }
+
+    /// The served store's generation digest.
+    pub fn generation(&self) -> u64 {
+        self.ctx.generation
+    }
+
+    /// Cumulative service statistics (snapshot as of the last batch).
+    pub fn stats(&self) -> ServiceStats {
+        self.ctx.batcher.stats()
+    }
+
+    /// Begin shutdown without blocking (the wire `shutdown` op calls the
+    /// same path). Use [`Server::join`] to wait for completion.
+    pub fn stop(&self) {
+        trigger_shutdown(&self.ctx);
+    }
+
+    /// Block until the server has fully shut down (accept loop exited,
+    /// handlers joined, batcher drained).
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        trigger_shutdown(&self.ctx);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Most bytes one request line may hold — far above any sane query (a
+/// paper-scale k = 8192 task with 32 val rows per checkpoint × 4
+/// checkpoints is ~20 MB of JSON), but it bounds what one connection can
+/// make the resident server buffer.
+const MAX_LINE_BYTES: usize = 64 << 20;
+
+/// Serve one connection: JSON-lines request/response until EOF, a fatal
+/// I/O error, or shutdown. Read timeouts bound how long a quiet keep-alive
+/// connection can delay shutdown; a partial line survives timeouts intact;
+/// a line over [`MAX_LINE_BYTES`] gets an error response and the
+/// connection is dropped (there is no way to resync mid-line).
+fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        // cap the total line length across timeout retries: the +1 lets an
+        // oversized line be detected as > MAX rather than silently clipped
+        let budget = (MAX_LINE_BYTES + 1).saturating_sub(line.len()) as u64;
+        match (&mut reader).take(budget).read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                if line.len() > MAX_LINE_BYTES {
+                    let resp = Response::Error {
+                        id: 0,
+                        error: format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                    };
+                    let mut out = proto::encode_response(&resp);
+                    out.push('\n');
+                    let _ = writer.write_all(out.as_bytes());
+                    let _ = writer.flush();
+                    return;
+                }
+                // under the cap, a missing trailing newline means EOF —
+                // serve this final request, then close
+                let eof = !line.ends_with('\n');
+                if !line.trim().is_empty() {
+                    let resp = handle_line(&line, &ctx);
+                    let shutting_down = matches!(resp, Response::ShuttingDown { .. });
+                    let mut out = proto::encode_response(&resp);
+                    out.push('\n');
+                    if writer.write_all(out.as_bytes()).is_err() || writer.flush().is_err() {
+                        return;
+                    }
+                    if shutting_down {
+                        trigger_shutdown(&ctx);
+                        return;
+                    }
+                }
+                if eof {
+                    return;
+                }
+                line.clear();
+                // re-check after every served request too: a continuously
+                // active connection must not stall shutdown past one request
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // idle poll: any bytes read before the timeout stay in
+                // `line` and the next read continues the same request
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one request line to a response (never panics; every failure
+/// becomes an error response).
+fn handle_line(line: &str, ctx: &Ctx) -> Response {
+    let req = match proto::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return Response::Error {
+                id: proto::salvage_id(line),
+                error: format!("bad request: {e:#}"),
+            }
+        }
+    };
+    match req {
+        Request::Ping { id } => Response::Pong { id },
+        Request::Shutdown { id } => Response::ShuttingDown { id },
+        Request::Stats { id } => Response::Stats(StatsReply {
+            id,
+            generation: ctx.generation,
+            n_samples: ctx.header.n_samples as usize,
+            k: ctx.header.k as usize,
+            checkpoints: ctx.header.n_checkpoints as usize,
+            bits: ctx.header.precision.bits,
+            stats: ctx.batcher.stats(),
+        }),
+        Request::Score(r) => handle_score(r, ctx),
+    }
+}
+
+fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
+    let query = ScoreQuery { val: req.val };
+    if let Err(e) = query.validate(&ctx.header) {
+        return Response::Error { id: req.id, error: format!("invalid query: {e:#}") };
+    }
+    let rx = match ctx.batcher.submit(query) {
+        Ok(rx) => rx,
+        Err(e) => return Response::Error { id: req.id, error: format!("{e:#}") },
+    };
+    match rx.recv() {
+        Ok(Ok(ans)) => Response::Score(ScoreReply {
+            id: req.id,
+            generation: ctx.generation,
+            cached: ans.cached,
+            batched: ans.batched,
+            pass: ans.pass,
+            top: top_k_scored(&ans.scores, req.top_k),
+            scores: if req.want_scores { Some(ans.scores.as_ref().clone()) } else { None },
+        }),
+        Ok(Err(msg)) => Response::Error { id: req.id, error: msg },
+        Err(_) => Response::Error { id: req.id, error: "scoring worker unavailable".into() },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// A blocking JSON-lines client for the service — used by the e2e tests,
+/// the load-generator bench, and scriptable from anything that can speak
+/// the wire format in `proto`.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to a running server.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to qless serve")?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream, next_id: 0 })
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let mut line = proto::encode_request(req);
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        if self.reader.read_line(&mut resp)? == 0 {
+            bail!("server closed the connection");
+        }
+        proto::parse_response(&resp)
+    }
+
+    /// Score one validation task (raw per-checkpoint features); ask for
+    /// `top_k` ranked indices and optionally the full score vector.
+    pub fn score(
+        &mut self,
+        val: &[FeatureMatrix],
+        top_k: usize,
+        want_scores: bool,
+    ) -> Result<ScoreReply> {
+        let id = self.bump();
+        let req =
+            Request::Score(ScoreRequest { id, top_k, want_scores, val: val.to_vec() });
+        match self.roundtrip(&req)? {
+            Response::Score(r) => {
+                anyhow::ensure!(r.id == id, "response id {} for request {id}", r.id);
+                Ok(r)
+            }
+            Response::Error { error, .. } => bail!("server error: {error}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the service's cumulative statistics.
+    pub fn stats(&mut self) -> Result<StatsReply> {
+        let id = self.bump();
+        match self.roundtrip(&Request::Stats { id })? {
+            Response::Stats(r) => Ok(r),
+            Response::Error { error, .. } => bail!("server error: {error}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.bump();
+        match self.roundtrip(&Request::Ping { id })? {
+            Response::Pong { .. } => Ok(()),
+            Response::Error { error, .. } => bail!("server error: {error}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the server to shut down (acknowledged before it begins).
+    pub fn shutdown(&mut self) -> Result<()> {
+        let id = self.bump();
+        match self.roundtrip(&Request::Shutdown { id })? {
+            Response::ShuttingDown { .. } => Ok(()),
+            Response::Error { error, .. } => bail!("server error: {error}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Send one raw line (malformed-input testing); returns the raw
+    /// response line.
+    pub fn raw_roundtrip(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        if self.reader.read_line(&mut resp)? == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::DatastoreWriter;
+    use crate::quant::{Precision, Scheme};
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+    }
+
+    fn build_store(tag: &str, n: usize, k: usize, ckpts: usize) -> PathBuf {
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "qless_server_{tag}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut w = DatastoreWriter::create(&path, p, n, k, ckpts).unwrap();
+        for ci in 0..ckpts {
+            w.begin_checkpoint(0.5).unwrap();
+            let f = feats(n, k, ci as u64);
+            for i in 0..n {
+                w.append_features(f.row(i)).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+        }
+        w.finalize().unwrap();
+        path
+    }
+
+    fn ephemeral_opts() -> ServeOpts {
+        ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 0,
+            workers: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serve_score_stats_ping_shutdown() {
+        let (n, k) = (16usize, 64usize);
+        let path = build_store("basic", n, k, 1);
+        let server = Server::start(&path, ephemeral_opts()).unwrap();
+        let addr = server.addr();
+        let mut c = Client::connect(addr).unwrap();
+        c.ping().unwrap();
+        let st = c.stats().unwrap();
+        assert_eq!(st.n_samples, n);
+        assert_eq!(st.k, k);
+        assert_eq!(st.checkpoints, 1);
+        assert_eq!(st.bits, 4);
+        assert_eq!(st.generation, server.generation());
+        let val = vec![feats(2, k, 9)];
+        let r = c.score(&val, 3, true).unwrap();
+        assert_eq!(r.top.len(), 3);
+        let scores = r.scores.unwrap();
+        assert_eq!(scores.len(), n);
+        // the top list is consistent with the full vector
+        assert_eq!(r.top, crate::select::top_k_scored(&scores, 3));
+        // same task again: score-cache hit
+        let r2 = c.score(&val, 3, false).unwrap();
+        assert!(r2.cached);
+        assert!(r2.scores.is_none());
+        assert_eq!(r2.top, r.top);
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn serve_rejects_bad_lines_and_bad_queries() {
+        let path = build_store("reject", 8, 64, 1);
+        let server = Server::start(&path, ephemeral_opts()).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        // malformed JSON → error response, connection stays usable
+        let raw = c.raw_roundtrip("this is not json").unwrap();
+        assert!(raw.contains("\"ok\":false"), "{raw}");
+        // wrong feature dimension → validation error with the request id
+        let bad = vec![feats(2, 32, 1)];
+        let err = c.score(&bad, 0, false).unwrap_err();
+        assert!(format!("{err:#}").contains("feature dim"), "{err:#}");
+        // still alive
+        c.ping().unwrap();
+        server.stop();
+        server.join().unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn drop_shuts_down_without_client_shutdown() {
+        let path = build_store("drop", 8, 64, 1);
+        let server = Server::start(&path, ephemeral_opts()).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        c.ping().unwrap();
+        drop(server); // must not hang despite the live keep-alive client
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,512 @@
+//! The resident influence session: one datastore opened (and validated)
+//! once, per-checkpoint η weights read once, recently-scanned shards
+//! pinned in a byte-budgeted LRU cache so repeat scans hit RAM instead of
+//! disk, and a score cache keyed by (task digest, datastore generation) so
+//! identical queries never rescan at all.
+//!
+//! [`Session::answer_batch`] is the serving hot path: resolve score-cache
+//! hits, deduplicate identical queries within the batch, then run **one**
+//! fused [`MultiScan`] pass over the store for every distinct uncached
+//! task. Shards come from the cache when pinned and from
+//! `ShardReader::seek_to_row` random-access reads when not; either way the
+//! scoring kernels see the same [`crate::datastore::RowsView`] bytes, so
+//! served scores are bit-identical to the one-shot `--multi-scan` pipeline
+//! (`influence::score_datastore_tasks`), which the e2e suite asserts.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::datastore::{Datastore, Header, OwnedShard};
+use crate::grads::FeatureMatrix;
+use crate::influence::{MultiScan, ScanStats};
+use crate::info;
+
+use super::cache::{fnv1a, task_digest, LruCache, FNV_OFFSET};
+
+/// Knobs of a resident session (a subset of `ServeOpts`, usable without
+/// the TCP front end — tests and the in-process path build these directly).
+#[derive(Debug, Clone, Copy)]
+pub struct SessionOpts {
+    /// Fixed rows per shard; 0 = derive from `mem_budget_mb`.
+    pub shard_rows: usize,
+    /// Shard-cache byte budget in MiB; also bounds the scan's streaming
+    /// shard size (the same contract as the batch pipeline's
+    /// `--mem-budget-mb`, so peak residency is ≈ 2× this: one streaming
+    /// buffer + the pinned cache).
+    pub mem_budget_mb: usize,
+    /// Score-cache capacity in entries (each entry is one `n`-float score
+    /// vector); 0 disables score caching.
+    pub score_cache_entries: usize,
+}
+
+impl Default for SessionOpts {
+    fn default() -> SessionOpts {
+        SessionOpts {
+            shard_rows: 0,
+            mem_budget_mb: crate::config::DEFAULT_MEM_BUDGET_MB,
+            score_cache_entries: 64,
+        }
+    }
+}
+
+/// Cumulative accounting of a session — the payload of the wire `stats`
+/// op. Cache-efficacy counters are the interesting part: a warm repeat
+/// query moves `score_cache_hits` (or `shard_cache_hits`) without moving
+/// `disk_shard_reads`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Score queries answered (including cache hits).
+    pub queries: u64,
+    /// `answer_batch` calls (micro-batches admitted).
+    pub batches: u64,
+    /// Fused datastore passes executed (≤ batches; 0-miss batches skip it).
+    pub fused_passes: u64,
+    /// Queries answered from the score cache without any scan.
+    pub score_cache_hits: u64,
+    /// Shards served from the RAM cache during scans.
+    pub shard_cache_hits: u64,
+    /// Shards read from the datastore file (cold misses).
+    pub disk_shard_reads: u64,
+    /// Bytes currently pinned by the shard cache.
+    pub shard_cache_bytes: u64,
+    /// Rows scored across all fused passes.
+    pub rows_scored: u64,
+}
+
+/// One influence query: raw (unquantized) validation gradient features per
+/// warmup checkpoint, in checkpoint order — exactly the per-task shape
+/// [`crate::influence::score_datastore_tasks`] takes.
+#[derive(Debug, Clone)]
+pub struct ScoreQuery {
+    /// One feature matrix per checkpoint (`val[ci]` is `n_val × k`).
+    pub val: Vec<FeatureMatrix>,
+}
+
+impl ScoreQuery {
+    /// The score-cache key for this query's features (see
+    /// [`task_digest`]).
+    pub fn digest(&self) -> u64 {
+        task_digest(&self.val)
+    }
+
+    /// Cheap admission-time validation against the served store's
+    /// geometry: checkpoint count, feature dimension, non-empty matrices,
+    /// flat-data length, finiteness. Runs before the query is enqueued so
+    /// one malformed query gets its own error response instead of failing
+    /// a whole batch.
+    pub fn validate(&self, header: &Header) -> Result<()> {
+        let c = header.n_checkpoints as usize;
+        anyhow::ensure!(
+            self.val.len() == c,
+            "query has {} checkpoint feature sets, datastore has {c}",
+            self.val.len()
+        );
+        for (ci, m) in self.val.iter().enumerate() {
+            anyhow::ensure!(
+                m.k == header.k as usize,
+                "checkpoint {ci}: feature dim {} != datastore k {}",
+                m.k,
+                header.k
+            );
+            anyhow::ensure!(m.n > 0, "checkpoint {ci}: empty validation features");
+            // checked: n and k come off the wire, and an n·k that wraps in
+            // release builds could pass an unchecked equality against a
+            // tiny data length and then drive an n-sized allocation
+            let expect = m.n.checked_mul(m.k);
+            anyhow::ensure!(
+                expect == Some(m.data.len()),
+                "checkpoint {ci}: {} values for {}×{} features",
+                m.data.len(),
+                m.n,
+                m.k
+            );
+            if let Some(j) = m.data.iter().position(|x| !x.is_finite()) {
+                bail!("checkpoint {ci}: non-finite validation feature {} at index {j}", m.data[j]);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One answered query: the full per-sample score vector (shared, so cache
+/// hits are pointer clones) plus provenance — whether it came from the
+/// score cache and, if not, the fused pass that produced it.
+#[derive(Debug, Clone)]
+pub struct Answer {
+    /// Influence score of every training sample, in sample order.
+    pub scores: Arc<Vec<f32>>,
+    /// True when served from the score cache without any scan.
+    pub cached: bool,
+    /// Distinct tasks fused into the producing pass (0 on a cache hit).
+    pub batched: usize,
+    /// I/O accounting of the producing pass (zeroed on a cache hit). All
+    /// answers of one micro-batch share the same pass, which is how the
+    /// e2e test asserts a burst of Q queries cost one datastore traversal.
+    pub pass: ScanStats,
+}
+
+/// A warm, long-lived handle over one datastore (see the module docs).
+pub struct Session {
+    ds: Datastore,
+    generation: u64,
+    etas: Vec<f32>,
+    rows_per_shard: usize,
+    shard_cache: LruCache<(usize, usize), Arc<OwnedShard>>,
+    score_cache: LruCache<u64, Arc<Vec<f32>>>,
+    stats: ServiceStats,
+}
+
+impl Session {
+    /// Open and validate the datastore at `path`, read every checkpoint's
+    /// η once, and size the caches from `opts`. After this, a fully-warm
+    /// query touches no file I/O at all.
+    pub fn open(path: &Path, opts: SessionOpts) -> Result<Session> {
+        let ds = Datastore::open(path)
+            .with_context(|| format!("opening served datastore {path:?}"))?;
+        let generation = generation_of(path, &ds.header);
+        let mut etas = Vec::with_capacity(ds.n_checkpoints());
+        for ci in 0..ds.n_checkpoints() {
+            etas.push(ds.shard_reader(ci, 1)?.eta());
+        }
+        let rows_per_shard = ds.rows_per_shard(opts.shard_rows, opts.mem_budget_mb.max(1));
+        let cache_budget = opts.mem_budget_mb.max(1) << 20;
+        info!(
+            "session: {} samples × k={} × {} checkpoints at {} (gen {generation:#x}, \
+             {rows_per_shard} rows/shard, {} MiB shard cache, {} score-cache entries)",
+            ds.n_samples(),
+            ds.header.k,
+            ds.n_checkpoints(),
+            ds.header.precision.label(),
+            opts.mem_budget_mb.max(1),
+            opts.score_cache_entries,
+        );
+        Ok(Session {
+            ds,
+            generation,
+            etas,
+            rows_per_shard,
+            shard_cache: LruCache::new(cache_budget),
+            score_cache: LruCache::new(opts.score_cache_entries),
+            stats: ServiceStats::default(),
+        })
+    }
+
+    /// The served store's header (geometry + precision).
+    pub fn header(&self) -> &Header {
+        &self.ds.header
+    }
+
+    /// The datastore generation: a digest of the header, file size and
+    /// mtime captured at open. Score-cache entries are implicitly keyed by
+    /// it (the cache lives inside the session, which is pinned to one
+    /// generation), and responses echo it so clients can detect a restart
+    /// over a rebuilt store.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Rows per streamed/cached shard, resolved from the session's opts.
+    pub fn rows_per_shard(&self) -> usize {
+        self.rows_per_shard
+    }
+
+    /// Cumulative session accounting (the `stats` op's payload).
+    pub fn stats(&self) -> ServiceStats {
+        let mut s = self.stats;
+        s.shard_cache_bytes = self.shard_cache.weight() as u64;
+        s
+    }
+
+    /// Answer one micro-batch of (already validated) queries: score-cache
+    /// hits are answered instantly, identical queries within the batch are
+    /// deduplicated, and every remaining distinct task rides **one** fused
+    /// pass over the store. Returns one [`Answer`] per query, in order.
+    pub fn answer_batch(&mut self, queries: &[ScoreQuery]) -> Result<Vec<Answer>> {
+        self.stats.batches += 1;
+        self.stats.queries += queries.len() as u64;
+        let digests: Vec<u64> = queries.iter().map(|q| q.digest()).collect();
+        let mut answers: Vec<Option<Answer>> = vec![None; queries.len()];
+        // distinct uncached digests, in arrival order (batch sizes are
+        // small — max_batch_tasks — so linear dedup beats a map here)
+        let mut misses: Vec<u64> = Vec::new();
+        for (i, d) in digests.iter().enumerate() {
+            if let Some(scores) = self.score_cache.get(d) {
+                self.stats.score_cache_hits += 1;
+                answers[i] = Some(Answer {
+                    scores,
+                    cached: true,
+                    batched: 0,
+                    pass: ScanStats::default(),
+                });
+            } else if !misses.contains(d) {
+                misses.push(*d);
+            }
+        }
+        if !misses.is_empty() {
+            let reps: Vec<&ScoreQuery> = misses
+                .iter()
+                .map(|d| {
+                    let i = digests.iter().position(|x| x == d).expect("digest from this batch");
+                    &queries[i]
+                })
+                .collect();
+            let tasks: Vec<&[FeatureMatrix]> = reps.iter().map(|q| q.val.as_slice()).collect();
+            let (totals, pass) = self.scan_fused(&tasks)?;
+            let shared: Vec<Arc<Vec<f32>>> = totals.into_iter().map(Arc::new).collect();
+            for (d, scores) in misses.iter().zip(&shared) {
+                self.score_cache.insert(*d, Arc::clone(scores), 1);
+            }
+            for (i, d) in digests.iter().enumerate() {
+                if answers[i].is_none() {
+                    let t = misses.iter().position(|x| x == d).expect("miss was collected");
+                    answers[i] = Some(Answer {
+                        scores: Arc::clone(&shared[t]),
+                        cached: false,
+                        batched: misses.len(),
+                        pass,
+                    });
+                }
+            }
+        }
+        Ok(answers.into_iter().map(|a| a.expect("every query answered")).collect())
+    }
+
+    /// One fused multi-task pass over the store, preferring pinned shards:
+    /// cache hits feed the scan straight from RAM; misses are read with a
+    /// seek-based [`crate::datastore::ShardReader`], fed, and pinned for
+    /// the next pass (LRU-evicted under the byte budget).
+    fn scan_fused(&mut self, tasks: &[&[FeatureMatrix]]) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+        let mut scan = MultiScan::try_new(&self.ds.header, tasks)?;
+        let n = self.ds.n_samples();
+        let n_shards = n.div_ceil(self.rows_per_shard).max(1);
+        for ci in 0..self.ds.n_checkpoints() {
+            let eta = self.etas[ci];
+            let mut reader = None;
+            for si in 0..n_shards {
+                let key = (ci, si);
+                if let Some(shard) = self.shard_cache.get(&key) {
+                    self.stats.shard_cache_hits += 1;
+                    scan.feed(ci, eta, shard.start, &shard.rows());
+                    continue;
+                }
+                if reader.is_none() {
+                    reader = Some(self.ds.shard_reader(ci, self.rows_per_shard)?);
+                }
+                let r = reader.as_mut().expect("reader just opened");
+                r.seek_to_row(si * self.rows_per_shard);
+                let shard = r
+                    .next_shard()?
+                    .with_context(|| format!("shard {si} of checkpoint {ci} out of range"))?;
+                let owned = Arc::new(shard.to_owned_shard());
+                self.stats.disk_shard_reads += 1;
+                scan.feed(ci, eta, owned.start, &owned.rows());
+                let weight = owned.byte_weight();
+                self.shard_cache.insert(key, owned, weight);
+            }
+        }
+        self.stats.fused_passes += 1;
+        let (totals, pass) = scan.finish();
+        self.stats.rows_scored += pass.rows_read;
+        Ok((totals, pass))
+    }
+}
+
+/// Digest identifying one on-disk datastore build: header bytes + file
+/// size + mtime (when available). See [`Session::generation`].
+fn generation_of(path: &Path, header: &Header) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, &header.encode());
+    if let Ok(meta) = std::fs::metadata(path) {
+        h = fnv1a(h, &meta.len().to_le_bytes());
+        if let Ok(mtime) = meta.modified() {
+            if let Ok(d) = mtime.duration_since(std::time::UNIX_EPOCH) {
+                h = fnv1a(h, &d.as_nanos().to_le_bytes());
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::DatastoreWriter;
+    use crate::influence::{score_datastore_tasks, ScoreOpts};
+    use crate::quant::{Precision, Scheme};
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+        let mut rng = Rng::new(seed);
+        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+    }
+
+    fn build_store(bits: u8, n: usize, k: usize, etas: &[f32], tag: &str) -> PathBuf {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "qless_sess_{tag}_{bits}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
+        for (ci, &eta) in etas.iter().enumerate() {
+            w.begin_checkpoint(eta).unwrap();
+            let f = feats(n, k, ci as u64);
+            for i in 0..n {
+                w.append_features(f.row(i)).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+        }
+        w.finalize().unwrap();
+        path
+    }
+
+    fn task(k: usize, seed: u64, ckpts: usize) -> Vec<FeatureMatrix> {
+        (0..ckpts).map(|ci| feats(3, k, seed + ci as u64)).collect()
+    }
+
+    #[test]
+    fn session_scores_match_batch_pipeline_exactly() {
+        let (n, k) = (23usize, 64usize);
+        let path = build_store(4, n, k, &[0.7, 0.3], "exact");
+        let ds = Datastore::open(&path).unwrap();
+        let t0 = task(k, 100, 2);
+        let t1 = task(k, 200, 2);
+        let (want, _) = score_datastore_tasks(
+            &ds,
+            &[&t0, &t1],
+            ScoreOpts { shard_rows: 5, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let opts = SessionOpts { shard_rows: 5, mem_budget_mb: 4, score_cache_entries: 8 };
+        let mut sess = Session::open(&path, opts).unwrap();
+        assert_eq!(sess.rows_per_shard(), 5);
+        let queries = vec![ScoreQuery { val: t0.clone() }, ScoreQuery { val: t1.clone() }];
+        for q in &queries {
+            q.validate(sess.header()).unwrap();
+        }
+        let answers = sess.answer_batch(&queries).unwrap();
+        assert_eq!(answers.len(), 2);
+        for (t, a) in answers.iter().enumerate() {
+            assert!(!a.cached);
+            assert_eq!(a.batched, 2, "both tasks fused into one pass");
+            assert_eq!(a.pass.tasks, 2);
+            assert_eq!(*a.scores, want[t], "task {t}: served vs pipeline scores");
+        }
+        // both answers share one pass: shard traffic of a single scan
+        assert_eq!(answers[0].pass, answers[1].pass);
+        assert_eq!(answers[0].pass.shards_read, 2 * n.div_ceil(5));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn warm_queries_skip_disk_and_identical_queries_skip_scans() {
+        let (n, k) = (16usize, 64usize);
+        let path = build_store(8, n, k, &[1.0], "warm");
+        let opts = SessionOpts { shard_rows: 4, mem_budget_mb: 16, score_cache_entries: 4 };
+        let mut sess = Session::open(&path, opts).unwrap();
+        let q0 = ScoreQuery { val: task(k, 300, 1) };
+        let a0 = sess.answer_batch(std::slice::from_ref(&q0)).unwrap();
+        let cold = sess.stats();
+        assert_eq!(cold.disk_shard_reads, 4, "cold pass reads every shard");
+        assert_eq!(cold.fused_passes, 1);
+        // identical query: score cache answers without any scan
+        let a1 = sess.answer_batch(std::slice::from_ref(&q0)).unwrap();
+        assert!(a1[0].cached);
+        assert_eq!(a1[0].scores, a0[0].scores);
+        let s1 = sess.stats();
+        assert_eq!(s1.score_cache_hits, 1);
+        assert_eq!(s1.fused_passes, 1, "no new pass");
+        assert_eq!(s1.disk_shard_reads, cold.disk_shard_reads);
+        // different task, warm shard cache: a scan, but zero disk reads
+        let q1 = ScoreQuery { val: task(k, 301, 1) };
+        let a2 = sess.answer_batch(std::slice::from_ref(&q1)).unwrap();
+        assert!(!a2[0].cached);
+        let s2 = sess.stats();
+        assert_eq!(s2.fused_passes, 2);
+        assert_eq!(s2.disk_shard_reads, cold.disk_shard_reads, "warm scan is RAM-only");
+        assert_eq!(s2.shard_cache_hits, 4);
+        assert!(s2.shard_cache_bytes > 0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn batch_dedup_fuses_identical_queries_into_one_task() {
+        let (n, k) = (12usize, 64usize);
+        let path = build_store(2, n, k, &[0.5], "dedup");
+        let mut sess = Session::open(
+            &path,
+            SessionOpts { shard_rows: 0, mem_budget_mb: 8, score_cache_entries: 0 },
+        )
+        .unwrap();
+        let a = ScoreQuery { val: task(k, 400, 1) };
+        let b = ScoreQuery { val: task(k, 401, 1) };
+        let batch = vec![a.clone(), b.clone(), a.clone(), a.clone()];
+        let answers = sess.answer_batch(&batch).unwrap();
+        for ans in &answers {
+            assert_eq!(ans.batched, 2, "4 queries, 2 distinct tasks");
+            assert_eq!(ans.pass.tasks, 2);
+        }
+        assert_eq!(answers[0].scores, answers[2].scores);
+        assert_eq!(answers[0].scores, answers[3].scores);
+        assert_ne!(answers[0].scores, answers[1].scores);
+        // score cache disabled: the same batch rescans, same results
+        let again = sess.answer_batch(&batch).unwrap();
+        assert_eq!(again[0].scores, answers[0].scores);
+        assert!(!again[0].cached);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_queries() {
+        let (n, k) = (8usize, 64usize);
+        let path = build_store(8, n, k, &[1.0, 1.0], "val");
+        let sess = Session::open(&path, SessionOpts::default()).unwrap();
+        let h = *sess.header();
+        // wrong checkpoint count
+        assert!(ScoreQuery { val: task(k, 1, 1) }.validate(&h).is_err());
+        // wrong k
+        assert!(ScoreQuery { val: task(32, 1, 2) }.validate(&h).is_err());
+        // empty matrix
+        let empty = vec![
+            FeatureMatrix { n: 0, k, data: vec![] },
+            FeatureMatrix { n: 0, k, data: vec![] },
+        ];
+        assert!(ScoreQuery { val: empty }.validate(&h).is_err());
+        // flat-length mismatch
+        let mut bad = task(k, 1, 2);
+        bad[0].data.pop();
+        assert!(ScoreQuery { val: bad }.validate(&h).is_err());
+        // n·k that wraps to 0 in release builds: checked_mul must reject,
+        // or a hostile wire request drives an n-sized allocation
+        let huge = vec![
+            FeatureMatrix { n: usize::MAX / 2 + 1, k, data: vec![] },
+            FeatureMatrix { n: usize::MAX / 2 + 1, k, data: vec![] },
+        ];
+        assert!(ScoreQuery { val: huge }.validate(&h).is_err());
+        // non-finite
+        let mut nan = task(k, 1, 2);
+        nan[1].data[5] = f32::NAN;
+        let err = ScoreQuery { val: nan }.validate(&h).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        // a good one passes
+        ScoreQuery { val: task(k, 1, 2) }.validate(&h).unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn generation_distinguishes_rebuilt_stores() {
+        let path = build_store(8, 8, 64, &[1.0], "gen1");
+        let s1 = Session::open(&path, SessionOpts::default()).unwrap();
+        let g1 = s1.generation();
+        drop(s1);
+        let path2 = build_store(8, 9, 64, &[1.0], "gen2");
+        let s2 = Session::open(&path2, SessionOpts::default()).unwrap();
+        assert_ne!(g1, s2.generation(), "different geometry, different generation");
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(path2).ok();
+    }
+}

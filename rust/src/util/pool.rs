@@ -17,10 +17,18 @@
 //! done, which is what makes the borrowed-closure lifetime erasure below
 //! sound: `f` and `out` are only ever touched between job publication and
 //! the caller's return.
+//!
+//! A second, independent primitive lives alongside the scan pool:
+//! [`TaskPool`], a plain fixed-size worker pool over a bounded queue of
+//! boxed `FnOnce` tasks. The scan pool is a data-parallel fork/join engine
+//! (one job at a time, caller participates); `TaskPool` is a task-parallel
+//! executor (many independent long-lived tasks, caller continues) — the
+//! serving layer (`service::server`) runs one connection handler per task
+//! on it, with the bounded queue providing accept-loop backpressure.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
 /// Worker threads a scan may use: `QLESS_SCORE_THREADS` if set, else the
 /// machine's available parallelism. Always ≥ 1.
@@ -219,6 +227,79 @@ pub fn par_fill_rows(out: &mut [f32], width: usize, f: &(dyn Fn(usize, &mut [f32
     }
 }
 
+// ---------------------------------------------------------------------------
+// task pool (independent tasks, bounded queue)
+// ---------------------------------------------------------------------------
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool over a bounded task queue.
+///
+/// `execute` enqueues a boxed closure; when the queue is full it **blocks**
+/// until a worker frees a slot — deliberate backpressure for producers like
+/// an accept loop. Workers survive task panics (each task runs under
+/// `catch_unwind`). Dropping the pool closes the queue, lets queued tasks
+/// drain, and joins every worker — so tests and server shutdown are
+/// deterministic.
+pub struct TaskPool {
+    tx: Option<mpsc::SyncSender<Task>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TaskPool {
+    /// Spawn `workers` named threads (floored at 1) over a queue holding at
+    /// most `queue_cap` pending tasks (floored at 1).
+    pub fn new(name: &str, workers: usize, queue_cap: usize) -> TaskPool {
+        let (tx, rx) = mpsc::sync_channel::<Task>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        // hold the receiver lock only for the dequeue
+                        let task = {
+                            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(t) => {
+                                let _ = catch_unwind(AssertUnwindSafe(t));
+                            }
+                            Err(_) => return, // queue closed: pool dropped
+                        }
+                    })
+                    .expect("spawning task-pool worker")
+            })
+            .collect();
+        TaskPool { tx: Some(tx), handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue a task; blocks while the queue is full. Returns an error
+    /// only if the pool is already shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> anyhow::Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow::anyhow!("task pool closed"))?;
+        tx.send(Box::new(f)).map_err(|_| anyhow::anyhow!("task pool closed"))
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        // closing the sender ends every worker's recv loop after the queue
+        // drains; join so no task outlives the pool
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,5 +364,49 @@ mod tests {
         // can't mutate the env safely under parallel tests; just check the
         // default is sane
         assert!(scan_threads() >= 1);
+    }
+
+    #[test]
+    fn task_pool_runs_all_tasks_and_joins_on_drop() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new("qless-test", 3, 4);
+            assert_eq!(pool.workers(), 3);
+            for _ in 0..32 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            }
+            // drop blocks until the queue drains and workers exit
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_task() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new("qless-test-panic", 1, 4);
+            pool.execute(|| panic!("task panic must not kill the worker")).unwrap();
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn task_pool_floors_workers_and_capacity() {
+        let pool = TaskPool::new("qless-test-floor", 0, 0);
+        assert_eq!(pool.workers(), 1);
+        let done = Arc::new(AtomicBool::new(false));
+        let d = Arc::clone(&done);
+        pool.execute(move || d.store(true, Ordering::SeqCst)).unwrap();
+        drop(pool);
+        assert!(done.load(Ordering::SeqCst));
     }
 }

@@ -1,0 +1,293 @@
+//! End-to-end suite for the resident query service — the acceptance
+//! contract of the serving layer:
+//!
+//! * N concurrent TCP clients with overlapping tasks get score vectors
+//!   **byte-identical** to a direct `score_datastore_tasks` call;
+//! * a burst of queries coalesces into **one** fused datastore pass,
+//!   asserted via the `ScanStats` every rider of the batch reports;
+//! * a repeat query answers from the score cache, and a *new* query over a
+//!   warm shard cache scans without touching the datastore file again
+//!   (`disk_shard_reads` stays flat);
+//! * a property test: batching grouping, shard size and cache hits are
+//!   non-semantic — scores never change.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+use qless::datastore::Datastore;
+use qless::datastore::DatastoreWriter;
+use qless::grads::FeatureMatrix;
+use qless::influence::{score_datastore_tasks, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::service::{Client, ScoreQuery, ServeOpts, Server, Session, SessionOpts};
+use qless::util::prop::run_prop;
+use qless::util::Rng;
+
+fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+}
+
+fn build_store(tag: &str, bits: u8, n: usize, k: usize, etas: &[f32]) -> PathBuf {
+    let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+    let p = Precision::new(bits, scheme).unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "qless_e2e_{tag}_{bits}_{}_{:?}.qlds",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
+    for (ci, &eta) in etas.iter().enumerate() {
+        w.begin_checkpoint(eta).unwrap();
+        let f = feats(n, k, 1000 + ci as u64);
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+    }
+    w.finalize().unwrap();
+    path
+}
+
+fn task(k: usize, ckpts: usize, seed: u64) -> Vec<FeatureMatrix> {
+    (0..ckpts).map(|ci| feats(2, k, seed * 10 + ci as u64)).collect()
+}
+
+/// The acceptance-criteria test: concurrent clients, byte-identical
+/// scores, burst coalescing proven by ScanStats, and warm-cache repeat
+/// queries that never reread the datastore file.
+#[test]
+fn concurrent_clients_byte_identical_coalesced_and_warm() {
+    let (n, k, shard_rows) = (48usize, 64usize, 7usize);
+    let etas = [0.7f32, 0.3];
+    let path = build_store("main", 4, n, k, &etas);
+
+    // ground truth: ONE direct fused call on the library path
+    let tasks: Vec<Vec<FeatureMatrix>> = (0..3).map(|t| task(k, 2, 10 + t)).collect();
+    let ds = Datastore::open(&path).unwrap();
+    let refs: Vec<&[FeatureMatrix]> = tasks.iter().map(|t| t.as_slice()).collect();
+    let (expected, expected_stats) = score_datastore_tasks(
+        &ds,
+        &refs,
+        ScoreOpts { shard_rows, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let one_pass_shards = 2 * n.div_ceil(shard_rows); // 2 checkpoints
+    assert_eq!(expected_stats.shards_read, one_pass_shards);
+
+    let server = Server::start(
+        &path,
+        ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 400, // wide: the whole burst must land in one batch
+            max_batch_tasks: 16,
+            shard_rows,
+            mem_budget_mb: 64, // far larger than the store: everything pins
+            score_cache_entries: 8,
+            workers: 8,
+            queue_cap: 64,
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // 6 concurrent clients, 3 distinct tasks (i % 3): overlapping queries
+    let n_clients = 6usize;
+    let barrier = Arc::new(Barrier::new(n_clients));
+    let tasks = Arc::new(tasks);
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            let tasks = Arc::clone(&tasks);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                barrier.wait(); // fire the burst together
+                let r = c.score(&tasks[i % 3], 5, true).expect("score");
+                (i, r)
+            })
+        })
+        .collect();
+    let replies: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let first_pass = replies[0].1.pass;
+    for (i, r) in &replies {
+        // byte-identical to the direct fused library call
+        let got = r.scores.as_ref().expect("full scores requested");
+        let want = &expected[i % 3];
+        assert_eq!(got.len(), want.len());
+        for (j, (a, b)) in want.iter().zip(got).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "client {i} sample {j}: served {b} != direct {a}"
+            );
+        }
+        // the per-request top-k is consistent with the full vector
+        assert_eq!(r.top, qless::select::top_k_scored(got, 5));
+        // the whole burst coalesced: every rider reports the SAME single
+        // pass, fusing exactly the 3 distinct tasks
+        assert!(!r.cached);
+        assert_eq!(r.batched, 3, "client {i}: burst must dedup to 3 fused tasks");
+        assert_eq!(r.pass, first_pass, "client {i}: all riders share one pass");
+        assert_eq!(r.pass.tasks, 3);
+        assert_eq!(
+            r.pass.shards_read, one_pass_shards,
+            "client {i}: Q queries must cost one datastore traversal"
+        );
+        assert_eq!(r.generation, server.generation());
+    }
+
+    // ---- warm phase -------------------------------------------------------
+    let mut c = Client::connect(addr).unwrap();
+    let cold = c.stats().unwrap();
+    assert_eq!(cold.stats.fused_passes, 1);
+    assert_eq!(cold.stats.queries, n_clients as u64);
+    assert_eq!(
+        cold.stats.disk_shard_reads, one_pass_shards as u64,
+        "cold pass read each shard exactly once"
+    );
+
+    // repeat query: score cache answers, no scan, no disk
+    let r = c.score(&tasks[0], 3, true).unwrap();
+    assert!(r.cached, "identical query must hit the score cache");
+    for (a, b) in expected[0].iter().zip(r.scores.as_ref().unwrap()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let s1 = c.stats().unwrap();
+    assert_eq!(s1.stats.fused_passes, 1, "cache hit runs no pass");
+    assert_eq!(s1.stats.disk_shard_reads, cold.stats.disk_shard_reads);
+    assert_eq!(s1.stats.score_cache_hits, 1);
+
+    // NEW task over the warm shard cache: a fused pass that scans entirely
+    // from RAM — the datastore file is never read again
+    let fresh = task(k, 2, 99);
+    let r2 = c.score(&fresh, 0, false).unwrap();
+    assert!(!r2.cached);
+    assert_eq!(r2.pass.shards_read, one_pass_shards, "full scan, served from RAM");
+    let s2 = c.stats().unwrap();
+    assert_eq!(s2.stats.fused_passes, 2);
+    assert_eq!(
+        s2.stats.disk_shard_reads, cold.stats.disk_shard_reads,
+        "warm-cache query must not read the datastore file again"
+    );
+    assert_eq!(s2.stats.shard_cache_hits, one_pass_shards as u64);
+    assert!(s2.stats.shard_cache_bytes > 0);
+
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+/// Batching grouping, shard geometry, and both caches are non-semantic:
+/// however queries are grouped into batches, and whether they hit disk,
+/// the shard cache, or the score cache, scores equal the direct library
+/// scan bit-for-bit — at every bitwidth.
+#[test]
+fn prop_batching_and_caches_never_change_scores() {
+    run_prop("service-batching-invariant", 10, |g| {
+        let bits = [1u8, 2, 4, 8, 16][g.rng.below(5)];
+        let n = 8 + g.usize_up_to(24);
+        let k = 64usize;
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|i| 0.9 - 0.3 * i as f32).collect();
+        let path = build_store("prop", bits, n, k, &etas);
+
+        let q = 1 + g.rng.below(3);
+        let tasks: Vec<Vec<FeatureMatrix>> =
+            (0..q).map(|t| task(k, ckpts, 500 + t as u64)).collect();
+        let refs: Vec<&[FeatureMatrix]> = tasks.iter().map(|t| t.as_slice()).collect();
+        let ds = Datastore::open(&path).unwrap();
+        let (expected, _) =
+            score_datastore_tasks(&ds, &refs, ScoreOpts::default(), None).unwrap();
+        drop(ds);
+
+        let opts = SessionOpts {
+            shard_rows: 1 + g.rng.below(n + 2),
+            mem_budget_mb: 1,
+            score_cache_entries: g.rng.below(3), // sometimes disabled
+        };
+        let mut sess = Session::open(&path, opts).unwrap();
+        // several rounds of randomly grouped, randomly repeated queries
+        for _round in 0..3 {
+            let mut batch: Vec<(usize, ScoreQuery)> = Vec::new();
+            let batch_len = 1 + g.rng.below(2 * q);
+            for _ in 0..batch_len {
+                let t = g.rng.below(q);
+                batch.push((t, ScoreQuery { val: tasks[t].clone() }));
+            }
+            let queries: Vec<ScoreQuery> = batch.iter().map(|(_, s)| s.clone()).collect();
+            let answers = sess.answer_batch(&queries).unwrap();
+            for ((t, _), a) in batch.iter().zip(&answers) {
+                prop_assert!(
+                    a.scores.len() == expected[*t].len(),
+                    "bits {bits}: score length"
+                );
+                for (j, (want, got)) in expected[*t].iter().zip(a.scores.iter()).enumerate()
+                {
+                    prop_assert!(
+                        want.to_bits() == got.to_bits(),
+                        "bits {bits} task {t} sample {j}: {want} != {got} \
+                         (shard_rows {}, cache {})",
+                        opts.shard_rows,
+                        opts.score_cache_entries
+                    );
+                }
+            }
+        }
+        std::fs::remove_file(path).ok();
+        Ok(())
+    });
+}
+
+/// A zero-width window still coalesces whatever queued while the previous
+/// batch scored, and never changes scores — the low-latency configuration.
+#[test]
+fn zero_window_server_still_correct_under_concurrency() {
+    let (n, k) = (24usize, 64usize);
+    let path = build_store("zero", 8, n, k, &[1.0]);
+    let tasks: Vec<Vec<FeatureMatrix>> = (0..4).map(|t| task(k, 1, 70 + t)).collect();
+    let refs: Vec<&[FeatureMatrix]> = tasks.iter().map(|t| t.as_slice()).collect();
+    let ds = Datastore::open(&path).unwrap();
+    let (expected, _) = score_datastore_tasks(&ds, &refs, ScoreOpts::default(), None).unwrap();
+    drop(ds);
+
+    let server = Server::start(
+        &path,
+        ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 0,
+            score_cache_entries: 0, // force rescans: correctness under load
+            workers: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let tasks = Arc::new(tasks);
+    let expected = Arc::new(expected);
+    let handles: Vec<_> = (0..4usize)
+        .map(|i| {
+            let tasks = Arc::clone(&tasks);
+            let expected = Arc::clone(&expected);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for round in 0..3 {
+                    let t = (i + round) % 4;
+                    let r = c.score(&tasks[t], 2, true).unwrap();
+                    let got = r.scores.unwrap();
+                    for (a, b) in expected[t].iter().zip(&got) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "client {i} round {round}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+    server.join().unwrap();
+    std::fs::remove_file(path).ok();
+}
