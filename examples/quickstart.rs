@@ -29,9 +29,15 @@ fn main() -> Result<()> {
         println!("  {src:10} {n}");
     }
 
-    // LESS baseline (16-bit) vs QLESS 1-bit datastores over the same features.
-    let (ds16, b16) = pipe.build_datastore(Precision::new(16, Scheme::Absmax)?)?;
-    let (ds1, b1) = pipe.build_datastore(Precision::new(1, Scheme::Sign)?)?;
+    // LESS baseline (16-bit) vs QLESS 1-bit datastores over the same
+    // features — built in ONE streamed extraction pass (the `--bits 16,1`
+    // sweep), never materializing the fp32 feature matrix.
+    let mut stores = pipe.build_datastores(&[
+        Precision::new(16, Scheme::Absmax)?,
+        Precision::new(1, Scheme::Sign)?,
+    ])?;
+    let (ds1, b1) = stores.remove(1);
+    let (ds16, b16) = stores.remove(0);
     println!("\ndatastore  16-bit: {:>12}", human_bytes(b16));
     println!(
         "datastore   1-bit: {:>12}  ({:.1}x smaller)",

@@ -22,8 +22,10 @@ fn main() -> Result<()> {
     cfg.run_dir = "runs/scheme_ablation".into();
     let mut pipe = Pipeline::new(cfg)?;
 
-    // (a) zero-bin occupancy on real features (Fig. 3)
-    let feats = pipe.train_features()?;
+    // (a) zero-bin occupancy on real features (Fig. 3). Dense features are
+    // the explicit small-run opt-in (800 samples here); datastore builds
+    // stream instead and never materialize this matrix.
+    let feats = pipe.train_features_dense()?;
     let block = &feats[0];
     let mut t = Table::new(
         "zero-bin occupancy on real gradient features",
@@ -45,18 +47,10 @@ fn main() -> Result<()> {
     println!("{}", t.render());
 
     // (b) selection agreement vs the 16-bit reference (the metric that
-    // matters: does coarse quantization pick the same data?)
-    let (ds16, _) = pipe.build_datastore(Precision::new(16, Scheme::Absmax)?)?;
-    let mut t2 = Table::new(
-        "top-5% selection overlap with LESS 16-bit",
-        &["precision", "SynQA", "SynMC", "SynArith"],
-    );
-    let mut ref_sel = std::collections::BTreeMap::new();
-    for bench in Benchmark::ALL {
-        let s = pipe.influence_scores(&ds16, bench)?;
-        ref_sel.insert(bench.name(), select_top_frac(&s, 0.05));
-    }
+    // matters: does coarse quantization pick the same data?). The whole
+    // grid of datastores is built in ONE extraction pass (`--bits` sweep).
     let grid: Vec<Precision> = vec![
+        Precision::new(16, Scheme::Absmax)?,
         Precision::new(8, Scheme::Absmax)?,
         Precision::new(4, Scheme::Absmax)?,
         Precision::new(4, Scheme::Absmean)?,
@@ -64,11 +58,21 @@ fn main() -> Result<()> {
         Precision::new(2, Scheme::Absmean)?,
         Precision::new(1, Scheme::Sign)?,
     ];
-    for p in grid {
-        let (ds, _) = pipe.build_datastore(p)?;
+    let stores = pipe.build_datastores(&grid)?;
+    let (ds16, _) = &stores[0];
+    let mut t2 = Table::new(
+        "top-5% selection overlap with LESS 16-bit",
+        &["precision", "SynQA", "SynMC", "SynArith"],
+    );
+    let mut ref_sel = std::collections::BTreeMap::new();
+    for bench in Benchmark::ALL {
+        let s = pipe.influence_scores(ds16, bench)?;
+        ref_sel.insert(bench.name(), select_top_frac(&s, 0.05));
+    }
+    for (p, (ds, _)) in grid.iter().skip(1).zip(stores.iter().skip(1)) {
         let mut row = vec![p.label()];
         for bench in Benchmark::ALL {
-            let s = pipe.influence_scores(&ds, bench)?;
+            let s = pipe.influence_scores(ds, bench)?;
             let sel = select_top_frac(&s, 0.05);
             let r = &ref_sel[bench.name()];
             let overlap = sel.iter().filter(|i| r.contains(i)).count();

@@ -1,0 +1,69 @@
+//! Streaming multi-precision builder throughput: rows/s and peak builder
+//! bytes, 1 vs N precisions and 1 vs W quantize workers — the build-side
+//! counterpart of `bench_datastore`'s write rows. No model runtime needed:
+//! rows are synthetic normals, so this runs anywhere (including CI boxes
+//! without `make artifacts`).
+
+use std::path::PathBuf;
+
+use qless::datastore::MultiWriter;
+use qless::quant::{Precision, Scheme};
+use qless::util::prop::normal_features;
+use qless::util::stats::bench_cfg;
+
+fn sweep(bits: &[u8]) -> Vec<Precision> {
+    bits.iter()
+        .map(|&b| Precision::new(b, if b == 1 { Scheme::Sign } else { Scheme::Absmax }).unwrap())
+        .collect()
+}
+
+fn main() {
+    let (n, k, c) = (4096usize, 512usize, 2usize);
+    let window = 256usize;
+    let dir = std::env::temp_dir().join(format!("qless_bench_build_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let feats: Vec<_> = (0..c).map(|ci| normal_features(n, k, ci as u64)).collect();
+    println!("== bench_build: {n} rows × k={k} × {c} checkpoints, window {window} rows ==");
+
+    let mut run = |label: &str, precisions: &[Precision], workers: usize| {
+        let targets: Vec<(Precision, PathBuf)> = precisions
+            .iter()
+            .map(|p| (*p, dir.join(format!("b_{}b_{}.qlds", p.bits, p.scheme))))
+            .collect();
+        let mut peak = 0u64;
+        let r = bench_cfg(label, (n * c) as f64, "row", 1, 3, 0.5, &mut || {
+            let mut mw = MultiWriter::create(&targets, n, k, c, workers).unwrap();
+            for (ci, f) in feats.iter().enumerate() {
+                mw.begin_checkpoint(0.1 * (ci + 1) as f32).unwrap();
+                let mut row = 0usize;
+                while row < n {
+                    let take = window.min(n - row);
+                    mw.append_rows(&f.data[row * k..(row + take) * k]).unwrap();
+                    row += take;
+                }
+                mw.end_checkpoint().unwrap();
+            }
+            peak = mw.peak_builder_bytes();
+            std::hint::black_box(mw.finalize().unwrap());
+        });
+        println!("{}", r.report_line());
+        println!(
+            "    peak builder bytes: {} (fp32 matrix would be {})",
+            qless::util::table::human_bytes(peak),
+            qless::util::table::human_bytes((n * k * 4) as u64),
+        );
+    };
+
+    // 1 vs N precisions, full parallelism
+    run("stream_build 1 precision (16-bit)", &sweep(&[16]), 0);
+    run("stream_build 1 precision (1-bit)", &sweep(&[1]), 0);
+    run("stream_build 5 precisions (16,8,4,2,1)", &sweep(&[16, 8, 4, 2, 1]), 0);
+
+    // worker scaling on the full sweep
+    for workers in [1usize, 2, 4, 8] {
+        let label = format!("stream_build 5 precisions, {workers} workers");
+        run(&label, &sweep(&[16, 8, 4, 2, 1]), workers);
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -44,19 +44,27 @@ fn main() {
     let set = pipe.warmup().unwrap();
     stage("warmup (LoRA, 2 epochs, 5%)", t.stop());
 
-    let t = Timer::start("extract");
-    pipe.train_features().unwrap();
-    stage("gradient extraction (all ckpts, cached)", t.stop());
-
-    for bits in [16u8, 1] {
-        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
-        let t = Timer::start("ds");
-        let (_ds, bytes) = pipe.build_datastore(Precision::new(bits, scheme).unwrap()).unwrap();
-        stage(
-            &format!("datastore build {bits}-bit ({} B)", bytes),
-            t.stop(),
-        );
-    }
+    // ONE extraction pass streams both precisions to disk; peak builder
+    // memory is the bounded window, not the n × k fp32 matrix
+    let sweep = [
+        Precision::new(16, Scheme::Absmax).unwrap(),
+        Precision::new(1, Scheme::Sign).unwrap(),
+    ];
+    let t = Timer::start("build");
+    let stores = pipe.build_datastores(&sweep).unwrap();
+    let build_secs = t.stop();
+    stage(
+        &format!(
+            "stream-build 16+1-bit datastores ({} + {} B, one pass)",
+            stores[0].1, stores[1].1
+        ),
+        build_secs,
+    );
+    let build = pipe.stages.cost(qless::pipeline::Stage::BuildDatastore);
+    println!(
+        "  peak builder memory: {} (window-bounded, independent of corpus size)",
+        qless::util::table::human_bytes(build.io_units)
+    );
 
     let (ds, _) = pipe.build_datastore(Precision::new(1, Scheme::Sign).unwrap()).unwrap();
     let t = Timer::start("score");

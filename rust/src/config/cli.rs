@@ -45,11 +45,16 @@ COMMANDS
 OPTIONS (all Config keys work as --key value):
   --config FILE       load key=value file first (may repeat; files layer)
   --model NAME        tiny | small | base
-  --bits N            16 | 8 | 4 | 2 | 1      --scheme S   absmax | absmean
+  --bits N[,N...]     16 | 8 | 4 | 2 | 1; a comma list (e.g. 1,2,4,8,16)
+                      builds every precision in ONE extraction pass
+  --scheme S          absmax | absmean
   --model-bits N      16 | 8 | 4 (QLoRA ablation)
   --corpus-size N     --seed N   --select-frac F   --workers N
   --shard-rows N      rows per influence-scan shard (0 = from budget)
   --mem-budget-mb N   influence-scan memory budget (default 64 MiB)
+  --build-mem-budget-mb N  streaming-builder window budget (default 64 MiB;
+                      bounds peak build memory independent of corpus size)
+  --build-workers N   quantize-stage worker cap for builds (0 = all cores)
   --multi-scan B      score all benchmarks in one datastore pass (default true)
   --run-dir DIR       --artifacts DIR
   --fast              shrink workloads        -v / -q      verbosity
@@ -185,6 +190,26 @@ mod tests {
         let c = p(&["xp", "table1", "--seed", "3"]).unwrap();
         assert_eq!(c.positional, vec!["table1"]);
         assert_eq!(c.config.seed, 3);
+    }
+
+    #[test]
+    fn bits_list_and_build_flags_parse() {
+        let c = p(&[
+            "extract",
+            "--bits",
+            "1,2,4,8,16",
+            "--build-mem-budget-mb",
+            "32",
+            "--build-workers",
+            "4",
+        ])
+        .unwrap();
+        assert_eq!(c.config.build_bits, vec![1, 2, 4, 8, 16]);
+        assert_eq!(c.config.bits, 1);
+        assert_eq!(c.config.build_mem_budget_mb, 32);
+        assert_eq!(c.config.build_workers, 4);
+        assert!(p(&["extract", "--bits", "1,3"]).is_err());
+        assert!(p(&["extract", "--build-mem-budget-mb", "0"]).is_err()); // validate()
     }
 
     #[test]

@@ -42,8 +42,21 @@ pub struct Config {
     pub lr_warmup_frac: f64,
     /// Gradient quantization bits: 16 (LESS) | 8 | 4 | 2 | 1.
     pub bits: u8,
+    /// Multi-precision build list (`--bits 1,2,4,8,16`): every listed
+    /// precision is written in ONE extraction pass by the streaming
+    /// builder. Empty = build just [`Self::bits`]. [`Self::bits`] tracks
+    /// the first entry (the precision score/serve default to).
+    pub build_bits: Vec<u8>,
     /// Quantization scheme for 2–8 bits: absmax | absmean.
     pub scheme: Scheme,
+    /// Streaming-builder memory budget in MiB: bounds the fp32 row window
+    /// plus every target precision's packed window, so peak build memory
+    /// is independent of the corpus size.
+    pub build_mem_budget_mb: usize,
+    /// Quantize-stage worker cap for the streaming builder (0 = the
+    /// persistent pool's full width). Output bytes are identical at every
+    /// worker count.
+    pub build_workers: usize,
     /// Base-model weight quantization (QLoRA ablation): 16 | 8 | 4.
     pub model_bits: u8,
     /// Validation few-shot samples per benchmark used for selection.
@@ -94,7 +107,10 @@ impl Default for Config {
             lr: 1e-3,
             lr_warmup_frac: 0.03,
             bits: 16,
+            build_bits: Vec::new(),
             scheme: Scheme::Absmax,
+            build_mem_budget_mb: DEFAULT_MEM_BUDGET_MB,
+            build_workers: 0,
             model_bits: 16,
             val_per_task: 32,
             eval_per_task: 128,
@@ -134,11 +150,28 @@ impl Config {
             "lr" => self.lr = parse(v, &key)?,
             "lr_warmup_frac" => self.lr_warmup_frac = parse_frac(v, &key)?,
             "bits" => {
-                self.bits = parse(v, &key)?;
-                if ![1, 2, 4, 8, 16].contains(&self.bits) {
-                    bail!("bits must be one of 1,2,4,8,16 (got {})", self.bits);
+                // a single value or a comma list — a list arms the
+                // streaming builder's one-pass multi-precision sweep
+                let mut list: Vec<u8> = Vec::new();
+                for part in v.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        bail!("empty entry in bits list '{v}'");
+                    }
+                    let b: u8 = parse(part, &key)?;
+                    if ![1, 2, 4, 8, 16].contains(&b) {
+                        bail!("bits must be one of 1,2,4,8,16 (got {b})");
+                    }
+                    if list.contains(&b) {
+                        bail!("duplicate bits {b} in list '{v}'");
+                    }
+                    list.push(b);
                 }
+                self.bits = list[0];
+                self.build_bits = if list.len() == 1 { Vec::new() } else { list };
             }
+            "build_mem_budget_mb" => self.build_mem_budget_mb = parse(v, &key)?,
+            "build_workers" => self.build_workers = parse(v, &key)?,
             "scheme" => self.scheme = v.parse()?,
             "model_bits" => {
                 self.model_bits = parse(v, &key)?;
@@ -194,11 +227,16 @@ impl Config {
         if self.workers == 0 {
             bail!("workers must be >= 1");
         }
-        if self.bits != 16 && self.bits != 1 && self.scheme == Scheme::Sign {
-            bail!("scheme=sign only valid at 1-bit");
+        for &b in self.effective_bits() {
+            if b != 16 && b != 1 && self.scheme == Scheme::Sign {
+                bail!("scheme=sign only valid at 1-bit");
+            }
         }
         if self.mem_budget_mb == 0 {
             bail!("mem_budget_mb must be >= 1 (use shard_rows for explicit shard sizing)");
+        }
+        if self.build_mem_budget_mb == 0 {
+            bail!("build_mem_budget_mb must be >= 1");
         }
         if self.max_batch_tasks == 0 {
             bail!("max_batch_tasks must be >= 1 (1 disables fusing, not serving)");
@@ -210,6 +248,26 @@ impl Config {
             bail!("serve_addr must be host:port (port 0 for ephemeral)");
         }
         Ok(())
+    }
+
+    /// The bitwidths a datastore build targets: the `--bits` list when one
+    /// was given, else just [`Self::bits`].
+    fn effective_bits(&self) -> &[u8] {
+        if self.build_bits.is_empty() {
+            std::slice::from_ref(&self.bits)
+        } else {
+            &self.build_bits
+        }
+    }
+
+    /// The precisions a one-pass datastore build targets, in `--bits`
+    /// order. The configured scheme applies to the 2/4/8-bit entries;
+    /// 1-bit coerces to sign and 16-bit to absmax ([`crate::quant::Precision::new`]).
+    pub fn precisions(&self) -> Result<Vec<crate::quant::Precision>> {
+        self.effective_bits()
+            .iter()
+            .map(|&b| crate::quant::Precision::new(b, self.scheme))
+            .collect()
     }
 
     /// The method label used in report tables (paper naming).
@@ -274,6 +332,55 @@ mod tests {
         assert!(c.set("xla_score", "maybe").is_err());
         assert!(c.set("shard_rows", "lots").is_err());
         assert!(c.set("mem_budget_mb", "-3").is_err());
+    }
+
+    #[test]
+    fn bits_list_arms_the_one_pass_sweep() {
+        let mut c = Config::default();
+        assert!(c.build_bits.is_empty());
+        assert_eq!(c.precisions().unwrap().len(), 1); // follows `bits`
+        c.set("bits", "1,2,4,8,16").unwrap();
+        assert_eq!(c.bits, 1, "first list entry becomes the primary precision");
+        assert_eq!(c.build_bits, vec![1, 2, 4, 8, 16]);
+        let ps = c.precisions().unwrap();
+        assert_eq!(ps.len(), 5);
+        assert_eq!(ps[0].scheme, Scheme::Sign); // 1-bit coerces
+        assert_eq!(ps[4].scheme, Scheme::Absmax); // 16-bit coerces
+        c.validate().unwrap();
+        // whitespace tolerated, singles reset the list
+        c.set("bits", " 8 , 4 ").unwrap();
+        assert_eq!(c.build_bits, vec![8, 4]);
+        c.set("bits", "4").unwrap();
+        assert!(c.build_bits.is_empty());
+        assert_eq!(c.bits, 4);
+        // bad lists rejected
+        assert!(c.set("bits", "4,4").is_err());
+        assert!(c.set("bits", "4,3").is_err());
+        assert!(c.set("bits", "4,,8").is_err());
+    }
+
+    #[test]
+    fn build_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.build_mem_budget_mb, DEFAULT_MEM_BUDGET_MB);
+        assert_eq!(c.build_workers, 0); // auto
+        c.set("build-mem-budget-mb", "16").unwrap();
+        c.set("build-workers", "3").unwrap();
+        assert_eq!(c.build_mem_budget_mb, 16);
+        assert_eq!(c.build_workers, 3);
+        c.validate().unwrap();
+        c.set("build_mem_budget_mb", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sign_scheme_rejected_anywhere_in_bits_list() {
+        let mut c = Config::default();
+        c.set("bits", "1,16").unwrap();
+        c.scheme = Scheme::Sign;
+        c.validate().unwrap(); // 1 and 16 both fine under sign
+        c.set("bits", "1,4").unwrap();
+        assert!(c.validate().is_err(), "4-bit sign must be rejected");
     }
 
     #[test]

@@ -26,11 +26,21 @@
 //!   shards under a memory budget (`O(rows_per_shard × row_stride)`
 //!   resident); byte-identical rows, so scores match the block path
 //!   exactly.
+//!
+//! Two write paths, also byte-identical:
+//!
+//! * [`DatastoreWriter`] — one precision, row-by-row or pre-packed
+//!   windows, `O(window)` resident (positioned flushes).
+//! * [`MultiWriter`] — the streaming builder's fan-out: one feature-row
+//!   stream quantized at **every** requested precision in one pass
+//!   (pool-parallel windows), peak memory independent of the corpus size.
 
 pub mod format;
+pub mod multi;
 pub mod store;
 
 pub use format::{Header, MAGIC, VERSION};
+pub use multi::MultiWriter;
 pub use store::{
     CheckpointBlock, Datastore, DatastoreWriter, OwnedShard, RowsView, Shard, ShardReader,
 };

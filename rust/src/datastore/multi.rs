@@ -1,0 +1,288 @@
+//! Multi-precision datastore fan-out — one extraction pass, every bitwidth.
+//!
+//! The Table-1 sweep needs the same gradient features stored at several
+//! precisions. The legacy path extracted features into a resident fp32
+//! `[n × k]` matrix per checkpoint and re-walked it once per precision —
+//! the exact `n`-proportional footprint the paper's storage argument
+//! removes. [`MultiWriter`] inverts that dataflow: feature rows stream in
+//! as bounded windows, a pool-parallel quantize stage
+//! ([`crate::quant::batch::quantize_rows_into`]) packs each window at
+//! **every** requested precision, and per-precision [`DatastoreWriter`]s
+//! write the packed windows through at their final offsets. Peak builder
+//! memory is `O(window × Σ row_stride)` — independent of the corpus size —
+//! and every produced file is byte-identical to the per-precision legacy
+//! path (`tests/build_stream.rs` locks this in across bitwidth × scheme ×
+//! worker count × window size).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::store::DatastoreWriter;
+use crate::quant::batch::{quantize_rows_into, window_row_bytes};
+use crate::quant::Precision;
+
+/// Streaming fan-out writer: one logical row stream in, one datastore file
+/// per precision out. Drives `begin_checkpoint` / [`Self::append_rows`] /
+/// `end_checkpoint` across all member writers in lockstep.
+pub struct MultiWriter {
+    k: usize,
+    workers: usize,
+    precisions: Vec<Precision>,
+    paths: Vec<PathBuf>,
+    writers: Vec<DatastoreWriter>,
+    /// Reusable per-precision packed-bytes / scales scratch.
+    scratch_bytes: Vec<Vec<u8>>,
+    scratch_scales: Vec<Vec<f32>>,
+    /// High-water mark of builder-resident bytes (incoming fp32 window +
+    /// all per-precision scratch), for the pipeline's stage accounting.
+    peak_bytes: u64,
+}
+
+impl MultiWriter {
+    /// Create one datastore per `(precision, path)` pair for the shared
+    /// geometry. Duplicate precisions are rejected (they would race on
+    /// one path). `workers` caps the quantize-stage parallelism per
+    /// window (0 = the persistent pool's full width).
+    pub fn create(
+        targets: &[(Precision, PathBuf)],
+        n_samples: usize,
+        k: usize,
+        n_checkpoints: usize,
+        workers: usize,
+    ) -> Result<MultiWriter> {
+        if targets.is_empty() {
+            bail!("MultiWriter: no target precisions");
+        }
+        for (i, (p, _)) in targets.iter().enumerate() {
+            if targets[..i].iter().any(|(q, _)| q == p) {
+                bail!("MultiWriter: duplicate precision {}", p.label());
+            }
+        }
+        let mut writers = Vec::with_capacity(targets.len());
+        for (p, path) in targets {
+            writers.push(
+                DatastoreWriter::create(path, *p, n_samples, k, n_checkpoints)
+                    .with_context(|| format!("creating {} datastore", p.label()))?,
+            );
+        }
+        Ok(MultiWriter {
+            k,
+            workers,
+            precisions: targets.iter().map(|(p, _)| *p).collect(),
+            paths: targets.iter().map(|(_, path)| path.clone()).collect(),
+            writers,
+            scratch_bytes: vec![Vec::new(); targets.len()],
+            scratch_scales: vec![Vec::new(); targets.len()],
+            peak_bytes: 0,
+        })
+    }
+
+    /// Builder-resident bytes one streamed row costs across the fp32
+    /// window and every target's packed window — the divisor that turns a
+    /// `--build-mem-budget-mb` into a window row count.
+    pub fn bytes_per_row(k: usize, precisions: &[Precision]) -> u64 {
+        let packed: usize = precisions.iter().map(|p| window_row_bytes(k, *p)).sum();
+        (k * 4 + packed) as u64
+    }
+
+    /// Largest window (in rows) whose builder-resident buffers fit
+    /// `budget_bytes`, floored at 1 so tiny budgets still make progress.
+    pub fn window_rows_for_budget(k: usize, precisions: &[Precision], budget_bytes: u64) -> usize {
+        (budget_bytes / Self::bytes_per_row(k, precisions).max(1)).max(1) as usize
+    }
+
+    /// The target precisions, in creation order.
+    pub fn precisions(&self) -> &[Precision] {
+        &self.precisions
+    }
+
+    /// The target file paths, in creation order.
+    pub fn paths(&self) -> &[PathBuf] {
+        &self.paths
+    }
+
+    /// Start the next checkpoint block (LR weight η) in every member.
+    pub fn begin_checkpoint(&mut self, eta: f32) -> Result<()> {
+        for w in &mut self.writers {
+            w.begin_checkpoint(eta)?;
+        }
+        Ok(())
+    }
+
+    /// Append a window of `rows.len() / k` feature rows (in sample order):
+    /// quantize the window at every precision on the pool, then write each
+    /// packed result through its member writer. The caller bounds the
+    /// window size; this never buffers beyond one window per precision.
+    pub fn append_rows(&mut self, rows: &[f32]) -> Result<()> {
+        if rows.len() % self.k != 0 {
+            bail!("append_rows: {} floats is not a whole number of k={} rows", rows.len(), self.k);
+        }
+        let mut resident = rows.len() as u64 * 4;
+        for (i, p) in self.precisions.iter().enumerate() {
+            quantize_rows_into(
+                rows,
+                self.k,
+                *p,
+                &mut self.scratch_bytes[i],
+                &mut self.scratch_scales[i],
+                self.workers,
+            )
+            .with_context(|| format!("quantizing window for {}", p.label()))?;
+            self.writers[i]
+                .append_packed_window(&self.scratch_scales[i], &self.scratch_bytes[i])
+                .with_context(|| format!("writing window to {}", p.label()))?;
+            resident +=
+                (self.scratch_bytes[i].capacity() + 4 * self.scratch_scales[i].capacity()) as u64;
+        }
+        self.peak_bytes = self.peak_bytes.max(resident);
+        Ok(())
+    }
+
+    /// Finish the current checkpoint block in every member.
+    pub fn end_checkpoint(&mut self) -> Result<()> {
+        for w in &mut self.writers {
+            w.end_checkpoint()?;
+        }
+        Ok(())
+    }
+
+    /// High-water mark of builder-resident bytes (incoming fp32 window +
+    /// per-precision packed scratch) across all [`Self::append_rows`]
+    /// calls so far.
+    pub fn peak_builder_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    /// Finalize every member store; returns the file sizes in creation
+    /// order.
+    pub fn finalize(self) -> Result<Vec<u64>> {
+        let mut sizes = Vec::with_capacity(self.writers.len());
+        for (w, p) in self.writers.into_iter().zip(&self.precisions) {
+            sizes.push(w.finalize().with_context(|| format!("finalizing {}", p.label()))?);
+        }
+        Ok(sizes)
+    }
+}
+
+/// Canonical `(precision, path)` targets for a run directory — each
+/// precision at its [`super::default_store_path`].
+pub fn default_targets(run_dir: &Path, precisions: &[Precision]) -> Vec<(Precision, PathBuf)> {
+    precisions.iter().map(|p| (*p, super::default_store_path(run_dir, *p))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::Datastore;
+    use crate::quant::Scheme;
+    use crate::util::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "qless_multi_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rows(n: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * k).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn sweep() -> Vec<Precision> {
+        [16u8, 8, 4, 2, 1]
+            .iter()
+            .map(|&b| {
+                Precision::new(b, if b == 1 { Scheme::Sign } else { Scheme::Absmax }).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn one_pass_emits_all_precisions_byte_identical_to_legacy() {
+        let dir = tmpdir("fanout");
+        let (n, k, c) = (17usize, 96usize, 2usize);
+        let ps = sweep();
+        let targets = default_targets(&dir, &ps);
+        let mut mw = MultiWriter::create(&targets, n, k, c, 0).unwrap();
+        for ci in 0..c {
+            mw.begin_checkpoint(0.4 * (ci + 1) as f32).unwrap();
+            let data = rows(n, k, ci as u64);
+            // stream in ragged windows (5 + 5 + 7 rows)
+            for (lo, hi) in [(0usize, 5usize), (5, 10), (10, n)] {
+                mw.append_rows(&data[lo * k..hi * k]).unwrap();
+            }
+            mw.end_checkpoint().unwrap();
+        }
+        assert!(mw.peak_builder_bytes() > 0);
+        let sizes = mw.finalize().unwrap();
+        assert_eq!(sizes.len(), ps.len());
+
+        for (p, path) in &targets {
+            let legacy = dir.join(format!("legacy_{}b.qlds", p.bits));
+            let mut w = DatastoreWriter::create(&legacy, *p, n, k, c).unwrap();
+            for ci in 0..c {
+                w.begin_checkpoint(0.4 * (ci + 1) as f32).unwrap();
+                let data = rows(n, k, ci as u64);
+                for i in 0..n {
+                    w.append_features(&data[i * k..(i + 1) * k]).unwrap();
+                }
+                w.end_checkpoint().unwrap();
+            }
+            w.finalize().unwrap();
+            assert_eq!(
+                std::fs::read(path).unwrap(),
+                std::fs::read(&legacy).unwrap(),
+                "{} file differs from legacy path",
+                p.label()
+            );
+            let ds = Datastore::open(path).unwrap();
+            assert!(ds.matches_geometry(*p, n, k, c));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_duplicate_precisions_and_empty_targets() {
+        let dir = tmpdir("dup");
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let targets = vec![(p, dir.join("a.qlds")), (p, dir.join("b.qlds"))];
+        assert!(MultiWriter::create(&targets, 4, 8, 1, 0).is_err());
+        assert!(MultiWriter::create(&[], 4, 8, 1, 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_to_window_rows() {
+        let ps = sweep();
+        let k = 512usize;
+        // fp32 row (2048 B) + Σ packed rows: 1024 + (512+4) + (256+4) +
+        // (128+4) + (64+4) per row
+        let per_row = MultiWriter::bytes_per_row(k, &ps);
+        assert_eq!(per_row, 2048 + 1024 + 516 + 260 + 132 + 68);
+        assert_eq!(MultiWriter::window_rows_for_budget(k, &ps, 10 * per_row), 10);
+        assert_eq!(MultiWriter::window_rows_for_budget(k, &ps, 0), 1); // floor
+    }
+
+    #[test]
+    fn lockstep_protocol_is_enforced() {
+        let dir = tmpdir("proto");
+        let ps = vec![Precision::new(8, Scheme::Absmax).unwrap()];
+        let targets = default_targets(&dir, &ps);
+        let (n, k) = (3usize, 8usize);
+        let mut mw = MultiWriter::create(&targets, n, k, 1, 2).unwrap();
+        assert!(mw.append_rows(&rows(1, k, 0)).is_err()); // before begin
+        mw.begin_checkpoint(1.0).unwrap();
+        assert!(mw.append_rows(&[0.0; 3]).is_err()); // ragged
+        mw.append_rows(&rows(n, k, 1)).unwrap();
+        assert!(mw.append_rows(&rows(1, k, 2)).is_err()); // too many rows
+        mw.end_checkpoint().unwrap();
+        let sizes = mw.finalize().unwrap();
+        assert_eq!(sizes.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

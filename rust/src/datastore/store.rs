@@ -1,15 +1,21 @@
 //! Datastore writer / readers over the `format` layout.
 //!
-//! The writer streams rows checkpoint-by-checkpoint (constant memory, fed
-//! by the extraction pipeline). Two readers share the layout: the
-//! whole-block loader ([`Datastore::load_checkpoint`], `O(block)`
-//! resident) and the streaming [`ShardReader`] the influence scan uses —
-//! fixed-size row shards under a memory budget, still sequential within a
-//! checkpoint, `O(shard)` resident. Both decode rows through [`RowsView`],
-//! so they are byte- and score-identical.
+//! The writer streams rows checkpoint-by-checkpoint under a **bounded
+//! staging window**: rows (and their scales) are buffered up to
+//! `window_rows`, then flushed with positioned writes to their final
+//! offsets — the scales section precedes the rows on disk, but seeks let
+//! both stream out incrementally, so peak writer memory is `O(window)`,
+//! never `O(n)`. [`DatastoreWriter::append_packed_window`] additionally
+//! lets the multi-precision builder ([`crate::datastore::MultiWriter`])
+//! write pre-quantized windows straight through. Two readers share the
+//! layout: the whole-block loader ([`Datastore::load_checkpoint`],
+//! `O(block)` resident) and the streaming [`ShardReader`] the influence
+//! scan uses — fixed-size row shards under a memory budget, still
+//! sequential within a checkpoint, `O(shard)` resident. Both decode rows
+//! through [`RowsView`], so they are byte- and score-identical.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -24,20 +30,30 @@ use crate::util::bits::{bf16_to_f32, f32_to_bf16};
 // writer
 // ---------------------------------------------------------------------------
 
+/// Default staging-window size for the per-row append path (bytes of
+/// packed rows buffered before a positioned flush).
+const DEFAULT_WINDOW_BYTES: u64 = 4 << 20;
+
 /// Streaming datastore writer: header up front, then one block per
 /// checkpoint (`begin_checkpoint` → `append_features`× → `end_checkpoint`),
-/// validated against the header's geometry at `finalize`.
+/// validated against the header's geometry at `finalize`. Peak resident
+/// memory is one staging window (see [`Self::set_window_rows`]), not the
+/// checkpoint block.
 pub struct DatastoreWriter {
-    file: BufWriter<File>,
+    file: File,
     path: PathBuf,
     header: Header,
     ckpt_open: bool,
     rows_in_ckpt: u64,
     ckpts_done: u32,
+    /// Scales staged for the buffered rows (bits < 16 only).
     scales: Vec<f32>,
-    /// Row bytes buffered until `end_checkpoint` (the scales section
-    /// precedes the rows on disk, but scales arrive row by row).
+    /// Row bytes staged since the last flush.
     row_buf: Vec<u8>,
+    /// Global row index of the first staged row.
+    win_start: u64,
+    /// Staged rows per flush (the memory bound).
+    window_rows: usize,
 }
 
 impl DatastoreWriter {
@@ -54,10 +70,10 @@ impl DatastoreWriter {
             std::fs::create_dir_all(parent)?;
         }
         let header = Header::new(precision, n_samples, k, n_checkpoints);
-        let mut file = BufWriter::new(
-            File::create(path).with_context(|| format!("creating datastore {path:?}"))?,
-        );
+        let mut file = File::create(path).with_context(|| format!("creating datastore {path:?}"))?;
         file.write_all(&header.encode())?;
+        let window_rows = (DEFAULT_WINDOW_BYTES / header.resident_row_bytes().max(1))
+            .clamp(1, (n_samples as u64).max(1)) as usize;
         Ok(DatastoreWriter {
             file,
             path: path.to_path_buf(),
@@ -67,7 +83,18 @@ impl DatastoreWriter {
             ckpts_done: 0,
             scales: Vec::new(),
             row_buf: Vec::new(),
+            win_start: 0,
+            window_rows,
         })
+    }
+
+    /// Bound the staging window to `rows` rows (floored at 1). The default
+    /// stages ~4 MiB of packed rows between flushes; callers appending
+    /// row-by-row under a tighter memory budget shrink it here. Flush
+    /// cadence is invisible on disk — every window size produces identical
+    /// bytes (`window_size_does_not_change_bytes`).
+    pub fn set_window_rows(&mut self, rows: usize) {
+        self.window_rows = rows.max(1);
     }
 
     /// Start the block for the next checkpoint with its LR weight η_i.
@@ -78,9 +105,11 @@ impl DatastoreWriter {
         if self.ckpts_done >= self.header.n_checkpoints {
             bail!("too many checkpoints");
         }
+        self.file.seek(SeekFrom::Start(self.header.block_offset(self.ckpts_done as usize)))?;
         self.file.write_all(&eta.to_le_bytes())?;
         self.scales.clear();
-        self.scales.reserve(self.header.n_samples as usize);
+        self.row_buf.clear();
+        self.win_start = 0;
         self.ckpt_open = true;
         self.rows_in_ckpt = 0;
         Ok(())
@@ -178,10 +207,81 @@ impl DatastoreWriter {
         }
         self.row_buf.extend_from_slice(bytes);
         self.rows_in_ckpt += 1;
+        if self.row_buf.len() >= self.window_rows * self.header.row_stride as usize {
+            self.flush_window()?;
+        }
         Ok(())
     }
 
-    /// Finish the current checkpoint block (writes scales, then rows).
+    /// Positioned write of one window — `scales` to the block's scales
+    /// section, `bytes` to the row section, both at their final offsets
+    /// starting at `win_start` — advancing `win_start` past it. The single
+    /// offset-math site behind both the staged flush and the pre-packed
+    /// window path.
+    fn write_window_at(&mut self, scales: &[f32], bytes: &[u8]) -> Result<()> {
+        let rows = bytes.len() / (self.header.row_stride as usize).max(1);
+        if rows == 0 {
+            return Ok(());
+        }
+        let c = self.ckpts_done as usize;
+        if self.header.precision.bits != 16 {
+            self.file
+                .seek(SeekFrom::Start(self.header.scales_offset(c) + 4 * self.win_start))?;
+            let mut sb = Vec::with_capacity(4 * scales.len());
+            for s in scales {
+                sb.extend_from_slice(&s.to_le_bytes());
+            }
+            self.file.write_all(&sb)?;
+        }
+        self.file.seek(SeekFrom::Start(self.header.row_offset(c, self.win_start)))?;
+        self.file.write_all(bytes)?;
+        self.win_start += rows as u64;
+        Ok(())
+    }
+
+    /// Flush the staged window through [`Self::write_window_at`], keeping
+    /// the buffers' capacity for the next window.
+    fn flush_window(&mut self) -> Result<()> {
+        let scales = std::mem::take(&mut self.scales);
+        let row_buf = std::mem::take(&mut self.row_buf);
+        let res = self.write_window_at(&scales, &row_buf);
+        self.scales = scales;
+        self.scales.clear();
+        self.row_buf = row_buf;
+        self.row_buf.clear();
+        res
+    }
+
+    /// Append a pre-quantized window of rows: `bytes` holds
+    /// `n × row_stride` packed rows and `scales` their `n` row scales
+    /// (empty at 16-bit). The window is written through at its final
+    /// offsets — no staging copy — which is the multi-precision builder's
+    /// fan-out path ([`crate::quant::batch::quantize_rows_into`] produces
+    /// exactly this layout, byte-identical to the per-row
+    /// [`Self::append_features`] loop).
+    pub fn append_packed_window(&mut self, scales: &[f32], bytes: &[u8]) -> Result<()> {
+        if !self.ckpt_open {
+            bail!("append before begin_checkpoint");
+        }
+        let stride = self.header.row_stride as usize;
+        if stride == 0 || bytes.len() % stride != 0 {
+            bail!("window of {} bytes is not a whole number of {stride}-byte rows", bytes.len());
+        }
+        let n = bytes.len() / stride;
+        let expect_scales = if self.header.precision.bits == 16 { 0 } else { n };
+        if scales.len() != expect_scales {
+            bail!("window has {} scales for {n} rows (expected {expect_scales})", scales.len());
+        }
+        if self.rows_in_ckpt + n as u64 > self.header.n_samples {
+            bail!("too many rows in checkpoint");
+        }
+        self.flush_window()?; // anything staged goes first, in row order
+        self.write_window_at(scales, bytes)?;
+        self.rows_in_ckpt += n as u64;
+        Ok(())
+    }
+
+    /// Finish the current checkpoint block (flushes the staged window).
     pub fn end_checkpoint(&mut self) -> Result<()> {
         if !self.ckpt_open {
             bail!("end_checkpoint without begin");
@@ -189,13 +289,7 @@ impl DatastoreWriter {
         if self.rows_in_ckpt != self.header.n_samples {
             bail!("checkpoint has {} rows, expected {}", self.rows_in_ckpt, self.header.n_samples);
         }
-        if self.header.precision.bits != 16 {
-            for s in &self.scales {
-                self.file.write_all(&s.to_le_bytes())?;
-            }
-        }
-        self.file.write_all(&self.row_buf)?;
-        self.row_buf.clear();
+        self.flush_window()?;
         self.ckpt_open = false;
         self.ckpts_done += 1;
         Ok(())
@@ -368,6 +462,24 @@ impl Datastore {
     /// Number of checkpoint blocks in the store.
     pub fn n_checkpoints(&self) -> usize {
         self.header.n_checkpoints as usize
+    }
+
+    /// True when the store's header matches the given geometry exactly —
+    /// the cache-reuse guard: a `run_dir` left over from a different
+    /// corpus size, projection dim, checkpoint count or precision must be
+    /// rebuilt, not silently served
+    /// (`Pipeline::build_datastores` checks this before reusing a file).
+    pub fn matches_geometry(
+        &self,
+        precision: Precision,
+        n_samples: usize,
+        k: usize,
+        n_checkpoints: usize,
+    ) -> bool {
+        self.header.precision == precision
+            && self.header.n_samples == n_samples as u64
+            && self.header.k == k as u64
+            && self.header.n_checkpoints == n_checkpoints as u32
     }
 
     /// Number of sample rows per checkpoint block.
@@ -966,6 +1078,133 @@ mod tests {
             }
             assert_eq!(seen, n);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn window_size_does_not_change_bytes() {
+        // The staged-window flush cadence is invisible on disk: every
+        // window size (including 1 and one that doesn't divide n) must
+        // produce the exact bytes of the single-flush path.
+        let dir = tmpdir();
+        let (n, k, c) = (13usize, 96usize, 2usize);
+        for bits in [16u8, 8, 4, 2, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let write = |path: &Path, window: Option<usize>| -> Vec<u8> {
+                let mut w = DatastoreWriter::create(path, p, n, k, c).unwrap();
+                if let Some(win) = window {
+                    w.set_window_rows(win);
+                }
+                for ci in 0..c {
+                    w.begin_checkpoint(0.3 * (ci + 1) as f32).unwrap();
+                    for row in features(n, k, ci as u64) {
+                        w.append_features(&row).unwrap();
+                    }
+                    w.end_checkpoint().unwrap();
+                }
+                w.finalize().unwrap();
+                std::fs::read(path).unwrap()
+            };
+            let reference = write(&dir.join(format!("win_ref_{bits}.qlds")), None);
+            for win in [1usize, 4, 5, n, n + 9] {
+                let got = write(&dir.join(format!("win_{bits}_{win}.qlds")), Some(win));
+                assert_eq!(got, reference, "{bits}-bit window {win}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_window_append_matches_per_row_path() {
+        let dir = tmpdir();
+        let (n, k, c) = (11usize, 64usize, 2usize);
+        for bits in [16u8, 8, 4, 1] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let per_row = dir.join(format!("pw_row_{bits}.qlds"));
+            let mut w = DatastoreWriter::create(&per_row, p, n, k, c).unwrap();
+            for ci in 0..c {
+                w.begin_checkpoint(0.2 * (ci + 1) as f32).unwrap();
+                for row in features(n, k, ci as u64) {
+                    w.append_features(&row).unwrap();
+                }
+                w.end_checkpoint().unwrap();
+            }
+            w.finalize().unwrap();
+
+            // same rows through the pre-quantized window path, split into
+            // two uneven windows per checkpoint
+            let windowed = dir.join(format!("pw_win_{bits}.qlds"));
+            let mut w = DatastoreWriter::create(&windowed, p, n, k, c).unwrap();
+            for ci in 0..c {
+                w.begin_checkpoint(0.2 * (ci + 1) as f32).unwrap();
+                let rows: Vec<f32> =
+                    features(n, k, ci as u64).into_iter().flatten().collect();
+                let (mut bytes, mut scales) = (Vec::new(), Vec::new());
+                for (lo, hi) in [(0usize, 7usize), (7, n)] {
+                    crate::quant::batch::quantize_rows_into(
+                        &rows[lo * k..hi * k],
+                        k,
+                        p,
+                        &mut bytes,
+                        &mut scales,
+                        0,
+                    )
+                    .unwrap();
+                    w.append_packed_window(&scales, &bytes).unwrap();
+                }
+                w.end_checkpoint().unwrap();
+            }
+            w.finalize().unwrap();
+            assert_eq!(
+                std::fs::read(&per_row).unwrap(),
+                std::fs::read(&windowed).unwrap(),
+                "{bits}-bit"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_window_validates_shape() {
+        let dir = tmpdir();
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = dir.join("pw_shape.qlds");
+        let mut w = DatastoreWriter::create(&path, p, 4, 8, 1).unwrap();
+        assert!(w.append_packed_window(&[1.0], &[0u8; 8]).is_err()); // before begin
+        w.begin_checkpoint(1.0).unwrap();
+        assert!(w.append_packed_window(&[1.0], &[0u8; 9]).is_err()); // ragged bytes
+        assert!(w.append_packed_window(&[1.0, 1.0], &[0u8; 8]).is_err()); // scale count
+        assert!(w.append_packed_window(&[1.0; 5], &[0u8; 40]).is_err()); // too many rows
+        w.append_packed_window(&[1.0; 4], &[7u8; 32]).unwrap();
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn geometry_match_guards_cache_reuse() {
+        let dir = tmpdir();
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let path = dir.join("geom.qlds");
+        let (n, k, c) = (6usize, 32usize, 2usize);
+        let mut w = DatastoreWriter::create(&path, p, n, k, c).unwrap();
+        for ci in 0..c {
+            w.begin_checkpoint(1.0).unwrap();
+            for row in features(n, k, ci as u64) {
+                w.append_features(&row).unwrap();
+            }
+            w.end_checkpoint().unwrap();
+        }
+        w.finalize().unwrap();
+        let ds = Datastore::open(&path).unwrap();
+        assert!(ds.matches_geometry(p, n, k, c));
+        assert!(!ds.matches_geometry(p, n + 1, k, c)); // stale corpus size
+        assert!(!ds.matches_geometry(p, n, k * 2, c)); // different projection
+        assert!(!ds.matches_geometry(p, n, k, c + 1)); // checkpoint count
+        let p2 = Precision::new(4, Scheme::Absmean).unwrap();
+        assert!(!ds.matches_geometry(p2, n, k, c)); // scheme mismatch
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -59,7 +59,9 @@ pub fn fig3(base_cfg: &Config, scale: Scale) -> Result<()> {
     cfg.corpus_size = cfg.corpus_size.min(1200);
     cfg.run_dir = format!("runs/fig3_{model}_s{}", cfg.seed);
     let mut pipe = Pipeline::new(cfg)?;
-    let feats = pipe.train_features()?;
+    // dense features are the explicit small-run opt-in (fig3 shrinks the
+    // corpus above); the datastore build path streams instead
+    let feats = pipe.train_features_dense()?;
     let block0 = &feats[0];
 
     let mut report = Report::new("fig3", "Quantization bin occupancy (paper Fig. 3)");
@@ -164,6 +166,12 @@ pub fn fig5(base_cfg: &Config, scale: Scale) -> Result<()> {
 
     let mut report = Report::new("fig5", "Top-5% subset composition per quantization level (paper Fig. 5)");
     let mut j = Json::obj();
+    // one extraction pass emits all five precision datastores
+    let precisions: Vec<Precision> = [16u8, 8, 4, 2, 1]
+        .iter()
+        .map(|&b| Precision::new(b, if b == 1 { Scheme::Sign } else { Scheme::Absmax }).unwrap())
+        .collect();
+    let stores = pipe.build_datastores(&precisions)?;
     for bench in Benchmark::ALL {
         let mut t = Table::new(
             &format!("{bench} (aligned source: {})", bench.aligned_source()),
@@ -171,11 +179,9 @@ pub fn fig5(base_cfg: &Config, scale: Scale) -> Result<()> {
         );
         let mut dist16: Option<SourceDistribution> = None;
         let mut j_b = Json::obj();
-        for bits in [16u8, 8, 4, 2, 1] {
-            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
-            let p = Precision::new(bits, scheme).unwrap();
-            let (ds, _) = pipe.build_datastore(p)?;
-            let scores = pipe.influence_scores(&ds, bench)?;
+        for (p, (ds, _)) in precisions.iter().zip(&stores) {
+            let (bits, p) = (p.bits, *p);
+            let scores = pipe.influence_scores(ds, bench)?;
             let sel = select_top_frac(&scores, cfg.select_frac);
             let dist = SourceDistribution::of(&pipe.corpus.samples, &sel);
             let l1 = dist16.as_ref().map(|d| format!("{:.3}", d.l1_distance(&dist))).unwrap_or("-".into());

@@ -73,6 +73,16 @@ pub fn table1(base_cfg: &Config, scale: Scale) -> Result<()> {
         scale.apply(&mut cfg, model);
         cfg.run_dir = format!("runs/table1_{model}_s{}", cfg.seed);
         let mut pipe = Pipeline::new(cfg.clone())?;
+        // ONE streamed extraction pass pre-builds every method's datastore
+        // (the Table-1 sweep); run_method then reuses them from cache
+        let sweep: Vec<Precision> = table1_methods()
+            .iter()
+            .filter_map(|m| match m {
+                Method::Qless(p) => Some(*p),
+                _ => None,
+            })
+            .collect();
+        pipe.build_datastores(&sweep)?;
         let mut t = Table::new(
             &format!("SimLM-{model} ({} params)", pipe.info.d_base + pipe.info.d_lora),
             &["Data Selection", "Storage", "SynQA", "SynMC", "SynArith", "Avg"],
@@ -121,6 +131,10 @@ pub fn table2(base_cfg: &Config, scale: Scale) -> Result<()> {
         cfg.model_bits = model_bits;
         cfg.run_dir = format!("runs/table2_{model}_m{model_bits}_s{}", cfg.seed);
         let mut pipe = Pipeline::new(cfg)?;
+        // one extraction pass per model-bits cell covers its grad-Q row
+        let sweep: Vec<Precision> =
+            grad_bits.iter().map(|&b| Precision::new(b, Scheme::Absmax).unwrap()).collect();
+        pipe.build_datastores(&sweep)?;
         let mut mb_json = Json::obj();
         for &bits in grad_bits {
             let p = Precision::new(bits, Scheme::Absmax).unwrap();
@@ -170,6 +184,10 @@ pub fn table3(base_cfg: &Config, scale: Scale) -> Result<()> {
         runs.push(("Absmean".into(), Precision::new(b, Scheme::Absmean).unwrap()));
     }
     runs.push(("Sign".into(), Precision::new(1, Scheme::Sign).unwrap()));
+
+    // one extraction pass emits the whole scheme × bitwidth grid
+    let sweep: Vec<Precision> = runs.iter().map(|(_, p)| *p).collect();
+    pipe.build_datastores(&sweep)?;
 
     for (scheme_label, p) in runs {
         let r = pipe.run_method(Method::Qless(p))?;

@@ -3,8 +3,11 @@
 //! For one checkpoint: upload the checkpoint-lifetime operands (base, lora,
 //! m, v, R) once as device buffers, then fan batches out to `workers`
 //! threads that each call the `grad_train` graph; features stream back in
-//! order through a [`Reorderer`] into a dense `[n × k]` matrix (or straight
-//! into a datastore writer via the pipeline module).
+//! order through a [`Reorderer`] to a caller-supplied **row sink**
+//! ([`extract_train_features_stream`]) — the streaming multi-precision
+//! datastore builder's input side — or into a dense `[n × k]` matrix
+//! ([`extract_train_features`], the explicit small-run opt-in that
+//! materializes `n × k × 4` bytes).
 
 use std::sync::Arc;
 
@@ -32,7 +35,13 @@ impl FeatureMatrix {
 }
 
 /// Extract Adam-preconditioned projected gradients Γ(z;θ)·R for every
-/// sample of `data` at checkpoint `ckpt` (paper §2.2 / Eq. 1).
+/// sample of `data` at checkpoint `ckpt` (paper §2.2 / Eq. 1) into a dense
+/// resident matrix.
+///
+/// This is the **small-run opt-in**: it materializes `n × k × 4` bytes.
+/// The datastore build path must NOT go through this — it streams rows via
+/// [`extract_train_features_stream`] so peak memory stays independent of
+/// the corpus size.
 pub fn extract_train_features(
     rt: &Runtime,
     info: &ModelInfo,
@@ -42,10 +51,11 @@ pub fn extract_train_features(
     proj: &Projector,
     workers: usize,
 ) -> Result<FeatureMatrix> {
-    extract_features(rt, info, base, ckpt, data, proj, workers, true)
+    extract_features_dense(rt, info, base, ckpt, data, proj, workers, true)
 }
 
 /// Extract plain SGD projected gradients ∇ℓ(z';θ)·R (validation side).
+/// Dense is fine here: validation sets are tiny (`val_per_task` rows).
 pub fn extract_val_features(
     rt: &Runtime,
     info: &ModelInfo,
@@ -55,11 +65,41 @@ pub fn extract_val_features(
     proj: &Projector,
     workers: usize,
 ) -> Result<FeatureMatrix> {
-    extract_features(rt, info, base, ckpt, data, proj, workers, false)
+    extract_features_dense(rt, info, base, ckpt, data, proj, workers, false)
+}
+
+/// Stream Adam-preconditioned train features **in sample order** to
+/// `sink(start_row, rows)`, where `rows` is a contiguous chunk of
+/// `rows.len() / k` feature rows beginning at global row `start_row`.
+/// Chunks tile `0..n` exactly once, ascending. Only the in-flight batches
+/// are ever resident — this is the streaming datastore builder's input.
+/// A sink error aborts the extraction and is returned to the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn extract_train_features_stream<F>(
+    rt: &Runtime,
+    info: &ModelInfo,
+    base: &[f32],
+    ckpt: &Checkpoint,
+    data: &Dataset,
+    proj: &Projector,
+    workers: usize,
+    mut sink: F,
+) -> Result<()>
+where
+    F: FnMut(usize, &[f32]) -> Result<()> + Send,
+{
+    let k = info.proj_dim;
+    extract_features_sink(rt, info, base, ckpt, data, proj, workers, true, |indices, rows| {
+        // Batcher::sequential yields contiguous ascending indices; the
+        // stream contract (ascending tiling chunks) depends on it.
+        debug_assert!(indices.windows(2).all(|w| w[1] == w[0] + 1));
+        debug_assert_eq!(rows.len(), indices.len() * k);
+        sink(indices[0], rows)
+    })
 }
 
 #[allow(clippy::too_many_arguments)]
-fn extract_features(
+fn extract_features_dense(
     rt: &Runtime,
     info: &ModelInfo,
     base: &[f32],
@@ -69,6 +109,37 @@ fn extract_features(
     workers: usize,
     adam: bool,
 ) -> Result<FeatureMatrix> {
+    let (n, k) = (data.len(), info.proj_dim);
+    let mut out = vec![0f32; n * k];
+    extract_features_sink(rt, info, base, ckpt, data, proj, workers, adam, |indices, rows| {
+        for (r, &idx) in indices.iter().enumerate() {
+            out[idx * k..(idx + 1) * k].copy_from_slice(&rows[r * k..(r + 1) * k]);
+        }
+        Ok(())
+    })?;
+    Ok(FeatureMatrix { n, k, data: out })
+}
+
+/// The shared extraction engine: producer → workers → in-order consumer,
+/// handing each batch's real rows (indices + features) to `sink` in
+/// sequence order. On a sink error the remaining in-flight results are
+/// drained (not processed) so the worker pool shuts down cleanly, then the
+/// error is returned.
+#[allow(clippy::too_many_arguments)]
+fn extract_features_sink<F>(
+    rt: &Runtime,
+    info: &ModelInfo,
+    base: &[f32],
+    ckpt: &Checkpoint,
+    data: &Dataset,
+    proj: &Projector,
+    workers: usize,
+    adam: bool,
+    mut sink: F,
+) -> Result<()>
+where
+    F: FnMut(&[usize], &[f32]) -> Result<()> + Send,
+{
     assert_eq!(proj.d, info.d_lora);
     assert_eq!(proj.k, info.proj_dim);
     let (b, s, k) = (info.batch_grad, info.seq, info.proj_dim);
@@ -92,18 +163,18 @@ fn extract_features(
     };
 
     let n = data.len();
-    let mut out = vec![0f32; n * k];
     let t0 = std::time::Instant::now();
 
     // SAFETY-free concurrency: batches are produced on the caller thread,
-    // executed by `workers` threads, and written back in order.
-    let out_cell = std::sync::Mutex::new(&mut out);
+    // executed by `workers` threads, and handed to the sink in order.
     pipeline(
         workers,
         workers * 2,
         |tx| {
             for (i, batch) in Batcher::sequential(data, b).enumerate() {
-                tx.send((i, batch)).expect("extraction worker pool died");
+                if tx.send((i, batch)).is_err() {
+                    return; // consumer aborted (sink or worker error)
+                }
             }
         },
         |_seq, batch: Batch| -> Result<(Vec<usize>, Vec<f32>)> {
@@ -128,19 +199,34 @@ fn extract_features(
         |rx| -> Result<()> {
             let mut reorder = Reorderer::new();
             let mut done = 0usize;
+            let mut fail: Option<anyhow::Error> = None;
             for (seq, res) in rx {
-                let (indices, feats) = res?;
-                reorder.push(seq, (indices, feats), |_, (indices, feats)| {
-                    let mut guard = out_cell.lock().unwrap();
-                    for (row, &idx) in indices.iter().enumerate() {
-                        guard[idx * k..(idx + 1) * k]
-                            .copy_from_slice(&feats[row * k..(row + 1) * k]);
+                if fail.is_some() {
+                    continue; // drain remaining in-flight results
+                }
+                match res {
+                    Ok((indices, feats)) => {
+                        let mut sink_err = None;
+                        reorder.push(seq, (indices, feats), |_, (indices, feats)| {
+                            if sink_err.is_some() {
+                                return;
+                            }
+                            let take = indices.len() * k;
+                            match sink(&indices, &feats[..take]) {
+                                Ok(()) => done += indices.len(),
+                                Err(e) => sink_err = Some(e),
+                            }
+                        });
+                        fail = sink_err;
                     }
-                    done += indices.len();
-                });
+                    Err(e) => fail = Some(e),
+                }
             }
             debug!("extraction consumer wrote {done} rows");
-            Ok(())
+            match fail {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
         },
     )?;
 
@@ -149,7 +235,7 @@ fn extract_features(
         t0.elapsed().as_secs_f64(),
         n as f64 / t0.elapsed().as_secs_f64().max(1e-9)
     );
-    Ok(FeatureMatrix { n, k, data: out })
+    Ok(())
 }
 
 #[cfg(test)]
@@ -193,6 +279,43 @@ mod tests {
             let norm: f32 = a.row(i).iter().map(|x| x * x).sum();
             assert!(norm > 0.0, "zero gradient row {i}");
         }
+    }
+
+    #[test]
+    fn stream_matches_dense_and_tiles_in_order() {
+        let Some(rt) = rt() else {
+            return;
+        };
+        let (info, base, ckpt, data, proj) = setup(&rt);
+        let dense = extract_train_features(&rt, &info, &base, &ckpt, &data, &proj, 3).unwrap();
+        let k = info.proj_dim;
+        let mut streamed = vec![f32::NAN; data.len() * k];
+        let mut next = 0usize;
+        extract_train_features_stream(&rt, &info, &base, &ckpt, &data, &proj, 3, |start, rows| {
+            assert_eq!(start, next, "chunks must tile ascending");
+            streamed[start * k..start * k + rows.len()].copy_from_slice(rows);
+            next = start + rows.len() / k;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(next, data.len());
+        for i in 0..dense.data.len() {
+            assert!((dense.data[i] - streamed[i]).abs() < 1e-6, "idx {i}");
+        }
+
+        // a sink error must abort the stream and surface the error
+        let err = extract_train_features_stream(
+            &rt,
+            &info,
+            &base,
+            &ckpt,
+            &data,
+            &proj,
+            2,
+            |_start, _rows| anyhow::bail!("sink says no"),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("sink says no"));
     }
 
     #[test]

@@ -10,5 +10,7 @@
 pub mod extractor;
 pub mod projector;
 
-pub use extractor::{extract_train_features, extract_val_features, FeatureMatrix};
+pub use extractor::{
+    extract_train_features, extract_train_features_stream, extract_val_features, FeatureMatrix,
+};
 pub use projector::Projector;

@@ -286,14 +286,8 @@ pub fn score_datastore(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datastore::DatastoreWriter;
     use crate::quant::{Precision, Scheme};
-    use crate::util::Rng;
-
-    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-        let mut rng = Rng::new(seed);
-        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-    }
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
 
     /// Build a datastore and keep its file alive (Datastore reads lazily).
     fn build_ds_keep(bits: u8, etas: &[f32], n: usize, k: usize) -> (Datastore, std::path::PathBuf) {
@@ -306,17 +300,8 @@ mod tests {
             std::process::id(),
             std::thread::current().id()
         ));
-        let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
-        for (ci, &eta) in etas.iter().enumerate() {
-            let f = feats(n, k, ci as u64);
-            w.begin_checkpoint(eta).unwrap();
-            for i in 0..n {
-                w.append_features(f.row(i)).unwrap();
-            }
-            w.end_checkpoint().unwrap();
-        }
-        w.finalize().unwrap();
-        (Datastore::open(&path).unwrap(), path)
+        // block ci holds normal_features(n, k, ci) — seed base 0
+        (seeded_datastore(&path, p, n, k, etas, 0), path)
     }
 
     #[test]

@@ -426,8 +426,8 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datastore::{Datastore, DatastoreWriter};
     use crate::quant::Scheme;
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
     use crate::util::Rng;
     use std::path::PathBuf;
 
@@ -439,24 +439,11 @@ mod tests {
         ))
     }
 
-    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-        let mut rng = Rng::new(seed);
-        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-    }
-
     fn make_block(bits: u8, n: usize, k: usize, seed: u64) -> CheckpointBlock {
         let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
         let p = Precision::new(bits, scheme).unwrap();
         let path = tmpfile(&format!("b{bits}_{seed}"));
-        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
-        let f = feats(n, k, seed);
-        w.begin_checkpoint(1.0).unwrap();
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-        w.finalize().unwrap();
-        let ds = Datastore::open(&path).unwrap();
+        let ds = seeded_datastore(&path, p, n, k, &[1.0], seed);
         let block = ds.load_checkpoint(0).unwrap();
         std::fs::remove_file(&path).ok();
         block
@@ -503,15 +490,8 @@ mod tests {
                 let p = Precision::new(bits, scheme).unwrap();
                 let path = tmpfile(&format!("int{bits}_{scheme}"));
                 let (n, k) = (9usize, 97usize);
-                let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
-                let f = feats(n, k, 31);
-                w.begin_checkpoint(1.0).unwrap();
-                for i in 0..n {
-                    w.append_features(f.row(i)).unwrap();
-                }
-                w.end_checkpoint().unwrap();
-                w.finalize().unwrap();
-                let block = Datastore::open(&path).unwrap().load_checkpoint(0).unwrap();
+                let ds = seeded_datastore(&path, p, n, k, &[1.0], 31);
+                let block = ds.load_checkpoint(0).unwrap();
                 std::fs::remove_file(&path).ok();
                 let val = ValFeatures::prepare(&feats(4, k, 32), p);
                 let dense = scores_dense(&block, &val);

@@ -112,10 +112,8 @@ pub fn scores_xla_rows(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datastore::DatastoreWriter;
-    use crate::grads::FeatureMatrix;
     use crate::quant::{Precision, Scheme};
-    use crate::util::Rng;
+    use crate::util::prop::{normal_features, seeded_datastore};
     use std::path::PathBuf;
 
     fn rt() -> Option<Runtime> {
@@ -133,20 +131,12 @@ mod tests {
         let k = info.proj_dim;
         // n deliberately NOT a multiple of tile_q; nv not a multiple of tile_v
         let (n, nv) = (info.tile_q + 7, info.tile_v + 3);
-        let mut rng = Rng::new(21);
-        let f = FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() };
-        let vf = FeatureMatrix { n: nv, k, data: (0..nv * k).map(|_| rng.normal() as f32).collect() };
+        let vf = normal_features(nv, k, 22);
         let p = Precision::new(8, Scheme::Absmax).unwrap();
 
         let path = std::env::temp_dir().join(format!("qless_xla_{}.qlds", std::process::id()));
-        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
-        w.begin_checkpoint(1.0).unwrap();
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-        w.finalize().unwrap();
-        let block = crate::datastore::Datastore::open(&path).unwrap().load_checkpoint(0).unwrap();
+        let ds = seeded_datastore(&path, p, n, k, &[1.0], 21);
+        let block = ds.load_checkpoint(0).unwrap();
         std::fs::remove_file(&path).ok();
 
         let val = ValFeatures::prepare(&vf, p);
@@ -167,24 +157,16 @@ mod tests {
         let info = rt.model("tiny").unwrap();
         let k = info.proj_dim;
         let n = info.tile_q + 3;
-        let mut rng = Rng::new(33);
-        let f = FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() };
         let p = Precision::new(8, Scheme::Absmax).unwrap();
         let path = std::env::temp_dir().join(format!("qless_xlam_{}.qlds", std::process::id()));
-        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
-        w.begin_checkpoint(1.0).unwrap();
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-        w.finalize().unwrap();
-        let block = crate::datastore::Datastore::open(&path).unwrap().load_checkpoint(0).unwrap();
+        let ds = seeded_datastore(&path, p, n, k, &[1.0], 33);
+        let block = ds.load_checkpoint(0).unwrap();
         std::fs::remove_file(&path).ok();
 
         // two tasks whose combined rows straddle a tile boundary
         let nva = (info.tile_v - 1).max(1);
-        let t0 = FeatureMatrix { n: nva, k, data: (0..nva * k).map(|_| rng.normal() as f32).collect() };
-        let t1 = FeatureMatrix { n: 4, k, data: (0..4 * k).map(|_| rng.normal() as f32).collect() };
+        let t0 = normal_features(nva, k, 34);
+        let t1 = normal_features(4, k, 35);
         let multi = ValFeatures::try_prepare_tasks(&[&t0, &t1], p).unwrap();
         let fused = scores_xla(&rt, &info, &block, &multi).unwrap();
         assert_eq!(fused.len(), n * 2);

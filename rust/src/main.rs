@@ -52,17 +52,33 @@ fn dispatch(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "extract" => {
+            // `--bits 1,2,4,8,16` builds every precision in ONE extraction
+            // pass (streaming builder); a single value builds just that one
             let mut pipe = Pipeline::new(cli.config.clone())?;
-            let p = Precision::new(cli.config.bits, cli.config.scheme)?;
-            let (ds, bytes) = pipe.build_datastore(p)?;
-            println!(
-                "datastore: {} samples × {} dims × {} checkpoints at {} = {}",
-                ds.n_samples(),
-                ds.header.k,
-                ds.n_checkpoints(),
-                p.label(),
-                human_bytes(bytes)
-            );
+            let ps = cli.config.precisions()?;
+            let stores = pipe.build_datastores(&ps)?;
+            for (p, (ds, bytes)) in ps.iter().zip(&stores) {
+                println!(
+                    "datastore: {} samples × {} dims × {} checkpoints at {} = {}",
+                    ds.n_samples(),
+                    ds.header.k,
+                    ds.n_checkpoints(),
+                    p.label(),
+                    human_bytes(*bytes)
+                );
+            }
+            let build = pipe.stages.cost(qless::pipeline::Stage::BuildDatastore);
+            if build.runs > 0 {
+                // cache hits were reused, not built — report only what the
+                // fused pass actually wrote
+                println!(
+                    "one fused pass: {} precision(s) built, {} reused from cache, \
+                     peak builder memory {}",
+                    ps.len() - build.cache_hits as usize,
+                    build.cache_hits,
+                    human_bytes(build.io_units)
+                );
+            }
             Ok(())
         }
         "score" | "select" => score_select(cli),

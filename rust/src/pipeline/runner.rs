@@ -10,10 +10,13 @@ use crate::baselines;
 use crate::config::Config;
 use crate::corpus::{generate_corpus, Tokenizer, World};
 use crate::data::Dataset;
-use crate::datastore::{Datastore, DatastoreWriter};
+use crate::datastore::{Datastore, MultiWriter};
 use crate::eval::benchmarks::{validation_samples, Benchmark};
 use crate::eval::harness::{evaluate, BenchScores};
-use crate::grads::{extract_train_features, extract_val_features, FeatureMatrix, Projector};
+use crate::grads::{
+    extract_train_features, extract_train_features_stream, extract_val_features, FeatureMatrix,
+    Projector,
+};
 use crate::influence::{score_datastore_tasks, ScoreOpts};
 use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
 use crate::pipeline::stage::{PipelineStageRunner, Stage};
@@ -73,9 +76,9 @@ pub struct Pipeline {
     pub stages: PipelineStageRunner,
     base: Option<Vec<f32>>,
     warmup: Option<CheckpointSet>,
-    /// Raw fp32 train features per checkpoint (shared across precisions).
-    features: Option<Vec<FeatureMatrix>>,
-    /// (benchmark → per-checkpoint validation features).
+    /// (benchmark → per-checkpoint validation features). Validation sets
+    /// are tiny (`val_per_task` rows); train features are never retained —
+    /// the datastore build streams them ([`Pipeline::build_datastores`]).
     val_features: BTreeMap<&'static str, Vec<FeatureMatrix>>,
 }
 
@@ -105,7 +108,6 @@ impl Pipeline {
             stages: PipelineStageRunner::new(),
             base: None,
             warmup: None,
-            features: None,
             val_features: BTreeMap::new(),
         })
     }
@@ -259,19 +261,21 @@ impl Pipeline {
         Projector::new(self.cfg.seed, self.info.d_lora, self.info.proj_dim)
     }
 
-    /// Raw fp32 train features per checkpoint. Model-bits (QLoRA ablation)
+    /// Raw fp32 train features per checkpoint, materialized **densely** —
+    /// `n × k × C × 4` bytes resident. This is the explicit small-run
+    /// opt-in for analysis harnesses (bin histograms, worker-scaling
+    /// benches); the datastore build never calls it — it streams rows
+    /// through [`Pipeline::build_datastores`] instead, with peak memory
+    /// independent of the corpus size. Model-bits (QLoRA ablation)
     /// applies here: the base weights are quantized for extraction only.
-    pub fn train_features(&mut self) -> Result<Vec<FeatureMatrix>> {
-        if let Some(f) = &self.features {
-            return Ok(f.clone());
-        }
+    pub fn train_features_dense(&mut self) -> Result<Vec<FeatureMatrix>> {
         let set = self.warmup()?;
         let proj = self.projector();
         let base_q = quantize_weights(&set.base, self.cfg.model_bits);
         let t0 = std::time::Instant::now();
         let mut feats = Vec::new();
         for (ci, ckpt) in set.checkpoints.iter().enumerate() {
-            info!("extracting train features @ checkpoint {ci}");
+            info!("extracting train features (dense) @ checkpoint {ci}");
             feats.push(extract_train_features(
                 &self.rt,
                 &self.info,
@@ -284,7 +288,6 @@ impl Pipeline {
         }
         info!("train feature extraction: {:.1}s total", t0.elapsed().as_secs_f64());
         self.stages.record(Stage::ExtractTrain, t0.elapsed().as_secs_f64());
-        self.features = Some(feats.clone());
         Ok(feats)
     }
 
@@ -318,43 +321,138 @@ impl Pipeline {
     }
 
     // ------------------------------------------------------------------
-    // stage 3: quantized datastore (QLESS §3.1)
+    // stage 3: quantized datastore (QLESS §3.1) — streaming builder
     // ------------------------------------------------------------------
 
-    /// Build (or reuse) the gradient datastore at a precision; returns the
-    /// opened datastore + its measured size.
+    /// Build (or reuse) the gradient datastore at one precision; returns
+    /// the opened datastore + its measured size. Single-precision alias of
+    /// [`Pipeline::build_datastores`].
     pub fn build_datastore(&mut self, precision: Precision) -> Result<(Datastore, u64)> {
-        let path = crate::datastore::default_store_path(&self.run_dir(), precision);
-        if path.exists() {
-            if let Ok(ds) = Datastore::open(&path) {
-                let bytes = ds.file_bytes();
-                info!("reusing cached datastore {}", precision.label());
-                self.stages.cache_hit(Stage::BuildDatastore);
-                return Ok((ds, bytes));
-            }
-        }
-        let feats = self.train_features()?;
-        let set = self.warmup()?;
+        Ok(self.build_datastores(&[precision])?.remove(0))
+    }
+
+    /// Build (or reuse) the gradient datastores for **all** requested
+    /// precisions in ONE extraction pass — the Table-1 sweep's build path
+    /// (`--bits 1,2,4,8,16`).
+    ///
+    /// Dataflow: per checkpoint, feature rows stream out of
+    /// [`extract_train_features_stream`] into a bounded fp32 window
+    /// (`--build-mem-budget-mb`), a pool-parallel quantize stage packs the
+    /// window at every missing precision (`--build-workers`), and
+    /// [`MultiWriter`] writes each packed window through at its final file
+    /// offset. Peak builder memory is one window across all precisions —
+    /// independent of the corpus size `n` — and the files are
+    /// byte-identical to the legacy dense-then-write path.
+    ///
+    /// Cached files are reused only when their header matches the current
+    /// geometry (precision, `n`, `k`, checkpoint count) exactly; a stale
+    /// `run_dir` from a different corpus is rebuilt, not silently served.
+    /// Stage accounting: the fused pass is recorded under
+    /// `Stage::BuildDatastore`, with the peak builder bytes as its io
+    /// units.
+    pub fn build_datastores(&mut self, precisions: &[Precision]) -> Result<Vec<(Datastore, u64)>> {
         let (n, k) = (self.corpus.len(), self.info.proj_dim);
-        let t0 = std::time::Instant::now();
-        let mut w = DatastoreWriter::create(&path, precision, n, k, feats.len())?;
-        for (ci, f) in feats.iter().enumerate() {
-            w.begin_checkpoint(set.checkpoints[ci].eta)?;
-            for i in 0..n {
-                w.append_features(f.row(i))?;
+        let c = self.cfg.warmup_epochs;
+        let mut out: Vec<Option<(Datastore, u64)>> = Vec::new();
+        out.resize_with(precisions.len(), || None);
+        let mut missing: Vec<(usize, Precision, PathBuf)> = Vec::new();
+        for (i, &p) in precisions.iter().enumerate() {
+            if precisions[..i].contains(&p) {
+                anyhow::bail!("duplicate precision {} in build request", p.label());
             }
-            w.end_checkpoint()?;
+            let path = crate::datastore::default_store_path(&self.run_dir(), p);
+            if path.exists() {
+                match Datastore::open(&path) {
+                    Ok(ds) if ds.matches_geometry(p, n, k, c) => {
+                        let bytes = ds.file_bytes();
+                        info!("reusing cached datastore {}", p.label());
+                        self.stages.cache_hit(Stage::BuildDatastore);
+                        out[i] = Some((ds, bytes));
+                        continue;
+                    }
+                    _ => {
+                        info!(
+                            "cached datastore {} does not match the current run \
+                             (geometry/precision) — rebuilding",
+                            p.label()
+                        );
+                        std::fs::remove_file(&path).ok();
+                    }
+                }
+            }
+            missing.push((i, p, path));
         }
-        let bytes = w.finalize()?;
-        info!(
-            "datastore {}: {} in {:.1}s",
-            precision.label(),
-            crate::util::table::human_bytes(bytes),
-            t0.elapsed().as_secs_f64()
-        );
-        self.stages.record(Stage::BuildDatastore, t0.elapsed().as_secs_f64());
-        let ds = Datastore::open(&path)?;
-        Ok((ds, bytes))
+
+        if !missing.is_empty() {
+            let set = self.warmup()?;
+            let proj = self.projector();
+            let base_q = quantize_weights(&set.base, self.cfg.model_bits);
+            let targets: Vec<(Precision, PathBuf)> =
+                missing.iter().map(|(_, p, path)| (*p, path.clone())).collect();
+            let ps: Vec<Precision> = targets.iter().map(|(p, _)| *p).collect();
+            let budget = (self.cfg.build_mem_budget_mb as u64) << 20;
+            let window_rows =
+                MultiWriter::window_rows_for_budget(k, &ps, budget).min(n.max(1));
+            info!(
+                "streaming build: {} precision(s) in one extraction pass, \
+                 window {window_rows} rows × {} B/row",
+                ps.len(),
+                MultiWriter::bytes_per_row(k, &ps)
+            );
+            let t0 = std::time::Instant::now();
+            let mut mw =
+                MultiWriter::create(&targets, n, k, set.checkpoints.len(), self.cfg.build_workers)?;
+            let mut window: Vec<f32> = Vec::with_capacity(window_rows * k);
+            for (ci, ckpt) in set.checkpoints.iter().enumerate() {
+                info!("streaming build @ checkpoint {ci}");
+                mw.begin_checkpoint(ckpt.eta)?;
+                window.clear();
+                extract_train_features_stream(
+                    &self.rt,
+                    &self.info,
+                    &base_q,
+                    ckpt,
+                    &self.corpus,
+                    &proj,
+                    self.cfg.workers,
+                    |_start, rows| {
+                        let mut rest = rows;
+                        while !rest.is_empty() {
+                            let room = window_rows * k - window.len();
+                            let take = room.min(rest.len());
+                            window.extend_from_slice(&rest[..take]);
+                            rest = &rest[take..];
+                            if window.len() == window_rows * k {
+                                mw.append_rows(&window)?;
+                                window.clear();
+                            }
+                        }
+                        Ok(())
+                    },
+                )?;
+                if !window.is_empty() {
+                    mw.append_rows(&window)?;
+                    window.clear();
+                }
+                mw.end_checkpoint()?;
+            }
+            let peak = mw.peak_builder_bytes();
+            let sizes = mw.finalize()?;
+            let secs = t0.elapsed().as_secs_f64();
+            self.stages.record(Stage::BuildDatastore, secs);
+            // peak builder bytes are a high-water mark, not a counter — a
+            // second build in the same process must not sum with the first
+            self.stages.max_units(Stage::BuildDatastore, peak);
+            info!(
+                "streaming build done in {secs:.1}s (peak builder memory {})",
+                crate::util::table::human_bytes(peak)
+            );
+            for ((i, p, path), bytes) in missing.into_iter().zip(sizes) {
+                info!("datastore {}: {}", p.label(), crate::util::table::human_bytes(bytes));
+                out[i] = Some((Datastore::open(&path)?, bytes));
+            }
+        }
+        Ok(out.into_iter().map(|o| o.expect("every requested precision resolved")).collect())
     }
 
     // ------------------------------------------------------------------

@@ -19,7 +19,9 @@ pub enum Stage {
     ExtractTrain,
     /// Per-checkpoint gradient-feature extraction (validation side).
     ExtractVal,
-    /// Quantize + pack features into the gradient datastore.
+    /// Streaming datastore build: extract → quantize → write, all
+    /// requested precisions in one fused pass (io units = peak builder
+    /// bytes).
     BuildDatastore,
     /// Streamed influence scan (Eq. 7) over datastore shards.
     Score,
@@ -74,9 +76,11 @@ pub struct StageCost {
     pub cache_hits: u32,
     /// Total wall-clock seconds across all runs.
     pub secs: f64,
-    /// Stage-defined I/O units (for [`Stage::Score`]: datastore shard
+    /// Stage-defined I/O units. For [`Stage::Score`]: datastore shard
     /// reads — the multi-query scan's proof that Q validation tasks cost
-    /// one pass, not Q).
+    /// one pass, not Q. For [`Stage::BuildDatastore`]: peak builder bytes
+    /// — the streaming build's proof that memory is window-bounded, not
+    /// `O(n)`.
     pub io_units: u64,
 }
 
@@ -123,6 +127,15 @@ impl PipelineStageRunner {
     /// by an influence scan — see [`StageCost::io_units`]).
     pub fn add_units(&mut self, stage: Stage, units: u64) {
         self.slot(stage).io_units += units;
+    }
+
+    /// Raise a stage's I/O units to at least `units` — for stages whose
+    /// units are a **high-water mark** rather than an additive counter
+    /// ([`Stage::BuildDatastore`]'s peak builder bytes: two builds in one
+    /// process must report the larger peak, not the sum).
+    pub fn max_units(&mut self, stage: Stage, units: u64) {
+        let cost = self.slot(stage);
+        cost.io_units = cost.io_units.max(units);
     }
 
     pub fn cost(&self, stage: Stage) -> StageCost {
@@ -205,6 +218,16 @@ mod tests {
         r.add_units(Stage::Score, 7);
         assert_eq!(r.cost(Stage::Score).io_units, 14);
         assert_eq!(r.cost(Stage::Select).io_units, 0);
+    }
+
+    #[test]
+    fn max_units_is_a_high_water_mark() {
+        let mut r = PipelineStageRunner::new();
+        r.max_units(Stage::BuildDatastore, 100);
+        r.max_units(Stage::BuildDatastore, 40); // later smaller build
+        assert_eq!(r.cost(Stage::BuildDatastore).io_units, 100);
+        r.max_units(Stage::BuildDatastore, 250);
+        assert_eq!(r.cost(Stage::BuildDatastore).io_units, 250);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Batched window quantization — the streaming datastore builder's
+//! quantize stage.
+//!
+//! The legacy build path quantized one row per `DatastoreWriter::append_features`
+//! call: per-row dispatch, one allocation per row, single-threaded. This
+//! module quantizes a *window* of rows at once, in parallel on the
+//! persistent pool ([`crate::util::pool::par_for`]), with every worker
+//! packing straight into its row's disjoint slot of one pre-sized output
+//! buffer. Per-row semantics are exactly [`try_quantize_row`] +
+//! [`pack_codes_into`] (bf16 encode at 16-bit), so datastores assembled
+//! from these windows are **byte-identical** to ones written row-by-row —
+//! the property `tests/build_stream.rs` locks in across bitwidth × scheme
+//! × worker count.
+
+use anyhow::{bail, Result};
+
+use super::pack::{pack_codes_into, packed_bytes};
+use super::scheme::try_quantize_row;
+use super::Precision;
+use crate::util::bits::f32_to_bf16;
+use crate::util::pool;
+
+/// Packed bytes one k-dim row occupies on disk at `precision`, excluding
+/// its f32 scale (the datastore header's `row_stride`).
+pub fn row_stride(k: usize, precision: Precision) -> usize {
+    match precision.bits {
+        16 => k * 2,
+        b => packed_bytes(k, b),
+    }
+}
+
+/// Builder-resident bytes one window row costs at `precision`: the packed
+/// row plus its staged f32 scale (16-bit rows carry no scale).
+pub fn window_row_bytes(k: usize, precision: Precision) -> usize {
+    row_stride(k, precision) + if precision.bits == 16 { 0 } else { 4 }
+}
+
+/// Quantize a window of `rows.len() / k` feature rows at `precision`, in
+/// parallel on the persistent pool, into `bytes` (resized to
+/// `n × row_stride`) and `scales` (resized to `n`; left **empty** at
+/// 16-bit, where bf16 rows are self-describing).
+///
+/// `max_workers` caps the parallelism (0 = no cap); the output is
+/// identical at every worker count because each row owns a fixed slot.
+/// Non-finite features are rejected with the lowest offending
+/// window-relative row index, so the error is deterministic too.
+pub fn quantize_rows_into(
+    rows: &[f32],
+    k: usize,
+    precision: Precision,
+    bytes: &mut Vec<u8>,
+    scales: &mut Vec<f32>,
+    max_workers: usize,
+) -> Result<()> {
+    if k == 0 || rows.len() % k != 0 {
+        bail!("quantize_rows_into: {} floats is not a whole number of k={k} rows", rows.len());
+    }
+    let n = rows.len() / k;
+    let stride = row_stride(k, precision);
+    bytes.clear();
+    bytes.resize(n * stride, 0);
+    scales.clear();
+    if precision.bits != 16 {
+        scales.resize(n, 0.0);
+    }
+
+    // Raw output cursors so pool workers can write their rows' disjoint
+    // slots without locking (same lifetime-erasure idiom as util::pool:
+    // the buffers outlive the call because par_for blocks until done).
+    struct Out {
+        bytes: *mut u8,
+        scales: *mut f32,
+    }
+    unsafe impl Send for Out {}
+    unsafe impl Sync for Out {}
+    let out = Out { bytes: bytes.as_mut_ptr(), scales: scales.as_mut_ptr() };
+    let first_err: std::sync::Mutex<Option<(usize, anyhow::Error)>> = std::sync::Mutex::new(None);
+    pool::par_for(n, max_workers, &|i| {
+        let g = &rows[i * k..(i + 1) * k];
+        // SAFETY: row i's byte/scale slots are written by exactly one
+        // closure invocation (par_for indices are disjoint) and the
+        // buffers live until par_for returns.
+        let slot = unsafe { std::slice::from_raw_parts_mut(out.bytes.add(i * stride), stride) };
+        match quantize_row_slot(g, precision, slot) {
+            Ok(scale) => {
+                if precision.bits != 16 {
+                    unsafe { *out.scales.add(i) = scale };
+                }
+            }
+            Err(e) => {
+                let mut guard = first_err.lock().unwrap_or_else(|p| p.into_inner());
+                if guard.as_ref().is_none_or(|(j, _)| i < *j) {
+                    *guard = Some((i, e));
+                }
+            }
+        }
+    });
+    if let Some((i, e)) = first_err.lock().unwrap_or_else(|p| p.into_inner()).take() {
+        return Err(e.context(format!("quantizing window row {i}")));
+    }
+    Ok(())
+}
+
+/// Quantize + pack one row into its `row_stride`-byte slot; returns the
+/// row scale (0.0 at 16-bit, which stores bf16 and keeps no scale).
+fn quantize_row_slot(g: &[f32], precision: Precision, slot: &mut [u8]) -> Result<f32> {
+    if precision.bits == 16 {
+        if let Some(i) = g.iter().position(|x| !x.is_finite()) {
+            bail!(
+                "non-finite gradient feature {} at index {i}: rejected at quantization time",
+                g[i]
+            );
+        }
+        for (b, &f) in slot.chunks_exact_mut(2).zip(g) {
+            b.copy_from_slice(&f32_to_bf16(f).to_le_bytes());
+        }
+        Ok(0.0)
+    } else {
+        let q = try_quantize_row(g, precision.bits, precision.scheme)?;
+        pack_codes_into(&q.codes, precision.bits, slot)?;
+        Ok(q.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_codes;
+    use crate::quant::Scheme;
+    use crate::util::Rng;
+
+    fn rows(n: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * k).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn all_precisions() -> Vec<Precision> {
+        vec![
+            Precision::new(16, Scheme::Absmax).unwrap(),
+            Precision::new(8, Scheme::Absmax).unwrap(),
+            Precision::new(8, Scheme::Absmean).unwrap(),
+            Precision::new(4, Scheme::Absmax).unwrap(),
+            Precision::new(4, Scheme::Absmean).unwrap(),
+            Precision::new(2, Scheme::Absmax).unwrap(),
+            Precision::new(2, Scheme::Absmean).unwrap(),
+            Precision::new(1, Scheme::Sign).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn window_matches_per_row_path_exactly() {
+        let (n, k) = (13usize, 97usize); // k not byte-aligned at sub-byte widths
+        let data = rows(n, k, 7);
+        for p in all_precisions() {
+            let mut bytes = Vec::new();
+            let mut scales = Vec::new();
+            quantize_rows_into(&data, k, p, &mut bytes, &mut scales, 0).unwrap();
+            let stride = row_stride(k, p);
+            assert_eq!(bytes.len(), n * stride);
+            for i in 0..n {
+                let g = &data[i * k..(i + 1) * k];
+                if p.bits == 16 {
+                    let mut want = Vec::with_capacity(k * 2);
+                    for &f in g {
+                        want.extend_from_slice(&f32_to_bf16(f).to_le_bytes());
+                    }
+                    assert_eq!(&bytes[i * stride..(i + 1) * stride], &want[..], "{}", p.label());
+                } else {
+                    let q = try_quantize_row(g, p.bits, p.scheme).unwrap();
+                    let packed = pack_codes(&q.codes, p.bits, q.scale).unwrap();
+                    assert_eq!(
+                        &bytes[i * stride..(i + 1) * stride],
+                        &packed.bytes[..],
+                        "{} row {i}",
+                        p.label()
+                    );
+                    assert_eq!(scales[i], q.scale, "{} row {i}", p.label());
+                }
+            }
+            if p.bits == 16 {
+                assert!(scales.is_empty(), "16-bit windows carry no scales");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let (n, k) = (37usize, 64usize);
+        let data = rows(n, k, 11);
+        for p in all_precisions() {
+            let mut ref_bytes = Vec::new();
+            let mut ref_scales = Vec::new();
+            quantize_rows_into(&data, k, p, &mut ref_bytes, &mut ref_scales, 1).unwrap();
+            for workers in [0usize, 2, 3, 16] {
+                // dirty scratch buffers must not leak into the output
+                let mut bytes = vec![0xAB; 5];
+                let mut scales = vec![9.0; 3];
+                quantize_rows_into(&data, k, p, &mut bytes, &mut scales, workers).unwrap();
+                assert_eq!(bytes, ref_bytes, "{} workers={workers}", p.label());
+                assert_eq!(scales, ref_scales, "{} workers={workers}", p.label());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_non_finite_with_lowest_row_index() {
+        let (n, k) = (9usize, 16usize);
+        let mut data = rows(n, k, 3);
+        data[5 * k + 2] = f32::NAN;
+        data[7 * k] = f32::INFINITY;
+        for p in all_precisions() {
+            let mut bytes = Vec::new();
+            let mut scales = Vec::new();
+            let err = quantize_rows_into(&data, k, p, &mut bytes, &mut scales, 0).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("non-finite"), "{}: {msg}", p.label());
+            assert!(msg.contains("window row 5"), "{}: {msg}", p.label());
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_windows() {
+        let mut bytes = Vec::new();
+        let mut scales = Vec::new();
+        let p = Precision::new(8, Scheme::Absmax).unwrap();
+        assert!(quantize_rows_into(&[0.0; 10], 4, p, &mut bytes, &mut scales, 0).is_err());
+        assert!(quantize_rows_into(&[0.0; 4], 0, p, &mut bytes, &mut scales, 0).is_err());
+        // empty window is fine (zero rows)
+        quantize_rows_into(&[], 4, p, &mut bytes, &mut scales, 0).unwrap();
+        assert!(bytes.is_empty() && scales.is_empty());
+    }
+
+    #[test]
+    fn stride_accounting_matches_precision() {
+        for p in all_precisions() {
+            assert_eq!(row_stride(100, p), p.row_bytes(100) - if p.bits == 16 { 0 } else { 4 });
+            let extra = if p.bits == 16 { 0 } else { 4 };
+            assert_eq!(window_row_bytes(100, p), row_stride(100, p) + extra);
+        }
+    }
+}

@@ -5,15 +5,20 @@
 //! * [`pack`]     — sub-byte bit packing (1/2/4/8-bit) + bf16, the storage
 //!   format XLA cannot express (no sub-byte dtypes) so it lives in Rust
 //!   between the kernel output and the datastore.
+//! * [`batch`]    — pool-parallel window quantization (the streaming
+//!   multi-precision datastore builder's quantize stage; byte-identical
+//!   to the per-row path at every worker count).
 //! * [`hist`]     — quantization-bin occupancy histograms (paper Fig. 3).
 //! * [`weights`]  — base-weight block quantization for the QLoRA ablation
 //!   (paper §5, Tables 2/5).
 
+pub mod batch;
 pub mod hist;
 pub mod pack;
 pub mod scheme;
 pub mod weights;
 
+pub use batch::quantize_rows_into;
 pub use hist::BinHistogram;
 pub use pack::{pack_codes, unpack_codes, PackedRow};
 pub use scheme::{dequantize_row, quantize_row, try_quantize_row, QuantizedRow, Scheme};

@@ -26,12 +26,32 @@ pub struct PackedRow {
 
 /// Pack int8 codes into `bits`-wide fields.
 pub fn pack_codes(codes: &[i8], bits: u8, scale: f32) -> Result<PackedRow> {
+    let n = codes.len();
+    let nbytes = packed_bytes(n, bits);
+    let mut bytes = vec![0u8; nbytes];
+    pack_codes_into(codes, bits, &mut bytes)?;
+    Ok(PackedRow { bits, len: n, bytes, scale })
+}
+
+/// Packed bytes one row of `len` codes occupies at `bits` per code.
+pub fn packed_bytes(len: usize, bits: u8) -> usize {
+    (len * bits as usize).div_ceil(8)
+}
+
+/// Pack int8 codes into `bits`-wide fields directly into `out` — the
+/// allocation-free core of [`pack_codes`], used by the batched window
+/// quantizer so parallel workers write straight into their disjoint row
+/// slots. `out` must be exactly [`packed_bytes`]`(codes.len(), bits)` long
+/// (zeroed or not — every byte is overwritten).
+pub fn pack_codes_into(codes: &[i8], bits: u8, out: &mut [u8]) -> Result<()> {
     if ![1, 2, 4, 8].contains(&bits) {
         bail!("pack_codes: unsupported bits {bits}");
     }
     let n = codes.len();
-    let nbytes = (n * bits as usize).div_ceil(8);
-    let mut bytes = vec![0u8; nbytes];
+    if out.len() != packed_bytes(n, bits) {
+        bail!("pack_codes_into: {} byte slot for {} codes at {bits}-bit", out.len(), n);
+    }
+    let bytes = out;
     if bits == 1 {
         // §Perf iteration 5: byte-at-a-time assembly (no per-bit indexed
         // writes) — ~5× on the 1-bit pack path, which dominated datastore
@@ -59,7 +79,7 @@ pub fn pack_codes(codes: &[i8], bits: u8, scale: f32) -> Result<PackedRow> {
             *b = acc;
         }
     }
-    Ok(PackedRow { bits, len: n, bytes, scale })
+    Ok(())
 }
 
 /// Unpack back to int8 codes (exact inverse of [`pack_codes`]).
@@ -209,6 +229,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn pack_into_validates_slot_and_overwrites_dirty_bytes() {
+        // wrong slot size is an error, not a silent truncation
+        let mut small = vec![0u8; 1];
+        assert!(pack_codes_into(&[1i8; 9], 1, &mut small).is_err());
+        // a dirty (non-zero) slot must come out identical to a fresh pack,
+        // including the padding bits of the final partial byte
+        let codes: Vec<i8> = (0..11).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        for bits in [1u8, 2, 4, 8] {
+            let clean = pack_codes(&codes, bits, 0.0).unwrap();
+            let mut dirty = vec![0xFFu8; packed_bytes(codes.len(), bits)];
+            pack_codes_into(&codes, bits, &mut dirty).unwrap();
+            assert_eq!(dirty, clean.bytes, "{bits}-bit");
+        }
     }
 
     #[test]

@@ -217,17 +217,10 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datastore::DatastoreWriter;
-    use crate::grads::FeatureMatrix;
     use crate::quant::{Precision, Scheme};
     use crate::service::session::SessionOpts;
-    use crate::util::Rng;
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
     use std::path::PathBuf;
-
-    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-        let mut rng = Rng::new(seed);
-        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-    }
 
     fn build_store(tag: &str, n: usize, k: usize) -> PathBuf {
         let p = Precision::new(8, Scheme::Absmax).unwrap();
@@ -236,14 +229,7 @@ mod tests {
             std::process::id(),
             std::thread::current().id()
         ));
-        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
-        w.begin_checkpoint(1.0).unwrap();
-        let f = feats(n, k, 0);
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-        w.finalize().unwrap();
+        seeded_datastore(&path, p, n, k, &[1.0], 0);
         path
     }
 

@@ -476,15 +476,9 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datastore::DatastoreWriter;
     use crate::quant::{Precision, Scheme};
-    use crate::util::Rng;
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
     use std::path::PathBuf;
-
-    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-        let mut rng = Rng::new(seed);
-        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-    }
 
     fn build_store(tag: &str, n: usize, k: usize, ckpts: usize) -> PathBuf {
         let p = Precision::new(4, Scheme::Absmax).unwrap();
@@ -493,16 +487,7 @@ mod tests {
             std::process::id(),
             std::thread::current().id()
         ));
-        let mut w = DatastoreWriter::create(&path, p, n, k, ckpts).unwrap();
-        for ci in 0..ckpts {
-            w.begin_checkpoint(0.5).unwrap();
-            let f = feats(n, k, ci as u64);
-            for i in 0..n {
-                w.append_features(f.row(i)).unwrap();
-            }
-            w.end_checkpoint().unwrap();
-        }
-        w.finalize().unwrap();
+        seeded_datastore(&path, p, n, k, &vec![0.5f32; ckpts], 0);
         path
     }
 

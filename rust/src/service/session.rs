@@ -331,16 +331,10 @@ fn generation_of(path: &Path, header: &Header) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::datastore::DatastoreWriter;
     use crate::influence::{score_datastore_tasks, ScoreOpts};
     use crate::quant::{Precision, Scheme};
-    use crate::util::Rng;
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
     use std::path::PathBuf;
-
-    fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-        let mut rng = Rng::new(seed);
-        FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-    }
 
     fn build_store(bits: u8, n: usize, k: usize, etas: &[f32], tag: &str) -> PathBuf {
         let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
@@ -350,16 +344,7 @@ mod tests {
             std::process::id(),
             std::thread::current().id()
         ));
-        let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
-        for (ci, &eta) in etas.iter().enumerate() {
-            w.begin_checkpoint(eta).unwrap();
-            let f = feats(n, k, ci as u64);
-            for i in 0..n {
-                w.append_features(f.row(i)).unwrap();
-            }
-            w.end_checkpoint().unwrap();
-        }
-        w.finalize().unwrap();
+        seeded_datastore(&path, p, n, k, etas, 0);
         path
     }
 

@@ -9,14 +9,16 @@
 //! full parallelism (no cap), and rows are claimed work-stealing-style
 //! from a shared atomic cursor so fast workers absorb slow rows.
 //!
-//! Two entry points share one job engine: [`par_fill_f32`] fills
-//! `out[i] = f(i)` (one float per index), and [`par_fill_rows`] fills
+//! Three entry points share one job engine: [`par_fill_f32`] fills
+//! `out[i] = f(i)` (one float per index), [`par_fill_rows`] fills
 //! `out[i*width .. (i+1)*width]` per index — the multi-query scan's shape,
-//! where each datastore row produces one score per validation task. The
-//! caller participates in the scan and blocks until every claimed chunk is
-//! done, which is what makes the borrowed-closure lifetime erasure below
-//! sound: `f` and `out` are only ever touched between job publication and
-//! the caller's return.
+//! where each datastore row produces one score per validation task — and
+//! [`par_for`] runs a pure side-effect `f(i)` (the streaming builder's
+//! quantize stage, packing rows into disjoint byte slots) with an optional
+//! per-call concurrency cap. The caller participates in the job and blocks
+//! until every claimed chunk is done, which is what makes the
+//! borrowed-closure lifetime erasure below sound: `f` and `out` are only
+//! ever touched between job publication and the caller's return.
 //!
 //! A second, independent primitive lives alongside the scan pool:
 //! [`TaskPool`], a plain fixed-size worker pool over a bounded queue of
@@ -42,13 +44,16 @@ pub fn scan_threads() -> usize {
 
 /// One parallel-for job. Workers claim `grain`-sized index chunks from
 /// `next` until the range is exhausted; `f` and `out` are lifetime-erased
-/// raw pointers kept alive by the caller blocking in [`par_fill_rows`].
+/// raw pointers kept alive by the caller blocking in [`par_fill_rows`] /
+/// [`par_for`].
 struct Job {
     next: AtomicUsize,
     /// Logical index count (rows, not floats).
     n: usize,
     grain: usize,
-    /// Floats written per index; `out` is `n × width` floats.
+    /// Floats written per index; `out` is `n × width` floats. Width 0 is
+    /// the side-effect-only [`par_for`] shape: `out` is null and never
+    /// dereferenced.
     width: usize,
     out: *mut f32,
     f: *const (dyn Fn(usize, &mut [f32]) + Sync),
@@ -76,13 +81,18 @@ impl Job {
             let res = catch_unwind(AssertUnwindSafe(|| {
                 // SAFETY: see the Send/Sync justification above; chunk
                 // indices are disjoint across participants by fetch_add,
-                // so the `width`-float output slices never alias.
+                // so the `width`-float output slices never alias. At
+                // width 0 (`par_for`) the null `out` is never touched.
                 let f = unsafe { &*self.f };
                 for i in start..end {
-                    let row = unsafe {
-                        std::slice::from_raw_parts_mut(self.out.add(i * self.width), self.width)
-                    };
-                    f(i, row);
+                    if self.width == 0 {
+                        f(i, &mut []);
+                    } else {
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut(self.out.add(i * self.width), self.width)
+                        };
+                        f(i, row);
+                    }
                 }
             }));
             if res.is_err() {
@@ -178,6 +188,31 @@ pub fn par_fill_rows(out: &mut [f32], width: usize, f: &(dyn Fn(usize, &mut [f32
     assert!(width >= 1, "par_fill_rows: width must be >= 1");
     assert_eq!(out.len() % width, 0, "par_fill_rows: out length not a multiple of width");
     let n = out.len() / width;
+    run_job(n, 0, width, out.as_mut_ptr(), f);
+}
+
+/// Run `f(i)` for every `i in 0..n` on the persistent pool, for callers
+/// whose output is a side effect (e.g. packing quantized rows into
+/// disjoint byte slots) rather than an f32 array. `max_workers` caps
+/// *concurrency* without touching the global pool size: the index range is
+/// split into at most `max_workers` chunks, so at most that many
+/// participants ever hold work (0 = no cap, default chunking). The calling
+/// thread participates, so this runs serially on single-core machines.
+pub fn par_for(n: usize, max_workers: usize, f: &(dyn Fn(usize) + Sync)) {
+    let grain = if max_workers == 0 { 0 } else { n.div_ceil(max_workers).max(1) };
+    run_job(n, grain, 0, std::ptr::null_mut(), &|i: usize, _row: &mut [f32]| f(i));
+}
+
+/// Shared job engine behind [`par_fill_rows`] and [`par_for`]: publish one
+/// job, participate, and block until every participant is done. `grain` 0
+/// picks the default chunking (~8 chunks per participant).
+fn run_job(
+    n: usize,
+    grain: usize,
+    width: usize,
+    out: *mut f32,
+    f: &(dyn Fn(usize, &mut [f32]) + Sync),
+) {
     if n == 0 {
         return;
     }
@@ -186,7 +221,7 @@ pub fn par_fill_rows(out: &mut [f32], width: usize, f: &(dyn Fn(usize, &mut [f32
     let parts = p.workers + 1;
     // ~8 chunks per participant: dynamic enough to absorb stragglers,
     // coarse enough that the atomic cursor never contends.
-    let grain = n.div_ceil(parts * 8).max(1);
+    let grain = if grain == 0 { n.div_ceil(parts * 8).max(1) } else { grain };
     // SAFETY (lifetime erasure): the Arc<Job> may outlive this call in a
     // late worker's hand, but `run` dereferences the pointers only for
     // chunks claimed while `next < n`, and we do not return until the
@@ -202,7 +237,7 @@ pub fn par_fill_rows(out: &mut [f32], width: usize, f: &(dyn Fn(usize, &mut [f32
         n,
         grain,
         width,
-        out: out.as_mut_ptr(),
+        out,
         f: f_erased,
         running: AtomicUsize::new(1), // the caller
         panicked: AtomicBool::new(false),
@@ -331,6 +366,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        for n in [0usize, 1, 7, 255, 4096] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_for(n, 0, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_for_worker_cap_bounds_concurrency() {
+        // With max_workers = 1 the whole range is one chunk, so exactly one
+        // participant runs it: indices must arrive strictly in order.
+        let order = std::sync::Mutex::new(Vec::new());
+        par_for(100, 1, &|i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..100).collect::<Vec<_>>());
+        // A cap above n still works (chunks clamp to >= 1 index each).
+        let count = AtomicUsize::new(0);
+        par_for(3, 64, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Streaming multi-precision builder equivalence suite — the tentpole's
+//! acceptance contract:
+//!
+//! * one [`MultiWriter`] pass over a feature-row stream produces datastore
+//!   files **byte-identical** to the legacy in-RAM path (dense features →
+//!   per-precision `append_features` loop), across bitwidth × scheme ×
+//!   quantize-worker count × window size — including windows that do not
+//!   divide `n`;
+//! * influence scores over the streamed store equal the legacy store's
+//!   exactly, and so do the scores the resident service serves (the score
+//!   cache keys on task digest × datastore generation, so byte-equal files
+//!   ⇒ identical served answers);
+//! * `worker_count_digest_smoke` is the CI smoke: build at two worker
+//!   counts, diff the file digests.
+
+use std::path::{Path, PathBuf};
+
+use qless::datastore::{Datastore, MultiWriter};
+use qless::influence::{score_datastore_tasks, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::service::{ScoreQuery, Session, SessionOpts};
+use qless::util::prop::{normal_features, run_prop, seeded_datastore};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "qless_buildstream_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Every precision the format supports, both schemes where they differ.
+fn full_grid() -> Vec<Precision> {
+    vec![
+        Precision::new(16, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmean).unwrap(),
+        Precision::new(4, Scheme::Absmax).unwrap(),
+        Precision::new(4, Scheme::Absmean).unwrap(),
+        Precision::new(2, Scheme::Absmax).unwrap(),
+        Precision::new(2, Scheme::Absmean).unwrap(),
+        Precision::new(1, Scheme::Sign).unwrap(),
+    ]
+}
+
+/// Stream `normal_features(n, k, seed + ci)` rows (the exact layout
+/// `seeded_datastore` writes) through a `MultiWriter` in `window`-row
+/// chunks with `workers` quantize workers.
+fn stream_build(
+    dir: &Path,
+    precisions: &[Precision],
+    n: usize,
+    k: usize,
+    etas: &[f32],
+    seed: u64,
+    window: usize,
+    workers: usize,
+) -> Vec<(Precision, PathBuf)> {
+    let targets: Vec<(Precision, PathBuf)> = precisions
+        .iter()
+        .map(|p| (*p, dir.join(format!("stream_{}b_{}.qlds", p.bits, p.scheme))))
+        .collect();
+    let mut mw = MultiWriter::create(&targets, n, k, etas.len(), workers).unwrap();
+    for (ci, &eta) in etas.iter().enumerate() {
+        let f = normal_features(n, k, seed + ci as u64);
+        mw.begin_checkpoint(eta).unwrap();
+        let mut row = 0usize;
+        while row < n {
+            let take = window.min(n - row);
+            mw.append_rows(&f.data[row * k..(row + take) * k]).unwrap();
+            row += take;
+        }
+        mw.end_checkpoint().unwrap();
+    }
+    assert!(mw.peak_builder_bytes() > 0);
+    mw.finalize().unwrap();
+    targets
+}
+
+#[test]
+fn prop_streaming_build_is_byte_identical_to_legacy() {
+    run_prop("stream-vs-legacy", 40, |g| {
+        let n = 3 + g.usize_up_to(40);
+        let k = 8 * (1 + g.usize_up_to(12)); // 8..104 dims
+        let ckpts = 1 + g.rng.below(3);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.1 + 0.3 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let window = 1 + g.rng.below(n + 4); // may exceed or not divide n
+        let workers = g.rng.below(5); // 0 = uncapped pool
+        let dir = tmpdir("prop");
+        let grid = full_grid();
+        let targets = stream_build(&dir, &grid, n, k, &etas, seed, window, workers);
+        for (p, path) in &targets {
+            let legacy = dir.join(format!("legacy_{}b_{}.qlds", p.bits, p.scheme));
+            seeded_datastore(&legacy, *p, n, k, &etas, seed);
+            let got = std::fs::read(path).unwrap();
+            let want = std::fs::read(&legacy).unwrap();
+            prop_assert!(
+                got == want,
+                "{} differs (n={n} k={k} ckpts={ckpts} window={window} workers={workers})",
+                p.label()
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn streamed_store_scores_and_serves_identically() {
+    // Byte-equality already implies this; asserting it end-to-end guards
+    // the integration seams (open → scan → serve) against regressions that
+    // byte-compare alone would miss if the fixture ever drifted.
+    let dir = tmpdir("scores");
+    let (n, k) = (23usize, 64usize);
+    let etas = [0.8f32, 0.3];
+    let seed = 5u64;
+    let grid = full_grid();
+    let targets = stream_build(&dir, &grid, n, k, &etas, seed, 7, 2);
+    for (p, path) in &targets {
+        let legacy_path = dir.join(format!("legacy_{}b_{}.qlds", p.bits, p.scheme));
+        let legacy = seeded_datastore(&legacy_path, *p, n, k, &etas, seed);
+        let streamed = Datastore::open(path).unwrap();
+        let task: Vec<_> = (0..etas.len()).map(|c| normal_features(3, k, 900 + c as u64)).collect();
+
+        let (a, _) = score_datastore_tasks(
+            &streamed,
+            &[task.as_slice()],
+            ScoreOpts { shard_rows: 5, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let (b, _) = score_datastore_tasks(
+            &legacy,
+            &[task.as_slice()],
+            ScoreOpts { shard_rows: 5, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert_eq!(a, b, "{}: streamed vs legacy scan scores", p.label());
+
+        // served answers: same query against both stores, identical scores
+        let mut s1 = Session::open(path, SessionOpts::default()).unwrap();
+        let mut s2 = Session::open(&legacy_path, SessionOpts::default()).unwrap();
+        let q = || ScoreQuery { val: task.clone() };
+        let r1 = s1.answer_batch(&[q()]).unwrap();
+        let r2 = s2.answer_batch(&[q()]).unwrap();
+        assert_eq!(r1[0].scores, r2[0].scores, "{}: served scores", p.label());
+        assert_eq!(*r1[0].scores, a[0], "{}: served vs direct scan", p.label());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CI smoke: run the streaming builder at two worker counts and diff the
+/// produced files (via a content digest). Fast — one small geometry, the
+/// full precision grid.
+#[test]
+fn worker_count_digest_smoke() {
+    let digest = |bytes: &[u8]| -> u64 {
+        // FNV-1a, enough to diff two local builds
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    };
+    let (n, k) = (19usize, 96usize);
+    let etas = [1.0f32];
+    let grid = full_grid();
+    let dir1 = tmpdir("w1");
+    let dir2 = tmpdir("w2");
+    let t1 = stream_build(&dir1, &grid, n, k, &etas, 3, 4, 1);
+    let t2 = stream_build(&dir2, &grid, n, k, &etas, 3, 4, 8);
+    for ((p, a), (_, b)) in t1.iter().zip(&t2) {
+        let da = digest(&std::fs::read(a).unwrap());
+        let db = digest(&std::fs::read(b).unwrap());
+        assert_eq!(da, db, "{}: digest differs between 1 and 8 workers", p.label());
+    }
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}

@@ -15,14 +15,13 @@
 
 use std::path::PathBuf;
 
-use qless::datastore::{Datastore, DatastoreWriter};
+use qless::datastore::Datastore;
 use qless::grads::FeatureMatrix;
 use qless::influence::native::{scores_dense, ValFeatures};
 use qless::influence::{score_datastore, score_datastore_tasks, ScanStats, ScoreOpts};
 use qless::prop_assert;
 use qless::quant::{quantize_row, Precision, Scheme};
-use qless::util::prop::run_prop;
-use qless::util::Rng;
+use qless::util::prop::{normal_features as feats, run_prop, seeded_datastore};
 
 fn tmpfile(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!(
@@ -30,11 +29,6 @@ fn tmpfile(tag: &str) -> PathBuf {
         std::process::id(),
         std::thread::current().id()
     ))
-}
-
-fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-    let mut rng = Rng::new(seed);
-    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
 }
 
 fn build_store(
@@ -46,17 +40,7 @@ fn build_store(
     seed: u64,
 ) -> (Datastore, PathBuf) {
     let path = tmpfile(tag);
-    let mut w = DatastoreWriter::create(&path, precision, n, k, etas.len()).unwrap();
-    for (ci, &eta) in etas.iter().enumerate() {
-        let f = feats(n, k, seed + ci as u64);
-        w.begin_checkpoint(eta).unwrap();
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-    }
-    w.finalize().unwrap();
-    (Datastore::open(&path).unwrap(), path)
+    (seeded_datastore(&path, precision, n, k, etas, seed), path)
 }
 
 /// η-weighted whole-block aggregation over the dequantize-to-f32

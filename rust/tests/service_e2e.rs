@@ -15,19 +15,12 @@ use std::path::PathBuf;
 use std::sync::{Arc, Barrier};
 
 use qless::datastore::Datastore;
-use qless::datastore::DatastoreWriter;
 use qless::grads::FeatureMatrix;
 use qless::influence::{score_datastore_tasks, ScoreOpts};
 use qless::prop_assert;
 use qless::quant::{Precision, Scheme};
 use qless::service::{Client, ScoreQuery, ServeOpts, Server, Session, SessionOpts};
-use qless::util::prop::run_prop;
-use qless::util::Rng;
-
-fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-    let mut rng = Rng::new(seed);
-    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-}
+use qless::util::prop::{normal_features as feats, run_prop, seeded_datastore};
 
 fn build_store(tag: &str, bits: u8, n: usize, k: usize, etas: &[f32]) -> PathBuf {
     let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
@@ -37,16 +30,7 @@ fn build_store(tag: &str, bits: u8, n: usize, k: usize, etas: &[f32]) -> PathBuf
         std::process::id(),
         std::thread::current().id()
     ));
-    let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
-    for (ci, &eta) in etas.iter().enumerate() {
-        w.begin_checkpoint(eta).unwrap();
-        let f = feats(n, k, 1000 + ci as u64);
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-    }
-    w.finalize().unwrap();
+    seeded_datastore(&path, p, n, k, etas, 1000);
     path
 }
 

@@ -19,8 +19,7 @@ use qless::influence::{score_datastore, ScoreOpts};
 use qless::prop_assert;
 use qless::quant::{Precision, Scheme};
 use qless::select::select_top_frac;
-use qless::util::prop::run_prop;
-use qless::util::Rng;
+use qless::util::prop::{normal_features as feats, run_prop, seeded_datastore};
 
 fn tmpfile(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!(
@@ -28,11 +27,6 @@ fn tmpfile(tag: &str) -> PathBuf {
         std::process::id(),
         std::thread::current().id()
     ))
-}
-
-fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
-    let mut rng = Rng::new(seed);
-    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
 }
 
 fn build_store(
@@ -46,17 +40,7 @@ fn build_store(
     let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
     let p = Precision::new(bits, scheme).unwrap();
     let path = tmpfile(tag);
-    let mut w = DatastoreWriter::create(&path, p, n, k, etas.len()).unwrap();
-    for (ci, &eta) in etas.iter().enumerate() {
-        let f = feats(n, k, seed + ci as u64);
-        w.begin_checkpoint(eta).unwrap();
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-    }
-    w.finalize().unwrap();
-    (Datastore::open(&path).unwrap(), path)
+    (seeded_datastore(&path, p, n, k, etas, seed), path)
 }
 
 /// The old whole-block scan, reconstructed from its parts: load each
