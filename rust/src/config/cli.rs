@@ -33,6 +33,9 @@ COMMANDS
   gen-corpus          generate + print corpus statistics
   warmup              warmup-train and write checkpoints
   extract             build the (quantized) gradient datastore from checkpoints
+  ingest              append new corpus rows to the existing datastores as a
+                      new generation (--ingest-rows N; existing bytes untouched,
+                      a running `qless serve` picks it up without restart)
   score               compute influence scores against validation gradients
   select              pick top select_frac and report composition
   serve               resident influence query service over TCP
@@ -50,11 +53,15 @@ OPTIONS (all Config keys work as --key value):
   --scheme S          absmax | absmean
   --model-bits N      16 | 8 | 4 (QLoRA ablation)
   --corpus-size N     --seed N   --select-frac F   --workers N
+  --warmup-frac F     --warmup-epochs N   (checkpoints = warmup epochs)
+  --finetune-epochs N --lr F     --lr-warmup-frac F
+  --val-per-task N    --eval-per-task N   --xla-score B
   --shard-rows N      rows per influence-scan shard (0 = from budget)
   --mem-budget-mb N   influence-scan memory budget (default 64 MiB)
   --build-mem-budget-mb N  streaming-builder window budget (default 64 MiB;
                       bounds peak build memory independent of corpus size)
   --build-workers N   quantize-stage worker cap for builds (0 = all cores)
+  --ingest-rows N     rows `qless ingest` appends as one new generation
   --multi-scan B      score all benchmarks in one datastore pass (default true)
   --run-dir DIR       --artifacts DIR
   --fast              shrink workloads        -v / -q      verbosity
@@ -82,8 +89,10 @@ USAGE: qless serve [--key value ...]
   --workers N             connection-handler threads (default: cores ≤ 8)
   --bits N / --scheme S / --run-dir DIR    select the default datastore path
 
-Wire protocol: one JSON object per line (spec: rust/src/service/proto.rs;
-example exchange: README.md §serve).
+Wire protocol: one JSON object per line (spec: rust/PROTOCOL.md; example
+exchange: README.md §serve). Served datastores are live: a `qless ingest`
+into the same run-dir is picked up without restart (responses carry the
+generation; `since_gen` ranks only newer rows).
 ";
 
 /// The usage text for a subcommand: serve has its own flag set; everything

@@ -57,6 +57,10 @@ pub struct Config {
     /// persistent pool's full width). Output bytes are identical at every
     /// worker count.
     pub build_workers: usize,
+    /// Rows `qless ingest` appends to the run's existing datastores as
+    /// one new generation (0 = ingest is a no-op; the ingest command
+    /// requires it > 0).
+    pub ingest_rows: usize,
     /// Base-model weight quantization (QLoRA ablation): 16 | 8 | 4.
     pub model_bits: u8,
     /// Validation few-shot samples per benchmark used for selection.
@@ -111,6 +115,7 @@ impl Default for Config {
             scheme: Scheme::Absmax,
             build_mem_budget_mb: DEFAULT_MEM_BUDGET_MB,
             build_workers: 0,
+            ingest_rows: 0,
             model_bits: 16,
             val_per_task: 32,
             eval_per_task: 128,
@@ -133,6 +138,41 @@ pub fn default_workers() -> usize {
 }
 
 impl Config {
+    /// Every key [`Config::set`] accepts (underscore form; dashes are
+    /// interchangeable on the CLI). The docs-sync test greps these against
+    /// the usage texts so a new knob cannot ship undocumented.
+    pub const KEYS: &'static [&'static str] = &[
+        "model",
+        "artifacts",
+        "run_dir",
+        "corpus_size",
+        "seed",
+        "warmup_frac",
+        "warmup_epochs",
+        "select_frac",
+        "finetune_epochs",
+        "lr",
+        "lr_warmup_frac",
+        "bits",
+        "build_mem_budget_mb",
+        "build_workers",
+        "ingest_rows",
+        "scheme",
+        "model_bits",
+        "val_per_task",
+        "eval_per_task",
+        "workers",
+        "xla_score",
+        "shard_rows",
+        "mem_budget_mb",
+        "multi_scan",
+        "serve_addr",
+        "batch_window_ms",
+        "max_batch_tasks",
+        "score_cache_entries",
+        "datastore",
+    ];
+
     /// Apply one `key = value` (file) or `--key value` (CLI) assignment.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let key = key.replace('-', "_");
@@ -172,6 +212,7 @@ impl Config {
             }
             "build_mem_budget_mb" => self.build_mem_budget_mb = parse(v, &key)?,
             "build_workers" => self.build_workers = parse(v, &key)?,
+            "ingest_rows" => self.ingest_rows = parse(v, &key)?,
             "scheme" => self.scheme = v.parse()?,
             "model_bits" => {
                 self.model_bits = parse(v, &key)?;
@@ -357,6 +398,36 @@ mod tests {
         assert!(c.set("bits", "4,4").is_err());
         assert!(c.set("bits", "4,3").is_err());
         assert!(c.set("bits", "4,,8").is_err());
+    }
+
+    #[test]
+    fn keys_const_is_exhaustive_and_accepted() {
+        // every listed key must reach a real setter (no "unknown config
+        // key"), and every key the setter knows must be listed — a new
+        // knob that skips KEYS also skips the docs-sync usage check
+        for key in Config::KEYS {
+            let mut c = Config::default();
+            if let Err(e) = c.set(key, "1") {
+                let msg = format!("{e:#}");
+                assert!(
+                    !msg.contains("unknown config key"),
+                    "KEYS lists '{key}' but set() does not know it"
+                );
+            }
+        }
+        let mut c = Config::default();
+        let err = c.set("definitely_not_a_key", "1").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown config key"));
+    }
+
+    #[test]
+    fn ingest_rows_parses() {
+        let mut c = Config::default();
+        assert_eq!(c.ingest_rows, 0);
+        c.set("ingest-rows", "250").unwrap();
+        assert_eq!(c.ingest_rows, 250);
+        c.validate().unwrap();
+        assert!(c.set("ingest_rows", "lots").is_err());
     }
 
     #[test]

@@ -53,6 +53,41 @@ pub fn generate_corpus(n: usize, seed: u64, tok: &Tokenizer, max_len: usize) -> 
     out
 }
 
+/// Deterministic corpus **extension** for incremental ingest: generation
+/// `generation` (≥ 1) appends `n` fresh samples drawn with the same
+/// per-source mixture as [`generate_corpus`], from an RNG stream salted by
+/// the generation — so segment `generation`'s samples regenerate
+/// bit-identically (with ids starting at `id_base`, the segment's global
+/// start row) without re-deriving any earlier generation's rows. The base
+/// corpus is generation 0; extensions never overlap its stream.
+pub fn extend_corpus(
+    n: usize,
+    seed: u64,
+    generation: u64,
+    id_base: usize,
+    tok: &Tokenizer,
+    max_len: usize,
+) -> Vec<Sample> {
+    let world = World::generate(seed);
+    let mut rng = Rng::new(seed ^ 0xE87E_5D00).fork(generation);
+    let mut out = Vec::with_capacity(n);
+    for (source, frac) in SOURCE_FRACS {
+        let count = ((n as f64) * frac).round() as usize;
+        for _ in 0..count {
+            out.push(tasks::generate(source, &world, &mut rng, tok, max_len));
+        }
+    }
+    while out.len() < n {
+        out.push(tasks::generate(Source::SynFlan, &world, &mut rng, tok, max_len));
+    }
+    out.truncate(n);
+    rng.shuffle(&mut out);
+    for (i, s) in out.iter_mut().enumerate() {
+        s.id = id_base + i;
+    }
+    out
+}
+
 /// Per-source sample counts (corpus statistics / Fig. 5 denominators).
 pub fn source_counts(samples: &[Sample]) -> [(Source, usize); 4] {
     let mut counts = [
@@ -108,6 +143,28 @@ mod tests {
         for (i, s) in c.iter().enumerate() {
             assert_eq!(s.id, i);
         }
+    }
+
+    #[test]
+    fn extensions_are_deterministic_and_generation_distinct() {
+        let tok = Tokenizer::default();
+        let a = extend_corpus(50, 3, 1, 100, &tok, 96);
+        let b = extend_corpus(50, 3, 1, 100, &tok, 96);
+        assert_eq!(a.len(), 50);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.prompt, y.prompt, "sample {i} must regenerate bit-identically");
+            assert_eq!(x.answer, y.answer);
+            assert_eq!(x.id, 100 + i, "ids start at the segment's global row");
+        }
+        // a different generation draws different samples from the same seed
+        let g2 = extend_corpus(50, 3, 2, 150, &tok, 96);
+        assert!(
+            a.iter().zip(&g2).any(|(x, y)| x.prompt != y.prompt),
+            "generations must not repeat each other's rows"
+        );
+        // the extension keeps the corpus mixture: every source appears
+        let counts = source_counts(&extend_corpus(400, 3, 1, 0, &tok, 96));
+        assert!(counts.iter().all(|(_, c)| *c > 0), "{counts:?}");
     }
 
     #[test]

@@ -1,4 +1,10 @@
 //! On-disk header + primitive (de)serialization for the gradient datastore.
+//!
+//! The normative byte-level spec is `rust/FORMAT.md` — included verbatim
+//! below, so its worked hex-dump example runs as a doctest and the spec
+//! can never drift from this code. Edit the markdown file, not this
+//! header.
+#![doc = include_str!("../../FORMAT.md")]
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,786 @@
+//! Live (append-only) datastores: base file + ingested segments, stitched
+//! by the generation [`Manifest`].
+//!
+//! The on-disk format interleaves checkpoint blocks, so rows can never be
+//! appended to an existing file without rewriting every later block —
+//! exactly the bytes an append must *not* touch. Ingest therefore appends
+//! **segment files**: each generation writes one fully self-contained
+//! datastore per precision (same precision/k/checkpoint geometry, same
+//! per-block η, its own row count) next to the base file, then bumps the
+//! manifest. Pre-existing bytes are never modified (digest-verified in
+//! `tests/ingest.rs`), and append-safety holds trivially at every
+//! bitwidth: a segment's packed rows start at byte 0 of its own row
+//! section, so the sub-byte code layout of earlier rows cannot shift.
+//!
+//! * [`LiveStore`] — the read side: base + segments as one logical row
+//!   space `0..n_rows()`, refreshable in place when the generation bumps
+//!   (new members are *appended*; existing members, and anything cached
+//!   against them, stay valid).
+//! * [`SegmentWriter`] — the write side: the ingest mechanics (tmp files →
+//!   rename → manifest bump) around a [`MultiWriter`], minus feature
+//!   extraction, so tests and embedders can drive it with any row source.
+//! * [`repair_run_dir`] — crash recovery: roll the manifest back to its
+//!   last fully-valid prefix and delete half-written tails, so a crash
+//!   mid-append is *rebuilt*, never served.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, SegmentMeta};
+use super::multi::MultiWriter;
+use super::store::Datastore;
+use super::{default_store_path, Header};
+use crate::quant::{Precision, Scheme};
+
+/// Path of generation `generation`'s segment file next to `base` —
+/// `<stem>.g<generation>.qlds` (e.g. `datastore_4b_absmax.g2.qlds`).
+pub fn segment_store_path(base: &Path, generation: u64) -> PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("datastore");
+    base.with_file_name(format!("{stem}.g{generation}.qlds"))
+}
+
+/// Precisions that have a **default-named base store** in `run_dir`
+/// (`datastore_<bits>b_<scheme>.qlds`; segment files and temp leftovers
+/// are not bases) — the set the directory's shared manifest describes.
+/// Ingest must cover all of them ([`SegmentWriter::create`] enforces it),
+/// and crash repair validates against them, so operating on a precision
+/// *subset* can never truncate generations that are intact for the
+/// precisions that actually ingested.
+pub fn run_dir_precisions(run_dir: &Path) -> Result<Vec<Precision>> {
+    let mut found: Vec<Precision> = Vec::new();
+    let entries = match std::fs::read_dir(run_dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(found),
+        Err(e) => return Err(e).with_context(|| format!("listing {run_dir:?}")),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix("datastore_") else { continue };
+        let Some(rest) = rest.strip_suffix(".qlds") else { continue };
+        if rest.contains('.') {
+            continue; // `<stem>.g<N>.qlds` segments are not bases
+        }
+        let Some((bits_s, scheme_s)) = rest.split_once("b_") else { continue };
+        let (Ok(bits), Ok(scheme)) = (bits_s.parse::<u8>(), scheme_s.parse::<Scheme>()) else {
+            continue;
+        };
+        if let Ok(p) = Precision::new(bits, scheme) {
+            // a coerced scheme (16-bit absmean → absmax) wouldn't round-trip
+            // to this file name; only canonical names are run members
+            if p.scheme == scheme && !found.contains(&p) {
+                found.push(p);
+            }
+        }
+    }
+    found.sort_by_key(|p| (p.bits, p.label()));
+    Ok(found)
+}
+
+/// One member of a live store: the base file (generation 0) or an
+/// ingested segment, with its global row offset.
+pub struct LiveMember {
+    /// Global row index of this member's first row.
+    pub start_row: usize,
+    /// Generation that wrote this member (0 = the base build).
+    pub generation: u64,
+    /// The member's own validated datastore file.
+    pub ds: Datastore,
+}
+
+/// A generation-aware view over one precision's base datastore plus every
+/// ingested segment (see the module docs). Opened from the base file's
+/// path; the manifest is found next to it.
+pub struct LiveStore {
+    base_path: PathBuf,
+    members: Vec<LiveMember>,
+    etas: Vec<f32>,
+    generation: u64,
+}
+
+impl LiveStore {
+    /// Open the base datastore at `path` and attach every segment its
+    /// directory's manifest lists. With no manifest this is a frozen
+    /// generation-0 store. A manifest that lists missing, truncated or
+    /// geometry-mismatched segments is an **error** — a half-ingested run
+    /// directory must be repaired ([`repair_run_dir`]), not silently
+    /// served short.
+    pub fn open(path: &Path) -> Result<LiveStore> {
+        let ds = Datastore::open(path)?;
+        let mut etas = Vec::with_capacity(ds.n_checkpoints());
+        for ci in 0..ds.n_checkpoints() {
+            etas.push(ds.shard_reader(ci, 1)?.eta());
+        }
+        let mut live = LiveStore {
+            base_path: path.to_path_buf(),
+            members: vec![LiveMember { start_row: 0, generation: 0, ds }],
+            etas,
+            generation: 0,
+        };
+        live.refresh()?;
+        Ok(live)
+    }
+
+    /// Re-read the manifest and attach any newly ingested segments **in
+    /// place**: existing members never move or reload, so shard caches
+    /// keyed by member index stay valid across a reload. Returns `true`
+    /// when the generation advanced. History rewrites (a manifest whose
+    /// prefix no longer matches the members already attached) and missing
+    /// or mismatched segment files are errors — and they leave the store
+    /// exactly as it was (new members are staged and committed only after
+    /// the whole manifest validates), so a caller that downgrades the
+    /// error keeps serving a consistent generation.
+    ///
+    /// The manifest binds to the run directory's **default-named** stores
+    /// (`datastore_<bits>b_<scheme>.qlds` — segment files derive from
+    /// that stem). A base file under any other name is always served
+    /// frozen at generation 0, never cross-wired to a manifest that
+    /// describes different files.
+    pub fn refresh(&mut self) -> Result<bool> {
+        let dir = match self.base_path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let h = self.members[0].ds.header;
+        let expected = default_store_path(&dir, h.precision);
+        if self.base_path.file_name() != expected.file_name() {
+            return Ok(false);
+        }
+        let Some(m) = Manifest::load(&dir)? else {
+            return Ok(false);
+        };
+        if m.k != h.k || m.n_checkpoints != h.n_checkpoints || m.base_rows != h.n_samples {
+            bail!(
+                "manifest in {dir:?} (k={}, {} checkpoints, {} base rows) does not describe \
+                 the served base store (k={}, {} checkpoints, {} rows)",
+                m.k,
+                m.n_checkpoints,
+                m.base_rows,
+                h.k,
+                h.n_checkpoints,
+                h.n_samples
+            );
+        }
+        if m.generation < self.generation {
+            bail!(
+                "manifest generation went backwards ({} -> {}): refusing to un-serve rows",
+                self.generation,
+                m.generation
+            );
+        }
+        if m.segments.len() + 1 < self.members.len() {
+            bail!("manifest dropped segments this store already serves");
+        }
+        // stage new members; commit only after every segment validates,
+        // so an error cannot leave a half-advanced store behind
+        let mut staged: Vec<LiveMember> = Vec::new();
+        let mut next_row = self.n_rows();
+        for (i, seg) in m.segments.iter().enumerate() {
+            if let Some(have) = self.members.get(i + 1) {
+                if have.generation != seg.generation
+                    || have.start_row != seg.start_row as usize
+                    || have.ds.n_samples() as u64 != seg.rows
+                {
+                    bail!(
+                        "manifest rewrote history at segment {i} (generation {})",
+                        seg.generation
+                    );
+                }
+                continue;
+            }
+            let path = segment_store_path(&self.base_path, seg.generation);
+            let ds = Datastore::open(&path).with_context(|| {
+                format!("opening ingested segment (generation {})", seg.generation)
+            })?;
+            let sh = ds.header;
+            if sh.precision != h.precision || sh.k != h.k || sh.n_checkpoints != h.n_checkpoints
+            {
+                bail!(
+                    "segment {path:?} geometry ({}, k={}, {} checkpoints) does not match the \
+                     base store ({}, k={}, {} checkpoints)",
+                    sh.precision.label(),
+                    sh.k,
+                    sh.n_checkpoints,
+                    h.precision.label(),
+                    h.k,
+                    h.n_checkpoints
+                );
+            }
+            if ds.n_samples() as u64 != seg.rows {
+                bail!(
+                    "segment {path:?} holds {} rows, manifest says {}",
+                    ds.n_samples(),
+                    seg.rows
+                );
+            }
+            if seg.start_row as usize != next_row {
+                bail!(
+                    "segment {path:?} starts at row {}, expected {next_row}",
+                    seg.start_row
+                );
+            }
+            // η parity: Eq. 7's checkpoint weights must be identical in
+            // every member, or scores would mix different training runs
+            for (ci, &eta) in self.etas.iter().enumerate() {
+                let got = ds.shard_reader(ci, 1)?.eta();
+                if got.to_bits() != eta.to_bits() {
+                    bail!(
+                        "segment {path:?} checkpoint {ci} has η {got}, base store has {eta}"
+                    );
+                }
+            }
+            let start_row = seg.start_row as usize;
+            next_row += ds.n_samples();
+            staged.push(LiveMember { start_row, generation: seg.generation, ds });
+        }
+        self.members.append(&mut staged);
+        let advanced = m.generation > self.generation;
+        self.generation = m.generation;
+        Ok(advanced)
+    }
+
+    /// The base store's header. Geometry fields (`precision`, `k`,
+    /// `n_checkpoints`, `row_stride`) hold for every member; `n_samples`
+    /// is the **base** row count only — use [`LiveStore::n_rows`] for the
+    /// live total.
+    pub fn header(&self) -> &Header {
+        &self.members[0].ds.header
+    }
+
+    /// The manifest generation currently attached (0 = frozen base).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Total rows across the base and every attached segment.
+    pub fn n_rows(&self) -> usize {
+        self.members.iter().map(|m| m.ds.n_samples()).sum()
+    }
+
+    /// The member stores in row order (base first, then segments by
+    /// ascending generation).
+    pub fn members(&self) -> &[LiveMember] {
+        &self.members
+    }
+
+    /// Per-checkpoint η weights (identical in every member by
+    /// construction; validated on attach).
+    pub fn etas(&self) -> &[f32] {
+        &self.etas
+    }
+
+    /// First global row strictly newer than `generation`; `n_rows()` when
+    /// nothing is newer. The `since_gen` wire filter resolves through
+    /// this.
+    pub fn first_row_after(&self, generation: u64) -> usize {
+        self.members
+            .iter()
+            .filter(|m| m.generation > generation)
+            .map(|m| m.start_row)
+            .min()
+            .unwrap_or_else(|| self.n_rows())
+    }
+
+    /// True when `row` is a member (generation) boundary or the end of the
+    /// store — the only places an incremental tail scan may start.
+    pub fn is_generation_boundary(&self, row: usize) -> bool {
+        row == self.n_rows() || self.members.iter().any(|m| m.start_row == row)
+    }
+
+    /// Generation-aware cache-reuse guard (the live form of
+    /// [`Datastore::matches_geometry`]): precision, `k` and checkpoint
+    /// count from the base header, plus the **live row total** — so a run
+    /// directory whose manifest claims rows a crash never delivered (or
+    /// that belongs to a different corpus size) is rebuilt, not served.
+    pub fn matches_geometry(
+        &self,
+        precision: Precision,
+        n_total: usize,
+        k: usize,
+        n_checkpoints: usize,
+    ) -> bool {
+        let h = self.members[0].ds.header;
+        h.precision == precision
+            && h.k == k as u64
+            && h.n_checkpoints == n_checkpoints as u32
+            && self.n_rows() == n_total
+    }
+
+    /// Resolve the effective rows-per-shard for scans over this store
+    /// (same contract as [`Datastore::rows_per_shard`], applied uniformly
+    /// to every member).
+    pub fn rows_per_shard(&self, shard_rows: usize, mem_budget_mb: usize) -> usize {
+        self.members[0].ds.rows_per_shard(shard_rows, mem_budget_mb)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ingest write side
+// ---------------------------------------------------------------------------
+
+/// Appends one generation's segment to a run directory's datastores: a
+/// [`MultiWriter`] over per-precision **temp files**, renamed into place
+/// and published by a manifest bump only at [`SegmentWriter::finalize`] —
+/// so a crash at any earlier point leaves the previous generation fully
+/// intact (the leftovers are orphans [`repair_run_dir`] removes).
+///
+/// Per-block η weights are taken from the base stores (and must agree
+/// across precisions): segments are forced to share the base's checkpoint
+/// weighting, which is what keeps Eq. 7 well-defined over the combined
+/// row space. Drive it like a [`MultiWriter`], one checkpoint at a time:
+/// `begin_checkpoint` / [`SegmentWriter::append_rows`]× /
+/// `end_checkpoint`, then `finalize`.
+pub struct SegmentWriter {
+    dir: PathBuf,
+    manifest: Manifest,
+    generation: u64,
+    rows: usize,
+    etas: Vec<f32>,
+    next_ckpt: usize,
+    tmps: Vec<PathBuf>,
+    finals: Vec<PathBuf>,
+    mw: MultiWriter,
+}
+
+impl SegmentWriter {
+    /// Open the run directory's base stores for every precision, validate
+    /// their shared geometry against the manifest (created at generation 0
+    /// if absent), and stage the next generation's segment files. `rows`
+    /// is the number of new rows this segment will hold; `workers` caps
+    /// the quantize-stage parallelism (0 = full pool width).
+    ///
+    /// Call [`repair_run_dir`] first when the directory may hold a crashed
+    /// ingest — this constructor trusts the manifest's existing segments.
+    pub fn create(
+        run_dir: &Path,
+        precisions: &[Precision],
+        rows: usize,
+        workers: usize,
+    ) -> Result<SegmentWriter> {
+        if rows == 0 {
+            bail!("ingest segment needs at least one row");
+        }
+        if precisions.is_empty() {
+            bail!("ingest needs at least one precision");
+        }
+        // the manifest is shared by every precision of the run, so a
+        // generation must append to ALL of them — a subset ingest would
+        // leave the uncovered precisions torn by construction
+        for p in run_dir_precisions(run_dir)? {
+            if !precisions.contains(&p) {
+                bail!(
+                    "run dir {run_dir:?} also holds a {} base store: ingest must append to \
+                     every precision of the run in one pass (add it to --bits)",
+                    p.label()
+                );
+            }
+        }
+        let mut bases: Vec<(Precision, PathBuf, Datastore)> = Vec::with_capacity(precisions.len());
+        for &p in precisions {
+            let path = default_store_path(run_dir, p);
+            let ds = Datastore::open(&path).with_context(|| {
+                format!("ingest needs an existing {} base datastore", p.label())
+            })?;
+            if ds.header.precision != p {
+                bail!("{path:?} stores {}, expected {}", ds.header.precision.label(), p.label());
+            }
+            bases.push((p, path, ds));
+        }
+        let h0 = bases[0].2.header;
+        let (k, c, n_base) = (h0.k as usize, h0.n_checkpoints as usize, h0.n_samples as usize);
+        let mut etas = Vec::with_capacity(c);
+        for ci in 0..c {
+            etas.push(bases[0].2.shard_reader(ci, 1)?.eta());
+        }
+        for (p, path, ds) in &bases[1..] {
+            if !ds.matches_geometry(*p, n_base, k, c) {
+                bail!(
+                    "{path:?} geometry does not match the run's other base stores \
+                     (expected {n_base} rows × k={k} × {c} checkpoints)"
+                );
+            }
+            for (ci, &eta) in etas.iter().enumerate() {
+                let got = ds.shard_reader(ci, 1)?.eta();
+                if got.to_bits() != eta.to_bits() {
+                    bail!("{path:?} checkpoint {ci} has η {got}, expected {eta}");
+                }
+            }
+        }
+        let manifest = match Manifest::load(run_dir)? {
+            Some(m) => {
+                if m.k != k as u64 || m.n_checkpoints != c as u32 || m.base_rows != n_base as u64
+                {
+                    bail!(
+                        "manifest in {run_dir:?} does not match the base stores \
+                         ({n_base} rows × k={k} × {c} checkpoints) — rebuild before ingesting"
+                    );
+                }
+                m
+            }
+            None => Manifest::new(k, c, n_base),
+        };
+        let generation = manifest.generation + 1;
+        let mut tmps = Vec::with_capacity(bases.len());
+        let mut finals = Vec::with_capacity(bases.len());
+        let mut targets = Vec::with_capacity(bases.len());
+        for (p, base_path, _) in &bases {
+            let fin = segment_store_path(base_path, generation);
+            let tmp = fin.with_extension("qlds.tmp");
+            // stale leftovers from a crashed attempt at this generation
+            let _ = std::fs::remove_file(&fin);
+            let _ = std::fs::remove_file(&tmp);
+            targets.push((*p, tmp.clone()));
+            tmps.push(tmp);
+            finals.push(fin);
+        }
+        let mw = MultiWriter::create(&targets, rows, k, c, workers)?;
+        Ok(SegmentWriter {
+            dir: run_dir.to_path_buf(),
+            manifest,
+            generation,
+            rows,
+            etas,
+            next_ckpt: 0,
+            tmps,
+            finals,
+            mw,
+        })
+    }
+
+    /// The generation this writer will publish.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Global row index the segment's first row will get.
+    pub fn start_row(&self) -> usize {
+        self.manifest.total_rows() as usize
+    }
+
+    /// The base stores' per-checkpoint η weights (the segment reuses them
+    /// verbatim).
+    pub fn etas(&self) -> &[f32] {
+        &self.etas
+    }
+
+    /// Start the next checkpoint block in every member, with the base
+    /// store's η for that checkpoint.
+    pub fn begin_checkpoint(&mut self) -> Result<()> {
+        let Some(&eta) = self.etas.get(self.next_ckpt) else {
+            bail!("segment already holds all {} checkpoints", self.etas.len());
+        };
+        self.mw.begin_checkpoint(eta)
+    }
+
+    /// Append a window of `rows.len() / k` feature rows (in row order) to
+    /// the current checkpoint, quantized at every target precision.
+    pub fn append_rows(&mut self, rows: &[f32]) -> Result<()> {
+        self.mw.append_rows(rows)
+    }
+
+    /// Finish the current checkpoint block in every member.
+    pub fn end_checkpoint(&mut self) -> Result<()> {
+        self.mw.end_checkpoint()?;
+        self.next_ckpt += 1;
+        Ok(())
+    }
+
+    /// Peak builder-resident bytes so far (see
+    /// [`MultiWriter::peak_builder_bytes`]).
+    pub fn peak_builder_bytes(&self) -> u64 {
+        self.mw.peak_builder_bytes()
+    }
+
+    /// Validate and publish the segment: finalize every temp file, rename
+    /// into place, bump the manifest and save it atomically. Returns the
+    /// new segment's metadata, the updated manifest, and the per-precision
+    /// segment file sizes (creation order).
+    pub fn finalize(mut self) -> Result<(SegmentMeta, Manifest, Vec<u64>)> {
+        let sizes = self.mw.finalize()?;
+        for (tmp, fin) in self.tmps.iter().zip(&self.finals) {
+            std::fs::rename(tmp, fin)
+                .with_context(|| format!("publishing segment {fin:?}"))?;
+        }
+        let seg = self.manifest.push_segment(self.rows as u64);
+        self.manifest.save(&self.dir)?;
+        Ok((seg, self.manifest, sizes))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// crash repair
+// ---------------------------------------------------------------------------
+
+/// Roll a run directory back to its last fully-valid generation: keep the
+/// longest manifest prefix whose segment files open cleanly — with the
+/// right geometry and row count — for **every precision that has a base
+/// store in the directory** ([`run_dir_precisions`], not merely the
+/// caller's subset, so repairing one precision can never truncate
+/// generations that are intact for the precisions that actually
+/// ingested); truncate the manifest there, and delete every orphan —
+/// segment files newer than the kept generation and any `.qlds.tmp`
+/// leftovers. Returns the (possibly repaired) manifest, or `None` when
+/// the directory has none.
+///
+/// This is what makes a crash mid-append *rebuildable*: the next ingest
+/// re-appends from the repaired row count instead of serving a torn tail.
+pub fn repair_run_dir(run_dir: &Path, precisions: &[Precision]) -> Result<Option<Manifest>> {
+    // validate against the precisions actually present; clean orphans for
+    // the union with the caller's (a caller precision with no base may
+    // still have tmp leftovers from a crashed first ingest)
+    let members = run_dir_precisions(run_dir)?;
+    let mut sweep = members.clone();
+    for &p in precisions {
+        if !sweep.contains(&p) {
+            sweep.push(p);
+        }
+    }
+    let loaded = Manifest::load(run_dir)?;
+    let last_gen = match &loaded {
+        Some(m) => {
+            let mut keep = 0usize;
+            'segments: for seg in &m.segments {
+                for &p in &members {
+                    let base = default_store_path(run_dir, p);
+                    let path = segment_store_path(&base, seg.generation);
+                    let ok = match Datastore::open(&path) {
+                        Ok(ds) => {
+                            ds.header.precision == p
+                                && ds.header.k == m.k
+                                && ds.header.n_checkpoints == m.n_checkpoints
+                                && ds.n_samples() as u64 == seg.rows
+                        }
+                        Err(_) => false,
+                    };
+                    if !ok {
+                        break 'segments;
+                    }
+                }
+                keep += 1;
+            }
+            if keep < m.segments.len() {
+                let mut repaired = m.clone();
+                repaired.truncate_segments(keep);
+                repaired.save(run_dir)?;
+                let gen = repaired.generation;
+                remove_orphans(run_dir, &sweep, gen)?;
+                return Ok(Some(repaired));
+            }
+            m.generation
+        }
+        None => 0,
+    };
+    remove_orphans(run_dir, &sweep, last_gen)?;
+    Ok(loaded)
+}
+
+/// Delete segment files newer than `last_gen` and all `.qlds.tmp`
+/// leftovers for the given precisions in `run_dir`.
+fn remove_orphans(run_dir: &Path, precisions: &[Precision], last_gen: u64) -> Result<()> {
+    let entries = match std::fs::read_dir(run_dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("listing {run_dir:?}")),
+    };
+    let prefixes: Vec<String> = precisions
+        .iter()
+        .filter_map(|&p| {
+            let base = default_store_path(run_dir, p);
+            let stem = base.file_stem()?.to_str()?.to_string();
+            Some(format!("{stem}.g"))
+        })
+        .collect();
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(prefix) = prefixes.iter().find(|pre| name.starts_with(pre.as_str())) else {
+            continue;
+        };
+        let rest = &name[prefix.len()..];
+        let (gen_str, is_tmp) = if let Some(g) = rest.strip_suffix(".qlds.tmp") {
+            (g, true)
+        } else if let Some(g) = rest.strip_suffix(".qlds") {
+            (g, false)
+        } else {
+            continue;
+        };
+        let Ok(gen) = gen_str.parse::<u64>() else { continue };
+        if is_tmp || gen > last_gen {
+            crate::info!("removing orphaned segment file {name} (crash mid-append)");
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("removing orphan {name}"))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Scheme;
+    use crate::util::prop::{normal_features, seeded_datastore};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "qless_live_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn p4() -> Precision {
+        Precision::new(4, Scheme::Absmax).unwrap()
+    }
+
+    /// Build a base store in `dir` and ingest one segment of `add` rows
+    /// through the SegmentWriter, streaming `normal_features(add, k, seed
+    /// + 100·gen + ci)` per checkpoint.
+    fn ingest_once(dir: &Path, p: Precision, add: usize, k: usize, etas: &[f32], seed: u64) {
+        let mut sw = SegmentWriter::create(dir, &[p], add, 0).unwrap();
+        let gen = sw.generation();
+        for ci in 0..etas.len() {
+            sw.begin_checkpoint().unwrap();
+            let f = normal_features(add, k, seed + 100 * gen + ci as u64);
+            sw.append_rows(&f.data).unwrap();
+            sw.end_checkpoint().unwrap();
+        }
+        sw.finalize().unwrap();
+    }
+
+    #[test]
+    fn segment_paths_derive_from_base() {
+        let p = segment_store_path(Path::new("/runs/x/datastore_4b_absmax.qlds"), 3);
+        assert_eq!(p, Path::new("/runs/x/datastore_4b_absmax.g3.qlds"));
+    }
+
+    #[test]
+    fn open_refresh_and_boundaries() {
+        let dir = tmpdir("open");
+        let (n, k) = (10usize, 32usize);
+        let etas = [0.5f32, 0.25];
+        let base = default_store_path(&dir, p4());
+        seeded_datastore(&base, p4(), n, k, &etas, 7);
+
+        // frozen store: generation 0, one member
+        let mut live = LiveStore::open(&base).unwrap();
+        assert_eq!(live.generation(), 0);
+        assert_eq!(live.n_rows(), n);
+        assert_eq!(live.members().len(), 1);
+        assert_eq!(live.etas(), &etas);
+
+        // ingest 4 rows, then 3 more: refresh attaches in place
+        ingest_once(&dir, p4(), 4, k, &etas, 7);
+        assert!(live.refresh().unwrap());
+        assert_eq!(live.generation(), 1);
+        assert_eq!(live.n_rows(), n + 4);
+        ingest_once(&dir, p4(), 3, k, &etas, 7);
+        assert!(live.refresh().unwrap());
+        assert!(!live.refresh().unwrap(), "no change: refresh is a no-op");
+        assert_eq!(live.generation(), 2);
+        assert_eq!(live.n_rows(), n + 7);
+        assert_eq!(live.members().len(), 3);
+        assert_eq!(live.members()[1].start_row, n);
+        assert_eq!(live.members()[2].start_row, n + 4);
+
+        assert_eq!(live.first_row_after(0), n);
+        assert_eq!(live.first_row_after(1), n + 4);
+        assert_eq!(live.first_row_after(2), n + 7);
+        assert!(live.is_generation_boundary(0));
+        assert!(live.is_generation_boundary(n));
+        assert!(live.is_generation_boundary(n + 7));
+        assert!(!live.is_generation_boundary(1));
+
+        assert!(live.matches_geometry(p4(), n + 7, k, etas.len()));
+        assert!(!live.matches_geometry(p4(), n, k, etas.len()), "row total is live");
+
+        // a fresh open sees the same world
+        let reopened = LiveStore::open(&base).unwrap();
+        assert_eq!(reopened.generation(), 2);
+        assert_eq!(reopened.n_rows(), n + 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_detected_and_repaired() {
+        let dir = tmpdir("repair");
+        let (n, k) = (8usize, 32usize);
+        let etas = [1.0f32];
+        let base = default_store_path(&dir, p4());
+        seeded_datastore(&base, p4(), n, k, &etas, 3);
+        ingest_once(&dir, p4(), 4, k, &etas, 3);
+        ingest_once(&dir, p4(), 5, k, &etas, 3);
+
+        // simulate a crash that corrupted the generation-2 segment
+        let seg2 = segment_store_path(&base, 2);
+        let bytes = std::fs::read(&seg2).unwrap();
+        std::fs::write(&seg2, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(LiveStore::open(&base).is_err(), "torn tail must not be served");
+
+        let m = repair_run_dir(&dir, &[p4()]).unwrap().unwrap();
+        assert_eq!(m.generation, 1);
+        assert_eq!(m.total_rows(), (n + 4) as u64);
+        assert!(!seg2.exists(), "torn segment deleted");
+        let live = LiveStore::open(&base).unwrap();
+        assert_eq!(live.generation(), 1);
+        assert_eq!(live.n_rows(), n + 4);
+
+        // the tail can now be re-ingested (generation number reused)
+        ingest_once(&dir, p4(), 5, k, &etas, 3);
+        let live = LiveStore::open(&base).unwrap();
+        assert_eq!(live.generation(), 2);
+        assert_eq!(live.n_rows(), n + 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repair_removes_unlisted_orphans_and_tmp_files() {
+        let dir = tmpdir("orphans");
+        let (n, k) = (6usize, 32usize);
+        let base = default_store_path(&dir, p4());
+        seeded_datastore(&base, p4(), n, k, &[1.0], 9);
+        // a segment file the manifest never published + a tmp leftover
+        let orphan = segment_store_path(&base, 1);
+        std::fs::write(&orphan, b"half-written").unwrap();
+        std::fs::write(orphan.with_extension("qlds.tmp"), b"tmp").unwrap();
+        assert!(repair_run_dir(&dir, &[p4()]).unwrap().is_none(), "no manifest");
+        assert!(!orphan.exists());
+        assert!(!orphan.with_extension("qlds.tmp").exists());
+        // the base store itself is untouched
+        LiveStore::open(&base).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segment_writer_enforces_protocol() {
+        let dir = tmpdir("proto");
+        let (n, k) = (5usize, 16usize);
+        let base = default_store_path(&dir, p4());
+        seeded_datastore(&base, p4(), n, k, &[0.5, 0.5], 1);
+        assert!(SegmentWriter::create(&dir, &[p4()], 0, 0).is_err(), "zero rows");
+        assert!(SegmentWriter::create(&dir, &[], 2, 0).is_err(), "no precisions");
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        assert!(SegmentWriter::create(&dir, &[p8], 2, 0).is_err(), "missing base");
+
+        let mut sw = SegmentWriter::create(&dir, &[p4()], 2, 0).unwrap();
+        assert_eq!(sw.generation(), 1);
+        assert_eq!(sw.start_row(), n);
+        assert_eq!(sw.etas().len(), 2);
+        for _ in 0..2 {
+            sw.begin_checkpoint().unwrap();
+            sw.append_rows(&normal_features(2, k, 50).data).unwrap();
+            sw.end_checkpoint().unwrap();
+        }
+        assert!(sw.begin_checkpoint().is_err(), "all checkpoints written");
+        let (seg, m, sizes) = sw.finalize().unwrap();
+        assert_eq!((seg.generation, seg.start_row, seg.rows), (1, n as u64, 2));
+        assert_eq!(m.generation, 1);
+        assert_eq!(sizes.len(), 1);
+        assert!(segment_store_path(&base, 1).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

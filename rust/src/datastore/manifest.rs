@@ -1,0 +1,297 @@
+//! The generation manifest — the small JSON sidecar that turns a run
+//! directory's frozen datastores into a **live, append-only** store.
+//!
+//! A freshly built run directory holds one base datastore file per
+//! precision and no manifest: that is **generation 0**. Every `qless
+//! ingest` appends one *segment* datastore file per precision (same
+//! geometry, new rows; see [`crate::datastore::live`]) and bumps the
+//! persisted generation counter here, recording the segment's global row
+//! range. Readers ([`crate::datastore::LiveStore`], the resident service)
+//! poll this file to discover new rows without reopening — or touching —
+//! any byte that was already on disk.
+//!
+//! The manifest is **precision-agnostic**: every precision of a run stores
+//! exactly the same rows, so one sidecar describes them all. Writes are
+//! atomic (temp file + rename), so a reader never observes a torn
+//! manifest; a crash *before* the rename leaves the previous generation in
+//! force and the half-written segment files as orphans, which
+//! [`crate::datastore::repair_run_dir`] detects and removes.
+//!
+//! On-disk schema (see `rust/FORMAT.md` §Generation manifest):
+//!
+//! ```text
+//! {"version":1,"k":512,"n_checkpoints":4,"base_rows":8000,"generation":2,
+//!  "segments":[{"generation":1,"start_row":8000,"rows":1000},
+//!              {"generation":2,"start_row":9000,"rows":500}]}
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// File name of the generation manifest inside a run directory.
+pub const MANIFEST_FILE: &str = "qless.manifest.json";
+
+/// Manifest schema version accepted by [`Manifest::load`].
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// One ingested segment: a contiguous global row range appended at one
+/// generation. Rows `start_row .. start_row + rows` of the live store live
+/// in this segment's per-precision files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// The generation that appended this segment (≥ 1; 0 is the base).
+    pub generation: u64,
+    /// Global row index of the segment's first row.
+    pub start_row: u64,
+    /// Rows in the segment (> 0).
+    pub rows: u64,
+}
+
+/// The persisted generation state of one run directory (see the module
+/// docs). `generation` is a monotonically increasing counter: 0 for a
+/// frozen base-only store, bumped by one per successful ingest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Projection dimension shared by every member store.
+    pub k: u64,
+    /// Checkpoint blocks per member store.
+    pub n_checkpoints: u32,
+    /// Rows in the base (generation-0) datastore files.
+    pub base_rows: u64,
+    /// Current generation (equals the last segment's generation, or 0).
+    pub generation: u64,
+    /// Appended segments, in generation order.
+    pub segments: Vec<SegmentMeta>,
+}
+
+impl Manifest {
+    /// A fresh generation-0 manifest for the given base geometry.
+    pub fn new(k: usize, n_checkpoints: usize, base_rows: usize) -> Manifest {
+        Manifest {
+            k: k as u64,
+            n_checkpoints: n_checkpoints as u32,
+            base_rows: base_rows as u64,
+            generation: 0,
+            segments: Vec::new(),
+        }
+    }
+
+    /// The manifest's path inside `dir`.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(MANIFEST_FILE)
+    }
+
+    /// Total rows across the base and every segment.
+    pub fn total_rows(&self) -> u64 {
+        self.base_rows + self.segments.iter().map(|s| s.rows).sum::<u64>()
+    }
+
+    /// Append a segment of `rows` rows: bumps the generation and returns
+    /// the new segment's metadata (its row range starts at the previous
+    /// [`Manifest::total_rows`]).
+    pub fn push_segment(&mut self, rows: u64) -> SegmentMeta {
+        let seg = SegmentMeta {
+            generation: self.generation + 1,
+            start_row: self.total_rows(),
+            rows,
+        };
+        self.generation = seg.generation;
+        self.segments.push(seg);
+        seg
+    }
+
+    /// Drop every segment past the first `keep`, rolling the generation
+    /// counter back with them — the crash-repair primitive
+    /// ([`crate::datastore::repair_run_dir`]).
+    pub fn truncate_segments(&mut self, keep: usize) {
+        self.segments.truncate(keep);
+        self.generation = self.segments.last().map(|s| s.generation).unwrap_or(0);
+    }
+
+    /// Check the manifest's internal invariants: segments contiguous from
+    /// `base_rows`, generations strictly ascending and ≥ 1, no empty
+    /// segments, and the generation counter equal to the last segment's.
+    pub fn validate(&self) -> Result<()> {
+        let mut next_row = self.base_rows;
+        let mut last_gen = 0u64;
+        for (i, s) in self.segments.iter().enumerate() {
+            if s.rows == 0 {
+                bail!("manifest segment {i} is empty");
+            }
+            if s.start_row != next_row {
+                bail!(
+                    "manifest segment {i} starts at row {} (expected {next_row})",
+                    s.start_row
+                );
+            }
+            if s.generation <= last_gen {
+                bail!(
+                    "manifest segment {i} has generation {} after {last_gen} \
+                     (must be strictly ascending)",
+                    s.generation
+                );
+            }
+            next_row += s.rows;
+            last_gen = s.generation;
+        }
+        if self.generation != last_gen {
+            bail!(
+                "manifest generation {} != last segment generation {last_gen}",
+                self.generation
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the on-disk JSON schema.
+    pub fn to_json(&self) -> Json {
+        let segs: Vec<Json> = self
+            .segments
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("generation", s.generation as usize)
+                    .set("start_row", s.start_row as usize)
+                    .set("rows", s.rows as usize);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("version", MANIFEST_VERSION as usize)
+            .set("k", self.k as usize)
+            .set("n_checkpoints", self.n_checkpoints as usize)
+            .set("base_rows", self.base_rows as usize)
+            .set("generation", self.generation as usize)
+            .set("segments", Json::Arr(segs));
+        o
+    }
+
+    /// Parse the on-disk JSON schema (strict: unknown versions rejected,
+    /// invariants checked).
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let version = j.req("version")?.as_usize()? as u64;
+        if version != MANIFEST_VERSION {
+            bail!("manifest version {version} != {MANIFEST_VERSION}");
+        }
+        let mut m = Manifest {
+            k: j.req("k")?.as_usize()? as u64,
+            n_checkpoints: j.req("n_checkpoints")?.as_usize()? as u32,
+            base_rows: j.req("base_rows")?.as_usize()? as u64,
+            generation: j.req("generation")?.as_usize()? as u64,
+            segments: Vec::new(),
+        };
+        for s in j.req("segments")?.as_arr()? {
+            m.segments.push(SegmentMeta {
+                generation: s.req("generation")?.as_usize()? as u64,
+                start_row: s.req("start_row")?.as_usize()? as u64,
+                rows: s.req("rows")?.as_usize()? as u64,
+            });
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load the manifest of `dir`, if one exists. `Ok(None)` means a
+    /// frozen generation-0 store; any unreadable or invalid manifest is an
+    /// error, never silently ignored.
+    pub fn load(dir: &Path) -> Result<Option<Manifest>> {
+        let path = Self::path_in(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading manifest {path:?}")),
+        };
+        let j = Json::parse(&text).with_context(|| format!("parsing manifest {path:?}"))?;
+        Ok(Some(Self::from_json(&j).with_context(|| format!("validating manifest {path:?}"))?))
+    }
+
+    /// Persist atomically into `dir` (temp file + rename): a concurrent
+    /// reader sees either the previous or the new generation, never a torn
+    /// file.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.validate()?;
+        let path = Self::path_in(dir);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().encode_pretty())
+            .with_context(|| format!("writing manifest {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing manifest {path:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "qless_manifest_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let dir = tmpdir("rt");
+        assert!(Manifest::load(&dir).unwrap().is_none(), "no manifest yet");
+        let mut m = Manifest::new(64, 2, 100);
+        assert_eq!(m.generation, 0);
+        assert_eq!(m.total_rows(), 100);
+        let s1 = m.push_segment(10);
+        assert_eq!((s1.generation, s1.start_row, s1.rows), (1, 100, 10));
+        let s2 = m.push_segment(5);
+        assert_eq!((s2.generation, s2.start_row), (2, 110));
+        assert_eq!(m.total_rows(), 115);
+        m.save(&dir).unwrap();
+        let back = Manifest::load(&dir).unwrap().unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncate_rolls_back_generation() {
+        let mut m = Manifest::new(8, 1, 50);
+        m.push_segment(10);
+        m.push_segment(20);
+        m.truncate_segments(1);
+        assert_eq!(m.generation, 1);
+        assert_eq!(m.total_rows(), 60);
+        m.validate().unwrap();
+        m.truncate_segments(0);
+        assert_eq!(m.generation, 0);
+        assert_eq!(m.total_rows(), 50);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let mut m = Manifest::new(8, 1, 50);
+        m.push_segment(10);
+        let mut bad = m.clone();
+        bad.segments[0].start_row = 51; // gap
+        assert!(bad.validate().is_err());
+        let mut bad = m.clone();
+        bad.segments[0].rows = 0; // empty
+        assert!(bad.validate().is_err());
+        let mut bad = m.clone();
+        bad.generation = 7; // counter out of sync
+        assert!(bad.validate().is_err());
+        let mut bad = m.clone();
+        bad.segments.push(SegmentMeta { generation: 1, start_row: 60, rows: 2 });
+        assert!(bad.validate().is_err(), "non-ascending generation");
+        // a corrupt file on disk is an error, not a silent None
+        let dir = tmpdir("bad");
+        std::fs::write(Manifest::path_in(&dir), "{not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(Manifest::path_in(&dir), "{\"version\":99}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -34,12 +34,25 @@
 //! * [`MultiWriter`] — the streaming builder's fan-out: one feature-row
 //!   stream quantized at **every** requested precision in one pass
 //!   (pool-parallel windows), peak memory independent of the corpus size.
+//!
+//! A run directory becomes **live** (append-only ingest) through the
+//! generation layer: [`SegmentWriter`] appends new rows as self-contained
+//! segment files and bumps the [`Manifest`]; [`LiveStore`] serves base +
+//! segments as one row space and picks up new generations in place. The
+//! byte-level spec of all of it is `rust/FORMAT.md` (included as the
+//! [`format`] module's rustdoc, so its hex example runs as a doctest).
 
 pub mod format;
+pub mod live;
+pub mod manifest;
 pub mod multi;
 pub mod store;
 
 pub use format::{Header, MAGIC, VERSION};
+pub use live::{
+    repair_run_dir, run_dir_precisions, segment_store_path, LiveMember, LiveStore, SegmentWriter,
+};
+pub use manifest::{Manifest, SegmentMeta, MANIFEST_FILE, MANIFEST_VERSION};
 pub use multi::MultiWriter;
 pub use store::{
     CheckpointBlock, Datastore, DatastoreWriter, OwnedShard, RowsView, Shard, ShardReader,

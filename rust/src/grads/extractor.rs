@@ -83,18 +83,64 @@ pub fn extract_train_features_stream<F>(
     data: &Dataset,
     proj: &Projector,
     workers: usize,
+    sink: F,
+) -> Result<()>
+where
+    F: FnMut(usize, &[f32]) -> Result<()> + Send,
+{
+    extract_train_features_stream_from(rt, info, base, ckpt, data, proj, workers, 0, sink)
+}
+
+/// [`extract_train_features_stream`] with a **resumable row offset**: only
+/// rows `first_row..` of `data` are extracted (chunks tile that range
+/// ascending, exactly once), and every chunk's start row is reported in
+/// `data`'s own (global) row numbering — the library-level resume hook
+/// for partial extraction (re-deriving the tail of a dataset without
+/// re-extracting its stored prefix). `first_row = 0` is exactly the full
+/// stream — zero-copy, no subset clone — and is how
+/// [`extract_train_features_stream`] routes here; `first_row =
+/// data.len()` extracts nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn extract_train_features_stream_from<F>(
+    rt: &Runtime,
+    info: &ModelInfo,
+    base: &[f32],
+    ckpt: &Checkpoint,
+    data: &Dataset,
+    proj: &Projector,
+    workers: usize,
+    first_row: usize,
     mut sink: F,
 ) -> Result<()>
 where
     F: FnMut(usize, &[f32]) -> Result<()> + Send,
 {
+    anyhow::ensure!(
+        first_row <= data.len(),
+        "row offset {first_row} past the corpus end ({} rows)",
+        data.len()
+    );
+    if first_row == data.len() {
+        return Ok(());
+    }
     let k = info.proj_dim;
-    extract_features_sink(rt, info, base, ckpt, data, proj, workers, true, |indices, rows| {
+    // subset-clone only the tail actually being extracted — the full
+    // stream (first_row = 0) must stay zero-copy, or every build would
+    // hold a second corpus resident and break the bounded-memory contract
+    let tail_storage;
+    let tail: &Dataset = if first_row == 0 {
+        data
+    } else {
+        let indices: Vec<usize> = (first_row..data.len()).collect();
+        tail_storage = data.subset(&indices);
+        &tail_storage
+    };
+    extract_features_sink(rt, info, base, ckpt, tail, proj, workers, true, |indices, rows| {
         // Batcher::sequential yields contiguous ascending indices; the
         // stream contract (ascending tiling chunks) depends on it.
         debug_assert!(indices.windows(2).all(|w| w[1] == w[0] + 1));
         debug_assert_eq!(rows.len(), indices.len() * k);
-        sink(indices[0], rows)
+        sink(first_row + indices[0], rows)
     })
 }
 
@@ -316,6 +362,69 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("sink says no"));
+    }
+
+    #[test]
+    fn stream_from_skips_the_prefix_and_keeps_global_rows() {
+        // The resumable-offset stream must tile exactly [first_row, n),
+        // report starts in the full dataset's row numbering, and match the
+        // dense extraction row-for-row (the ingest path's contract).
+        let Some(rt) = rt() else {
+            return;
+        };
+        let (info, base, ckpt, data, proj) = setup(&rt);
+        let dense = extract_train_features(&rt, &info, &base, &ckpt, &data, &proj, 2).unwrap();
+        let k = info.proj_dim;
+        let first = 17usize;
+        let mut next = first;
+        extract_train_features_stream_from(
+            &rt,
+            &info,
+            &base,
+            &ckpt,
+            &data,
+            &proj,
+            2,
+            first,
+            |start, rows| {
+                assert_eq!(start, next, "chunks must tile ascending from first_row");
+                for (j, row) in rows.chunks(k).enumerate() {
+                    let g = start + j;
+                    for (a, b) in dense.row(g).iter().zip(row) {
+                        assert!((a - b).abs() < 1e-5, "row {g}");
+                    }
+                }
+                next = start + rows.len() / k;
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(next, data.len());
+        // offset at the end extracts nothing; past the end is an error
+        extract_train_features_stream_from(
+            &rt,
+            &info,
+            &base,
+            &ckpt,
+            &data,
+            &proj,
+            2,
+            data.len(),
+            |_, _| panic!("no rows expected"),
+        )
+        .unwrap();
+        assert!(extract_train_features_stream_from(
+            &rt,
+            &info,
+            &base,
+            &ckpt,
+            &data,
+            &proj,
+            2,
+            data.len() + 1,
+            |_, _| Ok(()),
+        )
+        .is_err());
     }
 
     #[test]

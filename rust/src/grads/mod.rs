@@ -11,6 +11,7 @@ pub mod extractor;
 pub mod projector;
 
 pub use extractor::{
-    extract_train_features, extract_train_features_stream, extract_val_features, FeatureMatrix,
+    extract_train_features, extract_train_features_stream, extract_train_features_stream_from,
+    extract_val_features, FeatureMatrix,
 };
 pub use projector::Projector;

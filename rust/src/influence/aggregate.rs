@@ -22,7 +22,7 @@
 
 use anyhow::Result;
 
-use crate::datastore::{Datastore, Header, RowsView};
+use crate::datastore::{Datastore, Header, LiveStore, RowsView};
 use crate::grads::FeatureMatrix;
 use crate::influence::native::{scores_rows, ValFeatures};
 use crate::influence::xla::{pack_val_tiles, scores_xla_rows};
@@ -90,10 +90,11 @@ pub struct ScanStats {
 pub struct MultiScan {
     /// Prepared validation tasks, one [`ValFeatures`] set per checkpoint.
     vals: Vec<ValFeatures>,
-    /// Per-task running totals, `[q][n]`.
+    /// Per-task running totals, `[q][n_rows]`, indexed by `row − base_row`.
     totals: Vec<Vec<f32>>,
     stats: ScanStats,
     q: usize,
+    base_row: usize,
     resident_row_bytes: u64,
 }
 
@@ -105,8 +106,23 @@ impl MultiScan {
     /// counts that don't match the store, dimension mismatches, and
     /// non-finite features, all as recoverable errors.
     pub fn try_new(header: &Header, tasks: &[&[FeatureMatrix]]) -> Result<MultiScan> {
+        Self::try_new_range(header, tasks, 0, header.n_samples as usize)
+    }
+
+    /// [`MultiScan::try_new`] over an explicit **global row range**
+    /// `base_row .. base_row + n_rows`: totals cover exactly that range
+    /// (`feed` starts are still global). Two callers need this instead of
+    /// the header's own row count: scans over a [`crate::datastore::LiveStore`],
+    /// whose live total spans several member files, and the serving
+    /// layer's incremental **tail scans**, which re-score only rows newer
+    /// than a cached answer after an ingest.
+    pub fn try_new_range(
+        header: &Header,
+        tasks: &[&[FeatureMatrix]],
+        base_row: usize,
+        n_rows: usize,
+    ) -> Result<MultiScan> {
         let c = header.n_checkpoints as usize;
-        let n = header.n_samples as usize;
         let k = header.k as usize;
         let q = tasks.len();
         anyhow::ensure!(q > 0, "no validation tasks to score");
@@ -128,9 +144,10 @@ impl MultiScan {
         }
         Ok(MultiScan {
             vals,
-            totals: vec![vec![0f32; n]; q],
+            totals: vec![vec![0f32; n_rows]; q],
             stats: ScanStats { checkpoints: c, tasks: q, ..Default::default() },
             q,
+            base_row,
             resident_row_bytes: header.resident_row_bytes(),
         })
     }
@@ -159,8 +176,9 @@ impl MultiScan {
     /// externally and feeds them here; [`Self::feed`] is the native form).
     pub fn feed_scores(&mut self, eta: f32, start: usize, n_rows: usize, scores: &[f32]) {
         debug_assert_eq!(scores.len(), n_rows * self.q);
+        debug_assert!(start >= self.base_row, "fed shard below the scan's row range");
         for (j, chunk) in scores.chunks_exact(self.q).enumerate() {
-            let g = start + j;
+            let g = start + j - self.base_row;
             for (total, &s) in self.totals.iter_mut().zip(chunk) {
                 total[g] += eta * s;
             }
@@ -263,6 +281,33 @@ pub fn score_datastore_tasks(
             q,
             t0.elapsed().as_secs_f64()
         );
+    }
+    Ok(scan.finish())
+}
+
+/// [`score_datastore_tasks`] over a **live** store: one streamed pass per
+/// member (base + every ingested segment), all Q tasks fused, totals over
+/// the live row space `0 .. live.n_rows()`. Rows are scored member by
+/// member with the member's own η (validated equal to the base's on
+/// attach), so the result over `base ++ segments` is bit-identical to a
+/// single monolithic store holding the same rows — `tests/ingest.rs`
+/// locks that in across bitwidth × scheme × window. Native kernels only
+/// (the XLA tile path is not plumbed through live stores).
+pub fn score_live_tasks(
+    live: &LiveStore,
+    tasks: &[&[FeatureMatrix]],
+    opts: ScoreOpts,
+) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+    let mut scan = MultiScan::try_new_range(live.header(), tasks, 0, live.n_rows())?;
+    let rows_per_shard = live.rows_per_shard(opts.shard_rows, opts.effective_budget_mb());
+    for ci in 0..live.header().n_checkpoints as usize {
+        for member in live.members() {
+            let mut reader = member.ds.shard_reader(ci, rows_per_shard)?;
+            let eta = reader.eta();
+            while let Some(shard) = reader.next_shard()? {
+                scan.feed(ci, eta, member.start_row + shard.start, &shard.rows());
+            }
+        }
     }
     Ok(scan.finish())
 }
@@ -423,6 +468,65 @@ mod tests {
         assert_eq!(got, want, "re-entrant feed must be bit-identical");
         assert_eq!(got_stats, want_stats);
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn live_scan_matches_monolithic_store() {
+        // Scoring base + ingested segment through score_live_tasks must be
+        // bit-identical to one monolithic store holding the same rows, and
+        // a tail-range MultiScan over just the segment must reproduce the
+        // monolithic scores' tail exactly (the serving layer's incremental
+        // score-cache extension).
+        use crate::datastore::{default_store_path, LiveStore, SegmentWriter};
+        let (n0, add, k) = (9usize, 5usize, 64usize);
+        let n_total = n0 + add;
+        let etas = [0.8f32, 0.3];
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "qless_livescan_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = default_store_path(&dir, p);
+        // normal_features draws sequentially from one seeded stream, so
+        // rows 0..n0 of the monolithic fixture equal the base store's rows
+        seeded_datastore(&base, p, n0, k, &etas, 0);
+        let mut sw = SegmentWriter::create(&dir, &[p], add, 0).unwrap();
+        for ci in 0..etas.len() {
+            sw.begin_checkpoint().unwrap();
+            sw.append_rows(&feats(n_total, k, ci as u64).data[n0 * k..]).unwrap();
+            sw.end_checkpoint().unwrap();
+        }
+        sw.finalize().unwrap();
+        let mono_path = dir.join("mono.qlds");
+        let mono = seeded_datastore(&mono_path, p, n_total, k, &etas, 0);
+        let live = LiveStore::open(&base).unwrap();
+        assert_eq!(live.n_rows(), n_total);
+
+        let t0 = vec![feats(3, k, 70), feats(3, k, 71)];
+        let t1 = vec![feats(2, k, 72), feats(2, k, 73)];
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0, &t1];
+        let opts = ScoreOpts { shard_rows: 4, ..Default::default() };
+        let (want, want_stats) = score_datastore_tasks(&mono, &tasks, opts, None).unwrap();
+        let (got, stats) = score_live_tasks(&live, &tasks, opts).unwrap();
+        assert_eq!(got, want, "live base+segment vs monolithic scores");
+        assert_eq!(stats.rows_read, want_stats.rows_read);
+
+        let mut scan = MultiScan::try_new_range(live.header(), &tasks, n0, add).unwrap();
+        for ci in 0..etas.len() {
+            let m = &live.members()[1];
+            let mut r = m.ds.shard_reader(ci, 3).unwrap();
+            let eta = r.eta();
+            while let Some(shard) = r.next_shard().unwrap() {
+                scan.feed(ci, eta, m.start_row + shard.start, &shard.rows());
+            }
+        }
+        let (tail, _) = scan.finish();
+        for (t, tail_scores) in tail.iter().enumerate() {
+            assert_eq!(tail_scores.as_slice(), &want[t][n0..], "task {t}: tail-range scan");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

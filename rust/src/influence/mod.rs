@@ -30,5 +30,7 @@ pub mod aggregate;
 pub mod native;
 pub mod xla;
 
-pub use aggregate::{score_datastore, score_datastore_tasks, MultiScan, ScanStats, ScoreOpts};
+pub use aggregate::{
+    score_datastore, score_datastore_tasks, score_live_tasks, MultiScan, ScanStats, ScoreOpts,
+};
 pub use native::{ValFeatures, ValTask};

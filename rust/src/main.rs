@@ -81,6 +81,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
             }
             Ok(())
         }
+        "ingest" => ingest(cli),
         "score" | "select" => score_select(cli),
         "eval" => eval_baseline(cli),
         "decode-demo" => decode_demo(cli),
@@ -171,20 +172,57 @@ fn gen_corpus(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `qless ingest` — append `--ingest-rows` fresh corpus rows to the run's
+/// existing datastores (every configured precision, one extraction pass)
+/// as a new generation. Pre-existing bytes are untouched; a running
+/// `qless serve` over the same run-dir picks the new generation up live.
+fn ingest(cli: &Cli) -> Result<()> {
+    let n_new = cli.config.ingest_rows;
+    anyhow::ensure!(n_new > 0, "ingest needs --ingest-rows N (> 0)\n\n{USAGE}");
+    let mut pipe = Pipeline::new(cli.config.clone())?;
+    let ps = cli.config.precisions()?;
+    let report = pipe.ingest_datastores(&ps, n_new)?;
+    println!(
+        "ingest: generation {} appended rows {}..{} to {} precision(s)",
+        report.generation,
+        report.start_row,
+        report.start_row + report.rows,
+        ps.len()
+    );
+    for (p, bytes) in ps.iter().zip(&report.segment_bytes) {
+        println!("  {} segment: {}", p.label(), human_bytes(*bytes));
+    }
+    Ok(())
+}
+
 fn score_select(cli: &Cli) -> Result<()> {
     let mut pipe = Pipeline::new(cli.config.clone())?;
     let p = Precision::new(cli.config.bits, cli.config.scheme)?;
     let (ds, _) = pipe.build_datastore(p)?;
-    // one streamed datastore pass scores all benchmarks (--multi-scan)
-    let all_scores = pipe.influence_scores_all(&ds)?;
+    // the run may have live (ingested) generations beyond the base build:
+    // score whatever is actually there, composition included
+    let live = pipe.open_live(p)?;
+    let (all_scores, samples) = if live.generation() > 0 {
+        println!(
+            "live datastore: generation {} ({} rows, {} of them ingested)",
+            live.generation(),
+            live.n_rows(),
+            live.n_rows() - ds.n_samples()
+        );
+        let samples = pipe.samples_with_extensions(&live)?;
+        (pipe.influence_scores_all_live(&live)?, samples)
+    } else {
+        // one streamed datastore pass scores all benchmarks (--multi-scan)
+        (pipe.influence_scores_all(&ds)?, pipe.corpus.samples.clone())
+    };
     for bench in Benchmark::ALL {
         let scores = &all_scores[bench.name()];
         let sel = select_top_frac(scores, cli.config.select_frac);
-        let dist = SourceDistribution::of(&pipe.corpus.samples, &sel);
+        let dist = SourceDistribution::of(&samples, &sel);
         println!("{bench}: top {} — {}", sel.len(), dist.render());
         let top = &sel[..sel.len().min(3)];
         for &i in top {
-            let s = &pipe.corpus.samples[i];
+            let s = &samples[i];
             println!("    [{:>7.4}] {} → {}", scores[i], s.prompt, s.answer);
         }
     }

@@ -18,5 +18,5 @@ pub mod runner;
 pub mod stage;
 
 pub use report::Report;
-pub use runner::{Method, MethodResult, Pipeline};
+pub use runner::{IngestReport, Method, MethodResult, Pipeline};
 pub use stage::{PipelineStageRunner, Stage, StageCost};

@@ -4,20 +4,23 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::baselines;
 use crate::config::Config;
 use crate::corpus::{generate_corpus, Tokenizer, World};
 use crate::data::Dataset;
-use crate::datastore::{Datastore, MultiWriter};
+use crate::datastore::{
+    default_store_path, repair_run_dir, segment_store_path, Datastore, LiveStore, Manifest,
+    MultiWriter, SegmentWriter,
+};
 use crate::eval::benchmarks::{validation_samples, Benchmark};
 use crate::eval::harness::{evaluate, BenchScores};
 use crate::grads::{
     extract_train_features, extract_train_features_stream, extract_val_features, FeatureMatrix,
     Projector,
 };
-use crate::influence::{score_datastore_tasks, ScoreOpts};
+use crate::influence::{score_datastore_tasks, score_live_tasks, ScoreOpts};
 use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
 use crate::pipeline::stage::{PipelineStageRunner, Stage};
 use crate::quant::weights::quantize_weights;
@@ -26,7 +29,7 @@ use crate::runtime::{ModelInfo, Runtime};
 use crate::select::{select_top_frac, SourceDistribution};
 use crate::train::{Schedule, Trainer};
 use crate::util::Rng;
-use crate::info;
+use crate::{info, warn_};
 
 /// A data-selection method from the paper's tables.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -46,6 +49,44 @@ impl Method {
             Method::Qless(p) => format!("QLESS {}", p.label()),
         }
     }
+}
+
+/// Buffer contiguous feature-row chunks into `window_floats`-float
+/// windows, handing each **full** window to `append` (the caller flushes
+/// the final partial window after its stream ends). The single windowing
+/// loop shared by the streaming build and the ingest paths, so their
+/// peak-memory behavior cannot diverge.
+fn fill_windows(
+    window: &mut Vec<f32>,
+    window_floats: usize,
+    mut rows: &[f32],
+    mut append: impl FnMut(&[f32]) -> Result<()>,
+) -> Result<()> {
+    while !rows.is_empty() {
+        let room = window_floats - window.len();
+        let take = room.min(rows.len());
+        window.extend_from_slice(&rows[..take]);
+        rows = &rows[take..];
+        if window.len() == window_floats {
+            append(window)?;
+            window.clear();
+        }
+    }
+    Ok(())
+}
+
+/// Everything one `qless ingest` run appended (see
+/// [`Pipeline::ingest_datastores`]).
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// The generation the ingest published.
+    pub generation: u64,
+    /// Global row index of the first appended row.
+    pub start_row: usize,
+    /// Rows appended.
+    pub rows: usize,
+    /// Per-precision segment file sizes, in request order.
+    pub segment_bytes: Vec<u64>,
 }
 
 /// Everything a method run produces (one row of Table 1).
@@ -353,6 +394,11 @@ impl Pipeline {
     pub fn build_datastores(&mut self, precisions: &[Precision]) -> Result<Vec<(Datastore, u64)>> {
         let (n, k) = (self.corpus.len(), self.info.proj_dim);
         let c = self.cfg.warmup_epochs;
+        // a crashed ingest (or a manifest left by a different corpus) must
+        // never be silently served: roll torn tails back, and clear a
+        // manifest whose geometry no longer matches this run before the
+        // per-file reuse checks below
+        self.reconcile_manifest(precisions, n, k, c)?;
         let mut out: Vec<Option<(Datastore, u64)>> = Vec::new();
         out.resize_with(precisions.len(), || None);
         let mut missing: Vec<(usize, Precision, PathBuf)> = Vec::new();
@@ -416,18 +462,7 @@ impl Pipeline {
                     &proj,
                     self.cfg.workers,
                     |_start, rows| {
-                        let mut rest = rows;
-                        while !rest.is_empty() {
-                            let room = window_rows * k - window.len();
-                            let take = room.min(rest.len());
-                            window.extend_from_slice(&rest[..take]);
-                            rest = &rest[take..];
-                            if window.len() == window_rows * k {
-                                mw.append_rows(&window)?;
-                                window.clear();
-                            }
-                        }
-                        Ok(())
+                        fill_windows(&mut window, window_rows * k, rows, |w| mw.append_rows(w))
                     },
                 )?;
                 if !window.is_empty() {
@@ -453,6 +488,235 @@ impl Pipeline {
             }
         }
         Ok(out.into_iter().map(|o| o.expect("every requested precision resolved")).collect())
+    }
+
+    /// Reconcile the run directory's generation manifest with this run's
+    /// geometry before reusing or rebuilding datastores: repair any
+    /// crash-torn ingest tail ([`repair_run_dir`]) and, when the manifest
+    /// describes a different world (corpus size, projection dim or
+    /// checkpoint count), delete its segments and the manifest itself so
+    /// the per-file geometry checks rebuild from scratch.
+    fn reconcile_manifest(
+        &self,
+        precisions: &[Precision],
+        n: usize,
+        k: usize,
+        c: usize,
+    ) -> Result<()> {
+        let run_dir = self.run_dir();
+        let Some(m) = repair_run_dir(&run_dir, precisions)? else {
+            return Ok(());
+        };
+        if m.base_rows == n as u64 && m.k == k as u64 && m.n_checkpoints == c as u32 {
+            return Ok(());
+        }
+        info!("stale manifest in {run_dir:?} (different geometry) — clearing segments");
+        for &p in precisions {
+            let base = default_store_path(&run_dir, p);
+            for seg in &m.segments {
+                let _ = std::fs::remove_file(segment_store_path(&base, seg.generation));
+            }
+        }
+        std::fs::remove_file(Manifest::path_in(&run_dir)).ok();
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // stage 3b: incremental ingest (live datastore growth)
+    // ------------------------------------------------------------------
+
+    /// Open this run's **live** datastore at one precision (base file +
+    /// every ingested segment) for scoring and serving.
+    pub fn open_live(&self, precision: Precision) -> Result<LiveStore> {
+        LiveStore::open(&default_store_path(&self.run_dir(), precision))
+    }
+
+    /// Append `n_new` fresh corpus rows to this run's existing datastores
+    /// at **all** requested precisions in ONE extraction pass — the
+    /// incremental counterpart of [`Pipeline::build_datastores`]
+    /// (`qless ingest --ingest-rows N`).
+    ///
+    /// Dataflow mirrors the streaming build: a deterministic corpus
+    /// extension for the next generation ([`crate::corpus::extend_corpus`])
+    /// is generated and encoded — **only** the new samples; the stored
+    /// corpus is never copied or re-extracted — gradient rows stream out
+    /// of [`extract_train_features_stream`] through the bounded window
+    /// into a [`SegmentWriter`], which quantizes each window at every
+    /// precision, writes self-contained segment files next to the bases,
+    /// and publishes them with a generation bump. No pre-existing byte is
+    /// touched; a crash at any point leaves the previous generation
+    /// intact ([`repair_run_dir`] runs first to clear any earlier crash's
+    /// leftovers). Ingesting a precision *subset* of the run is refused —
+    /// the manifest covers every precision in the directory. A running
+    /// `qless serve` session over the same run directory picks the new
+    /// generation up on its next batch, without restart.
+    pub fn ingest_datastores(
+        &mut self,
+        precisions: &[Precision],
+        n_new: usize,
+    ) -> Result<IngestReport> {
+        anyhow::ensure!(n_new > 0, "ingest needs at least one new row (--ingest-rows N)");
+        let (k, c) = (self.info.proj_dim, self.cfg.warmup_epochs);
+        let run_dir = self.run_dir();
+        repair_run_dir(&run_dir, precisions)?;
+        for &p in precisions {
+            let path = default_store_path(&run_dir, p);
+            let ds = Datastore::open(&path).with_context(|| {
+                format!(
+                    "ingest needs an existing {} datastore in {run_dir:?} \
+                     (run `qless extract` first)",
+                    p.label()
+                )
+            })?;
+            anyhow::ensure!(
+                ds.matches_geometry(p, self.corpus.len(), k, c),
+                "cached {} datastore does not match this run's geometry \
+                 ({} rows × k={k} × {c} checkpoints) — rebuild before ingesting",
+                p.label(),
+                self.corpus.len()
+            );
+        }
+        let set = self.warmup()?;
+        let mut sw = SegmentWriter::create(&run_dir, precisions, n_new, self.cfg.build_workers)?;
+        // the segment inherits the BASE stores' η; the warmup checkpoints
+        // driving extraction must be the ones that built those stores
+        for (ci, ckpt) in set.checkpoints.iter().enumerate() {
+            anyhow::ensure!(
+                sw.etas()[ci].to_bits() == ckpt.eta.to_bits(),
+                "warmup checkpoint {ci} (η={}) does not match the base datastores (η={}) — \
+                 the run_dir's warmup cache and stores are out of sync; rebuild",
+                ckpt.eta,
+                sw.etas()[ci]
+            );
+        }
+        let generation = sw.generation();
+        let start_row = sw.start_row();
+        info!(
+            "ingest: generation {generation}, {n_new} rows at {start_row}.. across {} precision(s)",
+            precisions.len()
+        );
+        // only the NEW samples are encoded and extracted — the stored
+        // corpus is never copied or re-extracted; global row ids come
+        // from `start_row` (sample ids) and segment-local row order
+        let ext = crate::corpus::extend_corpus(
+            n_new,
+            self.cfg.seed,
+            generation,
+            start_row,
+            &self.tok,
+            self.info.seq,
+        );
+        let ext_ds = Dataset::encode(ext, &self.tok, self.info.seq);
+        let proj = self.projector();
+        let base_q = quantize_weights(&set.base, self.cfg.model_bits);
+        let budget = (self.cfg.build_mem_budget_mb as u64) << 20;
+        let window_rows =
+            MultiWriter::window_rows_for_budget(k, precisions, budget).min(n_new.max(1));
+        let t0 = std::time::Instant::now();
+        let mut window: Vec<f32> = Vec::with_capacity(window_rows * k);
+        for (ci, ckpt) in set.checkpoints.iter().enumerate() {
+            info!("ingest @ checkpoint {ci}");
+            sw.begin_checkpoint()?;
+            window.clear();
+            extract_train_features_stream(
+                &self.rt,
+                &self.info,
+                &base_q,
+                ckpt,
+                &ext_ds,
+                &proj,
+                self.cfg.workers,
+                |_start, rows| {
+                    fill_windows(&mut window, window_rows * k, rows, |w| sw.append_rows(w))
+                },
+            )?;
+            if !window.is_empty() {
+                sw.append_rows(&window)?;
+                window.clear();
+            }
+            sw.end_checkpoint()?;
+        }
+        let (seg, _, sizes) = sw.finalize()?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.stages.record(Stage::Ingest, secs);
+        self.stages.add_units(Stage::Ingest, n_new as u64);
+        info!(
+            "ingest done in {secs:.1}s: generation {} covers rows {}..{}",
+            seg.generation,
+            seg.start_row,
+            seg.start_row + seg.rows
+        );
+        Ok(IngestReport {
+            generation: seg.generation,
+            start_row,
+            rows: n_new,
+            segment_bytes: sizes,
+        })
+    }
+
+    /// The live corpus' sample metadata: the base corpus plus every
+    /// ingested generation's extension samples, regenerated
+    /// deterministically from the live store's member map — so selection
+    /// composition (Fig. 5) works over ingested rows without persisting
+    /// any extra corpus file.
+    pub fn samples_with_extensions(
+        &self,
+        live: &LiveStore,
+    ) -> Result<Vec<crate::corpus::Sample>> {
+        anyhow::ensure!(
+            live.members()[0].ds.n_samples() == self.corpus.len(),
+            "live store base ({} rows) does not match this run's corpus ({} rows)",
+            live.members()[0].ds.n_samples(),
+            self.corpus.len()
+        );
+        let mut all = self.corpus.samples.clone();
+        for m in live.members().iter().skip(1) {
+            all.extend(crate::corpus::extend_corpus(
+                m.ds.n_samples(),
+                self.cfg.seed,
+                m.generation,
+                m.start_row,
+                &self.tok,
+                self.info.seq,
+            ));
+        }
+        Ok(all)
+    }
+
+    /// Influence scores of every **live** row for every benchmark — the
+    /// live-store counterpart of [`Pipeline::influence_scores_all`]: all
+    /// benchmarks' validation tasks ride ONE streamed pass over base +
+    /// segments ([`score_live_tasks`]). Native kernels only; with
+    /// `cfg.xla_score` set the scan falls back to native with a warning.
+    pub fn influence_scores_all_live(
+        &mut self,
+        live: &LiveStore,
+    ) -> Result<BTreeMap<&'static str, Vec<f32>>> {
+        if self.cfg.xla_score {
+            warn_!("XLA scoring is not plumbed through live stores; using native kernels");
+        }
+        let mut vals: Vec<Vec<FeatureMatrix>> = Vec::new();
+        for bench in Benchmark::ALL {
+            vals.push(self.val_features(bench)?);
+        }
+        let refs: Vec<&[FeatureMatrix]> = vals.iter().map(|v| v.as_slice()).collect();
+        let opts = ScoreOpts { use_xla: false, ..self.score_opts() };
+        let t0 = std::time::Instant::now();
+        let (per_task, stats) = score_live_tasks(live, &refs, opts)?;
+        self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
+        self.stages.add_units(Stage::Score, stats.shards_read as u64);
+        info!(
+            "live multi-query scan: {} benchmarks × {} rows (generation {}) in {} shard reads",
+            stats.tasks,
+            live.n_rows(),
+            live.generation(),
+            stats.shards_read
+        );
+        let mut out = BTreeMap::new();
+        for (bench, scores) in Benchmark::ALL.iter().zip(per_task) {
+            out.insert(bench.name(), scores);
+        }
+        Ok(out)
     }
 
     // ------------------------------------------------------------------

@@ -23,6 +23,10 @@ pub enum Stage {
     /// requested precisions in one fused pass (io units = peak builder
     /// bytes).
     BuildDatastore,
+    /// Incremental ingest: extract → quantize → append new corpus rows as
+    /// one segment per precision + a generation bump (io units = rows
+    /// appended).
+    Ingest,
     /// Streamed influence scan (Eq. 7) over datastore shards.
     Score,
     /// Top-p% selection.
@@ -34,12 +38,13 @@ pub enum Stage {
 }
 
 impl Stage {
-    pub const ALL: [Stage; 9] = [
+    pub const ALL: [Stage; 10] = [
         Stage::Pretrain,
         Stage::Warmup,
         Stage::ExtractTrain,
         Stage::ExtractVal,
         Stage::BuildDatastore,
+        Stage::Ingest,
         Stage::Score,
         Stage::Select,
         Stage::Finetune,
@@ -53,6 +58,7 @@ impl Stage {
             Stage::ExtractTrain => "extract-train",
             Stage::ExtractVal => "extract-val",
             Stage::BuildDatastore => "build-datastore",
+            Stage::Ingest => "ingest",
             Stage::Score => "score",
             Stage::Select => "select",
             Stage::Finetune => "finetune",

@@ -6,4 +6,4 @@ pub mod distribution;
 pub mod topk;
 
 pub use distribution::SourceDistribution;
-pub use topk::{select_top_frac, top_k_indices, top_k_scored};
+pub use topk::{select_top_frac, top_k_indices, top_k_scored, top_k_scored_since};

@@ -49,6 +49,26 @@ pub fn top_k_scored(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
     top_k_indices(scores, k).into_iter().map(|i| (i, scores[i])).collect()
 }
 
+/// [`top_k_scored`] restricted to sample indices `>= first_row` — the
+/// incremental-selection shape: after an ingest, "the best k rows newer
+/// than generation G" is a top-k over the tail that begins at G's first
+/// newer row (the serving layer resolves `since_gen` to `first_row`
+/// through its generation→row map). Tie-breaking stays by ascending
+/// global index; `first_row` past the end yields an empty selection.
+///
+/// ```
+/// use qless::select::top_k_scored_since;
+///
+/// let scores = [0.9, 0.1, 0.5, 0.8];
+/// assert_eq!(top_k_scored_since(&scores, 2, 2), vec![(3, 0.8), (2, 0.5)]);
+/// assert_eq!(top_k_scored_since(&scores, 2, 0), vec![(0, 0.9), (3, 0.8)]);
+/// assert!(top_k_scored_since(&scores, 2, 4).is_empty());
+/// ```
+pub fn top_k_scored_since(scores: &[f32], k: usize, first_row: usize) -> Vec<(usize, f32)> {
+    let first = first_row.min(scores.len());
+    top_k_scored(&scores[first..], k).into_iter().map(|(i, s)| (i + first, s)).collect()
+}
+
 /// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%),
 /// flooring at one sample for any non-empty input (`frac = 0.0` still
 /// selects the single best sample). Panics on `frac` outside `[0, 1]`.
@@ -81,6 +101,18 @@ mod tests {
         assert_eq!(top_k_scored(&s, 3), vec![(1, 0.9), (2, 0.9), (0, 0.3)]);
         assert_eq!(top_k_scored(&s, 99).len(), 4);
         assert!(top_k_scored(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn since_restricts_to_the_tail() {
+        let s = [0.9f32, 0.1, 0.5, 0.8, 0.5];
+        assert_eq!(top_k_scored_since(&s, 10, 0), top_k_scored(&s, 10));
+        assert_eq!(top_k_scored_since(&s, 2, 3), vec![(3, 0.8), (4, 0.5)]);
+        // ties in the tail still break by ascending global index
+        assert_eq!(top_k_scored_since(&s, 2, 2), vec![(3, 0.8), (2, 0.5)]);
+        assert!(top_k_scored_since(&s, 3, 5).is_empty());
+        assert!(top_k_scored_since(&s, 3, 99).is_empty(), "past the end clamps");
+        assert!(top_k_scored_since(&[], 3, 0).is_empty());
     }
 
     #[test]

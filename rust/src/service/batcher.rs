@@ -30,6 +30,22 @@ use super::session::{Answer, ScoreQuery, ServiceStats, Session};
 /// rider of a failed batch).
 pub type BatchResult = std::result::Result<Answer, String>;
 
+/// Point-in-time view of the scoring worker's session, published after
+/// every batch: cumulative stats plus the live store's identity. The
+/// worker owns the session, so readers (the `stats` wire op, the server's
+/// accessors) see a lock-free-on-the-hot-path snapshot that is exact as
+/// of the most recently scored batch — including any generation the
+/// worker picked up from an ingest.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionView {
+    /// Cumulative service accounting.
+    pub stats: ServiceStats,
+    /// Manifest generation the session served its last batch against.
+    pub generation: u64,
+    /// Total rows served at that generation (base + ingested segments).
+    pub rows: u64,
+}
+
 /// Tuning of the admission queue.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherOpts {
@@ -69,9 +85,18 @@ struct Shared {
 /// queries, and joins the worker.
 pub struct Batcher {
     shared: Arc<Shared>,
-    snapshot: Arc<Mutex<ServiceStats>>,
+    snapshot: Arc<Mutex<SessionView>>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     queue_cap: usize,
+}
+
+/// The view the worker publishes for `session` in its current state.
+fn view_of(session: &Session) -> SessionView {
+    SessionView {
+        stats: session.stats(),
+        generation: session.generation(),
+        rows: session.n_rows() as u64,
+    }
 }
 
 impl Batcher {
@@ -81,7 +106,7 @@ impl Batcher {
             state: Mutex::new(QState { queue: VecDeque::new(), open: true }),
             arrived: Condvar::new(),
         });
-        let snapshot = Arc::new(Mutex::new(session.stats()));
+        let snapshot = Arc::new(Mutex::new(view_of(&session)));
         let queue_cap = opts.queue_cap.max(1);
         let worker = std::thread::Builder::new()
             .name("qless-batcher".into())
@@ -117,6 +142,12 @@ impl Batcher {
     /// most recently scored batch (the worker owns the live session, so
     /// this is a snapshot, not a lock on the hot path).
     pub fn stats(&self) -> ServiceStats {
+        self.view().stats
+    }
+
+    /// The full [`SessionView`] snapshot — stats plus the generation and
+    /// live row total the worker last served.
+    pub fn view(&self) -> SessionView {
         *self.snapshot.lock().unwrap_or_else(|e| e.into_inner())
     }
 
@@ -144,7 +175,7 @@ fn worker_loop(
     shared: Arc<Shared>,
     mut session: Session,
     opts: BatcherOpts,
-    snapshot: Arc<Mutex<ServiceStats>>,
+    snapshot: Arc<Mutex<SessionView>>,
 ) {
     let max_batch = opts.max_batch.max(1);
     loop {
@@ -185,8 +216,9 @@ fn worker_loop(
         let result =
             catch_unwind(AssertUnwindSafe(|| session.answer_batch(&queries)));
         // publish stats before replying, so a client that just got its
-        // answer reads a snapshot that already includes its batch
-        *snapshot.lock().unwrap_or_else(|e| e.into_inner()) = session.stats();
+        // answer reads a snapshot that already includes its batch (and
+        // any generation reload the batch picked up)
+        *snapshot.lock().unwrap_or_else(|e| e.into_inner()) = view_of(&session);
         match result {
             Ok(Ok(answers)) => {
                 for (tx, ans) in repliers.iter().zip(answers) {

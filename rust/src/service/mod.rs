@@ -9,17 +9,22 @@
 //! compute-constrained selection, arXiv:2410.16208). This subsystem keeps
 //! everything warm and amortizes everything shareable:
 //!
-//! * [`session`] — the datastore opened **once**; recently-scanned shards
-//!   pinned in a byte-budgeted LRU (`--mem-budget-mb`) so repeat scans hit
-//!   RAM; a score cache keyed by (task digest, datastore generation) so
-//!   identical queries never rescan at all.
+//! * [`session`] — the **live** datastore opened once (base + ingested
+//!   segments via the generation manifest); recently-scanned shards
+//!   pinned in a byte-budgeted LRU (`--mem-budget-mb`) so repeat scans
+//!   hit RAM; a score cache keyed by task digest so identical queries
+//!   never rescan at all. An ingest mid-serve is picked up **without
+//!   restart**: new segment members attach in place, warm shards below
+//!   the old row count stay pinned, and cached answers are *extended* by
+//!   a tail scan over only the new rows.
 //! * [`batcher`] — concurrent queries admitted to a bounded queue and
 //!   coalesced within `--batch-window-ms` (cap `--max-batch-tasks`) into
 //!   **one** fused multi-task pass — the PR-2 `score_datastore_tasks`
 //!   compute primitive, reached through the re-entrant
 //!   [`crate::influence::MultiScan`] so cached shards can feed it.
 //! * [`cache`] — the LRU + task-digest machinery both caches share.
-//! * [`proto`] — the JSON-lines wire format (spec in its rustdoc).
+//! * [`proto`] — the JSON-lines wire format (normative spec:
+//!   `rust/PROTOCOL.md`, included as its rustdoc).
 //! * [`server`] — the std-only TCP front end (blocking accept loop +
 //!   `util::pool::TaskPool` handlers) and the [`Client`] the tests and the
 //!   load bench drive.
@@ -35,7 +40,7 @@ pub mod proto;
 pub mod server;
 pub mod session;
 
-pub use batcher::{Batcher, BatcherOpts};
+pub use batcher::{Batcher, BatcherOpts, SessionView};
 pub use cache::{task_digest, LruCache};
 pub use proto::{Request, Response, ScoreReply, ScoreRequest, StatsReply};
 pub use server::{Client, ServeOpts, Server};

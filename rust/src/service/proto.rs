@@ -1,71 +1,10 @@
 //! Wire format of the influence query service: **JSON-lines over TCP**.
 //!
-//! Every request and every response is one JSON object on one
-//! `\n`-terminated line (no length prefixes, no binary framing, no
-//! dependencies beyond `std` + the crate's own `util::json`). A connection
-//! is a long-lived bidirectional stream: requests are answered in arrival
-//! order, so clients may pipeline.
-//!
-//! # Requests
-//!
-//! The `op` field selects the operation; `id` is an opaque client token
-//! echoed in the response (default 0; keep it `< 2^53` — it travels as a
-//! JSON number).
-//!
-//! ```text
-//! {"op":"score","id":1,"top_k":5,"scores":false,
-//!  "val":[{"n":2,"k":512,"data":[0.12,-0.7,...]},   ← checkpoint 0
-//!         {"n":2,"k":512,"data":[...]}]}            ← checkpoint 1
-//! {"op":"stats","id":2}
-//! {"op":"ping","id":3}
-//! {"op":"shutdown","id":4}
-//! ```
-//!
-//! A `score` request carries one feature matrix per warmup checkpoint of
-//! the served datastore (`val[ci]` is row-major `n × k` raw validation
-//! gradient features — the same per-task shape
-//! [`crate::influence::score_datastore_tasks`] takes; quantization to the
-//! store's precision happens server-side, mirroring QLESS §3.2). `top_k`
-//! asks for the k highest-scoring sample indices (per-request k, 0 = none);
-//! `"scores":true` additionally returns the full per-sample score vector.
-//! All feature values must be finite — JSON has no NaN/Inf, and the server
-//! re-validates on admission.
-//!
-//! # Responses
-//!
-//! Success responses carry `"ok":true` and echo the request kind in `re`;
-//! failures carry `"ok":false` and a human-readable `error` (with the
-//! request's `id` when it could be parsed, else 0):
-//!
-//! ```text
-//! {"id":1,"ok":true,"re":"score","generation":"0x9f3a...","cached":false,
-//!  "batched":3,
-//!  "pass":{"checkpoints":2,"tasks":3,"shards_read":14,"rows_read":96,"bytes_read":12480},
-//!  "top":[{"index":17,"score":0.4182},...],
-//!  "scores":[...]}                                  ← only when requested
-//! {"id":2,"ok":true,"re":"stats","generation":"0x9f3a...",
-//!  "n_samples":48,"k":512,"checkpoints":2,"bits":4,
-//!  "stats":{"queries":9,"batches":4,"fused_passes":2,"score_cache_hits":3,
-//!           "shard_cache_hits":14,"disk_shard_reads":14,
-//!           "shard_cache_bytes":16640,"rows_scored":192}}
-//! {"id":3,"ok":true,"re":"ping"}
-//! {"id":4,"ok":true,"re":"shutdown"}
-//! {"id":1,"ok":false,"error":"checkpoint 0: feature dim 64 != datastore k 512"}
-//! ```
-//!
-//! `generation` identifies the datastore build the session is pinned to
-//! (hex string — it is a full 64-bit digest, which a JSON number could not
-//! carry exactly); `cached` marks a score-cache hit; `batched` is the
-//! number of distinct tasks fused into the pass that produced the answer
-//! (0 on a cache hit); `pass` is that pass's
-//! [`ScanStats`] — every response of one
-//! micro-batch reports the *same* pass, which is how a client (or the e2e
-//! test) observes that a burst of Q queries cost one datastore traversal.
-//!
-//! Scores are f32 on the server; they travel as JSON numbers via f64,
-//! which is exact (every f32 is exactly representable as f64, and the
-//! encoder emits shortest-roundtrip decimal), so served scores compare
-//! bit-for-bit against an in-process scan.
+//! The normative request/response grammar is `rust/PROTOCOL.md` —
+//! included verbatim below, so its example exchange runs as a doctest
+//! against this parser and the spec can never drift from the code. Edit
+//! the markdown file, not this header.
+#![doc = include_str!("../../PROTOCOL.md")]
 
 use anyhow::{bail, Result};
 
@@ -117,6 +56,9 @@ pub struct ScoreRequest {
     pub top_k: usize,
     /// Return the full per-sample score vector too.
     pub want_scores: bool,
+    /// Restrict the top list to rows **newer than this generation**
+    /// (incremental selection after an ingest); `None` ranks every row.
+    pub since_gen: Option<u64>,
     /// One raw `n × k` feature matrix per warmup checkpoint, in order.
     pub val: Vec<FeatureMatrix>,
 }
@@ -236,10 +178,12 @@ fn service_stats_json(s: &ServiceStats) -> Json {
         .set("batches", s.batches as f64)
         .set("fused_passes", s.fused_passes as f64)
         .set("score_cache_hits", s.score_cache_hits as f64)
+        .set("score_cache_extends", s.score_cache_extends as f64)
         .set("shard_cache_hits", s.shard_cache_hits as f64)
         .set("disk_shard_reads", s.disk_shard_reads as f64)
         .set("shard_cache_bytes", s.shard_cache_bytes as f64)
-        .set("rows_scored", s.rows_scored as f64);
+        .set("rows_scored", s.rows_scored as f64)
+        .set("reloads", s.reloads as f64);
     o
 }
 
@@ -251,6 +195,9 @@ pub fn encode_request(req: &Request) -> String {
             o.set("op", "score").set("id", id_json(r.id)).set("top_k", r.top_k);
             if r.want_scores {
                 o.set("scores", true);
+            }
+            if let Some(g) = r.since_gen {
+                o.set("since_gen", g as f64);
             }
             o.set("val", Json::Arr(r.val.iter().map(matrix_json).collect()));
         }
@@ -359,10 +306,12 @@ fn parse_service_stats(j: &Json) -> Result<ServiceStats> {
         batches: u("batches")?,
         fused_passes: u("fused_passes")?,
         score_cache_hits: u("score_cache_hits")?,
+        score_cache_extends: u("score_cache_extends")?,
         shard_cache_hits: u("shard_cache_hits")?,
         disk_shard_reads: u("disk_shard_reads")?,
         shard_cache_bytes: u("shard_cache_bytes")?,
         rows_scored: u("rows_scored")?,
+        reloads: u("reloads")?,
     })
 }
 
@@ -388,13 +337,17 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 None => false,
                 Some(other) => bail!("'scores' must be a bool, got {other:?}"),
             };
+            let since_gen = match j.get("since_gen") {
+                Some(v) => Some(v.as_usize()? as u64),
+                None => None,
+            };
             let val = j
                 .req("val")?
                 .as_arr()?
                 .iter()
                 .map(parse_matrix)
                 .collect::<Result<Vec<_>>>()?;
-            Ok(Request::Score(ScoreRequest { id, top_k, want_scores, val }))
+            Ok(Request::Score(ScoreRequest { id, top_k, want_scores, since_gen, val }))
         }
         "stats" => Ok(Request::Stats { id }),
         "ping" => Ok(Request::Ping { id }),
@@ -475,6 +428,7 @@ mod tests {
             id: 42,
             top_k: 7,
             want_scores: true,
+            since_gen: Some(3),
             val: vec![mat(2, 8, 1), mat(3, 8, 2)],
         });
         let line = encode_request(&req);
@@ -485,6 +439,7 @@ mod tests {
                 assert_eq!(r.id, 42);
                 assert_eq!(r.top_k, 7);
                 assert!(r.want_scores);
+                assert_eq!(r.since_gen, Some(3));
                 assert_eq!(r.val.len(), 2);
                 match &req {
                     Request::Score(orig) => {
@@ -562,10 +517,12 @@ mod tests {
             batches: 4,
             fused_passes: 2,
             score_cache_hits: 3,
+            score_cache_extends: 1,
             shard_cache_hits: 14,
             disk_shard_reads: 14,
             shard_cache_bytes: 16_640,
             rows_scored: 192,
+            reloads: 1,
         };
         let resp = Response::Stats(StatsReply {
             id: 2,
@@ -616,6 +573,7 @@ mod tests {
                 assert_eq!(r.id, 0);
                 assert_eq!(r.top_k, 0);
                 assert!(!r.want_scores);
+                assert_eq!(r.since_gen, None, "no filter by default");
                 assert_eq!(r.val[0].data, vec![0.5, 1.0]);
             }
             other => panic!("wrong variant {other:?}"),

@@ -27,7 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::datastore::Header;
 use crate::grads::FeatureMatrix;
-use crate::select::top_k_scored;
+use crate::select::top_k_scored_since;
 use crate::util::pool::TaskPool;
 use crate::{info, warn_};
 
@@ -89,11 +89,13 @@ impl ServeOpts {
     }
 }
 
-/// Everything a connection handler needs, shared behind one `Arc`.
+/// Everything a connection handler needs, shared behind one `Arc`. The
+/// header's geometry fields (`k`, `n_checkpoints`, precision) are
+/// ingest-invariant, so admission validation needs no lock; generation
+/// and live row count come from the batcher's published view.
 struct Ctx {
     batcher: Batcher,
     header: Header,
-    generation: u64,
     shutdown: AtomicBool,
     addr: SocketAddr,
 }
@@ -138,7 +140,6 @@ impl Server {
             },
         )?;
         let header = *session.header();
-        let generation = session.generation();
         let listener = TcpListener::bind(opts.addr.as_str())
             .with_context(|| format!("binding {}", opts.addr))?;
         let addr = listener.local_addr()?;
@@ -150,13 +151,7 @@ impl Server {
                 queue_cap: opts.queue_cap,
             },
         );
-        let ctx = Arc::new(Ctx {
-            batcher,
-            header,
-            generation,
-            shutdown: AtomicBool::new(false),
-            addr,
-        });
+        let ctx = Arc::new(Ctx { batcher, header, shutdown: AtomicBool::new(false), addr });
         let pool = TaskPool::new("qless-conn", opts.workers, opts.queue_cap);
         info!(
             "serve: listening on {addr} ({} handler threads, window {}ms, max batch {})",
@@ -198,14 +193,23 @@ impl Server {
         self.ctx.addr
     }
 
-    /// The served store's header.
+    /// The served store's header (`n_samples` is the base store's row
+    /// count at open; [`Server::n_rows`] is the live total).
     pub fn header(&self) -> &Header {
         &self.ctx.header
     }
 
-    /// The served store's generation digest.
+    /// The manifest generation currently served, as of the most recently
+    /// scored batch (an ingest is picked up by the scoring worker without
+    /// a restart).
     pub fn generation(&self) -> u64 {
-        self.ctx.generation
+        self.ctx.batcher.view().generation
+    }
+
+    /// Total rows currently served (base + ingested segments), as of the
+    /// most recently scored batch.
+    pub fn n_rows(&self) -> usize {
+        self.ctx.batcher.view().rows as usize
     }
 
     /// Cumulative service statistics (snapshot as of the last batch).
@@ -332,15 +336,18 @@ fn handle_line(line: &str, ctx: &Ctx) -> Response {
     match req {
         Request::Ping { id } => Response::Pong { id },
         Request::Shutdown { id } => Response::ShuttingDown { id },
-        Request::Stats { id } => Response::Stats(StatsReply {
-            id,
-            generation: ctx.generation,
-            n_samples: ctx.header.n_samples as usize,
-            k: ctx.header.k as usize,
-            checkpoints: ctx.header.n_checkpoints as usize,
-            bits: ctx.header.precision.bits,
-            stats: ctx.batcher.stats(),
-        }),
+        Request::Stats { id } => {
+            let view = ctx.batcher.view();
+            Response::Stats(StatsReply {
+                id,
+                generation: view.generation,
+                n_samples: view.rows as usize,
+                k: ctx.header.k as usize,
+                checkpoints: ctx.header.n_checkpoints as usize,
+                bits: ctx.header.precision.bits,
+                stats: view.stats,
+            })
+        }
         Request::Score(r) => handle_score(r, ctx),
     }
 }
@@ -355,15 +362,24 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
         Err(e) => return Response::Error { id: req.id, error: format!("{e:#}") },
     };
     match rx.recv() {
-        Ok(Ok(ans)) => Response::Score(ScoreReply {
-            id: req.id,
-            generation: ctx.generation,
-            cached: ans.cached,
-            batched: ans.batched,
-            pass: ans.pass,
-            top: top_k_scored(&ans.scores, req.top_k),
-            scores: if req.want_scores { Some(ans.scores.as_ref().clone()) } else { None },
-        }),
+        Ok(Ok(ans)) => {
+            // `since_gen` restricts the top list to rows newer than the
+            // named generation (resolved against the answer's own member
+            // map, so it cannot race a concurrent ingest)
+            let first_row = match req.since_gen {
+                None => 0,
+                Some(g) => ans.first_row_after(g),
+            };
+            Response::Score(ScoreReply {
+                id: req.id,
+                generation: ans.generation,
+                cached: ans.cached,
+                batched: ans.batched,
+                pass: ans.pass,
+                top: top_k_scored_since(&ans.scores, req.top_k, first_row),
+                scores: if req.want_scores { Some(ans.scores.as_ref().clone()) } else { None },
+            })
+        }
         Ok(Err(msg)) => Response::Error { id: req.id, error: msg },
         Err(_) => Response::Error { id: req.id, error: "scoring worker unavailable".into() },
     }
@@ -416,9 +432,23 @@ impl Client {
         top_k: usize,
         want_scores: bool,
     ) -> Result<ScoreReply> {
+        self.score_since(val, top_k, want_scores, None)
+    }
+
+    /// [`Client::score`] with an optional generation filter: with
+    /// `since_gen = Some(g)`, the returned top list ranks **only rows
+    /// newer than generation g** (incremental selection after an ingest).
+    /// The full score vector, when requested, is always complete.
+    pub fn score_since(
+        &mut self,
+        val: &[FeatureMatrix],
+        top_k: usize,
+        want_scores: bool,
+        since_gen: Option<u64>,
+    ) -> Result<ScoreReply> {
         let id = self.bump();
         let req =
-            Request::Score(ScoreRequest { id, top_k, want_scores, val: val.to_vec() });
+            Request::Score(ScoreRequest { id, top_k, want_scores, since_gen, val: val.to_vec() });
         match self.roundtrip(&req)? {
             Response::Score(r) => {
                 anyhow::ensure!(r.id == id, "response id {} for request {id}", r.id);

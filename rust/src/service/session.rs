@@ -1,29 +1,41 @@
-//! The resident influence session: one datastore opened (and validated)
-//! once, per-checkpoint η weights read once, recently-scanned shards
-//! pinned in a byte-budgeted LRU cache so repeat scans hit RAM instead of
-//! disk, and a score cache keyed by (task digest, datastore generation) so
-//! identical queries never rescan at all.
+//! The resident influence session: one **live** datastore opened (and
+//! validated) once, per-checkpoint η weights read once, recently-scanned
+//! shards pinned in a byte-budgeted LRU cache so repeat scans hit RAM
+//! instead of disk, and a score cache keyed by task digest so identical
+//! queries never rescan at all.
 //!
-//! [`Session::answer_batch`] is the serving hot path: resolve score-cache
-//! hits, deduplicate identical queries within the batch, then run **one**
-//! fused [`MultiScan`] pass over the store for every distinct uncached
-//! task. Shards come from the cache when pinned and from
-//! `ShardReader::seek_to_row` random-access reads when not; either way the
-//! scoring kernels see the same [`crate::datastore::RowsView`] bytes, so
-//! served scores are bit-identical to the one-shot `--multi-scan` pipeline
-//! (`influence::score_datastore_tasks`), which the e2e suite asserts.
+//! [`Session::answer_batch`] is the serving hot path: poll the generation
+//! manifest (an ingest bumps it — new segment members attach **in
+//! place**), resolve score-cache hits, deduplicate identical queries
+//! within the batch, then run **one** fused [`MultiScan`] pass over the
+//! store for every distinct uncached task. Shards come from the cache
+//! when pinned and from `ShardReader::seek_to_row` random-access reads
+//! when not; either way the scoring kernels see the same
+//! [`crate::datastore::RowsView`] bytes, so served scores are
+//! bit-identical to the one-shot `--multi-scan` pipeline
+//! (`influence::score_datastore_tasks` /
+//! [`crate::influence::score_live_tasks`]), which the e2e suites assert.
+//!
+//! Generations invalidate **only affected ranges**: shard-cache keys
+//! include the member (segment) index, so every shard pinned before an
+//! ingest stays pinned and valid after it; a score-cache entry from
+//! before an ingest is a *prefix* of the new answer, extended by a fused
+//! **tail scan** over just the newly ingested rows rather than
+//! recomputed. The session is owned by one scoring worker
+//! ([`super::batcher`]), so an in-flight batch always finishes against
+//! the generation it started on — reloads happen between batches.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::datastore::{Datastore, Header, OwnedShard};
+use crate::datastore::{Header, LiveStore, OwnedShard};
 use crate::grads::FeatureMatrix;
 use crate::influence::{MultiScan, ScanStats};
-use crate::info;
+use crate::{info, warn_};
 
-use super::cache::{fnv1a, task_digest, LruCache, FNV_OFFSET};
+use super::cache::{task_digest, LruCache};
 
 /// Knobs of a resident session (a subset of `ServeOpts`, usable without
 /// the TCP front end — tests and the in-process path build these directly).
@@ -36,8 +48,8 @@ pub struct SessionOpts {
     /// `--mem-budget-mb`, so peak residency is ≈ 2× this: one streaming
     /// buffer + the pinned cache).
     pub mem_budget_mb: usize,
-    /// Score-cache capacity in entries (each entry is one `n`-float score
-    /// vector); 0 disables score caching.
+    /// Score-cache capacity in entries (each entry is one per-sample
+    /// score vector); 0 disables score caching.
     pub score_cache_entries: usize,
 }
 
@@ -54,25 +66,32 @@ impl Default for SessionOpts {
 /// Cumulative accounting of a session — the payload of the wire `stats`
 /// op. Cache-efficacy counters are the interesting part: a warm repeat
 /// query moves `score_cache_hits` (or `shard_cache_hits`) without moving
-/// `disk_shard_reads`.
+/// `disk_shard_reads`, and after an ingest a repeat query moves
+/// `score_cache_extends` with a pass that only reads the new rows.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     /// Score queries answered (including cache hits).
     pub queries: u64,
     /// `answer_batch` calls (micro-batches admitted).
     pub batches: u64,
-    /// Fused datastore passes executed (≤ batches; 0-miss batches skip it).
+    /// Fused datastore passes executed (0-miss batches skip it; a batch
+    /// mixing cold misses and post-ingest extensions runs two).
     pub fused_passes: u64,
     /// Queries answered from the score cache without any scan.
     pub score_cache_hits: u64,
+    /// Score-cache prefix hits extended by a tail scan over newly
+    /// ingested rows only (never a full rescan).
+    pub score_cache_extends: u64,
     /// Shards served from the RAM cache during scans.
     pub shard_cache_hits: u64,
-    /// Shards read from the datastore file (cold misses).
+    /// Shards read from the datastore files (cold misses).
     pub disk_shard_reads: u64,
     /// Bytes currently pinned by the shard cache.
     pub shard_cache_bytes: u64,
     /// Rows scored across all fused passes.
     pub rows_scored: u64,
+    /// Generation bumps picked up live (ingests served without restart).
+    pub reloads: u64,
 }
 
 /// One influence query: raw (unquantized) validation gradient features per
@@ -95,7 +114,8 @@ impl ScoreQuery {
     /// geometry: checkpoint count, feature dimension, non-empty matrices,
     /// flat-data length, finiteness. Runs before the query is enqueued so
     /// one malformed query gets its own error response instead of failing
-    /// a whole batch.
+    /// a whole batch. Geometry here is ingest-invariant (ingest only adds
+    /// rows), so validation never races a reload.
     pub fn validate(&self, header: &Header) -> Result<()> {
         let c = header.n_checkpoints as usize;
         anyhow::ensure!(
@@ -131,80 +151,122 @@ impl ScoreQuery {
 }
 
 /// One answered query: the full per-sample score vector (shared, so cache
-/// hits are pointer clones) plus provenance — whether it came from the
-/// score cache and, if not, the fused pass that produced it.
+/// hits are pointer clones) plus provenance — the generation it was
+/// computed against, whether it came from the score cache and, if not,
+/// the fused pass that produced it.
 #[derive(Debug, Clone)]
 pub struct Answer {
-    /// Influence score of every training sample, in sample order.
+    /// Influence score of every training sample, in sample order, over
+    /// the full live row space of [`Answer::generation`].
     pub scores: Arc<Vec<f32>>,
+    /// Manifest generation of the store state that produced this answer.
+    pub generation: u64,
+    /// `(generation, first global row)` of every store member at answer
+    /// time — the map a `since_gen` filter resolves rows against.
+    pub gen_rows: Arc<Vec<(u64, usize)>>,
     /// True when served from the score cache without any scan.
     pub cached: bool,
     /// Distinct tasks fused into the producing pass (0 on a cache hit).
     pub batched: usize,
     /// I/O accounting of the producing pass (zeroed on a cache hit). All
-    /// answers of one micro-batch share the same pass, which is how the
-    /// e2e test asserts a burst of Q queries cost one datastore traversal.
+    /// answers of one micro-batch's pass share it, which is how the e2e
+    /// test asserts a burst of Q queries cost one datastore traversal —
+    /// and how a post-ingest extension proves it only read the new rows.
     pub pass: ScanStats,
 }
 
-/// A warm, long-lived handle over one datastore (see the module docs).
+impl Answer {
+    /// First scored row strictly newer than `generation`, resolved
+    /// against the member map of the exact store state that produced this
+    /// answer (race-free across concurrent ingests); `scores.len()` when
+    /// nothing is newer. The wire `since_gen` filter — "rank only rows
+    /// newer than generation G" — is `top_k_scored_since` from here.
+    pub fn first_row_after(&self, generation: u64) -> usize {
+        self.gen_rows
+            .iter()
+            .filter(|(g, _)| *g > generation)
+            .map(|(_, row)| *row)
+            .min()
+            .unwrap_or(self.scores.len())
+    }
+}
+
+/// A warm, long-lived handle over one live datastore (see the module
+/// docs).
 pub struct Session {
-    ds: Datastore,
-    generation: u64,
+    live: LiveStore,
     etas: Vec<f32>,
     rows_per_shard: usize,
-    shard_cache: LruCache<(usize, usize), Arc<OwnedShard>>,
+    /// Pinned shards keyed by (member index, checkpoint, shard index) —
+    /// member-scoped, so an ingest invalidates nothing below the old row
+    /// count.
+    shard_cache: LruCache<(usize, usize, usize), Arc<OwnedShard>>,
+    /// Full score vectors keyed by task digest; an entry's *length* is
+    /// the row count it covers (always a generation boundary).
     score_cache: LruCache<u64, Arc<Vec<f32>>>,
+    gen_rows: Arc<Vec<(u64, usize)>>,
     stats: ServiceStats,
 }
 
 impl Session {
-    /// Open and validate the datastore at `path`, read every checkpoint's
-    /// η once, and size the caches from `opts`. After this, a fully-warm
+    /// Open and validate the datastore at `path` — plus every ingested
+    /// segment its directory's manifest lists — read every checkpoint's η
+    /// once, and size the caches from `opts`. After this, a fully-warm
     /// query touches no file I/O at all.
     pub fn open(path: &Path, opts: SessionOpts) -> Result<Session> {
-        let ds = Datastore::open(path)
+        let live = LiveStore::open(path)
             .with_context(|| format!("opening served datastore {path:?}"))?;
-        let generation = generation_of(path, &ds.header);
-        let mut etas = Vec::with_capacity(ds.n_checkpoints());
-        for ci in 0..ds.n_checkpoints() {
-            etas.push(ds.shard_reader(ci, 1)?.eta());
-        }
-        let rows_per_shard = ds.rows_per_shard(opts.shard_rows, opts.mem_budget_mb.max(1));
+        let etas = live.etas().to_vec();
+        let rows_per_shard = live.rows_per_shard(opts.shard_rows, opts.mem_budget_mb.max(1));
         let cache_budget = opts.mem_budget_mb.max(1) << 20;
+        let gen_rows = Arc::new(member_map(&live));
         info!(
-            "session: {} samples × k={} × {} checkpoints at {} (gen {generation:#x}, \
-             {rows_per_shard} rows/shard, {} MiB shard cache, {} score-cache entries)",
-            ds.n_samples(),
-            ds.header.k,
-            ds.n_checkpoints(),
-            ds.header.precision.label(),
+            "session: {} rows × k={} × {} checkpoints at {} (generation {}, {} member \
+             file(s), {rows_per_shard} rows/shard, {} MiB shard cache, {} score-cache entries)",
+            live.n_rows(),
+            live.header().k,
+            etas.len(),
+            live.header().precision.label(),
+            live.generation(),
+            live.members().len(),
             opts.mem_budget_mb.max(1),
             opts.score_cache_entries,
         );
         Ok(Session {
-            ds,
-            generation,
+            live,
             etas,
             rows_per_shard,
             shard_cache: LruCache::new(cache_budget),
             score_cache: LruCache::new(opts.score_cache_entries),
+            gen_rows,
             stats: ServiceStats::default(),
         })
     }
 
-    /// The served store's header (geometry + precision).
+    /// The served store's header (geometry + precision). `n_samples` is
+    /// the **base** store's row count; [`Session::n_rows`] is the live
+    /// total.
     pub fn header(&self) -> &Header {
-        &self.ds.header
+        self.live.header()
     }
 
-    /// The datastore generation: a digest of the header, file size and
-    /// mtime captured at open. Score-cache entries are implicitly keyed by
-    /// it (the cache lives inside the session, which is pinned to one
-    /// generation), and responses echo it so clients can detect a restart
-    /// over a rebuilt store.
+    /// The manifest generation currently served (0 = frozen base store).
+    /// Bumped in place when [`Session::answer_batch`] detects an ingest;
+    /// responses echo it so clients can track the row space they scored
+    /// against.
     pub fn generation(&self) -> u64 {
-        self.generation
+        self.live.generation()
+    }
+
+    /// Total rows currently served (base + every attached segment).
+    pub fn n_rows(&self) -> usize {
+        self.live.n_rows()
+    }
+
+    /// `(generation, first global row)` per store member, for resolving
+    /// generation filters (shared snapshot; rebuilt on reload).
+    pub fn gen_rows(&self) -> Arc<Vec<(u64, usize)>> {
+        Arc::clone(&self.gen_rows)
     }
 
     /// Rows per streamed/cached shard, resolved from the session's opts.
@@ -219,91 +281,181 @@ impl Session {
         s
     }
 
+    /// Poll the generation manifest and attach any newly ingested
+    /// segments in place. Errors are downgraded to a warning — the
+    /// session keeps serving the generation it has (a torn ingest must
+    /// not take queries down with it).
+    fn poll_generation(&mut self) {
+        match self.live.refresh() {
+            Ok(true) => {
+                self.stats.reloads += 1;
+                self.gen_rows = Arc::new(member_map(&self.live));
+                info!(
+                    "session: picked up generation {} ({} rows, {} members) without restart",
+                    self.live.generation(),
+                    self.live.n_rows(),
+                    self.live.members().len()
+                );
+            }
+            Ok(false) => {}
+            Err(e) => warn_!(
+                "session: manifest refresh failed ({e:#}); still serving generation {}",
+                self.live.generation()
+            ),
+        }
+    }
+
     /// Answer one micro-batch of (already validated) queries: score-cache
     /// hits are answered instantly, identical queries within the batch are
     /// deduplicated, and every remaining distinct task rides **one** fused
-    /// pass over the store. Returns one [`Answer`] per query, in order.
+    /// pass over the store — a full pass for cold tasks, and a tail pass
+    /// over only the newly ingested rows for tasks whose pre-ingest
+    /// answer is still cached. Returns one [`Answer`] per query, in
+    /// order. A bumped generation is picked up here, before the batch
+    /// scans, so in-flight passes always finish against one generation.
     pub fn answer_batch(&mut self, queries: &[ScoreQuery]) -> Result<Vec<Answer>> {
+        self.poll_generation();
         self.stats.batches += 1;
         self.stats.queries += queries.len() as u64;
+        let n = self.live.n_rows();
+        let generation = self.live.generation();
         let digests: Vec<u64> = queries.iter().map(|q| q.digest()).collect();
         let mut answers: Vec<Option<Answer>> = vec![None; queries.len()];
         // distinct uncached digests, in arrival order (batch sizes are
-        // small — max_batch_tasks — so linear dedup beats a map here)
+        // small — max_batch_tasks — so linear dedup beats a map here);
+        // `partials` carries the cached pre-ingest prefix to extend
         let mut misses: Vec<u64> = Vec::new();
+        let mut partials: Vec<(u64, Arc<Vec<f32>>)> = Vec::new();
         for (i, d) in digests.iter().enumerate() {
             if let Some(scores) = self.score_cache.get(d) {
-                self.stats.score_cache_hits += 1;
-                answers[i] = Some(Answer {
-                    scores,
-                    cached: true,
-                    batched: 0,
-                    pass: ScanStats::default(),
-                });
-            } else if !misses.contains(d) {
+                if scores.len() == n {
+                    self.stats.score_cache_hits += 1;
+                    answers[i] = Some(Answer {
+                        scores,
+                        generation,
+                        gen_rows: Arc::clone(&self.gen_rows),
+                        cached: true,
+                        batched: 0,
+                        pass: ScanStats::default(),
+                    });
+                    continue;
+                }
+                // a shorter vector is a pre-ingest prefix: extend it with
+                // a tail scan if it ends exactly at a generation boundary
+                if self.live.is_generation_boundary(scores.len()) {
+                    if !partials.iter().any(|(pd, _)| pd == d) {
+                        partials.push((*d, scores));
+                    }
+                    continue;
+                }
+            }
+            if !misses.contains(d) {
                 misses.push(*d);
             }
         }
+        let rep = |d: &u64| -> usize {
+            digests.iter().position(|x| x == d).expect("digest from this batch")
+        };
         if !misses.is_empty() {
-            let reps: Vec<&ScoreQuery> = misses
-                .iter()
-                .map(|d| {
-                    let i = digests.iter().position(|x| x == d).expect("digest from this batch");
-                    &queries[i]
-                })
-                .collect();
-            let tasks: Vec<&[FeatureMatrix]> = reps.iter().map(|q| q.val.as_slice()).collect();
-            let (totals, pass) = self.scan_fused(&tasks)?;
+            let tasks: Vec<&[FeatureMatrix]> =
+                misses.iter().map(|d| queries[rep(d)].val.as_slice()).collect();
+            let (totals, pass) = self.scan_fused(&tasks, 0)?;
             let shared: Vec<Arc<Vec<f32>>> = totals.into_iter().map(Arc::new).collect();
             for (d, scores) in misses.iter().zip(&shared) {
                 self.score_cache.insert(*d, Arc::clone(scores), 1);
             }
             for (i, d) in digests.iter().enumerate() {
                 if answers[i].is_none() {
-                    let t = misses.iter().position(|x| x == d).expect("miss was collected");
-                    answers[i] = Some(Answer {
-                        scores: Arc::clone(&shared[t]),
-                        cached: false,
-                        batched: misses.len(),
-                        pass,
-                    });
+                    if let Some(t) = misses.iter().position(|x| x == d) {
+                        answers[i] = Some(Answer {
+                            scores: Arc::clone(&shared[t]),
+                            generation,
+                            gen_rows: Arc::clone(&self.gen_rows),
+                            cached: false,
+                            batched: misses.len(),
+                            pass,
+                        });
+                    }
+                }
+            }
+        }
+        if !partials.is_empty() {
+            let tail_start =
+                partials.iter().map(|(_, s)| s.len()).min().expect("partials non-empty");
+            let tasks: Vec<&[FeatureMatrix]> =
+                partials.iter().map(|(d, _)| queries[rep(d)].val.as_slice()).collect();
+            let (tails, pass) = self.scan_fused(&tasks, tail_start)?;
+            let batched = partials.len();
+            for ((d, prefix), tail) in partials.iter().zip(&tails) {
+                let mut full = Vec::with_capacity(n);
+                full.extend_from_slice(prefix);
+                full.extend_from_slice(&tail[prefix.len() - tail_start..]);
+                let shared = Arc::new(full);
+                self.score_cache.insert(*d, Arc::clone(&shared), 1);
+                self.stats.score_cache_extends += 1;
+                for (i, di) in digests.iter().enumerate() {
+                    if answers[i].is_none() && di == d {
+                        answers[i] = Some(Answer {
+                            scores: Arc::clone(&shared),
+                            generation,
+                            gen_rows: Arc::clone(&self.gen_rows),
+                            cached: false,
+                            batched,
+                            pass,
+                        });
+                    }
                 }
             }
         }
         Ok(answers.into_iter().map(|a| a.expect("every query answered")).collect())
     }
 
-    /// One fused multi-task pass over the store, preferring pinned shards:
-    /// cache hits feed the scan straight from RAM; misses are read with a
-    /// seek-based [`crate::datastore::ShardReader`], fed, and pinned for
-    /// the next pass (LRU-evicted under the byte budget).
-    fn scan_fused(&mut self, tasks: &[&[FeatureMatrix]]) -> Result<(Vec<Vec<f32>>, ScanStats)> {
-        let mut scan = MultiScan::try_new(&self.ds.header, tasks)?;
-        let n = self.ds.n_samples();
-        let n_shards = n.div_ceil(self.rows_per_shard).max(1);
-        for ci in 0..self.ds.n_checkpoints() {
+    /// One fused multi-task pass over the live rows `from_row ..
+    /// n_rows()` (`from_row` must be a generation boundary; 0 = the whole
+    /// store), preferring pinned shards: cache hits feed the scan
+    /// straight from RAM; misses are read with a seek-based
+    /// [`crate::datastore::ShardReader`], fed, and pinned for the next
+    /// pass (LRU-evicted under the byte budget). Members entirely below
+    /// `from_row` are skipped — a tail scan never touches pre-ingest
+    /// bytes.
+    fn scan_fused(
+        &mut self,
+        tasks: &[&[FeatureMatrix]],
+        from_row: usize,
+    ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+        debug_assert!(self.live.is_generation_boundary(from_row));
+        let n = self.live.n_rows();
+        let mut scan = MultiScan::try_new_range(self.live.header(), tasks, from_row, n - from_row)?;
+        for ci in 0..self.etas.len() {
             let eta = self.etas[ci];
-            let mut reader = None;
-            for si in 0..n_shards {
-                let key = (ci, si);
-                if let Some(shard) = self.shard_cache.get(&key) {
-                    self.stats.shard_cache_hits += 1;
-                    scan.feed(ci, eta, shard.start, &shard.rows());
+            for (mi, member) in self.live.members().iter().enumerate() {
+                let m_rows = member.ds.n_samples();
+                if member.start_row + m_rows <= from_row {
                     continue;
                 }
-                if reader.is_none() {
-                    reader = Some(self.ds.shard_reader(ci, self.rows_per_shard)?);
+                let n_shards = m_rows.div_ceil(self.rows_per_shard).max(1);
+                let mut reader = None;
+                for si in 0..n_shards {
+                    let key = (mi, ci, si);
+                    if let Some(shard) = self.shard_cache.get(&key) {
+                        self.stats.shard_cache_hits += 1;
+                        scan.feed(ci, eta, member.start_row + shard.start, &shard.rows());
+                        continue;
+                    }
+                    if reader.is_none() {
+                        reader = Some(member.ds.shard_reader(ci, self.rows_per_shard)?);
+                    }
+                    let r = reader.as_mut().expect("reader just opened");
+                    r.seek_to_row(si * self.rows_per_shard);
+                    let shard = r.next_shard()?.with_context(|| {
+                        format!("shard {si} of checkpoint {ci} (member {mi}) out of range")
+                    })?;
+                    let owned = Arc::new(shard.to_owned_shard());
+                    self.stats.disk_shard_reads += 1;
+                    scan.feed(ci, eta, member.start_row + owned.start, &owned.rows());
+                    let weight = owned.byte_weight();
+                    self.shard_cache.insert(key, owned, weight);
                 }
-                let r = reader.as_mut().expect("reader just opened");
-                r.seek_to_row(si * self.rows_per_shard);
-                let shard = r
-                    .next_shard()?
-                    .with_context(|| format!("shard {si} of checkpoint {ci} out of range"))?;
-                let owned = Arc::new(shard.to_owned_shard());
-                self.stats.disk_shard_reads += 1;
-                scan.feed(ci, eta, owned.start, &owned.rows());
-                let weight = owned.byte_weight();
-                self.shard_cache.insert(key, owned, weight);
             }
         }
         self.stats.fused_passes += 1;
@@ -313,24 +465,15 @@ impl Session {
     }
 }
 
-/// Digest identifying one on-disk datastore build: header bytes + file
-/// size + mtime (when available). See [`Session::generation`].
-fn generation_of(path: &Path, header: &Header) -> u64 {
-    let mut h = fnv1a(FNV_OFFSET, &header.encode());
-    if let Ok(meta) = std::fs::metadata(path) {
-        h = fnv1a(h, &meta.len().to_le_bytes());
-        if let Ok(mtime) = meta.modified() {
-            if let Ok(d) = mtime.duration_since(std::time::UNIX_EPOCH) {
-                h = fnv1a(h, &d.as_nanos().to_le_bytes());
-            }
-        }
-    }
-    h
+/// The `(generation, start_row)` member map shared with answers.
+fn member_map(live: &LiveStore) -> Vec<(u64, usize)> {
+    live.members().iter().map(|m| (m.generation, m.start_row)).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::datastore::{default_store_path, SegmentWriter};
     use crate::influence::{score_datastore_tasks, ScoreOpts};
     use crate::quant::{Precision, Scheme};
     use crate::util::prop::{normal_features as feats, seeded_datastore};
@@ -356,7 +499,7 @@ mod tests {
     fn session_scores_match_batch_pipeline_exactly() {
         let (n, k) = (23usize, 64usize);
         let path = build_store(4, n, k, &[0.7, 0.3], "exact");
-        let ds = Datastore::open(&path).unwrap();
+        let ds = crate::datastore::Datastore::open(&path).unwrap();
         let t0 = task(k, 100, 2);
         let t1 = task(k, 200, 2);
         let (want, _) = score_datastore_tasks(
@@ -369,6 +512,8 @@ mod tests {
         let opts = SessionOpts { shard_rows: 5, mem_budget_mb: 4, score_cache_entries: 8 };
         let mut sess = Session::open(&path, opts).unwrap();
         assert_eq!(sess.rows_per_shard(), 5);
+        assert_eq!(sess.generation(), 0, "frozen store serves generation 0");
+        assert_eq!(sess.n_rows(), n);
         let queries = vec![ScoreQuery { val: t0.clone() }, ScoreQuery { val: t1.clone() }];
         for q in &queries {
             q.validate(sess.header()).unwrap();
@@ -379,6 +524,7 @@ mod tests {
             assert!(!a.cached);
             assert_eq!(a.batched, 2, "both tasks fused into one pass");
             assert_eq!(a.pass.tasks, 2);
+            assert_eq!(a.generation, 0);
             assert_eq!(*a.scores, want[t], "task {t}: served vs pipeline scores");
         }
         // both answers share one pass: shard traffic of a single scan
@@ -483,15 +629,87 @@ mod tests {
     }
 
     #[test]
-    fn generation_distinguishes_rebuilt_stores() {
-        let path = build_store(8, 8, 64, &[1.0], "gen1");
-        let s1 = Session::open(&path, SessionOpts::default()).unwrap();
-        let g1 = s1.generation();
-        drop(s1);
-        let path2 = build_store(8, 9, 64, &[1.0], "gen2");
-        let s2 = Session::open(&path2, SessionOpts::default()).unwrap();
-        assert_ne!(g1, s2.generation(), "different geometry, different generation");
-        std::fs::remove_file(path).ok();
-        std::fs::remove_file(path2).ok();
+    fn ingest_reload_extends_cached_scores_with_a_tail_scan() {
+        // The generation-aware acceptance test at the session level: an
+        // ingest mid-session is picked up without reopening, a cached
+        // answer is extended by scanning ONLY the new rows, warm base
+        // shards stay pinned, and everything matches a monolithic store
+        // holding the same rows.
+        let (n0, add, k) = (12usize, 6usize, 64usize);
+        let etas = [0.7f32, 0.3];
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "qless_sess_reload_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = default_store_path(&dir, p);
+        // normal_features draws sequentially, so the monolithic fixture's
+        // first n0 rows equal the base store's rows exactly
+        seeded_datastore(&base, p, n0, k, &etas, 0);
+        let mono_path = dir.join("mono.qlds");
+        let mono = seeded_datastore(&mono_path, p, n0 + add, k, &etas, 0);
+
+        let opts = SessionOpts { shard_rows: 4, mem_budget_mb: 16, score_cache_entries: 8 };
+        let mut sess = Session::open(&base, opts).unwrap();
+        let q0 = ScoreQuery { val: task(k, 500, 2) };
+        let before = sess.answer_batch(std::slice::from_ref(&q0)).unwrap();
+        assert_eq!(before[0].scores.len(), n0);
+        assert_eq!(before[0].generation, 0);
+        let base_digest = std::fs::read(&base).unwrap();
+        let cold = sess.stats();
+
+        // ingest `add` rows (the monolithic fixture's tail) mid-session
+        let mut sw = SegmentWriter::create(&dir, &[p], add, 0).unwrap();
+        for ci in 0..etas.len() {
+            sw.begin_checkpoint().unwrap();
+            sw.append_rows(&feats(n0 + add, k, ci as u64).data[n0 * k..]).unwrap();
+            sw.end_checkpoint().unwrap();
+        }
+        sw.finalize().unwrap();
+        assert_eq!(std::fs::read(&base).unwrap(), base_digest, "ingest never touches the base");
+
+        // repeat query: picked up live, extended by a tail-only pass
+        let after = sess.answer_batch(std::slice::from_ref(&q0)).unwrap();
+        assert_eq!(after[0].generation, 1);
+        assert_eq!(after[0].scores.len(), n0 + add);
+        assert_eq!(after[0].scores[..n0], before[0].scores[..], "prefix reused verbatim");
+        assert!(!after[0].cached);
+        assert_eq!(
+            after[0].pass.rows_read,
+            (etas.len() * add) as u64,
+            "extension must scan only the ingested rows"
+        );
+        assert_eq!(*after[0].gen_rows, vec![(0u64, 0usize), (1u64, n0)]);
+        let s = sess.stats();
+        assert_eq!(s.reloads, 1);
+        assert_eq!(s.score_cache_extends, 1);
+        assert_eq!(
+            s.disk_shard_reads - cold.disk_shard_reads,
+            (etas.len() * add.div_ceil(4)) as u64,
+            "only segment shards hit disk; warm base shards stay pinned"
+        );
+
+        // served values equal a full scan of the monolithic store
+        let (want, _) = score_datastore_tasks(
+            &mono,
+            &[q0.val.as_slice()],
+            ScoreOpts { shard_rows: 4, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        assert_eq!(*after[0].scores, want[0], "extended scores vs monolithic scan");
+
+        // a brand-new task after the reload scans the full live store
+        let q1 = ScoreQuery { val: task(k, 600, 2) };
+        let fresh = sess.answer_batch(std::slice::from_ref(&q1)).unwrap();
+        assert_eq!(fresh[0].scores.len(), n0 + add);
+        assert_eq!(fresh[0].pass.rows_read, (etas.len() * (n0 + add)) as u64);
+        // and an exact repeat is a plain cache hit at the new generation
+        let hit = sess.answer_batch(std::slice::from_ref(&q0)).unwrap();
+        assert!(hit[0].cached);
+        assert_eq!(hit[0].generation, 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

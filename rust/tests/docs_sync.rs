@@ -1,0 +1,147 @@
+//! Documentation-sync checks — CI's guard against docs drifting from the
+//! code:
+//!
+//! * every `--flag` a doc shows in a `qless` invocation must exist in the
+//!   parser (greps the documented flags against `usage_for`'s output and
+//!   the `Config` key set);
+//! * every `Config` key must be documented in the usage texts (a new knob
+//!   cannot ship undocumented);
+//! * every relative markdown link in the repo's docs must point at a file
+//!   that exists (FORMAT.md / PROTOCOL.md are load-bearing: rustdoc
+//!   includes them, ARCHITECTURE/README link to them).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use qless::config::cli::usage_for;
+use qless::config::Config;
+
+/// The documentation set under sync enforcement. Paths are relative to
+/// the crate root (`rust/`); the README sits one level up.
+const DOCS: &[(&str, &str)] = &[
+    ("README.md", include_str!("../../README.md")),
+    ("rust/ARCHITECTURE.md", include_str!("../ARCHITECTURE.md")),
+    ("rust/DESIGN.md", include_str!("../DESIGN.md")),
+    ("rust/EXPERIMENTS.md", include_str!("../EXPERIMENTS.md")),
+    ("rust/FORMAT.md", include_str!("../FORMAT.md")),
+    ("rust/PROTOCOL.md", include_str!("../PROTOCOL.md")),
+];
+
+/// Collect every `--flag` token on `line` into `out`.
+fn extract_flags(line: &str, out: &mut BTreeSet<String>) {
+    let mut i = 0usize;
+    while let Some(pos) = line[i..].find("--") {
+        let start = i + pos + 2;
+        let end = line[start..]
+            .find(|c: char| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+            .map(|e| start + e)
+            .unwrap_or(line.len());
+        if end > start && line.as_bytes()[start].is_ascii_lowercase() {
+            out.insert(line[start..end].trim_end_matches('-').to_string());
+        }
+        i = end.max(start);
+    }
+}
+
+/// Every flag the CLI actually accepts: the Config keys (dash form) plus
+/// the parser-level flags.
+fn known_flags() -> BTreeSet<String> {
+    let mut known: BTreeSet<String> = Config::KEYS.iter().map(|k| k.replace('_', "-")).collect();
+    // parser-level flags plus the usage screens' literal `--key value`
+    // placeholder (it names the convention, not a flag)
+    for extra in ["config", "fast", "help", "key"] {
+        known.insert(extra.to_string());
+    }
+    known
+}
+
+#[test]
+fn documented_qless_flags_exist_in_the_parser() {
+    let known = known_flags();
+    for (name, text) in DOCS {
+        for (lineno, line) in text.lines().enumerate() {
+            // only lines demonstrating qless invocations/flags; cargo
+            // command lines carry cargo's own flags
+            if !line.contains("qless") || line.contains("cargo") {
+                continue;
+            }
+            let mut flags = BTreeSet::new();
+            extract_flags(line, &mut flags);
+            for f in flags {
+                assert!(
+                    known.contains(&f),
+                    "{name}:{}: documents `--{f}`, which the CLI does not accept \
+                     (known flags: Config::KEYS + config/fast/help)",
+                    lineno + 1
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn usage_texts_document_every_config_key() {
+    // the union of the global and serve usage screens (usage_for output)
+    // must mention every settable key, dash form
+    let all = format!("{}\n{}", usage_for(""), usage_for("serve"));
+    let mut usage_flags = BTreeSet::new();
+    for line in all.lines() {
+        extract_flags(line, &mut usage_flags);
+    }
+    for key in Config::KEYS {
+        let dash = key.replace('_', "-");
+        assert!(
+            usage_flags.contains(&dash),
+            "Config key '{key}' is not documented as --{dash} in USAGE/SERVE_USAGE"
+        );
+    }
+    // and the usage screens never invent flags the parser rejects
+    let known = known_flags();
+    for f in &usage_flags {
+        assert!(known.contains(f), "usage documents `--{f}`, which no Config key backs");
+    }
+}
+
+#[test]
+fn relative_markdown_links_resolve() {
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = crate_root.parent().expect("crate lives in repo/rust");
+    for (name, text) in DOCS {
+        let doc_dir = if name.starts_with("rust/") { crate_root } else { repo_root };
+        let mut i = 0usize;
+        while let Some(pos) = text[i..].find("](") {
+            let start = i + pos + 2;
+            let Some(close) = text[start..].find(')') else { break };
+            let target = &text[start..start + close];
+            i = start + close;
+            if target.is_empty()
+                || target.starts_with("http://")
+                || target.starts_with("https://")
+                || target.starts_with('#')
+                || target.starts_with("mailto:")
+            {
+                continue;
+            }
+            let file = target.split('#').next().unwrap_or(target);
+            let resolved = doc_dir.join(file);
+            assert!(
+                resolved.exists(),
+                "{name}: broken relative link `{target}` (resolved to {resolved:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_docs_are_included_in_rustdoc() {
+    // FORMAT.md / PROTOCOL.md are kept honest by being compiled into the
+    // rustdoc of their modules (their examples run as doctests). Guard
+    // the include wiring itself: the markdown files must contain the
+    // examples the modules promise.
+    let (_, format_md) = DOCS.iter().find(|(n, _)| *n == "rust/FORMAT.md").unwrap();
+    assert!(format_md.contains("```rust"), "FORMAT.md lost its doctest example");
+    assert!(format_md.contains("51 4c 44 53"), "FORMAT.md lost its hex dump");
+    let (_, proto_md) = DOCS.iter().find(|(n, _)| *n == "rust/PROTOCOL.md").unwrap();
+    assert!(proto_md.contains("```rust"), "PROTOCOL.md lost its doctest example");
+    assert!(proto_md.contains("since_gen"), "PROTOCOL.md lost the generation filter");
+}

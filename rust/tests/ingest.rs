@@ -1,0 +1,373 @@
+//! Incremental-ingest acceptance suite — the live-datastore tentpole's
+//! contract:
+//!
+//! * **build-all-at-once == build-then-ingest**: a base store plus
+//!   ingested segments holds byte-identical rows (and scales) to one
+//!   monolithic store built from the same feature stream, and scores
+//!   end-to-end identically ([`score_live_tasks`] vs
+//!   `score_datastore_tasks`) — across bitwidth × scheme × ingest window
+//!   × quantize-worker count, including projection dims whose packed rows
+//!   end mid-byte (`k·bits % 8 ≠ 0`);
+//! * **pre-existing bytes are never touched**: the base file's digest is
+//!   invariant across ingests (asserted byte-for-byte);
+//! * a **running `qless serve`** picks a new generation up without
+//!   restart: cached answers extend with a tail scan over only the new
+//!   rows, responses carry the bumped generation, and `since_gen` ranks
+//!   only newer rows;
+//! * a **crash mid-append** is detected and rolled back for every
+//!   precision together, never served.
+
+use std::path::{Path, PathBuf};
+
+use qless::datastore::{
+    default_store_path, repair_run_dir, segment_store_path, Datastore, LiveStore, SegmentWriter,
+};
+use qless::grads::FeatureMatrix;
+use qless::influence::{score_datastore_tasks, score_live_tasks, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::select::top_k_scored_since;
+use qless::service::{Client, ServeOpts, Server};
+use qless::util::prop::{normal_features, run_prop, seeded_datastore};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "qless_ingest_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Every precision the format supports, both schemes where they differ.
+fn full_grid() -> Vec<Precision> {
+    vec![
+        Precision::new(16, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmean).unwrap(),
+        Precision::new(4, Scheme::Absmax).unwrap(),
+        Precision::new(4, Scheme::Absmean).unwrap(),
+        Precision::new(2, Scheme::Absmax).unwrap(),
+        Precision::new(2, Scheme::Absmean).unwrap(),
+        Precision::new(1, Scheme::Sign).unwrap(),
+    ]
+}
+
+/// Ingest rows `lo..hi` of the canonical feature stream
+/// (`normal_features(n_total, k, seed + ci)` per checkpoint — the exact
+/// stream `seeded_datastore` draws from, so base + segments reproduce a
+/// monolithic `seeded_datastore(n_total)` row-for-row) as one generation,
+/// streamed in `window`-row chunks with `workers` quantize workers.
+#[allow(clippy::too_many_arguments)]
+fn ingest_range(
+    dir: &Path,
+    grid: &[Precision],
+    lo: usize,
+    hi: usize,
+    n_total: usize,
+    k: usize,
+    etas: &[f32],
+    seed: u64,
+    window: usize,
+    workers: usize,
+) {
+    let mut sw = SegmentWriter::create(dir, grid, hi - lo, workers).unwrap();
+    for ci in 0..etas.len() {
+        sw.begin_checkpoint().unwrap();
+        let f = normal_features(n_total, k, seed + ci as u64);
+        let mut row = lo;
+        while row < hi {
+            let take = window.max(1).min(hi - row);
+            sw.append_rows(&f.data[row * k..(row + take) * k]).unwrap();
+            row += take;
+        }
+        sw.end_checkpoint().unwrap();
+    }
+    sw.finalize().unwrap();
+}
+
+#[test]
+fn prop_build_then_ingest_matches_build_all_at_once() {
+    run_prop("ingest-vs-monolithic", 14, |g| {
+        let n0 = 3 + g.usize_up_to(16);
+        let add1 = 1 + g.rng.below(7);
+        let add2 = g.rng.below(6); // 0 = single-generation case
+        let n_total = n0 + add1 + add2;
+        // arbitrary k, deliberately NOT a multiple of 8 half the time, so
+        // packed sub-byte rows end mid-byte (k·bits % 8 ≠ 0)
+        let k = 5 + g.usize_up_to(60);
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.9 - 0.4 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let window = 1 + g.rng.below(add1 + 3);
+        let workers = g.rng.below(4);
+        let dir = tmpdir("prop");
+        let grid = full_grid();
+
+        // base build (generation 0), digests captured before any ingest
+        for &p in &grid {
+            seeded_datastore(&default_store_path(&dir, p), p, n0, k, &etas, seed);
+        }
+        let digests: Vec<Vec<u8>> = grid
+            .iter()
+            .map(|&p| std::fs::read(default_store_path(&dir, p)).unwrap())
+            .collect();
+
+        ingest_range(&dir, &grid, n0, n0 + add1, n_total, k, &etas, seed, window, workers);
+        if add2 > 0 {
+            ingest_range(&dir, &grid, n0 + add1, n_total, n_total, k, &etas, seed, window, workers);
+        }
+
+        let t0: Vec<FeatureMatrix> =
+            (0..ckpts).map(|c| normal_features(3, k, 7000 + c as u64)).collect();
+        let t1: Vec<FeatureMatrix> =
+            (0..ckpts).map(|c| normal_features(2, k, 8000 + c as u64)).collect();
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0, &t1];
+        let opts = ScoreOpts { shard_rows: 1 + g.rng.below(n_total + 2), ..Default::default() };
+
+        for (gi, &p) in grid.iter().enumerate() {
+            let base = default_store_path(&dir, p);
+            prop_assert!(
+                std::fs::read(&base).unwrap() == digests[gi],
+                "{}: ingest modified pre-existing base bytes",
+                p.label()
+            );
+            let mono_path = dir.join(format!("mono_{}b_{}.qlds", p.bits, p.scheme));
+            let mono = seeded_datastore(&mono_path, p, n_total, k, &etas, seed);
+            let live = LiveStore::open(&base).unwrap();
+            prop_assert!(live.n_rows() == n_total, "{}: live rows", p.label());
+            prop_assert!(
+                live.generation() == if add2 > 0 { 2 } else { 1 },
+                "{}: generation",
+                p.label()
+            );
+
+            // row-for-row byte identity against the monolithic store
+            for ci in 0..ckpts {
+                let mono_block = mono.load_checkpoint(ci).unwrap();
+                for member in live.members() {
+                    let block = member.ds.load_checkpoint(ci).unwrap();
+                    prop_assert!(
+                        (block.eta.to_bits()) == mono_block.eta.to_bits(),
+                        "{}: member η",
+                        p.label()
+                    );
+                    for j in 0..block.n {
+                        let gr = member.start_row + j;
+                        prop_assert!(
+                            block.row_bytes(j) == mono_block.row_bytes(gr),
+                            "{} ckpt {ci} row {gr}: bytes differ (n0={n0} add1={add1} \
+                             add2={add2} k={k} window={window} workers={workers})",
+                            p.label()
+                        );
+                        if p.bits != 16 {
+                            prop_assert!(
+                                block.scales[j].to_bits() == mono_block.scales[gr].to_bits(),
+                                "{} ckpt {ci} row {gr}: scale differs",
+                                p.label()
+                            );
+                        }
+                    }
+                }
+            }
+
+            // end-to-end: live scan scores == monolithic scan scores
+            let (want, _) = score_datastore_tasks(&mono, &tasks, opts, None).unwrap();
+            let (got, _) = score_live_tasks(&live, &tasks, opts).unwrap();
+            prop_assert!(
+                got == want,
+                "{}: live scores differ from monolithic (k={k} shard_rows={})",
+                p.label(),
+                opts.shard_rows
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+/// The serving acceptance criterion: a running `qless serve` session
+/// picks up an ingest without restart — generation bumped in responses,
+/// cached answers extended by a pass over ONLY the new rows, stats
+/// reflecting the live row count, and `since_gen` ranking only newer
+/// rows.
+#[test]
+fn running_server_picks_up_ingest_without_restart() {
+    let (n0, add, k) = (14usize, 6usize, 64usize);
+    let n_total = n0 + add;
+    let etas = [0.6f32, 0.4];
+    let p = Precision::new(4, Scheme::Absmax).unwrap();
+    let dir = tmpdir("serve");
+    let base = default_store_path(&dir, p);
+    seeded_datastore(&base, p, n0, k, &etas, 42);
+    let mono_path = dir.join("mono.qlds");
+    let mono = seeded_datastore(&mono_path, p, n_total, k, &etas, 42);
+
+    let server = Server::start(
+        &base,
+        ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 0,
+            shard_rows: 5,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    let task: Vec<FeatureMatrix> =
+        (0..etas.len()).map(|ci| normal_features(2, k, 900 + ci as u64)).collect();
+    let r0 = c.score(&task, 3, true).unwrap();
+    assert_eq!(r0.generation, 0);
+    assert_eq!(r0.scores.as_ref().unwrap().len(), n0);
+
+    // ingest the monolithic fixture's tail rows mid-serve
+    ingest_range(&dir, &[p], n0, n_total, n_total, k, &etas, 42, 4, 0);
+
+    // the same query now covers the live store: generation bumped, the
+    // cached prefix reused, and the producing pass read ONLY the new rows
+    let r1 = c.score(&task, 3, true).unwrap();
+    assert_eq!(r1.generation, 1, "served generation must bump without restart");
+    let scores = r1.scores.as_ref().unwrap();
+    assert_eq!(scores.len(), n_total);
+    assert!(!r1.cached);
+    assert_eq!(
+        r1.pass.rows_read,
+        (etas.len() * add) as u64,
+        "extension must scan only the ingested rows"
+    );
+    let (want, _) = score_datastore_tasks(
+        &mono,
+        &[task.as_slice()],
+        ScoreOpts { shard_rows: 5, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    for (j, (a, b)) in want[0].iter().zip(scores).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {j}: served vs monolithic scan");
+    }
+
+    let st = c.stats().unwrap();
+    assert_eq!(st.generation, 1);
+    assert_eq!(st.n_samples, n_total, "stats row count is live");
+    assert_eq!(st.stats.reloads, 1);
+    assert_eq!(st.stats.score_cache_extends, 1);
+
+    // since_gen = 0: rank only rows newer than the base build
+    let r2 = c.score_since(&task, add + 5, false, Some(0)).unwrap();
+    assert!(r2.cached, "repeat task answers from the extended cache");
+    assert_eq!(r2.top.len(), add, "only the ingested rows are rankable");
+    assert!(r2.top.iter().all(|(i, _)| *i >= n0), "{:?}", r2.top);
+    assert_eq!(r2.top, top_k_scored_since(&want[0], add + 5, n0));
+    // nothing is newer than the current generation
+    let r3 = c.score_since(&task, 3, false, Some(1)).unwrap();
+    assert!(r3.top.is_empty());
+
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A crash that leaves one precision's segment torn must roll the whole
+/// generation back — for every precision — and the directory must then
+/// re-ingest cleanly. A torn tail is never served.
+#[test]
+fn torn_ingest_rolls_back_every_precision_together() {
+    let (n0, add, k) = (8usize, 4usize, 24usize);
+    let etas = [1.0f32];
+    let grid =
+        vec![Precision::new(4, Scheme::Absmax).unwrap(), Precision::new(1, Scheme::Sign).unwrap()];
+    let dir = tmpdir("torn");
+    for &p in &grid {
+        seeded_datastore(&default_store_path(&dir, p), p, n0, k, &etas, 5);
+    }
+    ingest_range(&dir, &grid, n0, n0 + add, n0 + add, k, &etas, 5, 2, 0);
+
+    // "crash": the 1-bit segment is lost after the manifest was published
+    let onebit_seg = segment_store_path(&default_store_path(&dir, grid[1]), 1);
+    std::fs::remove_file(&onebit_seg).unwrap();
+    assert!(
+        LiveStore::open(&default_store_path(&dir, grid[1])).is_err(),
+        "a missing segment must not be served short"
+    );
+
+    let m = repair_run_dir(&dir, &grid).unwrap().unwrap();
+    assert_eq!(m.generation, 0, "whole generation rolled back");
+    assert_eq!(m.total_rows(), n0 as u64);
+    let fourbit_seg = segment_store_path(&default_store_path(&dir, grid[0]), 1);
+    assert!(!fourbit_seg.exists(), "the surviving precision's segment is dropped too");
+    for &p in &grid {
+        let live = LiveStore::open(&default_store_path(&dir, p)).unwrap();
+        assert_eq!(live.n_rows(), n0);
+        assert_eq!(live.generation(), 0);
+    }
+
+    // and the tail re-ingests cleanly after repair
+    ingest_range(&dir, &grid, n0, n0 + add, n0 + add, k, &etas, 5, 3, 1);
+    for &p in &grid {
+        let live = LiveStore::open(&default_store_path(&dir, p)).unwrap();
+        assert_eq!(live.n_rows(), n0 + add);
+        assert_eq!(live.generation(), 1);
+        // re-ingested bytes equal a monolithic build's tail
+        let mono_path = dir.join(format!("mono2_{}b_{}.qlds", p.bits, p.scheme));
+        let mono = seeded_datastore(&mono_path, p, n0 + add, k, &etas, 5);
+        let mono_block = mono.load_checkpoint(0).unwrap();
+        let seg_block = live.members()[1].ds.load_checkpoint(0).unwrap();
+        for j in 0..add {
+            assert_eq!(seg_block.row_bytes(j), mono_block.row_bytes(n0 + j), "{}", p.label());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The shared manifest covers every precision of the run: repairing with
+/// a precision *subset* must not truncate generations that are fully
+/// intact, and a subset ingest is refused before any byte is written
+/// (it would leave the uncovered precisions torn by construction).
+#[test]
+fn subset_repair_and_subset_ingest_respect_the_whole_run() {
+    let (n0, add, k) = (6usize, 3usize, 16usize);
+    let etas = [1.0f32];
+    let p4 = Precision::new(4, Scheme::Absmax).unwrap();
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    let dir = tmpdir("subset");
+    for &p in &[p4, p8] {
+        seeded_datastore(&default_store_path(&dir, p), p, n0, k, &etas, 2);
+    }
+    ingest_range(&dir, &[p4, p8], n0, n0 + add, n0 + add, k, &etas, 2, 2, 0);
+    // repairing one precision still sees the whole run: nothing rolls back
+    let m = repair_run_dir(&dir, &[p8]).unwrap().unwrap();
+    assert_eq!(m.generation, 1, "subset repair must keep intact generations");
+    for &p in &[p4, p8] {
+        let live = LiveStore::open(&default_store_path(&dir, p)).unwrap();
+        assert_eq!((live.generation(), live.n_rows()), (1, n0 + add), "{}", p.label());
+    }
+    // a subset ingest is refused up front
+    let err = SegmentWriter::create(&dir, &[p4], 2, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("every precision"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Ingest refuses to append to a store whose geometry it cannot extend
+/// safely, and `Datastore`-level reuse guards stay intact underneath the
+/// live layer.
+#[test]
+fn ingest_guards_geometry() {
+    let (n0, k) = (6usize, 16usize);
+    let dir = tmpdir("guard");
+    let p = Precision::new(8, Scheme::Absmax).unwrap();
+    seeded_datastore(&default_store_path(&dir, p), p, n0, k, &[1.0, 0.5], 1);
+    // a second precision with DIFFERENT geometry in the same dir: the
+    // segment writer must refuse the mismatched pair
+    let p2 = Precision::new(2, Scheme::Absmax).unwrap();
+    seeded_datastore(&default_store_path(&dir, p2), p2, n0 + 1, k, &[1.0, 0.5], 1);
+    let err = SegmentWriter::create(&dir, &[p, p2], 3, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("geometry"), "{err:#}");
+    // the underlying per-file guard still catches plain geometry drift
+    let ds = Datastore::open(&default_store_path(&dir, p)).unwrap();
+    assert!(ds.matches_geometry(p, n0, k, 2));
+    assert!(!ds.matches_geometry(p, n0 + 3, k, 2));
+    std::fs::remove_dir_all(&dir).ok();
+}
