@@ -1,0 +1,174 @@
+//! Scatter-gather serving throughput and failure-recovery latency: one
+//! coordinator over N local workers vs the resident single-node server,
+//! over real sockets — the numbers recorded in EXPERIMENTS.md §Perf.
+//!
+//! Three sections:
+//!
+//! * **1 vs N workers** — queries/sec and cold/warm latency at Q
+//!   concurrent clients for a single-node `Server` and a coordinator at
+//!   1/2/4 workers. The coordinator pays a per-query fleet probe plus a
+//!   fan-out hop, so at small stores it *loses* to single-node; the win
+//!   is each worker scanning 1/N of the rows (and in a real deployment,
+//!   1/N of the store resident per machine).
+//! * **cold vs warm** — the first round pays disk on every worker; warm
+//!   rounds scan each worker's pinned shard-cache slice.
+//! * **worker-kill recovery** — kill one of three workers mid-stream and
+//!   measure the first-query latency while the fleet heals (probe
+//!   failure → exclusion → 2-way repartition) and the steady state after.
+//!
+//! Score caches are disabled and every (client, round) uses distinct
+//! validation features, so every query pays a real scan.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use qless::datastore::DatastoreWriter;
+use qless::grads::FeatureMatrix;
+use qless::quant::{Precision, Scheme};
+use qless::service::{Client, Coordinator, CoordinatorOpts, ServeOpts, Server};
+use qless::util::stats::fmt_secs;
+use qless::util::Rng;
+
+fn feats(n: usize, k: usize, seed: u64) -> FeatureMatrix {
+    let mut rng = Rng::new(seed);
+    FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
+}
+
+fn build(n: usize, k: usize) -> std::path::PathBuf {
+    let p = Precision::new(4, Scheme::Absmax).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("qless_bench_scatter_{}.qlds", std::process::id()));
+    let f = feats(n, k, 7);
+    let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+    w.begin_checkpoint(1.0).unwrap();
+    for i in 0..n {
+        w.append_features(f.row(i)).unwrap();
+    }
+    w.end_checkpoint().unwrap();
+    w.finalize().unwrap();
+    path
+}
+
+fn worker_opts(q: usize) -> ServeOpts {
+    ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        batch_window_ms: 0,
+        max_batch_tasks: 32,
+        shard_rows: 0,
+        mem_budget_mb: 64,
+        score_cache_entries: 0,
+        workers: q + 2,
+        queue_cap: 256,
+    }
+}
+
+/// Drive Q concurrent clients × `rounds` distinct queries against `addr`;
+/// returns per-query `(latency_s, is_first_round)`.
+fn drive(addr: std::net::SocketAddr, q: usize, rounds: usize, k: usize, nv: usize, seed: usize) -> Vec<(f64, bool)> {
+    let barrier = Arc::new(Barrier::new(q));
+    let handles: Vec<_> = (0..q)
+        .map(|ci| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut lat = Vec::with_capacity(rounds);
+                barrier.wait();
+                for r in 0..rounds {
+                    let val = vec![feats(nv, k, (seed + ci * 1000 + r) as u64)];
+                    let t = Instant::now();
+                    client.score(&val, 10, false).unwrap();
+                    lat.push((t.elapsed().as_secs_f64(), r == 0));
+                }
+                lat
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+}
+
+fn report(label: &str, all: &[(f64, bool)], wall: f64) {
+    let cold: Vec<f64> = all.iter().filter(|(_, c)| *c).map(|(s, _)| *s).collect();
+    let mut warm: Vec<f64> = all.iter().filter(|(_, c)| !*c).map(|(s, _)| *s).collect();
+    warm.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| warm[((p * (warm.len() - 1) as f64).round() as usize).min(warm.len() - 1)];
+    let cold_mean = cold.iter().sum::<f64>() / cold.len().max(1) as f64;
+    println!(
+        "{label}: {:>7.1} q/s  cold {:>9}  warm p50 {:>9}  p99 {:>9}",
+        all.len() as f64 / wall,
+        fmt_secs(cold_mean),
+        fmt_secs(pct(0.50)),
+        fmt_secs(pct(0.99)),
+    );
+}
+
+fn main() {
+    let (n, k, nv) = (8192usize, 512usize, 8usize);
+    let (q, rounds) = (4usize, 6usize);
+    let path = build(n, k);
+    println!("== bench_serve_distributed: {n}×{k} 4-bit store, Q={q} clients × {rounds} rounds ==");
+
+    // single-node baseline
+    {
+        let server = Server::start(&path, worker_opts(q)).unwrap();
+        let t = Instant::now();
+        let all = drive(server.addr(), q, rounds, k, nv, 10_000);
+        report("single-node      ", &all, t.elapsed().as_secs_f64());
+        server.stop();
+        server.join().unwrap();
+    }
+
+    // coordinator at 1 / 2 / 4 workers — same protocol, same answers
+    for workers in [1usize, 2, 4] {
+        let co = Coordinator::start_local(
+            &path,
+            workers,
+            worker_opts(q),
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let t = Instant::now();
+        let all = drive(co.addr(), q, rounds, k, nv, 20_000 + workers * 100);
+        report(&format!("scatter {workers} worker(s)"), &all, t.elapsed().as_secs_f64());
+        co.stop();
+        co.join().unwrap();
+    }
+
+    // worker-kill recovery: 3 workers, warm the fleet, kill one, measure
+    // the first post-kill query (detection + 2-way repartition) and the
+    // healed steady state
+    {
+        let co = Coordinator::start_local(
+            &path,
+            3,
+            worker_opts(q),
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(co.addr()).unwrap();
+        for r in 0..3 {
+            let val = vec![feats(nv, k, 30_000 + r)];
+            c.score(&val, 10, false).unwrap();
+        }
+        co.local_workers()[1].stop();
+        let val = vec![feats(nv, k, 31_000)];
+        let t = Instant::now();
+        c.score(&val, 10, false).unwrap();
+        let recovery = t.elapsed().as_secs_f64();
+        let mut healed = Vec::new();
+        for r in 0..5 {
+            let val = vec![feats(nv, k, 32_000 + r)];
+            let t = Instant::now();
+            c.score(&val, 10, false).unwrap();
+            healed.push(t.elapsed().as_secs_f64());
+        }
+        healed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "worker-kill (3→2): first query {:>9}  healed p50 {:>9}",
+            fmt_secs(recovery),
+            fmt_secs(healed[healed.len() / 2]),
+        );
+        c.shutdown().unwrap();
+        co.join().unwrap();
+    }
+    std::fs::remove_file(path).ok();
+}

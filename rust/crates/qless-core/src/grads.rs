@@ -1,0 +1,25 @@
+//! The gradient-feature container shared by every workspace layer.
+//!
+//! Extraction itself (sharded per-sample LoRA gradients through the PJRT
+//! worker pool) lives in the top `qless` crate next to the model and data
+//! plumbing; this module holds only the dense matrix type those features
+//! travel in, so the datastore and serving crates can consume features
+//! without depending on the extraction stack.
+
+/// Dense `[n × k]` feature matrix for one checkpoint.
+#[derive(Debug, Clone)]
+pub struct FeatureMatrix {
+    /// Number of rows (samples).
+    pub n: usize,
+    /// Projected feature dimension.
+    pub k: usize,
+    /// Row-major `n × k` values.
+    pub data: Vec<f32>,
+}
+
+impl FeatureMatrix {
+    /// Borrow row `i` as a `k`-length slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+}

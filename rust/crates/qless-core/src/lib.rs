@@ -1,0 +1,41 @@
+//! # qless-core — QLESS foundation layer
+//!
+//! The bottom crate of the QLESS workspace (see the workspace
+//! `ARCHITECTURE.md` for the crate map). Everything here is free of
+//! datastore / serving / pipeline concerns so the higher crates
+//! (`qless-datastore`, `qless-service`, `qless`) can depend on it without
+//! cycles:
+//!
+//! * [`quant`] — absmax / sign quantization schemes, bit-packing, batch
+//!   quantizers and the weight-quantization path;
+//! * [`select`] — deterministic top-k selection, the merge-friendly
+//!   comparator the distributed scatter-gather coordinator relies on;
+//! * [`grads`] — the [`grads::FeatureMatrix`] container shared by every
+//!   layer (extraction itself lives in the top crate, next to the model);
+//! * [`runtime`] — PJRT C-API runtime executing the AOT-lowered HLO
+//!   artifacts;
+//! * [`corpus`] — synthetic corpus generator + tokenizer (the runtime
+//!   validates manifest vocabularies against it);
+//! * [`util`] — the zero-dependency substrate: RNG, JSON, logging, thread
+//!   pool, property-test harness, stats, tables.
+#![warn(missing_docs)]
+
+// Modules below carry `allow(missing_docs)` until their rustdoc pass lands
+// (same debt markers as before the workspace split); `quant` and `select`
+// are fully documented and the crate-level warn keeps them that way.
+#[allow(missing_docs)]
+pub mod corpus;
+pub mod grads;
+pub mod quant;
+#[allow(missing_docs)]
+pub mod runtime;
+pub mod select;
+#[allow(missing_docs)]
+pub mod util;
+
+/// Default scan memory budget in MiB, shared by the scoring engine, the
+/// serving layer and the CLI `--mem-budget-mb` default so every layer
+/// agrees on what "unconfigured" means.
+pub const DEFAULT_MEM_BUDGET_MB: usize = 64;
+
+pub use anyhow::{anyhow, bail, Context, Result};

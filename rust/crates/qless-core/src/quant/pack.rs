@@ -131,7 +131,7 @@ pub fn unpack_stored_into(bytes: &[u8], bits: u8, len: usize, out: &mut Vec<u8>)
 /// View a 1-bit row as little-endian u64 words (tail zero-padded). Zero
 /// padding maps to "−1" bits, so callers must subtract the tail's phantom
 /// agreement — see the tail fixup in
-/// [`influence::native::scores_1bit_rows`](crate::influence::native::scores_1bit_rows).
+/// `influence::native::scores_1bit_rows` (in the `qless-datastore` crate).
 pub fn as_sign_words(row: &PackedRow) -> Vec<u64> {
     assert_eq!(row.bits, 1, "sign words need a 1-bit row");
     let nwords = row.len.div_ceil(64);

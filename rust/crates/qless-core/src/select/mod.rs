@@ -1,0 +1,11 @@
+//! Deterministic ranking — the core of QLESS step 4 (top-p% selection).
+//!
+//! Only the ranking primitives live here: top-k with reproducible
+//! tie-breaking and the scatter-gather merge built on the same comparator.
+//! The corpus-aware analyses (subset composition for Fig. 5, budget sweeps
+//! for Fig. 4) need the corpus model and live in the top `qless` crate's
+//! `select` module, which re-exports everything below.
+
+pub mod topk;
+
+pub use topk::{merge_top_k, select_top_frac, top_k_indices, top_k_scored, top_k_scored_since};

@@ -10,7 +10,7 @@
 /// means an upstream numerical bug, never a valid ranking input.
 ///
 /// ```
-/// use qless::select::top_k_indices;
+/// use qless_core::select::top_k_indices;
 ///
 /// let scores = [0.1, 0.9, -0.5, 0.9, 0.3];
 /// // ties broken by ascending index: 1 beats 3 despite equal scores
@@ -39,7 +39,7 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
 /// per-task response shape, where every query carries its own `k`.
 ///
 /// ```
-/// use qless::select::top_k_scored;
+/// use qless_core::select::top_k_scored;
 ///
 /// let scores = [0.1, 0.9, -0.5];
 /// assert_eq!(top_k_scored(&scores, 2), vec![(1, 0.9), (0, 0.1)]);
@@ -57,7 +57,7 @@ pub fn top_k_scored(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
 /// global index; `first_row` past the end yields an empty selection.
 ///
 /// ```
-/// use qless::select::top_k_scored_since;
+/// use qless_core::select::top_k_scored_since;
 ///
 /// let scores = [0.9, 0.1, 0.5, 0.8];
 /// assert_eq!(top_k_scored_since(&scores, 2, 2), vec![(3, 0.8), (2, 0.5)]);
@@ -67,6 +67,36 @@ pub fn top_k_scored(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
 pub fn top_k_scored_since(scores: &[f32], k: usize, first_row: usize) -> Vec<(usize, f32)> {
     let first = first_row.min(scores.len());
     top_k_scored(&scores[first..], k).into_iter().map(|(i, s)| (i + first, s)).collect()
+}
+
+/// Merge per-range top-k candidate lists into the global top-k — the
+/// scatter-gather reduction. Each part must hold [`top_k_scored`] (or
+/// [`top_k_scored_since`]) results over a *disjoint* slice of the global
+/// row space, with indices already offset to global positions; because
+/// every part retains its own k best rows, no global top-k member can have
+/// been dropped, and re-sorting the union with the exact [`top_k_indices`]
+/// comparator (descending score, ascending index, NaN panics) reproduces
+/// the single-node ranking bit-for-bit.
+///
+/// ```
+/// use qless_core::select::{merge_top_k, top_k_scored};
+///
+/// let scores = [0.1f32, 0.9, -0.5, 0.8];
+/// // two workers, rows [0,2) and [2,4), each reporting its local top-2
+/// let left = top_k_scored(&scores[..2], 2);
+/// let right: Vec<(usize, f32)> =
+///     top_k_scored(&scores[2..], 2).into_iter().map(|(i, s)| (i + 2, s)).collect();
+/// assert_eq!(merge_top_k(&[left, right], 2), top_k_scored(&scores, 2));
+/// ```
+pub fn merge_top_k(parts: &[Vec<(usize, f32)>], k: usize) -> Vec<(usize, f32)> {
+    let mut all: Vec<(usize, f32)> = parts.iter().flatten().copied().collect();
+    assert!(
+        all.iter().all(|(_, s)| !s.is_nan()),
+        "NaN influence score — upstream numerical bug"
+    );
+    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
 }
 
 /// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%),
@@ -216,5 +246,61 @@ mod tests {
     fn deterministic_under_permuted_ties() {
         let s = vec![0.5f32; 10];
         assert_eq!(top_k_indices(&s, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn merge_of_single_part_is_identity() {
+        let s = [0.3f32, 0.9, 0.9, -1.0];
+        let top = top_k_scored(&s, 3);
+        assert_eq!(merge_top_k(&[top.clone()], 3), top);
+        assert!(merge_top_k(&[], 3).is_empty());
+        assert!(merge_top_k(&[vec![]], 3).is_empty());
+    }
+
+    #[test]
+    fn merge_breaks_cross_part_ties_by_global_index() {
+        // equal scores landing on different workers must still rank by
+        // ascending global index, exactly like the single-node sort
+        let left = vec![(1usize, 0.5f32), (0, 0.1)];
+        let right = vec![(2usize, 0.5f32), (3, 0.5)];
+        assert_eq!(merge_top_k(&[right, left], 3), vec![(1, 0.5), (2, 0.5), (3, 0.5)]);
+    }
+
+    #[test]
+    fn prop_merge_equals_single_node_topk() {
+        // the scatter-gather acceptance invariant, in miniature: any
+        // contiguous partition of the row space, any k, any number of
+        // parts — merging per-part top-k's IS the global top-k
+        run_prop("merge-topk-exact", 100, |g| {
+            let n = 1 + g.usize_up_to(200);
+            let scores = g.vec_f32(n, 1.0);
+            let k = g.rng.below(n + 2);
+            // random contiguous partition into 1..=5 parts
+            let parts_n = 1 + g.rng.below(5);
+            let mut cuts: Vec<usize> = (0..parts_n - 1).map(|_| g.rng.below(n + 1)).collect();
+            cuts.push(0);
+            cuts.push(n);
+            cuts.sort_unstable();
+            let parts: Vec<Vec<(usize, f32)>> = cuts
+                .windows(2)
+                .map(|w| {
+                    top_k_scored(&scores[w[0]..w[1]], k)
+                        .into_iter()
+                        .map(|(i, s)| (i + w[0], s))
+                        .collect()
+                })
+                .collect();
+            let merged = merge_top_k(&parts, k);
+            let want = top_k_scored(&scores, k);
+            prop_assert!(
+                merged.len() == want.len()
+                    && merged
+                        .iter()
+                        .zip(&want)
+                        .all(|(a, b)| a.0 == b.0 && a.1.to_bits() == b.1.to_bits()),
+                "merged {merged:?} != single-node {want:?} (n={n}, k={k}, cuts={cuts:?})"
+            );
+            Ok(())
+        });
     }
 }

@@ -1,18 +1,15 @@
 //! Mini property-testing harness (the offline vendor set has no proptest),
-//! plus the shared datastore test fixtures the influence / service /
-//! datastore suites build on.
+//! plus the seeded feature-matrix fixture every suite builds on. (The
+//! datastore-on-disk fixture lives one crate up, in
+//! `qless_datastore::fixtures`, next to the writer it exercises.)
 //!
 //! `run_prop` drives a property over `cases` randomized inputs built from a
 //! seeded [`Rng`]; on failure it retries with a bisected "shrink budget" by
 //! re-running with smaller size hints and reports the seed so the failure
 //! is reproducible with `PROP_SEED=<n> cargo test`.
 
-use std::path::Path;
-
 use super::rng::Rng;
-use crate::datastore::{Datastore, DatastoreWriter};
 use crate::grads::FeatureMatrix;
-use crate::quant::Precision;
 
 /// Generator context passed to properties: a seeded RNG plus a size hint —
 /// properties should scale their inputs by `size` so early (small) cases
@@ -89,34 +86,6 @@ pub fn run_prop<F: FnMut(&mut G) -> Result<(), String>>(name: &str, cases: usize
 pub fn normal_features(n: usize, k: usize, seed: u64) -> FeatureMatrix {
     let mut rng = Rng::new(seed);
     FeatureMatrix { n, k, data: (0..n * k).map(|_| rng.normal() as f32).collect() }
-}
-
-/// Test fixture: write a datastore at `path` with one checkpoint block per
-/// `etas` entry — block `ci` holds [`normal_features`]`(n, k, seed + ci)` —
-/// and open it. This is THE shared `DatastoreWriter::create` +
-/// `append_features` loop; test modules must not re-roll their own copy.
-/// Panics on any I/O or protocol error (it's a fixture, not a path under
-/// test). The caller owns the file's lifetime ([`Datastore`] reads lazily,
-/// so keep it alive while scanning).
-pub fn seeded_datastore(
-    path: &Path,
-    precision: Precision,
-    n: usize,
-    k: usize,
-    etas: &[f32],
-    seed: u64,
-) -> Datastore {
-    let mut w = DatastoreWriter::create(path, precision, n, k, etas.len()).unwrap();
-    for (ci, &eta) in etas.iter().enumerate() {
-        let f = normal_features(n, k, seed + ci as u64);
-        w.begin_checkpoint(eta).unwrap();
-        for i in 0..n {
-            w.append_features(f.row(i)).unwrap();
-        }
-        w.end_checkpoint().unwrap();
-    }
-    w.finalize().unwrap();
-    Datastore::open(path).unwrap()
 }
 
 /// Assert helper for properties.

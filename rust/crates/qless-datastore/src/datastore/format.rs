@@ -1,6 +1,6 @@
 //! On-disk header + primitive (de)serialization for the gradient datastore.
 //!
-//! The normative byte-level spec is `rust/FORMAT.md` — included verbatim
+//! The normative byte-level spec is `rust/crates/qless-datastore/FORMAT.md` — included verbatim
 //! below, so its worked hex-dump example runs as a doctest and the spec
 //! can never drift from this code. Edit the markdown file, not this
 //! header.

@@ -17,7 +17,7 @@
 //! force and the half-written segment files as orphans, which
 //! [`crate::datastore::repair_run_dir`] detects and removes.
 //!
-//! On-disk schema (see `rust/FORMAT.md` §Generation manifest):
+//! On-disk schema (see `rust/crates/qless-datastore/FORMAT.md` §Generation manifest):
 //!
 //! ```text
 //! {"version":1,"k":512,"n_checkpoints":4,"base_rows":8000,"generation":2,

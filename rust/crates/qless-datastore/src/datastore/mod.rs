@@ -39,7 +39,7 @@
 //! generation layer: [`SegmentWriter`] appends new rows as self-contained
 //! segment files and bumps the [`Manifest`]; [`LiveStore`] serves base +
 //! segments as one row space and picks up new generations in place. The
-//! byte-level spec of all of it is `rust/FORMAT.md` (included as the
+//! byte-level spec of all of it is `rust/crates/qless-datastore/FORMAT.md` (included as the
 //! [`format`] module's rustdoc, so its hex example runs as a doctest).
 
 pub mod format;

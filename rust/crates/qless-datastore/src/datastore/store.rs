@@ -347,6 +347,23 @@ impl<'a> RowsView<'a> {
         &self.data[i * self.row_stride..(i + 1) * self.row_stride]
     }
 
+    /// Borrow the sub-view of rows `a .. b` (view-local indices). Rows are
+    /// byte-aligned (`row_stride` bytes each), so this is a pure slice —
+    /// no decode, no copy. The scatter-gather serving path clips cached
+    /// whole shards to a worker's row range with it; scoring a clipped
+    /// view is bit-identical to scoring those rows inside the full shard
+    /// because per-row kernels only read the row's own bytes and scale.
+    pub fn slice(&self, a: usize, b: usize) -> RowsView<'a> {
+        debug_assert!(a <= b && b <= self.n());
+        RowsView {
+            precision: self.precision,
+            k: self.k,
+            row_stride: self.row_stride,
+            scales: if self.scales.is_empty() { self.scales } else { &self.scales[a..b] },
+            data: &self.data[a * self.row_stride..b * self.row_stride],
+        }
+    }
+
     /// Unpack row `i`'s lanes as zero-extended **stored** values
     /// (offset-binary `code + α`; the raw sign bit at 1-bit) into `out` —
     /// the integer scoring engine's code-layout accessor: no sign

@@ -1,0 +1,41 @@
+//! Shared on-disk datastore test fixtures.
+//!
+//! The in-memory feature fixture (`normal_features`) lives in
+//! `qless_core::util::prop`; this module adds the one fixture that needs
+//! the writer: a seeded datastore on disk. Both are re-exported together
+//! through [`crate::util::prop`] so test modules keep a single import
+//! path.
+
+use std::path::Path;
+
+use crate::datastore::{Datastore, DatastoreWriter};
+use crate::quant::Precision;
+use crate::util::prop::normal_features;
+
+/// Test fixture: write a datastore at `path` with one checkpoint block per
+/// `etas` entry — block `ci` holds [`normal_features`]`(n, k, seed + ci)` —
+/// and open it. This is THE shared `DatastoreWriter::create` +
+/// `append_features` loop; test modules must not re-roll their own copy.
+/// Panics on any I/O or protocol error (it's a fixture, not a path under
+/// test). The caller owns the file's lifetime ([`Datastore`] reads lazily,
+/// so keep it alive while scanning).
+pub fn seeded_datastore(
+    path: &Path,
+    precision: Precision,
+    n: usize,
+    k: usize,
+    etas: &[f32],
+    seed: u64,
+) -> Datastore {
+    let mut w = DatastoreWriter::create(path, precision, n, k, etas.len()).unwrap();
+    for (ci, &eta) in etas.iter().enumerate() {
+        let f = normal_features(n, k, seed + ci as u64);
+        w.begin_checkpoint(eta).unwrap();
+        for i in 0..n {
+            w.append_features(f.row(i)).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+    }
+    w.finalize().unwrap();
+    Datastore::open(path).unwrap()
+}

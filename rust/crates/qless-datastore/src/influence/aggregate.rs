@@ -32,9 +32,10 @@ use crate::{info, warn_};
 /// Default scan memory budget when neither `ScoreOpts` nor the config
 /// specifies one: comfortably larger than one typical shard of val
 /// features, far smaller than paper-scale checkpoint blocks (≈ 4 GB).
-/// One constant shared with [`crate::config::Config`] so the CLI and
-/// library defaults can't diverge.
-pub use crate::config::DEFAULT_MEM_BUDGET_MB;
+/// One constant shared with the top crate's `config::Config` (via
+/// `qless-core`, where it lives) so the CLI and library defaults can't
+/// diverge.
+pub use qless_core::DEFAULT_MEM_BUDGET_MB;
 
 /// Knobs of one influence scan (sharding, memory budget, kernel choice).
 #[derive(Debug, Clone, Copy, Default)]

@@ -1,0 +1,44 @@
+//! # qless-datastore — QLESS persistence + scoring layer
+//!
+//! The middle crate of the QLESS workspace (see the workspace
+//! `ARCHITECTURE.md` for the crate map). It owns everything that touches
+//! quantized gradient features at rest and in bulk:
+//!
+//! * [`datastore`] — the QLDS on-disk format (`FORMAT.md` in this crate
+//!   is compiled into its rustdoc), the random-access store, the
+//!   streaming multi-precision writer, the append-only live store with
+//!   generation manifests;
+//! * [`influence`] — the fused multi-query influence scan over a
+//!   datastore: integer-domain kernels, the XLA Pallas tile, and the
+//!   row-range scan API (`MultiScan::try_new_range`) the distributed
+//!   coordinator partitions on;
+//! * [`fixtures`] — the shared seeded-datastore test fixture the
+//!   datastore / influence / service suites build on.
+//!
+//! Only `qless-core` (and the vendored `anyhow`/`xla`) sit below this
+//! crate; the serving layer and the pipeline sit above it.
+#![warn(missing_docs)]
+
+pub mod datastore;
+pub mod fixtures;
+pub mod influence;
+
+pub use qless_core::{corpus, grads, quant, runtime, select};
+pub use qless_core::{debug, info, prop_assert, warn_, DEFAULT_MEM_BUDGET_MB};
+
+/// The `qless-core` util substrate, re-exported so intra-workspace code
+/// and downstream crates address one `util` namespace, with the
+/// property-test module widened to include this crate's on-disk fixture.
+pub mod util {
+    pub use qless_core::util::*;
+
+    /// Property-test harness plus the shared test fixtures: everything
+    /// from `qless_core::util::prop`, widened with the on-disk
+    /// [`seeded_datastore`](crate::fixtures::seeded_datastore) fixture.
+    pub mod prop {
+        pub use crate::fixtures::seeded_datastore;
+        pub use qless_core::util::prop::*;
+    }
+}
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,23 @@
+//! # qless-service — QLESS serving layer
+//!
+//! The serving crate of the QLESS workspace (see the workspace
+//! `ARCHITECTURE.md` for the crate map): everything that keeps a
+//! datastore warm in a process and answers influence queries over TCP.
+//! One module tree, [`service`], holds the resident [`service::Session`],
+//! the micro-[`service::Batcher`], the JSON-lines wire protocol
+//! (`PROTOCOL.md` in this crate is compiled into [`service::proto`]'s
+//! rustdoc), the single-node [`service::Server`], and the distributed
+//! scatter-gather [`service::Coordinator`].
+//!
+//! Below this crate sit `qless-datastore` (storage + fused scans) and
+//! `qless-core` (quant, select, util); the CLI and pipeline live above it
+//! in the top `qless` crate.
+#![warn(missing_docs)]
+
+pub mod service;
+
+pub use qless_core::{corpus, grads, quant, runtime, select};
+pub use qless_core::{debug, info, prop_assert, warn_, DEFAULT_MEM_BUDGET_MB};
+pub use qless_datastore::{datastore, fixtures, influence, util};
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -67,6 +67,10 @@ impl Default for BatcherOpts {
 
 struct Job {
     query: ScoreQuery,
+    /// Global row range the query scores (`None` = the full live store).
+    /// Only jobs with **equal** ranges fuse into one pass, so a batch is
+    /// always a single `answer_batch` or `answer_range` call.
+    rows: Option<(usize, usize)>,
     reply: mpsc::Sender<BatchResult>,
 }
 
@@ -119,10 +123,23 @@ impl Batcher {
         Batcher { shared, snapshot, worker: Mutex::new(Some(worker)), queue_cap }
     }
 
-    /// Enqueue one (already validated) query. Returns the channel its
-    /// [`BatchResult`] will arrive on, or an error when the queue is full
-    /// or the service is shutting down.
+    /// Enqueue one (already validated) query over the full live row
+    /// space. Returns the channel its [`BatchResult`] will arrive on, or
+    /// an error when the queue is full or the service is shutting down.
     pub fn submit(&self, query: ScoreQuery) -> Result<mpsc::Receiver<BatchResult>> {
+        self.submit_ranged(query, None)
+    }
+
+    /// [`Batcher::submit`] restricted to the global row range `[start,
+    /// start + len)` when `rows` is `Some` — the scatter-gather worker
+    /// path. Ranged jobs coalesce only with jobs carrying the **same**
+    /// range (a coordinator fans one logical query out as N identical
+    /// per-worker ranges, so in practice a worker's queue is homogeneous).
+    pub fn submit_ranged(
+        &self,
+        query: ScoreQuery,
+        rows: Option<(usize, usize)>,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
         let (tx, rx) = mpsc::channel();
         {
             let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
@@ -132,7 +149,7 @@ impl Batcher {
             if st.queue.len() >= self.queue_cap {
                 bail!("admission queue full ({} queries waiting)", self.queue_cap);
             }
-            st.queue.push_back(Job { query, reply: tx });
+            st.queue.push_back(Job { query, rows, reply: tx });
         }
         self.shared.arrived.notify_all();
         Ok(rx)
@@ -204,17 +221,27 @@ fn worker_loop(
                     .unwrap_or_else(|e| e.into_inner());
                 st = guard;
             }
-            let take = st.queue.len().min(max_batch);
+            // a batch is the longest front run sharing one row range, so
+            // it maps onto exactly one fused pass (full or ranged); jobs
+            // with a different range stay queued for the next iteration
+            let want = st.queue.front().map(|j| j.rows).expect("queue non-empty");
+            let mut take = 0;
+            while take < st.queue.len() && take < max_batch && st.queue[take].rows == want {
+                take += 1;
+            }
             st.queue.drain(..take).collect()
         };
+        let rows = batch.first().map(|j| j.rows).expect("batch non-empty");
         let (queries, repliers): (Vec<ScoreQuery>, Vec<mpsc::Sender<BatchResult>>) =
             batch.into_iter().map(|j| (j.query, j.reply)).unzip();
         // panic isolation: a scoring panic must not kill the only scoring
         // worker (queued + future queries would hang forever, wedging the
         // whole server) — it becomes an error broadcast to this batch's
         // riders, and the worker lives on
-        let result =
-            catch_unwind(AssertUnwindSafe(|| session.answer_batch(&queries)));
+        let result = catch_unwind(AssertUnwindSafe(|| match rows {
+            None => session.answer_batch(&queries),
+            Some((start, len)) => session.answer_range(&queries, start, len),
+        }));
         // publish stats before replying, so a client that just got its
         // answer reads a snapshot that already includes its batch (and
         // any generation reload the batch picked up)
@@ -311,6 +338,33 @@ mod tests {
             assert!(a.batched <= 2, "batched {} > max_batch", a.batched);
         }
         assert!(batcher.stats().batches >= 2);
+        batcher.close();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mixed_ranges_split_into_homogeneous_batches() {
+        let path = build_store("ranges", 16, 64);
+        let session = Session::open(&path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(300), max_batch: 16, queue_cap: 64 },
+        );
+        // one logical task, submitted full + as two half-ranges inside one
+        // admission window: ranges must not fuse across boundaries
+        let full = batcher.submit(query(64, 500)).unwrap();
+        let lo = batcher.submit_ranged(query(64, 500), Some((0, 8))).unwrap();
+        let hi = batcher.submit_ranged(query(64, 500), Some((8, 8))).unwrap();
+        let a_full = full.recv().unwrap().unwrap();
+        let a_lo = lo.recv().unwrap().unwrap();
+        let a_hi = hi.recv().unwrap().unwrap();
+        assert_eq!(a_full.scores.len(), 16);
+        assert_eq!(a_lo.scores.len(), 8);
+        assert_eq!(a_hi.scores.len(), 8);
+        // stitched ranged answers equal the full answer bit-exactly
+        assert_eq!(a_lo.scores[..], a_full.scores[..8]);
+        assert_eq!(a_hi.scores[..], a_full.scores[8..]);
+        assert_eq!(batcher.stats().batches, 3, "three distinct ranges, three passes");
         batcher.close();
         std::fs::remove_file(path).ok();
     }

@@ -1,0 +1,704 @@
+//! Scatter-gather serving: a coordinator front end that speaks the same
+//! JSON-lines protocol as `qless serve`, partitions the global row space
+//! across N single-node workers, fans every score query out as ranged
+//! sub-queries (the `rows` verb in `proto`), and merges the per-shard
+//! answers back into one reply that is **bit-identical** to a single-node
+//! scan of the whole store.
+//!
+//! Why this is exact and not approximate: influence scores are per-row
+//! (each row's quantized dot products against the task, scaled by η and
+//! summed over checkpoints), so scoring rows `[a, b)` on one worker and
+//! `[b, c)` on another touches disjoint state — there is no cross-row
+//! accumulation to re-order. Workers clip cached shards to their range
+//! with a zero-copy `RowsView::slice`, so the fed bytes per row are the
+//! bytes a single node would feed; the merged top-k uses the same
+//! `(score desc, index asc)` comparator as `select::top_k_scored`
+//! ([`crate::select::merge_top_k`]); and a stitched score vector is a
+//! plain concatenation in range order.
+//!
+//! Generation consistency under live ingest rides the datastore's
+//! append-only contract: rows never change once written and every
+//! generation adds rows strictly at the end, so two workers that have
+//! polled different generations of the **same** live store agree exactly
+//! on every row they both serve. Per query the coordinator probes its
+//! workers and serves `G = min(generation)`, `N = min(rows)` — the state
+//! every reachable worker can answer for — and `since_gen` filters
+//! resolve identically on every worker because the `(generation, row)`
+//! boundaries are shared.
+//!
+//! Failure handling is **re-issue with retry-then-degrade**: a worker
+//! that fails its probe or its sub-query is marked unhealthy and its row
+//! range is re-issued to a surviving worker (any worker can serve any
+//! range — they all hold the full store); after `retries` re-issue rounds
+//! a still-unanswered range degrades the query to an error response — a
+//! clean failure, never a silently truncated answer. A background health
+//! loop pings every worker and restores ones that come back.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::influence::ScanStats;
+use crate::select::merge_top_k;
+use crate::util::pool::TaskPool;
+use crate::{info, warn_};
+
+use super::proto::{self, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+use super::server::{serve_lines, Client, ServeOpts, Server};
+use super::session::ServiceStats;
+
+/// Tuning of the scatter-gather coordinator. CLI flags map 1:1 onto
+/// these fields; the top crate's `Config::coordinator_opts()` does the
+/// mapping.
+#[derive(Debug, Clone)]
+pub struct CoordinatorOpts {
+    /// Bind address of the coordinator's own front end, `host:port`
+    /// (port 0 = kernel-assigned ephemeral).
+    pub addr: String,
+    /// Worker addresses (`host:port` each). Every worker must serve the
+    /// same live datastore (same geometry; generations may lag).
+    pub workers: Vec<String>,
+    /// Bound of the connection-handler pool's queue.
+    pub queue_cap: usize,
+    /// Per-request deadline for any one worker round trip (connect,
+    /// send, receive); a worker that blows it is treated as failed.
+    pub deadline: Duration,
+    /// Re-issue rounds for a failed row range before the query degrades
+    /// to an error response.
+    pub retries: usize,
+}
+
+impl Default for CoordinatorOpts {
+    fn default() -> CoordinatorOpts {
+        CoordinatorOpts {
+            addr: "127.0.0.1:7410".into(),
+            workers: Vec::new(),
+            queue_cap: 256,
+            deadline: Duration::from_millis(2000),
+            retries: 2,
+        }
+    }
+}
+
+/// One registered worker: its address plus the health flag the scatter
+/// path and the background ping loop both maintain.
+struct WorkerSlot {
+    addr: String,
+    healthy: AtomicBool,
+}
+
+/// Shared state of a running coordinator.
+struct CoCtx {
+    workers: Vec<WorkerSlot>,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+    deadline: Duration,
+    retries: usize,
+    /// Geometry every worker agreed on at startup, for cheap local
+    /// admission validation (`k`, checkpoints, bits).
+    k: usize,
+    checkpoints: usize,
+    bits: u8,
+}
+
+/// Set the shutdown flag and nudge the blocking accept loop awake with a
+/// throwaway connection (same trick as the single-node server).
+fn trigger_shutdown(ctx: &CoCtx) {
+    ctx.shutdown.store(true, Ordering::SeqCst);
+    let mut target = ctx.addr;
+    if target.ip().is_unspecified() {
+        let loopback: std::net::IpAddr = if target.is_ipv4() {
+            std::net::Ipv4Addr::LOCALHOST.into()
+        } else {
+            std::net::Ipv6Addr::LOCALHOST.into()
+        };
+        target.set_ip(loopback);
+    }
+    let _ = TcpStream::connect(target);
+}
+
+/// A running scatter-gather coordinator. In `--local-workers` mode it
+/// also owns the worker [`Server`]s it spawned; dropping the coordinator
+/// (or [`Coordinator::stop`] + [`Coordinator::join`]) shuts the whole
+/// tree down deterministically.
+pub struct Coordinator {
+    ctx: Arc<CoCtx>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    health: Option<std::thread::JoinHandle<()>>,
+    local: Vec<Server>,
+}
+
+impl Coordinator {
+    /// Start a coordinator over already-running workers listed in
+    /// `opts.workers`. Every worker is probed once at startup; all must
+    /// be reachable and agree on store geometry (`k`, checkpoint count,
+    /// bitwidth) — refusing to start beats discovering a mismatched
+    /// fleet one wrong answer at a time.
+    pub fn start(opts: CoordinatorOpts) -> Result<Coordinator> {
+        Coordinator::start_owning(opts, Vec::new())
+    }
+
+    /// Single-process scatter-gather: spawn `n_workers` full
+    /// [`Server`]s on ephemeral loopback ports, all serving `datastore`,
+    /// and a coordinator over them. This is the `qless serve
+    /// --local-workers N` mode — the same code path as a distributed
+    /// deployment (real sockets, real protocol), which is what lets the
+    /// e2e suite property-test the merge against a single node.
+    pub fn start_local(
+        datastore: &Path,
+        n_workers: usize,
+        worker_opts: ServeOpts,
+        mut opts: CoordinatorOpts,
+    ) -> Result<Coordinator> {
+        anyhow::ensure!(n_workers > 0, "--local-workers must be at least 1");
+        let mut local = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            local.push(Server::start(
+                datastore,
+                ServeOpts { addr: "127.0.0.1:0".into(), ..worker_opts.clone() },
+            )?);
+        }
+        opts.workers = local.iter().map(|w| w.addr().to_string()).collect();
+        Coordinator::start_owning(opts, local)
+    }
+
+    fn start_owning(opts: CoordinatorOpts, local: Vec<Server>) -> Result<Coordinator> {
+        anyhow::ensure!(!opts.workers.is_empty(), "coordinator needs at least one worker");
+        let mut geom: Option<(usize, usize, u8)> = None;
+        for addr in &opts.workers {
+            let st = probe(addr, opts.deadline)
+                .with_context(|| format!("probing worker {addr} at startup"))?;
+            let g = (st.k, st.checkpoints, st.bits);
+            match geom {
+                None => geom = Some(g),
+                Some(have) => anyhow::ensure!(
+                    have == g,
+                    "worker {addr} serves k={} / {} checkpoints / {}-bit, fleet serves \
+                     k={} / {} checkpoints / {}-bit",
+                    g.0,
+                    g.1,
+                    g.2,
+                    have.0,
+                    have.1,
+                    have.2
+                ),
+            }
+        }
+        let (k, checkpoints, bits) = geom.expect("at least one worker probed");
+        let listener = TcpListener::bind(opts.addr.as_str())
+            .with_context(|| format!("binding coordinator {}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        let ctx = Arc::new(CoCtx {
+            workers: opts
+                .workers
+                .iter()
+                .map(|a| WorkerSlot { addr: a.clone(), healthy: AtomicBool::new(true) })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+            addr,
+            deadline: opts.deadline,
+            retries: opts.retries,
+            k,
+            checkpoints,
+            bits,
+        });
+        info!(
+            "coordinator: listening on {addr} over {} worker(s) (k={k}, {checkpoints} \
+             checkpoint(s), {bits}-bit, deadline {:?}, {} retries)",
+            ctx.workers.len(),
+            opts.deadline,
+            opts.retries,
+        );
+        let health = std::thread::Builder::new()
+            .name("qless-health".into())
+            .spawn({
+                let ctx = Arc::clone(&ctx);
+                move || health_loop(&ctx)
+            })
+            .expect("spawning health thread");
+        let pool = TaskPool::new("qless-coord", 8, opts.queue_cap);
+        let accept = std::thread::Builder::new()
+            .name("qless-coord-accept".into())
+            .spawn({
+                let ctx = Arc::clone(&ctx);
+                move || {
+                    for conn in listener.incoming() {
+                        if ctx.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match conn {
+                            Ok(stream) => {
+                                let ctx = Arc::clone(&ctx);
+                                let task = move || {
+                                    serve_lines(
+                                        stream,
+                                        &ctx.shutdown,
+                                        &|line| handle_line(line, &ctx),
+                                        &|| trigger_shutdown(&ctx),
+                                    )
+                                };
+                                if pool.execute(task).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(e) => warn_!("coordinator accept error: {e}"),
+                        }
+                    }
+                    drop(pool);
+                }
+            })
+            .expect("spawning coordinator accept thread");
+        Ok(Coordinator { ctx, accept: Some(accept), health: Some(health), local })
+    }
+
+    /// The coordinator's bound address (resolves port 0 to the actual
+    /// ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.ctx.addr
+    }
+
+    /// The worker [`Server`]s owned in `--local-workers` mode (empty for
+    /// a coordinator over remote workers). The failure e2e tests stop
+    /// one mid-run to exercise re-issue.
+    pub fn local_workers(&self) -> &[Server] {
+        &self.local
+    }
+
+    /// Begin shutdown without blocking. Local workers (if any) are shut
+    /// down by [`Coordinator::join`] / drop; remote workers are
+    /// independent services and keep running.
+    pub fn stop(&self) {
+        trigger_shutdown(&self.ctx);
+    }
+
+    /// Block until the coordinator (accept loop, handlers, health loop)
+    /// and any local workers have fully shut down.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("coordinator accept thread panicked"))?;
+        }
+        if let Some(h) = self.health.take() {
+            h.join().map_err(|_| anyhow::anyhow!("health thread panicked"))?;
+        }
+        for w in self.local.drain(..) {
+            w.stop();
+            w.join()?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        trigger_shutdown(&self.ctx);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.health.take() {
+            let _ = h.join();
+        }
+        // local Servers shut themselves down on drop
+    }
+}
+
+/// One stats round trip under the worker deadline.
+fn probe(addr: &str, deadline: Duration) -> Result<StatsReply> {
+    Client::connect_deadline(addr, deadline)?.stats()
+}
+
+/// Background worker liveness: ping every worker ~4×/second, flipping
+/// health flags both ways — a dead worker stops receiving ranges within
+/// one round, a revived one rejoins within one round.
+fn health_loop(ctx: &CoCtx) {
+    let ping_deadline = ctx.deadline.min(Duration::from_millis(500));
+    while !ctx.shutdown.load(Ordering::SeqCst) {
+        for slot in &ctx.workers {
+            let ok = Client::connect_deadline(slot.addr.as_str(), ping_deadline)
+                .and_then(|mut c| c.ping())
+                .is_ok();
+            let was = slot.healthy.swap(ok, Ordering::SeqCst);
+            if was != ok {
+                if ok {
+                    info!("coordinator: worker {} is back", slot.addr);
+                } else {
+                    warn_!("coordinator: worker {} unreachable", slot.addr);
+                }
+            }
+        }
+        // nap in small slices so shutdown stays responsive
+        for _ in 0..10 {
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+}
+
+/// Dispatch one coordinator request line (never panics; every failure
+/// becomes an error response).
+fn handle_line(line: &str, ctx: &CoCtx) -> Response {
+    let req = match proto::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return Response::Error {
+                id: proto::salvage_id(line),
+                error: format!("bad request: {e:#}"),
+            }
+        }
+    };
+    match req {
+        Request::Ping { id } => Response::Pong { id },
+        Request::Shutdown { id } => Response::ShuttingDown { id },
+        Request::Stats { id } => match scatter_stats(ctx) {
+            Ok(mut r) => {
+                r.id = id;
+                Response::Stats(r)
+            }
+            Err(e) => Response::Error { id, error: format!("{e:#}") },
+        },
+        Request::Score(r) => {
+            let id = r.id;
+            match scatter_score(&r, ctx) {
+                Ok(reply) => Response::Score(reply),
+                Err(e) => Response::Error { id, error: format!("{e:#}") },
+            }
+        }
+    }
+}
+
+/// Aggregate `stats` across the fleet: generation and row count are the
+/// **minimum** over reachable workers (the state every one of them can
+/// answer for — the same pin the scatter path serves), counters are
+/// summed, geometry comes from the startup agreement.
+fn scatter_stats(ctx: &CoCtx) -> Result<StatsReply> {
+    let states = probe_fleet(ctx)?;
+    let mut sum = ServiceStats::default();
+    for (_, st) in &states {
+        let s = &st.stats;
+        sum.queries += s.queries;
+        sum.batches += s.batches;
+        sum.fused_passes += s.fused_passes;
+        sum.score_cache_hits += s.score_cache_hits;
+        sum.score_cache_extends += s.score_cache_extends;
+        sum.shard_cache_hits += s.shard_cache_hits;
+        sum.disk_shard_reads += s.disk_shard_reads;
+        sum.shard_cache_bytes += s.shard_cache_bytes;
+        sum.rows_scored += s.rows_scored;
+        sum.reloads += s.reloads;
+    }
+    Ok(StatsReply {
+        id: 0, // caller stamps the request id
+        generation: states.iter().map(|(_, s)| s.generation).min().expect("non-empty"),
+        n_samples: states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty"),
+        k: ctx.k,
+        checkpoints: ctx.checkpoints,
+        bits: ctx.bits,
+        stats: sum,
+    })
+}
+
+/// Probe the fleet in parallel: every currently-healthy worker (all of
+/// them, as a second chance, when none is flagged healthy) gets one
+/// deadline-bounded `stats` round trip. Failures flip the health flag;
+/// at least one worker must answer. Returns `(worker index, reply)`.
+fn probe_fleet(ctx: &CoCtx) -> Result<Vec<(usize, StatsReply)>> {
+    let mut candidates: Vec<usize> = (0..ctx.workers.len())
+        .filter(|&i| ctx.workers[i].healthy.load(Ordering::SeqCst))
+        .collect();
+    if candidates.is_empty() {
+        candidates = (0..ctx.workers.len()).collect();
+    }
+    let probes: Vec<Result<StatsReply>> = std::thread::scope(|s| {
+        let handles: Vec<_> = candidates
+            .iter()
+            .map(|&i| {
+                let addr = ctx.workers[i].addr.as_str();
+                s.spawn(move || probe(addr, ctx.deadline))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("probe panicked"))))
+            .collect()
+    });
+    let mut states = Vec::new();
+    for (&i, res) in candidates.iter().zip(probes) {
+        match res {
+            Ok(st) => {
+                ctx.workers[i].healthy.store(true, Ordering::SeqCst);
+                states.push((i, st));
+            }
+            Err(e) => {
+                ctx.workers[i].healthy.store(false, Ordering::SeqCst);
+                warn_!("coordinator: worker {} failed probe: {e:#}", ctx.workers[i].addr);
+            }
+        }
+    }
+    if states.is_empty() {
+        bail!("no reachable workers (of {})", ctx.workers.len());
+    }
+    Ok(states)
+}
+
+/// Split `[0, n)` into `ways` contiguous ranges differing in length by at
+/// most one row (clamped so no range is empty).
+fn partition(n: usize, ways: usize) -> Vec<(usize, usize)> {
+    let ways = ways.clamp(1, n.max(1));
+    let base = n / ways;
+    let rem = n % ways;
+    let mut parts = Vec::with_capacity(ways);
+    let mut start = 0;
+    for i in 0..ways {
+        let len = base + usize::from(i < rem);
+        parts.push((start, len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    parts
+}
+
+/// One ranged sub-query against one worker, under the deadline.
+fn sub_score(
+    addr: &str,
+    req: &ScoreRequest,
+    start: usize,
+    len: usize,
+    deadline: Duration,
+) -> Result<ScoreReply> {
+    let mut c = Client::connect_deadline(addr, deadline)?;
+    let r = c.score_rows(
+        &req.val,
+        req.top_k,
+        req.want_scores,
+        req.since_gen,
+        Some((start as u64, len as u64)),
+    )?;
+    anyhow::ensure!(
+        r.rows == Some((start as u64, len as u64)),
+        "worker answered range {:?} for request range {start}+{len}",
+        r.rows
+    );
+    if req.want_scores {
+        let got = r.scores.as_ref().map_or(0, Vec::len);
+        anyhow::ensure!(got == len, "worker returned {got} scores for a {len}-row range");
+    }
+    Ok(r)
+}
+
+/// The scatter-gather hot path: probe → pin `(G, N)` → partition → fan
+/// out → re-issue failures → merge (see the module docs for why the
+/// merge is bit-exact).
+fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
+    if req.rows.is_some() {
+        bail!("coordinator does not accept ranged (worker) requests");
+    }
+    // admission checks mirroring ScoreQuery::validate's geometry half, so
+    // a malformed query dies here instead of fanning out N times
+    anyhow::ensure!(
+        req.val.len() == ctx.checkpoints,
+        "query has {} checkpoint feature sets, workers serve {}",
+        req.val.len(),
+        ctx.checkpoints
+    );
+    for (ci, m) in req.val.iter().enumerate() {
+        anyhow::ensure!(
+            m.k == ctx.k,
+            "checkpoint {ci}: feature dim {} != served k {}",
+            m.k,
+            ctx.k
+        );
+    }
+    let states = probe_fleet(ctx)?;
+    let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
+    let n = states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty");
+    anyhow::ensure!(n > 0, "workers serve an empty store");
+    let parts = partition(n, states.len());
+    // first wave: part i → the i-th reachable worker, all in parallel
+    let mut results: Vec<Option<ScoreReply>> = std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, len))| {
+                let slot = &ctx.workers[states[i].0];
+                s.spawn(move || {
+                    let res = sub_score(slot.addr.as_str(), req, start, len, ctx.deadline);
+                    if let Err(e) = &res {
+                        slot.healthy.store(false, Ordering::SeqCst);
+                        warn_!(
+                            "coordinator: worker {} failed rows {start}+{len}: {e:#}",
+                            slot.addr
+                        );
+                    }
+                    res.ok()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+    });
+    // re-issue failed ranges to surviving workers, round-robin, up to
+    // `retries` rounds; anything still unanswered degrades to an error
+    let mut cursor = 0usize;
+    for _round in 0..ctx.retries {
+        let pending: Vec<usize> =
+            (0..parts.len()).filter(|&i| results[i].is_none()).collect();
+        if pending.is_empty() {
+            break;
+        }
+        for pi in pending {
+            let (start, len) = parts[pi];
+            let healthy: Vec<&WorkerSlot> = ctx
+                .workers
+                .iter()
+                .filter(|w| w.healthy.load(Ordering::SeqCst))
+                .collect();
+            if healthy.is_empty() {
+                bail!("rows {start}..{} unanswered and no workers left", start + len);
+            }
+            let slot = healthy[cursor % healthy.len()];
+            cursor += 1;
+            match sub_score(slot.addr.as_str(), req, start, len, ctx.deadline) {
+                Ok(r) => results[pi] = Some(r),
+                Err(e) => {
+                    slot.healthy.store(false, Ordering::SeqCst);
+                    warn_!(
+                        "coordinator: re-issue of rows {start}+{len} to {} failed: {e:#}",
+                        slot.addr
+                    );
+                }
+            }
+        }
+    }
+    if let Some(pi) = results.iter().position(Option::is_none) {
+        let (start, len) = parts[pi];
+        bail!(
+            "rows {start}..{} unanswered after {} re-issue round(s)",
+            start + len,
+            ctx.retries
+        );
+    }
+    let replies: Vec<ScoreReply> = results.into_iter().map(|r| r.expect("checked")).collect();
+    // merge: summed I/O, comparator-exact top-k, concatenated scores
+    let mut pass = ScanStats::default();
+    for r in &replies {
+        pass.checkpoints = pass.checkpoints.max(r.pass.checkpoints);
+        pass.tasks = pass.tasks.max(r.pass.tasks);
+        pass.shards_read += r.pass.shards_read;
+        pass.rows_read += r.pass.rows_read;
+        pass.bytes_read += r.pass.bytes_read;
+    }
+    let tops: Vec<Vec<(usize, f32)>> = replies.iter().map(|r| r.top.clone()).collect();
+    let scores = if req.want_scores {
+        let mut full = vec![0f32; n];
+        for (r, &(start, len)) in replies.iter().zip(&parts) {
+            let s = r.scores.as_deref().expect("length checked in sub_score");
+            full[start..start + len].copy_from_slice(s);
+        }
+        Some(full)
+    } else {
+        None
+    };
+    Ok(ScoreReply {
+        id: req.id,
+        generation,
+        cached: false,
+        batched: replies.iter().map(|r| r.batched).max().unwrap_or(0),
+        pass,
+        rows: None,
+        top: merge_top_k(&tops, req.top_k),
+        scores,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Precision, Scheme};
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
+    use std::path::PathBuf;
+
+    #[test]
+    fn partition_covers_the_row_space_contiguously() {
+        for n in [1usize, 2, 5, 23, 64, 100] {
+            for ways in [1usize, 2, 3, 7, 200] {
+                let parts = partition(n, ways);
+                assert!(!parts.is_empty());
+                assert!(parts.len() <= ways.min(n));
+                let mut next = 0;
+                for &(start, len) in &parts {
+                    assert_eq!(start, next, "contiguous");
+                    assert!(len > 0, "no empty ranges");
+                    next = start + len;
+                }
+                assert_eq!(next, n, "covers [0, {n})");
+                let (lo, hi) = parts
+                    .iter()
+                    .fold((usize::MAX, 0), |(lo, hi), &(_, l)| (lo.min(l), hi.max(l)));
+                assert!(hi - lo <= 1, "balanced within one row");
+            }
+        }
+    }
+
+    fn build_store(tag: &str, n: usize, k: usize) -> PathBuf {
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "qless_coord_{tag}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        seeded_datastore(&path, p, n, k, &[0.7, 0.3], 0);
+        path
+    }
+
+    #[test]
+    fn local_coordinator_merges_to_the_single_node_answer() {
+        let (n, k) = (29usize, 64usize);
+        let path = build_store("merge", n, k);
+        let worker_opts = ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 0,
+            workers: 2,
+            shard_rows: 5,
+            ..Default::default()
+        };
+        // single node reference
+        let single = Server::start(&path, worker_opts.clone()).unwrap();
+        let val = vec![feats(2, k, 11), feats(2, k, 12)];
+        let mut sc = Client::connect(single.addr()).unwrap();
+        let want = sc.score(&val, 7, true).unwrap();
+        // 3 local workers behind a coordinator
+        let co = Coordinator::start_local(
+            &path,
+            3,
+            worker_opts,
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(co.local_workers().len(), 3);
+        let mut c = Client::connect(co.addr()).unwrap();
+        c.ping().unwrap();
+        let got = c.score(&val, 7, true).unwrap();
+        assert_eq!(got.top, want.top, "merged top-k vs single node");
+        let (a, b) = (got.scores.unwrap(), want.scores.unwrap());
+        assert_eq!(a.len(), n);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "merged scores bit-identical");
+        }
+        // the scatter read every row exactly once per checkpoint
+        assert_eq!(got.pass.rows_read, (2 * n) as u64);
+        // fleet stats aggregate
+        let st = c.stats().unwrap();
+        assert_eq!(st.n_samples, n);
+        assert_eq!(st.k, k);
+        assert_eq!(st.checkpoints, 2);
+        c.shutdown().unwrap();
+        co.join().unwrap();
+        single.stop();
+        single.join().unwrap();
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -24,24 +24,32 @@
 //!   [`crate::influence::MultiScan`] so cached shards can feed it.
 //! * [`cache`] — the LRU + task-digest machinery both caches share.
 //! * [`proto`] — the JSON-lines wire format (normative spec:
-//!   `rust/PROTOCOL.md`, included as its rustdoc).
+//!   `rust/crates/qless-service/PROTOCOL.md`, included as its rustdoc).
 //! * [`server`] — the std-only TCP front end (blocking accept loop +
 //!   `util::pool::TaskPool` handlers) and the [`Client`] the tests and the
 //!   load bench drive.
+//! * [`coordinator`] — scatter-gather serving over N workers: the
+//!   coordinator speaks the same wire protocol, partitions the row space,
+//!   fans queries out as ranged sub-queries, re-issues failed ranges, and
+//!   merges per-shard answers bit-exactly (`qless serve --local-workers N`
+//!   runs the whole topology in one process).
 //!
 //! Served scores are **bit-identical** to the one-shot `--multi-scan`
 //! pipeline: same kernels, same `RowsView` bytes (cached or streamed),
 //! same per-row accumulation order — `tests/service_e2e.rs` asserts it
-//! end-to-end over real sockets.
+//! end-to-end over real sockets, and `tests/serve_scatter.rs` extends the
+//! assertion across worker counts, worker kills, and mid-query ingests.
 
 pub mod batcher;
 pub mod cache;
+pub mod coordinator;
 pub mod proto;
 pub mod server;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherOpts, SessionView};
 pub use cache::{task_digest, LruCache};
+pub use coordinator::{Coordinator, CoordinatorOpts};
 pub use proto::{Request, Response, ScoreReply, ScoreRequest, StatsReply};
 pub use server::{Client, ServeOpts, Server};
 pub use session::{Answer, ScoreQuery, ServiceStats, Session, SessionOpts};

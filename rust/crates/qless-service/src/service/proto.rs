@@ -1,6 +1,6 @@
 //! Wire format of the influence query service: **JSON-lines over TCP**.
 //!
-//! The normative request/response grammar is `rust/PROTOCOL.md` —
+//! The normative request/response grammar is `rust/crates/qless-service/PROTOCOL.md` —
 //! included verbatim below, so its example exchange runs as a doctest
 //! against this parser and the spec can never drift from the code. Edit
 //! the markdown file, not this header.
@@ -59,6 +59,11 @@ pub struct ScoreRequest {
     /// Restrict the top list to rows **newer than this generation**
     /// (incremental selection after an ingest); `None` ranks every row.
     pub since_gen: Option<u64>,
+    /// Restrict scoring to the global row range `[start, start + len)` —
+    /// the scatter-gather **worker** verb (see `super::coordinator`).
+    /// `top` indices stay global; a returned `scores` vector covers only
+    /// the range. `None` scores every live row.
+    pub rows: Option<(u64, u64)>,
     /// One raw `n × k` feature matrix per warmup checkpoint, in order.
     pub val: Vec<FeatureMatrix>,
 }
@@ -76,7 +81,11 @@ pub struct ScoreReply {
     pub batched: usize,
     /// I/O accounting of the producing pass (zeroed on a cache hit).
     pub pass: ScanStats,
-    /// The `top_k` highest-scoring `(sample index, score)` pairs.
+    /// Echo of the request's row range on a ranged (worker) answer; a
+    /// `scores` payload, if present, is local to it.
+    pub rows: Option<(u64, u64)>,
+    /// The `top_k` highest-scoring `(sample index, score)` pairs
+    /// (**global** indices, even on a ranged answer).
     pub top: Vec<(usize, f32)>,
     /// Full per-sample scores, present iff the request set `"scores":true`.
     pub scores: Option<Vec<f32>>,
@@ -156,6 +165,10 @@ fn f32s_json(xs: &[f32]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
 }
 
+fn rows_json(start: u64, len: u64) -> Json {
+    Json::Arr(vec![Json::Num(start as f64), Json::Num(len as f64)])
+}
+
 fn matrix_json(m: &FeatureMatrix) -> Json {
     let mut o = Json::obj();
     o.set("n", m.n).set("k", m.k).set("data", f32s_json(&m.data));
@@ -199,6 +212,9 @@ pub fn encode_request(req: &Request) -> String {
             if let Some(g) = r.since_gen {
                 o.set("since_gen", g as f64);
             }
+            if let Some((start, len)) = r.rows {
+                o.set("rows", rows_json(start, len));
+            }
             o.set("val", Json::Arr(r.val.iter().map(matrix_json).collect()));
         }
         Request::Stats { id } => {
@@ -226,6 +242,9 @@ pub fn encode_response(resp: &Response) -> String {
                 .set("cached", r.cached)
                 .set("batched", r.batched)
                 .set("pass", scan_stats_json(&r.pass));
+            if let Some((start, len)) = r.rows {
+                o.set("rows", rows_json(start, len));
+            }
             let top: Vec<Json> = r
                 .top
                 .iter()
@@ -289,6 +308,19 @@ fn parse_matrix(j: &Json) -> Result<FeatureMatrix> {
     Ok(FeatureMatrix { n, k, data })
 }
 
+fn parse_rows(j: &Json) -> Result<Option<(u64, u64)>> {
+    match j.get("rows") {
+        Some(v) => {
+            let a = v.as_arr()?;
+            if a.len() != 2 {
+                bail!("'rows' must be [start, len], got {} entries", a.len());
+            }
+            Ok(Some((a[0].as_usize()? as u64, a[1].as_usize()? as u64)))
+        }
+        None => Ok(None),
+    }
+}
+
 fn parse_scan_stats(j: &Json) -> Result<ScanStats> {
     Ok(ScanStats {
         checkpoints: j.req("checkpoints")?.as_usize()?,
@@ -341,13 +373,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 Some(v) => Some(v.as_usize()? as u64),
                 None => None,
             };
+            let rows = parse_rows(&j)?;
             let val = j
                 .req("val")?
                 .as_arr()?
                 .iter()
                 .map(parse_matrix)
                 .collect::<Result<Vec<_>>>()?;
-            Ok(Request::Score(ScoreRequest { id, top_k, want_scores, since_gen, val }))
+            Ok(Request::Score(ScoreRequest { id, top_k, want_scores, since_gen, rows, val }))
         }
         "stats" => Ok(Request::Stats { id }),
         "ping" => Ok(Request::Ping { id }),
@@ -393,6 +426,7 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 cached,
                 batched: j.req("batched")?.as_usize()?,
                 pass: parse_scan_stats(j.req("pass")?)?,
+                rows: parse_rows(&j)?,
                 top,
                 scores,
             }))
@@ -429,6 +463,7 @@ mod tests {
             top_k: 7,
             want_scores: true,
             since_gen: Some(3),
+            rows: Some((120, 64)),
             val: vec![mat(2, 8, 1), mat(3, 8, 2)],
         });
         let line = encode_request(&req);
@@ -440,6 +475,7 @@ mod tests {
                 assert_eq!(r.top_k, 7);
                 assert!(r.want_scores);
                 assert_eq!(r.since_gen, Some(3));
+                assert_eq!(r.rows, Some((120, 64)));
                 assert_eq!(r.val.len(), 2);
                 match &req {
                     Request::Score(orig) => {
@@ -488,6 +524,7 @@ mod tests {
                 rows_read: 96,
                 bytes_read: 12_480,
             },
+            rows: Some((32, 9)),
             top: vec![(7, scores[7]), (0, scores[0])],
             scores: Some(scores.clone()),
         });
@@ -500,6 +537,7 @@ mod tests {
                 assert_eq!(r.batched, 3);
                 assert_eq!(r.pass.shards_read, 14);
                 assert_eq!(r.pass.rows_read, 96);
+                assert_eq!(r.rows, Some((32, 9)), "ranged answers echo the range");
                 assert_eq!(r.top, vec![(7, scores[7]), (0, scores[0])]);
                 let got = r.scores.unwrap();
                 for (x, y) in scores.iter().zip(&got) {
@@ -563,6 +601,9 @@ mod tests {
         assert!(parse_response("{\"id\":1}").is_err()); // no ok
         assert_eq!(salvage_id("garbage"), 0);
         assert_eq!(salvage_id("{\"id\":31,\"op\":\"?\"}"), 31);
+        // rows must be a 2-element array
+        let bad = "{\"op\":\"score\",\"rows\":[4],\"val\":[{\"n\":1,\"k\":1,\"data\":[1]}]}";
+        assert!(parse_request(bad).is_err());
     }
 
     #[test]
@@ -574,6 +615,7 @@ mod tests {
                 assert_eq!(r.top_k, 0);
                 assert!(!r.want_scores);
                 assert_eq!(r.since_gen, None, "no filter by default");
+                assert_eq!(r.rows, None, "full row space by default");
                 assert_eq!(r.val[0].data, vec![0.5, 1.0]);
             }
             other => panic!("wrong variant {other:?}"),

@@ -35,8 +35,8 @@ use super::batcher::{Batcher, BatcherOpts};
 use super::proto::{self, Request, Response, ScoreReply, ScoreRequest, StatsReply};
 use super::session::{ScoreQuery, ServiceStats, Session, SessionOpts};
 
-/// Tuning of `qless serve`. CLI flags map 1:1 onto the config fields
-/// [`ServeOpts::from_config`] reads.
+/// Tuning of `qless serve`. CLI flags map 1:1 onto these fields; the top
+/// crate's `Config::serve_opts()` does the mapping.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     /// Bind address, `host:port` (port 0 = kernel-assigned ephemeral).
@@ -65,25 +65,9 @@ impl Default for ServeOpts {
             batch_window_ms: 2,
             max_batch_tasks: 16,
             shard_rows: 0,
-            mem_budget_mb: crate::config::DEFAULT_MEM_BUDGET_MB,
+            mem_budget_mb: crate::DEFAULT_MEM_BUDGET_MB,
             score_cache_entries: 64,
             workers: 8,
-            queue_cap: 256,
-        }
-    }
-}
-
-impl ServeOpts {
-    /// Build serve options from the CLI-facing [`crate::config::Config`].
-    pub fn from_config(cfg: &crate::config::Config) -> ServeOpts {
-        ServeOpts {
-            addr: cfg.serve_addr.clone(),
-            batch_window_ms: cfg.batch_window_ms,
-            max_batch_tasks: cfg.max_batch_tasks,
-            shard_rows: cfg.shard_rows,
-            mem_budget_mb: cfg.mem_budget_mb,
-            score_cache_entries: cfg.score_cache_entries,
-            workers: cfg.workers,
             queue_cap: 256,
         }
     }
@@ -249,11 +233,19 @@ impl Drop for Server {
 const MAX_LINE_BYTES: usize = 64 << 20;
 
 /// Serve one connection: JSON-lines request/response until EOF, a fatal
-/// I/O error, or shutdown. Read timeouts bound how long a quiet keep-alive
-/// connection can delay shutdown; a partial line survives timeouts intact;
-/// a line over [`MAX_LINE_BYTES`] gets an error response and the
-/// connection is dropped (there is no way to resync mid-line).
-fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
+/// I/O error, or shutdown — shared by the single-node server and the
+/// scatter-gather coordinator (`super::coordinator`), which differ only
+/// in how a line becomes a response. Read timeouts bound how long a quiet
+/// keep-alive connection can delay shutdown; a partial line survives
+/// timeouts intact; a line over [`MAX_LINE_BYTES`] gets an error response
+/// and the connection is dropped (there is no way to resync mid-line).
+/// `on_shutdown` fires once, after a `ShuttingDown` ack has been flushed.
+pub(crate) fn serve_lines(
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    dispatch: &dyn Fn(&str) -> Response,
+    on_shutdown: &dyn Fn(),
+) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut reader = match stream.try_clone() {
@@ -284,7 +276,7 @@ fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
                 // serve this final request, then close
                 let eof = !line.ends_with('\n');
                 if !line.trim().is_empty() {
-                    let resp = handle_line(&line, &ctx);
+                    let resp = dispatch(&line);
                     let shutting_down = matches!(resp, Response::ShuttingDown { .. });
                     let mut out = proto::encode_response(&resp);
                     out.push('\n');
@@ -292,7 +284,7 @@ fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
                         return;
                     }
                     if shutting_down {
-                        trigger_shutdown(&ctx);
+                        on_shutdown();
                         return;
                     }
                 }
@@ -302,7 +294,7 @@ fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
                 line.clear();
                 // re-check after every served request too: a continuously
                 // active connection must not stall shutdown past one request
-                if ctx.shutdown.load(Ordering::SeqCst) {
+                if shutdown.load(Ordering::SeqCst) {
                     return;
                 }
             }
@@ -312,13 +304,23 @@ fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
             {
                 // idle poll: any bytes read before the timeout stay in
                 // `line` and the next read continues the same request
-                if ctx.shutdown.load(Ordering::SeqCst) {
+                if shutdown.load(Ordering::SeqCst) {
                     return;
                 }
             }
             Err(_) => return,
         }
     }
+}
+
+/// Serve one single-node connection (see [`serve_lines`]).
+fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>) {
+    serve_lines(
+        stream,
+        &ctx.shutdown,
+        &|line| handle_line(line, &ctx),
+        &|| trigger_shutdown(&ctx),
+    );
 }
 
 /// Dispatch one request line to a response (never panics; every failure
@@ -357,18 +359,49 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
     if let Err(e) = query.validate(&ctx.header) {
         return Response::Error { id: req.id, error: format!("invalid query: {e:#}") };
     }
-    let rx = match ctx.batcher.submit(query) {
+    let rows = req.rows.map(|(s, l)| (s as usize, l as usize));
+    let rx = match ctx.batcher.submit_ranged(query, rows) {
         Ok(rx) => rx,
         Err(e) => return Response::Error { id: req.id, error: format!("{e:#}") },
     };
     match rx.recv() {
         Ok(Ok(ans)) => {
-            // `since_gen` restricts the top list to rows newer than the
-            // named generation (resolved against the answer's own member
-            // map, so it cannot race a concurrent ingest)
-            let first_row = match req.since_gen {
-                None => 0,
-                Some(g) => ans.first_row_after(g),
+            let (top, scores) = match rows {
+                None => {
+                    // `since_gen` restricts the top list to rows newer
+                    // than the named generation (resolved against the
+                    // answer's own member map, so it cannot race a
+                    // concurrent ingest)
+                    let first_row = match req.since_gen {
+                        None => 0,
+                        Some(g) => ans.first_row_after(g),
+                    };
+                    let top = top_k_scored_since(&ans.scores, req.top_k, first_row);
+                    (top, req.want_scores.then(|| ans.scores.as_ref().clone()))
+                }
+                Some((start, len)) => {
+                    // ranged (worker) answer: `ans.scores[j]` is global
+                    // row `start + j`; rank the local slice and lift the
+                    // winners back to global indices so a coordinator can
+                    // merge per-worker tops directly
+                    let first_global = match req.since_gen {
+                        None => start,
+                        Some(g) => ans
+                            .gen_rows
+                            .iter()
+                            .filter(|(g2, _)| *g2 > g)
+                            .map(|(_, row)| *row)
+                            .min()
+                            .unwrap_or(start + len)
+                            .max(start),
+                    };
+                    let from_local = (first_global - start).min(len);
+                    let mut top = top_k_scored_since(&ans.scores, req.top_k, from_local);
+                    for entry in &mut top {
+                        entry.0 += start;
+                    }
+                    (top, req.want_scores.then(|| ans.scores.as_ref().clone()))
+                }
             };
             Response::Score(ScoreReply {
                 id: req.id,
@@ -376,8 +409,9 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
                 cached: ans.cached,
                 batched: ans.batched,
                 pass: ans.pass,
-                top: top_k_scored_since(&ans.scores, req.top_k, first_row),
-                scores: if req.want_scores { Some(ans.scores.as_ref().clone()) } else { None },
+                rows: req.rows,
+                top,
+                scores,
             })
         }
         Ok(Err(msg)) => Response::Error { id: req.id, error: msg },
@@ -407,9 +441,43 @@ impl Client {
         Ok(Client { reader, writer: stream, next_id: 0 })
     }
 
+    /// [`Client::connect`] with `deadline` bounding connection
+    /// establishment **and** installed as the socket read/write timeout —
+    /// the coordinator's worker-facing constructor, so one dead or
+    /// wedged worker can stall a scatter by at most the deadline.
+    pub fn connect_deadline<A: ToSocketAddrs>(addr: A, deadline: Duration) -> Result<Client> {
+        let mut last: Option<std::io::Error> = None;
+        for a in addr.to_socket_addrs().context("resolving server address")? {
+            match TcpStream::connect_timeout(&a, deadline) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    stream.set_read_timeout(Some(deadline))?;
+                    stream.set_write_timeout(Some(deadline))?;
+                    let reader = BufReader::new(stream.try_clone()?);
+                    return Ok(Client { reader, writer: stream, next_id: 0 });
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => Err(e).context("connecting to qless serve"),
+            None => bail!("address resolved to nothing"),
+        }
+    }
+
     fn bump(&mut self) -> u64 {
         self.next_id += 1;
         self.next_id
+    }
+
+    /// Bound every subsequent socket read and write (`None` = block
+    /// forever). The coordinator uses this as its per-request worker
+    /// deadline. A timed-out roundtrip leaves the connection
+    /// desynchronized — drop the client and reconnect.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
     }
 
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
@@ -446,9 +514,32 @@ impl Client {
         want_scores: bool,
         since_gen: Option<u64>,
     ) -> Result<ScoreReply> {
+        self.score_rows(val, top_k, want_scores, since_gen, None)
+    }
+
+    /// The full-knob score call: [`Client::score_since`] plus an optional
+    /// global row range — the verb a scatter-gather coordinator issues to
+    /// its workers. With `rows = Some((start, len))` the server scores
+    /// only rows `start .. start + len`; `top` indices are global, and a
+    /// requested score vector covers only the range (`scores[j]` is row
+    /// `start + j`).
+    pub fn score_rows(
+        &mut self,
+        val: &[FeatureMatrix],
+        top_k: usize,
+        want_scores: bool,
+        since_gen: Option<u64>,
+        rows: Option<(u64, u64)>,
+    ) -> Result<ScoreReply> {
         let id = self.bump();
-        let req =
-            Request::Score(ScoreRequest { id, top_k, want_scores, since_gen, val: val.to_vec() });
+        let req = Request::Score(ScoreRequest {
+            id,
+            top_k,
+            want_scores,
+            since_gen,
+            rows,
+            val: val.to_vec(),
+        });
         match self.roundtrip(&req)? {
             Response::Score(r) => {
                 anyhow::ensure!(r.id == id, "response id {} for request {id}", r.id);

@@ -57,7 +57,7 @@ impl Default for SessionOpts {
     fn default() -> SessionOpts {
         SessionOpts {
             shard_rows: 0,
-            mem_budget_mb: crate::config::DEFAULT_MEM_BUDGET_MB,
+            mem_budget_mb: crate::DEFAULT_MEM_BUDGET_MB,
             score_cache_entries: 64,
         }
     }
@@ -410,14 +410,76 @@ impl Session {
         Ok(answers.into_iter().map(|a| a.expect("every query answered")).collect())
     }
 
+    /// Answer one micro-batch of (already validated) queries over the
+    /// global row range `start .. start + len` **only** — the worker half
+    /// of scatter-gather serving ([`super::coordinator`]). Identical
+    /// queries within the batch are deduplicated into one fused ranged
+    /// pass; shards overlapping the range are served from the same pinned
+    /// shard cache as full scans (whole shards are cached, so a worker
+    /// re-assigned a neighbouring range after a peer failure reuses
+    /// everything it already has), and each fed shard is clipped to the
+    /// range intersection with a zero-copy
+    /// [`crate::datastore::RowsView::slice`], so the pass reads and scores
+    /// exactly `len` rows per checkpoint.
+    ///
+    /// Returned answers are range-local: `scores[j]` is global row
+    /// `start + j`, and `scores.len() == len`. The full-vector score
+    /// cache is bypassed (`cached` is always false) — merged-answer
+    /// caching is the coordinator's job, at its own layer.
+    pub fn answer_range(
+        &mut self,
+        queries: &[ScoreQuery],
+        start: usize,
+        len: usize,
+    ) -> Result<Vec<Answer>> {
+        self.poll_generation();
+        self.stats.batches += 1;
+        self.stats.queries += queries.len() as u64;
+        let n = self.live.n_rows();
+        anyhow::ensure!(len > 0, "empty row range");
+        let end = start
+            .checked_add(len)
+            .filter(|e| *e <= n)
+            .with_context(|| format!("row range {start}+{len} exceeds live rows {n}"))?;
+        debug_assert!(end <= n);
+        let generation = self.live.generation();
+        let digests: Vec<u64> = queries.iter().map(|q| q.digest()).collect();
+        let mut distinct: Vec<u64> = Vec::new();
+        for d in &digests {
+            if !distinct.contains(d) {
+                distinct.push(*d);
+            }
+        }
+        let tasks: Vec<&[FeatureMatrix]> = distinct
+            .iter()
+            .map(|d| {
+                let i = digests.iter().position(|x| x == d).expect("digest from this batch");
+                queries[i].val.as_slice()
+            })
+            .collect();
+        let (totals, pass) = self.scan_range(&tasks, start, len)?;
+        let shared: Vec<Arc<Vec<f32>>> = totals.into_iter().map(Arc::new).collect();
+        let batched = distinct.len();
+        Ok(digests
+            .iter()
+            .map(|d| {
+                let t = distinct.iter().position(|x| x == d).expect("distinct covers digests");
+                Answer {
+                    scores: Arc::clone(&shared[t]),
+                    generation,
+                    gen_rows: Arc::clone(&self.gen_rows),
+                    cached: false,
+                    batched,
+                    pass,
+                }
+            })
+            .collect())
+    }
+
     /// One fused multi-task pass over the live rows `from_row ..
     /// n_rows()` (`from_row` must be a generation boundary; 0 = the whole
-    /// store), preferring pinned shards: cache hits feed the scan
-    /// straight from RAM; misses are read with a seek-based
-    /// [`crate::datastore::ShardReader`], fed, and pinned for the next
-    /// pass (LRU-evicted under the byte budget). Members entirely below
-    /// `from_row` are skipped — a tail scan never touches pre-ingest
-    /// bytes.
+    /// store). The range degenerates to whole shards here, so this is the
+    /// clip-free fast path the full-store and tail-extension scans ride.
     fn scan_fused(
         &mut self,
         tasks: &[&[FeatureMatrix]],
@@ -425,36 +487,67 @@ impl Session {
     ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
         debug_assert!(self.live.is_generation_boundary(from_row));
         let n = self.live.n_rows();
-        let mut scan = MultiScan::try_new_range(self.live.header(), tasks, from_row, n - from_row)?;
+        self.scan_range(tasks, from_row, n - from_row)
+    }
+
+    /// One fused multi-task pass over the global rows `start .. start +
+    /// len`, preferring pinned shards: cache hits feed the scan straight
+    /// from RAM; misses are read with a seek-based
+    /// [`crate::datastore::ShardReader`], fed, and pinned for the next
+    /// pass (LRU-evicted under the byte budget). Members outside the
+    /// range are skipped entirely, and within an overlapping member only
+    /// the shards intersecting the range are touched; a shard straddling
+    /// a range edge is fed through a clipped
+    /// [`crate::datastore::RowsView::slice`] (the cache still pins the
+    /// whole shard, so neighbouring ranges share it). Stats therefore
+    /// count exactly the rows inside the range.
+    fn scan_range(
+        &mut self,
+        tasks: &[&[FeatureMatrix]],
+        start: usize,
+        len: usize,
+    ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+        let end = start + len;
+        let mut scan = MultiScan::try_new_range(self.live.header(), tasks, start, len)?;
         for ci in 0..self.etas.len() {
             let eta = self.etas[ci];
             for (mi, member) in self.live.members().iter().enumerate() {
                 let m_rows = member.ds.n_samples();
-                if member.start_row + m_rows <= from_row {
+                let m_lo = member.start_row;
+                if m_lo + m_rows <= start || m_lo >= end {
                     continue;
                 }
-                let n_shards = m_rows.div_ceil(self.rows_per_shard).max(1);
+                // shard indices of this member intersecting [start, end)
+                let lo_local = start.saturating_sub(m_lo);
+                let hi_local = (end - m_lo).min(m_rows);
+                let si_lo = lo_local / self.rows_per_shard;
+                let si_hi = hi_local.div_ceil(self.rows_per_shard);
                 let mut reader = None;
-                for si in 0..n_shards {
+                for si in si_lo..si_hi {
                     let key = (mi, ci, si);
-                    if let Some(shard) = self.shard_cache.get(&key) {
+                    let owned = if let Some(shard) = self.shard_cache.get(&key) {
                         self.stats.shard_cache_hits += 1;
-                        scan.feed(ci, eta, member.start_row + shard.start, &shard.rows());
-                        continue;
-                    }
-                    if reader.is_none() {
-                        reader = Some(member.ds.shard_reader(ci, self.rows_per_shard)?);
-                    }
-                    let r = reader.as_mut().expect("reader just opened");
-                    r.seek_to_row(si * self.rows_per_shard);
-                    let shard = r.next_shard()?.with_context(|| {
-                        format!("shard {si} of checkpoint {ci} (member {mi}) out of range")
-                    })?;
-                    let owned = Arc::new(shard.to_owned_shard());
-                    self.stats.disk_shard_reads += 1;
-                    scan.feed(ci, eta, member.start_row + owned.start, &owned.rows());
-                    let weight = owned.byte_weight();
-                    self.shard_cache.insert(key, owned, weight);
+                        shard
+                    } else {
+                        if reader.is_none() {
+                            reader = Some(member.ds.shard_reader(ci, self.rows_per_shard)?);
+                        }
+                        let r = reader.as_mut().expect("reader just opened");
+                        r.seek_to_row(si * self.rows_per_shard);
+                        let shard = r.next_shard()?.with_context(|| {
+                            format!("shard {si} of checkpoint {ci} (member {mi}) out of range")
+                        })?;
+                        let owned = Arc::new(shard.to_owned_shard());
+                        self.stats.disk_shard_reads += 1;
+                        let weight = owned.byte_weight();
+                        self.shard_cache.insert(key, Arc::clone(&owned), weight);
+                        owned
+                    };
+                    let view = owned.rows();
+                    let s_lo = m_lo + owned.start;
+                    let a = start.max(s_lo) - s_lo;
+                    let b = (end.min(s_lo + view.n())) - s_lo;
+                    scan.feed(ci, eta, s_lo + a, &view.slice(a, b));
                 }
             }
         }
@@ -588,6 +681,45 @@ mod tests {
         let again = sess.answer_batch(&batch).unwrap();
         assert_eq!(again[0].scores, answers[0].scores);
         assert!(!again[0].cached);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn ranged_answers_match_full_scan_slices_bit_exactly() {
+        // The scatter-gather worker contract: scores for rows
+        // `start..start+len` must equal the same slice of a full-store
+        // scan, bit for bit, for ranges that straddle shard boundaries
+        // (shards are 5 rows here, ranges deliberately are not).
+        let (n, k) = (23usize, 64usize);
+        let path = build_store(4, n, k, &[0.7, 0.3], "range");
+        let opts = SessionOpts { shard_rows: 5, mem_budget_mb: 4, score_cache_entries: 8 };
+        let mut sess = Session::open(&path, opts).unwrap();
+        let q = ScoreQuery { val: task(k, 700, 2) };
+        let full = sess.answer_batch(std::slice::from_ref(&q)).unwrap();
+        for (start, len) in [(0usize, n), (0, 7), (3, 9), (7, 11), (20, 3), (22, 1)] {
+            let part = sess.answer_range(std::slice::from_ref(&q), start, len).unwrap();
+            assert!(!part[0].cached, "ranged answers bypass the score cache");
+            assert_eq!(part[0].scores.len(), len);
+            assert_eq!(
+                part[0].scores[..],
+                full[0].scores[start..start + len],
+                "range {start}+{len} vs full-scan slice"
+            );
+            assert_eq!(
+                part[0].pass.rows_read,
+                (2 * len) as u64,
+                "range {start}+{len} must score only its own rows"
+            );
+        }
+        // batch dedup still applies on the ranged path
+        let pair = vec![q.clone(), q.clone()];
+        let both = sess.answer_range(&pair, 3, 9).unwrap();
+        assert_eq!(both[0].batched, 1, "identical ranged queries fuse");
+        assert_eq!(both[0].scores, both[1].scores);
+        // malformed ranges fail cleanly
+        assert!(sess.answer_range(std::slice::from_ref(&q), 0, 0).is_err());
+        assert!(sess.answer_range(std::slice::from_ref(&q), 20, 4).is_err());
+        assert!(sess.answer_range(std::slice::from_ref(&q), usize::MAX, 2).is_err());
         std::fs::remove_file(path).ok();
     }
 

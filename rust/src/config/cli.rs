@@ -89,10 +89,24 @@ USAGE: qless serve [--key value ...]
   --workers N             connection-handler threads (default: cores ≤ 8)
   --bits N / --scheme S / --run-dir DIR    select the default datastore path
 
-Wire protocol: one JSON object per line (spec: rust/PROTOCOL.md; example
-exchange: README.md §serve). Served datastores are live: a `qless ingest`
-into the same run-dir is picked up without restart (responses carry the
-generation; `since_gen` ranks only newer rows).
+SCATTER-GATHER (distributed serving; same protocol, same answers)
+  --local-workers N       spawn N in-process scan workers on ephemeral
+                          loopback ports and serve through a coordinator
+                          that splits every scan across them (0 = off)
+  --worker-addrs LIST     comma-separated host:port of already-running
+                          remote workers to coordinate instead (mutually
+                          exclusive with --local-workers)
+  --worker-deadline-ms N  per-worker round-trip deadline; a worker that
+                          misses it is failed and its row range re-issued
+                          (default 2000)
+  --worker-retries N      re-issue rounds for a failed row range before
+                          the query degrades to an error (default 2)
+
+Wire protocol: one JSON object per line (spec:
+rust/crates/qless-service/PROTOCOL.md; example exchange: README.md
+§serve). Served datastores are live: a `qless ingest` into the same
+run-dir is picked up without restart (responses carry the generation;
+`since_gen` ranks only newer rows).
 ";
 
 /// The usage text for a subcommand: serve has its own flag set; everything
@@ -324,6 +338,28 @@ mod tests {
         assert_eq!(c.config.score_cache_entries, 16);
         assert_eq!(c.config.datastore, "runs/x/ds.qlds");
         assert!(p(&["serve", "--max-batch-tasks", "0"]).is_err()); // validate()
+    }
+
+    #[test]
+    fn scatter_gather_flags_parse() {
+        let c = p(&[
+            "serve",
+            "--local-workers",
+            "3",
+            "--worker-deadline-ms",
+            "500",
+            "--worker-retries",
+            "1",
+        ])
+        .unwrap();
+        assert_eq!(c.config.local_workers, 3);
+        assert_eq!(c.config.worker_deadline_ms, 500);
+        assert_eq!(c.config.worker_retries, 1);
+        let c2 = p(&["serve", "--worker-addrs", "10.0.0.1:7411,10.0.0.2:7411"]).unwrap();
+        assert_eq!(c2.config.worker_addr_list().len(), 2);
+        // mutually exclusive (validate())
+        assert!(p(&["serve", "--local-workers", "2", "--worker-addrs", "h:1"]).is_err());
+        assert!(usage_for("serve").contains("--local-workers"));
     }
 
     #[test]

@@ -10,8 +10,9 @@ use anyhow::{bail, Context, Result};
 use crate::quant::Scheme;
 
 /// Default influence-scan memory budget (MiB). Shared by [`Config`] and
-/// `influence::ScoreOpts` so the CLI and library paths shard identically.
-pub const DEFAULT_MEM_BUDGET_MB: usize = 64;
+/// `influence::ScoreOpts` so the CLI and library paths shard identically
+/// (defined once in `qless-core`, the bottom of the workspace).
+pub use qless_core::DEFAULT_MEM_BUDGET_MB;
 
 /// Everything an end-to-end QLESS run needs. Field names double as config
 /// file keys (`key = value`, `#` comments) and `--key value` CLI overrides
@@ -94,6 +95,21 @@ pub struct Config {
     /// Serve: datastore file to serve; empty = the pipeline's default
     /// path under `run_dir` for the configured bits/scheme.
     pub datastore: String,
+    /// Serve: spawn N in-process scan workers behind a scatter-gather
+    /// coordinator (0 = single-node resident serving). Each worker serves
+    /// the same datastore; the coordinator partitions the row space.
+    pub local_workers: usize,
+    /// Serve: comma-separated `host:port` list of already-running remote
+    /// scan workers to coordinate (empty = none). Mutually exclusive with
+    /// `local_workers`.
+    pub worker_addrs: String,
+    /// Serve: per-worker request deadline in milliseconds; a worker that
+    /// misses it is treated as failed and its row range re-issued.
+    pub worker_deadline_ms: u64,
+    /// Serve: how many times a failed/timed-out row range is re-issued to
+    /// the remaining healthy workers before the query degrades to an
+    /// error response.
+    pub worker_retries: usize,
 }
 
 impl Default for Config {
@@ -129,6 +145,10 @@ impl Default for Config {
             max_batch_tasks: 16,
             score_cache_entries: 64,
             datastore: String::new(),
+            local_workers: 0,
+            worker_addrs: String::new(),
+            worker_deadline_ms: 2000,
+            worker_retries: 2,
         }
     }
 }
@@ -171,6 +191,10 @@ impl Config {
         "max_batch_tasks",
         "score_cache_entries",
         "datastore",
+        "local_workers",
+        "worker_addrs",
+        "worker_deadline_ms",
+        "worker_retries",
     ];
 
     /// Apply one `key = value` (file) or `--key value` (CLI) assignment.
@@ -232,6 +256,10 @@ impl Config {
             "max_batch_tasks" => self.max_batch_tasks = parse(v, &key)?,
             "score_cache_entries" => self.score_cache_entries = parse(v, &key)?,
             "datastore" => self.datastore = v.to_string(),
+            "local_workers" => self.local_workers = parse(v, &key)?,
+            "worker_addrs" => self.worker_addrs = v.to_string(),
+            "worker_deadline_ms" => self.worker_deadline_ms = parse(v, &key)?,
+            "worker_retries" => self.worker_retries = parse(v, &key)?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -288,7 +316,64 @@ impl Config {
         if self.serve_addr.is_empty() {
             bail!("serve_addr must be host:port (port 0 for ephemeral)");
         }
+        if self.local_workers > 0 && !self.worker_addrs.is_empty() {
+            bail!("local_workers and worker_addrs are mutually exclusive");
+        }
+        if self.local_workers > 64 {
+            bail!("local_workers {} — over 64 in one process is surely a typo", self.local_workers);
+        }
+        if self.worker_deadline_ms == 0 || self.worker_deadline_ms > 600_000 {
+            bail!(
+                "worker_deadline_ms must be in [1, 600000], got {}",
+                self.worker_deadline_ms
+            );
+        }
+        if !self.worker_addrs.is_empty() {
+            for a in self.worker_addrs.split(',') {
+                let a = a.trim();
+                if a.is_empty() || !a.contains(':') {
+                    bail!("worker_addrs entry '{a}' is not host:port");
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The list form of [`Self::worker_addrs`] (trimmed, empty = none).
+    pub fn worker_addr_list(&self) -> Vec<String> {
+        if self.worker_addrs.is_empty() {
+            Vec::new()
+        } else {
+            self.worker_addrs.split(',').map(|a| a.trim().to_string()).collect()
+        }
+    }
+
+    /// Map the serve-facing config fields onto the serving crate's
+    /// [`qless_service::service::ServeOpts`] (the layered workspace keeps
+    /// `qless-service` below this crate, so the mapping lives here).
+    pub fn serve_opts(&self) -> qless_service::service::ServeOpts {
+        qless_service::service::ServeOpts {
+            addr: self.serve_addr.clone(),
+            batch_window_ms: self.batch_window_ms,
+            max_batch_tasks: self.max_batch_tasks,
+            shard_rows: self.shard_rows,
+            mem_budget_mb: self.mem_budget_mb,
+            score_cache_entries: self.score_cache_entries,
+            workers: self.workers,
+            queue_cap: 256,
+        }
+    }
+
+    /// Map the coordinator-facing config fields onto the serving crate's
+    /// [`qless_service::service::CoordinatorOpts`].
+    pub fn coordinator_opts(&self) -> qless_service::service::CoordinatorOpts {
+        qless_service::service::CoordinatorOpts {
+            addr: self.serve_addr.clone(),
+            workers: self.worker_addr_list(),
+            queue_cap: 256,
+            deadline: std::time::Duration::from_millis(self.worker_deadline_ms),
+            retries: self.worker_retries,
+        }
     }
 
     /// The bitwidths a datastore build targets: the `--bits` list when one
@@ -541,6 +626,65 @@ mod tests {
         assert_eq!(c.method_label(), "QLESS 1-bit");
         c.bits = 4;
         assert!(c.method_label().starts_with("QLESS 4-bit"));
+    }
+
+    #[test]
+    fn distributed_serve_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.local_workers, 0); // single-node resident serving
+        assert!(c.worker_addrs.is_empty());
+        assert_eq!(c.worker_deadline_ms, 2000);
+        assert_eq!(c.worker_retries, 2);
+        assert!(c.worker_addr_list().is_empty());
+        c.set("local-workers", "3").unwrap();
+        c.set("worker-deadline-ms", "500").unwrap();
+        c.set("worker-retries", "1").unwrap();
+        assert_eq!((c.local_workers, c.worker_deadline_ms, c.worker_retries), (3, 500, 1));
+        c.validate().unwrap();
+        // local_workers and worker_addrs are mutually exclusive
+        c.set("worker-addrs", "10.0.0.1:7411, 10.0.0.2:7411").unwrap();
+        assert!(c.validate().is_err());
+        c.set("local_workers", "0").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.worker_addr_list(), vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
+        // malformed address entries rejected
+        c.set("worker_addrs", "nocolon").unwrap();
+        assert!(c.validate().is_err());
+        c.set("worker_addrs", "").unwrap();
+        // deadline bounds
+        c.set("worker_deadline_ms", "0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("worker_deadline_ms", "700000").unwrap();
+        assert!(c.validate().is_err());
+        c.set("worker_deadline_ms", "2000").unwrap();
+        c.set("local_workers", "65").unwrap();
+        assert!(c.validate().is_err());
+        assert!(c.set("worker_retries", "many").is_err());
+    }
+
+    #[test]
+    fn serve_and_coordinator_opts_map_the_config() {
+        let mut c = Config::default();
+        c.set("serve-addr", "127.0.0.1:0").unwrap();
+        c.set("batch-window-ms", "5").unwrap();
+        c.set("shard-rows", "33").unwrap();
+        c.set("worker-deadline-ms", "750").unwrap();
+        c.set("worker-retries", "4").unwrap();
+        let so = c.serve_opts();
+        assert_eq!(so.addr, "127.0.0.1:0");
+        assert_eq!(so.batch_window_ms, 5);
+        assert_eq!(so.shard_rows, 33);
+        assert_eq!(so.max_batch_tasks, c.max_batch_tasks);
+        assert_eq!(so.mem_budget_mb, c.mem_budget_mb);
+        assert_eq!(so.score_cache_entries, c.score_cache_entries);
+        assert_eq!(so.workers, c.workers);
+        let co = c.coordinator_opts();
+        assert_eq!(co.addr, "127.0.0.1:0");
+        assert_eq!(co.deadline, std::time::Duration::from_millis(750));
+        assert_eq!(co.retries, 4);
+        assert!(co.workers.is_empty());
+        c.set("worker-addrs", "10.0.0.1:7411,10.0.0.2:7411").unwrap();
+        assert_eq!(c.coordinator_opts().workers, vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
     }
 
     #[test]

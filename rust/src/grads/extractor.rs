@@ -20,19 +20,7 @@ use crate::model::Checkpoint;
 use crate::runtime::{ModelInfo, Runtime};
 use crate::{debug, info};
 
-/// Dense `[n × k]` feature matrix for one checkpoint.
-#[derive(Debug, Clone)]
-pub struct FeatureMatrix {
-    pub n: usize,
-    pub k: usize,
-    pub data: Vec<f32>,
-}
-
-impl FeatureMatrix {
-    pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.k..(i + 1) * self.k]
-    }
-}
+pub use qless_core::grads::FeatureMatrix;
 
 /// Extract Adam-preconditioned projected gradients Γ(z;θ)·R for every
 /// sample of `data` at checkpoint `ckpt` (paper §2.2 / Eq. 1) into a dense

@@ -12,6 +12,7 @@ pub mod projector;
 
 pub use extractor::{
     extract_train_features, extract_train_features_stream, extract_train_features_stream_from,
-    extract_val_features, FeatureMatrix,
+    extract_val_features,
 };
 pub use projector::Projector;
+pub use qless_core::grads::FeatureMatrix;

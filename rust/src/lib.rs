@@ -3,56 +3,66 @@
 //! Rust reproduction of *"QLESS: A Quantized Approach for Data Valuation and
 //! Selection in Large Language Model Fine-Tuning"* (cs.LG 2025).
 //!
-//! Three-layer architecture (see `ARCHITECTURE.md` for the module map and
-//! `DESIGN.md` for the numbered design notes):
+//! Since the workspace split this is the **top crate** of a four-crate
+//! cargo workspace (see `ARCHITECTURE.md` for the crate map and
+//! `DESIGN.md` for the numbered design notes), with dependency edges only
+//! pointing downward:
 //!
-//! * **L3 (this crate)** — the data-valuation pipeline coordinator: corpus
-//!   generation, warmup training, sharded gradient-feature extraction,
-//!   quantized gradient datastore, multi-query influence scoring on the
-//!   integer-domain kernels, top-p% selection, fine-tuning and benchmark
-//!   evaluation — plus the resident query service (`qless serve`) that
-//!   keeps a datastore warm and answers influence queries over TCP
-//!   ([`service`]). Python never runs here.
-//! * **L2 (python/compile)** — SimLM (causal transformer + LoRA) fwd/bwd in
-//!   JAX, AOT-lowered once to HLO text artifacts.
-//! * **L1 (python/compile/kernels)** — Pallas kernels for quantization and
-//!   the cosine-similarity influence matmul, lowered inside the L2 graphs.
+//! * **`qless` (this crate)** — the data-valuation pipeline coordinator:
+//!   corpus plumbing, warmup training, sharded gradient-feature
+//!   extraction, top-p% selection analyses, fine-tuning and benchmark
+//!   evaluation, experiments, and the CLI. Python never runs here.
+//! * **`qless-service`** — the resident query service (`qless serve`):
+//!   warm sessions, micro-batching, the JSON-lines protocol, the TCP
+//!   server, and the distributed scatter-gather coordinator.
+//! * **`qless-datastore`** — the QLDS on-disk format, the live
+//!   append-only store + generation manifests, and the fused multi-query
+//!   influence scans.
+//! * **`qless-core`** — quantization, deterministic top-k selection, the
+//!   PJRT runtime executing the AOT-lowered HLO artifacts, the synthetic
+//!   corpus, and the zero-dependency util substrate.
 //!
-//! The [`runtime`] module loads `artifacts/*.hlo.txt` through the PJRT C API
-//! (`xla` crate) and executes them from the hot path.
+//! The lower crates' module trees are re-exported here under their
+//! pre-split names (`qless::datastore`, `qless::influence`,
+//! `qless::service`, `qless::quant`, …), so downstream code, the tests,
+//! the benches and the examples address one crate.
+//!
+//! Below the Rust workspace sit **L2 (python/compile)** — SimLM (causal
+//! transformer + LoRA) fwd/bwd in JAX, AOT-lowered once to HLO text
+//! artifacts — and **L1 (python/compile/kernels)** — Pallas kernels for
+//! quantization and the cosine-similarity influence matmul, lowered
+//! inside the L2 graphs. The [`runtime`] module loads `artifacts/*.hlo.txt`
+//! through the PJRT C API (`xla` crate) and executes them from the hot
+//! path.
 #![warn(missing_docs)]
 
 // Modules below carry `allow(missing_docs)` until their rustdoc pass lands;
-// the data-path modules (datastore → quant → influence → select) are fully
-// documented and the crate-level warn keeps them that way.
+// the re-exported data-path crates (datastore → quant → influence →
+// select → service) are fully documented and each crate's own
+// `#![warn(missing_docs)]` keeps them that way.
 #[allow(missing_docs)]
 pub mod baselines;
 #[allow(missing_docs)]
 pub mod config;
 #[allow(missing_docs)]
-pub mod corpus;
-#[allow(missing_docs)]
 pub mod data;
-pub mod datastore;
 #[allow(missing_docs)]
 pub mod eval;
 #[allow(missing_docs)]
 pub mod experiments;
 #[allow(missing_docs)]
 pub mod grads;
-pub mod influence;
 #[allow(missing_docs)]
 pub mod model;
 #[allow(missing_docs)]
 pub mod pipeline;
-pub mod quant;
-#[allow(missing_docs)]
-pub mod runtime;
 pub mod select;
-pub mod service;
 #[allow(missing_docs)]
 pub mod train;
-#[allow(missing_docs)]
-pub mod util;
+
+pub use qless_core::{corpus, quant, runtime};
+pub use qless_core::{debug, info, prop_assert, warn_};
+pub use qless_datastore::{datastore, fixtures, influence, util};
+pub use qless_service::service;
 
 pub use anyhow::{anyhow, bail, Context, Result};

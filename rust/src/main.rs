@@ -99,6 +99,9 @@ fn dispatch(cli: &Cli) -> Result<()> {
 
 /// `qless serve` — start the resident influence query service over the
 /// configured datastore and block until a client sends `shutdown`.
+/// With `--local-workers N` (or `--worker-addrs`) it starts the
+/// scatter-gather coordinator instead: same wire protocol, same
+/// answers, N workers splitting every scan.
 fn serve(cli: &Cli) -> Result<()> {
     let cfg = &cli.config;
     let path = if cfg.datastore.is_empty() {
@@ -107,7 +110,39 @@ fn serve(cli: &Cli) -> Result<()> {
     } else {
         std::path::PathBuf::from(&cfg.datastore)
     };
-    let server = qless::service::Server::start(&path, qless::service::ServeOpts::from_config(cfg))?;
+    if cfg.local_workers > 0 || !cfg.worker_addrs.is_empty() {
+        // in local mode each worker binds its own ephemeral port; the
+        // coordinator takes the configured serve address
+        let mut worker_opts = cfg.serve_opts();
+        worker_opts.addr = "127.0.0.1:0".into();
+        let co = if cfg.local_workers > 0 {
+            qless::service::Coordinator::start_local(
+                &path,
+                cfg.local_workers,
+                worker_opts,
+                cfg.coordinator_opts(),
+            )?
+        } else {
+            qless::service::Coordinator::start(cfg.coordinator_opts())?
+        };
+        println!(
+            "qless serve: coordinator on {} over {} worker(s){}",
+            co.addr(),
+            co.local_workers().len().max(cfg.worker_addr_list().len()),
+            if cfg.local_workers > 0 {
+                format!(" (local, from {})", path.display())
+            } else {
+                String::new()
+            },
+        );
+        println!(
+            "try: echo '{{\"op\":\"ping\",\"id\":1}}' | nc {} {}",
+            co.addr().ip(),
+            co.addr().port()
+        );
+        return co.join();
+    }
+    let server = qless::service::Server::start(&path, cfg.serve_opts())?;
     let h = server.header();
     println!(
         "qless serve: listening on {} — {} samples × k={} × {} checkpoints at {} \

@@ -1,9 +1,16 @@
 //! Data selection — QLESS step 4: rank the corpus by cumulative influence
 //! and keep the top p% (paper: 5%), plus the analyses built on top of it
 //! (subset composition for Fig. 5, budget sweeps for Fig. 4).
+//!
+//! The ranking primitives themselves (top-k with deterministic
+//! tie-breaking, the scatter-gather merge) live in `qless_core::select`
+//! and are re-exported here; only the corpus-aware
+//! [`SourceDistribution`] analysis needs this crate.
 
 pub mod distribution;
-pub mod topk;
 
 pub use distribution::SourceDistribution;
-pub use topk::{select_top_frac, top_k_indices, top_k_scored, top_k_scored_since};
+pub use qless_core::select::topk;
+pub use qless_core::select::{
+    merge_top_k, select_top_frac, top_k_indices, top_k_scored, top_k_scored_since,
+};

@@ -17,14 +17,21 @@ use qless::config::cli::usage_for;
 use qless::config::Config;
 
 /// The documentation set under sync enforcement. Paths are relative to
-/// the crate root (`rust/`); the README sits one level up.
+/// the repository root; the normative specs live with the workspace
+/// crates that compile them into rustdoc.
 const DOCS: &[(&str, &str)] = &[
     ("README.md", include_str!("../../README.md")),
     ("rust/ARCHITECTURE.md", include_str!("../ARCHITECTURE.md")),
     ("rust/DESIGN.md", include_str!("../DESIGN.md")),
     ("rust/EXPERIMENTS.md", include_str!("../EXPERIMENTS.md")),
-    ("rust/FORMAT.md", include_str!("../FORMAT.md")),
-    ("rust/PROTOCOL.md", include_str!("../PROTOCOL.md")),
+    (
+        "rust/crates/qless-datastore/FORMAT.md",
+        include_str!("../crates/qless-datastore/FORMAT.md"),
+    ),
+    (
+        "rust/crates/qless-service/PROTOCOL.md",
+        include_str!("../crates/qless-service/PROTOCOL.md"),
+    ),
 ];
 
 /// Collect every `--flag` token on `line` into `out`.
@@ -107,7 +114,9 @@ fn relative_markdown_links_resolve() {
     let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
     let repo_root = crate_root.parent().expect("crate lives in repo/rust");
     for (name, text) in DOCS {
-        let doc_dir = if name.starts_with("rust/") { crate_root } else { repo_root };
+        // resolve each doc's links against its OWN directory, wherever in
+        // the workspace it lives — the spec docs moved into their crates
+        let doc_dir = repo_root.join(Path::new(name).parent().expect("repo-relative path"));
         let mut i = 0usize;
         while let Some(pos) = text[i..].find("](") {
             let start = i + pos + 2;
@@ -138,10 +147,11 @@ fn spec_docs_are_included_in_rustdoc() {
     // rustdoc of their modules (their examples run as doctests). Guard
     // the include wiring itself: the markdown files must contain the
     // examples the modules promise.
-    let (_, format_md) = DOCS.iter().find(|(n, _)| *n == "rust/FORMAT.md").unwrap();
+    let (_, format_md) = DOCS.iter().find(|(n, _)| n.ends_with("FORMAT.md")).unwrap();
     assert!(format_md.contains("```rust"), "FORMAT.md lost its doctest example");
     assert!(format_md.contains("51 4c 44 53"), "FORMAT.md lost its hex dump");
-    let (_, proto_md) = DOCS.iter().find(|(n, _)| *n == "rust/PROTOCOL.md").unwrap();
+    let (_, proto_md) = DOCS.iter().find(|(n, _)| n.ends_with("PROTOCOL.md")).unwrap();
     assert!(proto_md.contains("```rust"), "PROTOCOL.md lost its doctest example");
     assert!(proto_md.contains("since_gen"), "PROTOCOL.md lost the generation filter");
+    assert!(proto_md.contains("rows"), "PROTOCOL.md lost the scatter-gather worker verb");
 }

@@ -1,0 +1,447 @@
+//! Scatter-gather serving acceptance suite — the distributed layer's
+//! contract on top of `tests/service_e2e.rs`:
+//!
+//! * **merge is exact**: a coordinator over 1..=3 local workers returns
+//!   score vectors and top-k lists **byte-identical** to a direct
+//!   `score_datastore_tasks` call — property-tested across worker count
+//!   × bitwidth × scheme × shard geometry;
+//! * **failures re-issue, answers never change**: a worker that fails its
+//!   sub-query (fault-injecting fake) or dies outright (killed local
+//!   worker) has its row range re-issued to a survivor and the merged
+//!   answer stays bit-identical; when no worker can answer, the query
+//!   degrades to a clean error — never a truncated answer;
+//! * **generations pin consistently mid-ingest**: with workers on
+//!   *different* generations of the same live store, every merged answer
+//!   is the single-node answer for `(min generation, min rows)` —
+//!   `since_gen` included — and the fleet converges as workers poll.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use qless::datastore::{default_store_path, SegmentWriter};
+use qless::grads::FeatureMatrix;
+use qless::influence::{score_datastore_tasks, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::select::{top_k_scored, top_k_scored_since};
+use qless::service::proto::{encode_response, parse_request, Request, Response};
+use qless::service::{
+    Client, Coordinator, CoordinatorOpts, ServeOpts, Server, ServiceStats, StatsReply,
+};
+use qless::util::prop::{normal_features as feats, run_prop, seeded_datastore};
+
+fn tmp(tag: &str, name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "qless_scatter_{tag}_{name}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+fn task(k: usize, ckpts: usize, seed: u64) -> Vec<FeatureMatrix> {
+    (0..ckpts).map(|ci| feats(2, k, seed * 10 + ci as u64)).collect()
+}
+
+fn worker_opts(shard_rows: usize) -> ServeOpts {
+    ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        batch_window_ms: 0,
+        workers: 2,
+        shard_rows,
+        ..Default::default()
+    }
+}
+
+fn co_opts() -> CoordinatorOpts {
+    CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
+/// The CI smoke: coordinator + 3 local workers + one query, merged answer
+/// equals the direct library scan bit-for-bit.
+#[test]
+fn smoke_three_workers_match_direct_scan() {
+    let (n, k) = (26usize, 64usize);
+    let p = Precision::new(4, Scheme::Absmax).unwrap();
+    let path = tmp("smoke", "store.qlds");
+    let ds = seeded_datastore(&path, p, n, k, &[0.7, 0.3], 7);
+    let val = task(k, 2, 3);
+    let (want, _) = score_datastore_tasks(
+        &ds,
+        &[val.as_slice()],
+        ScoreOpts { shard_rows: 5, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    drop(ds);
+
+    let co = Coordinator::start_local(&path, 3, worker_opts(5), co_opts()).unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+    let r = c.score(&val, 4, true).unwrap();
+    assert_eq!(r.top, top_k_scored(&want[0], 4));
+    for (j, (a, b)) in want[0].iter().zip(r.scores.as_ref().unwrap()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {j}");
+    }
+    assert!(r.rows.is_none(), "the coordinator's reply is a plain (unranged) answer");
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+/// The merge-exactness property: across worker count × bitwidth × scheme
+/// × shard geometry × task count, merged scores and merged top-k equal
+/// the direct fused scan bit-for-bit.
+#[test]
+fn prop_merged_answers_byte_identical_across_worker_counts() {
+    run_prop("scatter-merge-invariant", 8, |g| {
+        let bits = [1u8, 2, 4, 8, 16][g.rng.below(5)];
+        let scheme = match bits {
+            1 => Scheme::Sign,
+            16 => Scheme::Absmax,
+            _ => {
+                if g.rng.below(2) == 0 {
+                    Scheme::Absmax
+                } else {
+                    Scheme::Absmean
+                }
+            }
+        };
+        let p = Precision::new(bits, scheme).unwrap();
+        let n = 6 + g.usize_up_to(34);
+        let k = 64usize;
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.9 - 0.4 * c as f32).collect();
+        let path = tmp("prop", &format!("{bits}b_{scheme:?}.qlds"));
+        let ds = seeded_datastore(&path, p, n, k, &etas, 1000 + bits as u64);
+
+        let q = 1 + g.rng.below(3);
+        let tasks: Vec<Vec<FeatureMatrix>> =
+            (0..q).map(|t| task(k, ckpts, 40 + t as u64)).collect();
+        let refs: Vec<&[FeatureMatrix]> = tasks.iter().map(|t| t.as_slice()).collect();
+        let (want, _) = score_datastore_tasks(&ds, &refs, ScoreOpts::default(), None).unwrap();
+        drop(ds);
+
+        let workers = 1 + g.rng.below(3);
+        let shard_rows = 1 + g.rng.below(n + 2);
+        let co =
+            Coordinator::start_local(&path, workers, worker_opts(shard_rows), co_opts()).unwrap();
+        let mut c = Client::connect(co.addr()).unwrap();
+        for (t, val) in tasks.iter().enumerate() {
+            let kk = 1 + g.rng.below(n + 2);
+            let r = c.score(val, kk, true).unwrap();
+            prop_assert!(
+                r.top == top_k_scored(&want[t], kk),
+                "{bits}-bit {scheme:?} workers={workers} task {t}: merged top-{kk} differs"
+            );
+            let got = r.scores.as_ref().unwrap();
+            prop_assert!(got.len() == n, "score vector length");
+            for (j, (a, b)) in want[t].iter().zip(got).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{bits}-bit {scheme:?} workers={workers} shard_rows={shard_rows} \
+                     task {t} sample {j}: merged {b} != direct {a}"
+                );
+            }
+        }
+        c.shutdown().unwrap();
+        co.join().unwrap();
+        std::fs::remove_file(path).ok();
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// A protocol-conformant worker that answers `ping` and `stats` (so it
+/// passes startup probes and health checks) but fails **every** score
+/// sub-query with an error response — the deterministic way to force the
+/// coordinator's re-issue path, which a genuinely dead worker cannot
+/// (a dead worker fails its pre-query probe and is excluded up front).
+struct FakeWorker {
+    addr: SocketAddr,
+    score_hits: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FakeWorker {
+    fn start(k: usize, checkpoints: usize, bits: u8, n: usize, generation: u64) -> FakeWorker {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let score_hits = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = std::thread::spawn({
+            let (hits, stop) = (Arc::clone(&score_hits), Arc::clone(&stop));
+            move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let hits = Arc::clone(&hits);
+                    std::thread::spawn(move || {
+                        let mut reader = BufReader::new(stream.try_clone().unwrap());
+                        let mut writer = stream;
+                        let mut line = String::new();
+                        loop {
+                            line.clear();
+                            match reader.read_line(&mut line) {
+                                Ok(0) | Err(_) => break,
+                                Ok(_) if line.trim().is_empty() => continue,
+                                Ok(_) => {}
+                            }
+                            let resp = match parse_request(&line) {
+                                Ok(Request::Ping { id }) => Response::Pong { id },
+                                Ok(Request::Stats { id }) => Response::Stats(StatsReply {
+                                    id,
+                                    generation,
+                                    n_samples: n,
+                                    k,
+                                    checkpoints,
+                                    bits,
+                                    stats: ServiceStats::default(),
+                                }),
+                                Ok(Request::Score(r)) => {
+                                    hits.fetch_add(1, Ordering::SeqCst);
+                                    Response::Error {
+                                        id: r.id,
+                                        error: "injected fault: scores unavailable".into(),
+                                    }
+                                }
+                                Ok(Request::Shutdown { id }) => Response::ShuttingDown { id },
+                                Err(_) => continue,
+                            };
+                            let mut out = encode_response(&resp);
+                            out.push('\n');
+                            if writer.write_all(out.as_bytes()).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+            }
+        });
+        FakeWorker { addr, score_hits, stop, accept: Some(accept) }
+    }
+
+    fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A worker that passes probes but fails its sub-query gets its range
+/// re-issued to a survivor — and the merged answer is byte-identical to
+/// the no-fault answer.
+#[test]
+fn failed_subquery_is_reissued_and_the_answer_is_unchanged() {
+    let (n, k) = (31usize, 64usize);
+    let p = Precision::new(4, Scheme::Absmax).unwrap();
+    let path = tmp("reissue", "store.qlds");
+    let ds = seeded_datastore(&path, p, n, k, &[0.7, 0.3], 21);
+    let val = task(k, 2, 8);
+    let (want, _) = score_datastore_tasks(
+        &ds,
+        &[val.as_slice()],
+        ScoreOpts { shard_rows: 5, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    drop(ds);
+
+    let w1 = Server::start(&path, worker_opts(5)).unwrap();
+    let w2 = Server::start(&path, worker_opts(5)).unwrap();
+    let fake = FakeWorker::start(k, 2, 4, n, 0);
+    let co = Coordinator::start(CoordinatorOpts {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![
+            w1.addr().to_string(),
+            w2.addr().to_string(),
+            fake.addr.to_string(),
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut c = Client::connect(co.addr()).unwrap();
+    let r = c.score(&val, 6, true).unwrap();
+    assert!(
+        fake.score_hits.load(Ordering::SeqCst) >= 1,
+        "the faulty worker must have been handed a range"
+    );
+    assert_eq!(r.top, top_k_scored(&want[0], 6), "top-k despite a failed worker");
+    for (j, (a, b)) in want[0].iter().zip(r.scores.as_ref().unwrap()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {j}: re-issued merge differs");
+    }
+
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    for w in [w1, w2] {
+        w.stop();
+        w.join().unwrap();
+    }
+    fake.stop();
+    std::fs::remove_file(path).ok();
+}
+
+/// When every worker fails its sub-query the retry budget runs out and
+/// the query degrades to a clean error response — the client sees a
+/// failure, never a silently truncated score vector.
+#[test]
+fn exhausted_retries_degrade_to_a_clean_error() {
+    let (n, k) = (12usize, 64usize);
+    let fake = FakeWorker::start(k, 1, 8, n, 0);
+    let co = Coordinator::start(CoordinatorOpts {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![fake.addr.to_string()],
+        retries: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+    let err = c.score(&task(k, 1, 5), 3, true).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unanswered"), "degrade must name the unanswered range: {msg}");
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    fake.stop();
+}
+
+/// Killing a local worker outright (process-death model: its listener
+/// goes away) drops it from the fleet at the next probe and the
+/// remaining workers still produce the byte-identical answer.
+#[test]
+fn killed_local_worker_does_not_change_the_answer() {
+    let (n, k) = (27usize, 64usize);
+    let p = Precision::new(2, Scheme::Absmax).unwrap();
+    let path = tmp("kill", "store.qlds");
+    let ds = seeded_datastore(&path, p, n, k, &[1.0], 13);
+    let val = task(k, 1, 17);
+    let (want, _) =
+        score_datastore_tasks(&ds, &[val.as_slice()], ScoreOpts::default(), None).unwrap();
+    drop(ds);
+
+    let co = Coordinator::start_local(&path, 3, worker_opts(4), co_opts()).unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+    let before = c.score(&val, 5, true).unwrap();
+    assert_eq!(before.top, top_k_scored(&want[0], 5));
+
+    // kill one worker; give its listener a moment to actually close
+    co.local_workers()[1].stop();
+    std::thread::sleep(Duration::from_millis(150));
+
+    let after = c.score(&val, 5, true).unwrap();
+    assert_eq!(after.top, before.top, "top-k across a worker death");
+    let (a, b) = (before.scores.unwrap(), after.scores.unwrap());
+    for (j, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "sample {j}: answer changed after worker death");
+    }
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// generations
+// ---------------------------------------------------------------------------
+
+/// Append rows `lo..hi` of the canonical `seeded_datastore` feature
+/// stream as one generation (same idiom as `tests/ingest.rs`).
+fn ingest_range(dir: &Path, p: Precision, lo: usize, hi: usize, n_total: usize, k: usize, etas: &[f32], seed: u64) {
+    let mut sw = SegmentWriter::create(dir, &[p], hi - lo, 0).unwrap();
+    for ci in 0..etas.len() {
+        sw.begin_checkpoint().unwrap();
+        let f = feats(n_total, k, seed + ci as u64);
+        sw.append_rows(&f.data[lo * k..hi * k]).unwrap();
+        sw.end_checkpoint().unwrap();
+    }
+    sw.finalize().unwrap();
+}
+
+/// The consistency property under live ingest: with workers genuinely on
+/// *different* generations of the same store, every merged answer equals
+/// the single-node answer for the pinned `(min generation, min rows)`
+/// state — `since_gen` filtering included — and once every worker has
+/// polled the new generation the fleet serves the full live store.
+#[test]
+fn since_gen_is_consistent_with_workers_on_different_generations() {
+    let (n0, add, k) = (18usize, 7usize, 64usize);
+    let n_total = n0 + add;
+    let etas = [0.6f32, 0.4];
+    let p = Precision::new(4, Scheme::Absmax).unwrap();
+    let dir = tmp("gen", "run");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = default_store_path(&dir, p);
+    seeded_datastore(&base, p, n0, k, &etas, 42);
+    // monolithic fixtures: the gen-0 answer and the full live answer
+    let mono0 = dir.join("mono0.qlds");
+    let ds0 = seeded_datastore(&mono0, p, n0, k, &etas, 42);
+    let mono1 = dir.join("mono1.qlds");
+    let ds1 = seeded_datastore(&mono1, p, n_total, k, &etas, 42);
+    let val = task(k, 2, 33);
+    let opts = ScoreOpts { shard_rows: 5, ..Default::default() };
+    let (want0, _) = score_datastore_tasks(&ds0, &[val.as_slice()], opts, None).unwrap();
+    let (want1, _) = score_datastore_tasks(&ds1, &[val.as_slice()], opts, None).unwrap();
+    drop((ds0, ds1));
+
+    let co = Coordinator::start_local(&base, 3, worker_opts(5), co_opts()).unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+
+    // generation 0: everyone agrees
+    let r0 = c.score(&val, 4, true).unwrap();
+    assert_eq!(r0.generation, 0);
+    assert_eq!(r0.scores.as_ref().unwrap().len(), n0);
+
+    // ingest mid-serve, then advance ONLY worker 0 (a ranged sub-query
+    // makes it poll): the fleet is now split across generations 1 and 0
+    ingest_range(&dir, p, n0, n_total, n_total, k, &etas, 42);
+    let mut w0 = Client::connect(co.local_workers()[0].addr()).unwrap();
+    let adv = w0.score_rows(&val, 1, false, None, Some((0, 4))).unwrap();
+    assert_eq!(adv.generation, 1, "worker 0 must have polled the ingest");
+    let st0 = w0.stats().unwrap();
+    assert_eq!((st0.generation, st0.n_samples), (1, n_total));
+    let st2 = Client::connect(co.local_workers()[2].addr()).unwrap().stats().unwrap();
+    assert_eq!((st2.generation, st2.n_samples), (0, n0), "worker 2 still on generation 0");
+
+    // fleet stats pin to the minimum the whole fleet can answer for
+    let fleet = c.stats().unwrap();
+    assert_eq!((fleet.generation, fleet.n_samples), (0, n0));
+
+    // a mixed-generation query serves the pinned (0, n0) state exactly:
+    // bit-identical to the gen-0 single-node answer, no tearing — and
+    // since_gen=0 finds nothing because no *served* row is newer
+    let r1 = c.score_since(&val, 4, true, Some(0)).unwrap();
+    assert_eq!(r1.generation, 0, "mixed fleet pins to min generation");
+    let got = r1.scores.as_ref().unwrap();
+    assert_eq!(got.len(), n0, "mixed fleet pins to min rows");
+    for (j, (a, b)) in want0[0].iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {j}: pinned answer vs gen-0 scan");
+    }
+    assert!(r1.top.is_empty(), "since_gen=0 at pinned gen 0 ranks nothing");
+
+    // that query's ranged sub-scans made every worker poll: the fleet
+    // converges and now serves the full live store
+    let r2 = c.score_since(&val, add + 5, true, Some(0)).unwrap();
+    assert_eq!(r2.generation, 1, "fleet converged to the ingested generation");
+    let full = r2.scores.as_ref().unwrap();
+    assert_eq!(full.len(), n_total);
+    for (j, (a, b)) in want1[0].iter().zip(full).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {j}: converged answer vs live scan");
+    }
+    // since_gen=0 now ranks exactly the ingested tail, merged across
+    // workers with the same comparator a single node uses
+    assert_eq!(r2.top, top_k_scored_since(&want1[0], add + 5, n0));
+    assert!(r2.top.iter().all(|(i, _)| *i >= n0), "{:?}", r2.top);
+
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
