@@ -4,7 +4,9 @@
 //! tile, and the batched multi-query scan. This is the §Perf centerpiece:
 //! every sub-16-bit path must beat the f32 reference because it touches a
 //! fraction of the memory and does integer math in the hot loop, and Q
-//! validation tasks must cost ~one single-task pass, not Q.
+//! validation tasks must cost ~one single-task pass, not Q. The cascade
+//! rows sweep the §10 candidate multiplier (1-bit probe → 8-bit rerank)
+//! and print bytes-read reduction + recall@k against the exhaustive scan.
 //!
 //! The final section load-tests the resident query service (`qless
 //! serve`) over real sockets: queries/sec and cold/warm latency
@@ -133,6 +135,74 @@ fn main() {
         });
         println!("{}", r.report_line());
         std::fs::remove_file(path).ok();
+    }
+
+    // precision cascade (DESIGN.md §10): 1-bit probe over every row, 8-bit
+    // rerank over the survivors, vs the exhaustive 8-bit scan the cascade
+    // replaces. Reported per multiplier: wall time, bytes actually read,
+    // and recall@k against the exhaustive ranking — the EXPERIMENTS.md
+    // §Perf cascade rows. At the default multiplier the bytes column must
+    // show the ≥2× reduction `tests/cascade.rs` pins.
+    {
+        use qless::influence::cascade::exhaustive_scan_bytes;
+        use qless::influence::{cascade_datastore_tasks, CascadeOpts, DEFAULT_CASCADE_MULT};
+        use qless::select::top_k_scored;
+        use std::collections::BTreeSet;
+
+        let q = 2usize;
+        let k_sel = n / 64; // top ~1.6%, the selection-sized head
+        let (ds1, path1) = build(1, n, k); // build() seeds features by (n, k)
+        let (ds8, path8) = build(8, n, k); // → the two stores share row space
+        let tasks_raw: Vec<Vec<FeatureMatrix>> =
+            (0..q).map(|t| vec![feats(nv, k, 40 + t as u64)]).collect();
+        let refs: Vec<&[FeatureMatrix]> = tasks_raw.iter().map(|t| t.as_slice()).collect();
+        let opts = ScoreOpts { mem_budget_mb: 1, ..Default::default() };
+        let exhaustive_bytes = exhaustive_scan_bytes(&ds8.header, n);
+        let (all_scores, ex_stats) = score_datastore_tasks(&ds8, &refs, opts, None).unwrap();
+        let want: Vec<BTreeSet<usize>> = all_scores
+            .iter()
+            .map(|s| top_k_scored(s, k_sel).into_iter().map(|(i, _)| i).collect())
+            .collect();
+        let covering = n.div_ceil(k_sel);
+        for mult in [2usize, DEFAULT_CASCADE_MULT, covering] {
+            let copts = CascadeOpts { k: k_sel, mult, scan: opts };
+            let out = cascade_datastore_tasks(&ds1, &ds8, &refs, copts).unwrap();
+            let read = out.combined_pass().bytes_read;
+            let recall = want
+                .iter()
+                .zip(&out.top)
+                .map(|(w, got)| got.iter().filter(|(i, _)| w.contains(i)).count() as f64)
+                .sum::<f64>()
+                / (q * k_sel) as f64;
+            let r = bench(
+                &format!("cascade_1to8bit (mult={mult}, Q={q}, k_sel={k_sel})"),
+                (n * nv * q) as f64,
+                "pair",
+                || {
+                    std::hint::black_box(
+                        cascade_datastore_tasks(&ds1, &ds8, &refs, copts).unwrap(),
+                    );
+                },
+            );
+            println!(
+                "{}  [recall@{k_sel} {recall:.3}, {} read vs {} exhaustive = {:.2}x]",
+                r.report_line(),
+                human_bytes(read),
+                human_bytes(exhaustive_bytes),
+                exhaustive_bytes as f64 / read.max(1) as f64,
+            );
+        }
+        let r = bench(
+            &format!("cascade_exhaustive_8bit_reference (Q={q})"),
+            (n * nv * q) as f64,
+            "pair",
+            || {
+                std::hint::black_box(score_datastore_tasks(&ds8, &refs, opts, None).unwrap());
+            },
+        );
+        println!("{}  [{} read]", r.report_line(), human_bytes(ex_stats.bytes_read));
+        std::fs::remove_file(path1).ok();
+        std::fs::remove_file(path8).ok();
     }
 
     // the k=8192 regression shape (paper-scale projection dim): the seed

@@ -99,6 +99,37 @@ pub fn merge_top_k(parts: &[Vec<(usize, f32)>], k: usize) -> Vec<(usize, f32)> {
     all
 }
 
+/// Top-k over an explicit **candidate set** of `(index, score)` pairs —
+/// the precision cascade's final selection: stage 2 re-scores only the
+/// probe stage's candidates, so the ranking input is a sparse subset of
+/// the row space, not a dense score vector. The comparator is exactly
+/// [`top_k_indices`]'s (descending score, ascending index, NaN panics),
+/// which is what makes cascade(probe, rerank, c·k ≥ n) byte-identical to
+/// the exhaustive rerank scan: same pairs in, same order out. Duplicate
+/// indices are a caller bug; pairs need not arrive sorted.
+///
+/// ```
+/// use qless_core::select::{top_k_scored, top_k_scored_among};
+///
+/// let scores = [0.1f32, 0.9, -0.5, 0.8];
+/// // candidates = every row  ⇒  identical to the dense top-k
+/// let all: Vec<(usize, f32)> = scores.iter().copied().enumerate().collect();
+/// assert_eq!(top_k_scored_among(&all, 2), top_k_scored(&scores, 2));
+/// // a strict subset ranks only within itself
+/// assert_eq!(top_k_scored_among(&[(0, 0.1), (2, -0.5)], 1), vec![(0, 0.1)]);
+/// assert!(top_k_scored_among(&[], 3).is_empty());
+/// ```
+pub fn top_k_scored_among(pairs: &[(usize, f32)], k: usize) -> Vec<(usize, f32)> {
+    let mut all = pairs.to_vec();
+    assert!(
+        all.iter().all(|(_, s)| !s.is_nan()),
+        "NaN influence score — upstream numerical bug"
+    );
+    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
 /// Select ⌈frac·n⌉ samples (paper: top 5%; Fig. 4 sweeps 0.1%–10%),
 /// flooring at one sample for any non-empty input (`frac = 0.0` still
 /// selects the single best sample). Panics on `frac` outside `[0, 1]`.
@@ -264,6 +295,27 @@ mod tests {
         let left = vec![(1usize, 0.5f32), (0, 0.1)];
         let right = vec![(2usize, 0.5f32), (3, 0.5)];
         assert_eq!(merge_top_k(&[right, left], 3), vec![(1, 0.5), (2, 0.5), (3, 0.5)]);
+    }
+
+    #[test]
+    fn among_full_candidate_set_matches_dense_topk() {
+        let s = [0.3f32, 0.9, 0.9, -1.0];
+        let all: Vec<(usize, f32)> = s.iter().copied().enumerate().collect();
+        for k in 0..=5 {
+            assert_eq!(top_k_scored_among(&all, k), top_k_scored(&s, k), "k={k}");
+        }
+        // ties among candidates break by ascending index regardless of
+        // the order the pairs arrive in
+        assert_eq!(
+            top_k_scored_among(&[(2, 0.9), (1, 0.9), (0, 0.3)], 2),
+            vec![(1, 0.9), (2, 0.9)]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn among_rejects_nan() {
+        top_k_scored_among(&[(0, f32::NAN)], 1);
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! Compute-constrained precision cascade — two-stage influence scoring.
+//!
+//! QLESS shows 1-bit gradients preserve valuation quality; compute-
+//! constrained selection says valuation quality must be priced against
+//! the compute that buys it. The cascade spends the two currencies where
+//! each is cheap:
+//!
+//! * **Stage 1 (probe)** scans *every* row at a cheap probe precision
+//!   (default 1-bit: ~12× popcount path, `k/8 + 4` resident bytes per
+//!   row) with the existing fused [`MultiScan`], and keeps the top `c·k`
+//!   candidate rows per task under the deterministic
+//!   `(score desc, index asc)` order of [`top_k_scored`].
+//! * **Stage 2 (rerank)** re-scores *only* the candidate union at the
+//!   rerank precision (default 8- or 16-bit), using
+//!   [`ShardReader::seek_to_row`](crate::datastore::ShardReader::seek_to_row)
+//!   random access over the **aligned row spaces** the multi-precision
+//!   builder guarantees: row `i` of `datastore_1b_sign.qlds` and of
+//!   `datastore_8b_absmax.qlds` are the same sample, so probe indices
+//!   address rerank rows directly.
+//!
+//! The final per-task top-`k` is taken over that task's own candidate
+//! set with the rerank scores — **never** mixed probe/rerank scores, and
+//! never dependent on which other tasks shared the pass (candidates are
+//! per-task; the union only coalesces I/O). Exactness properties (proved
+//! in `tests/cascade.rs`, derived in `DESIGN.md` §10):
+//!
+//! * with `c·k ≥ n` the candidate set is every row, so the cascade is
+//!   **byte-identical** to the exhaustive rerank-precision scan;
+//! * recall@k of the selected set is exactly
+//!   `|ExactTopK ∩ candidates| / k` and monotone non-decreasing in `c`,
+//!   because candidate sets grow as prefix-supersets in `c`;
+//! * reranking a candidate subset via clipped feeds produces bit-exact
+//!   per-row scores: [`MultiScan`] accumulation per row depends only on
+//!   that row's bytes and the per-row checkpoint feed order.
+//!
+//! I/O is accounted in the same [`ScanStats`] units as every other scan:
+//! probe ≈ `n · (k/8 + 4) · C` resident bytes, rerank ≈
+//! `|candidates| · (k + 4) · C`, versus `n · (k + 4) · C` exhaustive —
+//! the ratio the `xp cascade` harness and `bench_influence` report.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::datastore::{Datastore, Header, LiveStore};
+use crate::grads::FeatureMatrix;
+use crate::influence::aggregate::{score_datastore_tasks, score_live_tasks, MultiScan, ScanStats, ScoreOpts};
+use crate::select::{top_k_scored, top_k_scored_among};
+
+/// Default candidate multiplier `c`: stage 1 keeps `c·k` rows per task.
+/// Chosen so recall@k at paper-scale settings stays ≥ 0.95 with a
+/// comfortable margin while the rerank stage stays a small fraction of
+/// the row space (`tests/cascade.rs` pins both).
+pub const DEFAULT_CASCADE_MULT: usize = 8;
+
+/// Knobs of one cascade pass.
+#[derive(Debug, Clone, Copy)]
+pub struct CascadeOpts {
+    /// Final selections per task (the `k` of recall@k).
+    pub k: usize,
+    /// Candidate multiplier `c` — stage 1 keeps `c·k` rows per task
+    /// (clamped to the row count; `c·k ≥ n` makes the cascade exhaustive).
+    pub mult: usize,
+    /// Shard/memory knobs shared by both stages (the XLA route is forced
+    /// off — the cascade is native-kernel only).
+    pub scan: ScoreOpts,
+}
+
+/// Everything one cascade pass produced.
+#[derive(Debug, Clone)]
+pub struct CascadeOutcome {
+    /// Per-task final top-`k`: `(row, rerank-precision score)` pairs under
+    /// the shared `(score desc, index asc)` order — byte-identical to the
+    /// exhaustive rerank scan's top-`k` whenever the candidates cover it.
+    pub top: Vec<Vec<(usize, f32)>>,
+    /// Distinct rows stage 2 re-scored (the per-task candidate union).
+    pub reranked_rows: usize,
+    /// Stage-1 I/O accounting (full scan at probe precision).
+    pub probe_pass: ScanStats,
+    /// Stage-2 I/O accounting (candidate rows only, at rerank precision).
+    pub rerank_pass: ScanStats,
+}
+
+impl CascadeOutcome {
+    /// Both stages as one [`ScanStats`]: traffic counters sum, geometry
+    /// counters (checkpoints, tasks) take the max — the form the serving
+    /// layer reports in a reply's `pass` field.
+    pub fn combined_pass(&self) -> ScanStats {
+        combine_stats(self.probe_pass, self.rerank_pass)
+    }
+}
+
+/// Sum two passes' traffic counters (shards/rows/bytes), max their
+/// geometry counters — the cascade's `pass` accounting, also used by the
+/// coordinator when merging probe- and rerank-wave stats.
+pub fn combine_stats(a: ScanStats, b: ScanStats) -> ScanStats {
+    ScanStats {
+        checkpoints: a.checkpoints.max(b.checkpoints),
+        tasks: a.tasks.max(b.tasks),
+        shards_read: a.shards_read + b.shards_read,
+        rows_read: a.rows_read + b.rows_read,
+        bytes_read: a.bytes_read + b.bytes_read,
+    }
+}
+
+/// Resident bytes an exhaustive scan of `n_rows` rows streams under this
+/// header's geometry — the denominator of the cascade's io-unit claim
+/// (`C · n · resident_row_bytes`).
+pub fn exhaustive_scan_bytes(header: &Header, n_rows: usize) -> u64 {
+    header.n_checkpoints as u64 * n_rows as u64 * header.resident_row_bytes()
+}
+
+/// Collapse a **sorted, deduplicated** row list into maximal contiguous
+/// `(start, len)` runs — the unit the rerank stage seeks and clip-feeds,
+/// and the serving layer's cache-aware rerank path reuses.
+pub fn contiguous_runs(rows: &[usize]) -> Vec<(usize, usize)> {
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    for &r in rows {
+        match runs.last_mut() {
+            Some((start, len)) if *start + *len == r => *len += 1,
+            _ => runs.push((r, 1)),
+        }
+    }
+    runs
+}
+
+/// Per-task candidate row sets (each task's probe top-`c·k`, ascending by
+/// row) plus their sorted union — the exact rows stage 2 must score.
+pub fn probe_candidates(
+    probe_scores: &[Vec<f32>],
+    ck: usize,
+) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let mut per_task: Vec<Vec<usize>> = Vec::with_capacity(probe_scores.len());
+    for scores in probe_scores {
+        let mut rows: Vec<usize> = top_k_scored(scores, ck).into_iter().map(|(i, _)| i).collect();
+        rows.sort_unstable();
+        per_task.push(rows);
+    }
+    let mut union: Vec<usize> = per_task.iter().flatten().copied().collect();
+    union.sort_unstable();
+    union.dedup();
+    (per_task, union)
+}
+
+/// Validate that a probe/rerank store pair describes the **same sample
+/// rows**: equal row count, projection dim, checkpoint count and bit-equal
+/// η weights. The multi-precision builder and ingest guarantee this for
+/// the stores of one run directory; anything else must not cascade.
+fn ensure_aligned(
+    probe: &Header,
+    probe_rows: usize,
+    probe_etas: &[f32],
+    rerank: &Header,
+    rerank_rows: usize,
+    rerank_etas: &[f32],
+) -> Result<()> {
+    ensure!(
+        probe_rows == rerank_rows,
+        "cascade stores disagree on row count: probe ({}) has {probe_rows} rows, \
+         rerank ({}) has {rerank_rows}",
+        probe.precision.label(),
+        rerank.precision.label()
+    );
+    ensure!(
+        probe.k == rerank.k,
+        "cascade stores disagree on projection dim: probe k={}, rerank k={}",
+        probe.k,
+        rerank.k
+    );
+    ensure!(
+        probe.n_checkpoints == rerank.n_checkpoints,
+        "cascade stores disagree on checkpoint count: probe has {}, rerank has {}",
+        probe.n_checkpoints,
+        rerank.n_checkpoints
+    );
+    for (ci, (a, b)) in probe_etas.iter().zip(rerank_etas).enumerate() {
+        ensure!(
+            a.to_bits() == b.to_bits(),
+            "cascade stores disagree on checkpoint {ci} η: probe {a}, rerank {b} — \
+             the stores come from different training runs"
+        );
+    }
+    Ok(())
+}
+
+fn validate_opts(opts: &CascadeOpts, n: usize) -> Result<ScoreOpts> {
+    ensure!(opts.k >= 1, "cascade needs k >= 1 final selections per task");
+    ensure!(opts.mult >= 1, "cascade candidate multiplier must be >= 1");
+    ensure!(n >= 1, "cascade over an empty store");
+    // the cascade is native-kernel only: the XLA tile path is not plumbed
+    // through the clipped-feed rerank stage
+    Ok(ScoreOpts { use_xla: false, ..opts.scan })
+}
+
+/// Stage 2 over a frozen store: re-score exactly the (sorted, unique)
+/// `rows` at the store's precision, returning per-task scores aligned to
+/// `rows` plus the stage's [`ScanStats`]. Each run of consecutive rows is
+/// read via `seek_to_row` with a shard sized to the run, so I/O scales
+/// with the candidate count, not `n`. Per-row scores are bit-exact to an
+/// exhaustive scan's (clipped feeds don't change a row's arithmetic).
+pub fn rerank_datastore_rows(
+    ds: &Datastore,
+    tasks: &[&[FeatureMatrix]],
+    rows: &[usize],
+    opts: ScoreOpts,
+) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+    let n = ds.n_samples();
+    if let Some(&last) = rows.last() {
+        ensure!(last < n, "candidate row {last} out of range (store has {n} rows)");
+    }
+    let mut scan = MultiScan::try_new(&ds.header, tasks)?;
+    let runs = contiguous_runs(rows);
+    let rps = ds.rows_per_shard(opts.shard_rows, opts.effective_budget_mb());
+    for ci in 0..ds.n_checkpoints() {
+        for &(start, len) in &runs {
+            // shard size capped to the run so random access reads what it
+            // scores, not a budget-sized over-shoot past the run's end
+            let mut reader = ds.shard_reader(ci, len.min(rps))?;
+            let eta = reader.eta();
+            reader.seek_to_row(start);
+            let end = start + len;
+            let mut row = start;
+            while row < end {
+                let Some(shard) = reader.next_shard()? else {
+                    bail!("candidate run {start}+{len} ran past the end of the store");
+                };
+                let take = (end - shard.start).min(shard.len());
+                scan.feed(ci, eta, shard.start, &shard.rows().slice(0, take));
+                row = shard.start + take;
+            }
+        }
+    }
+    let (totals, stats) = scan.finish();
+    Ok((gather(&totals, rows), stats))
+}
+
+/// [`rerank_datastore_rows`] over a **live** store: candidate runs are
+/// clipped against each member's row range and fed member-local, same
+/// global totals. Feed order (checkpoint → member → run) matches the
+/// exhaustive live scan's per-row order, keeping accumulation bit-exact.
+pub fn rerank_live_rows(
+    live: &LiveStore,
+    tasks: &[&[FeatureMatrix]],
+    rows: &[usize],
+    opts: ScoreOpts,
+) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+    let n = live.n_rows();
+    if let Some(&last) = rows.last() {
+        ensure!(last < n, "candidate row {last} out of range (live store has {n} rows)");
+    }
+    let mut scan = MultiScan::try_new_range(live.header(), tasks, 0, n)?;
+    let runs = contiguous_runs(rows);
+    let rps = live.rows_per_shard(opts.shard_rows, opts.effective_budget_mb());
+    for ci in 0..live.header().n_checkpoints as usize {
+        for member in live.members() {
+            let m_lo = member.start_row;
+            let m_hi = m_lo + member.ds.n_samples();
+            for &(start, len) in &runs {
+                let lo = start.max(m_lo);
+                let hi = (start + len).min(m_hi);
+                if lo >= hi {
+                    continue; // run doesn't touch this member
+                }
+                let mut reader = member.ds.shard_reader(ci, (hi - lo).min(rps))?;
+                let eta = reader.eta();
+                reader.seek_to_row(lo - m_lo);
+                let mut row = lo - m_lo; // member-local
+                let end = hi - m_lo;
+                while row < end {
+                    let Some(shard) = reader.next_shard()? else {
+                        bail!("candidate run {start}+{len} ran past the end of a live member");
+                    };
+                    let take = (end - shard.start).min(shard.len());
+                    scan.feed(ci, eta, m_lo + shard.start, &shard.rows().slice(0, take));
+                    row = shard.start + take;
+                }
+            }
+        }
+    }
+    let (totals, stats) = scan.finish();
+    Ok((gather(&totals, rows), stats))
+}
+
+/// Pull the candidate rows' scores out of full-range totals, aligned to
+/// `rows` order.
+fn gather(totals: &[Vec<f32>], rows: &[usize]) -> Vec<Vec<f32>> {
+    totals.iter().map(|t| rows.iter().map(|&r| t[r]).collect()).collect()
+}
+
+/// Shared stage-1 → stage-2 plumbing: pick candidates from the probe
+/// scores, rerank their union through `rerank_fn`, and take each task's
+/// final top-`k` over **its own** candidates (so an answer never depends
+/// on which other tasks shared the pass).
+fn finish_cascade(
+    probe_scores: Vec<Vec<f32>>,
+    probe_pass: ScanStats,
+    n: usize,
+    opts: &CascadeOpts,
+    rerank_fn: impl FnOnce(&[usize]) -> Result<(Vec<Vec<f32>>, ScanStats)>,
+) -> Result<CascadeOutcome> {
+    let ck = opts.k.saturating_mul(opts.mult).min(n);
+    let (per_task, union) = probe_candidates(&probe_scores, ck);
+    let (rr, rerank_pass) = rerank_fn(&union)?;
+    let mut top = Vec::with_capacity(per_task.len());
+    for (t, cand) in per_task.iter().enumerate() {
+        let pairs: Vec<(usize, f32)> = cand
+            .iter()
+            .map(|&row| {
+                let at = union.binary_search(&row).expect("candidate in union");
+                (row, rr[t][at])
+            })
+            .collect();
+        top.push(top_k_scored_among(&pairs, opts.k));
+    }
+    Ok(CascadeOutcome { top, reranked_rows: union.len(), probe_pass, rerank_pass })
+}
+
+/// Run the full cascade over a frozen probe/rerank store pair (aligned
+/// row spaces required — see the module docs). Returns each task's final
+/// top-`k` at the rerank precision plus both stages' I/O accounting.
+pub fn cascade_datastore_tasks(
+    probe: &Datastore,
+    rerank: &Datastore,
+    tasks: &[&[FeatureMatrix]],
+    opts: CascadeOpts,
+) -> Result<CascadeOutcome> {
+    let scan_opts = validate_opts(&opts, probe.n_samples())?;
+    let etas = |ds: &Datastore| -> Result<Vec<f32>> {
+        (0..ds.n_checkpoints()).map(|ci| Ok(ds.shard_reader(ci, 1)?.eta())).collect()
+    };
+    ensure_aligned(
+        &probe.header,
+        probe.n_samples(),
+        &etas(probe)?,
+        &rerank.header,
+        rerank.n_samples(),
+        &etas(rerank)?,
+    )?;
+    let (probe_scores, probe_pass) = score_datastore_tasks(probe, tasks, scan_opts, None)?;
+    finish_cascade(probe_scores, probe_pass, probe.n_samples(), &opts, |rows| {
+        rerank_datastore_rows(rerank, tasks, rows, scan_opts)
+    })
+}
+
+/// [`cascade_datastore_tasks`] over a **live** probe/rerank pair (base +
+/// ingested generations). Both stores must sit at the same generation —
+/// they share one manifest in a run directory, so open/refresh them
+/// together and this holds by construction.
+pub fn cascade_live_tasks(
+    probe: &LiveStore,
+    rerank: &LiveStore,
+    tasks: &[&[FeatureMatrix]],
+    opts: CascadeOpts,
+) -> Result<CascadeOutcome> {
+    let scan_opts = validate_opts(&opts, probe.n_rows())?;
+    ensure_aligned(
+        probe.header(),
+        probe.n_rows(),
+        probe.etas(),
+        rerank.header(),
+        rerank.n_rows(),
+        rerank.etas(),
+    )?;
+    let (probe_scores, probe_pass) = score_live_tasks(probe, tasks, scan_opts)?;
+    finish_cascade(probe_scores, probe_pass, probe.n_rows(), &opts, |rows| {
+        rerank_live_rows(rerank, tasks, rows, scan_opts)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Precision, Scheme};
+    use crate::util::prop::{normal_features as feats, seeded_datastore};
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str, bits: u8) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "qless_cascade_{tag}_{bits}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    /// An aligned probe/rerank pair: same rows (same fixture seed), two
+    /// precisions.
+    fn pair(n: usize, k: usize, etas: &[f32]) -> (Datastore, Datastore, Vec<PathBuf>) {
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let (a, b) = (tmp("pair", 1), tmp("pair", 8));
+        let probe = seeded_datastore(&a, p1, n, k, etas, 0);
+        let rerank = seeded_datastore(&b, p8, n, k, etas, 0);
+        (probe, rerank, vec![a, b])
+    }
+
+    #[test]
+    fn contiguous_runs_collapse() {
+        assert!(contiguous_runs(&[]).is_empty());
+        assert_eq!(contiguous_runs(&[3]), vec![(3, 1)]);
+        assert_eq!(contiguous_runs(&[0, 1, 2, 5, 7, 8]), vec![(0, 3), (5, 1), (7, 2)]);
+    }
+
+    #[test]
+    fn covering_multiplier_is_exhaustive() {
+        // c·k ≥ n: the cascade must equal the exhaustive rerank scan,
+        // scores bit-identical.
+        let (n, k) = (17usize, 64usize);
+        let (probe, rerank, paths) = pair(n, k, &[0.8, 0.3]);
+        let t0 = vec![feats(2, k, 90), feats(2, k, 91)];
+        let t1 = vec![feats(3, k, 92), feats(3, k, 93)];
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0, &t1];
+        let scan = ScoreOpts { shard_rows: 4, ..Default::default() };
+        let (want, _) = score_datastore_tasks(&rerank, &tasks, scan, None).unwrap();
+        let kk = 3usize;
+        let out = cascade_datastore_tasks(
+            &probe,
+            &rerank,
+            &tasks,
+            CascadeOpts { k: kk, mult: n, scan },
+        )
+        .unwrap();
+        assert_eq!(out.reranked_rows, n, "covering multiplier reranks every row");
+        for (t, got) in out.top.iter().enumerate() {
+            assert_eq!(got, &top_k_scored(&want[t], kk), "task {t}");
+        }
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn rerank_rows_bit_match_full_scan() {
+        let (n, k) = (13usize, 64usize);
+        let (_, rerank, paths) = pair(n, k, &[0.6]);
+        let t0 = vec![feats(2, k, 95)];
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0];
+        let scan = ScoreOpts { shard_rows: 5, ..Default::default() };
+        let (full, _) = score_datastore_tasks(&rerank, &tasks, scan, None).unwrap();
+        let rows = vec![0usize, 1, 2, 6, 9, 10, 12];
+        let (got, stats) = rerank_datastore_rows(&rerank, &tasks, &rows, scan).unwrap();
+        for (j, &r) in rows.iter().enumerate() {
+            assert_eq!(got[0][j].to_bits(), full[0][r].to_bits(), "row {r}");
+        }
+        assert_eq!(stats.rows_read, rows.len() as u64, "rerank reads only candidates");
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn misaligned_pair_and_bad_opts_error() {
+        let (n, k) = (8usize, 64usize);
+        let (probe, rerank, paths) = pair(n, k, &[1.0]);
+        let t0 = vec![feats(2, k, 97)];
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0];
+        let scan = ScoreOpts::default();
+        let err = cascade_datastore_tasks(
+            &probe,
+            &rerank,
+            &tasks,
+            CascadeOpts { k: 0, mult: 2, scan },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("k >= 1"), "{err:#}");
+        let err = cascade_datastore_tasks(
+            &probe,
+            &rerank,
+            &tasks,
+            CascadeOpts { k: 2, mult: 0, scan },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("multiplier"), "{err:#}");
+        // a rerank store with a different row count must be refused
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let short_path = tmp("short", 8);
+        let short = seeded_datastore(&short_path, p8, n - 2, k, &[1.0], 0);
+        let err = cascade_datastore_tasks(
+            &probe,
+            &short,
+            &tasks,
+            CascadeOpts { k: 2, mult: 2, scan },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("row count"), "{err:#}");
+        std::fs::remove_file(short_path).ok();
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}

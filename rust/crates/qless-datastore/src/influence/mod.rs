@@ -27,10 +27,15 @@
 //! the serving layer's RAM shard cache (`service::Session`).
 
 pub mod aggregate;
+pub mod cascade;
 pub mod native;
 pub mod xla;
 
 pub use aggregate::{
     score_datastore, score_datastore_tasks, score_live_tasks, MultiScan, ScanStats, ScoreOpts,
+};
+pub use cascade::{
+    cascade_datastore_tasks, cascade_live_tasks, CascadeOpts, CascadeOutcome,
+    DEFAULT_CASCADE_MULT,
 };
 pub use native::{ValFeatures, ValTask};

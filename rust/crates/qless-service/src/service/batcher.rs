@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::session::{Answer, ScoreQuery, ServiceStats, Session};
+use super::session::{Answer, CascadePlan, ScoreQuery, ServiceStats, Session};
 
 /// Outcome delivered to one submitted query: the answer, or the failure
 /// message of the batch it rode (stringly so it can be broadcast to every
@@ -65,12 +65,29 @@ impl Default for BatcherOpts {
     }
 }
 
+/// The fuse key of a queued job: only jobs with **equal** keys coalesce,
+/// so a batch always maps onto exactly one session call — one fused
+/// pass (full, ranged, or cascade) over the store. A coordinator fans
+/// one logical query out as N identical per-worker keys, so in practice
+/// a worker's queue is homogeneous and still fuses fully.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum PassKey {
+    /// Exhaustive scan over the full live row space.
+    Full,
+    /// Exhaustive scan over one global row range (scatter-gather worker).
+    Range { start: usize, len: usize },
+    /// Two-stage precision cascade (client verb).
+    Cascade { plan: CascadePlan, top_k: usize },
+    /// Cascade probe stage over one row range at `bits` (worker verb).
+    Probe { start: usize, len: usize, bits: u8 },
+    /// Cascade rerank of exactly `rows` at `bits` (worker verb). The row
+    /// list is shared, not cloned per job — fan-in replies reuse it.
+    Rerank { rows: Arc<Vec<usize>>, bits: u8 },
+}
+
 struct Job {
     query: ScoreQuery,
-    /// Global row range the query scores (`None` = the full live store).
-    /// Only jobs with **equal** ranges fuse into one pass, so a batch is
-    /// always a single `answer_batch` or `answer_range` call.
-    rows: Option<(usize, usize)>,
+    key: PassKey,
     reply: mpsc::Sender<BatchResult>,
 }
 
@@ -127,18 +144,64 @@ impl Batcher {
     /// space. Returns the channel its [`BatchResult`] will arrive on, or
     /// an error when the queue is full or the service is shutting down.
     pub fn submit(&self, query: ScoreQuery) -> Result<mpsc::Receiver<BatchResult>> {
-        self.submit_ranged(query, None)
+        self.submit_keyed(query, PassKey::Full)
     }
 
     /// [`Batcher::submit`] restricted to the global row range `[start,
     /// start + len)` when `rows` is `Some` — the scatter-gather worker
     /// path. Ranged jobs coalesce only with jobs carrying the **same**
-    /// range (a coordinator fans one logical query out as N identical
-    /// per-worker ranges, so in practice a worker's queue is homogeneous).
+    /// range.
     pub fn submit_ranged(
         &self,
         query: ScoreQuery,
         rows: Option<(usize, usize)>,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
+        let key = match rows {
+            None => PassKey::Full,
+            Some((start, len)) => PassKey::Range { start, len },
+        };
+        self.submit_keyed(query, key)
+    }
+
+    /// Enqueue one cascade query ([`Session::answer_cascade`]): queries
+    /// sharing the same `(plan, top_k)` coalesce, so a burst rides one
+    /// probe pass and one rerank pass over the candidate union.
+    pub fn submit_cascade(
+        &self,
+        query: ScoreQuery,
+        plan: CascadePlan,
+        top_k: usize,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
+        self.submit_keyed(query, PassKey::Cascade { plan, top_k })
+    }
+
+    /// Enqueue one cascade **probe** worker sub-query: a ranged scan at
+    /// the probe precision ([`Session::answer_range_at`]).
+    pub fn submit_probe(
+        &self,
+        query: ScoreQuery,
+        start: usize,
+        len: usize,
+        bits: u8,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
+        self.submit_keyed(query, PassKey::Probe { start, len, bits })
+    }
+
+    /// Enqueue one cascade **rerank** worker sub-query: re-score exactly
+    /// `rows` at `bits` ([`Session::answer_rerank_rows`]).
+    pub fn submit_rerank(
+        &self,
+        query: ScoreQuery,
+        rows: Arc<Vec<usize>>,
+        bits: u8,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
+        self.submit_keyed(query, PassKey::Rerank { rows, bits })
+    }
+
+    fn submit_keyed(
+        &self,
+        query: ScoreQuery,
+        key: PassKey,
     ) -> Result<mpsc::Receiver<BatchResult>> {
         let (tx, rx) = mpsc::channel();
         {
@@ -149,7 +212,7 @@ impl Batcher {
             if st.queue.len() >= self.queue_cap {
                 bail!("admission queue full ({} queries waiting)", self.queue_cap);
             }
-            st.queue.push_back(Job { query, rows, reply: tx });
+            st.queue.push_back(Job { query, key, reply: tx });
         }
         self.shared.arrived.notify_all();
         Ok(rx)
@@ -221,26 +284,35 @@ fn worker_loop(
                     .unwrap_or_else(|e| e.into_inner());
                 st = guard;
             }
-            // a batch is the longest front run sharing one row range, so
-            // it maps onto exactly one fused pass (full or ranged); jobs
-            // with a different range stay queued for the next iteration
-            let want = st.queue.front().map(|j| j.rows).expect("queue non-empty");
+            // a batch is the longest front run sharing one fuse key, so
+            // it maps onto exactly one fused pass; jobs with a different
+            // key stay queued for the next iteration
+            let want = st.queue.front().map(|j| j.key.clone()).expect("queue non-empty");
             let mut take = 0;
-            while take < st.queue.len() && take < max_batch && st.queue[take].rows == want {
+            while take < st.queue.len() && take < max_batch && st.queue[take].key == want {
                 take += 1;
             }
             st.queue.drain(..take).collect()
         };
-        let rows = batch.first().map(|j| j.rows).expect("batch non-empty");
+        let key = batch.first().map(|j| j.key.clone()).expect("batch non-empty");
         let (queries, repliers): (Vec<ScoreQuery>, Vec<mpsc::Sender<BatchResult>>) =
             batch.into_iter().map(|j| (j.query, j.reply)).unzip();
         // panic isolation: a scoring panic must not kill the only scoring
         // worker (queued + future queries would hang forever, wedging the
         // whole server) — it becomes an error broadcast to this batch's
         // riders, and the worker lives on
-        let result = catch_unwind(AssertUnwindSafe(|| match rows {
-            None => session.answer_batch(&queries),
-            Some((start, len)) => session.answer_range(&queries, start, len),
+        let result = catch_unwind(AssertUnwindSafe(|| match &key {
+            PassKey::Full => session.answer_batch(&queries),
+            PassKey::Range { start, len } => session.answer_range(&queries, *start, *len),
+            PassKey::Cascade { plan, top_k } => {
+                session.answer_cascade(&queries, *plan, *top_k)
+            }
+            PassKey::Probe { start, len, bits } => {
+                session.answer_range_at(&queries, *start, *len, *bits)
+            }
+            PassKey::Rerank { rows, bits } => {
+                session.answer_rerank_rows(&queries, rows, *bits)
+            }
         }));
         // publish stats before replying, so a client that just got its
         // answer reads a snapshot that already includes its batch (and
@@ -367,6 +439,42 @@ mod tests {
         assert_eq!(batcher.stats().batches, 3, "three distinct ranges, three passes");
         batcher.close();
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cascade_jobs_fuse_by_plan_and_answer_with_top() {
+        let dir = std::env::temp_dir().join(format!(
+            "qless_batcher_casc_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let probe_path = crate::datastore::default_store_path(&dir, p1);
+        seeded_datastore(&probe_path, p1, 16, 64, &[1.0], 0);
+        seeded_datastore(&crate::datastore::default_store_path(&dir, p8), p8, 16, 64, &[1.0], 0);
+        let session = Session::open(&probe_path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(300), max_batch: 16, queue_cap: 64 },
+        );
+        let plan = CascadePlan { probe: 1, rerank: 8, mult: 2 };
+        let rxs: Vec<_> = (0..3)
+            .map(|i| batcher.submit_cascade(query(64, 700 + i), plan, 2).unwrap())
+            .collect();
+        let answers: Vec<Answer> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        for a in &answers {
+            assert_eq!(a.batched, 3, "same-plan cascade burst must fuse");
+            assert!(a.scores.is_empty());
+            assert_eq!(a.top.as_ref().unwrap().len(), 2);
+        }
+        let stats = batcher.stats();
+        assert_eq!(stats.batches, 1, "one fused cascade batch");
+        assert_eq!(stats.fused_passes, 2, "probe pass + rerank pass");
+        batcher.close();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

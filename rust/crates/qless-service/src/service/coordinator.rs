@@ -43,11 +43,11 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::influence::ScanStats;
-use crate::select::merge_top_k;
+use crate::select::{merge_top_k, top_k_scored_among};
 use crate::util::pool::TaskPool;
 use crate::{info, warn_};
 
-use super::proto::{self, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+use super::proto::{self, CascadeField, Request, Response, ScoreReply, ScoreRequest, StatsReply};
 use super::server::{serve_lines, Client, ServeOpts, Server};
 use super::session::ServiceStats;
 
@@ -490,12 +490,112 @@ fn sub_score(
     Ok(r)
 }
 
+/// Fan one sub-request per part out to the fleet (part `i` goes to the
+/// `i`-th reachable worker, all in parallel), then re-issue failed parts
+/// to surviving workers round-robin for up to `ctx.retries` rounds.
+/// `issue(addr, (start, len))` performs one deadline-bounded sub-request
+/// — re-issues run the **same** closure, so a re-issued range carries the
+/// exact cascade stage and precision of the first attempt. `what` names
+/// the part unit in degrade errors ("rows" for row ranges, "candidates"
+/// for rerank chunks); a part still unanswered after every round degrades
+/// the query to an error — a clean failure, never a truncated answer.
+fn fan_out(
+    ctx: &CoCtx,
+    states: &[(usize, StatsReply)],
+    parts: &[(usize, usize)],
+    what: &str,
+    issue: &(dyn Fn(&str, (usize, usize)) -> Result<ScoreReply> + Sync),
+) -> Result<Vec<ScoreReply>> {
+    let mut results: Vec<Option<ScoreReply>> = std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, len))| {
+                let slot = &ctx.workers[states[i].0];
+                s.spawn(move || {
+                    let res = issue(slot.addr.as_str(), (start, len));
+                    if let Err(e) = &res {
+                        slot.healthy.store(false, Ordering::SeqCst);
+                        warn_!(
+                            "coordinator: worker {} failed {what} {start}+{len}: {e:#}",
+                            slot.addr
+                        );
+                    }
+                    res.ok()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
+    });
+    let mut cursor = 0usize;
+    for _round in 0..ctx.retries {
+        let pending: Vec<usize> =
+            (0..parts.len()).filter(|&i| results[i].is_none()).collect();
+        if pending.is_empty() {
+            break;
+        }
+        for pi in pending {
+            let (start, len) = parts[pi];
+            let healthy: Vec<&WorkerSlot> = ctx
+                .workers
+                .iter()
+                .filter(|w| w.healthy.load(Ordering::SeqCst))
+                .collect();
+            if healthy.is_empty() {
+                bail!("{what} {start}..{} unanswered and no workers left", start + len);
+            }
+            let slot = healthy[cursor % healthy.len()];
+            cursor += 1;
+            match issue(slot.addr.as_str(), (start, len)) {
+                Ok(r) => results[pi] = Some(r),
+                Err(e) => {
+                    slot.healthy.store(false, Ordering::SeqCst);
+                    warn_!(
+                        "coordinator: re-issue of {what} {start}+{len} to {} failed: {e:#}",
+                        slot.addr
+                    );
+                }
+            }
+        }
+    }
+    if let Some(pi) = results.iter().position(Option::is_none) {
+        let (start, len) = parts[pi];
+        bail!(
+            "{what} {start}..{} unanswered after {} re-issue round(s)",
+            start + len,
+            ctx.retries
+        );
+    }
+    Ok(results.into_iter().map(|r| r.expect("checked")).collect())
+}
+
+/// Sum I/O across sub-replies (max over the per-pass geometry counters,
+/// which describe the same query on every worker).
+fn merge_pass<'a>(replies: impl Iterator<Item = &'a ScoreReply>) -> ScanStats {
+    let mut pass = ScanStats::default();
+    for r in replies {
+        pass.checkpoints = pass.checkpoints.max(r.pass.checkpoints);
+        pass.tasks = pass.tasks.max(r.pass.tasks);
+        pass.shards_read += r.pass.shards_read;
+        pass.rows_read += r.pass.rows_read;
+        pass.bytes_read += r.pass.bytes_read;
+    }
+    pass
+}
+
 /// The scatter-gather hot path: probe → pin `(G, N)` → partition → fan
 /// out → re-issue failures → merge (see the module docs for why the
-/// merge is bit-exact).
+/// merge is bit-exact). A request carrying a full `cascade` field takes
+/// the two-wave path in [`scatter_cascade`] instead.
 fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
     if req.rows.is_some() {
         bail!("coordinator does not accept ranged (worker) requests");
+    }
+    if matches!(
+        req.cascade,
+        Some(CascadeField::Probe { .. }) | Some(CascadeField::Rerank { .. })
+    ) {
+        bail!("coordinator does not accept cascade stage (worker) verbs");
     }
     // admission checks mirroring ScoreQuery::validate's geometry half, so
     // a malformed query dies here instead of fanning out N times
@@ -513,84 +613,19 @@ fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
             ctx.k
         );
     }
+    if let Some(CascadeField::Full { probe, rerank, mult }) = req.cascade {
+        return scatter_cascade(req, ctx, probe, rerank, mult);
+    }
     let states = probe_fleet(ctx)?;
     let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
     let n = states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty");
     anyhow::ensure!(n > 0, "workers serve an empty store");
     let parts = partition(n, states.len());
-    // first wave: part i → the i-th reachable worker, all in parallel
-    let mut results: Vec<Option<ScoreReply>> = std::thread::scope(|s| {
-        let handles: Vec<_> = parts
-            .iter()
-            .enumerate()
-            .map(|(i, &(start, len))| {
-                let slot = &ctx.workers[states[i].0];
-                s.spawn(move || {
-                    let res = sub_score(slot.addr.as_str(), req, start, len, ctx.deadline);
-                    if let Err(e) = &res {
-                        slot.healthy.store(false, Ordering::SeqCst);
-                        warn_!(
-                            "coordinator: worker {} failed rows {start}+{len}: {e:#}",
-                            slot.addr
-                        );
-                    }
-                    res.ok()
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap_or(None)).collect()
-    });
-    // re-issue failed ranges to surviving workers, round-robin, up to
-    // `retries` rounds; anything still unanswered degrades to an error
-    let mut cursor = 0usize;
-    for _round in 0..ctx.retries {
-        let pending: Vec<usize> =
-            (0..parts.len()).filter(|&i| results[i].is_none()).collect();
-        if pending.is_empty() {
-            break;
-        }
-        for pi in pending {
-            let (start, len) = parts[pi];
-            let healthy: Vec<&WorkerSlot> = ctx
-                .workers
-                .iter()
-                .filter(|w| w.healthy.load(Ordering::SeqCst))
-                .collect();
-            if healthy.is_empty() {
-                bail!("rows {start}..{} unanswered and no workers left", start + len);
-            }
-            let slot = healthy[cursor % healthy.len()];
-            cursor += 1;
-            match sub_score(slot.addr.as_str(), req, start, len, ctx.deadline) {
-                Ok(r) => results[pi] = Some(r),
-                Err(e) => {
-                    slot.healthy.store(false, Ordering::SeqCst);
-                    warn_!(
-                        "coordinator: re-issue of rows {start}+{len} to {} failed: {e:#}",
-                        slot.addr
-                    );
-                }
-            }
-        }
-    }
-    if let Some(pi) = results.iter().position(Option::is_none) {
-        let (start, len) = parts[pi];
-        bail!(
-            "rows {start}..{} unanswered after {} re-issue round(s)",
-            start + len,
-            ctx.retries
-        );
-    }
-    let replies: Vec<ScoreReply> = results.into_iter().map(|r| r.expect("checked")).collect();
+    let replies = fan_out(ctx, &states, &parts, "rows", &|addr, (start, len)| {
+        sub_score(addr, req, start, len, ctx.deadline)
+    })?;
     // merge: summed I/O, comparator-exact top-k, concatenated scores
-    let mut pass = ScanStats::default();
-    for r in &replies {
-        pass.checkpoints = pass.checkpoints.max(r.pass.checkpoints);
-        pass.tasks = pass.tasks.max(r.pass.tasks);
-        pass.shards_read += r.pass.shards_read;
-        pass.rows_read += r.pass.rows_read;
-        pass.bytes_read += r.pass.bytes_read;
-    }
+    let pass = merge_pass(replies.iter());
     let tops: Vec<Vec<(usize, f32)>> = replies.iter().map(|r| r.top.clone()).collect();
     let scores = if req.want_scores {
         let mut full = vec![0f32; n];
@@ -611,6 +646,89 @@ fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
         rows: None,
         top: merge_top_k(&tops, req.top_k),
         scores,
+    })
+}
+
+/// The two-wave cascade scatter. Wave 1: every worker probes its slice of
+/// the pinned `[0, N)` row space at `probe` bits and returns the slice's
+/// top-`mult · top_k` candidates; the coordinator merges them into one
+/// global candidate pool of at most `mult · top_k` rows. Wave 2: the pool
+/// (as a sorted row list) is cut into contiguous chunks and re-scored at
+/// `rerank` bits via the `rows_list` worker verb; the final top-`top_k`
+/// uses the same `(score desc, index asc)` comparator as a single node.
+///
+/// Exactness mirrors the single-node cascade: per-slice top-`c·k` pools
+/// jointly cover the global top-`c·k` (each global winner is in some
+/// slice, where at most `c·k - 1` rows can outrank it), and the
+/// append-only contract means rows below the pinned `N` are immutable
+/// between waves, so an ingest landing mid-cascade cannot skew the
+/// rerank. Worker failures in either wave ride the same re-issue
+/// machinery as plain scatters ([`fan_out`]) — a worker that lacks one of
+/// the cascade's precision stores fails its sub-query cleanly and the
+/// range is re-issued, so a degraded fleet yields an error, never a
+/// silently exhaustive or truncated answer.
+fn scatter_cascade(
+    req: &ScoreRequest,
+    ctx: &CoCtx,
+    probe: u8,
+    rerank: u8,
+    mult: usize,
+) -> Result<ScoreReply> {
+    anyhow::ensure!(req.top_k >= 1, "cascade needs top_k >= 1 final selections per task");
+    anyhow::ensure!(
+        !req.want_scores,
+        "a cascade reply carries only the reranked top list; drop 'want_scores' or score \
+         exhaustively"
+    );
+    anyhow::ensure!(
+        req.since_gen.is_none(),
+        "cascade cannot be combined with 'since_gen'; score the new rows exhaustively instead"
+    );
+    let states = probe_fleet(ctx)?;
+    let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
+    let n = states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty");
+    anyhow::ensure!(n > 0, "workers serve an empty store");
+    let ck = req.top_k.saturating_mul(mult).min(n);
+    let parts = partition(n, states.len());
+    let probes = fan_out(ctx, &states, &parts, "rows", &|addr, (start, len)| {
+        let mut c = Client::connect_deadline(addr, ctx.deadline)?;
+        let r = c.score_probe(&req.val, ck, (start as u64, len as u64), probe)?;
+        anyhow::ensure!(
+            r.rows == Some((start as u64, len as u64)),
+            "worker answered range {:?} for request range {start}+{len}",
+            r.rows
+        );
+        Ok(r)
+    })?;
+    // merged candidate pool as a sorted, deduplicated global row list —
+    // sorted so wave-2 chunks are contiguous row runs (sequential reads)
+    let tops: Vec<Vec<(usize, f32)>> = probes.iter().map(|r| r.top.clone()).collect();
+    let mut rows: Vec<usize> = merge_top_k(&tops, ck).into_iter().map(|(i, _)| i).collect();
+    rows.sort_unstable();
+    rows.dedup();
+    anyhow::ensure!(!rows.is_empty(), "probe wave surfaced no candidates");
+    let chunks = partition(rows.len(), states.len());
+    let reranks = fan_out(ctx, &states, &chunks, "candidates", &|addr, (start, len)| {
+        let mut c = Client::connect_deadline(addr, ctx.deadline)?;
+        let r = c.score_rerank(&req.val, rows[start..start + len].to_vec(), rerank)?;
+        anyhow::ensure!(
+            r.top.len() == len,
+            "worker returned {} reranked rows for a {len}-candidate chunk",
+            r.top.len()
+        );
+        Ok(r)
+    })?;
+    let pass = merge_pass(probes.iter().chain(reranks.iter()));
+    let pairs: Vec<(usize, f32)> = reranks.iter().flat_map(|r| r.top.iter().copied()).collect();
+    Ok(ScoreReply {
+        id: req.id,
+        generation,
+        cached: false,
+        batched: probes.iter().chain(reranks.iter()).map(|r| r.batched).max().unwrap_or(0),
+        pass,
+        rows: None,
+        top: top_k_scored_among(&pairs, req.top_k),
+        scores: None,
     })
 }
 
@@ -700,5 +818,62 @@ mod tests {
         single.stop();
         single.join().unwrap();
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn local_coordinator_cascade_matches_single_node_exhaustive() {
+        let dir = std::env::temp_dir().join(format!(
+            "qless_coord_casc_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (n, k) = (29usize, 64usize);
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let probe_path = crate::datastore::default_store_path(&dir, p1);
+        let rerank_path = crate::datastore::default_store_path(&dir, p8);
+        seeded_datastore(&probe_path, p1, n, k, &[0.7, 0.3], 0);
+        seeded_datastore(&rerank_path, p8, n, k, &[0.7, 0.3], 0);
+        let worker_opts = ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 0,
+            workers: 2,
+            shard_rows: 5,
+            ..Default::default()
+        };
+        // single-node 8-bit exhaustive reference
+        let single = Server::start(&rerank_path, worker_opts.clone()).unwrap();
+        let val = vec![feats(2, k, 11), feats(2, k, 12)];
+        let mut sc = Client::connect(single.addr()).unwrap();
+        let want = sc.score(&val, 5, false).unwrap();
+        // 3 local workers (serving the 1-bit store, siblings on demand)
+        let co = Coordinator::start_local(
+            &probe_path,
+            3,
+            worker_opts,
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(co.addr()).unwrap();
+        // mult 8 · top_k 5 = 40 candidates >= 29 rows → exact cascade
+        let got = c.score_cascade(&val, 5, 1, 8, 8).unwrap();
+        assert_eq!(got.top.len(), 5);
+        for (g, w) in got.top.iter().zip(want.top.iter()) {
+            assert_eq!(g.0, w.0, "scattered cascade vs single-node exhaustive");
+            assert_eq!(g.1.to_bits(), w.1.to_bits(), "bit-exact rerank scores");
+        }
+        // both waves covered every row once per checkpoint (exact regime)
+        assert_eq!(got.pass.rows_read, (4 * n) as u64);
+        // stage verbs are worker-facing; the coordinator front rejects them
+        let err = c.score_probe(&val, 5, (0, 10), 1).unwrap_err();
+        assert!(format!("{err:#}").contains("stage"), "{err:#}");
+        let err = c.score_rerank(&val, vec![0, 3], 8).unwrap_err();
+        assert!(format!("{err:#}").contains("stage"), "{err:#}");
+        c.shutdown().unwrap();
+        co.join().unwrap();
+        single.stop();
+        single.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -46,6 +46,41 @@ impl Request {
     }
 }
 
+/// The `cascade` field of a score request: run the two-stage precision
+/// cascade instead of one exhaustive scan (PROTOCOL.md §Cascade).
+///
+/// Precisions are named by **bits**; the serving side resolves them
+/// against the run directory's sibling stores (scheme comes from what is
+/// actually on disk — a request cannot pick between two schemes at the
+/// same bitwidth, that is a server-side configuration error).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CascadeField {
+    /// The client verb: probe every row at `probe` bits, keep
+    /// `mult × top_k` candidates per task, re-score them at `rerank` bits.
+    Full {
+        /// Probe-stage storage bitwidth (the cheap full scan).
+        probe: u8,
+        /// Rerank-stage storage bitwidth (candidate re-scoring).
+        rerank: u8,
+        /// Candidate multiplier `c` (stage 1 keeps `c·top_k` per task).
+        mult: usize,
+    },
+    /// Scatter-gather **worker** verb, wave 1: probe-precision ranged scan
+    /// (pairs with the request's `rows` range; `top_k` carries `c·k`).
+    Probe {
+        /// Probe-stage storage bitwidth.
+        probe: u8,
+    },
+    /// Scatter-gather **worker** verb, wave 2: re-score exactly the listed
+    /// global rows at the rerank precision and return every (row, score).
+    Rerank {
+        /// Rerank-stage storage bitwidth.
+        rerank: u8,
+        /// Global row indices to re-score, strictly increasing.
+        rows: Vec<usize>,
+    },
+}
+
 /// The `score` op's payload: per-checkpoint raw validation features plus
 /// response-shaping knobs.
 #[derive(Debug, Clone)]
@@ -64,6 +99,9 @@ pub struct ScoreRequest {
     /// `top` indices stay global; a returned `scores` vector covers only
     /// the range. `None` scores every live row.
     pub rows: Option<(u64, u64)>,
+    /// Two-stage precision cascade (PROTOCOL.md §Cascade); `None` runs
+    /// the ordinary exhaustive scan at the served precision.
+    pub cascade: Option<CascadeField>,
     /// One raw `n × k` feature matrix per warmup checkpoint, in order.
     pub val: Vec<FeatureMatrix>,
 }
@@ -169,6 +207,27 @@ fn rows_json(start: u64, len: u64) -> Json {
     Json::Arr(vec![Json::Num(start as f64), Json::Num(len as f64)])
 }
 
+fn cascade_json(c: &CascadeField) -> Json {
+    let mut o = Json::obj();
+    match c {
+        CascadeField::Full { probe, rerank, mult } => {
+            o.set("probe", *probe as usize)
+                .set("rerank", *rerank as usize)
+                .set("mult", *mult);
+        }
+        CascadeField::Probe { probe } => {
+            o.set("stage", "probe").set("probe", *probe as usize);
+        }
+        CascadeField::Rerank { rerank, rows } => {
+            o.set("stage", "rerank").set("rerank", *rerank as usize).set(
+                "rows_list",
+                Json::Arr(rows.iter().map(|&r| Json::Num(r as f64)).collect()),
+            );
+        }
+    }
+    o
+}
+
 fn matrix_json(m: &FeatureMatrix) -> Json {
     let mut o = Json::obj();
     o.set("n", m.n).set("k", m.k).set("data", f32s_json(&m.data));
@@ -214,6 +273,9 @@ pub fn encode_request(req: &Request) -> String {
             }
             if let Some((start, len)) = r.rows {
                 o.set("rows", rows_json(start, len));
+            }
+            if let Some(c) = &r.cascade {
+                o.set("cascade", cascade_json(c));
             }
             o.set("val", Json::Arr(r.val.iter().map(matrix_json).collect()));
         }
@@ -321,6 +383,80 @@ fn parse_rows(j: &Json) -> Result<Option<(u64, u64)>> {
     }
 }
 
+/// Legal storage bitwidths a cascade stage may name.
+const CASCADE_BITS: [u8; 5] = [1, 2, 4, 8, 16];
+
+fn parse_cascade_bits(j: &Json, key: &str) -> Result<u8> {
+    let b = j.req(key)?.as_usize()?;
+    if b == 0 || b > u8::MAX as usize || !CASCADE_BITS.contains(&(b as u8)) {
+        bail!("cascade '{key}' bits must be one of 1,2,4,8,16 (got {b})");
+    }
+    Ok(b as u8)
+}
+
+/// Strict parse of the `cascade` object: unknown keys are an error, never
+/// ignored — a typoed field must not silently fall back to an exhaustive
+/// scan or a truncated candidate list.
+fn parse_cascade(j: &Json) -> Result<Option<CascadeField>> {
+    let Some(c) = j.get("cascade") else { return Ok(None) };
+    let obj = c.as_obj().map_err(|_| {
+        anyhow::anyhow!("'cascade' must be an object (see PROTOCOL.md §Cascade)")
+    })?;
+    let check_keys = |allowed: &[&str]| -> Result<()> {
+        for k in obj.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown key '{k}' in 'cascade' (allowed here: {})",
+                    allowed.join(", ")
+                );
+            }
+        }
+        Ok(())
+    };
+    let field = match c.get("stage") {
+        None => {
+            check_keys(&["probe", "rerank", "mult"])?;
+            let probe = parse_cascade_bits(c, "probe")?;
+            let rerank = parse_cascade_bits(c, "rerank")?;
+            if probe >= rerank {
+                bail!("cascade probe bits must be below rerank bits (got {probe},{rerank})");
+            }
+            let mult = match c.get("mult") {
+                Some(v) => v.as_usize()?,
+                None => crate::influence::DEFAULT_CASCADE_MULT,
+            };
+            if mult == 0 {
+                bail!("cascade 'mult' must be >= 1");
+            }
+            CascadeField::Full { probe, rerank, mult }
+        }
+        Some(stage) => match stage.as_str()? {
+            "probe" => {
+                check_keys(&["stage", "probe"])?;
+                CascadeField::Probe { probe: parse_cascade_bits(c, "probe")? }
+            }
+            "rerank" => {
+                check_keys(&["stage", "rerank", "rows_list"])?;
+                let rows = c
+                    .req("rows_list")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                if rows.is_empty() {
+                    bail!("cascade 'rows_list' must name at least one row");
+                }
+                if rows.windows(2).any(|w| w[0] >= w[1]) {
+                    bail!("cascade 'rows_list' must be strictly increasing");
+                }
+                CascadeField::Rerank { rerank: parse_cascade_bits(c, "rerank")?, rows }
+            }
+            other => bail!("unknown cascade stage '{other}' (expected probe|rerank)"),
+        },
+    };
+    Ok(Some(field))
+}
+
 fn parse_scan_stats(j: &Json) -> Result<ScanStats> {
     Ok(ScanStats {
         checkpoints: j.req("checkpoints")?.as_usize()?,
@@ -374,13 +510,22 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 None => None,
             };
             let rows = parse_rows(&j)?;
+            let cascade = parse_cascade(&j)?;
             let val = j
                 .req("val")?
                 .as_arr()?
                 .iter()
                 .map(parse_matrix)
                 .collect::<Result<Vec<_>>>()?;
-            Ok(Request::Score(ScoreRequest { id, top_k, want_scores, since_gen, rows, val }))
+            Ok(Request::Score(ScoreRequest {
+                id,
+                top_k,
+                want_scores,
+                since_gen,
+                rows,
+                cascade,
+                val,
+            }))
         }
         "stats" => Ok(Request::Stats { id }),
         "ping" => Ok(Request::Ping { id }),
@@ -464,6 +609,7 @@ mod tests {
             want_scores: true,
             since_gen: Some(3),
             rows: Some((120, 64)),
+            cascade: None,
             val: vec![mat(2, 8, 1), mat(3, 8, 2)],
         });
         let line = encode_request(&req);
@@ -616,9 +762,93 @@ mod tests {
                 assert!(!r.want_scores);
                 assert_eq!(r.since_gen, None, "no filter by default");
                 assert_eq!(r.rows, None, "full row space by default");
+                assert_eq!(r.cascade, None, "exhaustive scan by default");
                 assert_eq!(r.val[0].data, vec![0.5, 1.0]);
             }
             other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    fn score_req(cascade: Option<CascadeField>) -> Request {
+        Request::Score(ScoreRequest {
+            id: 9,
+            top_k: 4,
+            want_scores: false,
+            since_gen: None,
+            rows: None,
+            cascade,
+            val: vec![mat(2, 8, 3)],
+        })
+    }
+
+    #[test]
+    fn cascade_fields_roundtrip() {
+        for c in [
+            CascadeField::Full { probe: 1, rerank: 8, mult: 4 },
+            CascadeField::Probe { probe: 1 },
+            CascadeField::Rerank { rerank: 8, rows: vec![3, 17, 640] },
+        ] {
+            let line = encode_request(&score_req(Some(c.clone())));
+            match parse_request(&line).unwrap() {
+                Request::Score(r) => assert_eq!(r.cascade, Some(c), "{line}"),
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+        // mult is optional on the wire and defaults to the library default
+        let line = "{\"op\":\"score\",\"top_k\":2,\"cascade\":{\"probe\":1,\"rerank\":8},\
+                    \"val\":[{\"n\":1,\"k\":2,\"data\":[0.5,1]}]}";
+        match parse_request(line).unwrap() {
+            Request::Score(r) => assert_eq!(
+                r.cascade,
+                Some(CascadeField::Full {
+                    probe: 1,
+                    rerank: 8,
+                    mult: crate::influence::DEFAULT_CASCADE_MULT
+                })
+            ),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_cascade_fields_rejected() {
+        let wrap = |cascade: &str| {
+            format!(
+                "{{\"op\":\"score\",\"top_k\":2,\"cascade\":{cascade},\
+                 \"val\":[{{\"n\":1,\"k\":2,\"data\":[0.5,1]}}]}}"
+            )
+        };
+        let cases: &[(&str, &str)] = &[
+            ("3", "must be an object"),
+            ("{\"probe\":1}", "missing key 'rerank'"),
+            ("{\"rerank\":8}", "missing key 'probe'"),
+            ("{\"probe\":3,\"rerank\":8}", "one of 1,2,4,8,16"),
+            ("{\"probe\":1,\"rerank\":99}", "one of 1,2,4,8,16"),
+            ("{\"probe\":8,\"rerank\":1}", "below rerank"),
+            ("{\"probe\":8,\"rerank\":8}", "below rerank"),
+            ("{\"probe\":1,\"rerank\":8,\"mult\":0}", "'mult' must be >= 1"),
+            ("{\"probe\":1,\"rerank\":8,\"multt\":2}", "unknown key 'multt'"),
+            ("{\"probe\":1,\"rerank\":8,\"rows_list\":[1]}", "unknown key 'rows_list'"),
+            ("{\"stage\":\"launch\",\"probe\":1}", "unknown cascade stage"),
+            ("{\"stage\":\"probe\"}", "missing key 'probe'"),
+            ("{\"stage\":\"probe\",\"probe\":1,\"mult\":2}", "unknown key 'mult'"),
+            ("{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[]}", "at least one row"),
+            (
+                "{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[5,5]}",
+                "strictly increasing",
+            ),
+            (
+                "{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[9,2]}",
+                "strictly increasing",
+            ),
+            ("{\"stage\":\"rerank\",\"rerank\":8}", "missing key 'rows_list'"),
+        ];
+        for (cascade, want) in cases {
+            let err = match parse_request(&wrap(cascade)) {
+                Err(e) => format!("{e:#}"),
+                Ok(r) => panic!("cascade {cascade} must be rejected, parsed {r:?}"),
+            };
+            assert!(err.contains(want), "cascade {cascade}: got '{err}', want '{want}'");
         }
     }
 }

@@ -32,8 +32,8 @@ use crate::util::pool::TaskPool;
 use crate::{info, warn_};
 
 use super::batcher::{Batcher, BatcherOpts};
-use super::proto::{self, Request, Response, ScoreReply, ScoreRequest, StatsReply};
-use super::session::{ScoreQuery, ServiceStats, Session, SessionOpts};
+use super::proto::{self, CascadeField, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+use super::session::{CascadePlan, ScoreQuery, ServiceStats, Session, SessionOpts};
 
 /// Tuning of `qless serve`. CLI flags map 1:1 onto these fields; the top
 /// crate's `Config::serve_opts()` does the mapping.
@@ -355,36 +355,101 @@ fn handle_line(line: &str, ctx: &Ctx) -> Response {
 }
 
 fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
-    let query = ScoreQuery { val: req.val };
+    let ScoreRequest { id, top_k, want_scores, since_gen, rows: wire_rows, val, cascade } = req;
+    let query = ScoreQuery { val };
     if let Err(e) = query.validate(&ctx.header) {
-        return Response::Error { id: req.id, error: format!("invalid query: {e:#}") };
+        return Response::Error { id, error: format!("invalid query: {e:#}") };
     }
-    let rows = req.rows.map(|(s, l)| (s as usize, l as usize));
-    let rx = match ctx.batcher.submit_ranged(query, rows) {
+    let rows = wire_rows.map(|(s, l)| (s as usize, l as usize));
+    // The `cascade` field picks the scan strategy; every variant still
+    // funnels through the batcher so concurrent same-shape requests fuse.
+    let submitted = match &cascade {
+        None => ctx.batcher.submit_ranged(query, rows),
+        Some(CascadeField::Full { probe, rerank, mult }) => {
+            if top_k == 0 {
+                let error = "cascade needs top_k >= 1 final selections per task".into();
+                return Response::Error { id, error };
+            }
+            if want_scores {
+                let error = "a cascade reply carries only the reranked top list; \
+                             drop 'want_scores' or score exhaustively"
+                    .into();
+                return Response::Error { id, error };
+            }
+            if since_gen.is_some() {
+                let error = "cascade cannot be combined with 'since_gen'; \
+                             score the new rows exhaustively instead"
+                    .into();
+                return Response::Error { id, error };
+            }
+            if rows.is_some() {
+                let error = "a full cascade request cannot carry a 'rows' range; \
+                             coordinators split cascades into probe/rerank stage verbs"
+                    .into();
+                return Response::Error { id, error };
+            }
+            let plan = CascadePlan { probe: *probe, rerank: *rerank, mult: *mult };
+            ctx.batcher.submit_cascade(query, plan, top_k)
+        }
+        Some(CascadeField::Probe { probe }) => match rows {
+            None => {
+                let error = "a probe-stage request must carry a 'rows' range".into();
+                return Response::Error { id, error };
+            }
+            Some((start, len)) => ctx.batcher.submit_probe(query, start, len, *probe),
+        },
+        Some(CascadeField::Rerank { rerank, rows: row_list }) => {
+            if rows.is_some() {
+                let error = "a rerank-stage request carries its rows in 'rows_list', \
+                             not a 'rows' range"
+                    .into();
+                return Response::Error { id, error };
+            }
+            ctx.batcher.submit_rerank(query, Arc::new(row_list.clone()), *rerank)
+        }
+    };
+    let rx = match submitted {
         Ok(rx) => rx,
-        Err(e) => return Response::Error { id: req.id, error: format!("{e:#}") },
+        Err(e) => return Response::Error { id, error: format!("{e:#}") },
     };
     match rx.recv() {
         Ok(Ok(ans)) => {
+            // full-cascade and rerank-stage answers carry their ranked /
+            // scored pairs in `ans.top`; nothing to rank server-side
+            if matches!(
+                cascade,
+                Some(CascadeField::Full { .. }) | Some(CascadeField::Rerank { .. })
+            ) {
+                return Response::Score(ScoreReply {
+                    id,
+                    generation: ans.generation,
+                    cached: ans.cached,
+                    batched: ans.batched,
+                    pass: ans.pass,
+                    rows: None,
+                    top: ans.top.unwrap_or_default(),
+                    scores: None,
+                });
+            }
             let (top, scores) = match rows {
                 None => {
                     // `since_gen` restricts the top list to rows newer
                     // than the named generation (resolved against the
                     // answer's own member map, so it cannot race a
                     // concurrent ingest)
-                    let first_row = match req.since_gen {
+                    let first_row = match since_gen {
                         None => 0,
                         Some(g) => ans.first_row_after(g),
                     };
-                    let top = top_k_scored_since(&ans.scores, req.top_k, first_row);
-                    (top, req.want_scores.then(|| ans.scores.as_ref().clone()))
+                    let top = top_k_scored_since(&ans.scores, top_k, first_row);
+                    (top, want_scores.then(|| ans.scores.as_ref().clone()))
                 }
                 Some((start, len)) => {
                     // ranged (worker) answer: `ans.scores[j]` is global
                     // row `start + j`; rank the local slice and lift the
                     // winners back to global indices so a coordinator can
                     // merge per-worker tops directly
-                    let first_global = match req.since_gen {
+                    let first_global = match since_gen {
                         None => start,
                         Some(g) => ans
                             .gen_rows
@@ -396,26 +461,26 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
                             .max(start),
                     };
                     let from_local = (first_global - start).min(len);
-                    let mut top = top_k_scored_since(&ans.scores, req.top_k, from_local);
+                    let mut top = top_k_scored_since(&ans.scores, top_k, from_local);
                     for entry in &mut top {
                         entry.0 += start;
                     }
-                    (top, req.want_scores.then(|| ans.scores.as_ref().clone()))
+                    (top, want_scores.then(|| ans.scores.as_ref().clone()))
                 }
             };
             Response::Score(ScoreReply {
-                id: req.id,
+                id,
                 generation: ans.generation,
                 cached: ans.cached,
                 batched: ans.batched,
                 pass: ans.pass,
-                rows: req.rows,
+                rows: wire_rows,
                 top,
                 scores,
             })
         }
-        Ok(Err(msg)) => Response::Error { id: req.id, error: msg },
-        Err(_) => Response::Error { id: req.id, error: "scoring worker unavailable".into() },
+        Ok(Err(msg)) => Response::Error { id, error: msg },
+        Err(_) => Response::Error { id, error: "scoring worker unavailable".into() },
     }
 }
 
@@ -531,16 +596,88 @@ impl Client {
         since_gen: Option<u64>,
         rows: Option<(u64, u64)>,
     ) -> Result<ScoreReply> {
-        let id = self.bump();
-        let req = Request::Score(ScoreRequest {
-            id,
+        self.score_req(ScoreRequest {
+            id: 0,
             top_k,
             want_scores,
             since_gen,
             rows,
             val: val.to_vec(),
-        });
-        match self.roundtrip(&req)? {
+            cascade: None,
+        })
+    }
+
+    /// Two-stage cascade score: the server probes **every** live row at
+    /// `probe` bits, keeps the `mult · top_k` best candidates per task,
+    /// re-scores only those at `rerank` bits, and returns the reranked
+    /// top-`top_k` list. Both precisions must exist as sibling stores in
+    /// the served run directory (build the run with `--bits` listing
+    /// them). `mult · top_k >=` the live row count makes the result
+    /// byte-identical to an exhaustive `rerank`-bit scan.
+    pub fn score_cascade(
+        &mut self,
+        val: &[FeatureMatrix],
+        top_k: usize,
+        probe: u8,
+        rerank: u8,
+        mult: usize,
+    ) -> Result<ScoreReply> {
+        self.score_req(ScoreRequest {
+            id: 0,
+            top_k,
+            want_scores: false,
+            since_gen: None,
+            rows: None,
+            val: val.to_vec(),
+            cascade: Some(CascadeField::Full { probe, rerank, mult }),
+        })
+    }
+
+    /// Probe-stage worker verb (coordinator wave 1): scan only rows
+    /// `start .. start + len` at `probe` bits and return the range's
+    /// top-`keep` candidates as global indices.
+    pub(crate) fn score_probe(
+        &mut self,
+        val: &[FeatureMatrix],
+        keep: usize,
+        rows: (u64, u64),
+        probe: u8,
+    ) -> Result<ScoreReply> {
+        self.score_req(ScoreRequest {
+            id: 0,
+            top_k: keep,
+            want_scores: false,
+            since_gen: None,
+            rows: Some(rows),
+            val: val.to_vec(),
+            cascade: Some(CascadeField::Probe { probe }),
+        })
+    }
+
+    /// Rerank-stage worker verb (coordinator wave 2): score exactly the
+    /// listed global rows (strictly increasing) at `rerank` bits; the
+    /// reply's `top` holds every listed row with its score, in list order.
+    pub(crate) fn score_rerank(
+        &mut self,
+        val: &[FeatureMatrix],
+        rows: Vec<usize>,
+        rerank: u8,
+    ) -> Result<ScoreReply> {
+        self.score_req(ScoreRequest {
+            id: 0,
+            top_k: 0,
+            want_scores: false,
+            since_gen: None,
+            rows: None,
+            val: val.to_vec(),
+            cascade: Some(CascadeField::Rerank { rerank, rows }),
+        })
+    }
+
+    fn score_req(&mut self, mut req: ScoreRequest) -> Result<ScoreReply> {
+        let id = self.bump();
+        req.id = id;
+        match self.roundtrip(&Request::Score(req))? {
             Response::Score(r) => {
                 anyhow::ensure!(r.id == id, "response id {} for request {id}", r.id);
                 Ok(r)
@@ -650,6 +787,56 @@ mod tests {
         c.shutdown().unwrap();
         server.join().unwrap();
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn serve_cascade_matches_exhaustive_rerank_scan() {
+        let dir = std::env::temp_dir().join(format!(
+            "qless_server_casc_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (n, k) = (16usize, 64usize);
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let probe_path = crate::datastore::default_store_path(&dir, p1);
+        let rerank_path = crate::datastore::default_store_path(&dir, p8);
+        seeded_datastore(&probe_path, p1, n, k, &[0.7, 0.3], 0);
+        seeded_datastore(&rerank_path, p8, n, k, &[0.7, 0.3], 0);
+        let server = Server::start(&probe_path, ephemeral_opts()).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let val = vec![feats(2, k, 9), feats(2, k, 10)];
+        // mult 8 · top_k 4 = 32 candidates >= 16 rows → exact cascade
+        let r = c.score_cascade(&val, 4, 1, 8, 8).unwrap();
+        assert_eq!(r.top.len(), 4);
+        assert!(r.scores.is_none() && r.rows.is_none());
+        let server8 = Server::start(&rerank_path, ephemeral_opts()).unwrap();
+        let mut c8 = Client::connect(server8.addr()).unwrap();
+        let full = c8.score(&val, 4, true).unwrap();
+        for (got, want) in r.top.iter().zip(full.top.iter()) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "cascade must be bit-exact");
+        }
+        // stage verbs over the wire: probe a range, rerank a row list
+        let rp = c.score_probe(&val, 3, (2, 9), 1).unwrap();
+        assert_eq!(rp.top.len(), 3);
+        assert!(rp.top.iter().all(|(i, _)| (2..11).contains(i)), "{:?}", rp.top);
+        let rr = c.score_rerank(&val, vec![1, 4, 9], 8).unwrap();
+        let scores = full.scores.unwrap();
+        assert_eq!(rr.top.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![1, 4, 9]);
+        for (i, s) in &rr.top {
+            assert_eq!(s.to_bits(), scores[*i].to_bits());
+        }
+        // rerank precision absent from the run dir → clean error, not a
+        // silent fallback
+        let err = c.score_cascade(&val, 4, 1, 16, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("16-bit"), "{err:#}");
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        c8.shutdown().unwrap();
+        server8.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

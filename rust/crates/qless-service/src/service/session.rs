@@ -24,15 +24,25 @@
 //! recomputed. The session is owned by one scoring worker
 //! ([`super::batcher`]), so an in-flight batch always finishes against
 //! the generation it started on — reloads happen between batches.
+//!
+//! [`Session::answer_cascade`] is the serving face of the two-stage
+//! precision cascade ([`crate::influence::cascade`]): sibling precision
+//! stores of the run directory are resolved on demand and share the
+//! pinned shard cache under store-scoped keys, so a warm cascade touches
+//! no disk at either precision. Its worker-verb halves —
+//! [`Session::answer_range_at`] (ranged probe) and
+//! [`Session::answer_rerank_rows`] (sparse rerank) — are what the
+//! scatter-gather coordinator drives on each worker.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::datastore::{Header, LiveStore, OwnedShard};
+use crate::datastore::{default_store_path, run_dir_precisions, Header, LiveStore, OwnedShard};
 use crate::grads::FeatureMatrix;
-use crate::influence::{MultiScan, ScanStats};
+use crate::influence::{cascade, MultiScan, ScanStats};
+use crate::select::top_k_scored_among;
 use crate::{info, warn_};
 
 use super::cache::{task_digest, LruCache};
@@ -173,6 +183,13 @@ pub struct Answer {
     /// test asserts a burst of Q queries cost one datastore traversal —
     /// and how a post-ingest extension proves it only read the new rows.
     pub pass: ScanStats,
+    /// Cascade-only payload: the final `(global row, rerank score)` pairs
+    /// — ranked top-k from [`Session::answer_cascade`], candidate pairs in
+    /// request row order from [`Session::answer_rerank_rows`]. `None` on
+    /// every exhaustive-scan path, whose ranking happens downstream over
+    /// [`Answer::scores`] (a cascade never materializes a full vector, so
+    /// for it `scores` is empty and this field is the answer).
+    pub top: Option<Vec<(usize, f32)>>,
 }
 
 impl Answer {
@@ -191,16 +208,46 @@ impl Answer {
     }
 }
 
+/// A sibling-precision store of the served run, opened lazily for
+/// cascade stages and kept warm (its shards share the session's pinned
+/// cache under store-scoped keys).
+struct AuxStore {
+    /// Storage bitwidth this store was resolved for.
+    bits: u8,
+    live: LiveStore,
+    rows_per_shard: usize,
+}
+
+/// The two-stage plan of a served cascade query (the session-level shape
+/// of the wire `cascade` object's client form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CascadePlan {
+    /// Probe-stage storage bitwidth (cheap full scan).
+    pub probe: u8,
+    /// Rerank-stage storage bitwidth (candidate re-scoring).
+    pub rerank: u8,
+    /// Candidate multiplier `c`: the probe keeps `c·top_k` rows per task.
+    pub mult: usize,
+}
+
 /// A warm, long-lived handle over one live datastore (see the module
 /// docs).
 pub struct Session {
     live: LiveStore,
     etas: Vec<f32>,
     rows_per_shard: usize,
-    /// Pinned shards keyed by (member index, checkpoint, shard index) —
-    /// member-scoped, so an ingest invalidates nothing below the old row
-    /// count.
-    shard_cache: LruCache<(usize, usize, usize), Arc<OwnedShard>>,
+    opts: SessionOpts,
+    /// Directory the served store lives in — where cascade stages resolve
+    /// sibling precisions (`None` for a bare relative path with no parent).
+    run_dir: Option<PathBuf>,
+    /// Lazily opened sibling-precision stores, in resolution order;
+    /// store index `i + 1` in shard-cache keys (the base store is 0).
+    aux: Vec<AuxStore>,
+    /// Pinned shards keyed by (store, member index, checkpoint, shard
+    /// index) — member-scoped, so an ingest invalidates nothing below the
+    /// old row count; store-scoped, so cascade stages at other precisions
+    /// never alias base-store shards.
+    shard_cache: LruCache<(usize, usize, usize, usize), Arc<OwnedShard>>,
     /// Full score vectors keyed by task digest; an entry's *length* is
     /// the row count it covers (always a generation boundary).
     score_cache: LruCache<u64, Arc<Vec<f32>>>,
@@ -236,6 +283,12 @@ impl Session {
             live,
             etas,
             rows_per_shard,
+            opts,
+            run_dir: path
+                .parent()
+                .filter(|d| !d.as_os_str().is_empty())
+                .map(Path::to_path_buf),
+            aux: Vec::new(),
             shard_cache: LruCache::new(cache_budget),
             score_cache: LruCache::new(opts.score_cache_entries),
             gen_rows,
@@ -337,6 +390,7 @@ impl Session {
                         cached: true,
                         batched: 0,
                         pass: ScanStats::default(),
+                        top: None,
                     });
                     continue;
                 }
@@ -374,6 +428,7 @@ impl Session {
                             cached: false,
                             batched: misses.len(),
                             pass,
+                            top: None,
                         });
                     }
                 }
@@ -402,6 +457,7 @@ impl Session {
                             cached: false,
                             batched,
                             pass,
+                            top: None,
                         });
                     }
                 }
@@ -432,32 +488,38 @@ impl Session {
         start: usize,
         len: usize,
     ) -> Result<Vec<Answer>> {
+        let bits = self.live.header().precision.bits;
+        self.answer_range_at(queries, start, len, bits)
+    }
+
+    /// [`Session::answer_range`] generalized over the serving precision:
+    /// the ranged scan runs against the run's `bits`-bit store (resolved
+    /// like a cascade stage — the base store, or a sibling opened on
+    /// demand). This is the cascade **probe** worker verb: the
+    /// coordinator's wave-1 sub-queries probe each worker's row range at
+    /// the cheap precision before the merged candidate pool is reranked.
+    pub fn answer_range_at(
+        &mut self,
+        queries: &[ScoreQuery],
+        start: usize,
+        len: usize,
+        bits: u8,
+    ) -> Result<Vec<Answer>> {
         self.poll_generation();
         self.stats.batches += 1;
         self.stats.queries += queries.len() as u64;
-        let n = self.live.n_rows();
-        anyhow::ensure!(len > 0, "empty row range");
+        let store = self.resolve_store(bits)?;
+        self.refresh_store(store);
+        let n = self.store_n_rows(store);
+        ensure!(len > 0, "empty row range");
         let end = start
             .checked_add(len)
             .filter(|e| *e <= n)
             .with_context(|| format!("row range {start}+{len} exceeds live rows {n}"))?;
         debug_assert!(end <= n);
         let generation = self.live.generation();
-        let digests: Vec<u64> = queries.iter().map(|q| q.digest()).collect();
-        let mut distinct: Vec<u64> = Vec::new();
-        for d in &digests {
-            if !distinct.contains(d) {
-                distinct.push(*d);
-            }
-        }
-        let tasks: Vec<&[FeatureMatrix]> = distinct
-            .iter()
-            .map(|d| {
-                let i = digests.iter().position(|x| x == d).expect("digest from this batch");
-                queries[i].val.as_slice()
-            })
-            .collect();
-        let (totals, pass) = self.scan_range(&tasks, start, len)?;
+        let (digests, distinct, tasks) = dedup_tasks(queries);
+        let (totals, pass) = self.scan_store_range(store, &tasks, start, len)?;
         let shared: Vec<Arc<Vec<f32>>> = totals.into_iter().map(Arc::new).collect();
         let batched = distinct.len();
         Ok(digests
@@ -471,6 +533,139 @@ impl Session {
                     cached: false,
                     batched,
                     pass,
+                    top: None,
+                }
+            })
+            .collect())
+    }
+
+    /// Answer one micro-batch of (already validated) queries with the
+    /// two-stage precision cascade: one fused probe pass over **all**
+    /// live rows at `plan.probe` bits, per-task top `plan.mult × top_k`
+    /// candidate selection, then one fused rerank pass over the deduped
+    /// candidate union at `plan.rerank` bits — both passes served from
+    /// the same pinned shard cache as exhaustive scans (store-scoped
+    /// keys). Each query's final `top_k` is ranked over its **own**
+    /// candidates only (`top_k_scored_among`), so an answer is
+    /// bit-identical to [`crate::influence::cascade_live_tasks`] no
+    /// matter which other queries share the batch — the union only
+    /// coalesces I/O.
+    ///
+    /// Cascade answers bypass the full-vector score cache (`cached` is
+    /// always false, `scores` is empty): the ranked pairs live in
+    /// [`Answer::top`].
+    pub fn answer_cascade(
+        &mut self,
+        queries: &[ScoreQuery],
+        plan: CascadePlan,
+        top_k: usize,
+    ) -> Result<Vec<Answer>> {
+        self.poll_generation();
+        self.stats.batches += 1;
+        self.stats.queries += queries.len() as u64;
+        ensure!(top_k >= 1, "cascade needs top_k >= 1 final selections per task");
+        ensure!(plan.mult >= 1, "cascade candidate multiplier must be >= 1");
+        ensure!(
+            plan.probe != plan.rerank,
+            "cascade probe and rerank precisions must differ (got {}-bit twice)",
+            plan.probe
+        );
+        let probe = self.resolve_store(plan.probe)?;
+        let rerank = self.resolve_store(plan.rerank)?;
+        self.refresh_store(probe);
+        self.refresh_store(rerank);
+        let n = self.store_n_rows(probe);
+        ensure!(
+            self.store_n_rows(rerank) == n,
+            "cascade stores disagree on live rows ({}-bit has {}, {}-bit has {}): \
+             torn ingest in the run directory — retry after it completes",
+            plan.probe,
+            n,
+            plan.rerank,
+            self.store_n_rows(rerank)
+        );
+        ensure!(n > 0, "cascade over an empty store");
+        let generation = self.live.generation();
+        let (digests, distinct, tasks) = dedup_tasks(queries);
+        let ck = top_k.saturating_mul(plan.mult).min(n);
+        let (probe_totals, probe_pass) = self.scan_store_range(probe, &tasks, 0, n)?;
+        let (cands, union) = cascade::probe_candidates(&probe_totals, ck);
+        let (rr_scores, rerank_pass) = self.scan_store_rows(rerank, &tasks, &union)?;
+        let pass = cascade::combine_stats(probe_pass, rerank_pass);
+        let tops: Vec<Vec<(usize, f32)>> = cands
+            .iter()
+            .zip(&rr_scores)
+            .map(|(rows, scored)| {
+                let pairs: Vec<(usize, f32)> = rows
+                    .iter()
+                    .map(|&r| {
+                        let j = union.binary_search(&r).expect("candidate in union");
+                        (r, scored[j])
+                    })
+                    .collect();
+                top_k_scored_among(&pairs, top_k)
+            })
+            .collect();
+        let batched = distinct.len();
+        let empty = Arc::new(Vec::new());
+        Ok(digests
+            .iter()
+            .map(|d| {
+                let t = distinct.iter().position(|x| x == d).expect("distinct covers digests");
+                Answer {
+                    scores: Arc::clone(&empty),
+                    generation,
+                    gen_rows: Arc::clone(&self.gen_rows),
+                    cached: false,
+                    batched,
+                    pass,
+                    top: Some(tops[t].clone()),
+                }
+            })
+            .collect())
+    }
+
+    /// Re-score exactly `rows` (global indices, strictly increasing) at
+    /// the run's `bits`-bit store — the cascade **rerank** worker verb.
+    /// Each answer's [`Answer::top`] holds one `(row, score)` pair per
+    /// requested row, in request order (no ranking — the coordinator
+    /// ranks after merging); `scores` is empty.
+    pub fn answer_rerank_rows(
+        &mut self,
+        queries: &[ScoreQuery],
+        rows: &[usize],
+        bits: u8,
+    ) -> Result<Vec<Answer>> {
+        self.poll_generation();
+        self.stats.batches += 1;
+        self.stats.queries += queries.len() as u64;
+        let store = self.resolve_store(bits)?;
+        self.refresh_store(store);
+        let n = self.store_n_rows(store);
+        ensure!(!rows.is_empty(), "rerank needs at least one row");
+        ensure!(
+            rows.windows(2).all(|w| w[0] < w[1]),
+            "rerank rows must be strictly increasing"
+        );
+        let last = *rows.last().expect("non-empty");
+        ensure!(last < n, "rerank row {last} exceeds live rows {n}");
+        let generation = self.live.generation();
+        let (digests, distinct, tasks) = dedup_tasks(queries);
+        let (scored, pass) = self.scan_store_rows(store, &tasks, rows)?;
+        let batched = distinct.len();
+        let empty = Arc::new(Vec::new());
+        Ok(digests
+            .iter()
+            .map(|d| {
+                let t = distinct.iter().position(|x| x == d).expect("distinct covers digests");
+                Answer {
+                    scores: Arc::clone(&empty),
+                    generation,
+                    gen_rows: Arc::clone(&self.gen_rows),
+                    cached: false,
+                    batched,
+                    pass,
+                    top: Some(rows.iter().copied().zip(scored[t].iter().copied()).collect()),
                 }
             })
             .collect())
@@ -487,7 +682,112 @@ impl Session {
     ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
         debug_assert!(self.live.is_generation_boundary(from_row));
         let n = self.live.n_rows();
-        self.scan_range(tasks, from_row, n - from_row)
+        self.scan_store_range(0, tasks, from_row, n - from_row)
+    }
+
+    /// The served store a cascade stage's bitwidth names: 0 is the base
+    /// store; sibling precisions are resolved against the run directory's
+    /// default-named stores, opened once, geometry/η-validated against
+    /// the base, and kept warm for later queries. A bitwidth the run
+    /// directory does not hold is a clean error naming what it does —
+    /// never a silent fallback to the base precision.
+    fn resolve_store(&mut self, bits: u8) -> Result<usize> {
+        if self.live.header().precision.bits == bits {
+            return Ok(0);
+        }
+        if let Some(i) = self.aux.iter().position(|a| a.bits == bits) {
+            return Ok(i + 1);
+        }
+        let dir = self.run_dir.clone().with_context(|| {
+            format!("served store has no parent directory to resolve a {bits}-bit sibling in")
+        })?;
+        let available = run_dir_precisions(&dir)
+            .with_context(|| format!("listing precisions of run dir {dir:?}"))?;
+        let matches: Vec<_> = available.iter().filter(|p| p.bits == bits).collect();
+        let p = match matches.len() {
+            0 => {
+                let have: Vec<String> =
+                    available.iter().map(|p| p.label().to_string()).collect();
+                let have = if have.is_empty() {
+                    "none".to_string()
+                } else {
+                    have.join(", ")
+                };
+                bail!(
+                    "run dir {dir:?} holds no {bits}-bit store (available: {have}); \
+                     build the run with --bits listing every cascade precision"
+                )
+            }
+            1 => *matches[0],
+            _ => bail!(
+                "run dir {dir:?} holds {} different {bits}-bit stores — a bitwidth \
+                 must name one store unambiguously",
+                matches.len()
+            ),
+        };
+        let path = default_store_path(&dir, p);
+        let live = LiveStore::open(&path)
+            .with_context(|| format!("opening cascade-stage store {path:?}"))?;
+        let (base, aux) = (self.live.header(), live.header());
+        ensure!(
+            aux.k == base.k,
+            "{bits}-bit store projects to k={}, served store to k={}",
+            aux.k,
+            base.k
+        );
+        ensure!(
+            aux.n_checkpoints == base.n_checkpoints,
+            "{bits}-bit store has {} checkpoints, served store {}",
+            aux.n_checkpoints,
+            base.n_checkpoints
+        );
+        let etas = live.etas();
+        ensure!(
+            etas.len() == self.etas.len()
+                && etas.iter().zip(&self.etas).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{bits}-bit store's η schedule differs from the served store's — \
+             not the same warmup run"
+        );
+        let rows_per_shard =
+            live.rows_per_shard(self.opts.shard_rows, self.opts.mem_budget_mb.max(1));
+        info!(
+            "session: resolved {bits}-bit cascade store {path:?} ({} rows, \
+             {rows_per_shard} rows/shard)",
+            live.n_rows()
+        );
+        self.aux.push(AuxStore { bits, live, rows_per_shard });
+        Ok(self.aux.len())
+    }
+
+    /// Poll an aux store's generation manifest (the base store is polled
+    /// by [`Session::poll_generation`]); like it, failures downgrade to a
+    /// warning and the session keeps serving what it has.
+    fn refresh_store(&mut self, store: usize) {
+        if store == 0 {
+            return;
+        }
+        let a = &mut self.aux[store - 1];
+        if let Err(e) = a.live.refresh() {
+            warn_!(
+                "session: {}-bit store refresh failed ({e:#}); still serving generation {}",
+                a.bits,
+                a.live.generation()
+            );
+        }
+    }
+
+    fn store_header(&self, store: usize) -> &Header {
+        match store {
+            0 => self.live.header(),
+            s => self.aux[s - 1].live.header(),
+        }
+    }
+
+    fn store_n_rows(&self, store: usize) -> usize {
+        match store {
+            0 => self.live.n_rows(),
+            s => self.aux[s - 1].live.n_rows(),
+        }
     }
 
     /// One fused multi-task pass over the global rows `start .. start +
@@ -501,61 +801,133 @@ impl Session {
     /// [`crate::datastore::RowsView::slice`] (the cache still pins the
     /// whole shard, so neighbouring ranges share it). Stats therefore
     /// count exactly the rows inside the range.
-    fn scan_range(
+    fn scan_store_range(
         &mut self,
+        store: usize,
         tasks: &[&[FeatureMatrix]],
         start: usize,
         len: usize,
     ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
-        let end = start + len;
-        let mut scan = MultiScan::try_new_range(self.live.header(), tasks, start, len)?;
+        let mut scan = MultiScan::try_new_range(self.store_header(store), tasks, start, len)?;
         for ci in 0..self.etas.len() {
-            let eta = self.etas[ci];
-            for (mi, member) in self.live.members().iter().enumerate() {
-                let m_rows = member.ds.n_samples();
-                let m_lo = member.start_row;
-                if m_lo + m_rows <= start || m_lo >= end {
-                    continue;
-                }
-                // shard indices of this member intersecting [start, end)
-                let lo_local = start.saturating_sub(m_lo);
-                let hi_local = (end - m_lo).min(m_rows);
-                let si_lo = lo_local / self.rows_per_shard;
-                let si_hi = hi_local.div_ceil(self.rows_per_shard);
-                let mut reader = None;
-                for si in si_lo..si_hi {
-                    let key = (mi, ci, si);
-                    let owned = if let Some(shard) = self.shard_cache.get(&key) {
-                        self.stats.shard_cache_hits += 1;
-                        shard
-                    } else {
-                        if reader.is_none() {
-                            reader = Some(member.ds.shard_reader(ci, self.rows_per_shard)?);
-                        }
-                        let r = reader.as_mut().expect("reader just opened");
-                        r.seek_to_row(si * self.rows_per_shard);
-                        let shard = r.next_shard()?.with_context(|| {
-                            format!("shard {si} of checkpoint {ci} (member {mi}) out of range")
-                        })?;
-                        let owned = Arc::new(shard.to_owned_shard());
-                        self.stats.disk_shard_reads += 1;
-                        let weight = owned.byte_weight();
-                        self.shard_cache.insert(key, Arc::clone(&owned), weight);
-                        owned
-                    };
-                    let view = owned.rows();
-                    let s_lo = m_lo + owned.start;
-                    let a = start.max(s_lo) - s_lo;
-                    let b = (end.min(s_lo + view.n())) - s_lo;
-                    scan.feed(ci, eta, s_lo + a, &view.slice(a, b));
-                }
-            }
+            self.feed_range(store, &mut scan, ci, start, len)?;
         }
         self.stats.fused_passes += 1;
         let (totals, pass) = scan.finish();
         self.stats.rows_scored += pass.rows_read;
         Ok((totals, pass))
     }
+
+    /// One fused multi-task pass over exactly the global `rows` (strictly
+    /// increasing) of `store` — the cascade rerank primitive. Accumulators
+    /// cover the full row space (candidate sets are sparse but global);
+    /// only the contiguous runs of `rows` are read, through the same
+    /// pinned shard cache as ranged scans. Returns per-task scores
+    /// **gathered to `rows` order** (`scored[t][j]` is global row
+    /// `rows[j]`), plus the pass stats (`rows_read == rows.len()` per
+    /// checkpoint — what the rerank actually cost).
+    fn scan_store_rows(
+        &mut self,
+        store: usize,
+        tasks: &[&[FeatureMatrix]],
+        rows: &[usize],
+    ) -> Result<(Vec<Vec<f32>>, ScanStats)> {
+        let n = self.store_n_rows(store);
+        let runs = cascade::contiguous_runs(rows);
+        let mut scan = MultiScan::try_new_range(self.store_header(store), tasks, 0, n)?;
+        for ci in 0..self.etas.len() {
+            for &(start, len) in &runs {
+                self.feed_range(store, &mut scan, ci, start, len)?;
+            }
+        }
+        self.stats.fused_passes += 1;
+        let (totals, pass) = scan.finish();
+        self.stats.rows_scored += pass.rows_read;
+        let gathered =
+            totals.iter().map(|t| rows.iter().map(|&r| t[r]).collect()).collect();
+        Ok((gathered, pass))
+    }
+
+    /// Feed every `store` shard overlapping global rows `start .. start +
+    /// len` of checkpoint `ci` into `scan`, clipped to the range —
+    /// cache-pinned shards from RAM, misses via seek-based reads (then
+    /// pinned). The shared inner loop of ranged, fused and sparse scans.
+    fn feed_range(
+        &mut self,
+        store: usize,
+        scan: &mut MultiScan,
+        ci: usize,
+        start: usize,
+        len: usize,
+    ) -> Result<()> {
+        let end = start + len;
+        let eta = self.etas[ci];
+        let (live, rows_per_shard) = match store {
+            0 => (&self.live, self.rows_per_shard),
+            s => (&self.aux[s - 1].live, self.aux[s - 1].rows_per_shard),
+        };
+        for (mi, member) in live.members().iter().enumerate() {
+            let m_rows = member.ds.n_samples();
+            let m_lo = member.start_row;
+            if m_lo + m_rows <= start || m_lo >= end {
+                continue;
+            }
+            // shard indices of this member intersecting [start, end)
+            let lo_local = start.saturating_sub(m_lo);
+            let hi_local = (end - m_lo).min(m_rows);
+            let si_lo = lo_local / rows_per_shard;
+            let si_hi = hi_local.div_ceil(rows_per_shard);
+            let mut reader = None;
+            for si in si_lo..si_hi {
+                let key = (store, mi, ci, si);
+                let owned = if let Some(shard) = self.shard_cache.get(&key) {
+                    self.stats.shard_cache_hits += 1;
+                    shard
+                } else {
+                    if reader.is_none() {
+                        reader = Some(member.ds.shard_reader(ci, rows_per_shard)?);
+                    }
+                    let r = reader.as_mut().expect("reader just opened");
+                    r.seek_to_row(si * rows_per_shard);
+                    let shard = r.next_shard()?.with_context(|| {
+                        format!("shard {si} of checkpoint {ci} (member {mi}) out of range")
+                    })?;
+                    let owned = Arc::new(shard.to_owned_shard());
+                    self.stats.disk_shard_reads += 1;
+                    let weight = owned.byte_weight();
+                    self.shard_cache.insert(key, Arc::clone(&owned), weight);
+                    owned
+                };
+                let view = owned.rows();
+                let s_lo = m_lo + owned.start;
+                let a = start.max(s_lo) - s_lo;
+                let b = (end.min(s_lo + view.n())) - s_lo;
+                scan.feed(ci, eta, s_lo + a, &view.slice(a, b));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-batch query dedup: `(digest per query, distinct digests in arrival
+/// order, one task slice per distinct digest)` — batch sizes are small
+/// (`max_batch_tasks`), so linear dedup beats a map.
+fn dedup_tasks(queries: &[ScoreQuery]) -> (Vec<u64>, Vec<u64>, Vec<&[FeatureMatrix]>) {
+    let digests: Vec<u64> = queries.iter().map(|q| q.digest()).collect();
+    let mut distinct: Vec<u64> = Vec::new();
+    for d in &digests {
+        if !distinct.contains(d) {
+            distinct.push(*d);
+        }
+    }
+    let tasks: Vec<&[FeatureMatrix]> = distinct
+        .iter()
+        .map(|d| {
+            let i = digests.iter().position(|x| x == d).expect("digest from this batch");
+            queries[i].val.as_slice()
+        })
+        .collect();
+    (digests, distinct, tasks)
 }
 
 /// The `(generation, start_row)` member map shared with answers.
@@ -758,6 +1130,174 @@ mod tests {
         // a good one passes
         ScoreQuery { val: task(k, 1, 2) }.validate(&h).unwrap();
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cascade_answers_match_direct_cascade_and_share_the_shard_cache() {
+        // Serve-side cascade vs the library path, bit for bit — and the
+        // second cascade batch must run entirely from pinned shards.
+        let (n, k) = (29usize, 64usize);
+        let etas = [0.7f32, 0.3];
+        let dir = std::env::temp_dir().join(format!(
+            "qless_sess_casc_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let probe_path = default_store_path(&dir, p1);
+        let rerank_path = default_store_path(&dir, p8);
+        // same seed at both precisions = aligned row spaces
+        seeded_datastore(&probe_path, p1, n, k, &etas, 0);
+        seeded_datastore(&rerank_path, p8, n, k, &etas, 0);
+
+        let t0 = task(k, 800, 2);
+        let t1 = task(k, 801, 2);
+        let opts = crate::influence::CascadeOpts {
+            k: 3,
+            mult: 2,
+            scan: ScoreOpts { shard_rows: 5, ..Default::default() },
+        };
+        let probe_live = crate::datastore::LiveStore::open(&probe_path).unwrap();
+        let rerank_live = crate::datastore::LiveStore::open(&rerank_path).unwrap();
+        let want = crate::influence::cascade_live_tasks(
+            &probe_live,
+            &rerank_live,
+            &[&t0, &t1],
+            opts,
+        )
+        .unwrap();
+
+        let sopts = SessionOpts { shard_rows: 5, mem_budget_mb: 8, score_cache_entries: 4 };
+        let mut sess = Session::open(&probe_path, sopts).unwrap();
+        let plan = CascadePlan { probe: 1, rerank: 8, mult: 2 };
+        let queries = vec![ScoreQuery { val: t0.clone() }, ScoreQuery { val: t1.clone() }];
+        let answers = sess.answer_cascade(&queries, plan, 3).unwrap();
+        assert_eq!(answers.len(), 2);
+        for (t, a) in answers.iter().enumerate() {
+            assert!(!a.cached, "cascade answers bypass the score cache");
+            assert_eq!(a.batched, 2);
+            assert!(a.scores.is_empty(), "no full vector on a cascade answer");
+            let top = a.top.as_ref().expect("cascade answers carry top");
+            assert_eq!(top.len(), want.top[t].len());
+            for (got, w) in top.iter().zip(&want.top[t]) {
+                assert_eq!(got.0, w.0, "task {t}: row order");
+                assert_eq!(got.1.to_bits(), w.1.to_bits(), "task {t}: bit-exact score");
+            }
+            // rows/bytes mirror the library cascade exactly; shard counts
+            // may differ (the cache feeds fixed shards, clipped)
+            let lib = want.combined_pass();
+            assert_eq!(a.pass.rows_read, lib.rows_read);
+            assert_eq!(a.pass.bytes_read, lib.bytes_read);
+        }
+        // the serving answer of one task alone equals its batched answer:
+        // final top-k ranks only the task's OWN candidates, so batch
+        // composition cannot change an answer (the union is I/O-only)
+        let solo = sess
+            .answer_cascade(&[ScoreQuery { val: t0.clone() }], plan, 3)
+            .unwrap();
+        assert_eq!(solo[0].top, answers[0].top);
+        // warm repeat: both stages read zero shards from disk
+        let before = sess.stats();
+        let again = sess.answer_cascade(&queries, plan, 3).unwrap();
+        assert_eq!(again[0].top, answers[0].top);
+        let after = sess.stats();
+        assert_eq!(after.disk_shard_reads, before.disk_shard_reads, "warm cascade is RAM-only");
+        assert!(after.shard_cache_hits > before.shard_cache_hits);
+        // exhaustive queries on the same session still work (store 0)
+        let full = sess.answer_batch(&queries).unwrap();
+        assert_eq!(full[0].scores.len(), n);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_worker_verbs_cover_probe_and_rerank_stores() {
+        let (n, k) = (17usize, 64usize);
+        let etas = [1.0f32];
+        let dir = std::env::temp_dir().join(format!(
+            "qless_sess_verbs_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        seeded_datastore(&default_store_path(&dir, p1), p1, n, k, &etas, 0);
+        let rerank_path = default_store_path(&dir, p8);
+        seeded_datastore(&rerank_path, p8, n, k, &etas, 0);
+        // serve the 8-bit store; the 1-bit sibling resolves on demand
+        let mut sess = Session::open(
+            &rerank_path,
+            SessionOpts { shard_rows: 4, mem_budget_mb: 8, score_cache_entries: 0 },
+        )
+        .unwrap();
+        let q = ScoreQuery { val: task(k, 900, 1) };
+        // ranged probe at 1-bit == the 1-bit store's full scan slice
+        let probe_ds = crate::datastore::Datastore::open(&default_store_path(&dir, p1)).unwrap();
+        let (want1, _) = score_datastore_tasks(
+            &probe_ds,
+            &[q.val.as_slice()],
+            ScoreOpts { shard_rows: 4, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let part = sess.answer_range_at(std::slice::from_ref(&q), 3, 9, 1).unwrap();
+        assert_eq!(part[0].scores[..], want1[0][3..12], "1-bit ranged probe slice");
+        // sparse rerank at 8-bit == gathered full-scan values
+        let rerank_ds = crate::datastore::Datastore::open(&rerank_path).unwrap();
+        let (want8, _) = score_datastore_tasks(
+            &rerank_ds,
+            &[q.val.as_slice()],
+            ScoreOpts { shard_rows: 4, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let rows = vec![0usize, 5, 6, 7, 16];
+        let rr = sess.answer_rerank_rows(std::slice::from_ref(&q), &rows, 8).unwrap();
+        let top = rr[0].top.as_ref().unwrap();
+        assert_eq!(top.len(), rows.len());
+        for (j, &(row, score)) in top.iter().enumerate() {
+            assert_eq!(row, rows[j]);
+            assert_eq!(score.to_bits(), want8[0][row].to_bits());
+        }
+        assert_eq!(rr[0].pass.rows_read, rows.len() as u64, "rerank reads only listed rows");
+        // malformed rerank row lists fail cleanly
+        assert!(sess.answer_rerank_rows(std::slice::from_ref(&q), &[], 8).is_err());
+        assert!(sess.answer_rerank_rows(std::slice::from_ref(&q), &[4, 4], 8).is_err());
+        assert!(sess.answer_rerank_rows(std::slice::from_ref(&q), &[n], 8).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_on_a_single_precision_run_is_a_clean_error() {
+        let (n, k) = (8usize, 64usize);
+        let etas = [1.0f32];
+        let dir = std::env::temp_dir().join(format!(
+            "qless_sess_single_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let path = default_store_path(&dir, p8);
+        seeded_datastore(&path, p8, n, k, &etas, 0);
+        let mut sess = Session::open(&path, SessionOpts::default()).unwrap();
+        let q = ScoreQuery { val: task(k, 1000, 1) };
+        let plan = CascadePlan { probe: 1, rerank: 8, mult: 2 };
+        let err = sess.answer_cascade(std::slice::from_ref(&q), plan, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no 1-bit store"), "{msg}");
+        assert!(msg.contains("8-bit"), "error lists what IS available: {msg}");
+        // degenerate plans are rejected before any store resolution
+        let same = CascadePlan { probe: 8, rerank: 8, mult: 2 };
+        assert!(sess.answer_cascade(std::slice::from_ref(&q), same, 2).is_err());
+        assert!(sess
+            .answer_cascade(std::slice::from_ref(&q), plan, 0)
+            .unwrap_err()
+            .to_string()
+            .contains("top_k"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -41,8 +41,8 @@ COMMANDS
   serve               resident influence query service over TCP
                       (`qless serve --help` for the serve flags)
   eval                evaluate a checkpoint on the three benchmarks
-  xp <id>             reproduce a paper table/figure:
-                      table1 table2 table3 fig1 fig3 fig4 fig5
+  xp <id>             reproduce a paper table/figure or analysis:
+                      table1 table2 table3 fig1 fig3 fig4 fig5 cascade
   list-artifacts      show what the manifest provides
 
 OPTIONS (all Config keys work as --key value):
@@ -63,6 +63,13 @@ OPTIONS (all Config keys work as --key value):
   --build-workers N   quantize-stage worker cap for builds (0 = all cores)
   --ingest-rows N     rows `qless ingest` appends as one new generation
   --multi-scan B      score all benchmarks in one datastore pass (default true)
+  --cascade P,R       two-stage precision cascade for score/select: probe
+                      EVERY row at P bits, re-score only the top candidates
+                      at R bits (e.g. 1,8; both must be in the run's --bits
+                      build list; empty = exhaustive scan at --bits)
+  --cascade-mult C    cascade candidate multiplier: the probe keeps C·k
+                      candidates per task for the rerank (default 8;
+                      C·k >= n rows makes the cascade exact)
   --run-dir DIR       --artifacts DIR
   --fast              shrink workloads        -v / -q      verbosity
 ";
@@ -106,7 +113,10 @@ Wire protocol: one JSON object per line (spec:
 rust/crates/qless-service/PROTOCOL.md; example exchange: README.md
 §serve). Served datastores are live: a `qless ingest` into the same
 run-dir is picked up without restart (responses carry the generation;
-`since_gen` ranks only newer rows).
+`since_gen` ranks only newer rows). Score requests may carry a
+`cascade` object (PROTOCOL.md §Cascade) to probe at a cheap precision
+and rerank candidates at a higher one — the run-dir's sibling
+precision stores are opened on demand.
 ";
 
 /// The usage text for a subcommand: serve has its own flag set; everything
@@ -249,6 +259,19 @@ mod tests {
         let c = p(&["score", "--multi-scan", "false"]).unwrap();
         assert!(!c.config.multi_scan);
         assert!(p(&["score", "--multi-scan", "maybe"]).is_err());
+    }
+
+    #[test]
+    fn cascade_flags_parse() {
+        let c = p(&["score", "--cascade", "1,8", "--cascade-mult", "4"]).unwrap();
+        assert_eq!(c.config.cascade, "1,8");
+        assert_eq!(c.config.cascade_mult, 4);
+        let (probe, rerank) = c.config.cascade_precisions().unwrap().unwrap();
+        assert_eq!((probe.bits, rerank.bits), (1, 8));
+        assert!(p(&["score"]).unwrap().config.cascade.is_empty()); // default off
+        assert!(p(&["score", "--cascade", "8"]).is_err()); // validate()
+        assert!(p(&["score", "--cascade", "8,1"]).is_err()); // probe > rerank
+        assert!(p(&["score", "--cascade", "1,8", "--cascade-mult", "0"]).is_err());
     }
 
     #[test]

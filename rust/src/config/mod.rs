@@ -110,6 +110,17 @@ pub struct Config {
     /// the remaining healthy workers before the query degrades to an
     /// error response.
     pub worker_retries: usize,
+    /// Two-stage precision cascade, `PROBE,RERANK` bit pair (e.g. `1,8`):
+    /// stage 1 scans every row at the cheap probe precision and keeps the
+    /// top `cascade_mult × k` candidates per task; stage 2 re-scores only
+    /// those rows at the rerank precision. Empty = exhaustive scan at
+    /// [`Self::bits`]. Both precisions must exist in the run directory
+    /// (build with `--bits PROBE,RERANK`).
+    pub cascade: String,
+    /// Cascade candidate multiplier `c`: stage 1 keeps `c·k` candidates
+    /// per task for stage 2 (k = final selections). Larger c = higher
+    /// recall, more rerank I/O; `c·k ≥ n` makes the cascade exact.
+    pub cascade_mult: usize,
 }
 
 impl Default for Config {
@@ -149,6 +160,8 @@ impl Default for Config {
             worker_addrs: String::new(),
             worker_deadline_ms: 2000,
             worker_retries: 2,
+            cascade: String::new(),
+            cascade_mult: qless_datastore::influence::DEFAULT_CASCADE_MULT,
         }
     }
 }
@@ -195,6 +208,8 @@ impl Config {
         "worker_addrs",
         "worker_deadline_ms",
         "worker_retries",
+        "cascade",
+        "cascade_mult",
     ];
 
     /// Apply one `key = value` (file) or `--key value` (CLI) assignment.
@@ -260,6 +275,8 @@ impl Config {
             "worker_addrs" => self.worker_addrs = v.to_string(),
             "worker_deadline_ms" => self.worker_deadline_ms = parse(v, &key)?,
             "worker_retries" => self.worker_retries = parse(v, &key)?,
+            "cascade" => self.cascade = v.to_string(),
+            "cascade_mult" => self.cascade_mult = parse(v, &key)?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -336,6 +353,10 @@ impl Config {
                 }
             }
         }
+        self.cascade_precisions()?; // parse errors surface at validate time
+        if self.cascade_mult == 0 {
+            bail!("cascade_mult must be >= 1");
+        }
         Ok(())
     }
 
@@ -394,6 +415,44 @@ impl Config {
             .iter()
             .map(|&b| crate::quant::Precision::new(b, self.scheme))
             .collect()
+    }
+
+    /// The `--cascade PROBE,RERANK` pair as precisions, `None` when the
+    /// knob is unset (exhaustive scan). The configured scheme applies to
+    /// 2/4/8-bit entries; 1-bit coerces to sign and 16-bit to absmax,
+    /// exactly like [`Self::precisions`].
+    pub fn cascade_precisions(
+        &self,
+    ) -> Result<Option<(crate::quant::Precision, crate::quant::Precision)>> {
+        if self.cascade.is_empty() {
+            return Ok(None);
+        }
+        let parts: Vec<&str> = self.cascade.split(',').map(str::trim).collect();
+        if parts.len() != 2 || parts.iter().any(|p| p.is_empty()) {
+            bail!("cascade must be 'PROBE,RERANK' bits (e.g. '1,8'), got '{}'", self.cascade);
+        }
+        let mut bits = [0u8; 2];
+        for (slot, part) in bits.iter_mut().zip(&parts) {
+            let b: u8 = parse(part, "cascade")?;
+            if ![1, 2, 4, 8, 16].contains(&b) {
+                bail!("cascade bits must be one of 1,2,4,8,16 (got {b})");
+            }
+            *slot = b;
+        }
+        if bits[0] == bits[1] {
+            bail!("cascade probe and rerank bits must differ (got {},{})", bits[0], bits[1]);
+        }
+        if bits[0] > bits[1] {
+            bail!(
+                "cascade probe bits must be below rerank bits ({},{} re-scores at a \
+                 cheaper precision than the probe — swap them)",
+                bits[0],
+                bits[1]
+            );
+        }
+        let probe = crate::quant::Precision::new(bits[0], self.scheme)?;
+        let rerank = crate::quant::Precision::new(bits[1], self.scheme)?;
+        Ok(Some((probe, rerank)))
     }
 
     /// The method label used in report tables (paper naming).
@@ -685,6 +744,35 @@ mod tests {
         assert!(co.workers.is_empty());
         c.set("worker-addrs", "10.0.0.1:7411,10.0.0.2:7411").unwrap();
         assert_eq!(c.coordinator_opts().workers, vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
+    }
+
+    #[test]
+    fn cascade_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(c.cascade.is_empty());
+        assert_eq!(c.cascade_mult, 8);
+        assert!(c.cascade_precisions().unwrap().is_none());
+        c.set("cascade", "1,8").unwrap();
+        c.set("cascade-mult", "4").unwrap();
+        assert_eq!(c.cascade_mult, 4);
+        let (probe, rerank) = c.cascade_precisions().unwrap().unwrap();
+        assert_eq!((probe.bits, rerank.bits), (1, 8));
+        assert_eq!(probe.scheme, Scheme::Sign); // 1-bit coerces
+        assert_eq!(rerank.scheme, Scheme::Absmax);
+        c.validate().unwrap();
+        // whitespace tolerated
+        c.set("cascade", " 2 , 16 ").unwrap();
+        let (p2, r2) = c.cascade_precisions().unwrap().unwrap();
+        assert_eq!((p2.bits, r2.bits), (2, 16));
+        // malformed pairs are clean errors, never a silent exhaustive scan
+        for bad in ["1", "1,8,16", "1,", "3,8", "8,8", "8,1", "one,8"] {
+            c.set("cascade", bad).unwrap();
+            assert!(c.validate().is_err(), "cascade '{bad}' must be rejected");
+        }
+        c.set("cascade", "1,8").unwrap();
+        c.set("cascade_mult", "0").unwrap();
+        assert!(c.validate().is_err(), "cascade_mult 0 must be rejected");
+        assert!(c.set("cascade_mult", "lots").is_err());
     }
 
     #[test]

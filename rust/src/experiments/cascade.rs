@@ -1,0 +1,105 @@
+//! Cascade tradeoff harness (`qless xp cascade`): recall@k and I/O cost
+//! of the two-stage precision cascade against the exhaustive
+//! high-precision scan, swept over the candidate multiplier.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::eval::Benchmark;
+use crate::influence::cascade::exhaustive_scan_bytes;
+use crate::pipeline::{Pipeline, Report};
+use crate::quant::{Precision, Scheme};
+use crate::select::top_k_scored;
+use crate::util::json::Json;
+use crate::util::table::{human_bytes, Table};
+
+use super::Scale;
+
+/// `xp cascade`: 1-bit probe → 8-bit rerank over one run's sibling
+/// stores, sweeping `--cascade-mult` ∈ {1, 2, 4, 8, 16}. Selection-only
+/// (no fine-tunes) — cheap. For each multiplier the harness reports
+/// recall@k_sel per benchmark against the exhaustive 8-bit top list,
+/// bytes read (probe + rerank), the I/O reduction factor vs the
+/// exhaustive 8-bit scan, and wall time. This is the harness behind
+/// EXPERIMENTS.md §Perf's cascade entry; the acceptance targets are
+/// recall ≥ 0.95 and ≥ 2× I/O reduction at the default multiplier 8.
+pub fn cascade(base_cfg: &Config, scale: Scale) -> Result<()> {
+    let model = if scale.fast { "tiny" } else { "small" };
+    let mut cfg = base_cfg.clone();
+    scale.apply(&mut cfg, model);
+    cfg.run_dir = format!("runs/cascade_{model}_s{}", cfg.seed);
+    let mut pipe = Pipeline::new(cfg.clone())?;
+    let p1 = Precision::new(1, Scheme::Sign)?;
+    let p8 = Precision::new(8, Scheme::Absmax)?;
+    // one extraction pass emits both stores; the 8-bit one doubles as the
+    // exhaustive reference
+    let stores = pipe.build_datastores(&[p1, p8])?;
+    let ds8 = &stores[1].0;
+    let n = ds8.n_samples();
+    let k_sel = (((n as f64) * cfg.select_frac).ceil() as usize).clamp(1, n);
+    let exhaustive = exhaustive_scan_bytes(&ds8.header, n);
+    let t0 = std::time::Instant::now();
+    let all = pipe.influence_scores_all(ds8)?;
+    let exhaustive_secs = t0.elapsed().as_secs_f64();
+    let want: Vec<Vec<usize>> = Benchmark::ALL
+        .iter()
+        .map(|b| top_k_scored(&all[b.name()], k_sel).into_iter().map(|(i, _)| i).collect())
+        .collect();
+
+    let mut report = Report::new(
+        "cascade",
+        "Compute-constrained precision cascade: recall@k vs I/O (1-bit probe → 8-bit rerank)",
+    );
+    let mut t = Table::new(
+        &format!("SimLM-{model}, n={n}, k_sel={k_sel}"),
+        &["Mult", "SynQA", "SynMC", "SynArith", "Avg recall", "Bytes read", "I/O ×", "Wall (s)"],
+    );
+    let mut j = Json::obj();
+    for mult in [1usize, 2, 4, 8, 16] {
+        let t1 = std::time::Instant::now();
+        let (tops, pass) = pipe.cascade_scores_all(p1, p8, mult, k_sel)?;
+        let secs = t1.elapsed().as_secs_f64();
+        let mut recalls = Vec::new();
+        let mut j_m = Json::obj();
+        for (bench, want_idx) in Benchmark::ALL.iter().zip(&want) {
+            let got: std::collections::BTreeSet<usize> =
+                tops[bench.name()].iter().map(|(i, _)| *i).collect();
+            let hit = want_idx.iter().filter(|i| got.contains(i)).count();
+            let recall = hit as f64 / want_idx.len().max(1) as f64;
+            recalls.push(recall);
+            j_m.set(bench.name(), recall);
+        }
+        let avg = recalls.iter().sum::<f64>() / recalls.len().max(1) as f64;
+        let reduction = exhaustive as f64 / pass.bytes_read.max(1) as f64;
+        t.row(vec![
+            mult.to_string(),
+            format!("{:.3}", recalls[0]),
+            format!("{:.3}", recalls[1]),
+            format!("{:.3}", recalls[2]),
+            format!("{avg:.3}"),
+            human_bytes(pass.bytes_read),
+            format!("{reduction:.2}×"),
+            format!("{secs:.2}"),
+        ]);
+        j_m.set("avg_recall", avg);
+        j_m.set("bytes_read", pass.bytes_read as f64);
+        j_m.set("io_reduction", reduction);
+        j_m.set("wall_secs", secs);
+        j.set(&format!("mult_{mult}"), j_m);
+    }
+    j.set("exhaustive_bytes", exhaustive as f64);
+    j.set("exhaustive_wall_secs", exhaustive_secs);
+    j.set("k_sel", k_sel as f64);
+    report.add_table(t);
+    report.note(format!(
+        "Exhaustive 8-bit scan reads {} ({exhaustive_secs:.2}s measured). Targets: \
+         recall@k >= 0.95 and >= 2x I/O reduction at the default multiplier 8; \
+         mult · k_sel >= n makes the cascade exact (recall 1.000).",
+        human_bytes(exhaustive)
+    ));
+    report.json = j;
+    // after report.json so the stage-cost mirror lands in the artifact
+    report.add_stage_costs(&pipe.stages);
+    report.emit(std::path::Path::new("reports"))?;
+    Ok(())
+}

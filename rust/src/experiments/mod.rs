@@ -5,6 +5,7 @@
 //! DESIGN.md §4 maps every id to its paper counterpart; EXPERIMENTS.md
 //! records paper-vs-measured. `--fast` shrinks the grid for smoke runs.
 
+pub mod cascade;
 pub mod figures;
 pub mod tables;
 
@@ -59,13 +60,16 @@ pub fn run(id: &str, base_cfg: &Config, fast: bool) -> Result<()> {
         "fig3" => figures::fig3(base_cfg, scale),
         "fig4" => figures::fig4(base_cfg, scale),
         "fig5" => figures::fig5(base_cfg, scale),
+        "cascade" => cascade::cascade(base_cfg, scale),
         "all" => {
-            for id in ["table1", "table2", "table3", "fig3", "fig4", "fig5", "fig1"] {
+            for id in ["table1", "table2", "table3", "fig3", "fig4", "fig5", "cascade", "fig1"] {
                 run(id, base_cfg, fast)?;
             }
             Ok(())
         }
-        _ => bail!("unknown experiment '{id}' (table1|table2|table3|fig1|fig3|fig4|fig5|all)"),
+        _ => bail!(
+            "unknown experiment '{id}' (table1|table2|table3|fig1|fig3|fig4|fig5|cascade|all)"
+        ),
     }
 }
 

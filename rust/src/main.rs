@@ -232,6 +232,9 @@ fn ingest(cli: &Cli) -> Result<()> {
 
 fn score_select(cli: &Cli) -> Result<()> {
     let mut pipe = Pipeline::new(cli.config.clone())?;
+    if let Some((probe, rerank)) = cli.config.cascade_precisions()? {
+        return score_select_cascade(cli, &mut pipe, probe, rerank);
+    }
     let p = Precision::new(cli.config.bits, cli.config.scheme)?;
     let (ds, _) = pipe.build_datastore(p)?;
     // the run may have live (ingested) generations beyond the base build:
@@ -259,6 +262,45 @@ fn score_select(cli: &Cli) -> Result<()> {
         for &i in top {
             let s = &samples[i];
             println!("    [{:>7.4}] {} → {}", scores[i], s.prompt, s.answer);
+        }
+    }
+    Ok(())
+}
+
+/// `qless score/select --cascade PROBE,RERANK`: probe every live row at
+/// the cheap precision, rerank only the top `--cascade-mult ×` selection
+/// candidates at the expensive one, and select from the reranked list.
+fn score_select_cascade(
+    cli: &Cli,
+    pipe: &mut Pipeline,
+    probe: Precision,
+    rerank: Precision,
+) -> Result<()> {
+    // the cascade reads two sibling stores; build any that are missing
+    // (cached files are reused) in one extraction pass
+    pipe.build_datastores(&[probe, rerank])?;
+    let live = pipe.open_live(rerank)?;
+    let n = live.n_rows();
+    let k_sel = (((n as f64) * cli.config.select_frac).ceil() as usize).clamp(1, n);
+    let samples = pipe.samples_with_extensions(&live)?;
+    let (tops, pass) =
+        pipe.cascade_scores_all(probe, rerank, cli.config.cascade_mult, k_sel)?;
+    println!(
+        "cascade: {} probe → {} rerank (mult {}), {} live rows, {} read",
+        probe.label(),
+        rerank.label(),
+        cli.config.cascade_mult,
+        n,
+        human_bytes(pass.bytes_read)
+    );
+    for bench in Benchmark::ALL {
+        let top = &tops[bench.name()];
+        let sel: Vec<usize> = top.iter().map(|(i, _)| *i).collect();
+        let dist = SourceDistribution::of(&samples, &sel);
+        println!("{bench}: top {} — {}", sel.len(), dist.render());
+        for &(i, s) in top.iter().take(3) {
+            let smp = &samples[i];
+            println!("    [{s:>7.4}] {} → {}", smp.prompt, smp.answer);
         }
     }
     Ok(())

@@ -20,7 +20,10 @@ use crate::grads::{
     extract_train_features, extract_train_features_stream, extract_val_features, FeatureMatrix,
     Projector,
 };
-use crate::influence::{score_datastore_tasks, score_live_tasks, ScoreOpts};
+use crate::influence::{
+    cascade, cascade_live_tasks, score_datastore_tasks, score_live_tasks, CascadeOpts, ScanStats,
+    ScoreOpts,
+};
 use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
 use crate::pipeline::stage::{PipelineStageRunner, Stage};
 use crate::quant::weights::quantize_weights;
@@ -717,6 +720,76 @@ impl Pipeline {
             out.insert(bench.name(), scores);
         }
         Ok(out)
+    }
+
+    /// Compute-constrained cascade over this run's **live** stores, for
+    /// every benchmark (`--cascade PROBE,RERANK --cascade-mult C`): one
+    /// fused pass probes every row at the cheap `probe` precision, keeps
+    /// each benchmark's top `C · k_sel` candidate rows, and re-scores
+    /// only those rows at the `rerank` precision via random access — so
+    /// the final top-`k_sel` carries rerank-precision scores while the
+    /// bulk of the I/O happens at probe cost. Both precisions must exist
+    /// in the run directory (build with `--bits` listing them). With
+    /// `C · k_sel >=` the live row count the result is byte-identical to
+    /// an exhaustive rerank-precision scan. Returns each benchmark's
+    /// final top list (score desc, index asc on ties) plus the combined
+    /// probe + rerank scan stats.
+    pub fn cascade_scores_all(
+        &mut self,
+        probe: Precision,
+        rerank: Precision,
+        mult: usize,
+        k_sel: usize,
+    ) -> Result<(BTreeMap<&'static str, Vec<(usize, f32)>>, ScanStats)> {
+        if self.cfg.xla_score {
+            warn_!("XLA scoring is not plumbed through cascades; using native kernels");
+        }
+        let probe_live = self.open_live(probe).with_context(|| {
+            format!(
+                "opening the cascade's {} probe store — build the run with --bits \
+                 listing every cascade precision",
+                probe.label()
+            )
+        })?;
+        let rerank_live = self.open_live(rerank).with_context(|| {
+            format!(
+                "opening the cascade's {} rerank store — build the run with --bits \
+                 listing every cascade precision",
+                rerank.label()
+            )
+        })?;
+        let mut vals: Vec<Vec<FeatureMatrix>> = Vec::new();
+        for bench in Benchmark::ALL {
+            vals.push(self.val_features(bench)?);
+        }
+        let refs: Vec<&[FeatureMatrix]> = vals.iter().map(|v| v.as_slice()).collect();
+        let opts = CascadeOpts {
+            k: k_sel,
+            mult,
+            scan: ScoreOpts { use_xla: false, ..self.score_opts() },
+        };
+        let t0 = std::time::Instant::now();
+        let outcome = cascade_live_tasks(&probe_live, &rerank_live, &refs, opts)?;
+        let pass = outcome.combined_pass();
+        self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
+        self.stages.add_units(Stage::Score, pass.shards_read as u64);
+        let exhaustive = cascade::exhaustive_scan_bytes(rerank_live.header(), rerank_live.n_rows());
+        info!(
+            "cascade scan: {} benchmarks, {} probe → {} rerank, {} of {} rows reranked, \
+             {} read vs {} exhaustive",
+            refs.len(),
+            probe.label(),
+            rerank.label(),
+            outcome.reranked_rows,
+            probe_live.n_rows(),
+            crate::util::table::human_bytes(pass.bytes_read),
+            crate::util::table::human_bytes(exhaustive)
+        );
+        let mut out = BTreeMap::new();
+        for (bench, top) in Benchmark::ALL.iter().zip(outcome.top) {
+            out.insert(bench.name(), top);
+        }
+        Ok((out, pass))
     }
 
     // ------------------------------------------------------------------

@@ -12,5 +12,6 @@ pub mod distribution;
 pub use distribution::SourceDistribution;
 pub use qless_core::select::topk;
 pub use qless_core::select::{
-    merge_top_k, select_top_frac, top_k_indices, top_k_scored, top_k_scored_since,
+    merge_top_k, select_top_frac, top_k_indices, top_k_scored, top_k_scored_among,
+    top_k_scored_since,
 };

@@ -1,0 +1,414 @@
+//! Compute-constrained precision cascade acceptance suite — the
+//! cascade tentpole's contract:
+//!
+//! * **full-pool cascade == exhaustive scan**: with `mult · k ≥ n` the
+//!   cascade's per-task top list is **byte-identical** (indices and f32
+//!   score bits) to the exhaustive rerank-precision scan, across
+//!   bitwidth × scheme × shard size × live generations;
+//! * **recall@k is monotone** non-decreasing in the candidate
+//!   multiplier, reaching exactly 1.0 once the pool covers the store;
+//! * **serving is the library**: `score_cascade` answers from a server
+//!   (under concurrent clients) and from a scatter-gather coordinator
+//!   (1..=3 workers) are bit-identical to a direct library cascade;
+//! * **paper-scale tradeoff**: at n=2048 × k=512 the 1→8-bit cascade at
+//!   the default multiplier reads ≥ 2× fewer bytes than the exhaustive
+//!   8-bit scan while keeping recall@k ≥ 0.95;
+//! * **negative paths fail clean**: malformed `cascade` wire fields,
+//!   stage verbs missing their operands, and cascades naming a precision
+//!   the run directory lacks all produce errors — never a silently
+//!   exhaustive or truncated answer.
+
+use std::path::{Path, PathBuf};
+
+use qless::datastore::{default_store_path, LiveStore, SegmentWriter};
+use qless::grads::FeatureMatrix;
+use qless::influence::cascade::exhaustive_scan_bytes;
+use qless::influence::{cascade_live_tasks, score_live_tasks, CascadeOpts, ScoreOpts};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::select::top_k_scored;
+use qless::service::{Client, Coordinator, CoordinatorOpts, ServeOpts, Server};
+use qless::util::prop::{normal_features, run_prop, seeded_datastore};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "qless_cascade_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Build the cascade's sibling pair (probe + rerank stores) for rows
+/// `0..n0` from the canonical seeded feature stream.
+fn build_pair(dir: &Path, probe: Precision, rerank: Precision, n0: usize, k: usize, etas: &[f32], seed: u64) {
+    seeded_datastore(&default_store_path(dir, probe), probe, n0, k, etas, seed);
+    seeded_datastore(&default_store_path(dir, rerank), rerank, n0, k, etas, seed);
+}
+
+/// Ingest rows `lo..hi` of the canonical stream as one generation across
+/// both precisions (the manifest is shared, so the pair must ingest
+/// together — exactly what `qless ingest --bits probe,rerank` does).
+fn ingest_range(dir: &Path, pair: &[Precision], lo: usize, hi: usize, n_total: usize, k: usize, ckpts: usize, seed: u64) {
+    let mut sw = SegmentWriter::create(dir, pair, hi - lo, 0).unwrap();
+    for ci in 0..ckpts {
+        sw.begin_checkpoint().unwrap();
+        let f = normal_features(n_total, k, seed + ci as u64);
+        sw.append_rows(&f.data[lo * k..hi * k]).unwrap();
+        sw.end_checkpoint().unwrap();
+    }
+    sw.finalize().unwrap();
+}
+
+/// One validation task: per-checkpoint feature rows.
+fn task(ckpts: usize, rows: usize, k: usize, seed: u64) -> Vec<FeatureMatrix> {
+    (0..ckpts).map(|c| normal_features(rows, k, seed + 100 * c as u64)).collect()
+}
+
+/// Assert two top lists are byte-identical: same rows, same f32 bits.
+fn assert_tops_identical(got: &[(usize, f32)], want: &[(usize, f32)], ctx: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{ctx}: {} vs {} entries", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.0 != w.0 || g.1.to_bits() != w.1.to_bits() {
+            return Err(format!("{ctx}: entry {i}: got ({}, {:x}), want ({}, {:x})", g.0, g.1.to_bits(), w.0, w.1.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+/// Recall@k of a cascade top list against the exhaustive top list.
+fn recall(got: &[(usize, f32)], want: &[(usize, f32)]) -> f64 {
+    let want_idx: std::collections::BTreeSet<usize> = want.iter().map(|(i, _)| *i).collect();
+    let hit = got.iter().filter(|(i, _)| want_idx.contains(i)).count();
+    hit as f64 / want.len().max(1) as f64
+}
+
+/// The CI smoke: a 1→8-bit cascade with a full candidate pool produces a
+/// digest (rows + score bits) identical to the exhaustive 8-bit scan.
+/// (`cargo test --test cascade smoke` runs exactly this.)
+#[test]
+fn smoke_cascade_equals_exhaustive_digest() {
+    let dir = tmpdir("smoke");
+    let (n, k) = (33usize, 64usize);
+    let etas = [0.7f32, 0.3];
+    let p1 = Precision::new(1, Scheme::Sign).unwrap();
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    build_pair(&dir, p1, p8, n, k, &etas, 1);
+    let probe = LiveStore::open(&default_store_path(&dir, p1)).unwrap();
+    let rerank = LiveStore::open(&default_store_path(&dir, p8)).unwrap();
+    let t0 = task(2, 2, k, 500);
+    let t1 = task(2, 3, k, 600);
+    let tasks: Vec<&[FeatureMatrix]> = vec![&t0, &t1];
+    // mult 7 · k 5 = 35 ≥ 33 rows → the candidate pool covers the store
+    let opts = CascadeOpts { k: 5, mult: 7, scan: ScoreOpts { shard_rows: 6, ..Default::default() } };
+    let out = cascade_live_tasks(&probe, &rerank, &tasks, opts).unwrap();
+    assert_eq!(out.reranked_rows, n, "full pool reranks every row");
+    let (scores, _) = score_live_tasks(&rerank, &tasks, opts.scan).unwrap();
+    for (t, top) in out.top.iter().enumerate() {
+        let want = top_k_scored(&scores[t], 5);
+        let digest_got: Vec<(usize, u32)> = top.iter().map(|(i, s)| (*i, s.to_bits())).collect();
+        let digest_want: Vec<(usize, u32)> = want.iter().map(|(i, s)| (*i, s.to_bits())).collect();
+        assert_eq!(digest_got, digest_want, "task {t}: cascade digest != exhaustive digest");
+    }
+    // the probe pass walked every row once per checkpoint
+    assert_eq!(out.probe_pass.rows_read, (2 * n) as u64);
+    assert_eq!(out.rerank_pass.rows_read, (2 * n) as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: across rerank bitwidth × scheme × shard size × live
+/// generations × task count, a cascade whose candidate pool covers the
+/// store is byte-identical to the exhaustive rerank-precision scan.
+#[test]
+fn prop_full_pool_cascade_is_byte_identical_to_exhaustive() {
+    let rerank_grid = [
+        Precision::new(16, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmean).unwrap(),
+        Precision::new(4, Scheme::Absmax).unwrap(),
+        Precision::new(4, Scheme::Absmean).unwrap(),
+        Precision::new(2, Scheme::Absmean).unwrap(),
+    ];
+    run_prop("cascade-exhaustive", 12, |g| {
+        let n0 = 3 + g.usize_up_to(14);
+        let add1 = g.rng.below(8);
+        let add2 = if add1 > 0 { g.rng.below(5) } else { 0 };
+        let n = n0 + add1 + add2;
+        // k deliberately NOT a multiple of 8 half the time (packed rows
+        // that end mid-byte)
+        let k = 5 + g.usize_up_to(60);
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.9 - 0.4 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let probe = Precision::new(1, Scheme::Sign).unwrap();
+        let rerank = rerank_grid[g.rng.below(rerank_grid.len())];
+        let dir = tmpdir("prop");
+        build_pair(&dir, probe, rerank, n0, k, &etas, seed);
+        if add1 > 0 {
+            ingest_range(&dir, &[probe, rerank], n0, n0 + add1, n, k, ckpts, seed);
+        }
+        if add2 > 0 {
+            ingest_range(&dir, &[probe, rerank], n0 + add1, n, k, ckpts, seed);
+        }
+        let probe_live = LiveStore::open(&default_store_path(&dir, probe)).unwrap();
+        let rerank_live = LiveStore::open(&default_store_path(&dir, rerank)).unwrap();
+        let held: Vec<Vec<FeatureMatrix>> =
+            (0..1 + g.rng.below(3)).map(|q| task(ckpts, 1 + g.rng.below(3), k, 7000 + 31 * q as u64)).collect();
+        let tasks: Vec<&[FeatureMatrix]> = held.iter().map(|t| t.as_slice()).collect();
+        let k_sel = 1 + g.rng.below(n);
+        // enough candidates to cover the store, plus arbitrary slack
+        let mult = n.div_ceil(k_sel) + g.rng.below(3);
+        let opts = CascadeOpts {
+            k: k_sel,
+            mult,
+            scan: ScoreOpts { shard_rows: 1 + g.rng.below(n + 2), ..Default::default() },
+        };
+        let out = cascade_live_tasks(&probe_live, &rerank_live, &tasks, opts)
+            .map_err(|e| format!("cascade failed: {e:#}"))?;
+        prop_assert!(out.reranked_rows == n, "full pool must rerank all {n} rows (got {})", out.reranked_rows);
+        let (scores, _) = score_live_tasks(&rerank_live, &tasks, opts.scan).unwrap();
+        for (t, top) in out.top.iter().enumerate() {
+            let want = top_k_scored(&scores[t], k_sel);
+            assert_tops_identical(
+                top,
+                &want,
+                &format!(
+                    "task {t} ({} rerank, n0={n0} add1={add1} add2={add2} k={k} k_sel={k_sel} \
+                     mult={mult} shard_rows={})",
+                    rerank.label(),
+                    opts.scan.shard_rows
+                ),
+            )?;
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+/// Property: recall@k against the exhaustive top list never decreases as
+/// the candidate multiplier grows, and is exactly 1.0 once
+/// `mult · k ≥ n`. (A smaller pool is a subset of a bigger one, and any
+/// exhaustive winner inside a pool survives its rerank — so the set of
+/// recovered winners can only grow.)
+#[test]
+fn prop_recall_is_monotone_in_the_candidate_multiplier() {
+    run_prop("cascade-recall-monotone", 10, |g| {
+        let n = 16 + g.usize_up_to(40);
+        let k = 8 + g.usize_up_to(56);
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.8 - 0.3 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let dir = tmpdir("mono");
+        build_pair(&dir, p1, p8, n, k, &etas, seed);
+        let probe_live = LiveStore::open(&default_store_path(&dir, p1)).unwrap();
+        let rerank_live = LiveStore::open(&default_store_path(&dir, p8)).unwrap();
+        let t0 = task(ckpts, 2, k, 9000);
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0];
+        let k_sel = 1 + g.rng.below(6);
+        let scan = ScoreOpts { shard_rows: 1 + g.rng.below(n), ..Default::default() };
+        let (scores, _) = score_live_tasks(&rerank_live, &tasks, scan).unwrap();
+        let want = top_k_scored(&scores[0], k_sel);
+        let mut prev = -1.0f64;
+        let mut mult = 1usize;
+        loop {
+            let out =
+                cascade_live_tasks(&probe_live, &rerank_live, &tasks, CascadeOpts { k: k_sel, mult, scan })
+                    .map_err(|e| format!("cascade failed: {e:#}"))?;
+            let r = recall(&out.top[0], &want);
+            prop_assert!(
+                r >= prev,
+                "recall fell from {prev:.3} to {r:.3} when mult grew to {mult} \
+                 (n={n} k={k} k_sel={k_sel})"
+            );
+            prev = r;
+            if mult * k_sel >= n {
+                prop_assert!(r == 1.0, "full pool (mult={mult}) must have recall 1.0, got {r:.3}");
+                assert_tops_identical(&out.top[0], &want, "full-pool top list")?;
+                break;
+            }
+            mult *= 2;
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+/// Paper-scale tradeoff at the default multiplier: the 1→8-bit cascade
+/// must read at least 2× fewer bytes than the exhaustive 8-bit scan and
+/// keep recall@k ≥ 0.95 — the PR's acceptance numbers, also logged by
+/// `qless xp cascade` and `bench_influence`.
+#[test]
+fn cascade_halves_io_at_paper_scale_with_high_recall() {
+    let dir = tmpdir("paper");
+    let (n, k, k_sel) = (2048usize, 512usize, 32usize);
+    let etas = [0.6f32, 0.4];
+    let p1 = Precision::new(1, Scheme::Sign).unwrap();
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    build_pair(&dir, p1, p8, n, k, &etas, 42);
+    let probe_live = LiveStore::open(&default_store_path(&dir, p1)).unwrap();
+    let rerank_live = LiveStore::open(&default_store_path(&dir, p8)).unwrap();
+    let t0 = task(2, 4, k, 1234);
+    let t1 = task(2, 4, k, 5678);
+    let tasks: Vec<&[FeatureMatrix]> = vec![&t0, &t1];
+    let opts = CascadeOpts {
+        k: k_sel,
+        mult: qless::influence::DEFAULT_CASCADE_MULT,
+        scan: ScoreOpts { shard_rows: 256, ..Default::default() },
+    };
+    let out = cascade_live_tasks(&probe_live, &rerank_live, &tasks, opts).unwrap();
+    let exhaustive = exhaustive_scan_bytes(rerank_live.header(), n);
+    let read = out.combined_pass().bytes_read;
+    assert!(
+        read * 2 <= exhaustive,
+        "cascade read {read} B, exhaustive {exhaustive} B — less than 2× reduction"
+    );
+    let (scores, _) = score_live_tasks(&rerank_live, &tasks, opts.scan).unwrap();
+    for (t, top) in out.top.iter().enumerate() {
+        let want = top_k_scored(&scores[t], k_sel);
+        let r = recall(top, &want);
+        assert!(r >= 0.95, "task {t}: recall@{k_sel} = {r:.3} < 0.95 at the default multiplier");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Served cascades are the library cascade: answers from a single server
+/// under concurrent clients and from scatter-gather coordinators with
+/// 1..=3 workers are all bit-identical to `cascade_live_tasks`. (For a
+/// single-task query the scattered candidate pool — merged per-slice
+/// probe tops — equals the global probe top-`c·k`, so the equivalence is
+/// exact at ANY multiplier, not only exhaustive ones.)
+#[test]
+fn served_cascades_match_the_library_under_concurrency_and_scatter() {
+    let dir = tmpdir("serve");
+    let (n, k) = (41usize, 64usize);
+    let etas = [0.6f32, 0.4];
+    let p1 = Precision::new(1, Scheme::Sign).unwrap();
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    build_pair(&dir, p1, p8, n, k, &etas, 3);
+    let probe_path = default_store_path(&dir, p1);
+    let probe_live = LiveStore::open(&probe_path).unwrap();
+    let rerank_live = LiveStore::open(&default_store_path(&dir, p8)).unwrap();
+    let held: Vec<Vec<FeatureMatrix>> = (0..3).map(|q| task(2, 2, k, 4000 + 17 * q)).collect();
+    let tasks: Vec<&[FeatureMatrix]> = held.iter().map(|t| t.as_slice()).collect();
+    let opts = CascadeOpts { k: 4, mult: 2, scan: ScoreOpts { shard_rows: 7, ..Default::default() } };
+    let want = cascade_live_tasks(&probe_live, &rerank_live, &tasks, opts).unwrap().top;
+    let serve_opts = ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        batch_window_ms: 5,
+        shard_rows: 7,
+        ..Default::default()
+    };
+    // single server, three concurrent cascade clients
+    let server = Server::start(&probe_path, serve_opts.clone()).unwrap();
+    let addr = server.addr();
+    std::thread::scope(|s| {
+        for (t, val) in held.iter().enumerate() {
+            let want_t = &want[t];
+            s.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c.score_cascade(val, 4, 1, 8, 2).unwrap();
+                let got: Vec<(usize, u32)> = r.top.iter().map(|(i, s)| (*i, s.to_bits())).collect();
+                let exp: Vec<(usize, u32)> = want_t.iter().map(|(i, s)| (*i, s.to_bits())).collect();
+                assert_eq!(got, exp, "task {t}: served cascade != library cascade");
+            });
+        }
+    });
+    server.stop();
+    server.join().unwrap();
+    // scatter-gather: 1, 2 and 3 workers all merge to the same answer
+    for workers in 1..=3usize {
+        let co = Coordinator::start_local(
+            &probe_path,
+            workers,
+            serve_opts.clone(),
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(co.addr()).unwrap();
+        for (t, val) in held.iter().enumerate() {
+            let r = c.score_cascade(val, 4, 1, 8, 2).unwrap();
+            let got: Vec<(usize, u32)> = r.top.iter().map(|(i, s)| (*i, s.to_bits())).collect();
+            let exp: Vec<(usize, u32)> = want[t].iter().map(|(i, s)| (*i, s.to_bits())).collect();
+            assert_eq!(got, exp, "{workers} workers, task {t}: scattered cascade != library");
+        }
+        c.shutdown().unwrap();
+        co.join().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Negative paths over the wire: malformed `cascade` fields and
+/// unsatisfiable cascades are clean errors that leave the connection
+/// usable — never a silently exhaustive or truncated answer.
+#[test]
+fn malformed_and_unsatisfiable_cascades_fail_clean_over_the_wire() {
+    let dir = tmpdir("neg");
+    let (n, k) = (9usize, 64usize);
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    // a SINGLE-precision run: only the 8-bit store exists
+    seeded_datastore(&default_store_path(&dir, p8), p8, n, k, &[1.0], 0);
+    let server = Server::start(
+        &default_store_path(&dir, p8),
+        ServeOpts { addr: "127.0.0.1:0".into(), batch_window_ms: 0, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let val = task(1, 2, k, 77);
+    // probe precision absent from the run dir → the error names the
+    // missing store and the fix, and nothing is scored
+    let err = format!("{:#}", c.score_cascade(&val, 2, 1, 8, 4).unwrap_err());
+    assert!(err.contains("no 1-bit store"), "{err}");
+    assert!(err.contains("--bits"), "{err}");
+    // malformed cascade fields → parse/validation errors with the exact
+    // complaint; the connection survives every one
+    let zeros = vec!["0"; k].join(",");
+    let line = |cascade: &str, extra: &str| {
+        format!(
+            "{{\"op\":\"score\",\"id\":7,\"top_k\":2,{extra}\"cascade\":{cascade},\
+             \"val\":[{{\"n\":1,\"k\":{k},\"data\":[{zeros}]}}]}}"
+        )
+    };
+    let cases: &[(&str, &str, &str)] = &[
+        ("5", "", "must be an object"),
+        ("{\"probe\":1}", "", "missing key 'rerank'"),
+        ("{\"probe\":3,\"rerank\":8}", "", "one of 1,2,4,8,16"),
+        ("{\"probe\":8,\"rerank\":1}", "", "below rerank"),
+        ("{\"probe\":1,\"rerank\":8,\"mult\":0}", "", "'mult' must be >= 1"),
+        ("{\"probe\":1,\"rerank\":8,\"multt\":2}", "", "unknown key 'multt'"),
+        ("{\"stage\":\"probe\",\"probe\":1,\"rows_list\":[1]}", "", "unknown key 'rows_list'"),
+        ("{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[]}", "", "at least one row"),
+        ("{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[3,1]}", "", "strictly increasing"),
+        ("{\"stage\":\"shrink\"}", "", "unknown cascade stage"),
+        // well-formed cascade, unsatisfiable combination
+        ("{\"probe\":1,\"rerank\":8}", "\"scores\":true,", "drop 'want_scores'"),
+        ("{\"probe\":1,\"rerank\":8}", "\"since_gen\":0,", "since_gen"),
+        ("{\"probe\":1,\"rerank\":8}", "\"rows\":[0,4],", "stage verbs"),
+        ("{\"stage\":\"probe\",\"probe\":8}", "", "must carry a 'rows' range"),
+    ];
+    for (cascade, extra, msg) in cases {
+        let raw = c.raw_roundtrip(&line(cascade, extra)).unwrap();
+        assert!(raw.contains("\"ok\":false"), "cascade {cascade} answered: {raw}");
+        assert!(raw.contains(msg), "cascade {cascade}: expected {msg:?} in {raw}");
+        c.ping().unwrap();
+    }
+    // rerank rows beyond the live row count → clean error, no partial top
+    let raw = c
+        .raw_roundtrip(&line("{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[100]}", ""))
+        .unwrap();
+    assert!(raw.contains("\"ok\":false"), "{raw}");
+    assert!(raw.contains("exceeds live rows"), "{raw}");
+    c.ping().unwrap();
+    // top_k 0 on a full cascade → clean error
+    let raw = c
+        .raw_roundtrip(&line("{\"probe\":1,\"rerank\":8}", "").replace("\"top_k\":2", "\"top_k\":0"))
+        .unwrap();
+    assert!(raw.contains("top_k >= 1"), "{raw}");
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -13,24 +13,31 @@
 //! * **generations pin consistently mid-ingest**: with workers on
 //!   *different* generations of the same live store, every merged answer
 //!   is the single-node answer for `(min generation, min rows)` —
-//!   `since_gen` included — and the fleet converges as workers poll.
+//!   `since_gen` included — and the fleet converges as workers poll;
+//! * **cascades scatter faithfully**: every sub-query of a cascade —
+//!   including ranges *re-issued* after a worker fault — carries the same
+//!   stage verb and precision as the wave that created it (never a plain
+//!   exhaustive fallback), and a fleet whose stores lack the probe
+//!   precision degrades the cascade to a clean error without poisoning
+//!   subsequent plain queries.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use qless::datastore::{default_store_path, SegmentWriter};
+use qless::datastore::{default_store_path, LiveStore, SegmentWriter};
 use qless::grads::FeatureMatrix;
-use qless::influence::{score_datastore_tasks, ScoreOpts};
+use qless::influence::{cascade_live_tasks, score_datastore_tasks, CascadeOpts, ScoreOpts};
 use qless::prop_assert;
 use qless::quant::{Precision, Scheme};
 use qless::select::{top_k_scored, top_k_scored_since};
 use qless::service::proto::{encode_response, parse_request, Request, Response};
 use qless::service::{
-    Client, Coordinator, CoordinatorOpts, ServeOpts, Server, ServiceStats, StatsReply,
+    CascadeField, Client, Coordinator, CoordinatorOpts, ServeOpts, Server, ServiceStats,
+    StatsReply,
 };
 use qless::util::prop::{normal_features as feats, run_prop, seeded_datastore};
 
@@ -162,9 +169,13 @@ fn prop_merged_answers_byte_identical_across_worker_counts() {
 /// sub-query with an error response — the deterministic way to force the
 /// coordinator's re-issue path, which a genuinely dead worker cannot
 /// (a dead worker fails its pre-query probe and is excluded up front).
+/// Each score sub-query's cascade shape (`plain`, `probe@B`,
+/// `rerank@B×rows`, `full`) is recorded in `seen` so tests can assert the
+/// re-issue machinery preserves stage verbs and precisions.
 struct FakeWorker {
     addr: SocketAddr,
     score_hits: Arc<AtomicUsize>,
+    seen: Arc<Mutex<Vec<String>>>,
     stop: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
 }
@@ -174,9 +185,11 @@ impl FakeWorker {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let score_hits = Arc::new(AtomicUsize::new(0));
+        let seen = Arc::new(Mutex::new(Vec::new()));
         let stop = Arc::new(AtomicBool::new(false));
         let accept = std::thread::spawn({
             let (hits, stop) = (Arc::clone(&score_hits), Arc::clone(&stop));
+            let seen = Arc::clone(&seen);
             move || {
                 for conn in listener.incoming() {
                     if stop.load(Ordering::SeqCst) {
@@ -184,6 +197,7 @@ impl FakeWorker {
                     }
                     let Ok(stream) = conn else { continue };
                     let hits = Arc::clone(&hits);
+                    let seen = Arc::clone(&seen);
                     std::thread::spawn(move || {
                         let mut reader = BufReader::new(stream.try_clone().unwrap());
                         let mut writer = stream;
@@ -208,6 +222,16 @@ impl FakeWorker {
                                 }),
                                 Ok(Request::Score(r)) => {
                                     hits.fetch_add(1, Ordering::SeqCst);
+                                    seen.lock().unwrap().push(match &r.cascade {
+                                        None => "plain".to_string(),
+                                        Some(CascadeField::Full { .. }) => "full".to_string(),
+                                        Some(CascadeField::Probe { probe }) => {
+                                            format!("probe@{probe}")
+                                        }
+                                        Some(CascadeField::Rerank { rerank, rows }) => {
+                                            format!("rerank@{rerank}x{}", rows.len())
+                                        }
+                                    });
                                     Response::Error {
                                         id: r.id,
                                         error: "injected fault: scores unavailable".into(),
@@ -226,7 +250,7 @@ impl FakeWorker {
                 }
             }
         });
-        FakeWorker { addr, score_hits, stop, accept: Some(accept) }
+        FakeWorker { addr, score_hits, seen, stop, accept: Some(accept) }
     }
 
     fn stop(mut self) {
@@ -313,6 +337,110 @@ fn exhausted_retries_degrade_to_a_clean_error() {
     c.shutdown().unwrap();
     co.join().unwrap();
     fake.stop();
+}
+
+/// A cascade whose probe/rerank sub-queries hit a faulty worker has the
+/// failed ranges re-issued **at the same stage verb and precision** — a
+/// re-issued probe slice stays a 1-bit probe, a re-issued candidate chunk
+/// stays an 8-bit rerank, and the merged top list is byte-identical to
+/// the direct library cascade. No sub-query ever falls back to a plain
+/// exhaustive scan.
+#[test]
+fn failed_cascade_subquery_is_reissued_at_the_same_stage_and_precision() {
+    let (n, k) = (31usize, 64usize);
+    let etas = [0.7f32, 0.3];
+    let p1 = Precision::new(1, Scheme::Sign).unwrap();
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    let dir = tmp("casc_reissue", "run");
+    std::fs::create_dir_all(&dir).unwrap();
+    let probe_path = default_store_path(&dir, p1);
+    seeded_datastore(&probe_path, p1, n, k, &etas, 21);
+    seeded_datastore(&default_store_path(&dir, p8), p8, n, k, &etas, 21);
+    let val = task(k, 2, 8);
+    // the no-fault reference: the direct library cascade over the pair
+    // (a single-task scattered cascade is exact at any multiplier)
+    let probe_live = LiveStore::open(&probe_path).unwrap();
+    let rerank_live = LiveStore::open(&default_store_path(&dir, p8)).unwrap();
+    let want = cascade_live_tasks(
+        &probe_live,
+        &rerank_live,
+        &[val.as_slice()],
+        CascadeOpts { k: 4, mult: 2, scan: ScoreOpts { shard_rows: 5, ..Default::default() } },
+    )
+    .unwrap()
+    .top;
+
+    let w1 = Server::start(&probe_path, worker_opts(5)).unwrap();
+    let w2 = Server::start(&probe_path, worker_opts(5)).unwrap();
+    let fake = FakeWorker::start(k, 2, 1, n, 0);
+    let co = Coordinator::start(CoordinatorOpts {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![
+            w1.addr().to_string(),
+            w2.addr().to_string(),
+            fake.addr.to_string(),
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut c = Client::connect(co.addr()).unwrap();
+    let r = c.score_cascade(&val, 4, 1, 8, 2).unwrap();
+    assert!(
+        fake.score_hits.load(Ordering::SeqCst) >= 1,
+        "the faulty worker must have been handed a cascade sub-query"
+    );
+    for shape in fake.seen.lock().unwrap().iter() {
+        assert!(
+            shape == "probe@1" || shape.starts_with("rerank@8x"),
+            "cascade sub-query reached a worker as '{shape}' — stage verb or precision lost"
+        );
+    }
+    let got: Vec<(usize, u32)> = r.top.iter().map(|(i, s)| (*i, s.to_bits())).collect();
+    let exp: Vec<(usize, u32)> = want[0].iter().map(|(i, s)| (*i, s.to_bits())).collect();
+    assert_eq!(got, exp, "re-issued cascade differs from the library cascade");
+
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    for w in [w1, w2] {
+        w.stop();
+        w.join().unwrap();
+    }
+    fake.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A fleet whose run directory holds only the rerank precision cannot
+/// probe: the cascade degrades to a clean error (every worker refuses the
+/// probe stage), and the failure poisons nothing — the very next plain
+/// query on the same connection gets the byte-exact merged answer once
+/// the pre-query probe restores worker health.
+#[test]
+fn cascade_missing_probe_precision_degrades_cleanly_and_the_fleet_recovers() {
+    let (n, k) = (14usize, 64usize);
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    let dir = tmp("casc_missing", "run");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = default_store_path(&dir, p8);
+    let ds = seeded_datastore(&path, p8, n, k, &[1.0], 31);
+    let val = task(k, 1, 9);
+    let (want, _) =
+        score_datastore_tasks(&ds, &[val.as_slice()], ScoreOpts::default(), None).unwrap();
+    drop(ds);
+
+    let co = Coordinator::start_local(&path, 2, worker_opts(4), co_opts()).unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+    let err = c.score_cascade(&val, 3, 1, 8, 4).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unanswered"), "degrade must be a clean error: {msg}");
+    let r = c.score(&val, 3, true).unwrap();
+    assert_eq!(r.top, top_k_scored(&want[0], 3), "plain queries must survive the failed cascade");
+    for (j, (a, b)) in want[0].iter().zip(r.scores.as_ref().unwrap()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "sample {j} after the failed cascade");
+    }
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Killing a local worker outright (process-death model: its listener
