@@ -26,6 +26,7 @@ use qless::datastore::DatastoreWriter;
 use qless::grads::FeatureMatrix;
 use qless::quant::{Precision, Scheme};
 use qless::service::{Client, Coordinator, CoordinatorOpts, ServeOpts, Server};
+use qless::util::json::Json;
 use qless::util::stats::fmt_secs;
 use qless::util::Rng;
 
@@ -86,19 +87,34 @@ fn drive(addr: std::net::SocketAddr, q: usize, rounds: usize, k: usize, nv: usiz
     handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
 }
 
-fn report(label: &str, all: &[(f64, bool)], wall: f64) {
+/// Print one section line and return its machine-readable twin for
+/// `reports/bench_serve.json` — latency quantiles in seconds plus the
+/// derived throughputs (queries/s, and rows/s = queries/s × rows each
+/// query scans) so future PRs have a perf trajectory to diff against.
+fn report(label: &str, all: &[(f64, bool)], wall: f64, rows_per_query: usize) -> Json {
     let cold: Vec<f64> = all.iter().filter(|(_, c)| *c).map(|(s, _)| *s).collect();
     let mut warm: Vec<f64> = all.iter().filter(|(_, c)| !*c).map(|(s, _)| *s).collect();
     warm.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| warm[((p * (warm.len() - 1) as f64).round() as usize).min(warm.len() - 1)];
     let cold_mean = cold.iter().sum::<f64>() / cold.len().max(1) as f64;
+    let qps = all.len() as f64 / wall;
     println!(
         "{label}: {:>7.1} q/s  cold {:>9}  warm p50 {:>9}  p99 {:>9}",
-        all.len() as f64 / wall,
+        qps,
         fmt_secs(cold_mean),
         fmt_secs(pct(0.50)),
         fmt_secs(pct(0.99)),
     );
+    let mut j = Json::obj();
+    j.set("section", label.trim())
+        .set("queries", all.len())
+        .set("queries_per_s", qps)
+        .set("rows_per_s", qps * rows_per_query as f64)
+        .set("cold_mean_s", cold_mean)
+        .set("warm_p50_s", pct(0.50))
+        .set("warm_p95_s", pct(0.95))
+        .set("warm_p99_s", pct(0.99));
+    j
 }
 
 fn main() {
@@ -106,13 +122,14 @@ fn main() {
     let (q, rounds) = (4usize, 6usize);
     let path = build(n, k);
     println!("== bench_serve_distributed: {n}×{k} 4-bit store, Q={q} clients × {rounds} rounds ==");
+    let mut sections: Vec<Json> = Vec::new();
 
     // single-node baseline
     {
         let server = Server::start(&path, worker_opts(q)).unwrap();
         let t = Instant::now();
         let all = drive(server.addr(), q, rounds, k, nv, 10_000);
-        report("single-node      ", &all, t.elapsed().as_secs_f64());
+        sections.push(report("single-node      ", &all, t.elapsed().as_secs_f64(), n));
         server.stop();
         server.join().unwrap();
     }
@@ -128,7 +145,12 @@ fn main() {
         .unwrap();
         let t = Instant::now();
         let all = drive(co.addr(), q, rounds, k, nv, 20_000 + workers * 100);
-        report(&format!("scatter {workers} worker(s)"), &all, t.elapsed().as_secs_f64());
+        sections.push(report(
+            &format!("scatter {workers} worker(s)"),
+            &all,
+            t.elapsed().as_secs_f64(),
+            n,
+        ));
         co.stop();
         co.join().unwrap();
     }
@@ -167,8 +189,25 @@ fn main() {
             fmt_secs(recovery),
             fmt_secs(healed[healed.len() / 2]),
         );
+        let mut j = Json::obj();
+        j.set("section", "worker-kill 3->2")
+            .set("recovery_first_query_s", recovery)
+            .set("healed_p50_s", healed[healed.len() / 2]);
+        sections.push(j);
         c.shutdown().unwrap();
         co.join().unwrap();
     }
+
+    // machine-readable twin of the lines above, diffed across PRs
+    let mut out = Json::obj();
+    out.set("bench", "bench_serve_distributed")
+        .set("n_rows", n)
+        .set("k", k)
+        .set("clients", q)
+        .set("rounds", rounds)
+        .set("sections", sections);
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/bench_serve.json", out.encode_pretty()).unwrap();
+    println!("wrote reports/bench_serve.json");
     std::fs::remove_file(path).ok();
 }

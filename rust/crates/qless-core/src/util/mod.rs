@@ -4,11 +4,13 @@
 //! or `proptest`, so this module provides the substrates ourselves:
 //! deterministic RNG with Python parity, a structured logger, a minimal JSON
 //! reader/writer, aligned/markdown table rendering, timing statistics, f16
-//! conversions, and a small property-testing harness.
+//! conversions, a small property-testing harness, and a std-only
+//! metrics/tracing registry (`obs`).
 
 pub mod bits;
 pub mod json;
 pub mod logging;
+pub mod obs;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,667 @@
+//! Process-wide observability: a metrics registry and a lightweight
+//! tracing span API. Std-only by construction (the offline vendor set
+//! has no `metrics`/`tracing` crates): counters and gauges are plain
+//! atomics behind a name-keyed map, latency histograms are fixed-bucket
+//! atomic arrays, and finished spans land in a bounded ring buffer.
+//!
+//! Two access paths exist on purpose:
+//!
+//! * [`reg`] returns the process-global [`Registry`] — the serving
+//!   stack's default, scraped by the `metrics` wire verb.
+//! * [`with_registry`] installs a **thread-local override** for the
+//!   duration of a closure, so property tests can run a scan against a
+//!   fresh registry and assert *exact* counter values without seeing
+//!   traffic from parallel tests (instrumented seams only touch the
+//!   registry on the calling thread, never inside pool-parallel loops).
+//!
+//! Tracing is off by default and costs one relaxed atomic load per
+//! [`span`] call when disabled (`bench_obs` pins that to <2% of the
+//! fused scan hot loop). When enabled via [`set_tracing`], spans carry a
+//! trace id and parent span id (thread-local context, or explicit via
+//! [`span_in`] for wire-propagated traces) and record monotonic-clock
+//! durations into the owning registry's ring on drop.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Finished spans kept per registry (oldest evicted first).
+pub const SPAN_RING_CAP: usize = 2048;
+
+/// Upper bucket bounds (µs) for latency histograms; a final +Inf bucket
+/// is implicit. Spans 100µs–1s, the range a serve-path query can land in.
+pub const LATENCY_BOUNDS_US: [u64; 12] = [
+    100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000,
+];
+
+// ---------------------------------------------------------------------------
+// histograms
+
+/// Fixed-bucket latency histogram: atomic per-bucket counts plus running
+/// sum/count, observable lock-free from any thread.
+pub struct Histo {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histo {
+    fn new() -> Histo {
+        Histo {
+            buckets: (0..=LATENCY_BOUNDS_US.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (µs for latency histograms; any u64 works).
+    pub fn observe(&self, v: u64) {
+        let i = LATENCY_BOUNDS_US.iter().position(|&b| v <= b).unwrap_or(LATENCY_BOUNDS_US.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one [`Histo`]: `counts[i]` pairs with
+/// `LATENCY_BOUNDS_US[i]` (last entry = +Inf bucket).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    /// Per-bucket counts, one per bound plus the +Inf bucket.
+    pub counts: Vec<u64>,
+    /// Sum of observed values.
+    pub sum: u64,
+    /// Number of observations.
+    pub count: u64,
+}
+
+impl HistoSnapshot {
+    /// Element-wise merge (fleet aggregation sums worker histograms).
+    pub fn merge(&mut self, other: &HistoSnapshot) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; other.counts.len()];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Upper bound (µs) of the bucket containing quantile `q` in [0,1]
+    /// — the usual conservative histogram-quantile estimate. Returns
+    /// `u64::MAX` when the quantile falls in the +Inf bucket, 0 when
+    /// the histogram is empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return LATENCY_BOUNDS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+
+/// One metrics domain: named counters, gauges, histograms, and the ring
+/// of finished spans. The process owns one global instance ([`reg`]);
+/// tests may instantiate their own and install it with [`with_registry`].
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicI64>>>,
+    histos: Mutex<BTreeMap<String, Arc<Histo>>>,
+    spans: Mutex<VecDeque<SpanRecord>>,
+    epoch: Instant,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// Fresh empty registry with its own time epoch.
+    pub fn new() -> Registry {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histos: Mutex::new(BTreeMap::new()),
+            spans: Mutex::new(VecDeque::new()),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Monotonic µs since this registry's creation (span timestamps).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Handle to the named counter (created at zero on first use).
+    /// Callers on hot-ish seams may cache the `Arc` and `fetch_add`
+    /// without re-taking the map lock.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Add `n` to the named counter.
+    pub fn counter_add(&self, name: &str, n: u64) {
+        self.counter(name).fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Handle to the named gauge (created at zero on first use).
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Set the named gauge to `v`.
+    pub fn gauge_set(&self, name: &str, v: i64) {
+        self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    /// Add `d` (may be negative) to the named gauge.
+    pub fn gauge_add(&self, name: &str, d: i64) {
+        self.gauge(name).fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Handle to the named histogram (created empty on first use).
+    pub fn histo(&self, name: &str) -> Arc<Histo> {
+        let mut m = self.histos.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Histo::new())).clone()
+    }
+
+    /// Record one µs observation into the named histogram.
+    pub fn observe_us(&self, name: &str, us: u64) {
+        self.histo(name).observe(us);
+    }
+
+    /// Push a finished span into the bounded ring (oldest evicted).
+    pub fn record_span(&self, rec: SpanRecord) {
+        let mut ring = self.spans.lock().unwrap();
+        if ring.len() >= SPAN_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+
+    /// The most recent `max` finished spans, oldest first.
+    pub fn recent_spans(&self, max: usize) -> Vec<SpanRecord> {
+        let ring = self.spans.lock().unwrap();
+        let skip = ring.len().saturating_sub(max);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Point-in-time copy of every metric (spans not included — those
+    /// travel separately so scrapes can skip them).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let histos = self
+            .histos
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        MetricsSnapshot { counters, gauges, histos }
+    }
+}
+
+/// Point-in-time, mergeable copy of a [`Registry`]'s metrics. Metric
+/// names may embed Prometheus-style labels (`scan_rows_total{bits="4"}`)
+/// — the maps treat them as opaque keys; only [`MetricsSnapshot::prometheus`]
+/// parses them back apart.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Monotone counters by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Instantaneous gauges by name.
+    pub gauges: BTreeMap<String, i64>,
+    /// Fixed-bucket histograms by name.
+    pub histos: BTreeMap<String, HistoSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Fleet merge: counters and histograms sum, gauges sum (a fleet's
+    /// queue depth / resident bytes are additive across workers).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.histos {
+            self.histos.entry(k.clone()).or_default().merge(v);
+        }
+    }
+
+    /// Render in the Prometheus text exposition format. Every metric is
+    /// prefixed `qless_`; a name's `{label="v"}` suffix (if any) becomes
+    /// the sample's label set, and metrics sharing a base name share one
+    /// `# TYPE` line (BTreeMap order keeps them adjacent).
+    pub fn prometheus(&self) -> String {
+        fn split(name: &str) -> (&str, &str) {
+            match name.find('{') {
+                Some(i) => (&name[..i], &name[i..]),
+                None => (name, ""),
+            }
+        }
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, v) in &self.counters {
+            let (base, labels) = split(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE qless_{base} counter");
+                last_base = base.to_string();
+            }
+            let _ = writeln!(out, "qless_{base}{labels} {v}");
+        }
+        last_base.clear();
+        for (name, v) in &self.gauges {
+            let (base, labels) = split(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE qless_{base} gauge");
+                last_base = base.to_string();
+            }
+            let _ = writeln!(out, "qless_{base}{labels} {v}");
+        }
+        for (name, h) in &self.histos {
+            let (base, _) = split(name);
+            let _ = writeln!(out, "# TYPE qless_{base} histogram");
+            let mut cum = 0u64;
+            for (i, c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = LATENCY_BOUNDS_US
+                    .get(i)
+                    .map(|b| b.to_string())
+                    .unwrap_or_else(|| "+Inf".to_string());
+                let _ = writeln!(out, "qless_{base}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(out, "qless_{base}_sum {}", h.sum);
+            let _ = writeln!(out, "qless_{base}_count {}", h.count);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global + thread-local override
+
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+thread_local! {
+    static OVERRIDE: RefCell<Option<Arc<Registry>>> = const { RefCell::new(None) };
+    /// (trace id, current span id) of the innermost live span, 0 = none.
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// The process-global registry (what the `metrics` wire verb scrapes).
+pub fn global() -> Arc<Registry> {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
+}
+
+/// The registry in force on this thread: the [`with_registry`] override
+/// if one is installed, else the global one.
+pub fn reg() -> Arc<Registry> {
+    OVERRIDE
+        .with(|o| o.borrow().clone())
+        .unwrap_or_else(global)
+}
+
+/// Run `f` with `r` installed as this thread's registry, restoring the
+/// previous override afterwards (panic-safe). Instrumented seams only
+/// touch the registry on the calling thread, so a test wrapping a scan
+/// here observes exactly that scan's traffic.
+pub fn with_registry<R>(r: Arc<Registry>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Arc<Registry>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            OVERRIDE.with(|o| *o.borrow_mut() = prev);
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.borrow_mut().replace(r));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Add `n` to `name` in the thread's registry ([`reg`]).
+pub fn counter_add(name: &str, n: u64) {
+    reg().counter_add(name, n);
+}
+
+/// Set gauge `name` in the thread's registry.
+pub fn gauge_set(name: &str, v: i64) {
+    reg().gauge_set(name, v);
+}
+
+/// Add `d` to gauge `name` in the thread's registry.
+pub fn gauge_add(name: &str, d: i64) {
+    reg().gauge_add(name, d);
+}
+
+/// Record a µs observation into histogram `name` in the thread's registry.
+pub fn observe_us(name: &str, us: u64) {
+    reg().observe_us(name, us);
+}
+
+// ---------------------------------------------------------------------------
+// tracing
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Globally enable/disable span collection. Disabled (the default),
+/// [`span`] is a single relaxed load returning an inert guard.
+pub fn set_tracing(on: bool) {
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+/// Whether span collection is enabled.
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Fresh process-unique nonzero id (trace ids, span ids — wire and local).
+pub fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One finished span: what the ring stores and what reply `timing`
+/// arrays carry over the wire. `start_us` is relative to the recording
+/// registry's epoch (or, on the wire, to the handling server's request
+/// start — the coordinator re-bases when stitching).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Stage name, e.g. `server.score` or `scan.pass`.
+    pub name: String,
+    /// Trace this span belongs to (0 = standalone).
+    pub trace: u64,
+    /// This span's id (nonzero).
+    pub id: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Start, µs (registry-relative locally; handler-relative on wire).
+    pub start_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+}
+
+/// RAII guard for one live span; records into the owning registry on
+/// drop. Inert (all-zero, no allocation) when tracing is disabled.
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    name: String,
+    trace: u64,
+    id: u64,
+    parent: u64,
+    start: Instant,
+    start_us: u64,
+    prev: (u64, u64),
+    reg: Arc<Registry>,
+}
+
+impl SpanGuard {
+    /// This span's id, or 0 when tracing was disabled at creation.
+    pub fn id(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.id)
+    }
+
+    /// The trace id this span belongs to, or 0 when inert.
+    pub fn trace(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.trace)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(i) = self.inner.take() {
+            CURRENT.set(i.prev);
+            i.reg.record_span(SpanRecord {
+                name: i.name,
+                trace: i.trace,
+                id: i.id,
+                parent: i.parent,
+                start_us: i.start_us,
+                dur_us: i.start.elapsed().as_micros() as u64,
+            });
+        }
+    }
+}
+
+/// Open a span named `name` under the thread's current span (a fresh
+/// trace if none is live). One branch and no work when tracing is off.
+pub fn span(name: &str) -> SpanGuard {
+    if !tracing_enabled() {
+        return SpanGuard { inner: None };
+    }
+    let (trace, parent) = CURRENT.with(|c| c.get());
+    let trace = if trace == 0 { next_id() } else { trace };
+    open(name, trace, parent)
+}
+
+/// Open a span with an **explicit** trace id and parent span id — the
+/// entry point for wire-propagated traces (`trace` request field).
+/// Still inert when tracing is disabled.
+pub fn span_in(name: &str, trace: u64, parent: u64) -> SpanGuard {
+    if !tracing_enabled() {
+        return SpanGuard { inner: None };
+    }
+    open(name, if trace == 0 { next_id() } else { trace }, parent)
+}
+
+fn open(name: &str, trace: u64, parent: u64) -> SpanGuard {
+    let reg = reg();
+    let id = next_id();
+    let prev = CURRENT.with(|c| c.replace((trace, id)));
+    SpanGuard {
+        inner: Some(SpanInner {
+            name: name.to_string(),
+            trace,
+            id,
+            parent,
+            start: Instant::now(),
+            start_us: reg.now_us(),
+            prev,
+            reg,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests flipping the global TRACING flag serialize on this.
+    static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn counters_gauges_histos_roundtrip() {
+        let r = Registry::new();
+        r.counter_add("a_total", 2);
+        r.counter_add("a_total", 3);
+        r.gauge_set("depth", 7);
+        r.gauge_add("depth", -2);
+        r.observe_us("lat_us", 90);
+        r.observe_us("lat_us", 9_000);
+        let s = r.snapshot();
+        assert_eq!(s.counters["a_total"], 5);
+        assert_eq!(s.gauges["depth"], 5);
+        let h = &s.histos["lat_us"];
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 9_090);
+        assert_eq!(h.counts[0], 1, "90µs lands in the first bucket");
+        assert_eq!(h.counts.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn snapshot_merge_sums() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.counter_add("x", 1);
+        b.counter_add("x", 2);
+        b.counter_add("y", 4);
+        a.gauge_set("g", 3);
+        b.gauge_set("g", 5);
+        a.observe_us("h", 50);
+        b.observe_us("h", 500_000);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.counters["x"], 3);
+        assert_eq!(m.counters["y"], 4);
+        assert_eq!(m.gauges["g"], 8);
+        assert_eq!(m.histos["h"].count, 2);
+        assert_eq!(m.histos["h"].sum, 500_050);
+    }
+
+    #[test]
+    fn histo_quantile_is_bucket_upper_bound() {
+        let h = Histo::new();
+        for _ in 0..99 {
+            h.observe(90); // bucket ≤100
+        }
+        h.observe(700_000); // bucket ≤1_000_000
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 100);
+        assert_eq!(s.quantile(1.0), 1_000_000);
+        assert_eq!(HistoSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn with_registry_isolates_thread() {
+        let mine = Arc::new(Registry::new());
+        with_registry(mine.clone(), || {
+            counter_add("iso_total", 11);
+        });
+        assert_eq!(mine.snapshot().counters["iso_total"], 11);
+        // after the closure the override is gone: traffic goes global
+        counter_add("iso_total", 1);
+        assert_eq!(mine.snapshot().counters["iso_total"], 11);
+        // and a sibling thread with its own override never sees `mine`'s
+        let other = Arc::new(Registry::new());
+        let o2 = other.clone();
+        std::thread::spawn(move || {
+            with_registry(o2, || counter_add("iso_total", 7));
+        })
+        .join()
+        .unwrap();
+        assert_eq!(other.snapshot().counters["iso_total"], 7);
+        assert_eq!(mine.snapshot().counters["iso_total"], 11);
+    }
+
+    #[test]
+    fn spans_record_nesting_and_ring_is_bounded() {
+        let _g = TRACE_LOCK.lock().unwrap();
+        let r = Arc::new(Registry::new());
+        set_tracing(true);
+        with_registry(r.clone(), || {
+            let outer = span("outer");
+            let outer_id = outer.id();
+            assert_ne!(outer_id, 0);
+            {
+                let inner = span("inner");
+                assert_ne!(inner.id(), outer_id);
+                assert_eq!(inner.trace(), outer.trace());
+            }
+            drop(outer);
+            let spans = r.recent_spans(10);
+            assert_eq!(spans.len(), 2);
+            assert_eq!(spans[0].name, "inner");
+            assert_eq!(spans[0].parent, outer_id, "inner parents to outer");
+            assert_eq!(spans[1].name, "outer");
+            assert_eq!(spans[1].parent, 0);
+            assert!(spans[1].dur_us >= spans[0].dur_us);
+            for _ in 0..SPAN_RING_CAP + 5 {
+                span("fill");
+            }
+            assert_eq!(r.recent_spans(usize::MAX).len(), SPAN_RING_CAP);
+        });
+        set_tracing(false);
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = TRACE_LOCK.lock().unwrap();
+        set_tracing(false);
+        let r = Arc::new(Registry::new());
+        with_registry(r.clone(), || {
+            let s = span("nothing");
+            assert_eq!(s.id(), 0);
+            drop(s);
+        });
+        assert!(r.recent_spans(10).is_empty());
+    }
+
+    #[test]
+    fn span_in_adopts_wire_identity() {
+        let _g = TRACE_LOCK.lock().unwrap();
+        let r = Arc::new(Registry::new());
+        set_tracing(true);
+        with_registry(r.clone(), || {
+            let s = span_in("server.score", 0xabc, 0x12);
+            assert_eq!(s.trace(), 0xabc);
+            drop(s);
+        });
+        set_tracing(false);
+        let spans = r.recent_spans(1);
+        assert_eq!(spans[0].trace, 0xabc);
+        assert_eq!(spans[0].parent, 0x12);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let r = Registry::new();
+        r.counter_add("scan_rows_total{bits=\"1\"}", 3);
+        r.counter_add("scan_rows_total{bits=\"8\"}", 4);
+        r.gauge_set("queue_depth{pool=\"scan\"}", 2);
+        r.observe_us("score_us", 400);
+        let text = r.snapshot().prometheus();
+        assert_eq!(text.matches("# TYPE qless_scan_rows_total counter").count(), 1);
+        assert!(text.contains("qless_scan_rows_total{bits=\"1\"} 3"));
+        assert!(text.contains("qless_scan_rows_total{bits=\"8\"} 4"));
+        assert!(text.contains("# TYPE qless_queue_depth gauge"));
+        assert!(text.contains("qless_queue_depth{pool=\"scan\"} 2"));
+        assert!(text.contains("# TYPE qless_score_us histogram"));
+        assert!(text.contains("qless_score_us_bucket{le=\"500\"} 1"));
+        assert!(text.contains("qless_score_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("qless_score_us_sum 400"));
+        assert!(text.contains("qless_score_us_count 1"));
+    }
+}

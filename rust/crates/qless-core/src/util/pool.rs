@@ -279,6 +279,11 @@ type Task = Box<dyn FnOnce() + Send + 'static>;
 pub struct TaskPool {
     tx: Option<mpsc::SyncSender<Task>>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Tasks enqueued but not yet dequeued — a metrics gauge shared with
+    /// the workers, labeled by pool name in the process registry.
+    depth: Arc<std::sync::atomic::AtomicI64>,
+    /// Times `execute` found the queue full and had to block.
+    saturated: Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl TaskPool {
@@ -287,9 +292,13 @@ impl TaskPool {
     pub fn new(name: &str, workers: usize, queue_cap: usize) -> TaskPool {
         let (tx, rx) = mpsc::sync_channel::<Task>(queue_cap.max(1));
         let rx = Arc::new(Mutex::new(rx));
+        let reg = super::obs::reg();
+        let depth = reg.gauge(&format!("taskpool_queue_depth{{pool=\"{name}\"}}"));
+        let saturated = reg.counter(&format!("taskpool_saturation_total{{pool=\"{name}\"}}"));
         let handles = (0..workers.max(1))
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let depth = Arc::clone(&depth);
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || loop {
@@ -300,6 +309,7 @@ impl TaskPool {
                         };
                         match task {
                             Ok(t) => {
+                                depth.fetch_sub(1, Ordering::Relaxed);
                                 let _ = catch_unwind(AssertUnwindSafe(t));
                             }
                             Err(_) => return, // queue closed: pool dropped
@@ -308,7 +318,7 @@ impl TaskPool {
                     .expect("spawning task-pool worker")
             })
             .collect();
-        TaskPool { tx: Some(tx), handles }
+        TaskPool { tx: Some(tx), handles, depth, saturated }
     }
 
     /// Number of worker threads.
@@ -320,7 +330,24 @@ impl TaskPool {
     /// only if the pool is already shut down.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> anyhow::Result<()> {
         let tx = self.tx.as_ref().ok_or_else(|| anyhow::anyhow!("task pool closed"))?;
-        tx.send(Box::new(f)).map_err(|_| anyhow::anyhow!("task pool closed"))
+        let closed = || anyhow::anyhow!("task pool closed");
+        // count the task as queued before handing it over so the gauge
+        // never under-reports a full queue; undo on a closed pool
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(Box::new(f)) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(t)) => {
+                self.saturated.fetch_add(1, Ordering::Relaxed);
+                tx.send(t).map_err(|_| {
+                    self.depth.fetch_sub(1, Ordering::Relaxed);
+                    closed()
+                })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(closed())
+            }
+        }
     }
 }
 

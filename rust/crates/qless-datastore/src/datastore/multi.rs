@@ -118,6 +118,8 @@ impl MultiWriter {
         if rows.len() % self.k != 0 {
             bail!("append_rows: {} floats is not a whole number of k={} rows", rows.len(), self.k);
         }
+        let _sp = qless_core::util::obs::span("build.quantize_window");
+        qless_core::util::obs::counter_add("build_window_rows_total", (rows.len() / self.k) as u64);
         let mut resident = rows.len() as u64 * 4;
         for (i, p) in self.precisions.iter().enumerate() {
             quantize_rows_into(

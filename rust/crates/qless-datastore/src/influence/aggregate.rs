@@ -22,6 +22,8 @@
 
 use anyhow::Result;
 
+use qless_core::util::obs;
+
 use crate::datastore::{Datastore, Header, LiveStore, RowsView};
 use crate::grads::FeatureMatrix;
 use crate::influence::native::{scores_rows, ValFeatures};
@@ -97,6 +99,7 @@ pub struct MultiScan {
     q: usize,
     base_row: usize,
     resident_row_bytes: u64,
+    bits: u8,
 }
 
 impl MultiScan {
@@ -150,6 +153,7 @@ impl MultiScan {
             q,
             base_row,
             resident_row_bytes: header.resident_row_bytes(),
+            bits: header.precision.bits,
         })
     }
 
@@ -195,8 +199,22 @@ impl MultiScan {
     }
 
     /// Finish the scan: per-task score totals (caller order) + the pass's
-    /// [`ScanStats`].
+    /// [`ScanStats`]. Publishes the pass's row/byte traffic to the
+    /// calling thread's metrics registry as per-bitwidth counters —
+    /// **on this thread only**, so `obs::with_registry` property tests
+    /// observe exactly the passes they ran (never inside the
+    /// pool-parallel row loops; one map lookup per *pass*, not per row).
     pub fn finish(self) -> (Vec<Vec<f32>>, ScanStats) {
+        let r = obs::reg();
+        r.counter_add(&format!("scan_passes_total{{bits=\"{}\"}}", self.bits), 1);
+        r.counter_add(
+            &format!("scan_rows_total{{bits=\"{}\"}}", self.bits),
+            self.stats.rows_read,
+        );
+        r.counter_add(
+            &format!("scan_bytes_total{{bits=\"{}\"}}", self.bits),
+            self.stats.bytes_read,
+        );
         (self.totals, self.stats)
     }
 }
@@ -255,6 +273,7 @@ pub fn score_datastore_tasks(
         }
     }
     for ci in 0..c {
+        let _sp = obs::span("scan.checkpoint");
         let val_tiles = match (opts.use_xla, rt_info) {
             (true, Some((_, info))) => Some(pack_val_tiles(info, scan.val(ci))),
             (true, None) => return Err(anyhow::anyhow!("XLA scoring requires a runtime")),
@@ -302,6 +321,7 @@ pub fn score_live_tasks(
     let mut scan = MultiScan::try_new_range(live.header(), tasks, 0, live.n_rows())?;
     let rows_per_shard = live.rows_per_shard(opts.shard_rows, opts.effective_budget_mb());
     for ci in 0..live.header().n_checkpoints as usize {
+        let _sp = obs::span("scan.checkpoint");
         for member in live.members() {
             let mut reader = member.ds.shard_reader(ci, rows_per_shard)?;
             let eta = reader.eta();

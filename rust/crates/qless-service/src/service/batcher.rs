@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::session::{Answer, CascadePlan, ScoreQuery, ServiceStats, Session};
+use crate::util::obs;
 
 /// Outcome delivered to one submitted query: the answer, or the failure
 /// message of the batch it rode (stringly so it can be broadcast to every
@@ -210,9 +211,11 @@ impl Batcher {
                 bail!("service is shutting down");
             }
             if st.queue.len() >= self.queue_cap {
+                obs::counter_add("batcher_rejects_total", 1);
                 bail!("admission queue full ({} queries waiting)", self.queue_cap);
             }
             st.queue.push_back(Job { query, key, reply: tx });
+            obs::gauge_set("batcher_queue_depth", st.queue.len() as i64);
         }
         self.shared.arrived.notify_all();
         Ok(rx)
@@ -292,8 +295,15 @@ fn worker_loop(
             while take < st.queue.len() && take < max_batch && st.queue[take].key == want {
                 take += 1;
             }
-            st.queue.drain(..take).collect()
+            let batch: Vec<Job> = st.queue.drain(..take).collect();
+            obs::gauge_set("batcher_queue_depth", st.queue.len() as i64);
+            batch
         };
+        // window occupancy: how many queries each fused pass amortizes —
+        // the micro-batcher's whole reason to exist (mean occupancy =
+        // batched_queries / batches)
+        obs::counter_add("batcher_batches_total", 1);
+        obs::counter_add("batcher_batched_queries_total", batch.len() as u64);
         let key = batch.first().map(|j| j.key.clone()).expect("batch non-empty");
         let (queries, repliers): (Vec<ScoreQuery>, Vec<mpsc::Sender<BatchResult>>) =
             batch.into_iter().map(|j| (j.query, j.reply)).unzip();
@@ -301,6 +311,7 @@ fn worker_loop(
         // worker (queued + future queries would hang forever, wedging the
         // whole server) — it becomes an error broadcast to this batch's
         // riders, and the worker lives on
+        let pass_span = obs::span("batcher.pass");
         let result = catch_unwind(AssertUnwindSafe(|| match &key {
             PassKey::Full => session.answer_batch(&queries),
             PassKey::Range { start, len } => session.answer_range(&queries, *start, *len),
@@ -314,6 +325,7 @@ fn worker_loop(
                 session.answer_rerank_rows(&queries, rows, *bits)
             }
         }));
+        drop(pass_span);
         // publish stats before replying, so a client that just got its
         // answer reads a snapshot that already includes its batch (and
         // any generation reload the batch picked up)

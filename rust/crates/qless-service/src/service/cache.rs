@@ -56,10 +56,12 @@ impl<K: Ord + Clone, V: Clone> LruCache<K, V> {
     }
 
     /// Insert (or replace) `key` with the given weight, then evict
-    /// least-recently-used entries until the budget holds.
-    pub fn insert(&mut self, key: K, value: V, weight: usize) {
+    /// least-recently-used entries until the budget holds. Returns the
+    /// total weight evicted (replaced entries excluded) so callers can
+    /// feed eviction-bytes metrics without a second bookkeeping pass.
+    pub fn insert(&mut self, key: K, value: V, weight: usize) -> usize {
         if self.budget == 0 {
-            return; // caching disabled
+            return 0; // caching disabled
         }
         if let Some(old) = self.map.remove(&key) {
             self.weight -= old.weight;
@@ -70,6 +72,7 @@ impl<K: Ord + Clone, V: Clone> LruCache<K, V> {
         self.recency.insert(tick, key.clone());
         self.map.insert(key, Entry { value, weight, tick });
         self.weight += weight;
+        let mut evicted = 0usize;
         while self.weight > self.budget && self.map.len() > 1 {
             let lru_tick = *self.recency.keys().next().expect("recency tracks map");
             if lru_tick == tick {
@@ -78,8 +81,10 @@ impl<K: Ord + Clone, V: Clone> LruCache<K, V> {
             let lru_key = self.recency.remove(&lru_tick).expect("tick present");
             if let Some(e) = self.map.remove(&lru_key) {
                 self.weight -= e.weight;
+                evicted += e.weight;
             }
         }
+        evicted
     }
 
     /// Number of resident entries.
@@ -160,7 +165,7 @@ mod tests {
         c.insert(3, 30, 1);
         // touch 1 so 2 becomes the LRU
         assert_eq!(c.get(&1), Some(10));
-        c.insert(4, 40, 1);
+        assert_eq!(c.insert(4, 40, 1), 1, "evicted weight reported");
         assert_eq!(c.get(&2), None, "LRU entry evicted");
         assert_eq!(c.get(&1), Some(10));
         assert_eq!(c.get(&3), Some(30));
@@ -172,7 +177,8 @@ mod tests {
     fn lru_keeps_oversized_newest_entry() {
         let mut c: LruCache<u64, u64> = LruCache::new(5);
         c.insert(1, 10, 2);
-        c.insert(2, 20, 100); // alone over budget: evicts 1, stays resident
+        // alone over budget: evicts 1 (2 weight back), stays resident
+        assert_eq!(c.insert(2, 20, 100), 2);
         assert_eq!(c.get(&1), None);
         assert_eq!(c.get(&2), Some(20));
         assert_eq!(c.len(), 1);

@@ -37,17 +37,21 @@
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::influence::ScanStats;
 use crate::select::{merge_top_k, top_k_scored_among};
+use crate::util::obs::{self, SpanRecord};
 use crate::util::pool::TaskPool;
 use crate::{info, warn_};
 
-use super::proto::{self, CascadeField, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+use super::proto::{
+    self, CascadeField, MetricsReply, Request, Response, ScoreReply, ScoreRequest, StatsReply,
+    TraceField, WorkerStat,
+};
 use super::server::{serve_lines, Client, ServeOpts, Server};
 use super::session::ServiceStats;
 
@@ -354,13 +358,22 @@ fn handle_line(line: &str, ctx: &CoCtx) -> Response {
     match req {
         Request::Ping { id } => Response::Pong { id },
         Request::Shutdown { id } => Response::ShuttingDown { id },
-        Request::Stats { id } => match scatter_stats(ctx) {
+        Request::Stats { id, per_worker } => match scatter_stats(ctx, per_worker) {
             Ok(mut r) => {
                 r.id = id;
                 Response::Stats(r)
             }
             Err(e) => Response::Error { id, error: format!("{e:#}") },
         },
+        Request::Metrics { id, traces, prometheus } => {
+            let (snapshot, spans) = scatter_metrics(ctx, traces);
+            Response::Metrics(MetricsReply {
+                id,
+                prometheus: prometheus.then(|| snapshot.prometheus()),
+                traces: traces.then_some(spans),
+                snapshot,
+            })
+        }
         Request::Score(r) => {
             let id = r.id;
             match scatter_score(&r, ctx) {
@@ -374,8 +387,10 @@ fn handle_line(line: &str, ctx: &CoCtx) -> Response {
 /// Aggregate `stats` across the fleet: generation and row count are the
 /// **minimum** over reachable workers (the state every one of them can
 /// answer for — the same pin the scatter path serves), counters are
-/// summed, geometry comes from the startup agreement.
-fn scatter_stats(ctx: &CoCtx) -> Result<StatsReply> {
+/// summed, geometry comes from the startup agreement. With `per_worker`
+/// the reply also carries one un-summed row per reachable worker — the
+/// fleet sums are lossy for spotting a straggler, the row set is not.
+fn scatter_stats(ctx: &CoCtx, per_worker: bool) -> Result<StatsReply> {
     let states = probe_fleet(ctx)?;
     let mut sum = ServiceStats::default();
     for (_, st) in &states {
@@ -391,15 +406,78 @@ fn scatter_stats(ctx: &CoCtx) -> Result<StatsReply> {
         sum.rows_scored += s.rows_scored;
         sum.reloads += s.reloads;
     }
+    let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
+    record_generation_lag(&states, generation);
     Ok(StatsReply {
         id: 0, // caller stamps the request id
-        generation: states.iter().map(|(_, s)| s.generation).min().expect("non-empty"),
+        generation,
         n_samples: states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty"),
         k: ctx.k,
         checkpoints: ctx.checkpoints,
         bits: ctx.bits,
         stats: sum,
+        per_worker: per_worker.then(|| {
+            states
+                .iter()
+                .map(|(i, st)| WorkerStat {
+                    addr: ctx.workers[*i].addr.clone(),
+                    generation: st.generation,
+                    n_samples: st.n_samples,
+                    stats: st.stats,
+                })
+                .collect()
+        }),
     })
+}
+
+/// Publish how far the slowest reachable worker's ingest generation lags
+/// the fastest's — the fleet pin (`min`) drops freshly-ingested rows
+/// whenever this is nonzero, so it is the first gauge to watch when a
+/// `since_gen` query returns fewer rows than expected.
+fn record_generation_lag(states: &[(usize, StatsReply)], min_gen: u64) {
+    let max_gen = states.iter().map(|(_, s)| s.generation).max().unwrap_or(min_gen);
+    obs::gauge_set("coord_generation_lag", max_gen.saturating_sub(min_gen) as i64);
+}
+
+/// Scrape-and-merge the fleet's metrics registries into the
+/// coordinator's own. A worker that fails the scrape — including an
+/// older worker that predates the `metrics` verb — is skipped (counted
+/// in `coord_metrics_skipped_total`), never a hard error, and its health
+/// flag is left alone: inability to answer `metrics` says nothing about
+/// its ability to score. Span rings are concatenated after the
+/// coordinator's own when `traces` is set.
+fn scatter_metrics(ctx: &CoCtx, traces: bool) -> (obs::MetricsSnapshot, Vec<SpanRecord>) {
+    let reg = obs::reg();
+    let mut merged = obs::MetricsSnapshot::default();
+    let mut spans = Vec::new();
+    for slot in &ctx.workers {
+        if !slot.healthy.load(Ordering::SeqCst) {
+            continue;
+        }
+        let res = Client::connect_deadline(slot.addr.as_str(), ctx.deadline)
+            .and_then(|mut c| c.metrics(traces, false));
+        match res {
+            Ok(r) => {
+                merged.merge(&r.snapshot);
+                if let Some(t) = r.traces {
+                    spans.extend(t);
+                }
+            }
+            Err(e) => {
+                obs::counter_add("coord_metrics_skipped_total", 1);
+                warn_!("coordinator: metrics scrape of {} skipped: {e:#}", slot.addr);
+            }
+        }
+    }
+    // the coordinator's own registry folds in LAST so a worker skipped by
+    // THIS scrape is already counted in the reply that skipped it
+    merged.merge(&reg.snapshot());
+    if traces {
+        let mut own = reg.recent_spans(obs::SPAN_RING_CAP);
+        own.append(&mut spans);
+        spans = own;
+    }
+    (merged, spans)
 }
 
 /// Probe the fleet in parallel: every currently-healthy worker (all of
@@ -462,6 +540,103 @@ fn partition(n: usize, ways: usize) -> Vec<(usize, usize)> {
     parts
 }
 
+/// Span collector for one traced scatter query. The coordinator records
+/// the spans it can measure directly (the whole query, each wave, each
+/// worker rpc) and **absorbs** the `timing` arrays workers send back:
+/// absorbed spans get fresh coordinator-side ids (worker ids are
+/// per-process counters and would collide across workers), offsets
+/// re-based onto the rpc's start, and any parent link that doesn't
+/// resolve within the absorbed array re-homed onto the rpc span — so the
+/// reply's `timing` is always one well-formed tree rooted at
+/// `coordinator.score`.
+struct TraceBuf {
+    trace: TraceField,
+    root: u64,
+    t0: u64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceBuf {
+    fn new(trace: TraceField, reg: &obs::Registry) -> TraceBuf {
+        TraceBuf { trace, root: obs::next_id(), t0: reg.now_us(), spans: Mutex::new(Vec::new()) }
+    }
+
+    /// The trace identity sub-requests should carry: same trace id, the
+    /// given wave span as parent (workers report it back verbatim; the
+    /// absorb step re-homes their roots anyway).
+    fn sub_trace(&self, wave: u64) -> TraceField {
+        TraceField { id: self.trace.id, parent: wave }
+    }
+
+    /// Record a wave span (probe wave, rerank wave, or the single scatter
+    /// wave) under the root. The id is allocated by the caller **before**
+    /// the wave runs so concurrent rpc spans can name it as parent.
+    fn push_wave(&self, name: &str, id: u64, start_us: u64, end_us: u64) {
+        self.spans.lock().unwrap().push(SpanRecord {
+            name: name.into(),
+            trace: self.trace.id,
+            id,
+            parent: self.root,
+            start_us: start_us.saturating_sub(self.t0),
+            dur_us: end_us.saturating_sub(start_us),
+        });
+    }
+
+    /// Record one completed worker rpc under `wave` and absorb the
+    /// reply's timing spans beneath it.
+    fn absorb(&self, name: &str, wave: u64, start_us: u64, end_us: u64, reply: &ScoreReply) {
+        let rpc = obs::next_id();
+        let mut spans = self.spans.lock().unwrap();
+        spans.push(SpanRecord {
+            name: name.into(),
+            trace: self.trace.id,
+            id: rpc,
+            parent: wave,
+            start_us: start_us.saturating_sub(self.t0),
+            dur_us: end_us.saturating_sub(start_us),
+        });
+        if let Some(timing) = &reply.timing {
+            let map: std::collections::BTreeMap<u64, u64> =
+                timing.iter().map(|s| (s.id, obs::next_id())).collect();
+            for s in timing {
+                spans.push(SpanRecord {
+                    name: s.name.clone(),
+                    trace: self.trace.id,
+                    id: map[&s.id],
+                    parent: map.get(&s.parent).copied().unwrap_or(rpc),
+                    start_us: start_us.saturating_sub(self.t0) + s.start_us,
+                    dur_us: s.dur_us,
+                });
+            }
+        }
+    }
+
+    /// Close the root span and hand the stitched tree back (root first).
+    /// The tree also lands in the span ring when tracing is enabled, so
+    /// `metrics --traces` can replay recent fan-outs.
+    fn finish(self, reg: &obs::Registry) -> Vec<SpanRecord> {
+        let done = reg.now_us();
+        let mut spans = self.spans.into_inner().unwrap();
+        spans.insert(
+            0,
+            SpanRecord {
+                name: "coordinator.score".into(),
+                trace: self.trace.id,
+                id: self.root,
+                parent: self.trace.parent,
+                start_us: 0,
+                dur_us: done.saturating_sub(self.t0),
+            },
+        );
+        if obs::tracing_enabled() {
+            for s in &spans {
+                reg.record_span(s.clone());
+            }
+        }
+        spans
+    }
+}
+
 /// One ranged sub-query against one worker, under the deadline.
 fn sub_score(
     addr: &str,
@@ -469,8 +644,10 @@ fn sub_score(
     start: usize,
     len: usize,
     deadline: Duration,
+    trace: Option<TraceField>,
 ) -> Result<ScoreReply> {
     let mut c = Client::connect_deadline(addr, deadline)?;
+    c.set_trace(trace);
     let r = c.score_rows(
         &req.val,
         req.top_k,
@@ -515,6 +692,7 @@ fn fan_out(
                 s.spawn(move || {
                     let res = issue(slot.addr.as_str(), (start, len));
                     if let Err(e) = &res {
+                        obs::counter_add("coord_subquery_failures_total", 1);
                         slot.healthy.store(false, Ordering::SeqCst);
                         warn_!(
                             "coordinator: worker {} failed {what} {start}+{len}: {e:#}",
@@ -542,13 +720,16 @@ fn fan_out(
                 .filter(|w| w.healthy.load(Ordering::SeqCst))
                 .collect();
             if healthy.is_empty() {
+                obs::counter_add("coord_degraded_total", 1);
                 bail!("{what} {start}..{} unanswered and no workers left", start + len);
             }
             let slot = healthy[cursor % healthy.len()];
             cursor += 1;
+            obs::counter_add("coord_reissues_total", 1);
             match issue(slot.addr.as_str(), (start, len)) {
                 Ok(r) => results[pi] = Some(r),
                 Err(e) => {
+                    obs::counter_add("coord_subquery_failures_total", 1);
                     slot.healthy.store(false, Ordering::SeqCst);
                     warn_!(
                         "coordinator: re-issue of {what} {start}+{len} to {} failed: {e:#}",
@@ -560,6 +741,7 @@ fn fan_out(
     }
     if let Some(pi) = results.iter().position(Option::is_none) {
         let (start, len) = parts[pi];
+        obs::counter_add("coord_degraded_total", 1);
         bail!(
             "{what} {start}..{} unanswered after {} re-issue round(s)",
             start + len,
@@ -616,14 +798,36 @@ fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
     if let Some(CascadeField::Full { probe, rerank, mult }) = req.cascade {
         return scatter_cascade(req, ctx, probe, rerank, mult);
     }
+    let reg = obs::reg();
+    let t0 = reg.now_us();
+    let tb = req.trace.map(|t| TraceBuf::new(t, &reg));
     let states = probe_fleet(ctx)?;
     let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
+    record_generation_lag(&states, generation);
     let n = states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty");
     anyhow::ensure!(n > 0, "workers serve an empty store");
     let parts = partition(n, states.len());
+    let wave = obs::next_id();
+    let wave0 = reg.now_us();
     let replies = fan_out(ctx, &states, &parts, "rows", &|addr, (start, len)| {
-        sub_score(addr, req, start, len, ctx.deadline)
+        let s0 = reg.now_us();
+        let r = sub_score(
+            addr,
+            req,
+            start,
+            len,
+            ctx.deadline,
+            tb.as_ref().map(|b| b.sub_trace(wave)),
+        )?;
+        if let Some(b) = &tb {
+            b.absorb("rpc.score", wave, s0, reg.now_us(), &r);
+        }
+        Ok(r)
     })?;
+    if let Some(b) = &tb {
+        b.push_wave("wave.scatter", wave, wave0, reg.now_us());
+    }
+    reg.observe_us("coord_score_us", reg.now_us().saturating_sub(t0));
     // merge: summed I/O, comparator-exact top-k, concatenated scores
     let pass = merge_pass(replies.iter());
     let tops: Vec<Vec<(usize, f32)>> = replies.iter().map(|r| r.top.clone()).collect();
@@ -646,6 +850,7 @@ fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
         rows: None,
         top: merge_top_k(&tops, req.top_k),
         scores,
+        timing: tb.map(|b| b.finish(&reg)),
     })
 }
 
@@ -684,22 +889,36 @@ fn scatter_cascade(
         req.since_gen.is_none(),
         "cascade cannot be combined with 'since_gen'; score the new rows exhaustively instead"
     );
+    let reg = obs::reg();
+    let t0 = reg.now_us();
+    let tb = req.trace.map(|t| TraceBuf::new(t, &reg));
     let states = probe_fleet(ctx)?;
     let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
+    record_generation_lag(&states, generation);
     let n = states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty");
     anyhow::ensure!(n > 0, "workers serve an empty store");
     let ck = req.top_k.saturating_mul(mult).min(n);
     let parts = partition(n, states.len());
+    let probe_wave = obs::next_id();
+    let probe0 = reg.now_us();
     let probes = fan_out(ctx, &states, &parts, "rows", &|addr, (start, len)| {
+        let s0 = reg.now_us();
         let mut c = Client::connect_deadline(addr, ctx.deadline)?;
+        c.set_trace(tb.as_ref().map(|b| b.sub_trace(probe_wave)));
         let r = c.score_probe(&req.val, ck, (start as u64, len as u64), probe)?;
         anyhow::ensure!(
             r.rows == Some((start as u64, len as u64)),
             "worker answered range {:?} for request range {start}+{len}",
             r.rows
         );
+        if let Some(b) = &tb {
+            b.absorb("rpc.probe", probe_wave, s0, reg.now_us(), &r);
+        }
         Ok(r)
     })?;
+    if let Some(b) = &tb {
+        b.push_wave("wave.probe", probe_wave, probe0, reg.now_us());
+    }
     // merged candidate pool as a sorted, deduplicated global row list —
     // sorted so wave-2 chunks are contiguous row runs (sequential reads)
     let tops: Vec<Vec<(usize, f32)>> = probes.iter().map(|r| r.top.clone()).collect();
@@ -708,16 +927,27 @@ fn scatter_cascade(
     rows.dedup();
     anyhow::ensure!(!rows.is_empty(), "probe wave surfaced no candidates");
     let chunks = partition(rows.len(), states.len());
+    let rerank_wave = obs::next_id();
+    let rerank0 = reg.now_us();
     let reranks = fan_out(ctx, &states, &chunks, "candidates", &|addr, (start, len)| {
+        let s0 = reg.now_us();
         let mut c = Client::connect_deadline(addr, ctx.deadline)?;
+        c.set_trace(tb.as_ref().map(|b| b.sub_trace(rerank_wave)));
         let r = c.score_rerank(&req.val, rows[start..start + len].to_vec(), rerank)?;
         anyhow::ensure!(
             r.top.len() == len,
             "worker returned {} reranked rows for a {len}-candidate chunk",
             r.top.len()
         );
+        if let Some(b) = &tb {
+            b.absorb("rpc.rerank", rerank_wave, s0, reg.now_us(), &r);
+        }
         Ok(r)
     })?;
+    if let Some(b) = &tb {
+        b.push_wave("wave.rerank", rerank_wave, rerank0, reg.now_us());
+    }
+    reg.observe_us("coord_score_us", reg.now_us().saturating_sub(t0));
     let pass = merge_pass(probes.iter().chain(reranks.iter()));
     let pairs: Vec<(usize, f32)> = reranks.iter().flat_map(|r| r.top.iter().copied()).collect();
     Ok(ScoreReply {
@@ -729,6 +959,7 @@ fn scatter_cascade(
         rows: None,
         top: top_k_scored_among(&pairs, req.top_k),
         scores: None,
+        timing: tb.map(|b| b.finish(&reg)),
     })
 }
 

@@ -50,6 +50,9 @@ pub mod session;
 pub use batcher::{Batcher, BatcherOpts, SessionView};
 pub use cache::{task_digest, LruCache};
 pub use coordinator::{Coordinator, CoordinatorOpts};
-pub use proto::{CascadeField, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+pub use proto::{
+    CascadeField, MetricsReply, Request, Response, ScoreReply, ScoreRequest, StatsReply,
+    TraceField, WorkerStat,
+};
 pub use server::{Client, ServeOpts, Server};
 pub use session::{Answer, CascadePlan, ScoreQuery, ServiceStats, Session, SessionOpts};

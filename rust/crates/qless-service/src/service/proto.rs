@@ -6,11 +6,12 @@
 //! the markdown file, not this header.
 #![doc = include_str!("../../PROTOCOL.md")]
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::grads::FeatureMatrix;
 use crate::influence::ScanStats;
 use crate::util::json::Json;
+use crate::util::obs::{HistoSnapshot, MetricsSnapshot, SpanRecord};
 
 use super::session::ServiceStats;
 
@@ -23,6 +24,18 @@ pub enum Request {
     Stats {
         /// Client token echoed in the response.
         id: u64,
+        /// Ask a coordinator to include its per-worker breakdown
+        /// (PROTOCOL.md §Metrics); single-node servers ignore it.
+        per_worker: bool,
+    },
+    /// Scrape the process metrics registry (PROTOCOL.md §Metrics).
+    Metrics {
+        /// Client token echoed in the response.
+        id: u64,
+        /// Include the ring of recently finished spans.
+        traces: bool,
+        /// Include the Prometheus text rendering alongside the JSON.
+        prometheus: bool,
     },
     /// Liveness probe.
     Ping {
@@ -41,9 +54,21 @@ impl Request {
     pub fn id(&self) -> u64 {
         match self {
             Request::Score(r) => r.id,
-            Request::Stats { id } | Request::Ping { id } | Request::Shutdown { id } => *id,
+            Request::Stats { id, .. } | Request::Metrics { id, .. } => *id,
+            Request::Ping { id } | Request::Shutdown { id } => *id,
         }
     }
+}
+
+/// The `trace` field of a score request: the caller's trace identity,
+/// propagated so every hop's reply `timing` stitches into one tree
+/// (PROTOCOL.md §Trace propagation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceField {
+    /// Trace id, nonzero (hex string on the wire, like generations).
+    pub id: u64,
+    /// Span id of the caller's enclosing span (0 = this hop is the root).
+    pub parent: u64,
 }
 
 /// The `cascade` field of a score request: run the two-stage precision
@@ -102,6 +127,9 @@ pub struct ScoreRequest {
     /// Two-stage precision cascade (PROTOCOL.md §Cascade); `None` runs
     /// the ordinary exhaustive scan at the served precision.
     pub cascade: Option<CascadeField>,
+    /// Propagated trace identity; when present the reply carries a
+    /// `timing` span array (PROTOCOL.md §Trace propagation).
+    pub trace: Option<TraceField>,
     /// One raw `n × k` feature matrix per warmup checkpoint, in order.
     pub val: Vec<FeatureMatrix>,
 }
@@ -127,6 +155,10 @@ pub struct ScoreReply {
     pub top: Vec<(usize, f32)>,
     /// Full per-sample scores, present iff the request set `"scores":true`.
     pub scores: Option<Vec<f32>>,
+    /// Per-stage timing spans, present iff the request carried `trace`:
+    /// `start_us` is relative to this hop's request start, and parent
+    /// links resolve within the array (or to the request's trace parent).
+    pub timing: Option<Vec<SpanRecord>>,
 }
 
 /// The `stats` op's success payload: served-store geometry + cumulative
@@ -147,6 +179,38 @@ pub struct StatsReply {
     pub bits: u8,
     /// Cumulative service accounting.
     pub stats: ServiceStats,
+    /// Per-worker breakdown, present iff a coordinator answered a
+    /// request with `"per_worker":true` — the fleet sums are lossy for
+    /// debugging a straggler, this row set is not.
+    pub per_worker: Option<Vec<WorkerStat>>,
+}
+
+/// One worker's row in a coordinator's `per_worker` stats breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStat {
+    /// The worker's address, as configured at the coordinator.
+    pub addr: String,
+    /// Generation the worker is pinned to.
+    pub generation: u64,
+    /// Live rows the worker serves.
+    pub n_samples: usize,
+    /// The worker's cumulative service accounting.
+    pub stats: ServiceStats,
+}
+
+/// The `metrics` op's success payload: the scraped (or fleet-merged)
+/// registry, plus optional Prometheus text and recent spans.
+#[derive(Debug, Clone)]
+pub struct MetricsReply {
+    /// Echoed client token.
+    pub id: u64,
+    /// Counters, gauges and histograms by name.
+    pub snapshot: MetricsSnapshot,
+    /// Prometheus text rendering, iff the request set `"prometheus":true`.
+    pub prometheus: Option<String>,
+    /// Recently finished spans, iff the request set `"traces":true`
+    /// (empty when tracing is disabled on the server).
+    pub traces: Option<Vec<SpanRecord>>,
 }
 
 /// A parsed server response (see the module docs for the wire shape).
@@ -156,6 +220,8 @@ pub enum Response {
     Score(ScoreReply),
     /// Answer to a `stats` request.
     Stats(StatsReply),
+    /// Answer to a `metrics` request.
+    Metrics(MetricsReply),
     /// Answer to a `ping` request.
     Pong {
         /// Echoed client token.
@@ -181,6 +247,7 @@ impl Response {
         match self {
             Response::Score(r) => r.id,
             Response::Stats(r) => r.id,
+            Response::Metrics(r) => r.id,
             Response::Pong { id } | Response::ShuttingDown { id } => *id,
             Response::Error { id, .. } => *id,
         }
@@ -244,6 +311,63 @@ fn scan_stats_json(s: &ScanStats) -> Json {
     o
 }
 
+fn trace_json(t: &TraceField) -> Json {
+    let mut o = Json::obj();
+    o.set("id", gen_json(t.id));
+    if t.parent != 0 {
+        o.set("parent", gen_json(t.parent));
+    }
+    o
+}
+
+fn spans_json(spans: &[SpanRecord]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("name", s.name.as_str());
+                // score-reply timing belongs to the request's trace and
+                // omits the id; ring dumps (`metrics --traces`) mix many
+                // traces, so there each span carries its own
+                if s.trace != 0 {
+                    o.set("trace", gen_json(s.trace));
+                }
+                o.set("id", gen_json(s.id))
+                    .set("parent", gen_json(s.parent))
+                    .set("start_us", s.start_us as f64)
+                    .set("dur_us", s.dur_us as f64);
+                o
+            })
+            .collect(),
+    )
+}
+
+fn snapshot_json(s: &MetricsSnapshot) -> Json {
+    let mut counters = Json::obj();
+    for (k, v) in &s.counters {
+        counters.set(k.as_str(), *v as f64);
+    }
+    let mut gauges = Json::obj();
+    for (k, v) in &s.gauges {
+        gauges.set(k.as_str(), *v as f64);
+    }
+    let mut histos = Json::obj();
+    for (k, h) in &s.histos {
+        let mut e = Json::obj();
+        e.set(
+            "counts",
+            Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        )
+        .set("sum", h.sum as f64)
+        .set("count", h.count as f64);
+        histos.set(k.as_str(), e);
+    }
+    let mut o = Json::obj();
+    o.set("counters", counters).set("gauges", gauges).set("histograms", histos);
+    o
+}
+
 fn service_stats_json(s: &ServiceStats) -> Json {
     let mut o = Json::obj();
     o.set("queries", s.queries as f64)
@@ -277,10 +401,25 @@ pub fn encode_request(req: &Request) -> String {
             if let Some(c) = &r.cascade {
                 o.set("cascade", cascade_json(c));
             }
+            if let Some(t) = &r.trace {
+                o.set("trace", trace_json(t));
+            }
             o.set("val", Json::Arr(r.val.iter().map(matrix_json).collect()));
         }
-        Request::Stats { id } => {
+        Request::Stats { id, per_worker } => {
             o.set("op", "stats").set("id", id_json(*id));
+            if *per_worker {
+                o.set("per_worker", true);
+            }
+        }
+        Request::Metrics { id, traces, prometheus } => {
+            o.set("op", "metrics").set("id", id_json(*id));
+            if *traces {
+                o.set("traces", true);
+            }
+            if *prometheus {
+                o.set("prometheus", true);
+            }
         }
         Request::Ping { id } => {
             o.set("op", "ping").set("id", id_json(*id));
@@ -320,6 +459,9 @@ pub fn encode_response(resp: &Response) -> String {
             if let Some(scores) = &r.scores {
                 o.set("scores", f32s_json(scores));
             }
+            if let Some(timing) = &r.timing {
+                o.set("timing", spans_json(timing));
+            }
         }
         Response::Stats(r) => {
             o.set("id", id_json(r.id))
@@ -331,6 +473,32 @@ pub fn encode_response(resp: &Response) -> String {
                 .set("checkpoints", r.checkpoints)
                 .set("bits", r.bits as usize)
                 .set("stats", service_stats_json(&r.stats));
+            if let Some(per_worker) = &r.per_worker {
+                let rows: Vec<Json> = per_worker
+                    .iter()
+                    .map(|w| {
+                        let mut e = Json::obj();
+                        e.set("addr", w.addr.as_str())
+                            .set("generation", gen_json(w.generation))
+                            .set("n_samples", w.n_samples)
+                            .set("stats", service_stats_json(&w.stats));
+                        e
+                    })
+                    .collect();
+                o.set("per_worker", Json::Arr(rows));
+            }
+        }
+        Response::Metrics(r) => {
+            o.set("id", id_json(r.id))
+                .set("ok", true)
+                .set("re", "metrics")
+                .set("metrics", snapshot_json(&r.snapshot));
+            if let Some(text) = &r.prometheus {
+                o.set("prometheus", text.as_str());
+            }
+            if let Some(traces) = &r.traces {
+                o.set("traces", spans_json(traces));
+            }
         }
         Response::Pong { id } => {
             o.set("id", id_json(*id)).set("ok", true).set("re", "ping");
@@ -457,6 +625,82 @@ fn parse_cascade(j: &Json) -> Result<Option<CascadeField>> {
     Ok(Some(field))
 }
 
+/// Strict parse of the `trace` field: unknown keys are an error (a typoed
+/// field must not silently drop tracing), ids are hex strings like
+/// generations, and a zero trace id is rejected — 0 is the "untraced"
+/// sentinel in span records.
+fn parse_trace(j: &Json) -> Result<Option<TraceField>> {
+    let Some(t) = j.get("trace") else { return Ok(None) };
+    let obj = t.as_obj().map_err(|_| {
+        anyhow::anyhow!("'trace' must be an object (see PROTOCOL.md §Trace propagation)")
+    })?;
+    for k in obj.keys() {
+        if !["id", "parent"].contains(&k.as_str()) {
+            bail!("unknown key '{k}' in 'trace' (allowed: id, parent)");
+        }
+    }
+    let id = parse_gen(t, "id").context("malformed 'trace' id (want a hex string)")?;
+    if id == 0 {
+        bail!("'trace' id must be nonzero");
+    }
+    let parent = match t.get("parent") {
+        Some(_) => {
+            parse_gen(t, "parent").context("malformed 'trace' parent (want a hex string)")?
+        }
+        None => 0,
+    };
+    Ok(Some(TraceField { id, parent }))
+}
+
+fn parse_spans(j: &Json) -> Result<Vec<SpanRecord>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(SpanRecord {
+                name: e.req("name")?.as_str()?.to_string(),
+                // optional: score-reply timing spans may omit it (the
+                // trace id travels in the request, and the receiver
+                // re-homes absorbed spans into its own trace anyway)
+                trace: match e.get("trace") {
+                    Some(_) => parse_gen(e, "trace")?,
+                    None => 0,
+                },
+                id: parse_gen(e, "id")?,
+                parent: parse_gen(e, "parent")?,
+                start_us: e.req("start_us")?.as_f64()? as u64,
+                dur_us: e.req("dur_us")?.as_f64()? as u64,
+            })
+        })
+        .collect()
+}
+
+fn parse_snapshot(j: &Json) -> Result<MetricsSnapshot> {
+    let mut snap = MetricsSnapshot::default();
+    for (k, v) in j.req("counters")?.as_obj()? {
+        snap.counters.insert(k.clone(), v.as_f64()? as u64);
+    }
+    for (k, v) in j.req("gauges")?.as_obj()? {
+        snap.gauges.insert(k.clone(), v.as_f64()? as i64);
+    }
+    for (k, v) in j.req("histograms")?.as_obj()? {
+        let counts = v
+            .req("counts")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_f64()? as u64))
+            .collect::<Result<Vec<_>>>()?;
+        snap.histos.insert(
+            k.clone(),
+            HistoSnapshot {
+                counts,
+                sum: v.req("sum")?.as_f64()? as u64,
+                count: v.req("count")?.as_f64()? as u64,
+            },
+        );
+    }
+    Ok(snap)
+}
+
 fn parse_scan_stats(j: &Json) -> Result<ScanStats> {
     Ok(ScanStats {
         checkpoints: j.req("checkpoints")?.as_usize()?,
@@ -511,6 +755,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             };
             let rows = parse_rows(&j)?;
             let cascade = parse_cascade(&j)?;
+            let trace = parse_trace(&j)?;
             let val = j
                 .req("val")?
                 .as_arr()?
@@ -524,13 +769,39 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 since_gen,
                 rows,
                 cascade,
+                trace,
                 val,
             }))
         }
-        "stats" => Ok(Request::Stats { id }),
+        "stats" => {
+            let per_worker = match j.get("per_worker") {
+                Some(Json::Bool(b)) => *b,
+                None => false,
+                Some(other) => bail!("'per_worker' must be a bool, got {other:?}"),
+            };
+            Ok(Request::Stats { id, per_worker })
+        }
+        "metrics" => {
+            for k in j.as_obj()?.keys() {
+                if !["op", "id", "traces", "prometheus"].contains(&k.as_str()) {
+                    bail!(
+                        "unknown key '{k}' in 'metrics' request \
+                         (allowed: op, id, traces, prometheus)"
+                    );
+                }
+            }
+            let flag = |key: &str| -> Result<bool> {
+                match j.get(key) {
+                    Some(Json::Bool(b)) => Ok(*b),
+                    None => Ok(false),
+                    Some(other) => bail!("'{key}' must be a bool, got {other:?}"),
+                }
+            };
+            Ok(Request::Metrics { id, traces: flag("traces")?, prometheus: flag("prometheus")? })
+        }
         "ping" => Ok(Request::Ping { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
-        other => bail!("unknown op '{other}' (expected score|stats|ping|shutdown)"),
+        other => bail!("unknown op '{other}' (expected score|stats|metrics|ping|shutdown)"),
     }
 }
 
@@ -565,6 +836,10 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 Some(v) => Some(parse_f32s(v)?),
                 None => None,
             };
+            let timing = match j.get("timing") {
+                Some(v) => Some(parse_spans(v)?),
+                None => None,
+            };
             Ok(Response::Score(ScoreReply {
                 id,
                 generation: parse_gen(&j, "generation")?,
@@ -574,17 +849,53 @@ pub fn parse_response(line: &str) -> Result<Response> {
                 rows: parse_rows(&j)?,
                 top,
                 scores,
+                timing,
             }))
         }
-        "stats" => Ok(Response::Stats(StatsReply {
-            id,
-            generation: parse_gen(&j, "generation")?,
-            n_samples: j.req("n_samples")?.as_usize()?,
-            k: j.req("k")?.as_usize()?,
-            checkpoints: j.req("checkpoints")?.as_usize()?,
-            bits: j.req("bits")?.as_usize()? as u8,
-            stats: parse_service_stats(j.req("stats")?)?,
-        })),
+        "stats" => {
+            let per_worker = match j.get("per_worker") {
+                Some(v) => Some(
+                    v.as_arr()?
+                        .iter()
+                        .map(|e| {
+                            Ok(WorkerStat {
+                                addr: e.req("addr")?.as_str()?.to_string(),
+                                generation: parse_gen(e, "generation")?,
+                                n_samples: e.req("n_samples")?.as_usize()?,
+                                stats: parse_service_stats(e.req("stats")?)?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                ),
+                None => None,
+            };
+            Ok(Response::Stats(StatsReply {
+                id,
+                generation: parse_gen(&j, "generation")?,
+                n_samples: j.req("n_samples")?.as_usize()?,
+                k: j.req("k")?.as_usize()?,
+                checkpoints: j.req("checkpoints")?.as_usize()?,
+                bits: j.req("bits")?.as_usize()? as u8,
+                stats: parse_service_stats(j.req("stats")?)?,
+                per_worker,
+            }))
+        }
+        "metrics" => {
+            let prometheus = match j.get("prometheus") {
+                Some(v) => Some(v.as_str()?.to_string()),
+                None => None,
+            };
+            let traces = match j.get("traces") {
+                Some(v) => Some(parse_spans(v)?),
+                None => None,
+            };
+            Ok(Response::Metrics(MetricsReply {
+                id,
+                snapshot: parse_snapshot(j.req("metrics")?)?,
+                prometheus,
+                traces,
+            }))
+        }
         "ping" => Ok(Response::Pong { id }),
         "shutdown" => Ok(Response::ShuttingDown { id }),
         other => bail!("unknown response kind '{other}'"),
@@ -610,6 +921,7 @@ mod tests {
             since_gen: Some(3),
             rows: Some((120, 64)),
             cascade: None,
+            trace: None,
             val: vec![mat(2, 8, 1), mat(3, 8, 2)],
         });
         let line = encode_request(&req);
@@ -644,9 +956,10 @@ mod tests {
     #[test]
     fn control_requests_roundtrip() {
         for (req, want_op) in [
-            (Request::Stats { id: 1 }, "stats"),
+            (Request::Stats { id: 1, per_worker: false }, "stats"),
             (Request::Ping { id: 2 }, "ping"),
             (Request::Shutdown { id: 3 }, "shutdown"),
+            (Request::Metrics { id: 4, traces: false, prometheus: false }, "metrics"),
         ] {
             let line = encode_request(&req);
             assert!(line.contains(want_op));
@@ -673,6 +986,7 @@ mod tests {
             rows: Some((32, 9)),
             top: vec![(7, scores[7]), (0, scores[0])],
             scores: Some(scores.clone()),
+            timing: None,
         });
         let line = encode_response(&resp);
         match parse_response(&line).unwrap() {
@@ -716,6 +1030,7 @@ mod tests {
             checkpoints: 2,
             bits: 4,
             stats,
+            per_worker: None,
         });
         match parse_response(&encode_response(&resp)).unwrap() {
             Response::Stats(r) => {
@@ -777,6 +1092,7 @@ mod tests {
             since_gen: None,
             rows: None,
             cascade,
+            trace: None,
             val: vec![mat(2, 8, 3)],
         })
     }
@@ -849,6 +1165,220 @@ mod tests {
                 Ok(r) => panic!("cascade {cascade} must be rejected, parsed {r:?}"),
             };
             assert!(err.contains(want), "cascade {cascade}: got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
+    fn trace_field_roundtrips() {
+        for t in [
+            TraceField { id: 0x1f, parent: 0 },
+            TraceField { id: 0xdead_beef, parent: 0x7 },
+        ] {
+            let req = Request::Score(ScoreRequest {
+                id: 9,
+                top_k: 4,
+                want_scores: false,
+                since_gen: None,
+                rows: None,
+                cascade: None,
+                trace: Some(t),
+                val: vec![mat(2, 8, 3)],
+            });
+            let line = encode_request(&req);
+            match parse_request(&line).unwrap() {
+                Request::Score(r) => assert_eq!(r.trace, Some(t), "{line}"),
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+        // absent trace parses to None (and the reply carries no timing)
+        match parse_request(&encode_request(&score_req(None))).unwrap() {
+            Request::Score(r) => assert_eq!(r.trace, None),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_trace_fields_rejected() {
+        let wrap = |trace: &str| {
+            format!(
+                "{{\"op\":\"score\",\"top_k\":2,\"trace\":{trace},\
+                 \"val\":[{{\"n\":1,\"k\":2,\"data\":[0.5,1]}}]}}"
+            )
+        };
+        let cases: &[(&str, &str)] = &[
+            ("3", "must be an object"),
+            ("[\"0x1\"]", "must be an object"),
+            ("{\"parent\":\"0x2\"}", "missing key 'id'"),
+            ("{\"id\":\"0x1\",\"parrent\":\"0x2\"}", "unknown key 'parrent'"),
+            ("{\"id\":\"0xzz\"}", "malformed 'trace' id"),
+            ("{\"id\":7}", "malformed 'trace' id"),
+            ("{\"id\":\"0x0\"}", "must be nonzero"),
+            ("{\"id\":\"0x1\",\"parent\":\"frogs\"}", "malformed 'trace' parent"),
+        ];
+        for (trace, want) in cases {
+            let err = match parse_request(&wrap(trace)) {
+                Err(e) => format!("{e:#}"),
+                Ok(r) => panic!("trace {trace} must be rejected, parsed {r:?}"),
+            };
+            assert!(err.contains(want), "trace {trace}: got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
+    fn timing_spans_roundtrip_on_score_reply() {
+        let spans = vec![
+            SpanRecord {
+                name: "server.score".into(),
+                trace: 0xabc,
+                id: 0x11,
+                parent: 0x3,
+                start_us: 0,
+                dur_us: 1_850,
+            },
+            SpanRecord {
+                name: "server.wait".into(),
+                trace: 0,
+                id: 0x12,
+                parent: 0x11,
+                start_us: 40,
+                dur_us: 1_700,
+            },
+        ];
+        let resp = Response::Score(ScoreReply {
+            id: 5,
+            generation: 0x2,
+            cached: false,
+            batched: 1,
+            pass: ScanStats::default(),
+            rows: None,
+            top: vec![],
+            scores: None,
+            timing: Some(spans.clone()),
+        });
+        match parse_response(&encode_response(&resp)).unwrap() {
+            Response::Score(r) => assert_eq!(r.timing, Some(spans)),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_request_roundtrips_and_rejects_unknown_keys() {
+        for (traces, prometheus) in [(false, false), (true, false), (false, true), (true, true)] {
+            let line = encode_request(&Request::Metrics { id: 8, traces, prometheus });
+            match parse_request(&line).unwrap() {
+                Request::Metrics { id, traces: t, prometheus: p } => {
+                    assert_eq!((id, t, p), (8, traces, prometheus), "{line}");
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+        let cases: &[(&str, &str)] = &[
+            ("{\"op\":\"metrics\",\"id\":1,\"tracez\":true}", "unknown key 'tracez'"),
+            ("{\"op\":\"metrics\",\"id\":1,\"traces\":1}", "must be a bool"),
+            ("{\"op\":\"metrics\",\"id\":1,\"prometheus\":\"yes\"}", "must be a bool"),
+        ];
+        for (line, want) in cases {
+            let err = match parse_request(line) {
+                Err(e) => format!("{e:#}"),
+                Ok(r) => panic!("{line} must be rejected, parsed {r:?}"),
+            };
+            assert!(err.contains(want), "{line}: got '{err}', want '{want}'");
+        }
+        // the op itself still parses strictly elsewhere: a typoed op names it
+        let err = format!("{:#}", parse_request("{\"op\":\"metricz\",\"id\":1}").unwrap_err());
+        assert!(err.contains("expected score|stats|metrics|ping|shutdown"), "{err}");
+    }
+
+    #[test]
+    fn metrics_reply_roundtrips_exactly() {
+        let mut snap = MetricsSnapshot::default();
+        snap.counters.insert("scan_rows_total{bits=\"4\"}".into(), 4096);
+        snap.counters.insert("score_cache_hits_total".into(), 3);
+        snap.gauges.insert("session_generation".into(), 2);
+        snap.gauges.insert("batcher_queue_depth".into(), 3);
+        let mut h = HistoSnapshot::default();
+        h.counts = vec![0; crate::util::obs::LATENCY_BOUNDS_US.len() + 1];
+        h.counts[2] = 5;
+        h.counts[9] = 1;
+        h.sum = 61_400;
+        h.count = 6;
+        snap.histos.insert("score_us".into(), h);
+        let resp = Response::Metrics(MetricsReply {
+            id: 12,
+            snapshot: snap.clone(),
+            prometheus: Some("qless_score_cache_hits_total 3\n".into()),
+            traces: Some(vec![SpanRecord {
+                name: "session.answer_batch".into(),
+                trace: 0x7,
+                id: 0x9,
+                parent: 0,
+                start_us: 17,
+                dur_us: 950,
+            }]),
+        });
+        let line = encode_response(&resp);
+        match parse_response(&line).unwrap() {
+            Response::Metrics(r) => {
+                assert_eq!(r.id, 12);
+                assert_eq!(r.snapshot, snap, "{line}");
+                assert_eq!(r.prometheus.as_deref(), Some("qless_score_cache_hits_total 3\n"));
+                let ring = r.traces.unwrap();
+                assert_eq!(ring.len(), 1);
+                assert_eq!(ring[0].trace, 0x7, "ring spans keep their trace id on the wire");
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // minimal reply: no prometheus text, no traces
+        let bare = Response::Metrics(MetricsReply {
+            id: 13,
+            snapshot: MetricsSnapshot::default(),
+            prometheus: None,
+            traces: None,
+        });
+        match parse_response(&encode_response(&bare)).unwrap() {
+            Response::Metrics(r) => {
+                assert_eq!(r.snapshot, MetricsSnapshot::default());
+                assert!(r.prometheus.is_none() && r.traces.is_none());
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_worker_stats_roundtrip() {
+        // request flag survives the wire both ways
+        let line = encode_request(&Request::Stats { id: 4, per_worker: true });
+        assert!(line.contains("per_worker"));
+        match parse_request(&line).unwrap() {
+            Request::Stats { id, per_worker } => assert!(id == 4 && per_worker),
+            other => panic!("wrong variant {other:?}"),
+        }
+        let line = encode_request(&Request::Stats { id: 4, per_worker: false });
+        assert!(!line.contains("per_worker"), "flag absent when false: {line}");
+
+        let worker = |addr: &str, queries: u64| WorkerStat {
+            addr: addr.to_string(),
+            generation: 2,
+            n_samples: 64,
+            stats: ServiceStats { queries, ..ServiceStats::default() },
+        };
+        let per_worker = vec![worker("127.0.0.1:7501", 5), worker("127.0.0.1:7502", 7)];
+        let resp = Response::Stats(StatsReply {
+            id: 4,
+            generation: 0x2,
+            n_samples: 128,
+            k: 16,
+            checkpoints: 2,
+            bits: 4,
+            stats: ServiceStats { queries: 12, ..ServiceStats::default() },
+            per_worker: Some(per_worker.clone()),
+        });
+        match parse_response(&encode_response(&resp)).unwrap() {
+            Response::Stats(r) => {
+                assert_eq!(r.per_worker, Some(per_worker));
+                assert_eq!(r.stats.queries, 12);
+            }
+            other => panic!("wrong variant {other:?}"),
         }
     }
 }

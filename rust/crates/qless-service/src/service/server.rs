@@ -28,11 +28,15 @@ use anyhow::{bail, Context, Result};
 use crate::datastore::Header;
 use crate::grads::FeatureMatrix;
 use crate::select::top_k_scored_since;
+use crate::util::obs::{self, SpanRecord};
 use crate::util::pool::TaskPool;
 use crate::{info, warn_};
 
 use super::batcher::{Batcher, BatcherOpts};
-use super::proto::{self, CascadeField, Request, Response, ScoreReply, ScoreRequest, StatsReply};
+use super::proto::{
+    self, CascadeField, MetricsReply, Request, Response, ScoreReply, ScoreRequest, StatsReply,
+    TraceField,
+};
 use super::session::{CascadePlan, ScoreQuery, ServiceStats, Session, SessionOpts};
 
 /// Tuning of `qless serve`. CLI flags map 1:1 onto these fields; the top
@@ -338,7 +342,10 @@ fn handle_line(line: &str, ctx: &Ctx) -> Response {
     match req {
         Request::Ping { id } => Response::Pong { id },
         Request::Shutdown { id } => Response::ShuttingDown { id },
-        Request::Stats { id } => {
+        // a single-node server has no per-worker breakdown to offer, so the
+        // flag is accepted (coordinator requests pass through verbatim) and
+        // the reply simply omits the array
+        Request::Stats { id, .. } => {
             let view = ctx.batcher.view();
             Response::Stats(StatsReply {
                 id,
@@ -348,14 +355,68 @@ fn handle_line(line: &str, ctx: &Ctx) -> Response {
                 checkpoints: ctx.header.n_checkpoints as usize,
                 bits: ctx.header.precision.bits,
                 stats: view.stats,
+                per_worker: None,
+            })
+        }
+        Request::Metrics { id, traces, prometheus } => {
+            let reg = obs::reg();
+            let snapshot = reg.snapshot();
+            Response::Metrics(MetricsReply {
+                id,
+                prometheus: prometheus.then(|| snapshot.prometheus()),
+                traces: traces.then(|| reg.recent_spans(obs::SPAN_RING_CAP)),
+                snapshot,
             })
         }
         Request::Score(r) => handle_score(r, ctx),
     }
 }
 
+/// Build the reply `timing` for a traced score request: a root span for
+/// the whole server-side handling and a child covering the batcher wait
+/// (queue + coalescing window + fused scan). Both are measured directly —
+/// attribution inside a fused batch is the batch's, not the request's, so
+/// the server reports only what it can measure truthfully per request.
+/// Offsets are relative to this hop's request start (`t0`).
+fn score_timing(
+    trace: TraceField,
+    reg: &obs::Registry,
+    t0: u64,
+    wait0: u64,
+    done: u64,
+) -> Vec<SpanRecord> {
+    let root = obs::next_id();
+    let spans = vec![
+        SpanRecord {
+            name: "server.score".into(),
+            trace: trace.id,
+            id: root,
+            parent: trace.parent,
+            start_us: 0,
+            dur_us: done.saturating_sub(t0),
+        },
+        SpanRecord {
+            name: "server.wait".into(),
+            trace: trace.id,
+            id: obs::next_id(),
+            parent: root,
+            start_us: wait0.saturating_sub(t0),
+            dur_us: done.saturating_sub(wait0),
+        },
+    ];
+    if obs::tracing_enabled() {
+        for s in &spans {
+            reg.record_span(s.clone());
+        }
+    }
+    spans
+}
+
 fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
-    let ScoreRequest { id, top_k, want_scores, since_gen, rows: wire_rows, val, cascade } = req;
+    let ScoreRequest { id, top_k, want_scores, since_gen, rows: wire_rows, val, cascade, trace } =
+        req;
+    let reg = obs::reg();
+    let t0 = reg.now_us();
     let query = ScoreQuery { val };
     if let Err(e) = query.validate(&ctx.header) {
         return Response::Error { id, error: format!("invalid query: {e:#}") };
@@ -412,8 +473,12 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
         Ok(rx) => rx,
         Err(e) => return Response::Error { id, error: format!("{e:#}") },
     };
+    let wait0 = reg.now_us();
     match rx.recv() {
         Ok(Ok(ans)) => {
+            let done = reg.now_us();
+            reg.observe_us("score_us", done.saturating_sub(t0));
+            let timing = trace.map(|t| score_timing(t, &reg, t0, wait0, done));
             // full-cascade and rerank-stage answers carry their ranked /
             // scored pairs in `ans.top`; nothing to rank server-side
             if matches!(
@@ -429,6 +494,7 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
                     rows: None,
                     top: ans.top.unwrap_or_default(),
                     scores: None,
+                    timing,
                 });
             }
             let (top, scores) = match rows {
@@ -477,6 +543,7 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
                 rows: wire_rows,
                 top,
                 scores,
+                timing,
             })
         }
         Ok(Err(msg)) => Response::Error { id, error: msg },
@@ -495,6 +562,7 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     next_id: u64,
+    trace: Option<TraceField>,
 }
 
 impl Client {
@@ -503,7 +571,7 @@ impl Client {
         let stream = TcpStream::connect(addr).context("connecting to qless serve")?;
         let _ = stream.set_nodelay(true);
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: stream, next_id: 0 })
+        Ok(Client { reader, writer: stream, next_id: 0, trace: None })
     }
 
     /// [`Client::connect`] with `deadline` bounding connection
@@ -519,7 +587,7 @@ impl Client {
                     stream.set_read_timeout(Some(deadline))?;
                     stream.set_write_timeout(Some(deadline))?;
                     let reader = BufReader::new(stream.try_clone()?);
-                    return Ok(Client { reader, writer: stream, next_id: 0 });
+                    return Ok(Client { reader, writer: stream, next_id: 0, trace: None });
                 }
                 Err(e) => last = Some(e),
             }
@@ -533,6 +601,14 @@ impl Client {
     fn bump(&mut self) -> u64 {
         self.next_id += 1;
         self.next_id
+    }
+
+    /// Attach this trace identity to every subsequent score request
+    /// (`None` clears it); traced replies carry per-stage `timing` spans
+    /// (PROTOCOL.md §Trace propagation). The coordinator sets a fresh
+    /// parent per sub-query so a fan-out stitches into one tree.
+    pub fn set_trace(&mut self, trace: Option<TraceField>) {
+        self.trace = trace;
     }
 
     /// Bound every subsequent socket read and write (`None` = block
@@ -604,6 +680,7 @@ impl Client {
             rows,
             val: val.to_vec(),
             cascade: None,
+            trace: None,
         })
     }
 
@@ -630,6 +707,7 @@ impl Client {
             rows: None,
             val: val.to_vec(),
             cascade: Some(CascadeField::Full { probe, rerank, mult }),
+            trace: None,
         })
     }
 
@@ -651,6 +729,7 @@ impl Client {
             rows: Some(rows),
             val: val.to_vec(),
             cascade: Some(CascadeField::Probe { probe }),
+            trace: None,
         })
     }
 
@@ -671,12 +750,16 @@ impl Client {
             rows: None,
             val: val.to_vec(),
             cascade: Some(CascadeField::Rerank { rerank, rows }),
+            trace: None,
         })
     }
 
     fn score_req(&mut self, mut req: ScoreRequest) -> Result<ScoreReply> {
         let id = self.bump();
         req.id = id;
+        if req.trace.is_none() {
+            req.trace = self.trace;
+        }
         match self.roundtrip(&Request::Score(req))? {
             Response::Score(r) => {
                 anyhow::ensure!(r.id == id, "response id {} for request {id}", r.id);
@@ -689,9 +772,29 @@ impl Client {
 
     /// Fetch the service's cumulative statistics.
     pub fn stats(&mut self) -> Result<StatsReply> {
+        self.stats_detail(false)
+    }
+
+    /// [`Client::stats`] with `per_worker = true` asking a coordinator to
+    /// include its per-worker breakdown (single-node servers ignore the
+    /// flag and the reply's `per_worker` stays `None`).
+    pub fn stats_detail(&mut self, per_worker: bool) -> Result<StatsReply> {
         let id = self.bump();
-        match self.roundtrip(&Request::Stats { id })? {
+        match self.roundtrip(&Request::Stats { id, per_worker })? {
             Response::Stats(r) => Ok(r),
+            Response::Error { error, .. } => bail!("server error: {error}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Scrape the server's metrics registry (PROTOCOL.md §Metrics):
+    /// counters, gauges and latency histograms, plus the Prometheus text
+    /// rendering and/or the recent-span ring on request. Against a
+    /// coordinator this returns the fleet-merged registry.
+    pub fn metrics(&mut self, traces: bool, prometheus: bool) -> Result<MetricsReply> {
+        let id = self.bump();
+        match self.roundtrip(&Request::Metrics { id, traces, prometheus })? {
+            Response::Metrics(r) => Ok(r),
             Response::Error { error, .. } => bail!("server error: {error}"),
             other => bail!("unexpected response {other:?}"),
         }
@@ -854,6 +957,36 @@ mod tests {
         // still alive
         c.ping().unwrap();
         server.stop();
+        server.join().unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn serve_metrics_and_traced_score() {
+        let (n, k) = (16usize, 64usize);
+        let path = build_store("metrics", n, k, 1);
+        let server = Server::start(&path, ephemeral_opts()).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        c.set_trace(Some(TraceField { id: 0xabc, parent: 0 }));
+        let val = vec![feats(2, k, 9)];
+        let r = c.score(&val, 3, false).unwrap();
+        let timing = r.timing.expect("traced request must carry timing");
+        assert_eq!(timing.len(), 2);
+        assert_eq!(timing[0].name, "server.score");
+        assert_eq!(timing[1].name, "server.wait");
+        assert_eq!(timing[1].parent, timing[0].id, "wait nests under the root");
+        assert!(timing[0].dur_us >= timing[1].dur_us, "root covers the wait");
+        c.set_trace(None);
+        let r2 = c.score(&[feats(2, k, 10)], 3, false).unwrap();
+        assert!(r2.timing.is_none(), "untraced requests carry no timing");
+        // scrape: the in-process server shares this registry, so the two
+        // scores above must be visible (>= because tests share the process)
+        let m = c.metrics(false, true).unwrap();
+        let h = m.snapshot.histos.get("score_us").expect("score_us histogram");
+        assert!(h.count >= 2, "both scores observed, got {}", h.count);
+        assert!(m.prometheus.unwrap().contains("qless_score_us_bucket"));
+        assert!(m.traces.is_none(), "traces only on request");
+        c.shutdown().unwrap();
         server.join().unwrap();
         std::fs::remove_file(path).ok();
     }

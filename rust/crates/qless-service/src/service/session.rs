@@ -43,6 +43,7 @@ use crate::datastore::{default_store_path, run_dir_precisions, Header, LiveStore
 use crate::grads::FeatureMatrix;
 use crate::influence::{cascade, MultiScan, ScanStats};
 use crate::select::top_k_scored_among;
+use crate::util::obs;
 use crate::{info, warn_};
 
 use super::cache::{task_digest, LruCache};
@@ -356,6 +357,10 @@ impl Session {
                 self.live.generation()
             ),
         }
+        // per-session freshness gauges: what the fleet's generation-lag
+        // metric is computed against (coordinator subtracts the max)
+        obs::gauge_set("session_generation", self.live.generation() as i64);
+        obs::gauge_set("session_rows", self.live.n_rows() as i64);
     }
 
     /// Answer one micro-batch of (already validated) queries: score-cache
@@ -367,6 +372,7 @@ impl Session {
     /// order. A bumped generation is picked up here, before the batch
     /// scans, so in-flight passes always finish against one generation.
     pub fn answer_batch(&mut self, queries: &[ScoreQuery]) -> Result<Vec<Answer>> {
+        let _sp = obs::span("session.answer_batch");
         self.poll_generation();
         self.stats.batches += 1;
         self.stats.queries += queries.len() as u64;
@@ -383,6 +389,7 @@ impl Session {
             if let Some(scores) = self.score_cache.get(d) {
                 if scores.len() == n {
                     self.stats.score_cache_hits += 1;
+                    obs::counter_add("score_cache_hits_total", 1);
                     answers[i] = Some(Answer {
                         scores,
                         generation,
@@ -411,12 +418,14 @@ impl Session {
             digests.iter().position(|x| x == d).expect("digest from this batch")
         };
         if !misses.is_empty() {
+            obs::counter_add("score_cache_misses_total", misses.len() as u64);
             let tasks: Vec<&[FeatureMatrix]> =
                 misses.iter().map(|d| queries[rep(d)].val.as_slice()).collect();
             let (totals, pass) = self.scan_fused(&tasks, 0)?;
             let shared: Vec<Arc<Vec<f32>>> = totals.into_iter().map(Arc::new).collect();
             for (d, scores) in misses.iter().zip(&shared) {
-                self.score_cache.insert(*d, Arc::clone(scores), 1);
+                let evicted = self.score_cache.insert(*d, Arc::clone(scores), 1);
+                obs::counter_add("score_cache_evicted_total", evicted as u64);
             }
             for (i, d) in digests.iter().enumerate() {
                 if answers[i].is_none() {
@@ -446,8 +455,10 @@ impl Session {
                 full.extend_from_slice(prefix);
                 full.extend_from_slice(&tail[prefix.len() - tail_start..]);
                 let shared = Arc::new(full);
-                self.score_cache.insert(*d, Arc::clone(&shared), 1);
+                let evicted = self.score_cache.insert(*d, Arc::clone(&shared), 1);
+                obs::counter_add("score_cache_evicted_total", evicted as u64);
                 self.stats.score_cache_extends += 1;
+                obs::counter_add("score_cache_extends_total", 1);
                 for (i, di) in digests.iter().enumerate() {
                     if answers[i].is_none() && di == d {
                         answers[i] = Some(Answer {
@@ -505,6 +516,7 @@ impl Session {
         len: usize,
         bits: u8,
     ) -> Result<Vec<Answer>> {
+        let _sp = obs::span("session.answer_range");
         self.poll_generation();
         self.stats.batches += 1;
         self.stats.queries += queries.len() as u64;
@@ -560,6 +572,7 @@ impl Session {
         plan: CascadePlan,
         top_k: usize,
     ) -> Result<Vec<Answer>> {
+        let _sp = obs::span("session.answer_cascade");
         self.poll_generation();
         self.stats.batches += 1;
         self.stats.queries += queries.len() as u64;
@@ -591,6 +604,9 @@ impl Session {
         let (probe_totals, probe_pass) = self.scan_store_range(probe, &tasks, 0, n)?;
         let (cands, union) = cascade::probe_candidates(&probe_totals, ck);
         let (rr_scores, rerank_pass) = self.scan_store_rows(rerank, &tasks, &union)?;
+        // the cascade's whole value claim is this split — make it scrapeable
+        obs::counter_add("cascade_probe_rows_total", probe_pass.rows_read);
+        obs::counter_add("cascade_rerank_rows_total", rerank_pass.rows_read);
         let pass = cascade::combine_stats(probe_pass, rerank_pass);
         let tops: Vec<Vec<(usize, f32)>> = cands
             .iter()
@@ -636,6 +652,7 @@ impl Session {
         rows: &[usize],
         bits: u8,
     ) -> Result<Vec<Answer>> {
+        let _sp = obs::span("session.answer_rerank");
         self.poll_generation();
         self.stats.batches += 1;
         self.stats.queries += queries.len() as u64;
@@ -882,6 +899,7 @@ impl Session {
                 let key = (store, mi, ci, si);
                 let owned = if let Some(shard) = self.shard_cache.get(&key) {
                     self.stats.shard_cache_hits += 1;
+                    obs::counter_add("shard_cache_hits_total", 1);
                     shard
                 } else {
                     if reader.is_none() {
@@ -894,8 +912,11 @@ impl Session {
                     })?;
                     let owned = Arc::new(shard.to_owned_shard());
                     self.stats.disk_shard_reads += 1;
+                    obs::counter_add("shard_cache_misses_total", 1);
                     let weight = owned.byte_weight();
-                    self.shard_cache.insert(key, Arc::clone(&owned), weight);
+                    let evicted = self.shard_cache.insert(key, Arc::clone(&owned), weight);
+                    obs::counter_add("shard_cache_evicted_bytes_total", evicted as u64);
+                    obs::gauge_set("shard_cache_bytes", self.shard_cache.weight() as i64);
                     owned
                 };
                 let view = owned.rows();

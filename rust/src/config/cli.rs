@@ -21,6 +21,10 @@ pub struct Cli {
     pub config: Config,
     /// `--fast`: shrink workloads (used by `make tables` smoke runs).
     pub fast: bool,
+    /// `--traces`: under `serve`, collect spans into the in-process ring
+    /// (scraped via the `metrics` verb); under `stats`, also fetch and
+    /// print the server's recent spans.
+    pub traces: bool,
 }
 
 pub const USAGE: &str = "\
@@ -39,7 +43,12 @@ COMMANDS
   score               compute influence scores against validation gradients
   select              pick top select_frac and report composition
   serve               resident influence query service over TCP
-                      (`qless serve --help` for the serve flags)
+                      (`qless serve --help` for the serve flags;
+                      --traces records per-query spans for `stats`)
+  stats               scrape a running server's metrics (counters, gauges,
+                      latency histograms) and render them as tables
+                      (--serve-addr H:P picks the server; --watch N
+                      refreshes every N s; --traces dumps recent spans)
   eval                evaluate a checkpoint on the three benchmarks
   xp <id>             reproduce a paper table/figure or analysis:
                       table1 table2 table3 fig1 fig3 fig4 fig5 cascade
@@ -71,6 +80,8 @@ OPTIONS (all Config keys work as --key value):
                       candidates per task for the rerank (default 8;
                       C·k >= n rows makes the cascade exact)
   --run-dir DIR       --artifacts DIR
+  --watch N           `qless stats` refresh interval in seconds (0 = once)
+  --traces            serve: record spans / stats: fetch the span ring
   --fast              shrink workloads        -v / -q      verbosity
 ";
 
@@ -94,6 +105,8 @@ USAGE: qless serve [--key value ...]
                           served from RAM, not disk (default 64)
   --shard-rows N          rows per scan/cache shard (0 = derive from budget)
   --workers N             connection-handler threads (default: cores ≤ 8)
+  --traces                record per-query spans into the in-process ring
+                          (scrape with `qless stats --traces`)
   --bits N / --scheme S / --run-dir DIR    select the default datastore path
 
 SCATTER-GATHER (distributed serving; same protocol, same answers)
@@ -133,11 +146,23 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
     let command = match it.next() {
         Some(c) if !c.starts_with('-') => c,
         Some(c) if c == "--help" || c == "-h" => {
-            return Ok(Cli { command: "help".into(), positional: vec![], config: Config::default(), fast: false })
+            return Ok(Cli {
+                command: "help".into(),
+                positional: vec![],
+                config: Config::default(),
+                fast: false,
+                traces: false,
+            })
         }
         _ => bail!("missing subcommand\n\n{USAGE}"),
     };
-    let mut cli = Cli { command, positional: Vec::new(), config: Config::default(), fast: false };
+    let mut cli = Cli {
+        command,
+        positional: Vec::new(),
+        config: Config::default(),
+        fast: false,
+        traces: false,
+    };
 
     // two passes: collect (key, value) pairs, apply --config first
     let mut pairs: Vec<(String, String)> = Vec::new();
@@ -146,6 +171,7 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
         if let Some(key) = arg.strip_prefix("--") {
             match key {
                 "fast" => cli.fast = true,
+                "traces" => cli.traces = true,
                 "help" => {
                     // per-subcommand help: short-circuit so `qless serve
                     // --help` prints the serve flags, never a parse error
@@ -154,6 +180,7 @@ pub fn parse_args<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
                         command: "help".into(),
                         config: Config::default(),
                         fast: false,
+                        traces: false,
                     });
                 }
                 _ => {
@@ -272,6 +299,16 @@ mod tests {
         assert!(p(&["score", "--cascade", "8"]).is_err()); // validate()
         assert!(p(&["score", "--cascade", "8,1"]).is_err()); // probe > rerank
         assert!(p(&["score", "--cascade", "1,8", "--cascade-mult", "0"]).is_err());
+    }
+
+    #[test]
+    fn stats_flags_parse() {
+        let c = p(&["stats", "--serve-addr", "127.0.0.1:7411", "--watch", "2", "--traces"]).unwrap();
+        assert_eq!(c.command, "stats");
+        assert_eq!(c.config.watch, 2);
+        assert!(c.traces);
+        assert!(!p(&["stats"]).unwrap().traces); // valueless flag, default off
+        assert!(p(&["stats", "--watch"]).is_err()); // --watch needs a value
     }
 
     #[test]

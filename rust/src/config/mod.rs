@@ -121,6 +121,9 @@ pub struct Config {
     /// per task for stage 2 (k = final selections). Larger c = higher
     /// recall, more rerank I/O; `c·k ≥ n` makes the cascade exact.
     pub cascade_mult: usize,
+    /// `qless stats` refresh interval in seconds (0 = scrape once and
+    /// exit). Each refresh is one `metrics` + one `stats` round trip.
+    pub watch: u64,
 }
 
 impl Default for Config {
@@ -162,6 +165,7 @@ impl Default for Config {
             worker_retries: 2,
             cascade: String::new(),
             cascade_mult: qless_datastore::influence::DEFAULT_CASCADE_MULT,
+            watch: 0,
         }
     }
 }
@@ -210,6 +214,7 @@ impl Config {
         "worker_retries",
         "cascade",
         "cascade_mult",
+        "watch",
     ];
 
     /// Apply one `key = value` (file) or `--key value` (CLI) assignment.
@@ -277,6 +282,7 @@ impl Config {
             "worker_retries" => self.worker_retries = parse(v, &key)?,
             "cascade" => self.cascade = v.to_string(),
             "cascade_mult" => self.cascade_mult = parse(v, &key)?,
+            "watch" => self.watch = parse(v, &key)?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -773,6 +779,16 @@ mod tests {
         c.set("cascade_mult", "0").unwrap();
         assert!(c.validate().is_err(), "cascade_mult 0 must be rejected");
         assert!(c.set("cascade_mult", "lots").is_err());
+    }
+
+    #[test]
+    fn watch_knob_parses() {
+        let mut c = Config::default();
+        assert_eq!(c.watch, 0, "scrape-once by default");
+        c.set("watch", "5").unwrap();
+        assert_eq!(c.watch, 5);
+        c.validate().unwrap();
+        assert!(c.set("watch", "forever").is_err());
     }
 
     #[test]

@@ -12,6 +12,9 @@ use qless::eval::Benchmark;
 use qless::pipeline::{Method, Pipeline};
 use qless::quant::Precision;
 use qless::select::{select_top_frac, SourceDistribution};
+use qless::service::{Client, MetricsReply, StatsReply};
+use qless::util::obs;
+use qless::util::obs::SpanRecord;
 use qless::util::table::{human_bytes, pct, Table};
 
 fn main() {
@@ -39,6 +42,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "serve" => serve(cli),
+        "stats" => stats(cli),
         "list-artifacts" => list_artifacts(cli),
         "gen-corpus" => gen_corpus(cli),
         "warmup" => {
@@ -104,6 +108,12 @@ fn dispatch(cli: &Cli) -> Result<()> {
 /// answers, N workers splitting every scan.
 fn serve(cli: &Cli) -> Result<()> {
     let cfg = &cli.config;
+    if cli.traces {
+        // span collection is off by default (a pure metrics scrape costs
+        // nothing); --traces turns the in-process ring on so `qless stats
+        // --traces` can fetch stitched per-query trees
+        obs::set_tracing(true);
+    }
     let path = if cfg.datastore.is_empty() {
         let p = Precision::new(cfg.bits, cfg.scheme)?;
         qless::datastore::default_store_path(std::path::Path::new(&cfg.run_dir), p)
@@ -161,6 +171,127 @@ fn serve(cli: &Cli) -> Result<()> {
         server.addr().port()
     );
     server.join()
+}
+
+/// `qless stats` — scrape a running server's `stats` + `metrics` verbs
+/// and render them as tables. `--watch N` re-scrapes every N seconds
+/// until interrupted; `--traces` also dumps the server's recent span
+/// ring (populated when the server runs with `--traces`). Against a
+/// coordinator the tables show fleet-merged registries plus a
+/// per-worker breakdown.
+fn stats(cli: &Cli) -> Result<()> {
+    let cfg = &cli.config;
+    loop {
+        let mut c = Client::connect(&cfg.serve_addr)?;
+        let s = c.stats_detail(true)?;
+        let m = c.metrics(cli.traces, false)?;
+        render_scrape(&s, &m);
+        if cfg.watch == 0 {
+            return Ok(());
+        }
+        println!();
+        std::thread::sleep(std::time::Duration::from_secs(cfg.watch));
+    }
+}
+
+fn render_scrape(s: &StatsReply, m: &MetricsReply) {
+    println!(
+        "qless stats: generation {:#x} — {} rows × k={} × {} checkpoints at {} bits",
+        s.generation, s.n_samples, s.k, s.checkpoints, s.bits
+    );
+    let st = &s.stats;
+    let mut t = Table::new(
+        "service totals",
+        &["queries", "batches", "passes", "score-cache", "shard-cache", "rows scored", "reloads"],
+    );
+    t.row(vec![
+        st.queries.to_string(),
+        st.batches.to_string(),
+        st.fused_passes.to_string(),
+        format!("{} hits", st.score_cache_hits),
+        format!("{} hits / {}", st.shard_cache_hits, human_bytes(st.shard_cache_bytes)),
+        st.rows_scored.to_string(),
+        st.reloads.to_string(),
+    ]);
+    print!("{}", t.render());
+    if let Some(ws) = &s.per_worker {
+        let mut t = Table::new(
+            "per-worker",
+            &["addr", "generation", "rows", "queries", "rows scored"],
+        );
+        for w in ws {
+            t.row(vec![
+                w.addr.clone(),
+                format!("{:#x}", w.generation),
+                w.n_samples.to_string(),
+                w.stats.queries.to_string(),
+                w.stats.rows_scored.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    let snap = &m.snapshot;
+    if !snap.counters.is_empty() || !snap.gauges.is_empty() {
+        let mut t = Table::new("counters & gauges", &["name", "value"]);
+        for (k, v) in &snap.counters {
+            t.row(vec![k.clone(), v.to_string()]);
+        }
+        for (k, v) in &snap.gauges {
+            t.row(vec![format!("{k} (gauge)"), v.to_string()]);
+        }
+        print!("{}", t.render());
+    }
+    if !snap.histos.is_empty() {
+        let mut t =
+            Table::new("latency histograms (µs)", &["name", "count", "p50", "p95", "p99", "mean"]);
+        for (k, h) in &snap.histos {
+            let mean = if h.count > 0 { h.sum / h.count } else { 0 };
+            t.row(vec![
+                k.clone(),
+                h.count.to_string(),
+                h.quantile(0.5).to_string(),
+                h.quantile(0.95).to_string(),
+                h.quantile(0.99).to_string(),
+                mean.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    if let Some(spans) = &m.traces {
+        if spans.is_empty() {
+            println!("traces: none recorded (run the server with --traces)");
+        } else {
+            println!("traces: {} recent span(s)", spans.len());
+            for sp in spans {
+                println!(
+                    "  [{:>10x}] {:>8}µs @{:>8}µs  {}{}",
+                    sp.trace,
+                    sp.dur_us,
+                    sp.start_us,
+                    "  ".repeat(span_depth(spans, sp)),
+                    sp.name,
+                );
+            }
+        }
+    }
+}
+
+/// Indentation depth of `sp` inside the fetched span set: hops to the
+/// nearest ancestor whose parent is absent (capped — worker-reported
+/// parents may fall outside the ring).
+fn span_depth(spans: &[SpanRecord], sp: &SpanRecord) -> usize {
+    let mut depth = 0usize;
+    let mut parent = sp.parent;
+    while parent != 0 && depth < 8 {
+        match spans.iter().find(|s| s.id == parent) {
+            Some(p) => {
+                parent = p.parent;
+                depth += 1;
+            }
+            None => break,
+        }
+    }
+    depth
 }
 
 fn list_artifacts(cli: &Cli) -> Result<()> {

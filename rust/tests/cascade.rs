@@ -16,9 +16,15 @@
 //! * **negative paths fail clean**: malformed `cascade` wire fields,
 //!   stage verbs missing their operands, and cascades naming a precision
 //!   the run directory lacks all produce errors — never a silently
-//!   exhaustive or truncated answer.
+//!   exhaustive or truncated answer;
+//! * **observability is bookkeeping, not a second measurement**: the
+//!   metrics registry's per-bitwidth scan counters equal the summed
+//!   `ScanStats` of the scans run under it exactly, and malformed
+//!   `trace` / `metrics` wire fields fail clean without poisoning the
+//!   connection.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use qless::datastore::{default_store_path, LiveStore, SegmentWriter};
 use qless::grads::FeatureMatrix;
@@ -28,6 +34,7 @@ use qless::prop_assert;
 use qless::quant::{Precision, Scheme};
 use qless::select::top_k_scored;
 use qless::service::{Client, Coordinator, CoordinatorOpts, ServeOpts, Server};
+use qless::util::obs::{self, Registry};
 use qless::util::prop::{normal_features, run_prop, seeded_datastore};
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -408,6 +415,166 @@ fn malformed_and_unsatisfiable_cascades_fail_clean_over_the_wire() {
         .raw_roundtrip(&line("{\"probe\":1,\"rerank\":8}", "").replace("\"top_k\":2", "\"top_k\":0"))
         .unwrap();
     assert!(raw.contains("top_k >= 1"), "{raw}");
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// observability
+// ---------------------------------------------------------------------------
+
+/// Property: the observability registry's per-bitwidth scan counters are
+/// EXACTLY the summed `ScanStats` of the scans run under it — exhaustive
+/// and cascade, across the bitwidth × scheme grid and live generations.
+/// (Ranged scans go through the same `MultiScan` seam: an exhaustive
+/// scan IS the full-row ranged scan.) The registry is bookkeeping over
+/// the same measurements the passes already make, never a second,
+/// drifting measurement — hence exact equality, not `>=`.
+#[test]
+fn prop_registry_scan_counters_equal_summed_scan_stats() {
+    let rerank_grid = [
+        Precision::new(16, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmax).unwrap(),
+        Precision::new(8, Scheme::Absmean).unwrap(),
+        Precision::new(4, Scheme::Absmax).unwrap(),
+        Precision::new(4, Scheme::Absmean).unwrap(),
+        Precision::new(2, Scheme::Absmean).unwrap(),
+    ];
+    run_prop("obs-scan-counters-exact", 8, |g| {
+        let n0 = 4 + g.usize_up_to(12);
+        let add = g.rng.below(6);
+        let n = n0 + add;
+        let k = 6 + g.usize_up_to(40);
+        let ckpts = 1 + g.rng.below(2);
+        let etas: Vec<f32> = (0..ckpts).map(|c| 0.9 - 0.4 * c as f32).collect();
+        let seed = g.rng.below(1 << 20) as u64;
+        let probe = Precision::new(1, Scheme::Sign).unwrap();
+        let rerank = rerank_grid[g.rng.below(rerank_grid.len())];
+        let dir = tmpdir("obsprop");
+        build_pair(&dir, probe, rerank, n0, k, &etas, seed);
+        if add > 0 {
+            ingest_range(&dir, &[probe, rerank], n0, n, n, k, ckpts, seed);
+        }
+        let probe_live = LiveStore::open(&default_store_path(&dir, probe)).unwrap();
+        let rerank_live = LiveStore::open(&default_store_path(&dir, rerank)).unwrap();
+        let t0 = task(ckpts, 2, k, 321);
+        let tasks: Vec<&[FeatureMatrix]> = vec![&t0];
+        let scan = ScoreOpts { shard_rows: 1 + g.rng.below(n + 2), ..Default::default() };
+
+        // an instantiable registry scoped to this thread: only THESE two
+        // scans feed it, no matter what parallel tests do to the global
+        let reg = Arc::new(Registry::new());
+        let (exhaustive, out) = obs::with_registry(reg.clone(), || {
+            let (_, s) = score_live_tasks(&rerank_live, &tasks, scan).unwrap();
+            let out = cascade_live_tasks(
+                &probe_live,
+                &rerank_live,
+                &tasks,
+                CascadeOpts { k: 1 + g.rng.below(n), mult: 1 + g.rng.below(3), scan },
+            )
+            .unwrap();
+            (s, out)
+        });
+        let snap = reg.snapshot();
+        let counter = |name: &str, bits: u8| {
+            snap.counters.get(&format!("{name}{{bits=\"{bits}\"}}")).copied().unwrap_or(0)
+        };
+        // the probe bitwidth saw exactly the cascade's probe pass
+        prop_assert!(
+            counter("scan_rows_total", probe.bits) == out.probe_pass.rows_read,
+            "probe rows: counter {} != ScanStats {} ({} rerank, n={n} k={k})",
+            counter("scan_rows_total", probe.bits),
+            out.probe_pass.rows_read,
+            rerank.label()
+        );
+        prop_assert!(
+            counter("scan_bytes_total", probe.bits) == out.probe_pass.bytes_read,
+            "probe bytes: counter {} != ScanStats {}",
+            counter("scan_bytes_total", probe.bits),
+            out.probe_pass.bytes_read
+        );
+        // the rerank bitwidth saw the exhaustive scan plus the rerank pass
+        let want_rows = exhaustive.rows_read + out.rerank_pass.rows_read;
+        let want_bytes = exhaustive.bytes_read + out.rerank_pass.bytes_read;
+        prop_assert!(
+            counter("scan_rows_total", rerank.bits) == want_rows,
+            "rerank rows: counter {} != summed ScanStats {want_rows} ({} rerank)",
+            counter("scan_rows_total", rerank.bits),
+            rerank.label()
+        );
+        prop_assert!(
+            counter("scan_bytes_total", rerank.bits) == want_bytes,
+            "rerank bytes: counter {} != summed ScanStats {want_bytes}",
+            counter("scan_bytes_total", rerank.bits)
+        );
+        prop_assert!(
+            counter("scan_passes_total", probe.bits) >= 1
+                && counter("scan_passes_total", rerank.bits) >= 2,
+            "pass counters must tick once per finished scan"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+/// Negative paths for the observability surface: malformed `trace`
+/// fields and unknown `metrics` keys are clean errors that leave the
+/// connection usable — and after every rejection the happy path still
+/// works, traced timing and Prometheus text included.
+#[test]
+fn malformed_trace_and_metrics_fields_fail_clean_over_the_wire() {
+    let dir = tmpdir("obsneg");
+    let (n, k) = (7usize, 64usize);
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    seeded_datastore(&default_store_path(&dir, p8), p8, n, k, &[1.0], 5);
+    let server = Server::start(
+        &default_store_path(&dir, p8),
+        ServeOpts { addr: "127.0.0.1:0".into(), batch_window_ms: 0, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    let zeros = vec!["0"; k].join(",");
+    let score_line = |trace: &str| {
+        format!(
+            "{{\"op\":\"score\",\"id\":3,\"top_k\":2,\"trace\":{trace},\
+             \"val\":[{{\"n\":1,\"k\":{k},\"data\":[{zeros}]}}]}}"
+        )
+    };
+    let cases: &[(&str, &str)] = &[
+        ("7", "'trace' must be an object"),
+        ("[\"0x1\"]", "'trace' must be an object"),
+        ("{}", "malformed 'trace' id"),
+        ("{\"id\":\"0xzz\"}", "malformed 'trace' id"),
+        ("{\"id\":\"0x0\"}", "'trace' id must be nonzero"),
+        ("{\"id\":\"0x2a\",\"parrent\":\"0x1\"}", "unknown key 'parrent' in 'trace'"),
+        ("{\"id\":\"0x2a\",\"parent\":\"frogs\"}", "malformed 'trace' parent"),
+    ];
+    for (trace, msg) in cases {
+        let raw = c.raw_roundtrip(&score_line(trace)).unwrap();
+        assert!(raw.contains("\"ok\":false"), "trace {trace} answered: {raw}");
+        assert!(raw.contains(msg), "trace {trace}: expected {msg:?} in {raw}");
+        c.ping().unwrap();
+    }
+    let mcases: &[(&str, &str)] = &[
+        ("{\"op\":\"metrics\",\"id\":4,\"bogus\":1}", "unknown key 'bogus' in 'metrics' request"),
+        ("{\"op\":\"metrics\",\"id\":4,\"traces\":1}", "'traces' must be a bool"),
+        ("{\"op\":\"metrics\",\"id\":4,\"prometheus\":\"yes\"}", "'prometheus' must be a bool"),
+    ];
+    for (line, msg) in mcases {
+        let raw = c.raw_roundtrip(line).unwrap();
+        assert!(raw.contains("\"ok\":false"), "{line} answered: {raw}");
+        assert!(raw.contains(msg), "{line}: expected {msg:?} in {raw}");
+        c.ping().unwrap();
+    }
+    // after every rejection the connection still serves the happy path:
+    // a well-formed traced score answers WITH its timing spans...
+    let raw = c.raw_roundtrip(&score_line("{\"id\":\"0xbeef\"}")).unwrap();
+    assert!(raw.contains("\"timing\""), "traced score must carry timing: {raw}");
+    assert!(raw.contains("server.score"), "{raw}");
+    // ...and a well-formed metrics scrape answers with Prometheus text
+    let m = c.metrics(false, true).unwrap();
+    assert!(m.prometheus.unwrap().contains("qless_"), "prometheus text renders");
     c.shutdown().unwrap();
     server.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();

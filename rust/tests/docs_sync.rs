@@ -56,7 +56,7 @@ fn known_flags() -> BTreeSet<String> {
     let mut known: BTreeSet<String> = Config::KEYS.iter().map(|k| k.replace('_', "-")).collect();
     // parser-level flags plus the usage screens' literal `--key value`
     // placeholder (it names the convention, not a flag)
-    for extra in ["config", "fast", "help", "key"] {
+    for extra in ["config", "fast", "help", "key", "traces"] {
         known.insert(extra.to_string());
     }
     known

@@ -1,0 +1,217 @@
+//! End-to-end observability acceptance suite — the tracing + metrics
+//! tentpole's contract, driven over real sockets:
+//!
+//! * a traced `score` against a single server answers with the server's
+//!   own direct `timing` spans (handler root + queue-wait child), and
+//!   the scrape right after it shows the pass in every layer's
+//!   counters — rows scanned per bitwidth, cache traffic, the `score_us`
+//!   latency histogram — consistent with the reply and the `stats` verb;
+//! * a traced cascade against a 2-worker coordinator yields **one
+//!   stitched tree**: a `coordinator.score` root, one wave span per
+//!   cascade stage, one rpc span per sub-query, and the workers' own
+//!   spans re-homed under their rpc spans — every parent resolving
+//!   inside the reply's span array;
+//! * the scraped Prometheus text carries the same metric families the
+//!   JSON snapshot does.
+//!
+//! The global registry and span ring are process-wide and the tests in
+//! this binary run in parallel, so counter assertions here are `>=`,
+//! never exact — `tests/cascade.rs` proves exactness under an isolated
+//! per-thread registry.
+
+use std::path::PathBuf;
+
+use qless::datastore::default_store_path;
+use qless::grads::FeatureMatrix;
+use qless::quant::{Precision, Scheme};
+use qless::service::{Client, Coordinator, CoordinatorOpts, ServeOpts, Server, TraceField};
+use qless::util::obs;
+use qless::util::obs::SpanRecord;
+use qless::util::prop::{normal_features, seeded_datastore};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "qless_obs_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn task(ckpts: usize, rows: usize, k: usize, seed: u64) -> Vec<FeatureMatrix> {
+    (0..ckpts).map(|c| normal_features(rows, k, seed + 100 * c as u64)).collect()
+}
+
+/// Every span's parent must be 0 or another span in the same array — a
+/// dangling parent means the stitcher lost part of the tree.
+fn assert_parents_resolve(spans: &[SpanRecord], ctx: &str) {
+    for s in spans {
+        assert!(
+            s.parent == 0 || spans.iter().any(|p| p.id == s.parent),
+            "{ctx}: span '{}' (id {:#x}) has dangling parent {:#x}\nall: {spans:#?}",
+            s.name,
+            s.id,
+            s.parent
+        );
+    }
+}
+
+/// The CI obs smoke, single-node half: serve → traced score → scrape →
+/// nonzero counters, a consistent histogram, and the server's direct
+/// timing spans on the reply.
+#[test]
+fn traced_score_then_scrape_is_consistent_on_a_single_server() {
+    obs::set_tracing(true);
+    let dir = tmpdir("single");
+    let (n, k) = (23usize, 64usize);
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    let path = default_store_path(&dir, p8);
+    seeded_datastore(&path, p8, n, k, &[0.7, 0.3], 9);
+    let server = Server::start(
+        &path,
+        ServeOpts { addr: "127.0.0.1:0".into(), batch_window_ms: 0, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    c.set_trace(Some(TraceField { id: 0x51e55, parent: 0 }));
+    let val = task(2, 2, k, 77);
+    let r = c.score(&val, 4, true).unwrap();
+    assert_eq!(r.scores.as_ref().unwrap().len(), n);
+
+    // the reply carries the server's direct measurements: a handler root
+    // and its queue-wait child, properly nested
+    let timing = r.timing.expect("traced request answers with timing");
+    let root = timing.iter().find(|s| s.name == "server.score").expect("handler root span");
+    assert_eq!(root.parent, 0, "client sent parent 0, the root keeps it");
+    let wait = timing.iter().find(|s| s.name == "server.wait").expect("queue-wait span");
+    assert_eq!(wait.parent, root.id, "wait nests under the handler root");
+    assert!(wait.dur_us <= root.dur_us, "a nested span cannot outlast its parent");
+    assert_parents_resolve(&timing, "single-server timing");
+
+    // untraced requests stay exactly as cheap as before: no timing field
+    c.set_trace(None);
+    assert!(c.score(&val, 4, false).unwrap().timing.is_none());
+
+    // the scrape right after is consistent with what the queries did
+    let st = c.stats().unwrap();
+    let m = c.metrics(true, true).unwrap();
+    let counter = |name: &str| m.snapshot.counters.get(name).copied().unwrap_or(0);
+    // two queries × 2 checkpoints × n rows flowed through the 8-bit scan
+    // seam (other tests in this binary may add more — hence >=)
+    assert!(
+        counter("scan_rows_total{bits=\"8\"}") >= (2 * 2 * n) as u64,
+        "scan counter missed the served passes: {:?}",
+        m.snapshot.counters
+    );
+    assert!(counter("scan_bytes_total{bits=\"8\"}") > 0);
+    assert!(
+        counter("score_cache_misses_total") >= 2,
+        "both cold queries must be counted as score-cache misses"
+    );
+    assert!(st.stats.rows_scored >= (2 * n) as u64, "stats verb agrees rows were scored");
+    let h = m.snapshot.histos.get("score_us").expect("score_us histogram exists");
+    assert!(h.count >= 2, "both scores observed: {h:?}");
+    assert!(h.sum > 0 && h.quantile(0.99) >= h.quantile(0.5));
+    // Prometheus text carries the same families
+    let text = m.prometheus.expect("prometheus:true returns the text");
+    assert!(text.contains("# TYPE qless_scan_rows_total counter"), "{text}");
+    assert!(text.contains("qless_score_us_bucket"), "{text}");
+    assert!(text.contains("qless_session_rows"), "{text}");
+    // the ring kept the handler spans (tracing is on in this binary)
+    let traces = m.traces.expect("traces:true returns the ring");
+    assert!(
+        traces.iter().any(|s| s.name == "server.score" && s.trace == 0x51e55),
+        "the traced query's handler span must be in the ring"
+    );
+
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The CI obs smoke, distributed half: a traced 1→8-bit cascade against
+/// a 2-worker coordinator answers with ONE stitched tree — root, wave
+/// spans, rpc spans, and the workers' own handler spans re-homed under
+/// their rpcs — every parent resolving inside the reply.
+#[test]
+fn traced_cascade_yields_one_stitched_tree_across_the_fleet() {
+    obs::set_tracing(true);
+    let dir = tmpdir("fleet");
+    let (n, k) = (29usize, 64usize);
+    let etas = [0.6f32, 0.4];
+    let p1 = Precision::new(1, Scheme::Sign).unwrap();
+    let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+    let probe_path = default_store_path(&dir, p1);
+    seeded_datastore(&probe_path, p1, n, k, &etas, 3);
+    seeded_datastore(&default_store_path(&dir, p8), p8, n, k, &etas, 3);
+
+    let co = Coordinator::start_local(
+        &probe_path,
+        2,
+        ServeOpts { addr: "127.0.0.1:0".into(), batch_window_ms: 0, shard_rows: 7, ..Default::default() },
+        CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+    c.set_trace(Some(TraceField { id: 0xcafe, parent: 0 }));
+    let val = task(2, 2, k, 17);
+    let r = c.score_cascade(&val, 4, 1, 8, 2).unwrap();
+    assert_eq!(r.top.len(), 4, "the traced cascade still answers");
+
+    let spans = r.timing.expect("traced cascade answers with the stitched tree");
+    assert_parents_resolve(&spans, "stitched cascade tree");
+    let roots: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "coordinator.score").collect();
+    assert_eq!(roots.len(), 1, "exactly one root: {spans:#?}");
+    let root = roots[0];
+    assert_eq!(root.parent, 0);
+    // one wave span per cascade stage, both children of the root
+    for wave in ["wave.probe", "wave.rerank"] {
+        let w = spans.iter().find(|s| s.name == wave).unwrap_or_else(|| {
+            panic!("missing {wave} in stitched tree: {spans:#?}")
+        });
+        assert_eq!(w.parent, root.id, "{wave} hangs off the root");
+    }
+    // 2 workers × probe wave → at least two rpc.probe spans, each under
+    // the probe wave; the rerank wave issued at least one rpc.rerank
+    let probe_wave = spans.iter().find(|s| s.name == "wave.probe").unwrap();
+    let rerank_wave = spans.iter().find(|s| s.name == "wave.rerank").unwrap();
+    let rpc_probe: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "rpc.probe").collect();
+    let rpc_rerank: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "rpc.rerank").collect();
+    assert!(rpc_probe.len() >= 2, "2 workers → 2+ probe rpcs: {spans:#?}");
+    assert!(!rpc_rerank.is_empty(), "rerank wave issued rpcs: {spans:#?}");
+    assert!(rpc_probe.iter().all(|s| s.parent == probe_wave.id));
+    assert!(rpc_rerank.iter().all(|s| s.parent == rerank_wave.id));
+    // the workers' own handler spans were absorbed and re-homed under
+    // rpc spans — the tree spans process boundaries
+    let absorbed: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "server.score").collect();
+    assert!(
+        absorbed.len() >= rpc_probe.len(),
+        "every answered rpc absorbs the worker's handler span: {spans:#?}"
+    );
+    let rpc_ids: Vec<u64> =
+        rpc_probe.iter().chain(&rpc_rerank).map(|s| s.id).collect();
+    assert!(
+        absorbed.iter().all(|s| rpc_ids.contains(&s.parent)),
+        "absorbed worker spans re-home under their rpc spans: {spans:#?}"
+    );
+
+    // a fleet scrape with traces merges the coordinator's ring and both
+    // workers' rings; the coordinator's stitched spans are in there
+    let m = c.metrics(true, false).unwrap();
+    assert!(
+        m.snapshot.counters.get("scan_rows_total{bits=\"1\"}").copied().unwrap_or(0)
+            >= (2 * n) as u64,
+        "fleet-merged scrape sees the workers' probe scans: {:?}",
+        m.snapshot.counters
+    );
+    let ring = m.traces.expect("traces:true returns the merged ring");
+    assert!(
+        ring.iter().any(|s| s.name == "coordinator.score" && s.trace == 0xcafe),
+        "the stitched root is in the coordinator's ring"
+    );
+
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -211,7 +211,7 @@ impl FakeWorker {
                             }
                             let resp = match parse_request(&line) {
                                 Ok(Request::Ping { id }) => Response::Pong { id },
-                                Ok(Request::Stats { id }) => Response::Stats(StatsReply {
+                                Ok(Request::Stats { id, .. }) => Response::Stats(StatsReply {
                                     id,
                                     generation,
                                     n_samples: n,
@@ -219,7 +219,17 @@ impl FakeWorker {
                                     checkpoints,
                                     bits,
                                     stats: ServiceStats::default(),
+                                    per_worker: None,
                                 }),
+                                // an OLD worker predating the `metrics` verb
+                                // parses it as an unknown op and answers with
+                                // the error its parser produces — the
+                                // coordinator must skip it, not fail the scrape
+                                Ok(Request::Metrics { id, .. }) => Response::Error {
+                                    id,
+                                    error: "unknown op 'metrics' (expected score|stats|ping|shutdown)"
+                                        .into(),
+                                },
                                 Ok(Request::Score(r)) => {
                                     hits.fetch_add(1, Ordering::SeqCst);
                                     seen.lock().unwrap().push(match &r.cascade {
@@ -572,4 +582,87 @@ fn since_gen_is_consistent_with_workers_on_different_generations() {
     c.shutdown().unwrap();
     co.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// observability
+// ---------------------------------------------------------------------------
+
+/// `stats` with `"per_worker":true` against a coordinator returns one row
+/// per live worker — address, pinned generation, row count, per-worker
+/// accounting — while the flagless request keeps the wire shape it always
+/// had (no array).
+#[test]
+fn per_worker_stats_breakdown_lists_every_live_worker() {
+    let (n, k) = (19usize, 64usize);
+    let p = Precision::new(4, Scheme::Absmax).unwrap();
+    let path = tmp("perworker", "store.qlds");
+    seeded_datastore(&path, p, n, k, &[0.8, 0.2], 51);
+
+    let co = Coordinator::start_local(&path, 2, worker_opts(5), co_opts()).unwrap();
+    let mut c = Client::connect(co.addr()).unwrap();
+    let val = task(k, 2, 12);
+    c.score(&val, 3, false).unwrap();
+
+    let plain = c.stats().unwrap();
+    assert!(plain.per_worker.is_none(), "the breakdown must be opt-in");
+    let detail = c.stats_detail(true).unwrap();
+    let ws = detail.per_worker.as_ref().expect("per_worker:true returns the breakdown");
+    assert_eq!(ws.len(), 2, "one row per live worker");
+    let fleet_addrs: Vec<String> =
+        co.local_workers().iter().map(|w| w.addr().to_string()).collect();
+    for w in ws {
+        assert!(fleet_addrs.contains(&w.addr), "unknown worker addr {}", w.addr);
+        assert_eq!(w.generation, detail.generation, "uniform fleet pins one generation");
+        assert_eq!(w.n_samples, n, "each local worker serves the full store");
+    }
+    assert!(
+        ws.iter().map(|w| w.stats.queries).sum::<u64>() >= 2,
+        "the scattered score must show up in the per-worker query counts"
+    );
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+/// A fleet metrics scrape must survive a worker that predates the
+/// `metrics` verb: the old worker's unknown-op error is counted and
+/// skipped — the merged scrape still answers, and the worker stays in the
+/// fleet for the verbs it does speak.
+#[test]
+fn metrics_scrape_skips_workers_without_the_verb() {
+    let (n, k) = (16usize, 64usize);
+    let p = Precision::new(8, Scheme::Absmax).unwrap();
+    let path = tmp("oldworker", "store.qlds");
+    seeded_datastore(&path, p, n, k, &[1.0], 61);
+
+    let w = Server::start(&path, worker_opts(4)).unwrap();
+    let fake = FakeWorker::start(k, 1, 8, n, 0);
+    let co = Coordinator::start(CoordinatorOpts {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![w.addr().to_string(), fake.addr.to_string()],
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut c = Client::connect(co.addr()).unwrap();
+    let m = c.metrics(false, false).unwrap();
+    assert!(
+        m.snapshot.counters.get("coord_metrics_skipped_total").copied().unwrap_or(0) >= 1,
+        "the verb-less worker must be counted as skipped, not fail the scrape"
+    );
+    // the skip must not flip the worker's health flag: a per-worker stats
+    // breakdown right after the scrape still lists BOTH workers
+    let detail = c.stats_detail(true).unwrap();
+    assert_eq!(
+        detail.per_worker.as_ref().map(Vec::len),
+        Some(2),
+        "both workers still in the fleet after the degraded scrape"
+    );
+    c.shutdown().unwrap();
+    co.join().unwrap();
+    w.stop();
+    w.join().unwrap();
+    fake.stop();
+    std::fs::remove_file(path).ok();
 }
