@@ -8,6 +8,12 @@
 //! rows sweep the §10 candidate multiplier (1-bit probe → 8-bit rerank)
 //! and print bytes-read reduction + recall@k against the exhaustive scan.
 //!
+//! The kernel-variant section sweeps every dispatchable kernel (scalar
+//! reference, blocked, AVX2/NEON) over the fused Q=4 scan per bitwidth
+//! and writes the machine-readable twin `reports/bench_influence.json`
+//! (rows/s, bytes/s and speedup-vs-scalar per bitwidth × variant — the
+//! EXPERIMENTS.md §Perf iteration 12 numbers, diffable across PRs).
+//!
 //! The final section load-tests the resident query service (`qless
 //! serve`) over real sockets: queries/sec and cold/warm latency
 //! percentiles vs the micro-batch window at Q ∈ {1, 4, 16} concurrent
@@ -17,9 +23,13 @@ use std::path::PathBuf;
 
 use qless::datastore::{Datastore, DatastoreWriter};
 use qless::grads::FeatureMatrix;
-use qless::influence::native::{scores_1bit, scores_dense, scores_int_rows, ValFeatures};
+use qless::influence::native::{
+    scores_1bit, scores_dense, scores_int_rows, scores_rows_with, ValFeatures,
+};
 use qless::influence::{score_datastore, score_datastore_tasks, ScoreOpts};
 use qless::quant::{Precision, Scheme};
+use qless::util::cpu::{self, Kernel};
+use qless::util::json::Json;
 use qless::util::stats::bench;
 use qless::util::table::human_bytes;
 use qless::util::Rng;
@@ -100,6 +110,86 @@ fn main() {
             },
         );
         println!("{}", r.report_line());
+    }
+
+    // kernel variants (PR 9): the fused Q=4 scan per bitwidth × every
+    // variant this machine supports — scalar is the pinned autovectorized
+    // baseline, `blocked` isolates the rows×tasks tiling, avx2/neon add
+    // intrinsics on top. rows/s and bytes/s per cell land in
+    // reports/bench_influence.json so the perf trajectory is diffable
+    // across PRs; the headline ratio is 8-bit fused dispatch vs scalar.
+    {
+        let q = 4usize;
+        let nv_task = nv / q; // 8 val rows per task, Q·nv_task = nv total
+        let variants = cpu::available();
+        println!(
+            "-- kernel variants (Q={q} fused, {} val rows/task; active: {}) --",
+            nv_task,
+            cpu::active().label()
+        );
+        let mut sections: Vec<Json> = Vec::new();
+        let mut speedup_8bit = 0f64;
+        for bits in [1u8, 2, 4, 8] {
+            let (ds, path) = build(bits, n, k);
+            let block = ds.load_checkpoint(0).unwrap();
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            let tasks_raw: Vec<FeatureMatrix> =
+                (0..q).map(|t| feats(nv_task, k, 60 + t as u64)).collect();
+            let refs: Vec<&FeatureMatrix> = tasks_raw.iter().collect();
+            let val = ValFeatures::try_prepare_tasks(&refs, p).unwrap();
+            let row_bytes = ds.header.resident_row_bytes() as f64;
+            let mut scalar_rows_s = 0f64;
+            for &kernel in &variants {
+                let rows = block.rows();
+                let r = bench(
+                    &format!("kernel_{bits}bit_{}", kernel.label()),
+                    n as f64,
+                    "row",
+                    || {
+                        std::hint::black_box(scores_rows_with(&rows, &val, kernel));
+                    },
+                );
+                let rows_s = r.throughput();
+                if kernel == Kernel::Scalar {
+                    scalar_rows_s = rows_s;
+                }
+                let ratio = if scalar_rows_s > 0.0 { rows_s / scalar_rows_s } else { 1.0 };
+                if bits == 8 && kernel == cpu::active() {
+                    speedup_8bit = ratio;
+                }
+                println!(
+                    "{}  [{}/s scanned, {:.2}x vs scalar]",
+                    r.report_line(),
+                    human_bytes((rows_s * row_bytes) as u64),
+                    ratio,
+                );
+                let mut j = Json::obj();
+                j.set("section", "kernel_variant")
+                    .set("bits", bits as usize)
+                    .set("variant", kernel.label())
+                    .set("q_tasks", q)
+                    .set("rows_per_s", rows_s)
+                    .set("bytes_per_s", rows_s * row_bytes)
+                    .set("speedup_vs_scalar", ratio);
+                sections.push(j);
+            }
+            std::fs::remove_file(path).ok();
+        }
+        let mut out = Json::obj();
+        out.set("bench", "bench_influence")
+            .set("n_rows", n)
+            .set("k", k)
+            .set("q_tasks", q)
+            .set("val_rows_per_task", nv_task)
+            .set("active_kernel", cpu::active().label())
+            .set("fused_8bit_speedup_vs_scalar", speedup_8bit)
+            .set("sections", sections);
+        std::fs::create_dir_all("reports").unwrap();
+        std::fs::write("reports/bench_influence.json", out.encode_pretty()).unwrap();
+        println!(
+            "wrote reports/bench_influence.json (8-bit fused dispatch vs scalar: {speedup_8bit:.2}x)"
+        );
     }
 
     // multi-query scan: Q validation tasks in ONE datastore pass vs Q

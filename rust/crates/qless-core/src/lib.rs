@@ -19,6 +19,7 @@
 //! * [`util`] — the zero-dependency substrate: RNG, JSON, logging, thread
 //!   pool, property-test harness, stats, tables.
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 // Modules below carry `allow(missing_docs)` until their rustdoc pass lands
 // (same debt markers as before the workspace split); `quant` and `select`

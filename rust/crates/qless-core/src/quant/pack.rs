@@ -114,8 +114,18 @@ pub fn unpack_codes(row: &PackedRow) -> Vec<i8> {
 /// For 8-bit rows the lanes are the bytes themselves and this is a copy;
 /// callers on the hottest path can borrow the row bytes directly instead.
 pub fn unpack_stored_into(bytes: &[u8], bits: u8, len: usize, out: &mut Vec<u8>) {
-    assert!(matches!(bits, 1 | 2 | 4 | 8), "unpack_stored_into: unsupported bits {bits}");
     out.resize(len, 0);
+    unpack_stored_slice(bytes, bits, out);
+}
+
+/// [`unpack_stored_into`] over a caller-sized slice: unpacks exactly
+/// `out.len()` lanes. The blocked scan kernels unpack a whole *tile* of
+/// rows into one reused scratch buffer (each row at its `k`-lane offset),
+/// so the destination is a sub-slice of a larger allocation rather than a
+/// `Vec` to resize.
+pub fn unpack_stored_slice(bytes: &[u8], bits: u8, out: &mut [u8]) {
+    assert!(matches!(bits, 1 | 2 | 4 | 8), "unpack_stored_slice: unsupported bits {bits}");
+    let len = out.len();
     if bits == 8 {
         out.copy_from_slice(&bytes[..len]);
         return;

@@ -1,0 +1,221 @@
+//! Runtime kernel dispatch: pick the fastest scan-kernel variant this CPU
+//! supports, once, at first use.
+//!
+//! The scoring kernels (`influence::native` in `qless-datastore`) exist in
+//! four flavors sharing one arithmetic definition:
+//!
+//! * [`Kernel::Scalar`] — the original unblocked per-row loops, retained
+//!   verbatim as the pinned reference every other variant is
+//!   property-tested against (bit-exact for the 1-bit and integer-domain
+//!   paths).
+//! * [`Kernel::Blocked`] — the rows×tasks-tiled loop structure with the
+//!   scalar inner dot. Always available; isolates the blocking change
+//!   from the intrinsics change in tests and benches.
+//! * [`Kernel::Avx2`] — blocked loops with AVX2 intrinsics for the i8×u8
+//!   integer dot and the XNOR+popcount agree kernel (x86_64 with AVX2).
+//! * [`Kernel::Neon`] — the same with NEON intrinsics (aarch64 baseline).
+//!
+//! Detection runs once per process ([`active`] memoizes in a `OnceLock`)
+//! and is overridable for testing via `QLESS_KERNEL=scalar|blocked|avx2|
+//! neon` — forcing a variant the CPU lacks logs a warning and falls back
+//! to detection, except `scalar`/`blocked`, which always honor the
+//! override (CI forces `scalar` to pin the reference path). The resolved
+//! variant is published as a `kernel_dispatch{variant="…"}` gauge in the
+//! process-global metrics registry so `qless stats` and the Prometheus
+//! scrape show which kernel the process runs.
+
+use std::sync::OnceLock;
+
+/// One scan-kernel variant. All variants exist as enum values on every
+/// architecture (so tests and benches can *name* them portably); whether a
+/// variant can run here is [`Kernel::supported`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Pinned reference: the original unblocked scalar loops.
+    Scalar,
+    /// Rows×tasks blocking with the scalar inner dot (always available).
+    Blocked,
+    /// Blocked loops + AVX2 intrinsics (x86_64, runtime-detected).
+    Avx2,
+    /// Blocked loops + NEON intrinsics (aarch64 baseline).
+    Neon,
+}
+
+impl Kernel {
+    /// Stable lowercase label — the `QLESS_KERNEL` value that forces this
+    /// variant, and the `variant=` metric label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Blocked => "blocked",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Can this variant run on the current CPU?
+    pub fn supported(self) -> bool {
+        match self {
+            Kernel::Scalar | Kernel::Blocked => true,
+            Kernel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Kernel::Neon => {
+                // NEON is baseline on aarch64: every target the `neon`
+                // cfg gate compiles for has it.
+                cfg!(target_arch = "aarch64")
+            }
+        }
+    }
+
+    /// Parse a `QLESS_KERNEL` value; `None` for unknown strings.
+    pub fn from_label(s: &str) -> Option<Kernel> {
+        match s {
+            "scalar" => Some(Kernel::Scalar),
+            "blocked" => Some(Kernel::Blocked),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// The best variant the current CPU supports: SIMD when detected, else
+/// the blocked-scalar kernel (never [`Kernel::Scalar`] — the reference is
+/// only ever *forced*, so perf regressions can't hide behind dispatch).
+pub fn detect() -> Kernel {
+    if Kernel::Avx2.supported() {
+        Kernel::Avx2
+    } else if Kernel::Neon.supported() {
+        Kernel::Neon
+    } else {
+        Kernel::Blocked
+    }
+}
+
+/// Resolve an override string (the `QLESS_KERNEL` env value) against the
+/// machine: `None`/`"auto"` detect, a supported label forces, an
+/// unsupported or unknown label warns and detects. Pure given its input —
+/// unit-testable without touching the process environment.
+pub fn resolve(over: Option<&str>) -> Kernel {
+    match over {
+        None | Some("") | Some("auto") => detect(),
+        Some(s) => match Kernel::from_label(s) {
+            Some(k) if k.supported() => k,
+            Some(k) => {
+                crate::warn_!(
+                    "QLESS_KERNEL={} not supported on this CPU; auto-detecting",
+                    k.label()
+                );
+                detect()
+            }
+            None => {
+                crate::warn_!(
+                    "QLESS_KERNEL={s} unknown (scalar|blocked|avx2|neon|auto); auto-detecting"
+                );
+                detect()
+            }
+        },
+    }
+}
+
+/// The process's active kernel variant: detection (or the `QLESS_KERNEL`
+/// override) memoized on first call. Publishes the choice once as a
+/// `kernel_dispatch{variant="…"}` gauge in the **global** registry —
+/// deliberately not the thread-local override, so a test scan under
+/// `with_registry` captures its own counters but dispatch identity stays
+/// a process-level fact.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let over = std::env::var("QLESS_KERNEL").ok();
+        let k = resolve(over.as_deref());
+        super::obs::global().gauge_set(&format!("kernel_dispatch{{variant=\"{}\"}}", k.label()), 1);
+        k
+    })
+}
+
+/// Every variant that can run on this machine, reference first — the
+/// equality property tests and `bench_influence` sweep this list.
+pub fn available() -> Vec<Kernel> {
+    [Kernel::Scalar, Kernel::Blocked, Kernel::Avx2, Kernel::Neon]
+        .into_iter()
+        .filter(|k| k.supported())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_roundtrip() {
+        for k in [Kernel::Scalar, Kernel::Blocked, Kernel::Avx2, Kernel::Neon] {
+            assert_eq!(Kernel::from_label(k.label()), Some(k));
+        }
+        assert_eq!(Kernel::from_label("sse2"), None);
+        assert_eq!(Kernel::from_label("AVX2"), None); // labels are lowercase
+    }
+
+    #[test]
+    fn scalar_and_blocked_always_supported() {
+        assert!(Kernel::Scalar.supported());
+        assert!(Kernel::Blocked.supported());
+    }
+
+    #[test]
+    fn detect_never_picks_the_reference() {
+        let k = detect();
+        assert!(k != Kernel::Scalar, "detection must not pick the pinned reference");
+        assert!(k.supported());
+    }
+
+    #[test]
+    fn resolve_honors_supported_overrides_and_falls_back() {
+        assert_eq!(resolve(Some("scalar")), Kernel::Scalar);
+        assert_eq!(resolve(Some("blocked")), Kernel::Blocked);
+        assert_eq!(resolve(None), detect());
+        assert_eq!(resolve(Some("")), detect());
+        assert_eq!(resolve(Some("auto")), detect());
+        // unknown strings fall back to detection instead of panicking
+        assert_eq!(resolve(Some("bogus")), detect());
+        // an unsupported SIMD force falls back; a supported one sticks
+        for simd in [Kernel::Avx2, Kernel::Neon] {
+            let got = resolve(Some(simd.label()));
+            if simd.supported() {
+                assert_eq!(got, simd);
+            } else {
+                assert_eq!(got, detect());
+            }
+        }
+    }
+
+    #[test]
+    fn active_is_supported_and_stable() {
+        let a = active();
+        assert!(a.supported());
+        assert_eq!(active(), a); // memoized
+        if let Ok(forced) = std::env::var("QLESS_KERNEL") {
+            if let Some(k) = Kernel::from_label(&forced) {
+                if k.supported() {
+                    assert_eq!(a, k, "QLESS_KERNEL={forced} must force the variant");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn available_lists_reference_first_and_only_supported() {
+        let avail = available();
+        assert_eq!(avail[0], Kernel::Scalar);
+        assert!(avail.contains(&Kernel::Blocked));
+        assert!(avail.iter().all(|k| k.supported()));
+    }
+}

@@ -8,6 +8,7 @@
 //! metrics/tracing registry (`obs`).
 
 pub mod bits;
+pub mod cpu;
 pub mod json;
 pub mod logging;
 pub mod obs;

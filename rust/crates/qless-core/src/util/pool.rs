@@ -203,6 +203,45 @@ pub fn par_for(n: usize, max_workers: usize, f: &(dyn Fn(usize) + Sync)) {
     run_job(n, grain, 0, std::ptr::null_mut(), &|i: usize, _row: &mut [f32]| f(i));
 }
 
+/// Fill `out` (row-major `n × width` floats) in parallel, handing each
+/// participant a whole *block* of up to `rows_per_block` consecutive rows:
+/// `f(start_row, block)` gets a mutable slice covering rows
+/// `start_row .. start_row + block.len()/width`. This is the blocked scan
+/// kernels' shape — a block of rows is unpacked once into an L1-resident
+/// tile and dotted against every task column before eviction, so the
+/// parallel grain must be the tile, not the row. The final block may be
+/// short (`n % rows_per_block` rows).
+pub fn par_fill_row_blocks(
+    out: &mut [f32],
+    width: usize,
+    rows_per_block: usize,
+    f: &(dyn Fn(usize, &mut [f32]) + Sync),
+) {
+    assert!(width >= 1, "par_fill_row_blocks: width must be >= 1");
+    assert!(rows_per_block >= 1, "par_fill_row_blocks: rows_per_block must be >= 1");
+    assert_eq!(out.len() % width, 0, "par_fill_row_blocks: out length not a multiple of width");
+    let n = out.len() / width;
+    if n == 0 {
+        return;
+    }
+    let n_blocks = n.div_ceil(rows_per_block);
+    // usize-erase the base pointer so the closure is Sync without capturing
+    // a &mut; each block index maps to a disjoint row range.
+    let base = out.as_mut_ptr() as usize;
+    par_for(n_blocks, 0, &move |b| {
+        let start = b * rows_per_block;
+        let rows = rows_per_block.min(n - start);
+        // SAFETY: block `b` covers rows `[start, start+rows)`; blocks are
+        // disjoint by construction and `par_for` does not return until every
+        // block is done, so `out` outlives all writes and no two
+        // participants ever alias a float.
+        let block = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut f32).add(start * width), rows * width)
+        };
+        f(start, block);
+    });
+}
+
 /// Shared job engine behind [`par_fill_rows`] and [`par_for`]: publish one
 /// job, participate, and block until every participant is done. `grain` 0
 /// picks the default chunking (~8 chunks per participant).
@@ -390,6 +429,31 @@ mod tests {
             for i in 0..n {
                 for j in 0..w {
                     assert_eq!(out[i * w + j], (i * 10 + j) as f32, "n={n} w={w} i={i} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fills_row_blocks_including_short_tail() {
+        for (n, w, tile) in
+            [(0, 3, 4), (1, 1, 8), (7, 2, 3), (300, 3, 16), (1024, 4, 64), (5, 2, 100)]
+        {
+            let mut out = vec![0f32; n * w];
+            par_fill_row_blocks(&mut out, w, tile, &|start: usize, block: &mut [f32]| {
+                assert_eq!(block.len() % w, 0);
+                let rows = block.len() / w;
+                assert!(rows >= 1 && rows <= tile);
+                assert_eq!(start % tile, 0, "blocks start on tile boundaries");
+                for (r, row) in block.chunks_exact_mut(w).enumerate() {
+                    for (j, x) in row.iter_mut().enumerate() {
+                        *x = ((start + r) * 10 + j) as f32;
+                    }
+                }
+            });
+            for i in 0..n {
+                for j in 0..w {
+                    assert_eq!(out[i * w + j], (i * 10 + j) as f32, "n={n} w={w} tile={tile}");
                 }
             }
         }

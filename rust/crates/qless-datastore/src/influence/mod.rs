@@ -29,6 +29,7 @@
 pub mod aggregate;
 pub mod cascade;
 pub mod native;
+pub(crate) mod simd;
 pub mod xla;
 
 pub use aggregate::{

@@ -37,9 +37,11 @@ use std::cell::RefCell;
 
 use crate::datastore::{CheckpointBlock, RowsView};
 use crate::grads::FeatureMatrix;
-use crate::quant::pack::{as_sign_words, pack_codes};
+use crate::influence::simd;
+use crate::quant::pack::{as_sign_words, pack_codes, unpack_stored_slice};
 use crate::quant::scheme::{normalize_row, quantize_row};
 use crate::quant::Precision;
+use crate::util::cpu::{self, Kernel};
 
 /// One validation task's features, prepared for scoring at the datastore's
 /// precision: quantized-normalized f32 rows (reference + XLA path), packed
@@ -51,6 +53,11 @@ pub struct ValTask {
     pub rows: Vec<Vec<f32>>,
     /// Packed sign words per row (populated only at 1-bit).
     pub sign_words: Vec<Vec<u64>>,
+    /// Packed sign *bytes* per row (`⌈k/8⌉` each; populated only at
+    /// 1-bit) — the byte-level twin of [`Self::sign_words`]. The blocked
+    /// and SIMD XNOR kernels dot these against the packed train-row bytes
+    /// directly, no word assembly per row.
+    pub sign_bytes: Vec<Vec<u8>>,
     /// Integer codes per row (populated only at 2/4/8-bit).
     pub codes: Vec<Vec<i8>>,
     /// Σ codes per row — the zero-point fixup term (2/4/8-bit only).
@@ -154,6 +161,7 @@ fn prepare_task(feats: &FeatureMatrix, precision: Precision, t: usize) -> anyhow
             if precision.bits == 1 {
                 let packed = pack_codes(&q.codes, 1, q.scale).expect("pack 1-bit");
                 task.sign_words.push(as_sign_words(&packed));
+                task.sign_bytes.push(packed.bytes);
             } else {
                 let sum: i64 = q.codes.iter().map(|&c| c as i64).sum();
                 let norm2: i64 = q.codes.iter().map(|&c| (c as i64) * (c as i64)).sum();
@@ -220,6 +228,30 @@ thread_local! {
     static STORED_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
     /// Per-thread per-task agreement counters (1-bit kernel).
     static AGREE_SCRATCH: RefCell<Vec<i64>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread tile scratch for the blocked integer kernel.
+    static INT_TILE: RefCell<IntTile> = RefCell::new(IntTile::default());
+    /// Per-thread per-row agreement counters (blocked 1-bit kernel).
+    static BIT_TILE: RefCell<Vec<i64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Reused buffers for one tile of the blocked integer kernel: the
+/// unpacked stored lanes (`tile × k` at 2/4-bit; 8-bit borrows the view's
+/// bytes), the per-row inverse norms, and the per-row f32 accumulators of
+/// the task currently being scored.
+#[derive(Default)]
+struct IntTile {
+    lanes: Vec<u8>,
+    inv_norms: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// Rows per scan tile for a row whose decoded working set is
+/// `bytes_per_row`: targets ~16 KiB of row data resident in L1 while a
+/// tile is re-dotted against every task column, clamped to `[4, 64]` so
+/// tiny rows still amortize loop overhead and huge rows (k > 4096) keep
+/// at least a few rows per tile. Derivation in DESIGN.md §11.
+pub fn tile_rows(bytes_per_row: usize) -> usize {
+    (16 * 1024 / bytes_per_row.max(1)).clamp(4, 64)
 }
 
 /// The integer-domain scoring engine for 2/4/8-bit datastores.
@@ -290,15 +322,129 @@ pub fn scores_int_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
     })
 }
 
+/// The blocked (rows×tasks-tiled) integer engine: [`scores_int_rows`]
+/// restructured so a tile of up to [`tile_rows`]`(k)` rows is unpacked
+/// once into an L1-resident lane buffer and dotted against **every**
+/// validation row of every task before eviction — the per-row val-code
+/// traffic of the unblocked loop (Q·nv·k bytes per train row) collapses
+/// to once per tile. The inner dot runs through [`simd`] for `kernel`
+/// (scalar for [`Kernel::Blocked`], intrinsics for
+/// [`Kernel::Avx2`]/[`Kernel::Neon`]).
+///
+/// **Bit-exact** vs the scalar reference: integer dots are exact in any
+/// order, and each row's f32 accumulator receives the same values in the
+/// same validation-row order with the same final
+/// `acc · inv_norm_t / nv` arithmetic (DESIGN.md §11).
+/// Row-major `[n × Q]` output; same preconditions as [`scores_int_rows`].
+pub fn scores_int_rows_blocked(rows: &RowsView<'_>, val: &ValFeatures, kernel: Kernel) -> Vec<f32> {
+    let bits = rows.precision.bits;
+    assert!(matches!(bits, 2 | 4 | 8), "integer path needs a 2/4/8-bit datastore");
+    assert_eq!(rows.k, val.k);
+    assert!(int_dot_fits(bits, rows.k), "k {} overflows the i32 dot at {bits}-bit", rows.k);
+    let q = val.n_tasks();
+    assert!(q > 0, "no validation tasks");
+    for (t, task) in val.tasks.iter().enumerate() {
+        assert!(!task.codes.is_empty(), "task {t} lacks integer codes");
+    }
+    let k = rows.k;
+    let stride = rows.row_stride;
+    let alpha = ((1i32 << (bits - 1)) - 1) as i64;
+    let tile = tile_rows(k);
+    par_over_row_blocks(rows.n(), q, tile, (val.n() * k) as u64, |start, out_block| {
+        let nb = out_block.len() / q;
+        INT_TILE.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let IntTile { lanes, inv_norms, acc } = &mut *scratch;
+            // decode the tile once: 8-bit lanes are the row bytes
+            // themselves (stride == k), 2/4-bit unpack into the scratch
+            let stored_block: &[u8] = if bits == 8 {
+                &rows.data[start * stride..(start + nb) * stride]
+            } else {
+                lanes.resize(nb * k, 0);
+                for r in 0..nb {
+                    unpack_stored_slice(
+                        rows.row_bytes(start + r),
+                        bits,
+                        &mut lanes[r * k..(r + 1) * k],
+                    );
+                }
+                lanes
+            };
+            // per-row norms from lane sums: ‖t‖² = Σs² − 2αΣs + kα²
+            inv_norms.clear();
+            for r in 0..nb {
+                let mut sum_s = 0i64;
+                let mut sum_s2 = 0i64;
+                for &s in &stored_block[r * k..(r + 1) * k] {
+                    let s = s as i64;
+                    sum_s += s;
+                    sum_s2 += s * s;
+                }
+                let norm2 = sum_s2 - 2 * alpha * sum_s + k as i64 * alpha * alpha;
+                inv_norms.push(if norm2 > 0 { 1.0 / (norm2 as f32).sqrt() } else { 0.0 });
+            }
+            for (t, task) in val.tasks.iter().enumerate() {
+                acc.clear();
+                acc.resize(nb, 0f32);
+                for ((codes, &csum), &inv_norm_v) in
+                    task.codes.iter().zip(&task.code_sums).zip(&task.inv_norms)
+                {
+                    // the val row's codes stay register/L1-hot across the
+                    // whole tile; accumulation order per row matches the
+                    // scalar reference (val rows in task order)
+                    for r in 0..nb {
+                        let dot_s = simd::int_dot(kernel, &stored_block[r * k..(r + 1) * k], codes);
+                        // zero-point fixup: ⟨t, v⟩ = ⟨s, v⟩ − α·Σv
+                        let dot_tv = dot_s as i64 - alpha * csum as i64;
+                        acc[r] += dot_tv as f32 * inv_norm_v;
+                    }
+                }
+                let nv = task.codes.len() as f32;
+                for r in 0..nb {
+                    out_block[r * q + t] = acc[r] * inv_norms[r] / nv;
+                }
+            }
+        })
+    })
+}
+
 /// Score with the fastest applicable native path for the view's
-/// precision: XNOR+popcount at 1-bit, the integer-domain engine at
-/// 2/4/8-bit (f32 fallback past the i32 overflow bound), and the f32
-/// path at 16-bit. Row-major `[n × Q]` output. This is the dispatch the
-/// streamed scan (`influence::score_datastore_tasks`) uses per shard.
+/// precision — [`scores_rows_with`] at the process's active kernel
+/// variant ([`cpu::active`]) — and publish per-variant per-bitwidth
+/// `kernel_scan_rows_total` counters to the calling thread's registry.
+/// Row-major `[n × Q]` output. This is the dispatch the streamed scan
+/// (`influence::score_datastore_tasks`) uses per shard.
 pub fn scores_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
+    let kernel = cpu::active();
+    let out = scores_rows_with(rows, val, kernel);
+    crate::util::obs::counter_add(
+        &format!(
+            "kernel_scan_rows_total{{variant=\"{}\",bits=\"{}\"}}",
+            kernel.label(),
+            rows.precision.bits
+        ),
+        rows.n() as u64,
+    );
+    out
+}
+
+/// [`scores_rows`] pinned to an explicit kernel variant: XNOR+popcount at
+/// 1-bit, the integer-domain engine at 2/4/8-bit (f32 fallback past the
+/// i32 overflow bound), the f32 path at 16-bit. [`Kernel::Scalar`] takes
+/// the original unblocked reference loops; every other variant takes the
+/// blocked loops with `kernel`'s inner dot. The equality property tests
+/// and `bench_influence` call this directly to sweep variants; production
+/// goes through [`scores_rows`].
+pub fn scores_rows_with(rows: &RowsView<'_>, val: &ValFeatures, kernel: Kernel) -> Vec<f32> {
     match rows.precision.bits {
-        1 => scores_1bit_rows(rows, val),
-        b if int_dot_fits(b, rows.k) => scores_int_rows(rows, val),
+        1 => match kernel {
+            Kernel::Scalar => scores_1bit_rows(rows, val),
+            k => scores_1bit_rows_blocked(rows, val, k),
+        },
+        b if int_dot_fits(b, rows.k) => match kernel {
+            Kernel::Scalar => scores_int_rows(rows, val),
+            k => scores_int_rows_blocked(rows, val, k),
+        },
         _ => scores_dense_rows(rows, val),
     }
 }
@@ -330,6 +476,32 @@ fn par_over_rows<F: Fn(usize, &mut [f32]) + Sync>(
         return out;
     }
     crate::util::pool::par_fill_rows(&mut out, width, &f);
+    out
+}
+
+/// Blocked twin of [`par_over_rows`]: evaluate `f(start_row, out_block)`
+/// per tile of up to `tile` consecutive rows (the final tile may be
+/// short), filling a row-major `[n × width]` output. Same serial
+/// thresholds as the per-row engine — the blocked loop structure is used
+/// either way; only the parallel grain changes (whole tiles, so a tile's
+/// decode is never split across participants).
+fn par_over_row_blocks<F: Fn(usize, &mut [f32]) + Sync>(
+    n: usize,
+    width: usize,
+    tile: usize,
+    work_per_row: u64,
+    f: F,
+) -> Vec<f32> {
+    assert!(width >= 1 && tile >= 1);
+    let mut out = vec![0f32; n * width];
+    let threads = crate::util::pool::scan_threads().min(n.max(1));
+    if threads <= 1 || n < 256 || (n as u64).saturating_mul(work_per_row) < 8_000_000 {
+        for (b, block) in out.chunks_mut(tile * width).enumerate() {
+            f(b * tile, block);
+        }
+        return out;
+    }
+    crate::util::pool::par_fill_row_blocks(&mut out, width, tile, &f);
     out
 }
 
@@ -398,6 +570,63 @@ pub fn scores_1bit_rows(rows: &RowsView<'_>, val: &ValFeatures) -> Vec<f32> {
                 let nv = task.sign_words.len();
                 let total_dot = 2 * (a - nv as i64 * tail) - (nv * k) as i64;
                 *o = (total_dot as f32 * inv_k) / nv as f32;
+            }
+        })
+    })
+}
+
+/// The blocked (rows×tasks-tiled) 1-bit kernel: XNOR+popcount straight on
+/// the packed row *bytes* against [`ValTask::sign_bytes`], a tile of rows
+/// against every task's val rows before eviction, with `kernel`'s agree
+/// primitive ([`simd::xnor_agree`]).
+///
+/// **Bit-exact** vs [`scores_1bit_rows`]: agreement is an exact integer
+/// in any order, and the byte-level tail fixup
+/// (`tail₈ = row_stride·8 − k`) yields the identical total dot as the
+/// reference's word-level fixup (`tail₆₄ = ⌈k/64⌉·64 − k`) because both
+/// sides zero-pad, so every phantom position agrees and
+/// `2·(agree − nv·tail) − nv·k` is invariant to the padded length
+/// (DESIGN.md §11). The final f32 ops match the reference exactly.
+/// Row-major `[n × Q]` output; same preconditions as
+/// [`scores_1bit_rows`].
+pub fn scores_1bit_rows_blocked(
+    rows: &RowsView<'_>,
+    val: &ValFeatures,
+    kernel: Kernel,
+) -> Vec<f32> {
+    assert_eq!(rows.precision.bits, 1, "1-bit path needs a sign datastore");
+    assert_eq!(rows.k, val.k);
+    let q = val.n_tasks();
+    assert!(q > 0, "no validation tasks");
+    for (t, task) in val.tasks.iter().enumerate() {
+        assert!(!task.sign_bytes.is_empty(), "task {t} lacks sign bytes");
+    }
+    let k = rows.k;
+    let stride = rows.row_stride;
+    let tail = (stride * 8 - k) as i64;
+    let inv_k = 1.0 / k as f32;
+    let tile = tile_rows(stride);
+    par_over_row_blocks(rows.n(), q, tile, (val.n() * k.div_ceil(64)) as u64, |start, out_block| {
+        let nb = out_block.len() / q;
+        BIT_TILE.with(|cell| {
+            let mut agree = cell.borrow_mut();
+            for (t, task) in val.tasks.iter().enumerate() {
+                agree.clear();
+                agree.resize(nb, 0i64);
+                for v in &task.sign_bytes {
+                    // the val row's packed bytes stay L1-hot across the
+                    // whole tile of train rows
+                    for (r, a) in agree.iter_mut().enumerate() {
+                        *a += simd::xnor_agree(kernel, rows.row_bytes(start + r), v) as i64;
+                    }
+                }
+                // remove the always-agreeing zero tail, convert to mean
+                // cosine — identical arithmetic to the scalar reference
+                let nv = task.sign_bytes.len();
+                for (r, &a) in agree.iter().enumerate() {
+                    let total_dot = 2 * (a - nv as i64 * tail) - (nv * k) as i64;
+                    out_block[r * q + t] = (total_dot as f32 * inv_k) / nv as f32;
+                }
             }
         })
     })
@@ -536,6 +765,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn blocked_and_simd_variants_match_scalar_bitwise() {
+        // Every non-reference variant (blocked scalar and whatever SIMD
+        // this machine has) must produce bit-identical scores to the
+        // pinned scalar reference at every packed bitwidth — the full
+        // bitwidth × scheme × k property grid lives in tests/kernels.rs.
+        for bits in [1u8, 2, 4, 8] {
+            let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+            let p = Precision::new(bits, scheme).unwrap();
+            for k in [64usize, 97, 513] {
+                let block = make_block(bits, 77, k, 50 + bits as u64 + k as u64);
+                let t0 = feats(3, k, 51);
+                let t1 = feats(2, k, 52);
+                let val = ValFeatures::try_prepare_tasks(&[&t0, &t1], p).unwrap();
+                let reference = scores_rows_with(&block.rows(), &val, Kernel::Scalar);
+                for kernel in cpu::available() {
+                    let got = scores_rows_with(&block.rows(), &val, kernel);
+                    assert_eq!(got.len(), reference.len());
+                    for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "bits {bits} k {k} kernel {} idx {i}: {a} vs {b}",
+                            kernel.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rows_targets_l1_and_clamps() {
+        assert_eq!(tile_rows(512), 32); // 8-bit k=512: 32 rows × 512 B = 16 KiB
+        assert_eq!(tile_rows(64), 64); // tiny rows clamp at 64
+        assert_eq!(tile_rows(1), 64);
+        assert_eq!(tile_rows(0), 64); // degenerate guard
+        assert_eq!(tile_rows(16 * 1024), 4); // huge rows clamp at 4
+        assert_eq!(tile_rows(8192), 4); // 8-bit k=8192 (paper scale)
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Architecture-specific inner kernels for the blocked scan paths: the
+//! u8×i8 integer dot (stored offset-binary lanes × validation codes) and
+//! the 1-bit XNOR-agree popcount, each in a scalar form plus `cfg`-gated
+//! AVX2 (x86_64) and NEON (aarch64) intrinsics.
+//!
+//! **Exactness contract** (DESIGN.md §11): every variant computes the
+//! *identical integer* — dots accumulate in i32/u32 with no rounding, so
+//! scalar vs SIMD equality is `==`, not ≤ε, and the f32 score math built
+//! on top of these integers is bit-exact across variants by construction.
+//!
+//! The AVX2 dot deliberately avoids `_mm256_maddubs_epi16` (it saturates:
+//! two adjacent 8-bit products reach 2·254·127 = 64 516 > `i16::MAX`) in
+//! favor of exact 8→16-bit widening + `_mm256_madd_epi16`. Per-lane i32
+//! accumulation is safe under the same `int_dot_fits` bound the scalar
+//! engine enforces: each of the 8 lanes sums ⌈k/8⌉ products bounded by
+//! 2α², which is ≤ the full-k scalar bound the dispatcher already checks.
+//!
+//! Dispatch is by **value** ([`Kernel`]) resolved once at process start
+//! (`util::cpu::active`), not by function pointer — the match compiles to
+//! a predictable branch and keeps the unsafe surface confined to this
+//! module. Callers never reach the `unsafe fn`s directly: [`int_dot`] and
+//! [`xnor_agree`] re-verify the cfg/feature gate before entering them.
+
+use crate::util::cpu::Kernel;
+
+/// Scalar u8×i8 dot — the reference the SIMD variants must equal exactly.
+/// Matches the inner loop of `native::scores_int_rows` verbatim.
+#[inline]
+pub(crate) fn dot_u8i8_scalar(stored: &[u8], codes: &[i8]) -> i32 {
+    let mut dot = 0i32;
+    for (&s, &c) in stored.iter().zip(codes.iter()) {
+        dot += s as i32 * c as i32;
+    }
+    dot
+}
+
+/// Scalar XNOR-agree count over two equal-length packed byte rows: the
+/// number of bit positions where `a` and `b` hold the same bit. Runs on
+/// u64 words for throughput with a per-byte tail, matching the word loop
+/// of `native::scores_1bit_rows` arithmetic exactly (popcounts are
+/// order-independent integers).
+#[inline]
+pub(crate) fn xnor_agree_scalar(a: &[u8], b: &[u8]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut agree = 0u32;
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (xa, xb) in ac.by_ref().zip(bc.by_ref()) {
+        let x = u64::from_le_bytes(xa.try_into().unwrap());
+        let y = u64::from_le_bytes(xb.try_into().unwrap());
+        agree += (!(x ^ y)).count_ones();
+    }
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        agree += (!(x ^ y)).count_ones();
+    }
+    agree
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 u8×i8 dot with exact widening (no saturation — see the module
+    /// docs). 32 lanes per iteration; the remainder runs scalar.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 (the [`super::int_dot`]
+    /// wrapper re-checks `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_u8i8(stored: &[u8], codes: &[i8]) -> i32 {
+        debug_assert_eq!(stored.len(), codes.len());
+        let n = stored.len();
+        let chunks = n / 32;
+        // SAFETY: all pointer arithmetic stays within `stored`/`codes`
+        // (`chunks*32 <= n`), and loadu has no alignment requirement.
+        unsafe {
+            let mut acc = _mm256_setzero_si256();
+            for i in 0..chunks {
+                let s = _mm256_loadu_si256(stored.as_ptr().add(i * 32) as *const __m256i);
+                let c = _mm256_loadu_si256(codes.as_ptr().add(i * 32) as *const __m256i);
+                // widen each 16-byte half exactly: u8→i16 (zero-extend,
+                // stored lanes are 0..=2α) and i8→i16 (sign-extend)
+                let s_lo = _mm256_cvtepu8_epi16(_mm256_castsi256_si128(s));
+                let s_hi = _mm256_cvtepu8_epi16(_mm256_extracti128_si256::<1>(s));
+                let c_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(c));
+                let c_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(c));
+                // madd: 16 exact i16×i16 products per half, pair-summed
+                // into 8 i32 lanes; lane sums bounded by int_dot_fits
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(s_lo, c_lo));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(s_hi, c_hi));
+            }
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let mut dot: i32 = lanes.iter().sum();
+            for i in chunks * 32..n {
+                dot += stored[i] as i32 * codes[i] as i32;
+            }
+            dot
+        }
+    }
+
+    /// AVX2 XNOR-agree via the nibble-LUT popcount (Muła): per-byte
+    /// popcounts of `!(a^b)` looked up 32 bytes at a time, horizontally
+    /// summed through `_mm256_sad_epu8` into 4 u64 lanes.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 (the [`super::xnor_agree`]
+    /// wrapper re-checks `is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xnor_agree(a: &[u8], b: &[u8]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 32;
+        // SAFETY: loads stay within the slices (`chunks*32 <= n`); loadu
+        // is unaligned-safe.
+        unsafe {
+            // popcount-per-nibble lookup table, repeated across both lanes
+            let lut = _mm256_setr_epi8(
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            );
+            let low_mask = _mm256_set1_epi8(0x0f);
+            let ones = _mm256_set1_epi8(-1);
+            let mut acc = _mm256_setzero_si256();
+            for i in 0..chunks {
+                let x = _mm256_loadu_si256(a.as_ptr().add(i * 32) as *const __m256i);
+                let y = _mm256_loadu_si256(b.as_ptr().add(i * 32) as *const __m256i);
+                let xnor = _mm256_xor_si256(_mm256_xor_si256(x, y), ones);
+                let lo = _mm256_and_si256(xnor, low_mask);
+                let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(xnor), low_mask);
+                let pop =
+                    _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+                // per-byte popcounts are ≤ 8, so the 8-byte groups sad
+                // sums (≤ 64) fit u16 lanes with huge margin
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(pop, _mm256_setzero_si256()));
+            }
+            let mut lanes = [0u64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let mut agree = lanes.iter().sum::<u64>() as u32;
+            for i in chunks * 32..n {
+                agree += (!(a[i] ^ b[i])).count_ones();
+            }
+            agree
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// NEON u8×i8 dot with exact widening: 16 lanes per iteration via
+    /// u8→u16→i16 / i8→i16 moves and four `vmlal_s16` accumulations.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; the target_feature gate only asserts
+    /// what every aarch64 target already guarantees.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_u8i8(stored: &[u8], codes: &[i8]) -> i32 {
+        debug_assert_eq!(stored.len(), codes.len());
+        let n = stored.len();
+        let chunks = n / 16;
+        // SAFETY: loads stay within the slices (`chunks*16 <= n`); vld1q
+        // has no alignment requirement on aarch64.
+        unsafe {
+            let mut acc = vdupq_n_s32(0);
+            for i in 0..chunks {
+                let s = vld1q_u8(stored.as_ptr().add(i * 16));
+                let c = vld1q_s8(codes.as_ptr().add(i * 16));
+                // widen exactly: stored u8 → i16 (values ≤ 254 fit), codes
+                // i8 → i16 (sign-extend); products fit i32 via vmlal_s16
+                let s_lo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(s)));
+                let s_hi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(s)));
+                let c_lo = vmovl_s8(vget_low_s8(c));
+                let c_hi = vmovl_s8(vget_high_s8(c));
+                acc = vmlal_s16(acc, vget_low_s16(s_lo), vget_low_s16(c_lo));
+                acc = vmlal_s16(acc, vget_high_s16(s_lo), vget_high_s16(c_lo));
+                acc = vmlal_s16(acc, vget_low_s16(s_hi), vget_low_s16(c_hi));
+                acc = vmlal_s16(acc, vget_high_s16(s_hi), vget_high_s16(c_hi));
+            }
+            let mut dot = vaddvq_s32(acc);
+            for i in chunks * 16..n {
+                dot += stored[i] as i32 * codes[i] as i32;
+            }
+            dot
+        }
+    }
+
+    /// NEON XNOR-agree: hardware per-byte popcount (`vcnt`) of the XNOR,
+    /// horizontally summed 16 bytes at a time (`vaddlvq_u8` ≤ 128 per
+    /// chunk, accumulated in u32).
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64 (see [`dot_u8i8`]).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn xnor_agree(a: &[u8], b: &[u8]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 16;
+        // SAFETY: loads stay within the slices (`chunks*16 <= n`).
+        unsafe {
+            let mut agree = 0u32;
+            for i in 0..chunks {
+                let x = vld1q_u8(a.as_ptr().add(i * 16));
+                let y = vld1q_u8(b.as_ptr().add(i * 16));
+                let pop = vcntq_u8(vmvnq_u8(veorq_u8(x, y)));
+                agree += vaddlvq_u8(pop) as u32;
+            }
+            for i in chunks * 16..n {
+                agree += (!(a[i] ^ b[i])).count_ones();
+            }
+            agree
+        }
+    }
+}
+
+/// The u8×i8 integer dot for `kernel`. Safe: SIMD arms re-verify the CPU
+/// feature before entering the `unsafe fn`, and any variant that cannot
+/// run here (wrong arch, feature missing) silently computes the identical
+/// integer through the scalar loop.
+#[inline]
+pub(crate) fn int_dot(kernel: Kernel, stored: &[u8], codes: &[i8]) -> i32 {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 verified on this CPU one line up.
+            unsafe { x86::dot_u8i8(stored, codes) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => {
+            // SAFETY: NEON is baseline on every aarch64 target.
+            unsafe { arm::dot_u8i8(stored, codes) }
+        }
+        _ => dot_u8i8_scalar(stored, codes),
+    }
+}
+
+/// The XNOR-agree bit count for `kernel`; same dispatch contract as
+/// [`int_dot`].
+#[inline]
+pub(crate) fn xnor_agree(kernel: Kernel, a: &[u8], b: &[u8]) -> u32 {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 verified on this CPU one line up.
+            unsafe { x86::xnor_agree(a, b) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => {
+            // SAFETY: NEON is baseline on every aarch64 target.
+            unsafe { arm::xnor_agree(a, b) }
+        }
+        _ => xnor_agree_scalar(a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cpu;
+    use crate::util::Rng;
+
+    fn rand_row(rng: &mut Rng, n: usize, alpha: u8) -> (Vec<u8>, Vec<i8>) {
+        let stored: Vec<u8> = (0..n).map(|_| rng.below(2 * alpha as usize + 1) as u8).collect();
+        let codes: Vec<i8> = (0..n)
+            .map(|_| (rng.below(2 * alpha as usize + 1) as i16 - alpha as i16) as i8)
+            .collect();
+        (stored, codes)
+    }
+
+    #[test]
+    fn simd_dot_equals_scalar_exactly() {
+        // every available variant, many lengths (SIMD chunk boundaries ± 1
+        // and long tails), extreme lane values included
+        let mut rng = Rng::new(77);
+        for kernel in cpu::available() {
+            for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 96, 127, 255, 513, 4099] {
+                let (stored, codes) = rand_row(&mut rng, n, 127);
+                assert_eq!(
+                    int_dot(kernel, &stored, &codes),
+                    dot_u8i8_scalar(&stored, &codes),
+                    "kernel {} n={n}",
+                    kernel.label()
+                );
+            }
+            // saturation regression: alternating max-magnitude lanes would
+            // overflow a maddubs-style i16 pair sum — must still be exact
+            let stored = vec![254u8; 1024];
+            let codes: Vec<i8> = (0..1024).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect();
+            assert_eq!(
+                int_dot(kernel, &stored, &codes),
+                dot_u8i8_scalar(&stored, &codes),
+                "kernel {} saturation pattern",
+                kernel.label()
+            );
+        }
+    }
+
+    #[test]
+    fn simd_agree_equals_scalar_exactly() {
+        let mut rng = Rng::new(78);
+        for kernel in cpu::available() {
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 65, 127, 512, 1025] {
+                let a: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                assert_eq!(
+                    xnor_agree(kernel, &a, &b),
+                    xnor_agree_scalar(&a, &b),
+                    "kernel {} n={n}",
+                    kernel.label()
+                );
+            }
+            // identical rows agree on every bit; complements on none
+            let a = vec![0b1010_1010u8; 100];
+            let b: Vec<u8> = a.iter().map(|x| !x).collect();
+            assert_eq!(xnor_agree(kernel, &a, &a), 800);
+            assert_eq!(xnor_agree(kernel, &a, &b), 0);
+        }
+    }
+
+    #[test]
+    fn scalar_agree_matches_naive_bits() {
+        let mut rng = Rng::new(79);
+        for n in [1usize, 5, 8, 13, 40] {
+            let a: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let naive: u32 = (0..n * 8)
+                .map(|i| {
+                    let xa = (a[i / 8] >> (i % 8)) & 1;
+                    let xb = (b[i / 8] >> (i % 8)) & 1;
+                    u32::from(xa == xb)
+                })
+                .sum();
+            assert_eq!(xnor_agree_scalar(&a, &b), naive, "n={n}");
+        }
+    }
+}

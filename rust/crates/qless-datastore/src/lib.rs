@@ -18,6 +18,7 @@
 //! Only `qless-core` (and the vendored `anyhow`/`xla`) sit below this
 //! crate; the serving layer and the pipeline sit above it.
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod datastore;
 pub mod fixtures;

@@ -13,6 +13,7 @@
 //! `qless-core` (quant, select, util); the CLI and pipeline live above it
 //! in the top `qless` crate.
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod service;
 

@@ -35,6 +35,7 @@
 //! through the PJRT C API (`xla` crate) and executes them from the hot
 //! path.
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 // Modules below carry `allow(missing_docs)` until their rustdoc pass lands;
 // the re-exported data-path crates (datastore → quant → influence →

@@ -109,6 +109,47 @@ fn usage_texts_document_every_config_key() {
     }
 }
 
+/// Environment variables the runtime actually reads (grep `std::env::var`
+/// before growing this list). The docs may only reference these, and each
+/// must be documented where users look first.
+const KNOWN_ENV_VARS: &[&str] = &["QLESS_KERNEL", "QLESS_SCORE_THREADS"];
+
+#[test]
+fn documented_env_vars_exist_and_are_documented() {
+    // every `QLESS_*` token any doc mentions must be a real knob...
+    for (name, text) in DOCS {
+        for (lineno, line) in text.lines().enumerate() {
+            let mut rest = *line;
+            while let Some(pos) = rest.find("QLESS_") {
+                let tok: String = rest[pos..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_uppercase() || *c == '_' || c.is_ascii_digit())
+                    .collect();
+                assert!(
+                    KNOWN_ENV_VARS.contains(&tok.as_str()),
+                    "{name}:{}: documents `{tok}`, which the runtime does not read \
+                     (known: {KNOWN_ENV_VARS:?})",
+                    lineno + 1
+                );
+                rest = &rest[pos + tok.len()..];
+            }
+        }
+    }
+    // ...and every real knob must be documented in the user-facing docs
+    // (README or ARCHITECTURE), so a new env var cannot ship silent
+    let user_docs: String = DOCS
+        .iter()
+        .filter(|(n, _)| n.ends_with("README.md") || n.ends_with("ARCHITECTURE.md"))
+        .map(|(_, t)| *t)
+        .collect();
+    for var in KNOWN_ENV_VARS {
+        assert!(
+            user_docs.contains(var),
+            "env var {var} is not documented in README.md or rust/ARCHITECTURE.md"
+        );
+    }
+}
+
 #[test]
 fn relative_markdown_links_resolve() {
     let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));

@@ -1,0 +1,322 @@
+//! Kernel-dispatch equality suite (PR 9's contract): every kernel
+//! variant this machine supports — blocked scalar, AVX2, NEON — must be
+//! **bit-exact** against the pinned scalar reference on the 1-bit and
+//! integer-domain paths, across bitwidth × scheme × k (mid-byte tails and
+//! k > 4096 included), fused multi-query shapes, and arbitrary view
+//! splits. The f32-accumulated dense path keeps its ≤1e-5 bound.
+//!
+//! CI runs this file twice: once with `QLESS_KERNEL=scalar` forced (the
+//! reference must agree with itself and dispatch must honor the
+//! override), once under native dispatch — a broken SIMD path can never
+//! pass green by accident.
+//!
+//! Also here: the `int_dot_fits` i32-overflow boundary (exact bound and
+//! one past it, per bitwidth; the scan dispatch must fall back to the f32
+//! path rather than overflow) and the dispatch observability seams
+//! (per-variant scan-row counters, `kernel_dispatch` gauge).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use qless::datastore::CheckpointBlock;
+use qless::influence::native::{
+    int_dot_fits, scores_dense_rows, scores_int_rows, scores_rows, scores_rows_with, tile_rows,
+    ValFeatures,
+};
+use qless::prop_assert;
+use qless::quant::{Precision, Scheme};
+use qless::util::cpu::{self, Kernel};
+use qless::util::obs::{self, Registry};
+use qless::util::prop::{normal_features as feats, run_prop, seeded_datastore};
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "qless_kern_{tag}_{}_{:?}.qlds",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+/// Build a one-checkpoint store and return its loaded block.
+fn block(tag: &str, p: Precision, n: usize, k: usize, seed: u64) -> CheckpointBlock {
+    let path = tmpfile(tag);
+    let ds = seeded_datastore(&path, p, n, k, &[1.0], seed);
+    let b = ds.load_checkpoint(0).unwrap();
+    std::fs::remove_file(&path).ok();
+    b
+}
+
+fn assert_bitwise(reference: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(reference.len(), got.len(), "{ctx}: length");
+    for (i, (a, b)) in reference.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx} idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn prop_kernel_variants_bit_exact_across_bitwidth_scheme_k() {
+    // The tentpole property: scalar vs blocked vs SIMD, bit-for-bit, on
+    // every exact path. k list hits mid-byte packed tails at every
+    // bitwidth (k·bits % 8 ≠ 0) and the >4096 regime where a tile holds
+    // only the clamp-floor 4 rows.
+    let combos: [(u8, Scheme); 7] = [
+        (1, Scheme::Sign),
+        (2, Scheme::Absmax),
+        (2, Scheme::Absmean),
+        (4, Scheme::Absmax),
+        (4, Scheme::Absmean),
+        (8, Scheme::Absmax),
+        (8, Scheme::Absmean),
+    ];
+    run_prop("kernel-bit-exact", 12, |g| {
+        let n = 5 + g.usize_up_to(60);
+        let k = [64usize, 65, 97, 127, 513, 4099][g.rng.below(6)];
+        let q = 1 + g.rng.below(3);
+        let seed = g.rng.below(1 << 20) as u64;
+        for (bits, scheme) in combos {
+            let p = Precision::new(bits, scheme).unwrap();
+            let b = block(&format!("grid{bits}{scheme}"), p, n, k, seed);
+            let tasks: Vec<_> = (0..q).map(|t| feats(1 + t, k, seed + 100 + t as u64)).collect();
+            let refs: Vec<&_> = tasks.iter().collect();
+            let val = ValFeatures::try_prepare_tasks(&refs, p).unwrap();
+            let rows = b.rows();
+            let reference = scores_rows_with(&rows, &val, Kernel::Scalar);
+            prop_assert!(reference.len() == n * q, "shape {bits}-bit");
+            // dense reference sanity: the exact kernels track f32 ≤ 1e-5
+            let dense = scores_dense_rows(&rows, &val);
+            for (i, (a, d)) in reference.iter().zip(&dense).enumerate() {
+                prop_assert!(
+                    (a - d).abs() < 1e-5,
+                    "{bits}-bit {scheme} k={k} idx {i}: scalar {a} vs dense {d}"
+                );
+            }
+            for kernel in cpu::available() {
+                let got = scores_rows_with(&rows, &val, kernel);
+                for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{bits}-bit {scheme} k={k} n={n} q={q} kernel {} idx {i}: {a} vs {b}",
+                        kernel.label()
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_variants_bit_exact_at_k8192() {
+    // Paper-scale k: a 16 KiB 8-bit row pins the tile at the clamp floor
+    // (tile_rows = 4), so blocks, tails and SIMD main loops all engage.
+    assert_eq!(tile_rows(8192), 4);
+    for (bits, scheme) in [(1u8, Scheme::Sign), (8, Scheme::Absmax)] {
+        let p = Precision::new(bits, scheme).unwrap();
+        let b = block(&format!("k8192_{bits}"), p, 10, 8192, 7 + bits as u64);
+        let t0 = feats(3, 8192, 70);
+        let t1 = feats(1, 8192, 71);
+        let val = ValFeatures::try_prepare_tasks(&[&t0, &t1], p).unwrap();
+        let rows = b.rows();
+        let reference = scores_rows_with(&rows, &val, Kernel::Scalar);
+        for kernel in cpu::available() {
+            let got = scores_rows_with(&rows, &val, kernel);
+            assert_bitwise(&reference, &got, &format!("{bits}-bit k=8192 {}", kernel.label()));
+        }
+    }
+}
+
+#[test]
+fn fused_multiquery_equals_singles_for_every_kernel() {
+    // One fused Q=3 traversal == three single-task runs, per variant —
+    // blocking shares a tile across task columns but must not share
+    // accumulation.
+    let k = 130; // mid-byte tail at 1/2/4-bit
+    for bits in [1u8, 2, 4, 8] {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let b = block(&format!("fused{bits}"), p, 23, k, 80 + bits as u64);
+        let t0 = feats(2, k, 81);
+        let t1 = feats(4, k, 82);
+        let t2 = feats(1, k, 83);
+        let multi = ValFeatures::try_prepare_tasks(&[&t0, &t1, &t2], p).unwrap();
+        let rows = b.rows();
+        for kernel in cpu::available() {
+            let fused = scores_rows_with(&rows, &multi, kernel);
+            for (t, feat) in [&t0, &t1, &t2].into_iter().enumerate() {
+                let single = ValFeatures::try_prepare_tasks(&[feat], p).unwrap();
+                let alone = scores_rows_with(&rows, &single, kernel);
+                for i in 0..rows.n() {
+                    assert_eq!(
+                        alone[i].to_bits(),
+                        fused[i * 3 + t].to_bits(),
+                        "bits {bits} kernel {} task {t} row {i}",
+                        kernel.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn view_splits_are_tile_invariant_for_every_kernel() {
+    // Scoring a clipped view must be bit-identical to the same rows inside
+    // the whole view, at splits that do NOT align with tile boundaries —
+    // the cascade's clipped rerank feeds and the scatter workers' row
+    // ranges depend on this.
+    for bits in [1u8, 4, 8] {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let b = block(&format!("split{bits}"), p, 41, 257, 90 + bits as u64);
+        let val = ValFeatures::try_prepare_tasks(&[&feats(3, 257, 91)], p).unwrap();
+        let full = b.rows();
+        for kernel in cpu::available() {
+            let whole = scores_rows_with(&full, &val, kernel);
+            for (a, z) in [(0usize, 7usize), (7, 41), (13, 14), (3, 38)] {
+                let part = scores_rows_with(&full.slice(a, z), &val, kernel);
+                assert_bitwise(
+                    &whole[a..z],
+                    &part,
+                    &format!("bits {bits} kernel {} rows [{a},{z})", kernel.label()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_blocked_path_matches_scalar() {
+    // Enough rows × work to cross the pool's serial threshold
+    // (n ≥ 256, n·nv·k ≥ 8M): the tile-granular parallel path must agree
+    // with the serial scalar reference bit-for-bit.
+    let (n, k) = (2048usize, 512usize);
+    let p = Precision::new(8, Scheme::Absmax).unwrap();
+    let b = block("par", p, n, k, 101);
+    let t0 = feats(8, k, 102);
+    let val = ValFeatures::try_prepare_tasks(&[&t0], p).unwrap();
+    let rows = b.rows();
+    let reference = scores_rows_with(&rows, &val, Kernel::Scalar);
+    for kernel in cpu::available() {
+        let got = scores_rows_with(&rows, &val, kernel);
+        assert_bitwise(&reference, &got, &format!("parallel kernel {}", kernel.label()));
+    }
+}
+
+#[test]
+fn int_dot_fits_exact_overflow_boundaries() {
+    // The bound is ⌊i32::MAX / (2α²)⌋ per bitwidth — exactly at fits,
+    // one past does not.
+    for (bits, alpha) in [(8u8, 127i64), (4, 7), (2, 1)] {
+        let bound = (i32::MAX as i64 / (2 * alpha * alpha)) as usize;
+        assert!(int_dot_fits(bits, bound), "{bits}-bit at bound {bound}");
+        assert!(!int_dot_fits(bits, bound + 1), "{bits}-bit one past {bound}");
+    }
+    // the numeric bounds themselves, pinned so a refactor can't drift them
+    assert!(int_dot_fits(8, 66_572) && !int_dot_fits(8, 66_573));
+    assert!(int_dot_fits(4, 21_913_098) && !int_dot_fits(4, 21_913_099));
+    assert!(int_dot_fits(2, 1_073_741_823) && !int_dot_fits(2, 1_073_741_824));
+}
+
+#[test]
+fn f32_fallback_engages_one_past_the_8bit_bound() {
+    let p = Precision::new(8, Scheme::Absmax).unwrap();
+    let n = 3usize;
+
+    // exactly at the bound: the integer engine is the dispatch target and
+    // every variant still agrees with the scalar reference bitwise
+    let k_at = 66_572usize;
+    let b = block("bound_at", p, n, k_at, 110);
+    let val = ValFeatures::try_prepare_tasks(&[&feats(1, k_at, 111)], p).unwrap();
+    let rows = b.rows();
+    let via_dispatch = scores_rows(&rows, &val);
+    let via_int = scores_int_rows(&rows, &val);
+    let active = cpu::active();
+    assert_bitwise(
+        &scores_rows_with(&rows, &val, active),
+        &via_dispatch,
+        "dispatch == active variant at the bound",
+    );
+    for kernel in cpu::available() {
+        assert_bitwise(
+            &via_int,
+            &scores_rows_with(&rows, &val, kernel),
+            &format!("at-bound kernel {}", kernel.label()),
+        );
+    }
+
+    // one past: the integer engine must refuse (overflow hazard) and the
+    // dispatch must route every variant to the identical f32 dense path
+    let k_past = 66_573usize;
+    let b = block("bound_past", p, n, k_past, 112);
+    let val = ValFeatures::try_prepare_tasks(&[&feats(1, k_past, 113)], p).unwrap();
+    let rows = b.rows();
+    let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        scores_int_rows(&rows, &val)
+    }));
+    assert!(panicked.is_err(), "scores_int_rows must reject k past the i32 bound");
+    let dense = scores_dense_rows(&rows, &val);
+    assert_bitwise(&dense, &scores_rows(&rows, &val), "dispatch falls back to dense");
+    for kernel in cpu::available() {
+        assert_bitwise(
+            &dense,
+            &scores_rows_with(&rows, &val, kernel),
+            &format!("past-bound kernel {} routes to dense", kernel.label()),
+        );
+    }
+}
+
+#[test]
+fn active_kernel_is_supported_and_honors_env_override() {
+    let active = cpu::active();
+    assert!(active.supported(), "active() may only pick a runnable variant");
+    match std::env::var("QLESS_KERNEL").ok().as_deref() {
+        // scalar/blocked are supported everywhere, so a forced value must
+        // stick — this is the CI matrix's scalar-forced leg
+        Some("scalar") => assert_eq!(active, Kernel::Scalar),
+        Some("blocked") => assert_eq!(active, Kernel::Blocked),
+        // native dispatch (or an unsupported force) never silently picks
+        // the pinned reference
+        None | Some("") | Some("auto") => assert_ne!(active, Kernel::Scalar),
+        Some(other) => {
+            if let Some(k) = Kernel::from_label(other) {
+                if k.supported() {
+                    assert_eq!(active, k);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatch_publishes_rows_counter_and_gauge() {
+    // per-variant per-bitwidth rows flow into the calling thread's
+    // registry exactly once per scored row...
+    let p = Precision::new(8, Scheme::Absmax).unwrap();
+    let (n, k) = (37usize, 96usize);
+    let b = block("obs", p, n, k, 120);
+    let val = ValFeatures::try_prepare_tasks(&[&feats(2, k, 121)], p).unwrap();
+    let reg = Arc::new(Registry::new());
+    obs::with_registry(reg.clone(), || {
+        scores_rows(&b.rows(), &val);
+        scores_rows(&b.rows(), &val);
+    });
+    let name = format!(
+        "kernel_scan_rows_total{{variant=\"{}\",bits=\"8\"}}",
+        cpu::active().label()
+    );
+    let snap = reg.snapshot();
+    assert_eq!(
+        snap.counters.get(&name).copied().unwrap_or(0),
+        2 * n as u64,
+        "counter {name} must tick per scored row: {:?}",
+        snap.counters
+    );
+    // ...and the process-global registry carries the dispatch-identity
+    // gauge (set once, on first dispatch)
+    let gname = format!("kernel_dispatch{{variant=\"{}\"}}", cpu::active().label());
+    assert_eq!(
+        obs::global().snapshot().gauges.get(&gname).copied().unwrap_or(0),
+        1,
+        "gauge {gname} must mark the active variant"
+    );
+}
