@@ -295,6 +295,136 @@ fn main() {
         std::fs::remove_file(path8).ok();
     }
 
+    // IVF index sweep (PR 10): nclusters × nprobe over a blobbed store —
+    // rows/s, recall@k and rows-read reduction vs the exhaustive scan,
+    // written to reports/bench_index.json (the EXPERIMENTS.md §Perf
+    // iteration 13 numbers). The fixture is clustered on purpose: the
+    // index can only route around rows whose sign codes actually separate,
+    // and the bench should show the recall/row-traffic trade the
+    // tests/index.rs paper-scale case pins, not iid noise.
+    {
+        use qless::datastore::{build_index, index_path, IndexBuildOpts, LiveStore};
+        use qless::influence::{index_scan_live_tasks, score_live_tasks, IndexOpts};
+        use qless::select::top_k_scored;
+        use std::collections::BTreeSet;
+
+        let (blobs, q, k_sel) = (16usize, 4usize, 32usize);
+        let p = Precision::new(4, Scheme::Absmax).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("qless_bench_idx_{}.qlds", std::process::id()));
+        let mut rng = Rng::new(71);
+        let centers: Vec<Vec<f32>> = (0..blobs)
+            .map(|_| (0..k).map(|_| 3.0 * rng.normal() as f32).collect())
+            .collect();
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        let per = n / blobs;
+        for i in 0..n {
+            let c = &centers[(i / per).min(blobs - 1)];
+            let row: Vec<f32> =
+                c.iter().map(|&v| v + rng.normal() as f32).collect();
+            w.append_features(&row).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        let live = LiveStore::open(&path).unwrap();
+        let tasks_raw: Vec<Vec<FeatureMatrix>> = (0..q)
+            .map(|t| {
+                let c = &centers[(t * 5) % blobs];
+                let data: Vec<f32> = (0..8 * k)
+                    .map(|j| c[j % k] + 0.1 * rng.normal() as f32)
+                    .collect();
+                vec![FeatureMatrix { n: 8, k, data }]
+            })
+            .collect();
+        let refs: Vec<&[FeatureMatrix]> = tasks_raw.iter().map(|t| t.as_slice()).collect();
+        let opts = ScoreOpts { mem_budget_mb: 1, ..Default::default() };
+        let (scores, exh) = score_live_tasks(&live, &refs, opts).unwrap();
+        let want: Vec<BTreeSet<usize>> = scores
+            .iter()
+            .map(|s| top_k_scored(s, k_sel).into_iter().map(|(i, _)| i).collect())
+            .collect();
+        println!(
+            "-- index sweep: {n}×{k} 4-bit blobbed store ({blobs} blobs), Q={q}, \
+             k_sel={k_sel}, exhaustive {} rows read --",
+            exh.rows_read
+        );
+        let mut sections: Vec<Json> = Vec::new();
+        for nclusters in [16usize, 64] {
+            let t_build = std::time::Instant::now();
+            let idx =
+                build_index(&live, &IndexBuildOpts { n_clusters: nclusters, max_iters: 0 })
+                    .unwrap();
+            let build_s = t_build.elapsed().as_secs_f64();
+            println!(
+                "index nclusters={nclusters}: built {} clusters in {:.1}ms",
+                idx.n_clusters(),
+                build_s * 1e3
+            );
+            let mut probes: Vec<usize> = [1usize, 2, 4, 8, nclusters]
+                .into_iter()
+                .filter(|&p| p <= nclusters)
+                .collect();
+            probes.dedup();
+            for nprobe in probes {
+                let iopts = IndexOpts { k: k_sel, nprobe, scan: opts };
+                let out = index_scan_live_tasks(&live, &idx, &refs, &iopts).unwrap();
+                let rows_read = out.scan_pass.rows_read;
+                let recall = want
+                    .iter()
+                    .zip(&out.top)
+                    .map(|(w, got)| got.iter().filter(|(i, _)| w.contains(i)).count() as f64)
+                    .sum::<f64>()
+                    / (q * k_sel) as f64;
+                let r = bench(
+                    &format!("index_scan_4bit (C={nclusters}, nprobe={nprobe})"),
+                    rows_read.max(1) as f64,
+                    "row",
+                    || {
+                        std::hint::black_box(
+                            index_scan_live_tasks(&live, &idx, &refs, &iopts).unwrap(),
+                        );
+                    },
+                );
+                println!(
+                    "{}  [recall@{k_sel} {recall:.3}, {} of {} rows read = {:.2}x less]",
+                    r.report_line(),
+                    rows_read,
+                    exh.rows_read,
+                    exh.rows_read as f64 / rows_read.max(1) as f64,
+                );
+                let mut j = Json::obj();
+                j.set("section", "index_sweep")
+                    .set("nclusters", nclusters)
+                    .set("nprobe", nprobe)
+                    .set("build_s", build_s)
+                    .set("rows_per_s", r.throughput())
+                    .set("recall_at_k", recall)
+                    .set("rows_read", rows_read as usize)
+                    .set("scanned_rows", out.scanned_rows)
+                    .set(
+                        "reduction_vs_exhaustive",
+                        exh.rows_read as f64 / rows_read.max(1) as f64,
+                    );
+                sections.push(j);
+            }
+        }
+        let mut out = Json::obj();
+        out.set("bench", "bench_index")
+            .set("n_rows", n)
+            .set("k", k)
+            .set("blobs", blobs)
+            .set("q_tasks", q)
+            .set("k_sel", k_sel)
+            .set("exhaustive_rows_read", exh.rows_read as usize)
+            .set("sections", sections);
+        std::fs::create_dir_all("reports").unwrap();
+        std::fs::write("reports/bench_index.json", out.encode_pretty()).unwrap();
+        println!("wrote reports/bench_index.json");
+        std::fs::remove_file(index_path(&path)).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
     // the k=8192 regression shape (paper-scale projection dim): the seed
     // popcount kernel panicked here; now it must simply be fast
     {

@@ -9,6 +9,6 @@
 pub mod topk;
 
 pub use topk::{
-    merge_top_k, select_top_frac, top_k_indices, top_k_scored, top_k_scored_among,
-    top_k_scored_since,
+    merge_top_k, select_top_frac, sorted_union, top_k_indices, top_k_scored,
+    top_k_scored_among, top_k_scored_since,
 };

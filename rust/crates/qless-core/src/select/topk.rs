@@ -99,6 +99,25 @@ pub fn merge_top_k(parts: &[Vec<(usize, f32)>], k: usize) -> Vec<(usize, f32)> {
     all
 }
 
+/// Sorted, deduplicated union of per-task index lists — the candidate
+/// coalescing step shared by the precision cascade and the IVF index scan:
+/// each task keeps its own candidate set for ranking, but I/O runs once
+/// over the union. Input lists need not be sorted.
+///
+/// ```
+/// use qless_core::select::sorted_union;
+///
+/// let per_task: Vec<Vec<usize>> = vec![vec![4, 1, 7], vec![1, 9], vec![]];
+/// assert_eq!(sorted_union(&per_task), vec![1, 4, 7, 9]);
+/// assert!(sorted_union(&[]).is_empty());
+/// ```
+pub fn sorted_union(lists: &[Vec<usize>]) -> Vec<usize> {
+    let mut union: Vec<usize> = lists.iter().flatten().copied().collect();
+    union.sort_unstable();
+    union.dedup();
+    union
+}
+
 /// Top-k over an explicit **candidate set** of `(index, score)` pairs —
 /// the precision cascade's final selection: stage 2 re-scores only the
 /// probe stage's candidates, so the ranking input is a sparse subset of

@@ -92,6 +92,35 @@ pub fn agree_bits(a: u64, b: u64) -> u32 {
     (!(a ^ b)).count_ones()
 }
 
+/// Add one packed sign row into per-bit-position counters — the
+/// accumulation half of the k-majority centroid update (the IVF index's
+/// Lloyd step). `counts[i]` gains 1 iff bit `i` of `row` is set
+/// (little-endian bit order within bytes, matching `quant::pack`); only
+/// the first `counts.len()` positions are read, so a row's zero padding
+/// bits never need masking.
+#[inline]
+pub fn accumulate_bits(row: &[u8], counts: &mut [u32]) {
+    debug_assert!(counts.len() <= row.len() * 8, "counters exceed the packed row");
+    for (i, c) in counts.iter_mut().enumerate() {
+        *c += u32::from((row[i / 8] >> (i % 8)) & 1);
+    }
+}
+
+/// Collapse per-bit-position counters into a packed majority bitmap: bit
+/// `i` of the result is set iff a **strict** majority of the `n_rows`
+/// accumulated rows had it set (`2·counts[i] > n_rows` — ties resolve to
+/// 0, deterministically). Padding bits past `counts.len()` stay 0, so the
+/// result is a valid zero-padded packed sign row.
+pub fn majority_bitmap(counts: &[u32], n_rows: u32) -> Vec<u8> {
+    let mut out = vec![0u8; counts.len().div_ceil(8)];
+    for (i, &c) in counts.iter().enumerate() {
+        if 2 * c as u64 > n_rows as u64 {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +179,36 @@ mod tests {
         assert_eq!(agree_bits(0, 0), 64);
         assert_eq!(agree_bits(u64::MAX, 0), 0);
         assert_eq!(agree_bits(0b1010, 0b1000), 63);
+    }
+
+    #[test]
+    fn majority_vote_roundtrip() {
+        // three rows over k=10: bit set in the majority iff ≥ 2 of 3 rows set it
+        let rows: [&[u8]; 3] = [&[0b1100_1111, 0b10], &[0b0000_1111, 0b11], &[0b1100_0000, 0b00]];
+        let mut counts = vec![0u32; 10];
+        for r in rows {
+            accumulate_bits(r, &mut counts);
+        }
+        assert_eq!(counts, vec![2, 2, 2, 2, 1, 1, 2, 2, 2, 1]);
+        let maj = majority_bitmap(&counts, 3);
+        assert_eq!(maj, vec![0b1100_1111, 0b01]);
+        // padding bits (10..16) stay 0
+        assert_eq!(maj[1] >> 2, 0);
+    }
+
+    #[test]
+    fn majority_ties_resolve_to_zero() {
+        let mut counts = vec![0u32; 4];
+        accumulate_bits(&[0b0011], &mut counts);
+        accumulate_bits(&[0b0101], &mut counts);
+        // bits 0 (2/2) set, bits 1,2 (1/2 — tie) clear, bit 3 (0/2) clear
+        assert_eq!(majority_bitmap(&counts, 2), vec![0b0001]);
+    }
+
+    #[test]
+    fn accumulate_ignores_bits_past_counters() {
+        let mut counts = vec![0u32; 3];
+        accumulate_bits(&[0xFF], &mut counts); // bits 3..8 never read
+        assert_eq!(counts, vec![1, 1, 1]);
     }
 }

@@ -1,0 +1,797 @@
+//! Hamming-clustered IVF index over the quantized codes — sub-linear
+//! queries for the influence scan.
+//!
+//! QLESS is similarity *search*: every query ranks train rows by quantized
+//! inner product, yet the exhaustive scan pays O(n) rows per task. This
+//! module clusters the row space by **k-majority Hamming clustering** over
+//! the rows' 1-bit sign bitmaps (Lloyd-style iterations whose distance is
+//! XOR+popcount through the PR 9 SIMD kernels, and whose centroid update
+//! is a per-bit majority vote), then persists the grouping as a versioned
+//! sidecar (`<stem>.qidx`, spec'd in `FORMAT.md` §Index sidecar) next to
+//! the store it indexes. A query probes every centroid (C ≪ n rows),
+//! selects the top-P clusters per task, and scans only those clusters'
+//! rows via the cascade's contiguous-run seek machinery
+//! (`influence::index`) — O(n·P/C) rows instead of O(n).
+//!
+//! Design invariants the property harness (`tests/index.rs`) locks in:
+//!
+//! * **Rows are never moved.** The sidecar stores a permutation of row
+//!   ids grouped by cluster (ascending within each cluster); the `.qlds`
+//!   bytes are untouched, so every existing scan path — and the
+//!   exhaustive ground truth — keeps working verbatim.
+//! * **Exact at full coverage.** Clusters partition the row space, so
+//!   probing all of them makes the candidate set every row and the index
+//!   scan byte-identical to the exhaustive scan (DESIGN.md §12).
+//! * **Corruption is detected, never served.** [`QuantIndex::open_for`]
+//!   validates magic, version, geometry against the store header, offset
+//!   monotonicity and the row-id permutation; any failure warns, bumps
+//!   `index_open_failures_total`, and returns `None` — callers fall back
+//!   to the exhaustive scan. `repair_run_dir` deliberately leaves the
+//!   sidecar alone (it only matches `.qlds`/`.qlds.tmp` segment names);
+//!   a stale or damaged sidecar is `qless reindex`'s job.
+//! * **Ingest stays live.** New generations are *not* re-clustered:
+//!   [`QuantIndex::refresh`] assigns rows past the indexed prefix to
+//!   their nearest existing centroid in memory, and the count of such
+//!   rows is the staleness the serving layer surfaces in `stats`.
+//!
+//! Padding bits: every packed sign row and every centroid zero-pads the
+//! byte tail, so the XNOR agreement over whole bytes counts each padding
+//! position as an agreement — a per-store constant added to every
+//! (row, centroid) pair, hence rank-invariant for nearest-centroid
+//! assignment (DESIGN.md §12).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::datastore::LiveStore;
+use crate::influence::simd;
+use crate::quant::pack::packed_bytes;
+use crate::util::bits::{accumulate_bits, majority_bitmap};
+use crate::util::cpu::{self, Kernel};
+use crate::util::obs;
+use crate::{warn_, DEFAULT_MEM_BUDGET_MB};
+
+/// Sidecar magic, first four bytes of every `.qidx` file.
+pub const QIDX_MAGIC: [u8; 4] = *b"QIDX";
+/// Sidecar format version accepted by [`QuantIndex::decode`].
+pub const QIDX_VERSION: u32 = 1;
+/// Encoded sidecar header size (fixed-width little-endian fields).
+pub const QIDX_HEADER_BYTES: usize = 4 + 4 + 8 + 4 + 4 + 8 + 8 + 4 + 4;
+
+/// Default Lloyd iteration cap — assignments converge or go stable well
+/// before this on clustered data; the cap bounds build time on noise.
+pub const DEFAULT_INDEX_ITERS: usize = 8;
+
+/// Cluster count heuristic when `--nclusters` is 0/absent: √n clamped to
+/// `[1, 4096]`, the classic IVF balance point (probe cost ≈ C, scan cost
+/// ≈ n·P/C; √n equalizes them at P = 1).
+pub fn auto_nclusters(n_rows: usize) -> usize {
+    ((n_rows as f64).sqrt().ceil() as usize).clamp(1, 4096)
+}
+
+/// Default probe width when `--nprobe` is 0/absent: an eighth of the
+/// clusters (≥ 1), targeting ~8× fewer rows scanned at balanced sizes
+/// while keeping recall@k high on clustered data (`tests/index.rs` pins
+/// both at paper scale).
+pub fn default_nprobe(n_clusters: usize) -> usize {
+    (n_clusters / 8).max(1)
+}
+
+/// Sidecar path for a store path: `<stem>.qidx` next to the store (and
+/// the manifest). `datastore_1b_sign.qlds` → `datastore_1b_sign.qidx`.
+pub fn index_path(store_path: &Path) -> PathBuf {
+    store_path.with_extension("qidx")
+}
+
+/// Build knobs for [`build_index`] / `qless reindex`.
+#[derive(Debug, Clone, Copy)]
+pub struct IndexBuildOpts {
+    /// Cluster count; 0 derives [`auto_nclusters`]`(n_rows)`.
+    pub n_clusters: usize,
+    /// Lloyd iteration cap; 0 derives [`DEFAULT_INDEX_ITERS`].
+    pub max_iters: usize,
+}
+
+impl Default for IndexBuildOpts {
+    fn default() -> Self {
+        IndexBuildOpts { n_clusters: 0, max_iters: 0 }
+    }
+}
+
+/// The in-memory IVF index: per-checkpoint packed sign centroids plus the
+/// row-id permutation grouped into per-cluster ranges, exactly as encoded
+/// in the `.qidx` sidecar — plus the in-memory nearest-centroid
+/// assignments of rows ingested after the build ([`QuantIndex::refresh`]).
+#[derive(Debug, Clone)]
+pub struct QuantIndex {
+    k: usize,
+    n_checkpoints: usize,
+    n_clusters: usize,
+    n_rows: u64,
+    generation: u64,
+    row_stride: usize,
+    /// Packed sign centroids, `[ckpt][cluster][row_stride]`.
+    centroids: Vec<u8>,
+    /// Per-cluster ranges into `row_ids`: cluster `c` owns
+    /// `row_ids[offsets[c] .. offsets[c+1]]`. `n_clusters + 1` entries.
+    offsets: Vec<u64>,
+    /// The row-id permutation, grouped by cluster, strictly ascending
+    /// within each cluster.
+    row_ids: Vec<u64>,
+    /// Rows past the indexed prefix, assigned in memory per cluster
+    /// (ascending; every id ≥ `n_rows`). Never persisted — `reindex`
+    /// folds them in.
+    stale: Vec<Vec<u64>>,
+}
+
+impl QuantIndex {
+    /// Projection dimension the centroids were built at.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Checkpoint count (one centroid bitmap per cluster per checkpoint).
+    pub fn n_checkpoints(&self) -> usize {
+        self.n_checkpoints
+    }
+
+    /// Number of clusters.
+    pub fn n_clusters(&self) -> usize {
+        self.n_clusters
+    }
+
+    /// Rows covered by the persisted grouping (the indexed prefix).
+    pub fn n_rows(&self) -> u64 {
+        self.n_rows
+    }
+
+    /// Manifest generation the index was built at.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Packed bytes per centroid bitmap (`⌈k/8⌉`).
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Rows assigned in memory since the build — the staleness counter
+    /// `stats` surfaces; `qless reindex` resets it to 0.
+    pub fn stale_rows(&self) -> u64 {
+        self.stale.iter().map(|s| s.len() as u64).sum()
+    }
+
+    /// Total rows the index can answer for (indexed prefix + stale tail).
+    pub fn covered_rows(&self) -> u64 {
+        self.n_rows + self.stale_rows()
+    }
+
+    /// All centroid bitmaps of checkpoint `ci`, concatenated — the data
+    /// plane of the probe's virtual 1-bit "centroid store".
+    pub fn centroids_ckpt(&self, ci: usize) -> &[u8] {
+        let per_ckpt = self.n_clusters * self.row_stride;
+        &self.centroids[ci * per_ckpt..(ci + 1) * per_ckpt]
+    }
+
+    /// One centroid's packed sign bitmap.
+    pub fn centroid(&self, ci: usize, cluster: usize) -> &[u8] {
+        let base = (ci * self.n_clusters + cluster) * self.row_stride;
+        &self.centroids[base..base + self.row_stride]
+    }
+
+    /// Cluster `c`'s rows: the persisted ids followed by the in-memory
+    /// stale tail — ascending overall, because every stale id is ≥
+    /// `n_rows` and both halves are sorted.
+    pub fn cluster_rows(&self, c: usize) -> impl Iterator<Item = u64> + '_ {
+        let lo = self.offsets[c] as usize;
+        let hi = self.offsets[c + 1] as usize;
+        self.row_ids[lo..hi].iter().copied().chain(self.stale[c].iter().copied())
+    }
+
+    /// Persisted rows in cluster `c` (excludes the stale tail).
+    pub fn cluster_len(&self, c: usize) -> usize {
+        (self.offsets[c + 1] - self.offsets[c]) as usize
+    }
+
+    /// Serialize to the on-disk sidecar layout (see `FORMAT.md` §Index
+    /// sidecar). The stale tail is **not** encoded — it's recomputable
+    /// from the live store.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.file_bytes());
+        out.extend_from_slice(&QIDX_MAGIC);
+        out.extend_from_slice(&QIDX_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.k as u64).to_le_bytes());
+        out.extend_from_slice(&(self.n_checkpoints as u32).to_le_bytes());
+        out.extend_from_slice(&(self.n_clusters as u32).to_le_bytes());
+        out.extend_from_slice(&self.n_rows.to_le_bytes());
+        out.extend_from_slice(&self.generation.to_le_bytes());
+        out.extend_from_slice(&(self.row_stride as u32).to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]);
+        debug_assert_eq!(out.len(), QIDX_HEADER_BYTES);
+        out.extend_from_slice(&self.centroids);
+        for &o in &self.offsets {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        for &r in &self.row_ids {
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        debug_assert_eq!(out.len(), self.file_bytes());
+        out
+    }
+
+    /// Exact sidecar size this index implies — decode rejects any other
+    /// length, so truncated or padded files can't half-parse.
+    pub fn file_bytes(&self) -> usize {
+        QIDX_HEADER_BYTES
+            + self.n_checkpoints * self.n_clusters * self.row_stride
+            + (self.n_clusters + 1) * 8
+            + self.n_rows as usize * 8
+    }
+
+    /// Parse and structurally validate an encoded sidecar: magic, version,
+    /// stride consistency with `k`, exact file length, offset
+    /// monotonicity ending at `n_rows`, and the row-id permutation
+    /// property (every id in `0..n_rows` exactly once, strictly ascending
+    /// within each cluster). Geometry against the *store* is a separate
+    /// step ([`QuantIndex::validate_against`]) — decode can't know which
+    /// store the caller means.
+    pub fn decode(b: &[u8]) -> Result<QuantIndex> {
+        ensure!(b.len() >= QIDX_HEADER_BYTES, "index sidecar truncated ({} bytes)", b.len());
+        ensure!(b[0..4] == QIDX_MAGIC, "bad index sidecar magic {:?}", &b[0..4]);
+        let version = u32::from_le_bytes(b[4..8].try_into()?);
+        ensure!(version == QIDX_VERSION, "index sidecar version {version} != {QIDX_VERSION}");
+        let k = u64::from_le_bytes(b[8..16].try_into()?) as usize;
+        let n_checkpoints = u32::from_le_bytes(b[16..20].try_into()?) as usize;
+        let n_clusters = u32::from_le_bytes(b[20..24].try_into()?) as usize;
+        let n_rows = u64::from_le_bytes(b[24..32].try_into()?);
+        let generation = u64::from_le_bytes(b[32..40].try_into()?);
+        let row_stride = u32::from_le_bytes(b[40..44].try_into()?) as usize;
+        ensure!(k >= 1 && n_checkpoints >= 1 && n_clusters >= 1, "degenerate index geometry");
+        ensure!(
+            row_stride == packed_bytes(k, 1),
+            "index row_stride {row_stride} inconsistent with k {k} (expect {})",
+            packed_bytes(k, 1)
+        );
+        let mut idx = QuantIndex {
+            k,
+            n_checkpoints,
+            n_clusters,
+            n_rows,
+            generation,
+            row_stride,
+            centroids: Vec::new(),
+            offsets: Vec::new(),
+            row_ids: Vec::new(),
+            stale: vec![Vec::new(); n_clusters],
+        };
+        ensure!(
+            b.len() == idx.file_bytes(),
+            "index sidecar is {} bytes, header implies {}",
+            b.len(),
+            idx.file_bytes()
+        );
+        let mut at = QIDX_HEADER_BYTES;
+        let cb = n_checkpoints * n_clusters * row_stride;
+        idx.centroids = b[at..at + cb].to_vec();
+        at += cb;
+        idx.offsets = (0..=n_clusters)
+            .map(|i| u64::from_le_bytes(b[at + i * 8..at + i * 8 + 8].try_into().unwrap()))
+            .collect();
+        at += (n_clusters + 1) * 8;
+        idx.row_ids =
+            (0..n_rows as usize)
+                .map(|i| u64::from_le_bytes(b[at + i * 8..at + i * 8 + 8].try_into().unwrap()))
+                .collect();
+        ensure!(idx.offsets[0] == 0, "index offsets must start at 0");
+        for w in idx.offsets.windows(2) {
+            ensure!(w[0] <= w[1], "index offsets must be monotone non-decreasing");
+        }
+        ensure!(
+            *idx.offsets.last().unwrap() == n_rows,
+            "index offsets end at {} but the index covers {n_rows} rows",
+            idx.offsets.last().unwrap()
+        );
+        let mut seen = vec![false; n_rows as usize];
+        for c in 0..n_clusters {
+            let lo = idx.offsets[c] as usize;
+            let hi = idx.offsets[c + 1] as usize;
+            for (j, &r) in idx.row_ids[lo..hi].iter().enumerate() {
+                ensure!(r < n_rows, "index row id {r} out of range (covers {n_rows} rows)");
+                ensure!(!seen[r as usize], "index row id {r} appears twice");
+                seen[r as usize] = true;
+                ensure!(
+                    j == 0 || idx.row_ids[lo + j - 1] < r,
+                    "cluster {c} row ids not strictly ascending"
+                );
+            }
+        }
+        // offsets summing to n_rows + no duplicates ⇒ every row id covered
+        Ok(idx)
+    }
+
+    /// Validate the index against the store it claims to cover: same
+    /// projection dim and checkpoint count, indexed prefix within the
+    /// live row space, and a build generation the manifest has actually
+    /// reached (a sidecar from the *future* means the run directory was
+    /// rolled back under it — e.g. by `repair_run_dir` — so its grouping
+    /// may reference rows that no longer exist).
+    pub fn validate_against(&self, live: &LiveStore) -> Result<()> {
+        let h = live.header();
+        ensure!(
+            self.k as u64 == h.k,
+            "index k {} != store k {}",
+            self.k,
+            h.k
+        );
+        ensure!(
+            self.n_checkpoints as u32 == h.n_checkpoints,
+            "index has {} checkpoints, store has {}",
+            self.n_checkpoints,
+            h.n_checkpoints
+        );
+        ensure!(
+            self.n_rows <= live.n_rows() as u64,
+            "index covers {} rows but the store only has {}",
+            self.n_rows,
+            live.n_rows()
+        );
+        ensure!(
+            self.generation <= live.generation(),
+            "index built at generation {} but the store is at {}",
+            self.generation,
+            live.generation()
+        );
+        Ok(())
+    }
+
+    /// Write the sidecar atomically: encode to `<path>.tmp`, fsync,
+    /// rename into place — a crash mid-write leaves either the old
+    /// sidecar or an orphan `.tmp`, never a torn `.qidx`.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        use std::io::Write as _;
+        let tmp = path.with_extension("qidx.tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&self.encode())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Strict open: read `path`, decode, validate against `live`, then
+    /// [`QuantIndex::refresh`] the stale tail. Errors are for callers
+    /// that *demand* an index (tests, `reindex` verification); the
+    /// serving path wants [`QuantIndex::open_for`].
+    pub fn open(path: &Path, live: &LiveStore) -> Result<QuantIndex> {
+        let bytes = std::fs::read(path)?;
+        let mut idx = Self::decode(&bytes)?;
+        idx.validate_against(live)?;
+        idx.refresh(live)?;
+        Ok(idx)
+    }
+
+    /// The serving path's open: resolve `<stem>.qidx` next to
+    /// `store_path`; a missing sidecar is simply `None` (no index built),
+    /// while a present-but-invalid one **warns**, bumps the
+    /// `index_open_failures_total` counter, and returns `None` — the
+    /// caller falls back to the exhaustive scan, never serving a
+    /// corrupted grouping.
+    pub fn open_for(store_path: &Path, live: &LiveStore) -> Option<QuantIndex> {
+        let path = index_path(store_path);
+        if !path.exists() {
+            return None;
+        }
+        match Self::open(&path, live) {
+            Ok(idx) => Some(idx),
+            Err(e) => {
+                warn_!(
+                    "index sidecar {} rejected ({e:#}); falling back to exhaustive scans — \
+                     run `qless reindex` to rebuild",
+                    path.display()
+                );
+                obs::counter_add("index_open_failures_total", 1);
+                None
+            }
+        }
+    }
+
+    /// Assign rows the persisted grouping doesn't cover (live ingest past
+    /// the indexed prefix) to their nearest existing centroid, in memory.
+    /// No global re-cluster — centroids are frozen at build time; the
+    /// staleness counter tells operators when a `qless reindex` is due.
+    /// Idempotent: already-assigned stale rows are skipped.
+    pub fn refresh(&mut self, live: &LiveStore) -> Result<()> {
+        let covered = self.covered_rows() as usize;
+        let total = live.n_rows();
+        if total <= covered {
+            return Ok(());
+        }
+        let codes = extract_sign_codes(live, covered, total)?;
+        let kernel = cpu::active();
+        for r in 0..total - covered {
+            let best = nearest_centroid(self, &codes, r, kernel);
+            self.stale[best].push((covered + r) as u64);
+        }
+        Ok(())
+    }
+}
+
+/// One row's packed sign bitmap from `codes` (per-checkpoint planes laid
+/// out `[ckpt][row][stride]`).
+fn code_row<'a>(codes: &'a [Vec<u8>], ci: usize, row: usize, stride: usize) -> &'a [u8] {
+    &codes[ci][row * stride..(row + 1) * stride]
+}
+
+/// Nearest centroid for `codes` row `r` under summed per-checkpoint XNOR
+/// agreement (max agreement = min Hamming distance; ties break to the
+/// lowest cluster id). Padding bits agree on every pair — a constant, so
+/// rank-invariant.
+fn nearest_centroid(idx: &QuantIndex, codes: &[Vec<u8>], r: usize, kernel: Kernel) -> usize {
+    let mut best = 0usize;
+    let mut best_agree = 0u64;
+    for c in 0..idx.n_clusters {
+        let mut agree = 0u64;
+        for ci in 0..idx.n_checkpoints {
+            agree += simd::xnor_agree(
+                kernel,
+                code_row(codes, ci, r, idx.row_stride),
+                idx.centroid(ci, c),
+            ) as u64;
+        }
+        if c == 0 || agree > best_agree {
+            best = c;
+            best_agree = agree;
+        }
+    }
+    best
+}
+
+/// Extract packed sign bitmaps for global rows `[lo, hi)` of a live
+/// store, one plane per checkpoint (`[ckpt][row][stride]`). 1-bit stores
+/// contribute their packed bytes directly (they *are* sign bitmaps, zero
+/// padded by `quant::pack`); other precisions take the sign of each
+/// dequantized value, packed with the same little-endian bit order.
+/// Streams member shards under the default memory budget — build memory
+/// is O(shard) + the extracted planes, never O(block).
+fn extract_sign_codes(live: &LiveStore, lo: usize, hi: usize) -> Result<Vec<Vec<u8>>> {
+    let h = *live.header();
+    let k = h.k as usize;
+    let stride = packed_bytes(k, 1);
+    let n = hi - lo;
+    let mut codes = vec![vec![0u8; n * stride]; h.n_checkpoints as usize];
+    for ci in 0..h.n_checkpoints as usize {
+        let plane = &mut codes[ci];
+        for member in live.members() {
+            let m_lo = member.start_row;
+            let m_hi = m_lo + member.ds.n_samples();
+            let beg = lo.max(m_lo);
+            let end = hi.min(m_hi);
+            if beg >= end {
+                continue;
+            }
+            let rps = member.ds.rows_per_shard(0, DEFAULT_MEM_BUDGET_MB);
+            let mut reader = member.ds.shard_reader(ci, rps)?;
+            reader.seek_to_row(beg - m_lo);
+            let mut row = beg - m_lo; // member-local
+            while row < end - m_lo {
+                let Some(shard) = reader.next_shard()? else {
+                    bail!("store ended before row {} while extracting sign codes", end);
+                };
+                let rows = shard.rows();
+                let take = (end - m_lo - shard.start).min(rows.n());
+                for j in 0..take {
+                    let g = m_lo + shard.start + j - lo; // plane-local
+                    let out = &mut plane[g * stride..(g + 1) * stride];
+                    if h.precision.bits == 1 {
+                        out.copy_from_slice(rows.row_bytes(j));
+                    } else {
+                        pack_signs_into(&rows.row_f32(j), out);
+                    }
+                }
+                row = shard.start + take;
+            }
+        }
+    }
+    Ok(codes)
+}
+
+/// Pack `vals[i] > 0` bits little-endian within bytes — the same layout
+/// `quant::pack::pack_codes` gives 1-bit sign codes, padding bits 0.
+fn pack_signs_into(vals: &[f32], out: &mut [u8]) {
+    for (b, chunk) in out.iter_mut().zip(vals.chunks(8)) {
+        let mut acc = 0u8;
+        for (j, &v) in chunk.iter().enumerate() {
+            acc |= u8::from(v > 0.0) << j;
+        }
+        *b = acc;
+    }
+}
+
+/// Build an IVF index over a live store (base + all attached segments):
+/// extract every row's per-checkpoint sign bitmap, run k-majority Lloyd
+/// iterations, and group row ids by final assignment. Deterministic for a
+/// given store: evenly-spaced-row seeding, in-order assignment with
+/// lowest-id tie-breaks, strict-majority votes (ties → 0) and
+/// lowest-farthest-row reseeding of empty clusters.
+pub fn build_index(live: &LiveStore, opts: &IndexBuildOpts) -> Result<QuantIndex> {
+    let n = live.n_rows();
+    ensure!(n >= 1, "cannot index an empty store");
+    let h = *live.header();
+    let k = h.k as usize;
+    let n_checkpoints = h.n_checkpoints as usize;
+    let stride = packed_bytes(k, 1);
+    let n_clusters =
+        if opts.n_clusters == 0 { auto_nclusters(n) } else { opts.n_clusters }.min(n);
+    let max_iters = if opts.max_iters == 0 { DEFAULT_INDEX_ITERS } else { opts.max_iters };
+    let codes = extract_sign_codes(live, 0, n)?;
+    let kernel = cpu::active();
+
+    let mut idx = QuantIndex {
+        k,
+        n_checkpoints,
+        n_clusters,
+        n_rows: n as u64,
+        generation: live.generation(),
+        row_stride: stride,
+        centroids: vec![0u8; n_checkpoints * n_clusters * stride],
+        offsets: vec![0u64; n_clusters + 1],
+        row_ids: Vec::with_capacity(n),
+        stale: vec![Vec::new(); n_clusters],
+    };
+    // deterministic seeding: evenly spaced rows
+    for c in 0..n_clusters {
+        let seed_row = c * n / n_clusters;
+        for ci in 0..n_checkpoints {
+            let dst = (ci * n_clusters + c) * stride;
+            idx.centroids[dst..dst + stride]
+                .copy_from_slice(code_row(&codes, ci, seed_row, stride));
+        }
+    }
+
+    let mut assign = vec![0u32; n];
+    let mut counts = vec![0u32; n_clusters];
+    for iter in 0..max_iters {
+        // assignment pass (in row order; nearest_centroid ties → low id)
+        let mut moved = 0usize;
+        counts.iter_mut().for_each(|c| *c = 0);
+        for r in 0..n {
+            let best = nearest_centroid(&idx, &codes, r, kernel) as u32;
+            if best != assign[r] || iter == 0 {
+                moved += 1;
+            }
+            assign[r] = best;
+            counts[best as usize] += 1;
+        }
+        // k-majority centroid update, one bit-count plane per checkpoint
+        let mut bit_counts = vec![0u32; k];
+        for c in 0..n_clusters {
+            if counts[c] == 0 {
+                continue; // reseeded below
+            }
+            for ci in 0..n_checkpoints {
+                bit_counts.iter_mut().for_each(|b| *b = 0);
+                for r in 0..n {
+                    if assign[r] == c as u32 {
+                        accumulate_bits(code_row(&codes, ci, r, stride), &mut bit_counts);
+                    }
+                }
+                let maj = majority_bitmap(&bit_counts, counts[c]);
+                let dst = (ci * n_clusters + c) * stride;
+                idx.centroids[dst..dst + stride].copy_from_slice(&maj);
+            }
+        }
+        // reseed empty clusters with the rows farthest from their
+        // centroids (lowest row id on ties), one distinct row each
+        let mut reseeded = false;
+        let mut taken: Vec<usize> = Vec::new();
+        for c in 0..n_clusters {
+            if counts[c] > 0 {
+                continue;
+            }
+            let mut far_row = usize::MAX;
+            let mut far_agree = u64::MAX;
+            for r in 0..n {
+                if taken.contains(&r) {
+                    continue;
+                }
+                let home = assign[r] as usize;
+                let mut agree = 0u64;
+                for ci in 0..n_checkpoints {
+                    agree += simd::xnor_agree(
+                        kernel,
+                        code_row(&codes, ci, r, stride),
+                        idx.centroid(ci, home),
+                    ) as u64;
+                }
+                if agree < far_agree {
+                    far_agree = agree;
+                    far_row = r;
+                }
+            }
+            if far_row == usize::MAX {
+                continue; // more clusters than distinct rows left
+            }
+            taken.push(far_row);
+            for ci in 0..n_checkpoints {
+                let dst = (ci * n_clusters + c) * stride;
+                idx.centroids[dst..dst + stride]
+                    .copy_from_slice(code_row(&codes, ci, far_row, stride));
+            }
+            reseeded = true;
+        }
+        if moved == 0 && !reseeded {
+            break;
+        }
+    }
+    // final assignment under the final centroids, then group by cluster
+    counts.iter_mut().for_each(|c| *c = 0);
+    for r in 0..n {
+        let best = nearest_centroid(&idx, &codes, r, kernel) as u32;
+        assign[r] = best;
+        counts[best as usize] += 1;
+    }
+    for c in 0..n_clusters {
+        idx.offsets[c + 1] = idx.offsets[c] + counts[c] as u64;
+    }
+    idx.row_ids = vec![0u64; n];
+    let mut cursor: Vec<usize> = idx.offsets[..n_clusters].iter().map(|&o| o as usize).collect();
+    for (r, &a) in assign.iter().enumerate() {
+        idx.row_ids[cursor[a as usize]] = r as u64;
+        cursor[a as usize] += 1;
+    }
+    Ok(idx)
+}
+
+/// Build and atomically persist the sidecar for one precision store of a
+/// run directory — the unit of `qless reindex`. Returns the built index
+/// (stale count 0 by construction: it covers the store's current rows).
+pub fn reindex_store(store_path: &Path, opts: &IndexBuildOpts) -> Result<QuantIndex> {
+    let live = LiveStore::open(store_path)?;
+    let idx = build_index(&live, opts)?;
+    idx.write_atomic(&index_path(store_path))?;
+    Ok(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Precision, Scheme};
+    use crate::util::prop::seeded_datastore;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "qless_qidx_{tag}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn live(tag: &str, bits: u8, n: usize, k: usize, etas: &[f32]) -> (LiveStore, PathBuf) {
+        let scheme = if bits == 1 { Scheme::Sign } else { Scheme::Absmax };
+        let p = Precision::new(bits, scheme).unwrap();
+        let path = tmp(tag);
+        seeded_datastore(&path, p, n, k, etas, 7);
+        (LiveStore::open(&path).unwrap(), path)
+    }
+
+    #[test]
+    fn build_partitions_the_row_space() {
+        for bits in [1u8, 8] {
+            let (store, path) = live(&format!("part{bits}"), bits, 37, 96, &[0.9, 0.4]);
+            let idx =
+                build_index(&store, &IndexBuildOpts { n_clusters: 5, max_iters: 4 }).unwrap();
+            assert_eq!(idx.n_clusters(), 5);
+            assert_eq!(idx.n_rows(), 37);
+            assert_eq!(idx.stale_rows(), 0);
+            let mut all: Vec<u64> = (0..5).flat_map(|c| idx.cluster_rows(c)).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..37u64).collect::<Vec<_>>(), "{bits}-bit: clusters partition rows");
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_and_atomic_write() {
+        let (store, path) = live("codec", 1, 23, 64, &[1.0]);
+        let idx = build_index(&store, &IndexBuildOpts { n_clusters: 4, max_iters: 3 }).unwrap();
+        let back = QuantIndex::decode(&idx.encode()).unwrap();
+        assert_eq!(back.encode(), idx.encode());
+        let sidecar = index_path(&path);
+        idx.write_atomic(&sidecar).unwrap();
+        assert!(!sidecar.with_extension("qidx.tmp").exists(), "tmp renamed away");
+        let opened = QuantIndex::open(&sidecar, &store).unwrap();
+        assert_eq!(opened.encode(), idx.encode());
+        assert!(QuantIndex::open_for(&path, &store).is_some());
+        std::fs::remove_file(&sidecar).ok();
+        assert!(QuantIndex::open_for(&path, &store).is_none(), "missing sidecar is None");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn clusters_are_not_degenerate_on_clustered_data() {
+        // identical rows must land in the same cluster: build over a store
+        // whose rows repeat 4 patterns, expect exactly those groups
+        use crate::datastore::DatastoreWriter;
+        let (n, k) = (16usize, 64usize);
+        let path = tmp("groups");
+        let p = Precision::new(1, Scheme::Sign).unwrap();
+        let mut w = DatastoreWriter::create(&path, p, n, k, 1).unwrap();
+        w.begin_checkpoint(1.0).unwrap();
+        for i in 0..n {
+            // 4 well-separated sign patterns
+            let row: Vec<f32> =
+                (0..k).map(|j| if (j / 16) % 4 == i % 4 { 1.0 } else { -1.0 }).collect();
+            w.append_features(&row).unwrap();
+        }
+        w.end_checkpoint().unwrap();
+        w.finalize().unwrap();
+        let store = LiveStore::open(&path).unwrap();
+        let idx = build_index(&store, &IndexBuildOpts { n_clusters: 4, max_iters: 6 }).unwrap();
+        for c in 0..4 {
+            let rows: Vec<u64> = idx.cluster_rows(c).collect();
+            assert!(!rows.is_empty(), "cluster {c} empty");
+            // all members share a pattern (row % 4 constant)
+            let first = rows[0] % 4;
+            assert!(rows.iter().all(|r| r % 4 == first), "cluster {c} mixes patterns: {rows:?}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn decode_rejects_structural_corruption() {
+        let (store, path) = live("corrupt", 1, 12, 64, &[1.0]);
+        let idx = build_index(&store, &IndexBuildOpts { n_clusters: 3, max_iters: 2 }).unwrap();
+        let good = idx.encode();
+        // magic
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(QuantIndex::decode(&b).is_err());
+        // version
+        let mut b = good.clone();
+        b[4] = 99;
+        assert!(QuantIndex::decode(&b).is_err());
+        // truncation (drop the last row id)
+        assert!(QuantIndex::decode(&good[..good.len() - 8]).is_err());
+        // trailing garbage
+        let mut b = good.clone();
+        b.extend_from_slice(&[0u8; 8]);
+        assert!(QuantIndex::decode(&b).is_err());
+        // duplicated row id (first two ids equal)
+        let mut b = good.clone();
+        let ids_at = good.len() - 12 * 8;
+        b.copy_within(ids_at..ids_at + 8, ids_at + 8);
+        assert!(QuantIndex::decode(&b).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn open_for_rejects_geometry_mismatch() {
+        let (store, path) = live("geom", 1, 10, 64, &[1.0]);
+        let idx = build_index(&store, &IndexBuildOpts { n_clusters: 2, max_iters: 2 }).unwrap();
+        idx.write_atomic(&index_path(&path)).unwrap();
+        // a store with a different k must refuse the sidecar
+        let (other, other_path) = live("geom_other", 1, 10, 128, &[1.0]);
+        std::fs::copy(index_path(&path), index_path(&other_path)).unwrap();
+        assert!(QuantIndex::open_for(&other_path, &other).is_none());
+        std::fs::remove_file(index_path(&other_path)).ok();
+        std::fs::remove_file(other_path).ok();
+        std::fs::remove_file(index_path(&path)).ok();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        assert_eq!(auto_nclusters(0), 1);
+        assert_eq!(auto_nclusters(2048), 46);
+        assert_eq!(auto_nclusters(100_000_000), 4096);
+        assert_eq!(default_nprobe(1), 1);
+        assert_eq!(default_nprobe(46), 5);
+        assert_eq!(default_nprobe(64), 8);
+        assert_eq!(
+            index_path(Path::new("/run/datastore_1b_sign.qlds")),
+            Path::new("/run/datastore_1b_sign.qidx")
+        );
+    }
+}

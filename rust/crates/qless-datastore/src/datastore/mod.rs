@@ -41,14 +41,27 @@
 //! segments as one row space and picks up new generations in place. The
 //! byte-level spec of all of it is `rust/crates/qless-datastore/FORMAT.md` (included as the
 //! [`format`] module's rustdoc, so its hex example runs as a doctest).
+//!
+//! Next to a store there may also be an IVF **index sidecar**
+//! (`<stem>.qidx`, the [`index`] module): k-majority Hamming clusters over
+//! the rows' sign bitmaps that let `influence::index` scan only the
+//! probed clusters' rows instead of the whole store. The sidecar is
+//! derived data — validated on open, rebuilt by `qless reindex`, and
+//! never required for correctness (every reader falls back to the
+//! exhaustive scan without it).
 
 pub mod format;
+pub mod index;
 pub mod live;
 pub mod manifest;
 pub mod multi;
 pub mod store;
 
 pub use format::{Header, MAGIC, VERSION};
+pub use index::{
+    auto_nclusters, build_index, default_nprobe, index_path, reindex_store, IndexBuildOpts,
+    QuantIndex, QIDX_MAGIC, QIDX_VERSION,
+};
 pub use live::{
     repair_run_dir, run_dir_precisions, segment_store_path, LiveMember, LiveStore, SegmentWriter,
 };

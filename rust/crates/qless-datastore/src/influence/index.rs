@@ -1,0 +1,391 @@
+//! IVF-indexed influence queries — the sub-linear read path over a
+//! [`QuantIndex`] sidecar (`datastore::index`).
+//!
+//! An indexed query runs in two stages, both built from machinery that
+//! already exists and is already property-tested:
+//!
+//! 1. **Probe** ([`probe_rank_clusters`]): score every *centroid* against
+//!    every task with the ordinary 1-bit influence scan — the centroids
+//!    are packed sign bitmaps, so a synthetic 1-bit header plus one
+//!    [`RowsView`] per checkpoint turns [`MultiScan`] into a centroid
+//!    scorer for free (η-weighted across checkpoints, same Eq. 7
+//!    accumulation). Each task gets a deterministic full ranking of the
+//!    cluster ids (`score desc, id asc` — the shared selection order).
+//! 2. **Scan** ([`index_scan_live_tasks`]): take each task's top-P
+//!    clusters (`--nprobe P`), gather their rows (persisted grouping +
+//!    the in-memory stale tail), union across tasks, and score exactly
+//!    those rows with the cascade's contiguous-run seek machinery
+//!    ([`rerank_live_rows`]) — O(rows-in-probed-clusters) instead of
+//!    O(n), with [`ScanStats`] proving the reduction.
+//!
+//! **Exactness at full coverage** (DESIGN.md §12): clusters partition the
+//! row space, so `nprobe = nclusters` makes the candidate set every row;
+//! `rerank_live_rows` over the full range feeds rows in the exhaustive
+//! scan's order (checkpoint → member → run), so the accumulated scores —
+//! and therefore the top-k — are **byte-identical** to the exhaustive
+//! scan (`tests/index.rs` pins this across the precision grid).
+//!
+//! The coordinator partitions the **cluster list**, not the row space:
+//! every worker derives the same deterministic per-task ranking, and a
+//! `clusters: (start, len)` window assigns each worker a disjoint slice
+//! of list *positions* ([`index_scan_live_tasks_at`]). Per-row scores are
+//! feed-order independent (each row accumulates once per checkpoint in
+//! checkpoint order regardless of which runs cover it), so partial
+//! results merge with [`merge_top_k`] exactly like row-partitioned scans.
+//!
+//! [`index_cascade_live_tasks`] composes the index with the precision
+//! cascade: the cheap 1-bit probe runs *inside* the probed clusters only,
+//! then the exact high-precision rerank touches the `k·mult` survivors.
+
+use anyhow::{ensure, Result};
+
+use qless_core::select::{merge_top_k, sorted_union, top_k_scored, top_k_scored_among};
+
+use crate::datastore::{default_nprobe, Header, LiveStore, QuantIndex, RowsView};
+use crate::grads::FeatureMatrix;
+use crate::influence::aggregate::{MultiScan, ScanStats, ScoreOpts};
+use crate::influence::cascade::{combine_stats, rerank_live_rows, CascadeOpts, CascadeOutcome};
+use crate::quant::{Precision, Scheme};
+
+/// Knobs of one indexed query.
+#[derive(Debug, Clone, Copy)]
+pub struct IndexOpts {
+    /// Final selections per task (the `k` of recall@k).
+    pub k: usize,
+    /// Clusters probed per task; 0 derives
+    /// [`default_nprobe`]`(nclusters)`, values past the cluster count
+    /// clamp to full coverage (= exhaustive-exact).
+    pub nprobe: usize,
+    /// Shard/memory knobs for both stages.
+    pub scan: ScoreOpts,
+}
+
+/// Everything one indexed query produced.
+#[derive(Debug, Clone)]
+pub struct IndexOutcome {
+    /// Per-task final top-`k` `(row, score)` pairs under the shared
+    /// `(score desc, index asc)` order — byte-identical to the exhaustive
+    /// scan's top-`k` at full coverage.
+    pub top: Vec<Vec<(usize, f32)>>,
+    /// Each task's full deterministic cluster ranking (probe order). The
+    /// coordinator windows positions of these lists across workers.
+    pub cluster_order: Vec<Vec<usize>>,
+    /// Distinct rows the scan stage actually scored (candidate union).
+    pub scanned_rows: usize,
+    /// Centroid-probe I/O accounting (C rows per checkpoint, 1-bit).
+    pub probe_pass: ScanStats,
+    /// Cluster-scan I/O accounting — the `rows_read` the ≥ 4× reduction
+    /// claim is asserted on (`tests/index.rs`).
+    pub scan_pass: ScanStats,
+}
+
+impl IndexOutcome {
+    /// Both stages as one [`ScanStats`] — the serving layer's `pass`.
+    pub fn combined_pass(&self) -> ScanStats {
+        combine_stats(self.probe_pass, self.scan_pass)
+    }
+}
+
+/// Effective probe width for an index: explicit `nprobe` (0 = the
+/// [`default_nprobe`] heuristic) clamped to the cluster count.
+pub fn effective_nprobe(idx: &QuantIndex, nprobe: usize) -> usize {
+    let nc = idx.n_clusters();
+    if nprobe == 0 { default_nprobe(nc) } else { nprobe }.min(nc)
+}
+
+/// Stage 1: rank every cluster for every task by scoring the packed sign
+/// centroids with the ordinary 1-bit multi-task scan, η-weighted across
+/// checkpoints from the live store. Returns each task's **full** cluster
+/// ranking (deterministic: score desc, cluster id asc) plus the probe's
+/// own [`ScanStats`] — kept separate from the row-scan stats so the
+/// sub-linearity claim is measured on row traffic alone.
+pub fn probe_rank_clusters(
+    idx: &QuantIndex,
+    live: &LiveStore,
+    tasks: &[&[FeatureMatrix]],
+) -> Result<(Vec<Vec<usize>>, ScanStats)> {
+    let nc = idx.n_clusters();
+    ensure!(
+        idx.n_checkpoints() == live.header().n_checkpoints as usize,
+        "index/store checkpoint mismatch"
+    );
+    let precision = Precision::new(1, Scheme::Sign)?;
+    // a virtual 1-bit store whose "rows" are the C centroids
+    let header = Header::new(precision, nc, idx.k(), idx.n_checkpoints());
+    let mut scan = MultiScan::try_new(&header, tasks)?;
+    let ones = vec![1.0f32; nc]; // sign scores ignore scales; RowsView wants them
+    for ci in 0..idx.n_checkpoints() {
+        let view = RowsView {
+            precision,
+            k: idx.k(),
+            row_stride: idx.row_stride(),
+            scales: &ones,
+            data: idx.centroids_ckpt(ci),
+        };
+        scan.feed(ci, live.etas()[ci], 0, &view);
+    }
+    let (totals, stats) = scan.finish();
+    let order = totals
+        .iter()
+        .map(|t| top_k_scored(t, nc).into_iter().map(|(c, _)| c).collect())
+        .collect();
+    Ok((order, stats))
+}
+
+/// Candidate rows for one task: the rows of the clusters at list
+/// positions `[at, at + len)` of its ranking, sorted ascending (the shape
+/// [`rerank_live_rows`] wants). Stale-tail rows are included — an indexed
+/// query covers live ingest as soon as [`QuantIndex::refresh`] ran.
+fn cluster_window_rows(idx: &QuantIndex, ranked: &[usize], at: usize, len: usize) -> Vec<usize> {
+    let hi = (at + len).min(ranked.len());
+    let mut rows: Vec<usize> = ranked[at.min(hi)..hi]
+        .iter()
+        .flat_map(|&c| idx.cluster_rows(c).map(|r| r as usize))
+        .collect();
+    rows.sort_unstable();
+    rows
+}
+
+/// Stage 2 + selection for a cluster-list window: probe, take positions
+/// `[window.0, window.0 + window.1)` of **each task's own** ranking
+/// (clamped to `nprobe` coverage), scan the union of their rows, and
+/// select per-task top-k among that task's own candidates. `window =
+/// (0, nprobe)` is the whole query ([`index_scan_live_tasks`]); the
+/// coordinator fans out disjoint windows and merges with
+/// [`merge_top_k`].
+pub fn index_scan_live_tasks_at(
+    live: &LiveStore,
+    idx: &QuantIndex,
+    tasks: &[&[FeatureMatrix]],
+    opts: &IndexOpts,
+    window: (usize, usize),
+) -> Result<IndexOutcome> {
+    ensure!(opts.k >= 1, "index scan needs k >= 1");
+    ensure!(!tasks.is_empty(), "no validation tasks to score");
+    ensure!(
+        idx.covered_rows() as usize == live.n_rows(),
+        "index covers {} rows but the live store has {} — refresh or `qless reindex` first",
+        idx.covered_rows(),
+        live.n_rows()
+    );
+    let nprobe = effective_nprobe(idx, opts.nprobe);
+    let (order, probe_pass) = probe_rank_clusters(idx, live, tasks)?;
+    let (at, len) = window;
+    let per_task: Vec<Vec<usize>> = order
+        .iter()
+        .map(|ranked| cluster_window_rows(idx, &ranked[..nprobe], at, len))
+        .collect();
+    let union = sorted_union(&per_task);
+    let mut top = vec![Vec::new(); tasks.len()];
+    let mut scan_pass = ScanStats::default();
+    if !union.is_empty() {
+        let (scores, pass) = rerank_live_rows(live, tasks, &union, opts.scan)?;
+        scan_pass = pass;
+        for (t, cand) in per_task.iter().enumerate() {
+            let pairs: Vec<(usize, f32)> = cand
+                .iter()
+                .map(|&row| {
+                    let at = union.binary_search(&row).expect("candidate in union");
+                    (row, scores[t][at])
+                })
+                .collect();
+            top[t] = top_k_scored_among(&pairs, opts.k);
+        }
+    }
+    Ok(IndexOutcome { top, cluster_order: order, scanned_rows: union.len(), probe_pass, scan_pass })
+}
+
+/// One full indexed query: probe every centroid, scan each task's top-P
+/// clusters, return per-task top-k (see the module docs for the exactness
+/// and merge arguments).
+pub fn index_scan_live_tasks(
+    live: &LiveStore,
+    idx: &QuantIndex,
+    tasks: &[&[FeatureMatrix]],
+    opts: &IndexOpts,
+) -> Result<IndexOutcome> {
+    let nprobe = effective_nprobe(idx, opts.nprobe);
+    index_scan_live_tasks_at(live, idx, tasks, opts, (0, nprobe))
+}
+
+/// Merge the per-worker outcomes of a cluster-partitioned scatter: task
+/// lists concatenate under [`merge_top_k`] (disjoint windows of one
+/// deterministic ranking ⇒ disjoint candidate rows per task ⇒ no
+/// duplicate ids), traffic counters sum.
+pub fn merge_index_outcomes(parts: &[IndexOutcome], k: usize) -> IndexOutcome {
+    let q = parts.first().map_or(0, |p| p.top.len());
+    let mut top = Vec::with_capacity(q);
+    for t in 0..q {
+        let per: Vec<Vec<(usize, f32)>> = parts.iter().map(|p| p.top[t].clone()).collect();
+        top.push(merge_top_k(&per, k));
+    }
+    let mut probe_pass = ScanStats::default();
+    let mut scan_pass = ScanStats::default();
+    let mut scanned_rows = 0;
+    for p in parts {
+        probe_pass = combine_stats(probe_pass, p.probe_pass);
+        scan_pass = combine_stats(scan_pass, p.scan_pass);
+        scanned_rows += p.scanned_rows;
+    }
+    IndexOutcome {
+        top,
+        cluster_order: parts.first().map_or_else(Vec::new, |p| p.cluster_order.clone()),
+        scanned_rows,
+        probe_pass,
+        scan_pass,
+    }
+}
+
+/// Compose the index with the precision cascade: the cheap 1-bit probe
+/// scan runs **only inside the probed clusters** of the 1-bit store, its
+/// per-task top `k·mult` survivors are reranked exactly on the
+/// high-precision store. The index must be built over the same row space
+/// both stores share (one run directory). At `nprobe = nclusters` this
+/// degenerates to the plain cascade, and with `mult` covering the
+/// candidate count it is exhaustive-exact — the same two limits the plain
+/// cascade's property tests pin.
+pub fn index_cascade_live_tasks(
+    probe: &LiveStore,
+    rerank: &LiveStore,
+    idx: &QuantIndex,
+    tasks: &[&[FeatureMatrix]],
+    opts: &CascadeOpts,
+    nprobe: usize,
+) -> Result<CascadeOutcome> {
+    ensure!(opts.k >= 1 && opts.mult >= 1, "cascade needs k >= 1 and mult >= 1");
+    ensure!(
+        idx.covered_rows() as usize == probe.n_rows(),
+        "index covers {} rows but the probe store has {} — refresh or `qless reindex` first",
+        idx.covered_rows(),
+        probe.n_rows()
+    );
+    ensure!(
+        probe.n_rows() == rerank.n_rows(),
+        "probe/rerank stores disagree on row count ({} vs {})",
+        probe.n_rows(),
+        rerank.n_rows()
+    );
+    let nprobe = effective_nprobe(idx, nprobe);
+    let (order, centroid_pass) = probe_rank_clusters(idx, probe, tasks)?;
+    let per_task_rows: Vec<Vec<usize>> =
+        order.iter().map(|ranked| cluster_window_rows(idx, &ranked[..nprobe], 0, nprobe)).collect();
+    let cluster_union = sorted_union(&per_task_rows);
+    // stage 1: 1-bit probe scores, restricted to the probed clusters
+    let (probe_scores, probe_pass) = rerank_live_rows(probe, tasks, &cluster_union, opts.scan)?;
+    let ck = opts.k.saturating_mul(opts.mult);
+    let mut survivors: Vec<Vec<usize>> = Vec::with_capacity(tasks.len());
+    for (t, cand) in per_task_rows.iter().enumerate() {
+        let pairs: Vec<(usize, f32)> = cand
+            .iter()
+            .map(|&row| {
+                let at = cluster_union.binary_search(&row).expect("candidate in union");
+                (row, probe_scores[t][at])
+            })
+            .collect();
+        let mut keep: Vec<usize> =
+            top_k_scored_among(&pairs, ck.min(pairs.len())).into_iter().map(|(r, _)| r).collect();
+        keep.sort_unstable();
+        survivors.push(keep);
+    }
+    let rerank_union = sorted_union(&survivors);
+    // stage 2: exact rerank of the survivors at the high precision
+    let (rerank_scores, rerank_pass) = rerank_live_rows(rerank, tasks, &rerank_union, opts.scan)?;
+    let mut top = Vec::with_capacity(tasks.len());
+    for (t, keep) in survivors.iter().enumerate() {
+        let pairs: Vec<(usize, f32)> = keep
+            .iter()
+            .map(|&row| {
+                let at = rerank_union.binary_search(&row).expect("survivor in union");
+                (row, rerank_scores[t][at])
+            })
+            .collect();
+        top.push(top_k_scored_among(&pairs, opts.k));
+    }
+    Ok(CascadeOutcome {
+        top,
+        reranked_rows: rerank_union.len(),
+        probe_pass: combine_stats(centroid_pass, probe_pass),
+        rerank_pass,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::{build_index, IndexBuildOpts};
+    use crate::influence::aggregate::score_live_tasks;
+    use crate::util::prop::{normal_features, seeded_datastore};
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "qless_iidx_{tag}_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    fn fixture(tag: &str, n: usize, k: usize, etas: &[f32]) -> (LiveStore, PathBuf) {
+        let p = Precision::new(1, Scheme::Sign).unwrap();
+        let path = tmp(tag);
+        seeded_datastore(&path, p, n, k, etas, 11);
+        (LiveStore::open(&path).unwrap(), path)
+    }
+
+    fn tasks_for(k: usize, etas: &[f32], seed: u64) -> Vec<Vec<FeatureMatrix>> {
+        vec![(0..etas.len()).map(|ci| normal_features(3, k, seed + ci as u64)).collect()]
+    }
+
+    #[test]
+    fn full_coverage_matches_exhaustive_topk() {
+        let etas = [0.8f32, 0.3];
+        let (live, path) = fixture("cover", 64, 96, &etas);
+        let idx = build_index(&live, &IndexBuildOpts { n_clusters: 6, max_iters: 4 }).unwrap();
+        let owned = tasks_for(96, &etas, 5);
+        let tasks: Vec<&[FeatureMatrix]> = owned.iter().map(|t| t.as_slice()).collect();
+        let opts = IndexOpts { k: 9, nprobe: 6, scan: ScoreOpts::default() };
+        let out = index_scan_live_tasks(&live, &idx, &tasks, &opts).unwrap();
+        let (exh, _) = score_live_tasks(&live, &tasks, ScoreOpts::default()).unwrap();
+        let want = top_k_scored(&exh[0], 9);
+        assert_eq!(out.top[0].len(), want.len());
+        for (a, b) in out.top[0].iter().zip(&want) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "byte-identical at full coverage");
+        }
+        assert_eq!(out.scanned_rows, 64);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn windows_partition_the_query() {
+        let etas = [1.0f32];
+        let (live, path) = fixture("win", 48, 64, &etas);
+        let idx = build_index(&live, &IndexBuildOpts { n_clusters: 6, max_iters: 4 }).unwrap();
+        let owned = tasks_for(64, &etas, 9);
+        let tasks: Vec<&[FeatureMatrix]> = owned.iter().map(|t| t.as_slice()).collect();
+        let opts = IndexOpts { k: 7, nprobe: 4, scan: ScoreOpts::default() };
+        let whole = index_scan_live_tasks(&live, &idx, &tasks, &opts).unwrap();
+        let a = index_scan_live_tasks_at(&live, &idx, &tasks, &opts, (0, 2)).unwrap();
+        let b = index_scan_live_tasks_at(&live, &idx, &tasks, &opts, (2, 2)).unwrap();
+        let merged = merge_index_outcomes(&[a, b], 7);
+        assert_eq!(format!("{:?}", merged.top), format!("{:?}", whole.top));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn nprobe_zero_uses_default_and_scans_fewer_rows() {
+        let etas = [1.0f32];
+        let (live, path) = fixture("dflt", 80, 64, &etas);
+        let idx = build_index(&live, &IndexBuildOpts { n_clusters: 8, max_iters: 4 }).unwrap();
+        assert_eq!(effective_nprobe(&idx, 0), 1);
+        assert_eq!(effective_nprobe(&idx, 99), 8);
+        let owned = tasks_for(64, &etas, 3);
+        let tasks: Vec<&[FeatureMatrix]> = owned.iter().map(|t| t.as_slice()).collect();
+        let opts = IndexOpts { k: 4, nprobe: 0, scan: ScoreOpts::default() };
+        let out = index_scan_live_tasks(&live, &idx, &tasks, &opts).unwrap();
+        assert!(out.scanned_rows < 80, "default nprobe must not scan everything");
+        assert!(out.scan_pass.rows_read < etas.len() as u64 * 80);
+        assert_eq!(out.top[0].len(), 4);
+        std::fs::remove_file(path).ok();
+    }
+}

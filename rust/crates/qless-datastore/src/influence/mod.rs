@@ -25,9 +25,17 @@
 //! the re-entrant [`MultiScan`]: prepared tasks + per-task accumulators
 //! that can be fed shards from *any* source — the disk stream here, or
 //! the serving layer's RAM shard cache (`service::Session`).
+//!
+//! Two selective read paths sit on top of the exhaustive scan, both exact
+//! in a provable limit: [`cascade`] (cheap 1-bit probe, exact
+//! high-precision rerank — exhaustive when the candidate multiplier
+//! covers the store) and [`index`] (IVF cluster probing over a
+//! `datastore::index` sidecar — byte-identical to the exhaustive scan at
+//! `nprobe = nclusters`).
 
 pub mod aggregate;
 pub mod cascade;
+pub mod index;
 pub mod native;
 pub(crate) mod simd;
 pub mod xla;
@@ -38,5 +46,9 @@ pub use aggregate::{
 pub use cascade::{
     cascade_datastore_tasks, cascade_live_tasks, CascadeOpts, CascadeOutcome,
     DEFAULT_CASCADE_MULT,
+};
+pub use index::{
+    effective_nprobe, index_cascade_live_tasks, index_scan_live_tasks, index_scan_live_tasks_at,
+    merge_index_outcomes, probe_rank_clusters, IndexOpts, IndexOutcome,
 };
 pub use native::{ValFeatures, ValTask};

@@ -84,6 +84,13 @@ enum PassKey {
     /// Cascade rerank of exactly `rows` at `bits` (worker verb). The row
     /// list is shared, not cloned per job — fan-in replies reuse it.
     Rerank { rows: Arc<Vec<usize>>, bits: u8 },
+    /// IVF-indexed scan: top-`nprobe` clusters per task, optionally
+    /// restricted to a window of cluster-list positions (worker verb of a
+    /// cluster-partitioned scatter).
+    Index { nprobe: usize, top_k: usize, clusters: Option<(usize, usize)> },
+    /// Index-restricted cascade: the 1-bit probe scan runs only inside
+    /// the `nprobe` probed clusters; the exact rerank is unchanged.
+    IndexCascade { plan: CascadePlan, top_k: usize, nprobe: usize },
 }
 
 struct Job {
@@ -197,6 +204,32 @@ impl Batcher {
         bits: u8,
     ) -> Result<mpsc::Receiver<BatchResult>> {
         self.submit_keyed(query, PassKey::Rerank { rows, bits })
+    }
+
+    /// Enqueue one IVF-indexed query ([`Session::answer_index`]): queries
+    /// sharing the same `(nprobe, top_k, clusters)` coalesce, so a burst
+    /// rides one centroid probe and one cluster scan.
+    pub fn submit_index(
+        &self,
+        query: ScoreQuery,
+        nprobe: usize,
+        top_k: usize,
+        clusters: Option<(usize, usize)>,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
+        self.submit_keyed(query, PassKey::Index { nprobe, top_k, clusters })
+    }
+
+    /// Enqueue one index-restricted cascade query
+    /// ([`Session::answer_index_cascade`]): queries sharing the same
+    /// `(plan, top_k, nprobe)` coalesce.
+    pub fn submit_index_cascade(
+        &self,
+        query: ScoreQuery,
+        plan: CascadePlan,
+        top_k: usize,
+        nprobe: usize,
+    ) -> Result<mpsc::Receiver<BatchResult>> {
+        self.submit_keyed(query, PassKey::IndexCascade { plan, top_k, nprobe })
     }
 
     fn submit_keyed(
@@ -323,6 +356,12 @@ fn worker_loop(
             }
             PassKey::Rerank { rows, bits } => {
                 session.answer_rerank_rows(&queries, rows, *bits)
+            }
+            PassKey::Index { nprobe, top_k, clusters } => {
+                session.answer_index(&queries, *nprobe, *top_k, *clusters)
+            }
+            PassKey::IndexCascade { plan, top_k, nprobe } => {
+                session.answer_index_cascade(&queries, *plan, *top_k, *nprobe)
             }
         }));
         drop(pass_span);
@@ -487,6 +526,42 @@ mod tests {
         assert_eq!(stats.fused_passes, 2, "probe pass + rerank pass");
         batcher.close();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn index_jobs_fuse_by_key_and_answer_with_top() {
+        use crate::datastore::{index_path, reindex_store, IndexBuildOpts};
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "qless_batcher_idx_{}_{:?}.qlds",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        seeded_datastore(&path, p1, 32, 64, &[1.0], 0);
+        reindex_store(&path, &IndexBuildOpts { n_clusters: 4, max_iters: 3 }).unwrap();
+        let session = Session::open(&path, SessionOpts::default()).unwrap();
+        let batcher = Batcher::new(
+            session,
+            BatcherOpts { window: Duration::from_millis(300), max_batch: 16, queue_cap: 64 },
+        );
+        let rxs: Vec<_> = (0..3)
+            .map(|i| batcher.submit_index(query(64, 900 + i), 2, 3, None).unwrap())
+            .collect();
+        let answers: Vec<Answer> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        for a in &answers {
+            assert_eq!(a.batched, 3, "same-key indexed burst must fuse");
+            assert!(a.scores.is_empty(), "indexed answers carry top lists only");
+            assert_eq!(a.top.as_ref().unwrap().len(), 3);
+        }
+        let stats = batcher.stats();
+        assert_eq!(stats.batches, 1, "one fused indexed batch");
+        assert_eq!(stats.index_queries, 3);
+        assert_eq!(stats.index_fallbacks, 0);
+        assert_eq!(stats.index_clusters, 4);
+        batcher.close();
+        std::fs::remove_file(index_path(&path)).ok();
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

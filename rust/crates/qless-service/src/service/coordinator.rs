@@ -405,7 +405,17 @@ fn scatter_stats(ctx: &CoCtx, per_worker: bool) -> Result<StatsReply> {
         sum.shard_cache_bytes += s.shard_cache_bytes;
         sum.rows_scored += s.rows_scored;
         sum.reloads += s.reloads;
+        sum.index_queries += s.index_queries;
+        sum.index_fallbacks += s.index_fallbacks;
+        // staleness is a per-worker property of the same shared sidecar —
+        // report the worst lag, not a multiply-counted sum
+        sum.index_stale_rows = sum.index_stale_rows.max(s.index_stale_rows);
     }
+    // the cluster count every worker can serve a window against (0 = at
+    // least one worker has no sidecar → indexed scatters fall back)
+    let index_clusters =
+        states.iter().map(|(_, s)| s.stats.index_clusters).min().expect("non-empty");
+    sum.index_clusters = index_clusters;
     let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
     record_generation_lag(&states, generation);
     Ok(StatsReply {
@@ -773,11 +783,20 @@ fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
     if req.rows.is_some() {
         bail!("coordinator does not accept ranged (worker) requests");
     }
+    if req.clusters.is_some() {
+        bail!("coordinator does not accept cluster-window (worker) requests");
+    }
     if matches!(
         req.cascade,
         Some(CascadeField::Probe { .. }) | Some(CascadeField::Rerank { .. })
     ) {
         bail!("coordinator does not accept cascade stage (worker) verbs");
+    }
+    if req.nprobe.is_some() && req.cascade.is_some() {
+        bail!(
+            "the scatter front end does not compose 'nprobe' with a cascade; \
+             send the index-restricted cascade to a single node, or drop 'nprobe'"
+        );
     }
     // admission checks mirroring ScoreQuery::validate's geometry half, so
     // a malformed query dies here instead of fanning out N times
@@ -797,6 +816,9 @@ fn scatter_score(req: &ScoreRequest, ctx: &CoCtx) -> Result<ScoreReply> {
     }
     if let Some(CascadeField::Full { probe, rerank, mult }) = req.cascade {
         return scatter_cascade(req, ctx, probe, rerank, mult);
+    }
+    if let Some(nprobe) = req.nprobe {
+        return scatter_index(req, ctx, nprobe);
     }
     let reg = obs::reg();
     let t0 = reg.now_us();
@@ -963,6 +985,81 @@ fn scatter_cascade(
     })
 }
 
+/// The indexed scatter: partition the **cluster list, not the row
+/// space**. Every worker holds the full store and the same `.qidx`
+/// sidecar, so each runs the identical deterministic centroid probe and
+/// arrives at the same per-task cluster ranking; worker `i` then scans
+/// only cluster-list *positions* `parts[i]` of that ranking. Clusters
+/// partition the rows, the windows partition the probed clusters, so the
+/// per-window top lists cover disjoint row sets and [`merge_top_k`]
+/// (score desc, index asc — the single-node comparator) reassembles the
+/// exact unpartitioned answer; at `nprobe >= nclusters` that answer is
+/// the exhaustive one. A fleet where any reachable worker lacks a
+/// sidecar (`index_clusters == 0` in its stats) degrades the whole query
+/// to the plain row-partitioned scatter — exact, never approximate, and
+/// counted in `coord_index_fallbacks_total`. Failed windows ride the
+/// same re-issue machinery as row ranges ([`fan_out`]): any worker can
+/// serve any window.
+fn scatter_index(req: &ScoreRequest, ctx: &CoCtx, nprobe: u32) -> Result<ScoreReply> {
+    anyhow::ensure!(req.top_k >= 1, "indexed scoring needs top_k >= 1 final selections per task");
+    let reg = obs::reg();
+    let t0 = reg.now_us();
+    let states = probe_fleet(ctx)?;
+    let c_min =
+        states.iter().map(|(_, s)| s.stats.index_clusters).min().expect("non-empty") as usize;
+    if c_min == 0 {
+        obs::counter_add("coord_index_fallbacks_total", 1);
+        warn_!(
+            "coordinator: indexed query but a reachable worker serves no sidecar — \
+             degrading to the exact row-partitioned scatter (run `qless reindex`)"
+        );
+        let mut plain = req.clone();
+        plain.nprobe = None;
+        return scatter_score(&plain, ctx);
+    }
+    let eff = (nprobe as usize).min(c_min);
+    let tb = req.trace.map(|t| TraceBuf::new(t, &reg));
+    let generation = states.iter().map(|(_, s)| s.generation).min().expect("non-empty");
+    record_generation_lag(&states, generation);
+    let n = states.iter().map(|(_, s)| s.n_samples).min().expect("non-empty");
+    anyhow::ensure!(n > 0, "workers serve an empty store");
+    let parts = partition(eff, states.len());
+    let wave = obs::next_id();
+    let wave0 = reg.now_us();
+    let replies = fan_out(ctx, &states, &parts, "clusters", &|addr, (start, len)| {
+        let s0 = reg.now_us();
+        let mut c = Client::connect_deadline(addr, ctx.deadline)?;
+        c.set_trace(tb.as_ref().map(|b| b.sub_trace(wave)));
+        let r = c.score_index_clusters(
+            &req.val,
+            req.top_k,
+            eff as u32,
+            (start as u64, len as u64),
+        )?;
+        if let Some(b) = &tb {
+            b.absorb("rpc.index", wave, s0, reg.now_us(), &r);
+        }
+        Ok(r)
+    })?;
+    if let Some(b) = &tb {
+        b.push_wave("wave.index", wave, wave0, reg.now_us());
+    }
+    reg.observe_us("coord_score_us", reg.now_us().saturating_sub(t0));
+    let pass = merge_pass(replies.iter());
+    let tops: Vec<Vec<(usize, f32)>> = replies.iter().map(|r| r.top.clone()).collect();
+    Ok(ScoreReply {
+        id: req.id,
+        generation,
+        cached: false,
+        batched: replies.iter().map(|r| r.batched).max().unwrap_or(0),
+        pass,
+        rows: None,
+        top: merge_top_k(&tops, req.top_k),
+        scores: None,
+        timing: tb.map(|b| b.finish(&reg)),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1048,6 +1145,78 @@ mod tests {
         co.join().unwrap();
         single.stop();
         single.join().unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn local_coordinator_partitions_the_cluster_list_and_falls_back() {
+        let (n, k) = (29usize, 64usize);
+        let path = build_store("index", n, k);
+        let worker_opts = ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            batch_window_ms: 0,
+            workers: 2,
+            shard_rows: 5,
+            ..Default::default()
+        };
+        // single-node exhaustive reference
+        let single = Server::start(&path, worker_opts.clone()).unwrap();
+        let val = vec![feats(2, k, 11), feats(2, k, 12)];
+        let mut sc = Client::connect(single.addr()).unwrap();
+        let want = sc.score(&val, 7, false).unwrap();
+        // phase 1: no sidecar anywhere → the indexed scatter degrades to
+        // the exact row-partitioned scatter
+        let co = Coordinator::start_local(
+            &path,
+            3,
+            worker_opts.clone(),
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(co.addr()).unwrap();
+        let fb = c.score_index(&val, 7, 3).unwrap();
+        assert_eq!(fb.top, want.top, "sidecar-free fleet degrades to the exact scatter");
+        c.shutdown().unwrap();
+        co.join().unwrap();
+        // phase 2: sidecar built before the workers open the store
+        crate::datastore::reindex_store(
+            &path,
+            crate::datastore::IndexBuildOpts { n_clusters: 5, max_iters: 4 },
+        )
+        .unwrap();
+        let co = Coordinator::start_local(
+            &path,
+            3,
+            worker_opts,
+            CoordinatorOpts { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(co.addr()).unwrap();
+        // full coverage: the cluster-partitioned scatter is bit-identical
+        // to the single-node exhaustive answer
+        let got = c.score_index(&val, 7, 5).unwrap();
+        assert!(got.scores.is_none() && got.rows.is_none());
+        for (g, w) in got.top.iter().zip(want.top.iter()) {
+            assert_eq!(g.0, w.0, "cluster-partitioned scatter vs single node");
+            assert_eq!(g.1.to_bits(), w.1.to_bits(), "bit-exact scores");
+        }
+        // sub-linear probing still answers a full-size top list
+        assert_eq!(c.score_index(&val, 7, 2).unwrap().top.len(), 7);
+        // worker verbs and unsupported compositions are rejected up front
+        let err = c.score_index_clusters(&val, 7, 5, (0, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("cluster-window"), "{err:#}");
+        let err = c.score_index_cascade(&val, 7, 1, 8, 8, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("cascade"), "{err:#}");
+        // fleet stats carry the index fields: min clusters, summed queries
+        let st = c.stats().unwrap();
+        assert_eq!(st.stats.index_clusters, 5);
+        assert!(st.stats.index_queries >= 1, "{:?}", st.stats);
+        assert_eq!(st.stats.index_fallbacks, 0);
+        c.shutdown().unwrap();
+        co.join().unwrap();
+        single.stop();
+        single.join().unwrap();
+        std::fs::remove_file(crate::datastore::index_path(&path)).ok();
         std::fs::remove_file(path).ok();
     }
 

@@ -127,6 +127,18 @@ pub struct ScoreRequest {
     /// Two-stage precision cascade (PROTOCOL.md §Cascade); `None` runs
     /// the ordinary exhaustive scan at the served precision.
     pub cascade: Option<CascadeField>,
+    /// IVF index probe width (PROTOCOL.md §Indexed scoring): scan only
+    /// each task's top-`nprobe` clusters of the served store's `.qidx`
+    /// sidecar. `None` (or a server without a sidecar) scans exhaustively.
+    /// Excludes `scores`, `since_gen` and `rows` — the indexed path
+    /// returns top lists, and a coordinator partitions the *cluster* list
+    /// (`clusters`), never the row space.
+    pub nprobe: Option<u32>,
+    /// Scatter-gather **worker** verb for indexed scoring: window
+    /// `[start, start + len)` of cluster-list *positions* in each task's
+    /// deterministic probe ranking. Requires `nprobe` (which bounds the
+    /// ranking's coverage).
+    pub clusters: Option<(u64, u64)>,
     /// Propagated trace identity; when present the reply carries a
     /// `timing` span array (PROTOCOL.md §Trace propagation).
     pub trace: Option<TraceField>,
@@ -379,7 +391,11 @@ fn service_stats_json(s: &ServiceStats) -> Json {
         .set("disk_shard_reads", s.disk_shard_reads as f64)
         .set("shard_cache_bytes", s.shard_cache_bytes as f64)
         .set("rows_scored", s.rows_scored as f64)
-        .set("reloads", s.reloads as f64);
+        .set("reloads", s.reloads as f64)
+        .set("index_queries", s.index_queries as f64)
+        .set("index_fallbacks", s.index_fallbacks as f64)
+        .set("index_stale_rows", s.index_stale_rows as f64)
+        .set("index_clusters", s.index_clusters as f64);
     o
 }
 
@@ -400,6 +416,12 @@ pub fn encode_request(req: &Request) -> String {
             }
             if let Some(c) = &r.cascade {
                 o.set("cascade", cascade_json(c));
+            }
+            if let Some(p) = r.nprobe {
+                o.set("nprobe", p as usize);
+            }
+            if let Some((start, len)) = r.clusters {
+                o.set("clusters", rows_json(start, len));
             }
             if let Some(t) = &r.trace {
                 o.set("trace", trace_json(t));
@@ -549,6 +571,34 @@ fn parse_rows(j: &Json) -> Result<Option<(u64, u64)>> {
         }
         None => Ok(None),
     }
+}
+
+/// Strict parse of the `nprobe` field (PROTOCOL.md §Indexed scoring):
+/// must be an integer ≥ 1 — a zero or fractional probe width must not
+/// silently degrade to an exhaustive scan or an empty candidate set.
+fn parse_nprobe(j: &Json) -> Result<Option<u32>> {
+    let Some(v) = j.get("nprobe") else { return Ok(None) };
+    let p = v
+        .as_usize()
+        .context("'nprobe' must be a non-negative integer (see PROTOCOL.md §Indexed scoring)")?;
+    if p == 0 {
+        bail!("'nprobe' must be >= 1 (omit the field for an exhaustive scan)");
+    }
+    if p > u32::MAX as usize {
+        bail!("'nprobe' {p} out of range");
+    }
+    Ok(Some(p as u32))
+}
+
+/// Strict parse of the `clusters` worker window: `[start, len]` positions
+/// into each task's probe ranking; only meaningful with `nprobe`.
+fn parse_clusters(j: &Json) -> Result<Option<(u64, u64)>> {
+    let Some(v) = j.get("clusters") else { return Ok(None) };
+    let a = v.as_arr()?;
+    if a.len() != 2 {
+        bail!("'clusters' must be [start, len], got {} entries", a.len());
+    }
+    Ok(Some((a[0].as_usize()? as u64, a[1].as_usize()? as u64)))
 }
 
 /// Legal storage bitwidths a cascade stage may name.
@@ -724,6 +774,10 @@ fn parse_service_stats(j: &Json) -> Result<ServiceStats> {
         shard_cache_bytes: u("shard_cache_bytes")?,
         rows_scored: u("rows_scored")?,
         reloads: u("reloads")?,
+        index_queries: u("index_queries")?,
+        index_fallbacks: u("index_fallbacks")?,
+        index_stale_rows: u("index_stale_rows")?,
+        index_clusters: u("index_clusters")?,
     })
 }
 
@@ -755,6 +809,21 @@ pub fn parse_request(line: &str) -> Result<Request> {
             };
             let rows = parse_rows(&j)?;
             let cascade = parse_cascade(&j)?;
+            let nprobe = parse_nprobe(&j)?;
+            let clusters = parse_clusters(&j)?;
+            if nprobe.is_some() {
+                if want_scores {
+                    bail!("'nprobe' cannot be combined with 'scores' (indexed scans return top lists only)");
+                }
+                if since_gen.is_some() {
+                    bail!("'nprobe' cannot be combined with 'since_gen'");
+                }
+                if rows.is_some() {
+                    bail!("'nprobe' cannot be combined with 'rows' (partition the cluster list via 'clusters')");
+                }
+            } else if clusters.is_some() {
+                bail!("'clusters' requires 'nprobe' (see PROTOCOL.md §Indexed scoring)");
+            }
             let trace = parse_trace(&j)?;
             let val = j
                 .req("val")?
@@ -769,6 +838,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 since_gen,
                 rows,
                 cascade,
+                nprobe,
+                clusters,
                 trace,
                 val,
             }))
@@ -921,6 +992,8 @@ mod tests {
             since_gen: Some(3),
             rows: Some((120, 64)),
             cascade: None,
+            nprobe: None,
+            clusters: None,
             trace: None,
             val: vec![mat(2, 8, 1), mat(3, 8, 2)],
         });
@@ -1021,6 +1094,10 @@ mod tests {
             shard_cache_bytes: 16_640,
             rows_scored: 192,
             reloads: 1,
+            index_queries: 6,
+            index_fallbacks: 1,
+            index_stale_rows: 40,
+            index_clusters: 16,
         };
         let resp = Response::Stats(StatsReply {
             id: 2,
@@ -1078,6 +1155,8 @@ mod tests {
                 assert_eq!(r.since_gen, None, "no filter by default");
                 assert_eq!(r.rows, None, "full row space by default");
                 assert_eq!(r.cascade, None, "exhaustive scan by default");
+                assert_eq!(r.nprobe, None, "no index probing by default");
+                assert_eq!(r.clusters, None);
                 assert_eq!(r.val[0].data, vec![0.5, 1.0]);
             }
             other => panic!("wrong variant {other:?}"),
@@ -1092,6 +1171,8 @@ mod tests {
             since_gen: None,
             rows: None,
             cascade,
+            nprobe: None,
+            clusters: None,
             trace: None,
             val: vec![mat(2, 8, 3)],
         })
@@ -1169,6 +1250,72 @@ mod tests {
     }
 
     #[test]
+    fn nprobe_fields_roundtrip() {
+        for (nprobe, clusters) in [(Some(4u32), None), (Some(7), Some((2u64, 3u64)))] {
+            let req = Request::Score(ScoreRequest {
+                id: 11,
+                top_k: 5,
+                want_scores: false,
+                since_gen: None,
+                rows: None,
+                cascade: None,
+                nprobe,
+                clusters,
+                trace: None,
+                val: vec![mat(2, 8, 4)],
+            });
+            let line = encode_request(&req);
+            match parse_request(&line).unwrap() {
+                Request::Score(r) => {
+                    assert_eq!(r.nprobe, nprobe, "{line}");
+                    assert_eq!(r.clusters, clusters, "{line}");
+                }
+                other => panic!("wrong variant {other:?}"),
+            }
+        }
+        // nprobe composes with a full cascade (index-restricted probe stage)
+        let line = "{\"op\":\"score\",\"top_k\":2,\"nprobe\":3,\
+                    \"cascade\":{\"probe\":1,\"rerank\":8},\
+                    \"val\":[{\"n\":1,\"k\":2,\"data\":[0.5,1]}]}";
+        match parse_request(line).unwrap() {
+            Request::Score(r) => {
+                assert_eq!(r.nprobe, Some(3));
+                assert!(r.cascade.is_some());
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_nprobe_fields_rejected() {
+        let wrap = |extra: &str| {
+            format!(
+                "{{\"op\":\"score\",\"top_k\":2,{extra},\
+                 \"val\":[{{\"n\":1,\"k\":2,\"data\":[0.5,1]}}]}}"
+            )
+        };
+        let cases: &[(&str, &str)] = &[
+            ("\"nprobe\":0", "must be >= 1"),
+            ("\"nprobe\":1.5", "non-negative integer"),
+            ("\"nprobe\":-2", "non-negative integer"),
+            ("\"nprobe\":\"four\"", "'nprobe'"),
+            ("\"nprobe\":2,\"scores\":true", "cannot be combined with 'scores'"),
+            ("\"nprobe\":2,\"since_gen\":1", "cannot be combined with 'since_gen'"),
+            ("\"nprobe\":2,\"rows\":[0,4]", "cannot be combined with 'rows'"),
+            ("\"clusters\":[0,2]", "'clusters' requires 'nprobe'"),
+            ("\"nprobe\":2,\"clusters\":[0]", "must be [start, len]"),
+            ("\"nprobe\":2,\"clusters\":[0,1,2]", "must be [start, len]"),
+        ];
+        for (extra, want) in cases {
+            let err = match parse_request(&wrap(extra)) {
+                Err(e) => format!("{e:#}"),
+                Ok(r) => panic!("{extra} must be rejected, parsed {r:?}"),
+            };
+            assert!(err.contains(want), "{extra}: got '{err}', want '{want}'");
+        }
+    }
+
+    #[test]
     fn trace_field_roundtrips() {
         for t in [
             TraceField { id: 0x1f, parent: 0 },
@@ -1181,6 +1328,8 @@ mod tests {
                 since_gen: None,
                 rows: None,
                 cascade: None,
+                nprobe: None,
+                clusters: None,
                 trace: Some(t),
                 val: vec![mat(2, 8, 3)],
             });

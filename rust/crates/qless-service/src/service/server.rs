@@ -413,8 +413,18 @@ fn score_timing(
 }
 
 fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
-    let ScoreRequest { id, top_k, want_scores, since_gen, rows: wire_rows, val, cascade, trace } =
-        req;
+    let ScoreRequest {
+        id,
+        top_k,
+        want_scores,
+        since_gen,
+        rows: wire_rows,
+        val,
+        cascade,
+        nprobe,
+        clusters,
+        trace,
+    } = req;
     let reg = obs::reg();
     let t0 = reg.now_us();
     let query = ScoreQuery { val };
@@ -422,51 +432,81 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
         return Response::Error { id, error: format!("invalid query: {e:#}") };
     }
     let rows = wire_rows.map(|(s, l)| (s as usize, l as usize));
-    // The `cascade` field picks the scan strategy; every variant still
-    // funnels through the batcher so concurrent same-shape requests fuse.
-    let submitted = match &cascade {
-        None => ctx.batcher.submit_ranged(query, rows),
-        Some(CascadeField::Full { probe, rerank, mult }) => {
-            if top_k == 0 {
-                let error = "cascade needs top_k >= 1 final selections per task".into();
-                return Response::Error { id, error };
-            }
-            if want_scores {
-                let error = "a cascade reply carries only the reranked top list; \
-                             drop 'want_scores' or score exhaustively"
-                    .into();
-                return Response::Error { id, error };
-            }
-            if since_gen.is_some() {
-                let error = "cascade cannot be combined with 'since_gen'; \
-                             score the new rows exhaustively instead"
-                    .into();
-                return Response::Error { id, error };
-            }
-            if rows.is_some() {
-                let error = "a full cascade request cannot carry a 'rows' range; \
-                             coordinators split cascades into probe/rerank stage verbs"
-                    .into();
-                return Response::Error { id, error };
-            }
-            let plan = CascadePlan { probe: *probe, rerank: *rerank, mult: *mult };
-            ctx.batcher.submit_cascade(query, plan, top_k)
+    // The `nprobe`/`cascade` fields pick the scan strategy; every variant
+    // still funnels through the batcher so concurrent same-shape requests
+    // fuse. (`nprobe` with `scores`/`since_gen`/`rows` was already
+    // rejected at parse time — see proto.)
+    let submitted = if let Some(p) = nprobe {
+        let p = p as usize;
+        let window = clusters.map(|(s, l)| (s as usize, l as usize));
+        if top_k == 0 {
+            let error = "indexed scoring needs top_k >= 1 final selections per task".into();
+            return Response::Error { id, error };
         }
-        Some(CascadeField::Probe { probe }) => match rows {
-            None => {
-                let error = "a probe-stage request must carry a 'rows' range".into();
-                return Response::Error { id, error };
+        match &cascade {
+            None => ctx.batcher.submit_index(query, p, top_k, window),
+            Some(CascadeField::Full { probe, rerank, mult }) => {
+                if window.is_some() {
+                    let error = "'clusters' cannot be combined with a cascade; \
+                                 coordinators partition plain indexed scans only"
+                        .into();
+                    return Response::Error { id, error };
+                }
+                let plan = CascadePlan { probe: *probe, rerank: *rerank, mult: *mult };
+                ctx.batcher.submit_index_cascade(query, plan, top_k, p)
             }
-            Some((start, len)) => ctx.batcher.submit_probe(query, start, len, *probe),
-        },
-        Some(CascadeField::Rerank { rerank, rows: row_list }) => {
-            if rows.is_some() {
-                let error = "a rerank-stage request carries its rows in 'rows_list', \
-                             not a 'rows' range"
+            Some(_) => {
+                let error = "'nprobe' combines only with a full cascade \
+                             (stage verbs carry rows, not clusters)"
                     .into();
                 return Response::Error { id, error };
             }
-            ctx.batcher.submit_rerank(query, Arc::new(row_list.clone()), *rerank)
+        }
+    } else {
+        match &cascade {
+            None => ctx.batcher.submit_ranged(query, rows),
+            Some(CascadeField::Full { probe, rerank, mult }) => {
+                if top_k == 0 {
+                    let error = "cascade needs top_k >= 1 final selections per task".into();
+                    return Response::Error { id, error };
+                }
+                if want_scores {
+                    let error = "a cascade reply carries only the reranked top list; \
+                                 drop 'want_scores' or score exhaustively"
+                        .into();
+                    return Response::Error { id, error };
+                }
+                if since_gen.is_some() {
+                    let error = "cascade cannot be combined with 'since_gen'; \
+                                 score the new rows exhaustively instead"
+                        .into();
+                    return Response::Error { id, error };
+                }
+                if rows.is_some() {
+                    let error = "a full cascade request cannot carry a 'rows' range; \
+                                 coordinators split cascades into probe/rerank stage verbs"
+                        .into();
+                    return Response::Error { id, error };
+                }
+                let plan = CascadePlan { probe: *probe, rerank: *rerank, mult: *mult };
+                ctx.batcher.submit_cascade(query, plan, top_k)
+            }
+            Some(CascadeField::Probe { probe }) => match rows {
+                None => {
+                    let error = "a probe-stage request must carry a 'rows' range".into();
+                    return Response::Error { id, error };
+                }
+                Some((start, len)) => ctx.batcher.submit_probe(query, start, len, *probe),
+            },
+            Some(CascadeField::Rerank { rerank, rows: row_list }) => {
+                if rows.is_some() {
+                    let error = "a rerank-stage request carries its rows in 'rows_list', \
+                                 not a 'rows' range"
+                        .into();
+                    return Response::Error { id, error };
+                }
+                ctx.batcher.submit_rerank(query, Arc::new(row_list.clone()), *rerank)
+            }
         }
     };
     let rx = match submitted {
@@ -479,12 +519,15 @@ fn handle_score(req: ScoreRequest, ctx: &Ctx) -> Response {
             let done = reg.now_us();
             reg.observe_us("score_us", done.saturating_sub(t0));
             let timing = trace.map(|t| score_timing(t, &reg, t0, wait0, done));
-            // full-cascade and rerank-stage answers carry their ranked /
-            // scored pairs in `ans.top`; nothing to rank server-side
-            if matches!(
-                cascade,
-                Some(CascadeField::Full { .. }) | Some(CascadeField::Rerank { .. })
-            ) {
+            // indexed, full-cascade, and rerank-stage answers carry their
+            // ranked / scored pairs in `ans.top`; nothing to rank
+            // server-side
+            if nprobe.is_some()
+                || matches!(
+                    cascade,
+                    Some(CascadeField::Full { .. }) | Some(CascadeField::Rerank { .. })
+                )
+            {
                 return Response::Score(ScoreReply {
                     id,
                     generation: ans.generation,
@@ -680,6 +723,88 @@ impl Client {
             rows,
             val: val.to_vec(),
             cascade: None,
+            nprobe: None,
+            clusters: None,
+            trace: None,
+        })
+    }
+
+    /// Indexed (IVF) score: the server probes its `.qidx` sidecar's
+    /// centroids, scans only the `nprobe` closest clusters per task, and
+    /// returns the top-`top_k` list from the scanned rows. `nprobe >=` the
+    /// sidecar's cluster count makes the result byte-identical to an
+    /// exhaustive scan; a server without a sidecar answers exhaustively
+    /// (and says so in its `index_fallbacks` stat).
+    pub fn score_index(
+        &mut self,
+        val: &[FeatureMatrix],
+        top_k: usize,
+        nprobe: u32,
+    ) -> Result<ScoreReply> {
+        self.score_req(ScoreRequest {
+            id: 0,
+            top_k,
+            want_scores: false,
+            since_gen: None,
+            rows: None,
+            val: val.to_vec(),
+            cascade: None,
+            nprobe: Some(nprobe),
+            clusters: None,
+            trace: None,
+        })
+    }
+
+    /// Cluster-window worker verb: like [`Client::score_index`], but scan
+    /// only positions `window.0 .. window.0 + window.1` of the per-task
+    /// probed cluster list — the verb a coordinator issues after
+    /// partitioning the cluster list (not the row space) across workers.
+    /// Requires a sidecar on the server; there is no exhaustive fallback
+    /// for a window.
+    pub(crate) fn score_index_clusters(
+        &mut self,
+        val: &[FeatureMatrix],
+        keep: usize,
+        nprobe: u32,
+        window: (u64, u64),
+    ) -> Result<ScoreReply> {
+        self.score_req(ScoreRequest {
+            id: 0,
+            top_k: keep,
+            want_scores: false,
+            since_gen: None,
+            rows: None,
+            val: val.to_vec(),
+            cascade: None,
+            nprobe: Some(nprobe),
+            clusters: Some(window),
+            trace: None,
+        })
+    }
+
+    /// Index-restricted cascade: the 1-bit probe stage scans only the
+    /// `nprobe` closest clusters (instead of every live row), the exact
+    /// `rerank`-bit stage is unchanged. `nprobe >=` the cluster count
+    /// degenerates to [`Client::score_cascade`] exactly.
+    pub fn score_index_cascade(
+        &mut self,
+        val: &[FeatureMatrix],
+        top_k: usize,
+        probe: u8,
+        rerank: u8,
+        mult: usize,
+        nprobe: u32,
+    ) -> Result<ScoreReply> {
+        self.score_req(ScoreRequest {
+            id: 0,
+            top_k,
+            want_scores: false,
+            since_gen: None,
+            rows: None,
+            val: val.to_vec(),
+            cascade: Some(CascadeField::Full { probe, rerank, mult }),
+            nprobe: Some(nprobe),
+            clusters: None,
             trace: None,
         })
     }
@@ -707,6 +832,8 @@ impl Client {
             rows: None,
             val: val.to_vec(),
             cascade: Some(CascadeField::Full { probe, rerank, mult }),
+            nprobe: None,
+            clusters: None,
             trace: None,
         })
     }
@@ -729,6 +856,8 @@ impl Client {
             rows: Some(rows),
             val: val.to_vec(),
             cascade: Some(CascadeField::Probe { probe }),
+            nprobe: None,
+            clusters: None,
             trace: None,
         })
     }
@@ -750,6 +879,8 @@ impl Client {
             rows: None,
             val: val.to_vec(),
             cascade: Some(CascadeField::Rerank { rerank, rows }),
+            nprobe: None,
+            clusters: None,
             trace: None,
         })
     }
@@ -937,6 +1068,137 @@ mod tests {
         assert!(format!("{err:#}").contains("16-bit"), "{err:#}");
         c.shutdown().unwrap();
         server.join().unwrap();
+        c8.shutdown().unwrap();
+        server8.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_indexed_score_matches_exhaustive_and_partitions_clusters() {
+        let (n, k) = (32usize, 64usize);
+        let path = build_store("index", n, k, 2);
+        crate::datastore::reindex_store(
+            &path,
+            crate::datastore::IndexBuildOpts { n_clusters: 4, max_iters: 4 },
+        )
+        .unwrap();
+        let server = Server::start(&path, ephemeral_opts()).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let val = vec![feats(2, k, 9), feats(2, k, 10)];
+        let full = c.score(&val, 5, false).unwrap();
+        // nprobe = nclusters: full coverage must be byte-identical to the
+        // exhaustive scan
+        let r = c.score_index(&val, 5, 4).unwrap();
+        assert!(r.scores.is_none() && r.rows.is_none());
+        assert_eq!(r.top.len(), 5);
+        for (got, want) in r.top.iter().zip(full.top.iter()) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "full coverage must be bit-exact");
+        }
+        // a sub-linear probe still answers a full-size top list
+        let r1 = c.score_index(&val, 5, 1).unwrap();
+        assert_eq!(r1.top.len(), 5);
+        // worker windows over the cluster-list positions partition the
+        // probed list; their merge equals the unpartitioned answer
+        let w1 = c.score_index_clusters(&val, 5, 4, (0, 2)).unwrap();
+        let w2 = c.score_index_clusters(&val, 5, 4, (2, 2)).unwrap();
+        let merged = crate::select::merge_top_k(&[w1.top.clone(), w2.top.clone()], 5);
+        assert_eq!(merged, r.top, "disjoint cluster windows must merge exactly");
+        // the stats surface shows the sidecar and no fallbacks
+        let st = c.stats().unwrap();
+        assert_eq!(st.stats.index_clusters, 4);
+        assert_eq!(st.stats.index_fallbacks, 0);
+        assert!(st.stats.index_queries >= 4);
+        // wire negatives (strict grammar): each rejected line leaves the
+        // connection usable — no desync, no close
+        let small_val = "\"val\":[{\"n\":1,\"k\":2,\"data\":[0.5,1]}]";
+        for (bad, why) in [
+            (format!("{{\"op\":\"score\",\"top_k\":2,\"nprobe\":0,{small_val}}}"), ">= 1"),
+            (
+                format!("{{\"op\":\"score\",\"top_k\":2,\"nprobe\":1.5,{small_val}}}"),
+                "non-negative integer",
+            ),
+            (
+                format!("{{\"op\":\"score\",\"top_k\":2,\"clusters\":[0,2],{small_val}}}"),
+                "requires 'nprobe'",
+            ),
+            (
+                format!(
+                    "{{\"op\":\"score\",\"top_k\":2,\"nprobe\":2,\
+                     \"cascade\":{{\"probe\":1,\"rerank\":8,\"nprobe\":3}},{small_val}}}"
+                ),
+                "unknown key 'nprobe'",
+            ),
+        ] {
+            let raw = c.raw_roundtrip(&bad).unwrap();
+            assert!(raw.contains("\"ok\":false"), "{raw}");
+            assert!(raw.contains(why), "expected {why:?} in {raw}");
+            c.ping().unwrap();
+        }
+        let again = c.score_index(&val, 5, 4).unwrap();
+        assert_eq!(again.top, r.top, "connection stays usable after rejections");
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        std::fs::remove_file(crate::datastore::index_path(&path)).ok();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn serve_index_cascade_and_sidecar_free_fallback() {
+        let dir = std::env::temp_dir().join(format!(
+            "qless_server_idxcasc_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (n, k) = (16usize, 64usize);
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let p8 = Precision::new(8, Scheme::Absmax).unwrap();
+        let probe_path = crate::datastore::default_store_path(&dir, p1);
+        let rerank_path = crate::datastore::default_store_path(&dir, p8);
+        seeded_datastore(&probe_path, p1, n, k, &[0.7, 0.3], 0);
+        seeded_datastore(&rerank_path, p8, n, k, &[0.7, 0.3], 0);
+        crate::datastore::reindex_store(
+            &probe_path,
+            crate::datastore::IndexBuildOpts { n_clusters: 4, max_iters: 4 },
+        )
+        .unwrap();
+        let server = Server::start(&probe_path, ephemeral_opts()).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let val = vec![feats(2, k, 9), feats(2, k, 10)];
+        // full coverage + exhaustive mult: the index-restricted cascade
+        // degenerates to the plain cascade exactly
+        let plain = c.score_cascade(&val, 4, 1, 8, 8).unwrap();
+        let indexed = c.score_index_cascade(&val, 4, 1, 8, 8, 4).unwrap();
+        for (got, want) in indexed.top.iter().zip(plain.top.iter()) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "index cascade must be bit-exact");
+        }
+        // nprobe composes with the full cascade only, never stage verbs
+        let raw = c
+            .raw_roundtrip(
+                "{\"op\":\"score\",\"top_k\":2,\"nprobe\":2,\
+                 \"cascade\":{\"stage\":\"rerank\",\"rerank\":8,\"rows_list\":[1]},\
+                 \"val\":[{\"n\":1,\"k\":2,\"data\":[0.5,1]}]}",
+            )
+            .unwrap();
+        assert!(raw.contains("\"ok\":false"), "{raw}");
+        c.ping().unwrap();
+        c.shutdown().unwrap();
+        server.join().unwrap();
+        // a server with no sidecar serves indexed requests exhaustively
+        // (counted as fallbacks) and refuses only the windowed worker verb
+        let server8 = Server::start(&rerank_path, ephemeral_opts()).unwrap();
+        let mut c8 = Client::connect(server8.addr()).unwrap();
+        let full = c8.score(&val, 4, false).unwrap();
+        let fb = c8.score_index(&val, 4, 2).unwrap();
+        assert_eq!(fb.top, full.top, "sidecar-free fallback is the exact exhaustive answer");
+        let err = c8.score_index_clusters(&val, 4, 2, (0, 1)).unwrap_err();
+        assert!(format!("{err:#}").contains("sidecar"), "{err:#}");
+        c8.ping().unwrap();
+        let st = c8.stats().unwrap();
+        assert_eq!(st.stats.index_clusters, 0);
+        assert!(st.stats.index_fallbacks >= 1);
         c8.shutdown().unwrap();
         server8.join().unwrap();
         std::fs::remove_dir_all(&dir).ok();

@@ -39,10 +39,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::datastore::{default_store_path, run_dir_precisions, Header, LiveStore, OwnedShard};
+use crate::datastore::{
+    default_store_path, run_dir_precisions, Header, LiveStore, OwnedShard, QuantIndex,
+};
 use crate::grads::FeatureMatrix;
-use crate::influence::{cascade, MultiScan, ScanStats};
-use crate::select::top_k_scored_among;
+use crate::influence::{cascade, index as ivf, MultiScan, ScanStats, ScoreOpts};
+use crate::select::{top_k_scored, top_k_scored_among};
 use crate::util::obs;
 use crate::{info, warn_};
 
@@ -103,6 +105,19 @@ pub struct ServiceStats {
     pub rows_scored: u64,
     /// Generation bumps picked up live (ingests served without restart).
     pub reloads: u64,
+    /// Queries answered through the IVF index sidecar path (including
+    /// fallbacks — see `index_fallbacks`).
+    pub index_queries: u64,
+    /// Indexed queries served by an exhaustive scan because no usable
+    /// sidecar was loaded (missing, rejected on open, or dropped after a
+    /// failed refresh).
+    pub index_fallbacks: u64,
+    /// Rows assigned to clusters in memory since the sidecar was built —
+    /// the index staleness gauge; `qless reindex` resets it to 0.
+    pub index_stale_rows: u64,
+    /// Clusters of the loaded sidecar (0 = no index loaded) — what the
+    /// coordinator partitions the cluster list against.
+    pub index_clusters: u64,
 }
 
 /// One influence query: raw (unquantized) validation gradient features per
@@ -253,6 +268,12 @@ pub struct Session {
     /// the row count it covers (always a generation boundary).
     score_cache: LruCache<u64, Arc<Vec<f32>>>,
     gen_rows: Arc<Vec<(u64, usize)>>,
+    /// The IVF index sidecar of the served store, if a valid one sits
+    /// next to it (`<stem>.qidx`) — refreshed on every generation bump
+    /// (new rows assigned to nearest centroids in memory), dropped (never
+    /// served) if a refresh fails. `None` ⇒ indexed queries fall back to
+    /// exhaustive scans.
+    index: Option<QuantIndex>,
     stats: ServiceStats,
 }
 
@@ -268,6 +289,15 @@ impl Session {
         let rows_per_shard = live.rows_per_shard(opts.shard_rows, opts.mem_budget_mb.max(1));
         let cache_budget = opts.mem_budget_mb.max(1) << 20;
         let gen_rows = Arc::new(member_map(&live));
+        let index = QuantIndex::open_for(path, &live);
+        if let Some(idx) = &index {
+            info!(
+                "session: index sidecar loaded ({} clusters over {} rows, {} stale)",
+                idx.n_clusters(),
+                idx.n_rows(),
+                idx.stale_rows()
+            );
+        }
         info!(
             "session: {} rows × k={} × {} checkpoints at {} (generation {}, {} member \
              file(s), {rows_per_shard} rows/shard, {} MiB shard cache, {} score-cache entries)",
@@ -293,6 +323,7 @@ impl Session {
             shard_cache: LruCache::new(cache_budget),
             score_cache: LruCache::new(opts.score_cache_entries),
             gen_rows,
+            index,
             stats: ServiceStats::default(),
         })
     }
@@ -332,7 +363,18 @@ impl Session {
     pub fn stats(&self) -> ServiceStats {
         let mut s = self.stats;
         s.shard_cache_bytes = self.shard_cache.weight() as u64;
+        if let Some(idx) = &self.index {
+            s.index_clusters = idx.n_clusters() as u64;
+            s.index_stale_rows = idx.stale_rows();
+        }
         s
+    }
+
+    /// Whether a usable index sidecar is loaded (indexed queries without
+    /// one fall back to exhaustive scans; cluster-window worker verbs
+    /// error instead).
+    pub fn has_index(&self) -> bool {
+        self.index.is_some()
     }
 
     /// Poll the generation manifest and attach any newly ingested
@@ -350,6 +392,28 @@ impl Session {
                     self.live.n_rows(),
                     self.live.members().len()
                 );
+                // assign the ingested rows to their nearest centroids so
+                // indexed queries keep covering the whole live row space;
+                // a failed refresh drops the index (never served stale)
+                let mut drop_index = false;
+                if let Some(idx) = self.index.as_mut() {
+                    match idx.refresh(&self.live) {
+                        Ok(()) => {
+                            obs::gauge_set("index_stale_rows", idx.stale_rows() as i64);
+                        }
+                        Err(e) => {
+                            warn_!(
+                                "session: index refresh failed ({e:#}); serving exhaustive \
+                                 scans until `qless reindex`"
+                            );
+                            obs::counter_add("index_open_failures_total", 1);
+                            drop_index = true;
+                        }
+                    }
+                }
+                if drop_index {
+                    self.index = None;
+                }
             }
             Ok(false) => {}
             Err(e) => warn_!(
@@ -683,6 +747,190 @@ impl Session {
                     batched,
                     pass,
                     top: Some(rows.iter().copied().zip(scored[t].iter().copied()).collect()),
+                }
+            })
+            .collect())
+    }
+
+    /// Answer one micro-batch of (already validated) queries through the
+    /// IVF index sidecar ([`crate::influence::index`]): rank every cluster
+    /// per task with the centroid probe, scan only the top-`nprobe`
+    /// clusters' rows, and return each task's top-`top_k` `(row, score)`
+    /// pairs in [`Answer::top`] (`scores` stays empty — indexed answers
+    /// never materialize a full vector). `clusters = Some((start, len))`
+    /// restricts the scan to that window of cluster-list *positions*: the
+    /// coordinator partitions the deterministic cluster ranking, not the
+    /// row space, and merges worker windows with `merge_top_k`.
+    ///
+    /// Without a usable sidecar the plain verb **falls back** to an
+    /// exhaustive scan (counted in `index_fallbacks`; the top list is then
+    /// exact by construction), while the windowed worker verb errors —
+    /// a window only means something against the index's cluster ranking.
+    pub fn answer_index(
+        &mut self,
+        queries: &[ScoreQuery],
+        nprobe: usize,
+        top_k: usize,
+        clusters: Option<(usize, usize)>,
+    ) -> Result<Vec<Answer>> {
+        let _sp = obs::span("session.answer_index");
+        ensure!(top_k >= 1, "indexed scoring needs top_k >= 1");
+        ensure!(nprobe >= 1, "indexed scoring needs nprobe >= 1");
+        self.poll_generation();
+        if self.index.is_none() {
+            ensure!(
+                clusters.is_none(),
+                "cluster-window scoring needs an index sidecar on the server — \
+                 run `qless reindex` (or drop the 'clusters' field)"
+            );
+            self.stats.index_queries += queries.len() as u64;
+            self.stats.index_fallbacks += queries.len() as u64;
+            obs::counter_add("index_fallbacks_total", queries.len() as u64);
+            warn_!(
+                "session: indexed query without a usable sidecar — serving an \
+                 exhaustive scan (run `qless reindex` to build one)"
+            );
+            let answers = self.answer_batch(queries)?;
+            let empty = Arc::new(Vec::new());
+            return Ok(answers
+                .into_iter()
+                .map(|mut a| {
+                    a.top = Some(top_k_scored(&a.scores, top_k));
+                    a.scores = Arc::clone(&empty);
+                    a
+                })
+                .collect());
+        }
+        self.stats.batches += 1;
+        self.stats.queries += queries.len() as u64;
+        self.stats.index_queries += queries.len() as u64;
+        obs::counter_add("index_queries_total", queries.len() as u64);
+        let generation = self.live.generation();
+        let (digests, distinct, tasks) = dedup_tasks(queries);
+        let opts = ivf::IndexOpts {
+            k: top_k,
+            nprobe,
+            scan: ScoreOpts {
+                use_xla: false,
+                shard_rows: self.opts.shard_rows,
+                mem_budget_mb: self.opts.mem_budget_mb,
+            },
+        };
+        let idx = self.index.as_ref().expect("checked above");
+        let out = match clusters {
+            Some((at, len)) => {
+                ensure!(len >= 1, "empty cluster window");
+                ivf::index_scan_live_tasks_at(&self.live, idx, &tasks, &opts, (at, len))?
+            }
+            None => ivf::index_scan_live_tasks(&self.live, idx, &tasks, &opts)?,
+        };
+        obs::counter_add("index_probe_rows_total", out.probe_pass.rows_read);
+        obs::counter_add("index_scan_rows_total", out.scan_pass.rows_read);
+        self.stats.fused_passes += 2; // centroid probe + cluster scan
+        self.stats.rows_scored += out.scan_pass.rows_read;
+        let pass = out.combined_pass();
+        let batched = distinct.len();
+        let empty = Arc::new(Vec::new());
+        Ok(digests
+            .iter()
+            .map(|d| {
+                let t = distinct.iter().position(|x| x == d).expect("distinct covers digests");
+                Answer {
+                    scores: Arc::clone(&empty),
+                    generation,
+                    gen_rows: Arc::clone(&self.gen_rows),
+                    cached: false,
+                    batched,
+                    pass,
+                    top: Some(out.top[t].clone()),
+                }
+            })
+            .collect())
+    }
+
+    /// [`Session::answer_cascade`] with the probe stage restricted to the
+    /// index sidecar's `nprobe` closest clusters per task
+    /// ([`crate::influence::index_cascade_live_tasks`]); the exact
+    /// high-precision rerank is unchanged. At `nprobe >=` the cluster
+    /// count this degenerates to the plain cascade exactly. Without a
+    /// usable sidecar it **falls back** to the plain cascade — an exact
+    /// superset of the restricted probe — counted in `index_fallbacks`.
+    pub fn answer_index_cascade(
+        &mut self,
+        queries: &[ScoreQuery],
+        plan: CascadePlan,
+        top_k: usize,
+        nprobe: usize,
+    ) -> Result<Vec<Answer>> {
+        let _sp = obs::span("session.answer_index_cascade");
+        ensure!(top_k >= 1, "cascade needs top_k >= 1 final selections per task");
+        ensure!(nprobe >= 1, "indexed scoring needs nprobe >= 1");
+        ensure!(plan.mult >= 1, "cascade candidate multiplier must be >= 1");
+        ensure!(
+            plan.probe != plan.rerank,
+            "cascade probe and rerank precisions must differ (got {}-bit twice)",
+            plan.probe
+        );
+        self.poll_generation();
+        if self.index.is_none() {
+            self.stats.index_queries += queries.len() as u64;
+            self.stats.index_fallbacks += queries.len() as u64;
+            obs::counter_add("index_fallbacks_total", queries.len() as u64);
+            warn_!(
+                "session: indexed cascade without a usable sidecar — probing every \
+                 live row (run `qless reindex` to build one)"
+            );
+            return self.answer_cascade(queries, plan, top_k);
+        }
+        self.stats.batches += 1;
+        self.stats.queries += queries.len() as u64;
+        self.stats.index_queries += queries.len() as u64;
+        obs::counter_add("index_queries_total", queries.len() as u64);
+        let probe = self.resolve_store(plan.probe)?;
+        let rerank = self.resolve_store(plan.rerank)?;
+        self.refresh_store(probe);
+        self.refresh_store(rerank);
+        let generation = self.live.generation();
+        let (digests, distinct, tasks) = dedup_tasks(queries);
+        let opts = cascade::CascadeOpts {
+            k: top_k,
+            mult: plan.mult,
+            scan: ScoreOpts {
+                use_xla: false,
+                shard_rows: self.opts.shard_rows,
+                mem_budget_mb: self.opts.mem_budget_mb,
+            },
+        };
+        let idx = self.index.as_ref().expect("checked above");
+        let probe_live = match probe {
+            0 => &self.live,
+            s => &self.aux[s - 1].live,
+        };
+        let rerank_live = match rerank {
+            0 => &self.live,
+            s => &self.aux[s - 1].live,
+        };
+        let out =
+            ivf::index_cascade_live_tasks(probe_live, rerank_live, idx, &tasks, &opts, nprobe)?;
+        obs::counter_add("index_probe_rows_total", out.probe_pass.rows_read);
+        obs::counter_add("index_rerank_rows_total", out.rerank_pass.rows_read);
+        self.stats.fused_passes += 2; // restricted probe + exact rerank
+        self.stats.rows_scored += out.rerank_pass.rows_read;
+        let pass = out.combined_pass();
+        let batched = distinct.len();
+        let empty = Arc::new(Vec::new());
+        Ok(digests
+            .iter()
+            .map(|d| {
+                let t = distinct.iter().position(|x| x == d).expect("distinct covers digests");
+                Answer {
+                    scores: Arc::clone(&empty),
+                    generation,
+                    gen_rows: Arc::clone(&self.gen_rows),
+                    cached: false,
+                    batched,
+                    pass,
+                    top: Some(out.top[t].clone()),
                 }
             })
             .collect())
@@ -1318,6 +1566,115 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("top_k"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn indexed_answers_match_library_path_and_fall_back_without_sidecar() {
+        use crate::datastore::{index_path, reindex_store, IndexBuildOpts, LiveStore, QuantIndex};
+        let (n, k) = (48usize, 64usize);
+        let etas = [0.7f32, 0.3];
+        let path = build_store(1, n, k, &etas, "idx");
+        let sopts = SessionOpts { shard_rows: 5, mem_budget_mb: 8, score_cache_entries: 4 };
+        let q = ScoreQuery { val: task(k, 1100, 2) };
+
+        // no sidecar yet: the plain verb falls back to an exhaustive scan
+        let mut sess = Session::open(&path, sopts).unwrap();
+        assert!(!sess.has_index());
+        let fb = sess.answer_index(std::slice::from_ref(&q), 2, 5, None).unwrap();
+        assert!(fb[0].scores.is_empty(), "indexed answers carry top lists only");
+        let full = sess.answer_batch(std::slice::from_ref(&q)).unwrap();
+        let want_fb = top_k_scored(&full[0].scores, 5);
+        assert_eq!(fb[0].top.as_ref().unwrap(), &want_fb, "fallback = exhaustive top-k");
+        let s = sess.stats();
+        assert_eq!((s.index_queries, s.index_fallbacks), (1, 1));
+        assert_eq!(s.index_clusters, 0, "no index loaded");
+        // a cluster window without an index is an error, not a fallback
+        assert!(sess.answer_index(std::slice::from_ref(&q), 2, 5, Some((0, 1))).is_err());
+        // degenerate knobs are rejected up front
+        assert!(sess.answer_index(std::slice::from_ref(&q), 0, 5, None).is_err());
+        assert!(sess.answer_index(std::slice::from_ref(&q), 2, 0, None).is_err());
+
+        // build the sidecar; a fresh session serves through it, bit-exact
+        // against the library path
+        let idx = reindex_store(&path, &IndexBuildOpts { n_clusters: 6, max_iters: 4 }).unwrap();
+        assert_eq!(idx.n_clusters(), 6);
+        let mut sess = Session::open(&path, sopts).unwrap();
+        assert!(sess.has_index());
+        let live = LiveStore::open(&path).unwrap();
+        let owned = vec![q.val.clone()];
+        let tasks: Vec<&[FeatureMatrix]> = owned.iter().map(|t| t.as_slice()).collect();
+        let iopts = crate::influence::IndexOpts {
+            k: 5,
+            nprobe: 3,
+            scan: ScoreOpts { shard_rows: 5, mem_budget_mb: 8, ..Default::default() },
+        };
+        let want = crate::influence::index_scan_live_tasks(&live, &idx, &tasks, &iopts).unwrap();
+        let got = sess.answer_index(std::slice::from_ref(&q), 3, 5, None).unwrap();
+        let top = got[0].top.as_ref().unwrap();
+        assert_eq!(top.len(), want.top[0].len());
+        for (a, b) in top.iter().zip(&want.top[0]) {
+            assert_eq!(a.0, b.0, "served indexed rows");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "served indexed scores are bit-exact");
+        }
+        assert_eq!(
+            got[0].pass.rows_read,
+            want.combined_pass().rows_read,
+            "served pass costs exactly what the library path costs"
+        );
+        let s = sess.stats();
+        assert_eq!((s.index_queries, s.index_fallbacks), (1, 0));
+        assert_eq!((s.index_clusters, s.index_stale_rows), (6, 0));
+        // disjoint cluster-list windows merge to the whole query
+        let a = sess.answer_index(std::slice::from_ref(&q), 3, 5, Some((0, 2))).unwrap();
+        let b = sess.answer_index(std::slice::from_ref(&q), 3, 5, Some((2, 1))).unwrap();
+        let merged = crate::select::merge_top_k(
+            &[a[0].top.clone().unwrap(), b[0].top.clone().unwrap()],
+            5,
+        );
+        assert_eq!(&merged, top, "windowed worker answers merge exactly");
+
+        // live ingest: new rows are assigned to centroids in memory and
+        // served (staleness surfaces in stats; answers stay bit-exact
+        // against a freshly refreshed library index)
+        // build_store writes an arbitrary stem; indexed ingest needs the
+        // default-named store the manifest binds to — move both files into
+        // a fresh run directory under the canonical name
+        let dir = std::env::temp_dir().join(format!(
+            "qless_sess_idxing_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = Precision::new(1, Scheme::Sign).unwrap();
+        let named = default_store_path(&dir, p1);
+        drop(sess);
+        drop(live);
+        std::fs::rename(&path, &named).unwrap();
+        std::fs::rename(index_path(&path), index_path(&named)).unwrap();
+        let mut sess = Session::open(&named, sopts).unwrap();
+        let add = 6usize;
+        let mut sw = SegmentWriter::create(&dir, &[p1], add, 0).unwrap();
+        for ci in 0..etas.len() {
+            sw.begin_checkpoint().unwrap();
+            sw.append_rows(&feats(n + add, k, 40 + ci as u64).data[n * k..]).unwrap();
+            sw.end_checkpoint().unwrap();
+        }
+        sw.finalize().unwrap();
+        let got = sess.answer_index(std::slice::from_ref(&q), 3, 5, None).unwrap();
+        assert_eq!(got[0].generation, 1, "ingest picked up live");
+        let s = sess.stats();
+        assert_eq!(s.index_stale_rows, add as u64, "ingested rows are the staleness");
+        let live2 = LiveStore::open(&named).unwrap();
+        let idx2 = QuantIndex::open(&index_path(&named), &live2).unwrap();
+        assert_eq!(idx2.stale_rows(), add as u64);
+        let want2 = crate::influence::index_scan_live_tasks(&live2, &idx2, &tasks, &iopts).unwrap();
+        let top2 = got[0].top.as_ref().unwrap();
+        assert_eq!(top2.len(), want2.top[0].len());
+        for (a, b) in top2.iter().zip(&want2.top[0]) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "post-ingest indexed scores are bit-exact");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -42,6 +42,10 @@ COMMANDS
                       a running `qless serve` picks it up without restart)
   score               compute influence scores against validation gradients
   select              pick top select_frac and report composition
+  reindex             (re)build the Hamming-clustered IVF sidecar (.qidx)
+                      next to each precision store in the run dir
+                      (--nclusters C; a running `qless serve` picks the
+                      fresh sidecar up on its next indexed query)
   serve               resident influence query service over TCP
                       (`qless serve --help` for the serve flags;
                       --traces records per-query spans for `stats`)
@@ -79,6 +83,10 @@ OPTIONS (all Config keys work as --key value):
   --cascade-mult C    cascade candidate multiplier: the probe keeps C·k
                       candidates per task for the rerank (default 8;
                       C·k >= n rows makes the cascade exact)
+  --nclusters C       `qless reindex` cluster count (0 = auto ceil(sqrt(n)))
+  --nprobe P          score via the .qidx sidecar, scanning only the P
+                      clusters nearest each task (0 = exhaustive scan;
+                      P >= nclusters is byte-identical to exhaustive)
   --run-dir DIR       --artifacts DIR
   --watch N           `qless stats` refresh interval in seconds (0 = once)
   --traces            serve: record spans / stats: fetch the span ring
@@ -299,6 +307,19 @@ mod tests {
         assert!(p(&["score", "--cascade", "8"]).is_err()); // validate()
         assert!(p(&["score", "--cascade", "8,1"]).is_err()); // probe > rerank
         assert!(p(&["score", "--cascade", "1,8", "--cascade-mult", "0"]).is_err());
+    }
+
+    #[test]
+    fn index_flags_parse() {
+        let c = p(&["reindex", "--nclusters", "64"]).unwrap();
+        assert_eq!(c.command, "reindex");
+        assert_eq!(c.config.nclusters, 64);
+        let c2 = p(&["score", "--nprobe", "6"]).unwrap();
+        assert_eq!(c2.config.nprobe, 6);
+        assert_eq!(p(&["score"]).unwrap().config.nprobe, 0); // default: exhaustive
+        assert!(p(&["score", "--nprobe", "many"]).is_err());
+        assert!(usage_for("reindex").contains("--nclusters"));
+        assert!(usage_for("score").contains("--nprobe"));
     }
 
     #[test]

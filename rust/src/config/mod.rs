@@ -121,6 +121,15 @@ pub struct Config {
     /// per task for stage 2 (k = final selections). Larger c = higher
     /// recall, more rerank I/O; `c·k ≥ n` makes the cascade exact.
     pub cascade_mult: usize,
+    /// Clusters for `qless reindex`'s IVF sidecar build (0 = auto:
+    /// `⌈√n⌉`, clamped to 4096). The sidecar lives next to each store as
+    /// `<stem>.qidx` and arms the sub-linear `--nprobe` read path.
+    pub nclusters: usize,
+    /// Clusters probed per task by `qless score --nprobe P` (0 = don't
+    /// use the index — exhaustive scan). `P ≥` the sidecar's cluster
+    /// count is byte-identical to exhaustive; smaller trades recall for
+    /// rows read. Requires a sidecar built by `qless reindex`.
+    pub nprobe: usize,
     /// `qless stats` refresh interval in seconds (0 = scrape once and
     /// exit). Each refresh is one `metrics` + one `stats` round trip.
     pub watch: u64,
@@ -165,6 +174,8 @@ impl Default for Config {
             worker_retries: 2,
             cascade: String::new(),
             cascade_mult: qless_datastore::influence::DEFAULT_CASCADE_MULT,
+            nclusters: 0,
+            nprobe: 0,
             watch: 0,
         }
     }
@@ -214,6 +225,8 @@ impl Config {
         "worker_retries",
         "cascade",
         "cascade_mult",
+        "nclusters",
+        "nprobe",
         "watch",
     ];
 
@@ -282,6 +295,8 @@ impl Config {
             "worker_retries" => self.worker_retries = parse(v, &key)?,
             "cascade" => self.cascade = v.to_string(),
             "cascade_mult" => self.cascade_mult = parse(v, &key)?,
+            "nclusters" => self.nclusters = parse(v, &key)?,
+            "nprobe" => self.nprobe = parse(v, &key)?,
             "watch" => self.watch = parse(v, &key)?,
             _ => bail!("unknown config key '{key}'"),
         }
@@ -362,6 +377,12 @@ impl Config {
         self.cascade_precisions()?; // parse errors surface at validate time
         if self.cascade_mult == 0 {
             bail!("cascade_mult must be >= 1");
+        }
+        if self.nclusters > 1 << 20 {
+            bail!("nclusters {} — over 2^20 clusters is surely a typo", self.nclusters);
+        }
+        if self.nprobe > 1 << 20 {
+            bail!("nprobe {} — over 2^20 probed clusters is surely a typo", self.nprobe);
         }
         Ok(())
     }
@@ -779,6 +800,24 @@ mod tests {
         c.set("cascade_mult", "0").unwrap();
         assert!(c.validate().is_err(), "cascade_mult 0 must be rejected");
         assert!(c.set("cascade_mult", "lots").is_err());
+    }
+
+    #[test]
+    fn index_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.nclusters, 0, "auto cluster count by default");
+        assert_eq!(c.nprobe, 0, "exhaustive scan by default");
+        c.set("nclusters", "64").unwrap();
+        c.set("nprobe", "6").unwrap();
+        assert_eq!((c.nclusters, c.nprobe), (64, 6));
+        c.validate().unwrap();
+        c.set("nclusters", "2097152").unwrap();
+        assert!(c.validate().is_err(), "absurd nclusters must be rejected");
+        c.set("nclusters", "0").unwrap();
+        c.set("nprobe", "2097152").unwrap();
+        assert!(c.validate().is_err(), "absurd nprobe must be rejected");
+        assert!(c.set("nprobe", "some").is_err());
+        assert!(c.set("nclusters", "-4").is_err());
     }
 
     #[test]

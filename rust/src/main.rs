@@ -86,6 +86,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
             Ok(())
         }
         "ingest" => ingest(cli),
+        "reindex" => reindex(cli),
         "score" | "select" => score_select(cli),
         "eval" => eval_baseline(cli),
         "decode-demo" => decode_demo(cli),
@@ -361,8 +362,46 @@ fn ingest(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `qless reindex` — (re)build the Hamming-clustered IVF sidecar
+/// (`<stem>.qidx`) next to each of the run's precision stores, from the
+/// full live row set (base + every ingested generation). `--nclusters 0`
+/// (the default) derives ⌈√n⌉. The write is atomic; a running `qless
+/// serve` over the same run dir picks the fresh sidecar up on its next
+/// indexed query.
+fn reindex(cli: &Cli) -> Result<()> {
+    let run_dir = std::path::Path::new(&cli.config.run_dir);
+    let opts = qless::datastore::IndexBuildOpts {
+        n_clusters: cli.config.nclusters,
+        max_iters: 0,
+    };
+    let ps = cli.config.precisions()?;
+    for &p in &ps {
+        let store = qless::datastore::default_store_path(run_dir, p);
+        anyhow::ensure!(
+            store.exists(),
+            "no {} datastore at {} — run `qless extract` first",
+            p.label(),
+            store.display()
+        );
+        let idx = qless::datastore::reindex_store(&store, &opts)?;
+        println!(
+            "reindex: {} — {} rows → {} clusters × {} checkpoints (generation {:#x}) at {}",
+            p.label(),
+            idx.n_rows(),
+            idx.n_clusters(),
+            idx.n_checkpoints(),
+            idx.generation(),
+            qless::datastore::index_path(&store).display()
+        );
+    }
+    Ok(())
+}
+
 fn score_select(cli: &Cli) -> Result<()> {
     let mut pipe = Pipeline::new(cli.config.clone())?;
+    if cli.config.nprobe > 0 {
+        return score_select_indexed(cli, &mut pipe);
+    }
     if let Some((probe, rerank)) = cli.config.cascade_precisions()? {
         return score_select_cascade(cli, &mut pipe, probe, rerank);
     }
@@ -398,6 +437,101 @@ fn score_select(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `qless score/select --nprobe P`: sub-linear selection through the
+/// `.qidx` IVF sidecar — rank clusters by scoring their packed sign
+/// centroids, scan only the top-`P` clusters per benchmark. Composes
+/// with `--cascade` (the sidecar narrows the probe stage, the rerank
+/// precision scores the survivors). A missing or rejected sidecar falls
+/// back to the exact exhaustive path with a warning — never an error,
+/// never a silently approximate answer from a corrupt grouping.
+fn score_select_indexed(cli: &Cli, pipe: &mut Pipeline) -> Result<()> {
+    let cfg = &cli.config;
+    let run_dir = std::path::PathBuf::from(&cfg.run_dir);
+    if let Some((probe, rerank)) = cfg.cascade_precisions()? {
+        pipe.build_datastores(&[probe, rerank])?;
+        let probe_live = pipe.open_live(probe)?;
+        let store = qless::datastore::default_store_path(&run_dir, probe);
+        let Some(idx) = qless::datastore::QuantIndex::open_for(&store, &probe_live) else {
+            eprintln!(
+                "warning: no usable index sidecar at {} — run `qless reindex`; \
+                 falling back to the exhaustive cascade",
+                qless::datastore::index_path(&store).display()
+            );
+            return score_select_cascade(cli, pipe, probe, rerank);
+        };
+        let n = probe_live.n_rows();
+        let k_sel = (((n as f64) * cfg.select_frac).ceil() as usize).clamp(1, n);
+        let rerank_live = pipe.open_live(rerank)?;
+        let samples = pipe.samples_with_extensions(&rerank_live)?;
+        let (tops, pass) = pipe.indexed_cascade_scores_all(
+            probe,
+            rerank,
+            &idx,
+            cfg.cascade_mult,
+            k_sel,
+            cfg.nprobe,
+        )?;
+        println!(
+            "indexed cascade: {} clusters, nprobe {}, {} probe → {} rerank, {} live rows, {} read",
+            idx.n_clusters(),
+            cfg.nprobe.min(idx.n_clusters()),
+            probe.label(),
+            rerank.label(),
+            n,
+            human_bytes(pass.bytes_read)
+        );
+        render_top_selection(&tops, &samples);
+        return Ok(());
+    }
+    let p = Precision::new(cfg.bits, cfg.scheme)?;
+    pipe.build_datastore(p)?;
+    let live = pipe.open_live(p)?;
+    let store = qless::datastore::default_store_path(&run_dir, p);
+    let Some(idx) = qless::datastore::QuantIndex::open_for(&store, &live) else {
+        eprintln!(
+            "warning: no usable index sidecar at {} — run `qless reindex`; \
+             falling back to the exhaustive scan",
+            qless::datastore::index_path(&store).display()
+        );
+        let mut plain = cli.clone();
+        plain.config.nprobe = 0;
+        return score_select(&plain);
+    };
+    let n = live.n_rows();
+    let k_sel = (((n as f64) * cfg.select_frac).ceil() as usize).clamp(1, n);
+    let samples = pipe.samples_with_extensions(&live)?;
+    let (tops, pass, scanned) = pipe.indexed_scores_all(&live, &idx, cfg.nprobe, k_sel)?;
+    println!(
+        "indexed scan: {} clusters (stale rows {}), nprobe {}, {} of {} rows scanned, {} read",
+        idx.n_clusters(),
+        idx.stale_rows(),
+        cfg.nprobe.min(idx.n_clusters()),
+        scanned,
+        n,
+        human_bytes(pass.bytes_read)
+    );
+    render_top_selection(&tops, &samples);
+    Ok(())
+}
+
+/// Shared renderer for top-list selections (cascade and indexed paths):
+/// per-benchmark composition plus the three highest-scoring samples.
+fn render_top_selection(
+    tops: &std::collections::BTreeMap<&'static str, Vec<(usize, f32)>>,
+    samples: &[qless::corpus::Sample],
+) {
+    for bench in Benchmark::ALL {
+        let top = &tops[bench.name()];
+        let sel: Vec<usize> = top.iter().map(|(i, _)| *i).collect();
+        let dist = SourceDistribution::of(samples, &sel);
+        println!("{bench}: top {} — {}", sel.len(), dist.render());
+        for &(i, s) in top.iter().take(3) {
+            let smp = &samples[i];
+            println!("    [{s:>7.4}] {} → {}", smp.prompt, smp.answer);
+        }
+    }
+}
+
 /// `qless score/select --cascade PROBE,RERANK`: probe every live row at
 /// the cheap precision, rerank only the top `--cascade-mult ×` selection
 /// candidates at the expensive one, and select from the reranked list.
@@ -424,16 +558,7 @@ fn score_select_cascade(
         n,
         human_bytes(pass.bytes_read)
     );
-    for bench in Benchmark::ALL {
-        let top = &tops[bench.name()];
-        let sel: Vec<usize> = top.iter().map(|(i, _)| *i).collect();
-        let dist = SourceDistribution::of(&samples, &sel);
-        println!("{bench}: top {} — {}", sel.len(), dist.render());
-        for &(i, s) in top.iter().take(3) {
-            let smp = &samples[i];
-            println!("    [{s:>7.4}] {} → {}", smp.prompt, smp.answer);
-        }
-    }
+    render_top_selection(&tops, &samples);
     Ok(())
 }
 

@@ -12,7 +12,7 @@ use crate::corpus::{generate_corpus, Tokenizer, World};
 use crate::data::Dataset;
 use crate::datastore::{
     default_store_path, repair_run_dir, segment_store_path, Datastore, LiveStore, Manifest,
-    MultiWriter, SegmentWriter,
+    MultiWriter, QuantIndex, SegmentWriter,
 };
 use crate::eval::benchmarks::{validation_samples, Benchmark};
 use crate::eval::harness::{evaluate, BenchScores};
@@ -21,8 +21,8 @@ use crate::grads::{
     Projector,
 };
 use crate::influence::{
-    cascade, cascade_live_tasks, score_datastore_tasks, score_live_tasks, CascadeOpts, ScanStats,
-    ScoreOpts,
+    cascade, cascade_live_tasks, index_cascade_live_tasks, index_scan_live_tasks,
+    score_datastore_tasks, score_live_tasks, CascadeOpts, IndexOpts, ScanStats, ScoreOpts,
 };
 use crate::model::{init_base, init_lora, Checkpoint, CheckpointSet};
 use crate::pipeline::stage::{PipelineStageRunner, Stage};
@@ -785,6 +785,96 @@ impl Pipeline {
             crate::util::table::human_bytes(pass.bytes_read),
             crate::util::table::human_bytes(exhaustive)
         );
+        let mut out = BTreeMap::new();
+        for (bench, top) in Benchmark::ALL.iter().zip(outcome.top) {
+            out.insert(bench.name(), top);
+        }
+        Ok((out, pass))
+    }
+
+    /// Sub-linear indexed selection over this run's live store (`qless
+    /// score --nprobe P`): probe the `.qidx` sidecar's packed sign
+    /// centroids, scan only each benchmark's top-`P` clusters, and return
+    /// the final top-`k_sel` per benchmark. `nprobe >=` the cluster count
+    /// degrades gracefully to full coverage, which is byte-identical to
+    /// the exhaustive scan ([`index_scan_live_tasks`]). Also returns the
+    /// combined probe+scan stats and the candidate-row count, so callers
+    /// can report the row-traffic reduction against `live.n_rows()`.
+    pub fn indexed_scores_all(
+        &mut self,
+        live: &LiveStore,
+        idx: &QuantIndex,
+        nprobe: usize,
+        k_sel: usize,
+    ) -> Result<(BTreeMap<&'static str, Vec<(usize, f32)>>, ScanStats, usize)> {
+        if self.cfg.xla_score {
+            warn_!("XLA scoring is not plumbed through the index; using native kernels");
+        }
+        let mut vals: Vec<Vec<FeatureMatrix>> = Vec::new();
+        for bench in Benchmark::ALL {
+            vals.push(self.val_features(bench)?);
+        }
+        let refs: Vec<&[FeatureMatrix]> = vals.iter().map(|v| v.as_slice()).collect();
+        let opts = IndexOpts {
+            k: k_sel,
+            nprobe,
+            scan: ScoreOpts { use_xla: false, ..self.score_opts() },
+        };
+        let t0 = std::time::Instant::now();
+        let outcome = index_scan_live_tasks(live, idx, &refs, &opts)?;
+        let pass = outcome.combined_pass();
+        self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
+        self.stages.add_units(Stage::Score, pass.shards_read as u64);
+        info!(
+            "indexed scan: {} benchmarks, {} of {} clusters probed, {} of {} rows scanned",
+            refs.len(),
+            crate::influence::effective_nprobe(idx, nprobe),
+            idx.n_clusters(),
+            outcome.scanned_rows,
+            live.n_rows()
+        );
+        let scanned = outcome.scanned_rows;
+        let mut out = BTreeMap::new();
+        for (bench, top) in Benchmark::ALL.iter().zip(outcome.top) {
+            out.insert(bench.name(), top);
+        }
+        Ok((out, pass, scanned))
+    }
+
+    /// Index × cascade composition (`--nprobe P --cascade PROBE,RERANK`):
+    /// the sidecar narrows the probe stage to the top-`P` clusters, the
+    /// cascade's rerank re-scores the surviving candidates at the high
+    /// precision ([`index_cascade_live_tasks`]). Both sibling stores must
+    /// exist; the sidecar indexes the probe-precision store.
+    pub fn indexed_cascade_scores_all(
+        &mut self,
+        probe: Precision,
+        rerank: Precision,
+        idx: &QuantIndex,
+        mult: usize,
+        k_sel: usize,
+        nprobe: usize,
+    ) -> Result<(BTreeMap<&'static str, Vec<(usize, f32)>>, ScanStats)> {
+        if self.cfg.xla_score {
+            warn_!("XLA scoring is not plumbed through the index; using native kernels");
+        }
+        let probe_live = self.open_live(probe)?;
+        let rerank_live = self.open_live(rerank)?;
+        let mut vals: Vec<Vec<FeatureMatrix>> = Vec::new();
+        for bench in Benchmark::ALL {
+            vals.push(self.val_features(bench)?);
+        }
+        let refs: Vec<&[FeatureMatrix]> = vals.iter().map(|v| v.as_slice()).collect();
+        let opts = CascadeOpts {
+            k: k_sel,
+            mult,
+            scan: ScoreOpts { use_xla: false, ..self.score_opts() },
+        };
+        let t0 = std::time::Instant::now();
+        let outcome = index_cascade_live_tasks(&probe_live, &rerank_live, idx, &refs, &opts, nprobe)?;
+        let pass = outcome.combined_pass();
+        self.stages.record(Stage::Score, t0.elapsed().as_secs_f64());
+        self.stages.add_units(Stage::Score, pass.shards_read as u64);
         let mut out = BTreeMap::new();
         for (bench, top) in Benchmark::ALL.iter().zip(outcome.top) {
             out.insert(bench.name(), top);

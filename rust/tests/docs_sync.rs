@@ -191,8 +191,18 @@ fn spec_docs_are_included_in_rustdoc() {
     let (_, format_md) = DOCS.iter().find(|(n, _)| n.ends_with("FORMAT.md")).unwrap();
     assert!(format_md.contains("```rust"), "FORMAT.md lost its doctest example");
     assert!(format_md.contains("51 4c 44 53"), "FORMAT.md lost its hex dump");
+    // the IVF index sidecar spec: section marker + the QIDX magic in hex
+    assert!(
+        format_md.contains("## Index sidecar (`.qidx`)"),
+        "FORMAT.md lost the index sidecar section"
+    );
+    assert!(format_md.contains("51 49 44 58"), "FORMAT.md lost the QIDX magic hex");
     let (_, proto_md) = DOCS.iter().find(|(n, _)| n.ends_with("PROTOCOL.md")).unwrap();
     assert!(proto_md.contains("```rust"), "PROTOCOL.md lost its doctest example");
     assert!(proto_md.contains("since_gen"), "PROTOCOL.md lost the generation filter");
     assert!(proto_md.contains("rows"), "PROTOCOL.md lost the scatter-gather worker verb");
+    assert!(
+        proto_md.contains("## Indexed scoring") && proto_md.contains("nprobe"),
+        "PROTOCOL.md lost the indexed-scoring section"
+    );
 }

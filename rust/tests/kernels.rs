@@ -267,24 +267,38 @@ fn f32_fallback_engages_one_past_the_8bit_bound() {
 
 #[test]
 fn active_kernel_is_supported_and_honors_env_override() {
+    // `active()` memoizes its pick in a OnceLock, so this test must stay
+    // strictly read-only: there is no `set_var` here (and must never be —
+    // mutating the environment would race sibling test threads and could
+    // not change an already-latched dispatch anyway). Instead we assert
+    // dispatch identity against `resolve`, the exact seam `active()`
+    // feeds `QLESS_KERNEL` through, under whatever value the harness
+    // launched us with — this covers the CI matrix's scalar-forced leg
+    // and the native auto-detect leg with one body.
     let active = cpu::active();
     assert!(active.supported(), "active() may only pick a runnable variant");
-    match std::env::var("QLESS_KERNEL").ok().as_deref() {
-        // scalar/blocked are supported everywhere, so a forced value must
-        // stick — this is the CI matrix's scalar-forced leg
-        Some("scalar") => assert_eq!(active, Kernel::Scalar),
-        Some("blocked") => assert_eq!(active, Kernel::Blocked),
-        // native dispatch (or an unsupported force) never silently picks
-        // the pinned reference
-        None | Some("") | Some("auto") => assert_ne!(active, Kernel::Scalar),
-        Some(other) => {
-            if let Some(k) = Kernel::from_label(other) {
-                if k.supported() {
-                    assert_eq!(active, k);
-                }
-            }
-        }
+    let over = std::env::var("QLESS_KERNEL").ok();
+    assert_eq!(
+        active,
+        cpu::resolve(over.as_deref()),
+        "active() must agree with resolve({:?})",
+        over
+    );
+    // resolve() itself can never hand back an unrunnable variant, no
+    // matter what string it is fed
+    for forced in ["scalar", "blocked", "avx2", "neon", "auto", "", "bogus"] {
+        assert!(
+            cpu::resolve(Some(forced)).supported(),
+            "resolve({forced:?}) picked an unrunnable variant"
+        );
     }
+    // everywhere-supported forces resolve to exactly the named kernel
+    assert_eq!(cpu::resolve(Some("scalar")), Kernel::Scalar);
+    assert_eq!(cpu::resolve(Some("blocked")), Kernel::Blocked);
+    // auto-detect (or an unsupported force falling back to it) never
+    // silently picks the pinned scalar reference
+    assert_ne!(cpu::resolve(None), Kernel::Scalar);
+    assert_ne!(cpu::resolve(Some("bogus")), Kernel::Scalar);
 }
 
 #[test]
